@@ -1,0 +1,48 @@
+//! Cluster-scaling sweep (a runnable miniature of the paper's Fig 11).
+//!
+//! Sweeps the number of FPGA boards, running the event-driven raw algorithm
+//! on a panel sized to the boards' hardware threads (DES at reduced scale)
+//! and the analytic model at the paper's full scale, printing the speedup
+//! trend against the measured x86 baseline.
+//!
+//! ```bash
+//! cargo run --release --example cluster_scaling -- 1 2 4 8
+//! ```
+
+use poets_impute::bench::{FigOpts, X86Cost, fig11};
+
+fn main() {
+    let boards: Vec<usize> = std::env::args()
+        .skip(1)
+        .map(|a| a.parse().expect("board counts must be integers"))
+        .collect();
+    let boards = if boards.is_empty() {
+        vec![1, 2, 4, 8]
+    } else {
+        boards
+    };
+
+    eprintln!("calibrating x86 baseline throughput...");
+    let x86 = X86Cost::measure_default();
+    let opts = FigOpts {
+        des_states_per_board: 96,
+        des_targets: 10,
+        full_targets: 10_000,
+        skip_des: false,
+        seed: 11,
+    };
+    let report = fig11(&boards, &opts, &x86);
+    println!("{}", report.render());
+    println!(
+        "(DES columns: exact simulation at reduced scale; full columns: \
+         analytic model at paper scale with 10,000 targets)"
+    );
+
+    // The paper's qualitative claim: speedup grows with hardware.
+    let s: Vec<f64> = report.rows.iter().map(|r| r.full_speedup).collect();
+    if s.windows(2).all(|w| w[1] > w[0]) {
+        println!("shape check: monotone speedup growth over boards ✓");
+    } else {
+        println!("shape check FAILED: {s:?}");
+    }
+}

@@ -1,0 +1,174 @@
+//! End-to-end driver: upscale a GWAS-style cohort on the simulated POETS
+//! cluster — the repository's headline validation run (EXPERIMENTS.md §E2E).
+//!
+//! A chromosome-1-like reference panel is generated with the paper's §6.2
+//! recipe; a cohort of target haplotypes (drawn from the Li & Stephens
+//! mosaic process, truth withheld) is imputed four ways:
+//!
+//! 1. x86-style dense baseline (the paper's comparison point),
+//! 2. event-driven raw model on the simulated cluster (paper §5.2),
+//! 3. event-driven + linear interpolation (paper §5.3),
+//! 4. the AOT JAX/Pallas artifact through PJRT (the XLA compute plane),
+//!
+//! and the run reports accuracy against the withheld truth, message
+//! statistics, simulated POETS wall-clock and host wall-clock.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example gwas_upscale
+//! ```
+
+use poets_impute::bench::X86Cost;
+use poets_impute::imputation::app::{RawAppConfig, run_raw};
+use poets_impute::imputation::interp_app::run_interp;
+use poets_impute::model::accuracy::{self, Accuracy};
+use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
+use poets_impute::model::params::ModelParams;
+use poets_impute::poets::topology::ClusterConfig;
+use poets_impute::runtime::{Runtime, XlaImputer};
+use poets_impute::util::rng::Rng;
+use poets_impute::util::table::{Table, fmt_count, fmt_secs};
+use poets_impute::util::timed;
+use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+fn score(
+    dosages: &[Vec<f32>],
+    cases: &[poets_impute::workload::panelgen::TargetCase],
+) -> Accuracy {
+    let accs: Vec<_> = cases
+        .iter()
+        .zip(dosages)
+        .map(|(c, d)| accuracy::score(d, &c.truth, &c.masked))
+        .collect();
+    accuracy::aggregate(&accs)
+}
+
+fn main() {
+    // Chromosome-1-like slice at canonical H=64 so the XLA plane can join:
+    // 64 haplotypes x 500 markers = 32,000 HMM states, 1-in-10 annotated.
+    let cfg = PanelConfig {
+        n_hap: 64,
+        n_mark: 500,
+        maf: 0.05,
+        annot_ratio: 0.1,
+        seed: 1000,
+        ..PanelConfig::default()
+    };
+    let n_targets = 24;
+    let panel = generate_panel(&cfg);
+    let mut rng = Rng::new(99);
+    let cases = generate_targets(&panel, &cfg, n_targets, &mut rng);
+    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+    println!(
+        "== GWAS upscale: {}x{} panel ({} states), {} targets, ratio 1/10 ==\n",
+        panel.n_hap(),
+        panel.n_mark(),
+        fmt_count(panel.n_states() as u64),
+        n_targets
+    );
+
+    let mut table = Table::new(&[
+        "engine",
+        "host time",
+        "poets sim",
+        "events",
+        "concordance",
+        "dosage r2",
+    ]);
+
+    // 1. Dense baseline.
+    let b = Baseline::default();
+    let (dense, t_dense) = timed(|| {
+        b.impute_batch::<f32>(&panel, &targets, Method::DenseThreeLoop)
+            .into_iter()
+            .map(|o: ImputeOut<f32>| o.dosage)
+            .collect::<Vec<_>>()
+    });
+    let a = score(&dense, &cases);
+    table.row(vec![
+        "x86 dense baseline".into(),
+        fmt_secs(t_dense),
+        "-".into(),
+        "-".into(),
+        format!("{:.4}", a.concordance),
+        format!("{:.4}", a.dosage_r2),
+    ]);
+
+    // 2. Event-driven raw on 8 boards.
+    let app = RawAppConfig {
+        cluster: ClusterConfig::with_boards(8),
+        states_per_thread: 4,
+        ..RawAppConfig::default()
+    };
+    let (raw, t_raw) = timed(|| run_raw(&panel, &targets, &app));
+    let a = score(&raw.dosages, &cases);
+    table.row(vec![
+        "event-driven raw".into(),
+        fmt_secs(t_raw),
+        fmt_secs(raw.sim_seconds),
+        fmt_count(raw.metrics.copies_delivered),
+        format!("{:.4}", a.concordance),
+        format!("{:.4}", a.dosage_r2),
+    ]);
+
+    // 3. Event-driven + linear interpolation (one section vertex per thread).
+    let app_itp = RawAppConfig {
+        states_per_thread: 1,
+        ..app
+    };
+    let (itp, t_itp) = timed(|| run_interp(&panel, &targets, &app_itp));
+    let a = score(&itp.dosages, &cases);
+    table.row(vec![
+        "event-driven interp".into(),
+        fmt_secs(t_itp),
+        fmt_secs(itp.sim_seconds),
+        fmt_count(itp.metrics.copies_delivered),
+        format!("{:.4}", a.concordance),
+        format!("{:.4}", a.dosage_r2),
+    ]);
+
+    // 4. XLA artifact plane (AOT JAX/Pallas via PJRT), if artifacts exist.
+    match Runtime::open_default() {
+        Ok(rt) => {
+            let mut imputer = XlaImputer::new(rt, ModelParams::default());
+            let (xla, t_xla) = timed(|| imputer.impute_batch(&panel, &targets));
+            match xla {
+                Ok(xla) => {
+                    let a = score(&xla, &cases);
+                    table.row(vec![
+                        "XLA artifact (Pallas)".into(),
+                        fmt_secs(t_xla),
+                        "-".into(),
+                        "-".into(),
+                        format!("{:.4}", a.concordance),
+                        format!("{:.4}", a.dosage_r2),
+                    ]);
+                }
+                Err(e) => println!("XLA plane skipped: {e}"),
+            }
+        }
+        Err(e) => println!("XLA plane skipped: {e} (run `make artifacts`)"),
+    }
+
+    println!("{}", table.render());
+
+    // Message economics (the paper's §6.3 argument in one line):
+    println!(
+        "message reduction raw -> interp: {:.1}x (sends {} -> {})",
+        raw.metrics.sends as f64 / itp.metrics.sends as f64,
+        fmt_count(raw.metrics.sends),
+        fmt_count(itp.metrics.sends),
+    );
+    println!(
+        "simulated speedup interp vs raw: {:.1}x",
+        raw.sim_seconds / itp.sim_seconds
+    );
+
+    // Simulated POETS vs measured baseline: the figure currency.
+    let x86 = X86Cost::measure_raw_batch(&panel, &targets, Method::DenseThreeLoop);
+    println!(
+        "this-host x86 dense {} vs simulated POETS raw {} -> speedup {:.1}x",
+        fmt_secs(x86),
+        fmt_secs(raw.sim_seconds),
+        x86 / raw.sim_seconds
+    );
+}

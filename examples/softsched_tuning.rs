@@ -1,0 +1,39 @@
+//! Soft-scheduling tuner (a runnable miniature of the paper's Fig 12).
+//!
+//! Sweeps states-per-hardware-thread on the full simulated cluster via the
+//! analytic model (and optionally the DES at reduced scale), locating the
+//! optimum the paper reports at ≈10 states/thread for 10,000 targets.
+//!
+//! ```bash
+//! cargo run --release --example softsched_tuning
+//! cargo run --release --example softsched_tuning -- --des
+//! ```
+
+use poets_impute::bench::{FigOpts, X86Cost, fig12};
+
+fn main() {
+    let with_des = std::env::args().any(|a| a == "--des");
+    eprintln!("calibrating x86 baseline throughput...");
+    let x86 = X86Cost::measure_default();
+    let opts = FigOpts {
+        des_states_per_board: 96,
+        des_targets: 10,
+        full_targets: 10_000,
+        skip_des: !with_des,
+        seed: 12,
+    };
+    let spt = [1usize, 2, 5, 10, 20, 40];
+    let report = fig12(&spt, &opts, &x86);
+    println!("{}", report.render());
+
+    let best = report
+        .rows
+        .iter()
+        .max_by(|a, b| a.full_speedup.partial_cmp(&b.full_speedup).unwrap())
+        .unwrap();
+    println!(
+        "optimal soft-scheduling at {} states/thread (paper: ~10) — \
+         speedup {:.0}x vs this host's baseline",
+        best.x, best.full_speedup
+    );
+}

@@ -1,0 +1,144 @@
+"""AOT pipeline: lower the L2 graph to HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT ``lowered.compile().serialize()`` or serialized HloModuleProto —
+is the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Artifacts are emitted for a fixed menu of canonical shapes; the Rust runtime
+pads a request up to the nearest canonical shape (padding rows of the panel
+with copies of row 0 and extra markers with tau=0/emis=1 is mathematically
+inert — verified in rust/tests/runtime_artifacts.rs).
+
+A TSV manifest (``manifest.tsv``) describes each artifact's entry signature so
+the Rust side needs no JSON machinery:
+
+    name<TAB>file<TAB>in:NAME:DTYPE:d0xd1<TAB>...<TAB>out:NAME:DTYPE:d0xd1
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (H, M) menu for the single-target raw pipeline and the sweeps.
+# H must match workloads exactly (1/|H| is baked into the HLO); M pads up.
+RAW_SHAPES = [(16, 32), (64, 128), (64, 512), (256, 512)]
+# (B, H, M) menu for the batched pipeline (the Rust hot path).
+BATCH_SHAPES = [(8, 64, 128), (16, 256, 512)]
+# (K, H, M) menu for the interpolation pipeline (K anchors over M markers).
+INTERP_SHAPES = [(12, 64, 120), (50, 256, 500)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(kind: str, name: str, spec: jax.ShapeDtypeStruct) -> str:
+    dims = "x".join(str(d) for d in spec.shape)
+    return f"{kind}:{name}:{spec.dtype}:{dims}"
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.rows: list[str] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, args: dict[str, jax.ShapeDtypeStruct],
+             outs: dict[str, jax.ShapeDtypeStruct]) -> None:
+        lowered = jax.jit(fn).lower(*args.values())
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        cols = [name, fname]
+        cols += [_sig("in", k, v) for k, v in args.items()]
+        cols += [_sig("out", k, v) for k, v in outs.items()]
+        self.rows.append("\t".join(cols))
+        print(f"  {name}: {len(text)} chars")
+
+    def finish(self) -> None:
+        with open(os.path.join(self.out_dir, "manifest.tsv"), "w") as f:
+            f.write("\n".join(self.rows) + "\n")
+        print(f"wrote {len(self.rows)} artifacts + manifest.tsv to {self.out_dir}")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_all(out_dir: str) -> None:
+    em = Emitter(out_dir)
+
+    for h, m in RAW_SHAPES:
+        em.emit(
+            f"impute_raw_h{h}_m{m}",
+            lambda tau, emis, alleles: (model.impute_raw(tau, emis, alleles),),
+            {"tau": f32(m), "emis": f32(m, h), "alleles": f32(m, h)},
+            {"dosage": f32(m)},
+        )
+        em.emit(
+            f"fwd_h{h}_m{m}",
+            lambda tau, emis: (model.forward(tau, emis),),
+            {"tau": f32(m), "emis": f32(m, h)},
+            {"alphas": f32(m, h)},
+        )
+        em.emit(
+            f"bwd_h{h}_m{m}",
+            lambda tau, emis: (model.backward(tau, emis),),
+            {"tau": f32(m), "emis": f32(m, h)},
+            {"betas": f32(m, h)},
+        )
+
+    for b, h, m in BATCH_SHAPES:
+        em.emit(
+            f"impute_batch_b{b}_h{h}_m{m}",
+            lambda tau, obs, alleles: (model.impute_batch(tau, obs, alleles),),
+            {"tau": f32(m), "obs": i32(b, m), "alleles": f32(m, h)},
+            {"dosage": f32(b, m)},
+        )
+
+    for k, h, m in INTERP_SHAPES:
+        em.emit(
+            f"impute_interp_k{k}_h{h}_m{m}",
+            lambda tau_k, emis_k, left, frac, alleles: (
+                model.impute_interp(tau_k, emis_k, left, frac, alleles),
+            ),
+            {
+                "tau_k": f32(k),
+                "emis_k": f32(k, h),
+                "left": i32(m),
+                "frac": f32(m),
+                "alleles": f32(m, h),
+            },
+            {"dosage": f32(m)},
+        )
+
+    em.finish()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

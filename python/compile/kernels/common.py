@@ -1,0 +1,38 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is both the correctness path and the
+form that lowers into plain HLO for the Rust runtime.  Block shapes are still
+chosen as if targeting a real TPU (VMEM budgeting is documented per kernel and
+estimated in DESIGN.md §Perf) so the structure is hardware-honest.
+"""
+
+from __future__ import annotations
+
+# VMEM on current TPUs is ~16 MiB/core; we budget half of it for the streaming
+# operand (emis block) and pick the marker-block size accordingly at H=1024/f32.
+DEFAULT_BLOCK_M = 128
+
+
+def pick_block_m(m_total: int, preferred: int = DEFAULT_BLOCK_M) -> int:
+    """Largest divisor of ``m_total`` that is ≤ ``preferred``.
+
+    Pallas BlockSpecs require the grid to tile the array exactly; rather than
+    pad (which would corrupt a carried scan) we shrink the block.  Worst case
+    (prime M) degenerates to 1-column blocks — correct, just more grid steps.
+    """
+    if m_total <= 0:
+        raise ValueError(f"m_total must be positive, got {m_total}")
+    for cand in range(min(preferred, m_total), 0, -1):
+        if m_total % cand == 0:
+            return cand
+    return 1
+
+
+def vmem_bytes_estimate(block_m: int, n_hap: int, dtype_bytes: int = 4, n_hbuf: int = 3) -> int:
+    """Rough per-grid-step VMEM footprint of a forward/backward block.
+
+    ``n_hbuf`` [M_blk, H] buffers (emis in, alphas out, plus double-buffering)
+    plus the [H] carry and [M_blk] tau vector.
+    """
+    return n_hbuf * block_m * n_hap * dtype_bytes + n_hap * dtype_bytes + block_m * dtype_bytes

@@ -1,0 +1,72 @@
+"""Pallas linear-interpolation kernel (paper §5.3, Fig 10).
+
+The HMM is evaluated only at the K annotated columns; every intermediate
+column's per-state posterior is a linear blend of its two anchors, apportioned
+by fractional genetic distance, and immediately reduced to an allele dosage
+with that column's own panel alleles.
+
+The anchor matrix ``post_k [K, H]`` is small (K = M/upscale) and kept fully
+resident per grid step; output columns are produced in ``[block_m]`` tiles with
+dynamic anchor gathers (`pl.load` with a computed row index).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import pick_block_m
+
+
+def _interp_kernel(postk_ref, left_ref, frac_ref, allele_ref, dosage_ref, *, block_m: int, eps: float):
+    def column(j, _):
+        li = left_ref[j]
+        lo = pl.load(postk_ref, (li, slice(None)))
+        hi = pl.load(postk_ref, (li + 1, slice(None)))
+        p = lo + frac_ref[j] * (hi - lo)
+        tot = jnp.sum(p)
+        hit = jnp.sum(p * allele_ref[j, :])
+        pl.store(dosage_ref, (j,), hit / jnp.maximum(tot, eps))
+        return 0
+
+    lax.fori_loop(0, block_m, column, 0)
+
+
+def interp_dosage(
+    post_k: jnp.ndarray,
+    left: jnp.ndarray,
+    frac: jnp.ndarray,
+    alleles: jnp.ndarray,
+    block_m: int | None = None,
+    eps: float = 1e-38,
+) -> jnp.ndarray:
+    """Dosage ``[M]`` interpolated from anchor posteriors ``post_k [K, H]``.
+
+    ``left [M]`` int32 anchor indices (≤ K-2), ``frac [M]`` blend fractions,
+    ``alleles [M, H]`` panel alleles at every output column.
+    """
+    k_total, n_hap = post_k.shape
+    m_total = left.shape[0]
+    if k_total < 2:
+        raise ValueError("need at least two anchor columns to interpolate")
+    bm = block_m or pick_block_m(m_total)
+    if m_total % bm != 0:
+        raise ValueError(f"block_m={bm} must divide M={m_total}")
+    kernel = functools.partial(_interp_kernel, block_m=bm, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m_total // bm,),
+        in_specs=[
+            pl.BlockSpec((k_total, n_hap), lambda i: (0, 0)),  # anchors resident
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm, n_hap), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m_total,), post_k.dtype),
+        interpret=True,
+    )(post_k, left, frac, alleles.astype(post_k.dtype))

@@ -1,0 +1,69 @@
+"""Pallas backward-sweep kernel for the Li & Stephens HMM (paper eq. (5)).
+
+Same blocking strategy as :mod:`ls_fwd` but the grid walks marker blocks from
+right to left (via a reversing ``index_map``) and the columns inside each block
+are scanned in reverse.  The recurrence consumes the tau/emission of the *next*
+column, so the caller passes the sequences pre-shifted by one
+(``tau_s[m] = tau[m+1]``, ``emis_s[m] = emis[m+1]``; the last entries are
+padding and never read), keeping every Ref access block-local.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import pick_block_m
+
+
+def _bwd_kernel(tau_s_ref, emis_s_ref, out_ref, carry_ref, *, block_m: int, n_hap: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        # Paper Algorithm 1 line 2: beta <- 1 at the final column.
+        carry_ref[...] = jnp.ones((n_hap,), dtype=out_ref.dtype)
+
+    def column(k, beta):
+        j = block_m - 1 - k  # scan columns right-to-left inside the block
+        is_last = (i == 0) & (k == 0)
+        t = tau_s_ref[j]
+        e = emis_s_ref[j, :]
+        g = e * beta
+        s = jnp.sum(g)
+        stepped = (1.0 - t) * g + t * s / n_hap
+        prev = jnp.where(is_last, beta, stepped)
+        pl.store(out_ref, (j, slice(None)), prev)
+        return prev
+
+    carry_ref[...] = lax.fori_loop(0, block_m, column, carry_ref[...])
+
+
+def ls_backward(tau: jnp.ndarray, emis: jnp.ndarray, block_m: int | None = None) -> jnp.ndarray:
+    """All backward variables ``[M, H]`` from ``tau [M]`` and ``emis [M, H]``."""
+    m_total, n_hap = emis.shape
+    bm = block_m or pick_block_m(m_total)
+    if m_total % bm != 0:
+        raise ValueError(f"block_m={bm} must divide M={m_total}")
+    nblk = m_total // bm
+    # Shift so the kernel reads next-column tau/emis at the current index.
+    tau_s = jnp.concatenate([tau[1:], jnp.zeros((1,), tau.dtype)])
+    emis_s = jnp.concatenate([emis[1:], jnp.ones((1, n_hap), emis.dtype)], axis=0)
+    kernel = functools.partial(_bwd_kernel, block_m=bm, n_hap=n_hap)
+    return pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i: (nblk - 1 - i,)),
+            pl.BlockSpec((bm, n_hap), lambda i: (nblk - 1 - i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n_hap), lambda i: (nblk - 1 - i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_total, n_hap), emis.dtype),
+        scratch_shapes=[pltpu.VMEM((n_hap,), emis.dtype)],
+        interpret=True,
+    )(tau_s, emis_s)

@@ -1,0 +1,69 @@
+"""Pallas forward-sweep kernel for the Li & Stephens HMM (paper eq. (4)).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the Li & Stephens
+transition matrix is ``tau/H + (1-tau)·I`` — rank-1 plus diagonal — so the
+O(H²) per-column matmul collapses to an O(H) FMA plus one reduction.  Nothing
+is left for the MXU; the kernel is VPU-bound.  The HBM↔VMEM schedule the paper
+expressed with events is expressed here with a BlockSpec grid over marker
+blocks: each grid step streams one ``[block_m, H]`` tile of emissions into
+VMEM, scans its columns sequentially carrying the live alpha vector in a VMEM
+scratch buffer, and writes one ``[block_m, H]`` tile of alphas back out.
+
+The carried scratch persists across grid steps (the grid dimension is
+sequential), which is what makes a *scan* expressible as a grid at all.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import pick_block_m
+
+
+def _fwd_kernel(tau_ref, emis_ref, out_ref, carry_ref, *, block_m: int, n_hap: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        # Paper Algorithm 1 line 2: alpha <- 1/|H| at the first column.
+        carry_ref[...] = jnp.full((n_hap,), 1.0 / n_hap, dtype=out_ref.dtype)
+
+    def column(j, alpha):
+        is_first = (i == 0) & (j == 0)
+        t = tau_ref[j]
+        e = emis_ref[j, :]
+        s = jnp.sum(alpha)
+        stepped = ((1.0 - t) * alpha + t * s / n_hap) * e
+        nxt = jnp.where(is_first, alpha, stepped)
+        pl.store(out_ref, (j, slice(None)), nxt)
+        return nxt
+
+    carry_ref[...] = lax.fori_loop(0, block_m, column, carry_ref[...])
+
+
+def ls_forward(tau: jnp.ndarray, emis: jnp.ndarray, block_m: int | None = None) -> jnp.ndarray:
+    """All forward variables ``[M, H]`` from ``tau [M]`` and ``emis [M, H]``."""
+    m_total, n_hap = emis.shape
+    bm = block_m or pick_block_m(m_total)
+    if m_total % bm != 0:
+        raise ValueError(f"block_m={bm} must divide M={m_total}")
+    grid = (m_total // bm,)
+    kernel = functools.partial(_fwd_kernel, block_m=bm, n_hap=n_hap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm, n_hap), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n_hap), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_total, n_hap), emis.dtype),
+        scratch_shapes=[pltpu.VMEM((n_hap,), emis.dtype)],
+        interpret=True,
+    )(tau, emis)

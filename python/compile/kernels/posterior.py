@@ -1,0 +1,48 @@
+"""Pallas posterior/dosage kernel.
+
+Fuses the three tail stages of the pipeline — ``p = alpha*beta``, per-column
+normalisation, and the allele-label accumulation (the paper's "summed based on
+their base labels", the job of the bottom-row vertices in the event-driven
+graph) — into one pass over ``[block_m, H]`` tiles so the posterior matrix is
+never materialised in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pick_block_m
+
+
+def _post_kernel(alpha_ref, beta_ref, allele_ref, dosage_ref, *, eps: float):
+    p = alpha_ref[...] * beta_ref[...]
+    tot = jnp.sum(p, axis=1)
+    hit = jnp.sum(p * allele_ref[...], axis=1)
+    dosage_ref[...] = hit / jnp.maximum(tot, eps)
+
+
+def posterior_dosage(
+    alphas: jnp.ndarray,
+    betas: jnp.ndarray,
+    alleles: jnp.ndarray,
+    block_m: int | None = None,
+    eps: float = 1e-38,
+) -> jnp.ndarray:
+    """Allele-1 dosage ``[M]`` from ``alphas/betas/alleles`` all ``[M, H]``."""
+    m_total, n_hap = alphas.shape
+    bm = block_m or pick_block_m(m_total)
+    if m_total % bm != 0:
+        raise ValueError(f"block_m={bm} must divide M={m_total}")
+    spec_mh = pl.BlockSpec((bm, n_hap), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_post_kernel, eps=eps),
+        grid=(m_total // bm,),
+        in_specs=[spec_mh, spec_mh, spec_mh],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m_total,), alphas.dtype),
+        interpret=True,
+    )(alphas, betas, alleles.astype(alphas.dtype))

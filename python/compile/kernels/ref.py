@@ -1,0 +1,176 @@
+"""Pure-jnp oracles for the Li & Stephens imputation HMM.
+
+Two independent references are provided and cross-checked against each other in
+the test-suite:
+
+* ``dense_*`` — the textbook O(H^2 M) formulation with explicit transition
+  matrices, literally transcribing equations (1)-(7) of the paper.
+* ``rank1_*`` — the O(H M) formulation exploiting the structure of the
+  Li & Stephens transition matrix ``a_ij = tau/H + (1-tau) * delta_ij``
+  (a rank-1 update of a scaled identity).  This is the recurrence the Pallas
+  kernels implement and the event-driven Rust vertices accumulate.
+
+Conventions (identical across Python and Rust):
+
+* ``panel``   int8/float [H, M]  — reference panel alleles (diallelic: 0/1).
+* ``obs``     int       [M]     — target haplotype observation per marker:
+                                   -1 = unannotated, 0/1 = observed allele.
+* ``tau``     float     [M]     — recombination factor per column transition;
+                                   ``tau[0]`` is unused (there is no transition
+                                   into the first column) and kept for shape
+                                   regularity.  ``tau[m]`` governs the
+                                   transition from column ``m-1`` to ``m``.
+* ``emis``    float     [M, H]  — emission ``b_h(O_m)``: 1 where ``obs`` is -1,
+                                   ``1-err`` on allele match, ``err`` on
+                                   mismatch (paper eq. (6)/(7), err = 1e-4).
+* alpha/beta initialisation follows the paper's Algorithm 1 exactly:
+  ``alpha[0, :] = 1/H`` (no emission applied at the first column) and
+  ``beta[M-1, :] = 1``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+DEFAULT_ERR = 1e-4
+DEFAULT_NE = 50_000.0
+
+
+def tau_from_distance(d: jnp.ndarray, n_hap: int, ne: float = DEFAULT_NE) -> jnp.ndarray:
+    """Paper eq. (1): ``tau_m = 1 - exp(-4 Ne d_m / |H|)``."""
+    return 1.0 - jnp.exp(-4.0 * ne * d / float(n_hap))
+
+
+def emission_probs(panel: jnp.ndarray, obs: jnp.ndarray, err: float = DEFAULT_ERR) -> jnp.ndarray:
+    """Emission matrix [M, H] from panel [H, M] and observations [M].
+
+    Paper eq. (6)/(7): ``1 - err`` on match, ``err`` on mismatch, and the term
+    "falls out" (probability 1) when the marker is unannotated (obs == -1).
+    """
+    panel_mt = panel.T.astype(jnp.float32)  # [M, H]
+    obs_f = obs.astype(jnp.float32)[:, None]  # [M, 1]
+    match = jnp.where(panel_mt == obs_f, 1.0 - err, err)
+    return jnp.where(obs[:, None] < 0, 1.0, match)
+
+
+# ---------------------------------------------------------------------------
+# Dense O(H^2 M) oracle
+# ---------------------------------------------------------------------------
+
+def dense_transition(tau_m: jnp.ndarray, n_hap: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Explicit [H, H] transition matrix for one column step.
+
+    ``a_ij = tau/H + (1 - tau) * delta_ij`` — paper eqs. (2)/(3): the diagonal
+    holds ``(1 - tau) + tau/H`` (stay), off-diagonals ``tau/H`` (jump).
+    """
+    eye = jnp.eye(n_hap, dtype=dtype)
+    return (tau_m / n_hap).astype(dtype) + (1.0 - tau_m).astype(dtype) * eye
+
+
+def dense_forward(tau: jnp.ndarray, emis: jnp.ndarray) -> jnp.ndarray:
+    """All forward variables, [M, H]; paper eq. (4)."""
+    m_total, n_hap = emis.shape
+    alpha0 = jnp.full((n_hap,), 1.0 / n_hap, dtype=emis.dtype)
+
+    def step(alpha, inputs):
+        tau_m, emis_m = inputs
+        a = dense_transition(tau_m, n_hap, emis.dtype)
+        nxt = (alpha @ a) * emis_m
+        return nxt, nxt
+
+    _, rest = lax.scan(step, alpha0, (tau[1:], emis[1:]))
+    return jnp.concatenate([alpha0[None, :], rest], axis=0)
+
+
+def dense_backward(tau: jnp.ndarray, emis: jnp.ndarray) -> jnp.ndarray:
+    """All backward variables, [M, H]; paper eq. (5)."""
+    m_total, n_hap = emis.shape
+    beta_last = jnp.ones((n_hap,), dtype=emis.dtype)
+
+    def step(beta, inputs):
+        tau_m, emis_m = inputs  # tau/emis of the *next* column (m+1)
+        a = dense_transition(tau_m, n_hap, emis.dtype)
+        prev = a @ (emis_m * beta)
+        return prev, prev
+
+    _, rest = lax.scan(step, beta_last, (tau[1:][::-1], emis[1:][::-1]))
+    return jnp.concatenate([rest[::-1], beta_last[None, :]], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Rank-1 O(H M) oracle (the recurrence the kernels and Rust vertices use)
+# ---------------------------------------------------------------------------
+
+def rank1_forward(tau: jnp.ndarray, emis: jnp.ndarray) -> jnp.ndarray:
+    """Forward via ``alpha' = ((1-tau) alpha + tau * mean-sum) * emis``.
+
+    ``sum_i alpha_m(i) a_ij = (1-tau) alpha_m(j) + (tau/H) sum_i alpha_m(i)``.
+    """
+    m_total, n_hap = emis.shape
+    alpha0 = jnp.full((n_hap,), 1.0 / n_hap, dtype=emis.dtype)
+
+    def step(alpha, inputs):
+        tau_m, emis_m = inputs
+        s = jnp.sum(alpha)
+        nxt = ((1.0 - tau_m) * alpha + tau_m * s / n_hap) * emis_m
+        return nxt, nxt
+
+    _, rest = lax.scan(step, alpha0, (tau[1:], emis[1:]))
+    return jnp.concatenate([alpha0[None, :], rest], axis=0)
+
+
+def rank1_backward(tau: jnp.ndarray, emis: jnp.ndarray) -> jnp.ndarray:
+    """Backward via ``beta = (1-tau) g + tau * mean(g)`` with ``g = emis*beta'``."""
+    m_total, n_hap = emis.shape
+    beta_last = jnp.ones((n_hap,), dtype=emis.dtype)
+
+    def step(beta, inputs):
+        tau_m, emis_m = inputs
+        g = emis_m * beta
+        s = jnp.sum(g)
+        prev = (1.0 - tau_m) * g + tau_m * s / n_hap
+        return prev, prev
+
+    _, rest = lax.scan(step, beta_last, (tau[1:][::-1], emis[1:][::-1]))
+    return jnp.concatenate([rest[::-1], beta_last[None, :]], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Posterior / dosage / interpolation
+# ---------------------------------------------------------------------------
+
+def posterior(alphas: jnp.ndarray, betas: jnp.ndarray) -> jnp.ndarray:
+    """Column-normalised posterior state probabilities [M, H]."""
+    p = alphas * betas
+    return p / jnp.sum(p, axis=1, keepdims=True)
+
+
+def dosage(post: jnp.ndarray, panel: jnp.ndarray) -> jnp.ndarray:
+    """Allele-1 dosage per marker: posterior mass summed by allele label.
+
+    This is the paper's "summed based on their base labels" step; for diallelic
+    data the major/minor decision is ``dosage > 0.5``.
+    """
+    return jnp.sum(post * panel.T.astype(post.dtype), axis=1)
+
+
+def impute(tau: jnp.ndarray, emis: jnp.ndarray, panel: jnp.ndarray) -> jnp.ndarray:
+    """Full raw-model pipeline → dosage [M] (rank-1 reference path)."""
+    alphas = rank1_forward(tau, emis)
+    betas = rank1_backward(tau, emis)
+    return dosage(posterior(alphas, betas), panel)
+
+
+def interp_posteriors(post_k: jnp.ndarray, left: jnp.ndarray, frac: jnp.ndarray) -> jnp.ndarray:
+    """Linear interpolation of per-state posteriors between annotated columns.
+
+    ``post_k`` [K, H] — posteriors at the K annotated (HMM-evaluated) columns;
+    ``left``   [M]    — for each output marker, index of the annotated column
+                        at-or-left of it (clamped to K-2 so ``left+1`` is valid);
+    ``frac``   [M]    — fractional genetic distance covered, 0 at the left
+                        anchor, 1 at the right anchor (paper Fig 10).
+    """
+    lo = post_k[left]          # [M, H]
+    hi = post_k[left + 1]      # [M, H]
+    return lo + frac[:, None] * (hi - lo)

@@ -1,0 +1,93 @@
+"""L2 — the imputation compute graph in JAX, calling the Pallas kernels.
+
+This module is the build-time definition of everything the Rust coordinator
+executes through PJRT:
+
+* :func:`impute_raw`        — raw Li & Stephens pipeline for one target.
+* :func:`impute_batch`      — the same, vmapped over a batch of targets
+                              (batching is how the AOT artifact amortises
+                              dispatch on the Rust hot path).
+* :func:`forward` / :func:`backward` — the individual sweeps, exported so the
+                              coordinator can drive column-block execution.
+* :func:`impute_interp`     — HMM at annotated anchors + linear interpolation
+                              everywhere else (paper §5.3).
+
+Everything here is jit-able with static shapes; `aot.py` lowers a fixed menu
+of shapes to HLO text for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.interp import interp_dosage
+from .kernels.ls_bwd import ls_backward
+from .kernels.ls_fwd import ls_forward
+from .kernels.posterior import posterior_dosage
+
+DEFAULT_ERR = ref.DEFAULT_ERR
+DEFAULT_NE = ref.DEFAULT_NE
+
+
+def emissions(alleles_mh: jnp.ndarray, obs: jnp.ndarray, err: float = DEFAULT_ERR) -> jnp.ndarray:
+    """Emission matrix [M, H] from column-major alleles [M, H] and obs [M]."""
+    obs_f = obs.astype(alleles_mh.dtype)[:, None]
+    match = jnp.where(alleles_mh == obs_f, 1.0 - err, err)
+    return jnp.where(obs[:, None] < 0, jnp.ones_like(match), match)
+
+
+def forward(tau: jnp.ndarray, emis: jnp.ndarray) -> jnp.ndarray:
+    """Forward sweep [M, H] (Pallas)."""
+    return ls_forward(tau, emis)
+
+
+def backward(tau: jnp.ndarray, emis: jnp.ndarray) -> jnp.ndarray:
+    """Backward sweep [M, H] (Pallas)."""
+    return ls_backward(tau, emis)
+
+
+def impute_raw(tau: jnp.ndarray, emis: jnp.ndarray, alleles_mh: jnp.ndarray) -> jnp.ndarray:
+    """Raw-model dosage [M] for one target haplotype."""
+    alphas = ls_forward(tau, emis)
+    betas = ls_backward(tau, emis)
+    return posterior_dosage(alphas, betas, alleles_mh)
+
+
+def impute_obs(tau: jnp.ndarray, obs: jnp.ndarray, alleles_mh: jnp.ndarray,
+               err: float = DEFAULT_ERR) -> jnp.ndarray:
+    """Raw-model dosage [M] straight from observations (fused emission)."""
+    return impute_raw(tau, emissions(alleles_mh, obs, err), alleles_mh)
+
+
+def impute_batch(tau: jnp.ndarray, obs_batch: jnp.ndarray, alleles_mh: jnp.ndarray,
+                 err: float = DEFAULT_ERR) -> jnp.ndarray:
+    """Dosage [B, M] for a batch of target haplotypes ``obs_batch [B, M]``."""
+    return jax.vmap(lambda o: impute_obs(tau, o, alleles_mh, err))(obs_batch)
+
+
+def posterior_states(tau: jnp.ndarray, emis: jnp.ndarray) -> jnp.ndarray:
+    """Column-normalised posteriors [M, H] (used as interpolation anchors)."""
+    alphas = ls_forward(tau, emis)
+    betas = ls_backward(tau, emis)
+    p = alphas * betas
+    return p / jnp.sum(p, axis=1, keepdims=True)
+
+
+def impute_interp(
+    tau_k: jnp.ndarray,
+    emis_k: jnp.ndarray,
+    left: jnp.ndarray,
+    frac: jnp.ndarray,
+    alleles_all: jnp.ndarray,
+) -> jnp.ndarray:
+    """Interpolated dosage [M] over the full marker grid.
+
+    ``tau_k``/``emis_k`` [K]/[K, H] — the annotated-anchor subproblem, with
+    ``tau_k`` already built from *accumulated* genetic distance between
+    adjacent anchors (paper Fig 10); ``left``/``frac`` [M] — anchor index and
+    blend fraction per output marker; ``alleles_all`` [M, H].
+    """
+    post_k = posterior_states(tau_k, emis_k)
+    return interp_dosage(post_k, left, frac, alleles_all)

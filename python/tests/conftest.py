@@ -1,0 +1,43 @@
+"""Shared fixtures/strategies for the kernel test-suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+# The f64 oracle comparisons (and the dtype-sweep tests) need real float64.
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import ref
+
+
+def make_problem(seed: int, n_hap: int, n_mark: int, annot_ratio: float = 0.3,
+                 maf: float = 0.25, dtype=np.float32):
+    """Random Li & Stephens problem instance mirroring workload/panelgen.rs."""
+    rng = np.random.default_rng(seed)
+    panel = (rng.random((n_hap, n_mark)) < maf).astype(np.int8)
+    obs = np.where(
+        rng.random(n_mark) < annot_ratio,
+        (rng.random(n_mark) < 0.5).astype(np.int32),
+        np.int32(-1),
+    )
+    d = rng.uniform(1e-8, 2e-6, n_mark).astype(np.float64)
+    d[0] = 0.0
+    tau = np.asarray(ref.tau_from_distance(jnp.asarray(d), n_hap), dtype=dtype)
+    emis = np.asarray(
+        ref.emission_probs(jnp.asarray(panel), jnp.asarray(obs)), dtype=dtype
+    )
+    return {
+        "panel": panel,
+        "obs": obs,
+        "tau": jnp.asarray(tau),
+        "emis": jnp.asarray(emis),
+        "alleles_mh": jnp.asarray(panel.T.astype(dtype)),
+    }
+
+
+@pytest.fixture
+def small_problem():
+    return make_problem(seed=7, n_hap=12, n_mark=24)

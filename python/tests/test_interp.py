@@ -1,0 +1,112 @@
+"""Linear-interpolation kernel vs reference (paper §5.3 / Fig 10)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.interp import interp_dosage
+from .conftest import make_problem
+
+SWEEP = dict(max_examples=20, deadline=None)
+
+
+def make_anchors(seed: int, k: int, n_hap: int, m: int):
+    rng = np.random.default_rng(seed)
+    post = rng.random((k, n_hap)).astype(np.float32)
+    post /= post.sum(axis=1, keepdims=True)
+    left = rng.integers(0, k - 1, m).astype(np.int32)
+    frac = rng.random(m).astype(np.float32)
+    alleles = (rng.random((m, n_hap)) < 0.4).astype(np.float32)
+    return post, left, frac, alleles
+
+
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 12),
+       n_hap=st.integers(2, 16), m=st.integers(1, 40))
+@settings(**SWEEP)
+def test_interp_kernel_matches_ref(seed, k, n_hap, m):
+    post, left, frac, alleles = make_anchors(seed, k, n_hap, m)
+    want_post = np.asarray(
+        ref.interp_posteriors(jnp.asarray(post), jnp.asarray(left), jnp.asarray(frac))
+    )
+    want = (want_post * alleles).sum(axis=1) / want_post.sum(axis=1)
+    got = np.asarray(
+        interp_dosage(jnp.asarray(post), jnp.asarray(left), jnp.asarray(frac),
+                      jnp.asarray(alleles))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+def test_interp_endpoints_exact():
+    """frac=0 reproduces the left anchor, frac=1 the right anchor."""
+    post, _, _, alleles = make_anchors(1, 4, 8, 2)
+    left = np.array([1, 1], dtype=np.int32)
+    frac = np.array([0.0, 1.0], dtype=np.float32)
+    got = np.asarray(
+        interp_dosage(jnp.asarray(post), jnp.asarray(left), jnp.asarray(frac),
+                      jnp.asarray(alleles))
+    )
+    want0 = (post[1] * alleles[0]).sum() / post[1].sum()
+    want1 = (post[2] * alleles[1]).sum() / post[2].sum()
+    np.testing.assert_allclose(got, [want0, want1], rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SWEEP)
+def test_interp_dosage_bounded(seed):
+    post, left, frac, alleles = make_anchors(seed, 6, 10, 30)
+    got = np.asarray(
+        interp_dosage(jnp.asarray(post), jnp.asarray(left), jnp.asarray(frac),
+                      jnp.asarray(alleles))
+    )
+    assert (got >= -1e-6).all() and (got <= 1 + 1e-6).all()
+
+
+def test_interp_normalised_anchors_stay_normalised():
+    """A blend of two normalised columns is normalised: sum(lerp) == 1, so the
+    kernel's defensive normalisation must be a no-op."""
+    post, left, frac, _ = make_anchors(2, 5, 8, 20)
+    blend = np.asarray(
+        ref.interp_posteriors(jnp.asarray(post), jnp.asarray(left), jnp.asarray(frac))
+    )
+    np.testing.assert_allclose(blend.sum(axis=1), np.ones(20), rtol=1e-5)
+
+
+def test_interp_rejects_single_anchor():
+    post = np.ones((1, 4), dtype=np.float32)
+    with pytest.raises(ValueError):
+        interp_dosage(jnp.asarray(post), jnp.zeros(4, jnp.int32),
+                      jnp.zeros(4, jnp.float32), jnp.ones((4, 4), jnp.float32))
+
+
+def test_interp_against_full_hmm_is_close_on_smooth_problem():
+    """On a problem whose posteriors vary smoothly (tiny genetic distances),
+    interpolating from 1-in-4 anchors must track the full HMM dosage closely —
+    the paper's 'negligible impact on accuracy' claim, in miniature."""
+    p = make_problem(seed=9, n_hap=16, n_mark=33, annot_ratio=0.0)
+    # Annotate only the anchor columns so the emission term is 1 elsewhere.
+    anchors = np.arange(0, 33, 4)
+    obs = np.full(33, -1, dtype=np.int32)
+    rng = np.random.default_rng(0)
+    obs[anchors] = (rng.random(len(anchors)) < 0.5).astype(np.int32)
+    emis = ref.emission_probs(jnp.asarray(p["panel"]), jnp.asarray(obs))
+    full = np.asarray(ref.impute(p["tau"], emis, jnp.asarray(p["panel"])))
+
+    # Anchor subproblem: accumulated tau between anchors.
+    post = ref.posterior(ref.rank1_forward(p["tau"], emis),
+                         ref.rank1_backward(p["tau"], emis))
+    post_k = jnp.asarray(np.asarray(post)[anchors])
+    left = np.minimum(np.arange(33) // 4, len(anchors) - 2).astype(np.int32)
+    frac = ((np.arange(33) % 4) / 4.0).astype(np.float32)
+    frac[anchors[-1]:] = (np.arange(33)[anchors[-1]:] - anchors[-2]) / 4.0
+    got = np.asarray(
+        interp_dosage(post_k, jnp.asarray(left), jnp.asarray(frac),
+                      p["alleles_mh"])
+    )
+    # Anchor columns themselves must be (nearly) exact.
+    np.testing.assert_allclose(got[anchors[:-1]], full[anchors[:-1]], atol=5e-3)
+    # Intermediate columns track the full model.
+    assert np.abs(got - full).mean() < 0.05

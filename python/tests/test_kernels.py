@@ -1,0 +1,120 @@
+"""Pallas kernels vs the pure-jnp oracles (the core L1 correctness signal).
+
+Hypothesis sweeps shapes, block sizes and dtypes; every property asserts
+allclose against ref.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.common import pick_block_m, vmem_bytes_estimate
+from compile.kernels.ls_bwd import ls_backward
+from compile.kernels.ls_fwd import ls_forward
+from compile.kernels.posterior import posterior_dosage
+from .conftest import make_problem
+
+SWEEP = dict(max_examples=20, deadline=None)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_hap=st.integers(2, 32),
+    n_mark=st.integers(2, 64),
+)
+@settings(**SWEEP)
+def test_forward_kernel_matches_ref(seed, n_hap, n_mark):
+    p = make_problem(seed, n_hap, n_mark)
+    want = np.asarray(ref.rank1_forward(p["tau"], p["emis"]))
+    got = np.asarray(ls_forward(p["tau"], p["emis"]))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-8)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_hap=st.integers(2, 32),
+    n_mark=st.integers(2, 64),
+)
+@settings(**SWEEP)
+def test_backward_kernel_matches_ref(seed, n_hap, n_mark):
+    p = make_problem(seed, n_hap, n_mark)
+    want = np.asarray(ref.rank1_backward(p["tau"], p["emis"]))
+    got = np.asarray(ls_backward(p["tau"], p["emis"]))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-8)
+
+
+@pytest.mark.parametrize("block_m", [1, 2, 4, 8, 24])
+def test_forward_block_size_invariance(block_m):
+    """Result must not depend on the VMEM tiling choice."""
+    p = make_problem(11, 16, 24)
+    want = np.asarray(ls_forward(p["tau"], p["emis"], block_m=24))
+    got = np.asarray(ls_forward(p["tau"], p["emis"], block_m=block_m))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("block_m", [1, 2, 4, 8, 24])
+def test_backward_block_size_invariance(block_m):
+    p = make_problem(12, 16, 24)
+    want = np.asarray(ls_backward(p["tau"], p["emis"], block_m=24))
+    got = np.asarray(ls_backward(p["tau"], p["emis"], block_m=block_m))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n_hap=st.integers(2, 24), n_mark=st.integers(2, 48))
+@settings(**SWEEP)
+def test_posterior_kernel_matches_ref(seed, n_hap, n_mark):
+    p = make_problem(seed, n_hap, n_mark)
+    alphas = ref.rank1_forward(p["tau"], p["emis"])
+    betas = ref.rank1_backward(p["tau"], p["emis"])
+    want = np.asarray(ref.dosage(ref.posterior(alphas, betas), jnp.asarray(p["panel"])))
+    got = np.asarray(posterior_dosage(alphas, betas, p["alleles_mh"]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_posterior_dosage_bounded(small_problem):
+    p = small_problem
+    alphas = ref.rank1_forward(p["tau"], p["emis"])
+    betas = ref.rank1_backward(p["tau"], p["emis"])
+    dos = np.asarray(posterior_dosage(alphas, betas, p["alleles_mh"]))
+    assert (dos >= -1e-6).all() and (dos <= 1 + 1e-6).all()
+
+
+def test_kernels_reject_bad_block():
+    p = make_problem(1, 4, 10)
+    with pytest.raises(ValueError):
+        ls_forward(p["tau"], p["emis"], block_m=3)
+    with pytest.raises(ValueError):
+        ls_backward(p["tau"], p["emis"], block_m=4)
+
+
+@given(m=st.integers(1, 4096))
+@settings(max_examples=50, deadline=None)
+def test_pick_block_m_divides(m):
+    bm = pick_block_m(m)
+    assert m % bm == 0 and 1 <= bm <= 128
+
+
+def test_pick_block_m_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        pick_block_m(0)
+
+
+def test_vmem_estimate_within_budget():
+    """The default tiling must stay within a 16 MiB VMEM budget at the largest
+    canonical shape (H=1024) — the claim documented in DESIGN.md §Perf."""
+    assert vmem_bytes_estimate(128, 1024) < 16 * 2**20 // 2
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_forward_kernel_dtypes(dtype):
+    p = make_problem(5, 8, 16)
+    tau = p["tau"].astype(dtype)
+    emis = p["emis"].astype(dtype)
+    got = ls_forward(tau, emis)
+    assert got.dtype == dtype
+    want = np.asarray(ref.rank1_forward(tau, emis))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)

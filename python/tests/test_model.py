@@ -1,0 +1,102 @@
+"""L2 pipeline tests: model.py against the oracles, batching, interpolation."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .conftest import make_problem
+
+SWEEP = dict(max_examples=15, deadline=None)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n_hap=st.integers(2, 24), n_mark=st.integers(2, 48))
+@settings(**SWEEP)
+def test_impute_raw_matches_ref(seed, n_hap, n_mark):
+    p = make_problem(seed, n_hap, n_mark)
+    want = np.asarray(ref.impute(p["tau"], p["emis"], jnp.asarray(p["panel"])))
+    got = np.asarray(model.impute_raw(p["tau"], p["emis"], p["alleles_mh"]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_emissions_match_ref(small_problem):
+    p = small_problem
+    got = np.asarray(model.emissions(p["alleles_mh"], jnp.asarray(p["obs"])))
+    want = np.asarray(ref.emission_probs(jnp.asarray(p["panel"]), jnp.asarray(p["obs"])))
+    np.testing.assert_allclose(got, want, rtol=0)
+
+
+def test_impute_batch_matches_per_target():
+    """The vmapped batch path must agree with single-target calls."""
+    p = make_problem(21, 16, 32)
+    rng = np.random.default_rng(21)
+    batch = 5
+    obs_batch = np.where(
+        rng.random((batch, 32)) < 0.3,
+        (rng.random((batch, 32)) < 0.5).astype(np.int32),
+        np.int32(-1),
+    )
+    got = np.asarray(model.impute_batch(p["tau"], jnp.asarray(obs_batch), p["alleles_mh"]))
+    for b in range(batch):
+        want = np.asarray(model.impute_obs(p["tau"], jnp.asarray(obs_batch[b]), p["alleles_mh"]))
+        np.testing.assert_allclose(got[b], want, rtol=1e-5)
+
+
+def test_impute_batch_jits():
+    import jax
+
+    p = make_problem(22, 8, 16)
+    obs = jnp.zeros((3, 16), jnp.int32)
+    fn = jax.jit(model.impute_batch)
+    out = np.asarray(fn(p["tau"], obs, p["alleles_mh"]))
+    assert out.shape == (3, 16)
+    assert np.isfinite(out).all()
+
+
+def test_posterior_states_normalised(small_problem):
+    p = small_problem
+    post = np.asarray(model.posterior_states(p["tau"], p["emis"]))
+    np.testing.assert_allclose(post.sum(axis=1), np.ones(post.shape[0]), rtol=1e-4)
+
+
+def test_impute_interp_pipeline_end_to_end():
+    """Full interp pipeline (anchor HMM inside) vs a hand-assembled reference."""
+    k, n_hap, m = 6, 12, 24
+    p = make_problem(31, n_hap, k)
+    rng = np.random.default_rng(31)
+    left = np.minimum(np.arange(m) * (k - 1) // m, k - 2).astype(np.int32)
+    frac = rng.random(m).astype(np.float32)
+    alleles = (rng.random((m, n_hap)) < 0.4).astype(np.float32)
+
+    got = np.asarray(
+        model.impute_interp(p["tau"], p["emis"], jnp.asarray(left),
+                            jnp.asarray(frac), jnp.asarray(alleles))
+    )
+    post_k = np.asarray(model.posterior_states(p["tau"], p["emis"]))
+    blend = np.asarray(
+        ref.interp_posteriors(jnp.asarray(post_k), jnp.asarray(left), jnp.asarray(frac))
+    )
+    want = (blend * alleles).sum(axis=1) / blend.sum(axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_observed_markers_dominate_dosage():
+    """At an annotated marker the dosage must be pulled toward the observed
+    allele (posterior mass concentrates on matching haplotypes)."""
+    p = make_problem(41, 16, 30, annot_ratio=0.5)
+    dos = np.asarray(model.impute_obs(p["tau"], jnp.asarray(p["obs"]), p["alleles_mh"]))
+    obs = p["obs"]
+    panel = p["panel"]
+    for m in np.nonzero(obs >= 0)[0]:
+        # Skip monomorphic columns — nothing to discriminate.
+        if panel[:, m].min() == panel[:, m].max():
+            continue
+        freq = panel[:, m].mean()
+        if obs[m] == 1:
+            assert dos[m] > freq - 1e-6
+        else:
+            assert dos[m] < freq + 1e-6

@@ -1,0 +1,135 @@
+"""Cross-checks between the two independent oracles (dense vs rank-1).
+
+The dense O(H^2) form is a literal transcription of the paper's equations; the
+rank-1 form is what every production path (Pallas kernels, Rust baseline, Rust
+event-driven vertices) implements.  Agreement here is the root of the whole
+correctness argument.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from .conftest import make_problem
+
+SMALL = dict(max_examples=25, deadline=None)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n_hap=st.integers(2, 24), n_mark=st.integers(2, 40))
+@settings(**SMALL)
+def test_dense_vs_rank1_forward(seed, n_hap, n_mark):
+    p = make_problem(seed, n_hap, n_mark)
+    dense = np.asarray(ref.dense_forward(p["tau"], p["emis"]))
+    r1 = np.asarray(ref.rank1_forward(p["tau"], p["emis"]))
+    np.testing.assert_allclose(dense, r1, rtol=1e-4, atol=1e-7)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n_hap=st.integers(2, 24), n_mark=st.integers(2, 40))
+@settings(**SMALL)
+def test_dense_vs_rank1_backward(seed, n_hap, n_mark):
+    p = make_problem(seed, n_hap, n_mark)
+    dense = np.asarray(ref.dense_backward(p["tau"], p["emis"]))
+    r1 = np.asarray(ref.rank1_backward(p["tau"], p["emis"]))
+    np.testing.assert_allclose(dense, r1, rtol=1e-4, atol=1e-7)
+
+
+def test_transition_rows_sum_to_one():
+    for tau in [0.0, 0.1, 0.5, 1.0]:
+        a = np.asarray(ref.dense_transition(jnp.float64(tau), 8, jnp.float64))
+        np.testing.assert_allclose(a.sum(axis=1), np.ones(8), rtol=1e-12)
+
+
+def test_initialisation_follows_algorithm1(small_problem):
+    p = small_problem
+    alphas = np.asarray(ref.rank1_forward(p["tau"], p["emis"]))
+    betas = np.asarray(ref.rank1_backward(p["tau"], p["emis"]))
+    h = p["panel"].shape[0]
+    np.testing.assert_allclose(alphas[0], np.full(h, 1.0 / h), rtol=1e-6)
+    np.testing.assert_allclose(betas[-1], np.ones(h), rtol=0)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SMALL)
+def test_posterior_columns_normalised(seed):
+    p = make_problem(seed, 10, 20)
+    post = np.asarray(
+        ref.posterior(
+            ref.rank1_forward(p["tau"], p["emis"]),
+            ref.rank1_backward(p["tau"], p["emis"]),
+        )
+    )
+    np.testing.assert_allclose(post.sum(axis=1), np.ones(post.shape[0]), rtol=1e-4)
+    assert (post >= 0).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SMALL)
+def test_dosage_bounded(seed):
+    p = make_problem(seed, 10, 20)
+    dos = np.asarray(ref.impute(p["tau"], p["emis"], jnp.asarray(p["panel"])))
+    assert (dos >= -1e-6).all() and (dos <= 1 + 1e-6).all()
+
+
+def test_forward_backward_likelihood_consistency(small_problem):
+    """sum_h alpha_m(h) beta_m(h) is the sequence likelihood — constant in m."""
+    p = small_problem
+    alphas = np.asarray(ref.rank1_forward(p["tau"], p["emis"]), dtype=np.float64)
+    betas = np.asarray(ref.rank1_backward(p["tau"], p["emis"]), dtype=np.float64)
+    lik = (alphas * betas).sum(axis=1)
+    np.testing.assert_allclose(lik, lik[0] * np.ones_like(lik), rtol=1e-4)
+
+
+def test_perfect_copy_recovers_reference_haplotype():
+    """A target that copies reference haplotype 0 exactly, fully observed,
+    should be imputed back to haplotype 0's alleles with high confidence."""
+    rng = np.random.default_rng(3)
+    n_hap, n_mark = 16, 40
+    panel = (rng.random((n_hap, n_mark)) < 0.5).astype(np.int8)
+    obs = panel[0].astype(np.int32)  # fully observed copy of hap 0
+    d = np.full(n_mark, 1e-7)
+    d[0] = 0
+    tau = ref.tau_from_distance(jnp.asarray(d), n_hap)
+    emis = ref.emission_probs(jnp.asarray(panel), jnp.asarray(obs))
+    dos = np.asarray(ref.impute(tau, emis, jnp.asarray(panel)))
+    hard = (dos > 0.5).astype(np.int8)
+    np.testing.assert_array_equal(hard, panel[0])
+
+
+def test_no_observations_gives_allele_frequency_posterior():
+    """With zero annotated markers every state stays equally likely, so the
+    dosage must equal the panel's per-column allele frequency."""
+    rng = np.random.default_rng(4)
+    n_hap, n_mark = 12, 20
+    panel = (rng.random((n_hap, n_mark)) < 0.4).astype(np.int8)
+    obs = np.full(n_mark, -1, dtype=np.int32)
+    d = np.full(n_mark, 1e-7)
+    d[0] = 0
+    tau = ref.tau_from_distance(jnp.asarray(d), n_hap)
+    emis = ref.emission_probs(jnp.asarray(panel), jnp.asarray(obs))
+    dos = np.asarray(ref.impute(tau, emis, jnp.asarray(panel)))
+    np.testing.assert_allclose(dos, panel.mean(axis=0), rtol=1e-4, atol=1e-6)
+
+
+def test_tau_formula():
+    """Eq (1) spot-check."""
+    t = float(ref.tau_from_distance(jnp.float64(1e-6), 100, ne=50_000.0))
+    assert t == pytest.approx(1.0 - np.exp(-4 * 50_000 * 1e-6 / 100), rel=1e-9)
+
+
+def test_emission_matrix_values(small_problem):
+    p = small_problem
+    emis = np.asarray(p["emis"])
+    obs = p["obs"]
+    panel = p["panel"]
+    for m in range(len(obs)):
+        for h in range(panel.shape[0]):
+            if obs[m] < 0:
+                assert emis[m, h] == 1.0
+            elif panel[h, m] == obs[m]:
+                assert emis[m, h] == pytest.approx(1 - ref.DEFAULT_ERR)
+            else:
+                assert emis[m, h] == pytest.approx(ref.DEFAULT_ERR)

@@ -1,0 +1,64 @@
+//! `cargo bench --bench baseline_hotpath` — micro-benchmark of the x86-style
+//! baseline (the denominator of every figure; it must be honest).
+//!
+//! Reports per-MAC cost for the dense three-loop and rank-1 formulations,
+//! plus the interpolated pipeline, across panel shapes.
+
+use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
+use poets_impute::model::interpolation::impute_interp;
+use poets_impute::util::rng::Rng;
+use poets_impute::util::stats::Summary;
+use poets_impute::util::table::{Table, fmt_secs};
+use poets_impute::util::timed_reps;
+use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+fn main() {
+    let mut t = Table::new(&["panel", "method", "per-target", "MAC/s"]);
+    for &(h, m) in &[(16usize, 128usize), (64, 512), (128, 1024)] {
+        let cfg = PanelConfig {
+            n_hap: h,
+            n_mark: m,
+            annot_ratio: 0.1,
+            seed: 42,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&cfg);
+        let mut rng = Rng::new(1);
+        let target = generate_targets(&panel, &cfg, 1, &mut rng)
+            .into_iter()
+            .next()
+            .unwrap()
+            .masked;
+        let b = Baseline::default();
+        for (name, method) in [
+            ("dense", Method::DenseThreeLoop),
+            ("rank1", Method::Rank1),
+        ] {
+            let reps = if method == Method::DenseThreeLoop { 3 } else { 10 };
+            let (_, times) = timed_reps(reps, || {
+                let o: ImputeOut<f32> = b.impute(&panel, &target, method);
+                std::hint::black_box(o)
+            });
+            let s = Summary::of(&times);
+            let macs = b.flops_per_target(&panel, method) as f64;
+            t.row(vec![
+                format!("{h}x{m}"),
+                name.into(),
+                fmt_secs(s.p50),
+                format!("{:.2e}", macs / s.p50),
+            ]);
+        }
+        let (_, times) = timed_reps(5, || {
+            let o: ImputeOut<f32> = impute_interp(&b, &panel, &target, Method::Rank1);
+            std::hint::black_box(o)
+        });
+        let s = Summary::of(&times);
+        t.row(vec![
+            format!("{h}x{m}"),
+            "interp(rank1)".into(),
+            fmt_secs(s.p50),
+            "-".into(),
+        ]);
+    }
+    println!("## baseline hot path\n{}", t.render());
+}

@@ -1,0 +1,74 @@
+//! `cargo bench --bench desim_hotpath` — micro-benchmark of the simulator's
+//! host-side event throughput (events/second of *host* time), the quantity
+//! that bounds how large a panel the DES plane can sweep.  This is the L3
+//! optimisation target of EXPERIMENTS.md §Perf.
+
+use poets_impute::imputation::app::{RawAppConfig, run_raw};
+use poets_impute::imputation::interp_app::run_interp;
+use poets_impute::poets::topology::ClusterConfig;
+use poets_impute::util::rng::Rng;
+use poets_impute::util::table::{Table, fmt_count, fmt_secs};
+use poets_impute::util::timed;
+use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+fn main() {
+    let mut t = Table::new(&[
+        "app",
+        "panel",
+        "targets",
+        "host time",
+        "events",
+        "host events/s",
+        "sim time",
+    ]);
+    for &(h, m, targets) in &[(16usize, 160usize, 8usize), (32, 320, 8)] {
+        let cfg = PanelConfig {
+            n_hap: h,
+            n_mark: m,
+            annot_ratio: 0.1,
+            seed: 7,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&cfg);
+        let mut rng = Rng::new(8);
+        let tgts: Vec<_> = generate_targets(&panel, &cfg, targets, &mut rng)
+            .into_iter()
+            .map(|c| c.masked)
+            .collect();
+        let app = RawAppConfig {
+            cluster: ClusterConfig::with_boards(4),
+            states_per_thread: 4,
+            ..RawAppConfig::default()
+        };
+        let (raw, host) = timed(|| run_raw(&panel, &tgts, &app));
+        t.row(vec![
+            "raw".into(),
+            format!("{h}x{m}"),
+            targets.to_string(),
+            fmt_secs(host),
+            fmt_count(raw.metrics.copies_delivered),
+            format!("{:.2e}", raw.metrics.copies_delivered as f64 / host),
+            fmt_secs(raw.sim_seconds),
+        ]);
+        let (itp, host) = timed(|| {
+            run_interp(
+                &panel,
+                &tgts,
+                &RawAppConfig {
+                    states_per_thread: 1,
+                    ..app
+                },
+            )
+        });
+        t.row(vec![
+            "interp".into(),
+            format!("{h}x{m}"),
+            targets.to_string(),
+            fmt_secs(host),
+            fmt_count(itp.metrics.copies_delivered),
+            format!("{:.2e}", itp.metrics.copies_delivered as f64 / host),
+            fmt_secs(itp.sim_seconds),
+        ]);
+    }
+    println!("## DES hot path (host-side throughput)\n{}", t.render());
+}

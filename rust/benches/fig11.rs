@@ -1,0 +1,29 @@
+//! `cargo bench --bench fig11` — regenerates the paper's Fig 11 series
+//! (raw event-driven algorithm over expanding hardware) at bench-friendly
+//! scale: DES plane at reduced panels + analytic plane at full paper scale.
+//!
+//! For the full sweep use the CLI: `poets-impute bench fig11`.
+
+use poets_impute::bench::{FigOpts, X86Cost, fig11};
+
+fn main() {
+    eprintln!("[fig11 bench] calibrating x86 throughput...");
+    let x86 = X86Cost::measure_default();
+    let opts = FigOpts {
+        des_states_per_board: 64,
+        des_targets: 8,
+        full_targets: 10_000,
+        skip_des: false,
+        seed: 1101,
+    };
+    let report = fig11(&[1, 2, 4, 8], &opts, &x86);
+    println!("{}", report.render());
+
+    // Shape assertions (the reproduction criterion for E1).
+    let s: Vec<f64> = report.rows.iter().map(|r| r.full_speedup).collect();
+    assert!(
+        s.windows(2).all(|w| w[1] > w[0]),
+        "Fig 11 shape violated: {s:?}"
+    );
+    println!("fig11: monotone speedup over boards OK {s:?}");
+}

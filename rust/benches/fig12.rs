@@ -1,0 +1,44 @@
+//! `cargo bench --bench fig12` — regenerates the paper's Fig 12 series
+//! (soft-scheduling sweep on the full cluster; optimum ≈10 states/thread,
+//! peak ≈270× at 10,000 targets vs a paper-era x86).
+//!
+//! For the full sweep use the CLI: `poets-impute bench fig12`.
+
+use poets_impute::bench::calibrate::{PAPER_ERA_X86_MACS_PER_S, anchor_speedup};
+use poets_impute::bench::{FigOpts, X86Cost, fig12};
+use poets_impute::poets::costmodel::CostModel;
+
+fn main() {
+    eprintln!("[fig12 bench] calibrating x86 throughput...");
+    let x86 = X86Cost::measure_default();
+    let opts = FigOpts {
+        des_states_per_board: 48,
+        des_targets: 8,
+        full_targets: 10_000,
+        skip_des: false,
+        seed: 1202,
+    };
+    let report = fig12(&[1, 2, 5, 10, 20, 40], &opts, &x86);
+    println!("{}", report.render());
+
+    // Shape assertions (E2): interior optimum near 10 states/thread.
+    let s: Vec<f64> = report.rows.iter().map(|r| r.full_speedup).collect();
+    let peak = s
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert!(
+        (1..report.rows.len() - 1).contains(&peak),
+        "Fig 12 shape violated: optimum at edge, speedups {s:?}"
+    );
+    println!(
+        "fig12: interior optimum at {} states/thread OK",
+        report.rows[peak].x
+    );
+
+    let anchor = anchor_speedup(&CostModel::default(), PAPER_ERA_X86_MACS_PER_S, 10_000);
+    println!("fig12: 270x-anchor check (paper-era x86): {anchor:.0}x");
+    assert!((90.0..900.0).contains(&anchor), "anchor {anchor} off-band");
+}

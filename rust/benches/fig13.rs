@@ -1,0 +1,41 @@
+//! `cargo bench --bench fig13` — regenerates the paper's Fig 13 series
+//! (linear-interpolation algorithm over expanding hardware) and prints the
+//! E5 message-reduction accounting.
+//!
+//! For the full sweep use the CLI: `poets-impute bench fig13`.
+
+use poets_impute::bench::{FigOpts, X86Cost, fig11, fig13};
+
+fn main() {
+    eprintln!("[fig13 bench] calibrating x86 throughput...");
+    let x86 = X86Cost::measure_default();
+    let opts = FigOpts {
+        des_states_per_board: 24,
+        des_targets: 8,
+        full_targets: 10_000,
+        skip_des: false,
+        seed: 1303,
+    };
+    let report = fig13(&[1, 2, 4], &opts, &x86);
+    println!("{}", report.render());
+
+    // Shape assertions (E3): speedup grows with boards, and interpolation
+    // beats the raw algorithm on matched hardware (message economics).
+    let s: Vec<f64> = report.rows.iter().map(|r| r.full_speedup).collect();
+    assert!(
+        s.windows(2).all(|w| w[1] > w[0]),
+        "Fig 13 shape violated: {s:?}"
+    );
+
+    let raw = fig11(&[2], &opts, &x86);
+    let (raw_msgs, itp_msgs) = (
+        raw.rows[0].messages.unwrap_or(0),
+        report.rows[1].messages.unwrap_or(0),
+    );
+    println!(
+        "fig13: E5 message accounting — raw {} sends vs interp {} sends \
+         on comparable DES panels",
+        raw_msgs, itp_msgs
+    );
+    println!("fig13: monotone speedup over boards OK {s:?}");
+}

@@ -1,0 +1,187 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! * **Mapping** — the paper's manual 2-D column-packed mapping vs the
+//!   POLite auto-partitioner vs a locality-blind random scatter: quantifies how
+//!   much of the performance comes from keeping columns physically local
+//!   (inter-board traffic and simulated time).
+//! * **Multicast** — Tinsel's hardware multicast vs naive unicast fan-out:
+//!   the send-request amortisation the event-driven formulation depends on.
+
+use crate::graph::mapping::Mapping;
+use crate::graph::partition::partition_mapping;
+use crate::imputation::app::{RawAppConfig, build_raw_graph, extract_results};
+use crate::poets::costmodel::CostModel;
+use crate::poets::desim::{SimConfig, Simulator};
+use crate::poets::topology::ClusterConfig;
+use crate::util::rng::Rng;
+use crate::util::table::{Table, fmt_count, fmt_secs};
+use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+/// One ablation row.
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub name: String,
+    pub sim_seconds: f64,
+    pub inter_board_sends: u64,
+    pub sends: u64,
+    pub max_mailbox_busy: u64,
+}
+
+/// Run the mapping ablation on one panel.
+pub fn mapping_ablation(
+    n_hap: usize,
+    n_mark: usize,
+    n_targets: usize,
+    boards: usize,
+    states_per_thread: usize,
+    seed: u64,
+) -> Vec<AblationRow> {
+    let cfg = PanelConfig {
+        n_hap,
+        n_mark,
+        maf: 0.1,
+        annot_ratio: 0.1,
+        seed,
+        ..PanelConfig::default()
+    };
+    let panel = generate_panel(&cfg);
+    let mut rng = Rng::new(seed ^ 0xAB1A);
+    let targets: Vec<_> = generate_targets(&panel, &cfg, n_targets, &mut rng)
+        .into_iter()
+        .map(|c| c.masked)
+        .collect();
+    let cluster = ClusterConfig::with_boards(boards);
+    let app = RawAppConfig {
+        cluster,
+        states_per_thread,
+        ..RawAppConfig::default()
+    };
+
+    let mut rows = Vec::new();
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    for name in ["manual-2d", "partitioned", "shuffled"] {
+        let graph = build_raw_graph(&panel, &targets, &app.params);
+        let mapping = match name {
+            "manual-2d" => Mapping::manual_2d(graph.n_vertices(), states_per_thread, &cluster),
+            "partitioned" => partition_mapping(&graph, states_per_thread, &cluster),
+            _ => {
+                // Locality-blind control: the manual packing, randomly
+                // permuted (column neighbourhoods scatter across boards).
+                use crate::poets::topology::ThreadId;
+                let n = graph.n_vertices();
+                let mut assign: Vec<ThreadId> = (0..n)
+                    .map(|v| ThreadId((v / states_per_thread) as u32))
+                    .collect();
+                let mut srng = Rng::new(seed ^ 0x50F1E);
+                srng.shuffle(&mut assign);
+                Mapping::from_assignment(assign, &cluster)
+            }
+        };
+        let mut sim = Simulator::new(graph, mapping, cluster, CostModel::default(), SimConfig::default());
+        sim.run();
+        let out = extract_results(&sim, &panel, targets.len());
+        // Mapping must not change numerics beyond f32 reassociation: message
+        // arrival order (and hence accumulation order) is mapping-dependent,
+        // so agreement is to tolerance, not bitwise.
+        match &reference {
+            None => reference = Some(out.dosages.clone()),
+            Some(want) => {
+                for (a, b) in want.iter().flatten().zip(out.dosages.iter().flatten()) {
+                    assert!(
+                        (a - b).abs() < 1e-3,
+                        "{name} changed numerics: {a} vs {b}"
+                    );
+                }
+            }
+        }
+        rows.push(AblationRow {
+            name: name.into(),
+            sim_seconds: out.sim_seconds,
+            inter_board_sends: out.metrics.inter_board_sends,
+            sends: out.metrics.sends,
+            max_mailbox_busy: out.metrics.max_mailbox_busy,
+        });
+    }
+    rows
+}
+
+/// Multicast-vs-unicast send accounting (analytic: the fabric replicates one
+/// send request per destination under unicast, so send requests and their
+/// core cycles inflate by the mean fan-out).
+pub fn multicast_ablation(n_hap: usize, n_mark: usize, n_targets: usize) -> (u64, u64) {
+    let h = n_hap as u64;
+    let m = n_mark as u64;
+    let t = n_targets as u64;
+    let mcast_sends = t * (2 * (m - 1) * h + m * (h - 1));
+    let unicast_sends = t * (2 * (m - 1) * h * h + m * (h - 1));
+    (mcast_sends, unicast_sends)
+}
+
+/// Render the ablation report.
+pub fn report(rows: &[AblationRow], mcast: (u64, u64)) -> String {
+    let mut t = Table::new(&["mapping", "sim time", "inter-board", "sends", "peak mailbox busy"]);
+    for r in rows {
+        t.row(vec![
+            r.name.clone(),
+            fmt_secs(r.sim_seconds),
+            fmt_count(r.inter_board_sends),
+            fmt_count(r.sends),
+            fmt_count(r.max_mailbox_busy),
+        ]);
+    }
+    format!(
+        "## Mapping ablation (same numerics asserted)\n{}\n\
+         ## Multicast ablation\nhardware multicast: {} send requests; \
+         naive unicast fan-out: {} ({}x amplification)\n",
+        t.render(),
+        fmt_count(mcast.0),
+        fmt_count(mcast.1),
+        mcast.1 / mcast.0.max(1),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_mapping_minimises_inter_board_traffic() {
+        // Panel spans >1 board (24x100 = 2400 states at 2/thread over 2
+        // boards) so locality actually matters.
+        let rows = mapping_ablation(24, 100, 2, 2, 2, 7);
+        let by = |n: &str| rows.iter().find(|r| r.name == n).unwrap().clone();
+        let manual = by("manual-2d");
+        let rnd = by("shuffled");
+        assert!(
+            manual.inter_board_sends * 2 < rnd.inter_board_sends,
+            "manual {} vs shuffled {}",
+            manual.inter_board_sends,
+            rnd.inter_board_sends
+        );
+    }
+
+    #[test]
+    fn partitioner_between_manual_and_random() {
+        let rows = mapping_ablation(24, 100, 2, 2, 2, 8);
+        let by = |n: &str| rows.iter().find(|r| r.name == n).unwrap().clone();
+        assert!(
+            by("partitioned").inter_board_sends <= by("shuffled").inter_board_sends,
+            "partitioner worse than random scatter"
+        );
+    }
+
+    #[test]
+    fn multicast_amplification_is_fanout() {
+        let (mc, uc) = multicast_ablation(16, 100, 10);
+        // Unicast inflates the α/β sends by H.
+        assert!(uc > 10 * mc, "mc={mc} uc={uc}");
+    }
+
+    #[test]
+    fn report_renders() {
+        let rows = mapping_ablation(6, 30, 2, 2, 4, 9);
+        let r = report(&rows, multicast_ablation(6, 30, 2));
+        assert!(r.contains("manual-2d"));
+        assert!(r.contains("amplification"));
+    }
+}

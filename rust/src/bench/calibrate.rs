@@ -1,0 +1,189 @@
+//! Cost-model calibration report.
+//!
+//! Prints (a) the frozen cost-model constants, (b) the measured x86
+//! throughput on this host, (c) the model's prediction at the paper's one
+//! quantitative anchor — Fig 12's peak: full 48-board cluster, ~10 states
+//! per thread, 10,000 targets, reported speedup ≈ 270× — and (d) a
+//! per-constant sensitivity sweep.  The constants are *frozen* across all
+//! experiments; this report exists so the calibration is auditable, not
+//! tunable per figure.
+
+use crate::imputation::analytic::{AppKind, Workload, predict};
+use crate::poets::costmodel::CostModel;
+use crate::poets::topology::ClusterConfig;
+use crate::util::table::{Table, fmt_speedup};
+use crate::workload::scenarios;
+
+use super::x86::X86Cost;
+
+/// Estimated throughput of the *paper's* x86 baseline (single-threaded C on
+/// an i9-7940X, 2017-era, f32 with a branchy inner loop and DRAM-resident
+/// panels).  Derived from the paper's own statement that large-panel
+/// runtimes are "measured in days": the largest Fig 12 panel (≈2M states,
+/// H≈140, M≈14k) costs ≈1.1e9 MACs/target; 10,000 targets over ~2 days ⇒
+/// ≈6e7 MAC/s.  Used ONLY for the anchor comparison; every figure also
+/// reports speedups against the (much faster) baseline measured on this
+/// host.
+pub const PAPER_ERA_X86_MACS_PER_S: f64 = 6e7;
+
+/// The paper's anchor configuration (Fig 12 optimum) at a given x86
+/// throughput.
+pub fn anchor_speedup(cost: &CostModel, macs_per_s: f64, full_targets: usize) -> f64 {
+    let full = scenarios::fig12_config(10, 0);
+    let pred = predict(
+        &Workload {
+            n_hap: full.n_hap,
+            n_mark: full.n_mark,
+            n_targets: full_targets,
+            states_per_thread: 10,
+            kind: AppKind::Raw,
+        },
+        &ClusterConfig::poets_48(),
+        cost,
+    );
+    let x86 = X86Cost {
+        dense_macs_per_s: macs_per_s,
+        rank1_macs_per_s: macs_per_s,
+    };
+    x86.raw_seconds(full.n_hap, full.n_mark, full_targets) / pred.seconds
+}
+
+/// Render the full calibration report.
+pub fn report(x86: &X86Cost) -> String {
+    let cost = CostModel::default();
+    let mut out = String::new();
+    out.push_str("## Cost-model calibration\n\n");
+    out.push_str(&format!(
+        "constants (cycles @210MHz): handler_dispatch={} flop={} mailbox_ingress={} \
+         send_request={} hop={} link_serialize={} link_latency={} barrier_base={} \
+         barrier_per_level={}\n",
+        cost.handler_dispatch,
+        cost.flop,
+        cost.mailbox_ingress,
+        cost.send_request,
+        cost.hop,
+        cost.board_link_serialize,
+        cost.board_link_latency,
+        cost.step_barrier_base,
+        cost.step_barrier_per_level,
+    ));
+    out.push_str(&format!(
+        "x86 host throughput: dense {:.2e} MAC/s, rank1 {:.2e} MAC/s\n\n",
+        x86.dense_macs_per_s, x86.rank1_macs_per_s
+    ));
+
+    let anchor_paper = anchor_speedup(&cost, PAPER_ERA_X86_MACS_PER_S, 10_000);
+    let anchor_host = anchor_speedup(&cost, x86.dense_macs_per_s, 10_000);
+    out.push_str(&format!(
+        "anchor (Fig 12 peak, 48 boards, 10 states/thread, 10k targets):\n\
+         \x20 vs paper-era x86 ({PAPER_ERA_X86_MACS_PER_S:.0e} MAC/s): {} — paper reports ~270x\n\
+         \x20 vs this host's baseline ({:.2e} MAC/s): {}\n\n",
+        fmt_speedup(anchor_paper),
+        x86.dense_macs_per_s,
+        fmt_speedup(anchor_host),
+    ));
+
+    // Sensitivity: halve/double each dominant constant.
+    let mut t = Table::new(&["constant", "x0.5", "x1", "x2"]);
+    let variants: Vec<(&str, Box<dyn Fn(u64) -> CostModel>)> = vec![
+        (
+            "handler_dispatch",
+            Box::new(|v| CostModel {
+                handler_dispatch: v,
+                ..CostModel::default()
+            }),
+        ),
+        (
+            "mailbox_ingress",
+            Box::new(|v| CostModel {
+                mailbox_ingress: v,
+                ..CostModel::default()
+            }),
+        ),
+        (
+            "flop",
+            Box::new(|v| CostModel {
+                flop: v,
+                ..CostModel::default()
+            }),
+        ),
+        (
+            "send_request",
+            Box::new(|v| CostModel {
+                send_request: v,
+                ..CostModel::default()
+            }),
+        ),
+    ];
+    let base_val = |name: &str| -> u64 {
+        match name {
+            "handler_dispatch" => cost.handler_dispatch,
+            "mailbox_ingress" => cost.mailbox_ingress,
+            "flop" => cost.flop,
+            "send_request" => cost.send_request,
+            _ => unreachable!(),
+        }
+    };
+    for (name, make) in &variants {
+        let b = base_val(name);
+        let lo = anchor_speedup(&make(b / 2), PAPER_ERA_X86_MACS_PER_S, 10_000);
+        let mid = anchor_speedup(&make(b), PAPER_ERA_X86_MACS_PER_S, 10_000);
+        let hi = anchor_speedup(&make(b * 2), PAPER_ERA_X86_MACS_PER_S, 10_000);
+        t.row(vec![
+            name.to_string(),
+            fmt_speedup(lo),
+            fmt_speedup(mid),
+            fmt_speedup(hi),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_x86() -> X86Cost {
+        // The paper's i9-7940X: a scalar C loop with a branch in the inner
+        // body lands in the ~1e9 MAC/s regime.
+        X86Cost {
+            dense_macs_per_s: 1.5e9,
+            rank1_macs_per_s: 3e9,
+        }
+    }
+
+    #[test]
+    fn anchor_lands_in_paper_order_of_magnitude() {
+        let s = anchor_speedup(&CostModel::default(), PAPER_ERA_X86_MACS_PER_S, 10_000);
+        // The paper reports ≈270x at this operating point; the frozen model
+        // must land in that band (not fitted per figure — see module docs).
+        assert!(
+            (90.0..900.0).contains(&s),
+            "anchor speedup {s} out of the paper's ~270x band"
+        );
+    }
+
+    #[test]
+    fn report_renders() {
+        let r = report(&fake_x86());
+        assert!(r.contains("anchor"));
+        assert!(r.contains("mailbox_ingress"));
+        assert!(r.contains("270x"));
+    }
+
+    #[test]
+    fn sensitivity_direction() {
+        // Costlier handlers must reduce the anchor speedup.
+        let base = anchor_speedup(&CostModel::default(), PAPER_ERA_X86_MACS_PER_S, 10_000);
+        let slow = anchor_speedup(
+            &CostModel {
+                handler_dispatch: CostModel::default().handler_dispatch * 2,
+                ..CostModel::default()
+            },
+            PAPER_ERA_X86_MACS_PER_S,
+            10_000,
+        );
+        assert!(slow < base);
+    }
+}

@@ -1,0 +1,533 @@
+//! Figure harnesses — regenerate every result figure of the paper's
+//! evaluation (§6): Fig 11, Fig 12, Fig 13, plus the §5.2 sync-overhead
+//! claim (E4) and the §6.3 message-reduction claim (E5).
+//!
+//! Each harness reports two planes side by side:
+//!
+//! * **DES** — the discrete-event simulator run end-to-end on a reduced-scale
+//!   panel (the DES is exact w.r.t. the cost model but its host run-time
+//!   scales with message count).  Reduced panels use a 10:1 marker:haplotype
+//!   aspect so fan-in stays representative; the reduction is printed.
+//! * **Analytic** — the closed-form steady-state model (cross-validated
+//!   against the DES; see `imputation::analytic`) evaluated at the *paper's*
+//!   full scale: 1024 threads/board, aspect 100:1, 10,000 targets.
+//!
+//! The x86 denominator is the dense three-loop baseline: measured directly at
+//! DES scale, throughput-extrapolated at full scale (marked `~`).
+
+use crate::imputation::analytic::{AppKind, Workload, predict};
+use crate::imputation::app::{RawAppConfig, run_raw};
+use crate::imputation::interp_app::run_interp;
+use crate::model::baseline::Method;
+use crate::poets::costmodel::CostModel;
+use crate::poets::desim::SimConfig;
+use crate::poets::termination;
+use crate::poets::topology::ClusterConfig;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::{Table, fmt_count, fmt_secs, fmt_speedup};
+use crate::workload::panelgen::{PanelConfig, annotated_markers, generate_panel, generate_targets};
+use crate::workload::scenarios;
+
+use super::x86::X86Cost;
+
+/// Sweep options shared by the figure harnesses.
+#[derive(Clone, Copy, Debug)]
+pub struct FigOpts {
+    /// DES panel states per board (reduced scale; paper scale is 1024).
+    pub des_states_per_board: usize,
+    /// DES target count (steady-state needs ≳ M; kept small for run-time).
+    pub des_targets: usize,
+    /// Full-scale target count for the analytic plane (paper: 10,000).
+    pub full_targets: usize,
+    /// Skip the DES plane entirely (analytic-only sweeps are instant).
+    pub skip_des: bool,
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            des_states_per_board: 128,
+            des_targets: 12,
+            full_targets: 10_000,
+            skip_des: false,
+            seed: 2023,
+        }
+    }
+}
+
+/// One row of a figure sweep.
+#[derive(Clone, Debug)]
+pub struct FigRow {
+    pub x: String,
+    pub panel: String,
+    pub des_speedup: Option<f64>,
+    pub des_poets_s: Option<f64>,
+    pub des_x86_s: Option<f64>,
+    pub full_speedup: f64,
+    pub full_poets_s: f64,
+    pub full_x86_s: f64,
+    pub messages: Option<u64>,
+}
+
+/// A completed figure report.
+#[derive(Clone, Debug)]
+pub struct FigReport {
+    pub title: String,
+    pub x_label: String,
+    pub rows: Vec<FigRow>,
+}
+
+impl FigReport {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            &self.x_label,
+            "panel(full)",
+            "DES poets",
+            "DES x86",
+            "DES speedup",
+            "full poets~",
+            "full x86~",
+            "full speedup~",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.x.clone(),
+                r.panel.clone(),
+                r.des_poets_s.map_or("-".into(), fmt_secs),
+                r.des_x86_s.map_or("-".into(), fmt_secs),
+                r.des_speedup.map_or("-".into(), fmt_speedup),
+                fmt_secs(r.full_poets_s),
+                fmt_secs(r.full_x86_s),
+                fmt_speedup(r.full_speedup),
+            ]);
+        }
+        format!("## {}\n{}", self.title, t.render())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut rows = Json::Arr(vec![]);
+        for r in &self.rows {
+            let mut o = Json::obj();
+            o.set("x", r.x.clone())
+                .set("panel", r.panel.clone())
+                .set("full_speedup", r.full_speedup)
+                .set("full_poets_s", r.full_poets_s)
+                .set("full_x86_s", r.full_x86_s);
+            if let Some(s) = r.des_speedup {
+                o.set("des_speedup", s);
+            }
+            if let Some(m) = r.messages {
+                o.set("des_messages", m);
+            }
+            rows.push(o);
+        }
+        let mut j = Json::obj();
+        j.set("title", self.title.clone()).set("rows", rows);
+        j
+    }
+}
+
+fn des_panel_cfg(states: usize, annot_ratio: f64, seed: u64) -> PanelConfig {
+    let (n_hap, n_mark) = scenarios::aspect_for_states_ratio(states, 10.0);
+    PanelConfig {
+        n_hap,
+        n_mark,
+        maf: 0.05,
+        annot_ratio,
+        seed,
+        ..PanelConfig::default()
+    }
+}
+
+fn des_run_raw(
+    cfg: &PanelConfig,
+    boards: usize,
+    states_per_thread: usize,
+    n_targets: usize,
+) -> (f64, f64, u64) {
+    let panel = generate_panel(cfg);
+    let mut rng = Rng::new(cfg.seed ^ 0xD15);
+    let targets: Vec<_> = generate_targets(&panel, cfg, n_targets, &mut rng)
+        .into_iter()
+        .map(|c| c.masked)
+        .collect();
+    let app = RawAppConfig {
+        cluster: ClusterConfig::with_boards(boards),
+        states_per_thread,
+        sim: SimConfig {
+            record_steps: true,
+            ..SimConfig::default()
+        },
+        ..RawAppConfig::default()
+    };
+    let out = run_raw(&panel, &targets, &app);
+    let x86 = X86Cost::measure_raw_batch(&panel, &targets, Method::DenseThreeLoop);
+    (out.sim_seconds, x86, out.metrics.sends)
+}
+
+/// Fig 11 — raw algorithm over expanding hardware (boards sweep).
+pub fn fig11(boards_sweep: &[usize], opts: &FigOpts, x86: &X86Cost) -> FigReport {
+    let mut rows = Vec::new();
+    for &boards in boards_sweep {
+        // Full scale: panel sized to the boards' free threads, 1 state/thread.
+        let full = scenarios::fig11_config(boards, opts.seed);
+        let pred = predict(
+            &Workload {
+                n_hap: full.n_hap,
+                n_mark: full.n_mark,
+                n_targets: opts.full_targets,
+                states_per_thread: 1,
+                kind: AppKind::Raw,
+            },
+            &ClusterConfig::with_boards(boards),
+            &CostModel::default(),
+        );
+        let full_x86 = x86.raw_seconds(full.n_hap, full.n_mark, opts.full_targets);
+
+        let (des_poets, des_x86, msgs) = if opts.skip_des {
+            (None, None, None)
+        } else {
+            let cfg = des_panel_cfg(boards * opts.des_states_per_board, 0.01, opts.seed);
+            let (p, x, m) = des_run_raw(&cfg, boards, 1, opts.des_targets);
+            (Some(p), Some(x), Some(m))
+        };
+        rows.push(FigRow {
+            x: boards.to_string(),
+            panel: format!(
+                "{}x{} ({})",
+                full.n_hap,
+                full.n_mark,
+                fmt_count((full.n_hap * full.n_mark) as u64)
+            ),
+            des_speedup: des_poets.map(|p| des_x86.unwrap() / p),
+            des_poets_s: des_poets,
+            des_x86_s: des_x86,
+            full_speedup: full_x86 / pred.seconds,
+            full_poets_s: pred.seconds,
+            full_x86_s: full_x86,
+            messages: msgs,
+        });
+    }
+    FigReport {
+        title: "Fig 11 — raw event-driven algorithm over expanding hardware".into(),
+        x_label: "boards".into(),
+        rows,
+    }
+}
+
+/// Fig 12 — soft-scheduling sweep on the full cluster.
+pub fn fig12(spt_sweep: &[usize], opts: &FigOpts, x86: &X86Cost) -> FigReport {
+    let mut rows = Vec::new();
+    for &spt in spt_sweep {
+        let full = scenarios::fig12_config(spt, opts.seed);
+        let pred = predict(
+            &Workload {
+                n_hap: full.n_hap,
+                n_mark: full.n_mark,
+                n_targets: opts.full_targets,
+                states_per_thread: spt,
+                kind: AppKind::Raw,
+            },
+            &ClusterConfig::poets_48(),
+            &CostModel::default(),
+        );
+        let full_x86 = x86.raw_seconds(full.n_hap, full.n_mark, opts.full_targets);
+
+        let (des_poets, des_x86, msgs) = if opts.skip_des {
+            (None, None, None)
+        } else {
+            // Reduced: a 1-board cluster, panel sized to spt states/thread
+            // over a fraction of its threads.
+            let states = opts.des_states_per_board * spt;
+            let cfg = des_panel_cfg(states, 0.01, opts.seed);
+            let (p, x, m) = des_run_raw(&cfg, 1, spt, opts.des_targets);
+            (Some(p), Some(x), Some(m))
+        };
+        rows.push(FigRow {
+            x: spt.to_string(),
+            panel: format!(
+                "{}x{} ({})",
+                full.n_hap,
+                full.n_mark,
+                fmt_count((full.n_hap * full.n_mark) as u64)
+            ),
+            des_speedup: des_poets.map(|p| des_x86.unwrap() / p),
+            des_poets_s: des_poets,
+            des_x86_s: des_x86,
+            full_speedup: full_x86 / pred.seconds,
+            full_poets_s: pred.seconds,
+            full_x86_s: full_x86,
+            messages: msgs,
+        });
+    }
+    FigReport {
+        title: "Fig 12 — soft-scheduling (states per hardware thread), 48 boards".into(),
+        x_label: "states/thread".into(),
+        rows,
+    }
+}
+
+/// Fig 13 — linear interpolation over expanding hardware.
+pub fn fig13(boards_sweep: &[usize], opts: &FigOpts, x86: &X86Cost) -> FigReport {
+    let section = 10; // ratio 1/10: 1 HMM + 9 interpolation states
+    let mut rows = Vec::new();
+    for &boards in boards_sweep {
+        let full = scenarios::fig13_config(boards, 1, opts.seed);
+        let pred = predict(
+            &Workload {
+                n_hap: full.n_hap,
+                n_mark: full.n_mark,
+                n_targets: opts.full_targets,
+                // One section VERTEX per thread (each holding `section`
+                // panel states) — the paper's sub-49,152 configuration.
+                states_per_thread: 1,
+                kind: AppKind::Interp { section },
+            },
+            &ClusterConfig::with_boards(boards),
+            &CostModel::default(),
+        );
+        let anchors = annotated_markers(full.n_mark, full.annot_ratio).len();
+        let full_x86 = x86.interp_seconds(full.n_hap, full.n_mark, anchors, opts.full_targets);
+
+        let (des_poets, des_x86, msgs) = if opts.skip_des {
+            (None, None, None)
+        } else {
+            let cfg = des_panel_cfg(boards * opts.des_states_per_board * 4, 0.1, opts.seed);
+            let panel = generate_panel(&cfg);
+            let mut rng = Rng::new(cfg.seed ^ 0xF13);
+            let targets: Vec<_> = generate_targets(&panel, &cfg, opts.des_targets, &mut rng)
+                .into_iter()
+                .map(|c| c.masked)
+                .collect();
+            let app = RawAppConfig {
+                cluster: ClusterConfig::with_boards(boards),
+                states_per_thread: 1, // one section vertex per thread
+                ..RawAppConfig::default()
+            };
+            let out = run_interp(&panel, &targets, &app);
+            let x = X86Cost::measure_interp_batch(&panel, &targets);
+            (Some(out.sim_seconds), Some(x), Some(out.metrics.sends))
+        };
+        rows.push(FigRow {
+            x: boards.to_string(),
+            panel: format!(
+                "{}x{} ({})",
+                full.n_hap,
+                full.n_mark,
+                fmt_count((full.n_hap * full.n_mark) as u64)
+            ),
+            des_speedup: des_poets.map(|p| des_x86.unwrap() / p),
+            des_poets_s: des_poets,
+            des_x86_s: des_x86,
+            full_speedup: full_x86 / pred.seconds,
+            full_poets_s: pred.seconds,
+            full_x86_s: full_x86,
+            messages: msgs,
+        });
+    }
+    FigReport {
+        title: "Fig 13 — linear-interpolation algorithm over expanding hardware".into(),
+        x_label: "boards".into(),
+        rows,
+    }
+}
+
+/// E4 — termination-detection overhead (paper §5.2: ~3 % of a step).
+///
+/// The ~3 % figure is a property of the paper's *operating point* (Fig 12,
+/// ≥10 states/thread on the full cluster): the wave cost is fixed per step
+/// while per-step work grows with panel size, so at reduced DES scale the
+/// fraction is necessarily larger.  The report shows (a) the analytic
+/// fraction at the paper's operating point, and (b) the DES trend across
+/// growing panels converging toward it.
+pub fn sync_overhead(opts: &FigOpts) -> String {
+    let cost = CostModel::default();
+    // (a) Paper operating point: Fig 12 optimum, analytic step breakdown.
+    let full = scenarios::fig12_config(10, opts.seed);
+    let pred = predict(
+        &Workload {
+            n_hap: full.n_hap,
+            n_mark: full.n_mark,
+            n_targets: opts.full_targets,
+            states_per_thread: 10,
+            kind: AppKind::Raw,
+        },
+        &ClusterConfig::poets_48(),
+        &cost,
+    );
+    let full_frac = pred.barrier_cycles as f64 / pred.step_cycles as f64;
+    let mut out = format!(
+        "E4 sync overhead at the paper's Fig 12 operating point (analytic): \
+         barrier {} / step {} cycles = {:.1}% (paper: ~3%)\n\
+         DES trend over growing panels (barrier fraction must fall):\n",
+        pred.barrier_cycles,
+        pred.step_cycles,
+        full_frac * 100.0
+    );
+    // (b) DES trend: same cluster, growing panels.
+    for mult in [1usize, 4, 16] {
+        let cfg = des_panel_cfg(mult * opts.des_states_per_board, 0.01, opts.seed);
+        let panel = generate_panel(&cfg);
+        let mut rng = Rng::new(cfg.seed ^ 0xE4);
+        let targets: Vec<_> = generate_targets(&panel, &cfg, opts.des_targets, &mut rng)
+            .into_iter()
+            .map(|c| c.masked)
+            .collect();
+        let app = RawAppConfig {
+            cluster: ClusterConfig::with_boards(1),
+            states_per_thread: 4 * mult,
+            ..RawAppConfig::default()
+        };
+        let run = run_raw(&panel, &targets, &app);
+        let frac = termination::overhead_fraction(
+            run.metrics.mean_step_cycles() as u64,
+            scenarios::THREADS_PER_BOARD,
+            &cost,
+        );
+        out.push_str(&format!(
+            "  {}x{} panel ({} states/thread): mean step {:.0} cycles, barrier {:.1}%\n",
+            panel.n_hap(),
+            panel.n_mark(),
+            4 * mult,
+            run.metrics.mean_step_cycles(),
+            frac * 100.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> FigOpts {
+        FigOpts {
+            des_states_per_board: 48,
+            des_targets: 6,
+            full_targets: 1000,
+            skip_des: false,
+            seed: 5,
+        }
+    }
+
+    fn fake_x86() -> X86Cost {
+        X86Cost {
+            dense_macs_per_s: 2e9,
+            rank1_macs_per_s: 4e9,
+        }
+    }
+
+    #[test]
+    fn fig11_speedup_grows_with_boards() {
+        let r = fig11(&[1, 8, 48], &FigOpts { skip_des: true, ..tiny_opts() }, &fake_x86());
+        assert_eq!(r.rows.len(), 3);
+        assert!(
+            r.rows[2].full_speedup > r.rows[0].full_speedup,
+            "Fig 11 shape: speedup must grow with boards ({} -> {})",
+            r.rows[0].full_speedup,
+            r.rows[2].full_speedup
+        );
+    }
+
+    #[test]
+    fn fig12_has_interior_optimum_region() {
+        // The 270× peak is "for 10000 target haplotypes" — the optimum is
+        // target-count dependent (the paper plots one curve per batch size),
+        // so assert the shape at the paper's headline batch.
+        let opts = FigOpts {
+            skip_des: true,
+            full_targets: 10_000,
+            ..tiny_opts()
+        };
+        let r = fig12(&[1, 10, 40], &opts, &fake_x86());
+        let s: Vec<f64> = r.rows.iter().map(|r| r.full_speedup).collect();
+        // The paper's shape: 10 states/thread beats both extremes.
+        assert!(s[1] > s[0], "optimum not above spt=1: {s:?}");
+        assert!(s[1] > s[2], "optimum not above spt=40: {s:?}");
+    }
+
+    #[test]
+    fn fig13_interp_beats_raw_on_the_same_panel() {
+        // The reproducible core of Fig 13: on the SAME panel, the
+        // interpolated event-driven algorithm is far faster than the raw one
+        // (≈10× fewer messages, K instead of M pipeline columns).  The
+        // paper's "~5 orders of magnitude vs similarly-optimised x86" is NOT
+        // reproducible under any physically-consistent cost model — the
+        // termination-wave floor alone (≈34k cycles × (K + T) steps ≈
+        // 28 minutes-of-cluster-time per 10k targets) bounds the speedup ~3
+        // orders below it; see EXPERIMENTS.md E3.
+        use crate::imputation::analytic::{AppKind, Workload, predict};
+        use crate::poets::costmodel::CostModel;
+        let full = crate::workload::scenarios::fig13_config(48, 1, 0);
+        let cluster = ClusterConfig::poets_48();
+        // Same panel, same hardware: raw needs 10 HMM states per thread;
+        // interp packs those 10 states into ONE section vertex per thread.
+        let raw = predict(
+            &Workload {
+                n_hap: full.n_hap,
+                n_mark: full.n_mark,
+                n_targets: 10_000,
+                states_per_thread: 10,
+                kind: AppKind::Raw,
+            },
+            &cluster,
+            &CostModel::default(),
+        );
+        let itp = predict(
+            &Workload {
+                n_hap: full.n_hap,
+                n_mark: full.n_mark,
+                n_targets: 10_000,
+                states_per_thread: 1,
+                kind: AppKind::Interp { section: 10 },
+            },
+            &cluster,
+            &CostModel::default(),
+        );
+        assert!(
+            itp.seconds * 3.0 < raw.seconds,
+            "interp {}s vs raw {}s on the same panel",
+            itp.seconds,
+            raw.seconds
+        );
+    }
+
+    #[test]
+    fn fig13_speedup_grows_with_boards() {
+        let opts = FigOpts { skip_des: true, ..tiny_opts() };
+        let r = fig13(&[1, 8, 48], &opts, &fake_x86());
+        assert!(
+            r.rows[2].full_speedup > r.rows[0].full_speedup,
+            "Fig 13 shape: {} -> {}",
+            r.rows[0].full_speedup,
+            r.rows[2].full_speedup
+        );
+    }
+
+    #[test]
+    fn des_plane_runs_and_wins() {
+        let r = fig11(&[1], &tiny_opts(), &X86Cost::measure_default());
+        let row = &r.rows[0];
+        assert!(row.des_speedup.is_some());
+        assert!(row.des_poets_s.unwrap() > 0.0);
+        assert!(row.messages.unwrap() > 0);
+    }
+
+    #[test]
+    fn report_renders_and_serialises() {
+        let r = fig11(&[1, 2], &FigOpts { skip_des: true, ..tiny_opts() }, &fake_x86());
+        let text = r.render();
+        assert!(text.contains("Fig 11"));
+        assert!(text.lines().count() >= 5);
+        let j = r.to_json();
+        assert!(j.render().contains("full_speedup"));
+    }
+
+    #[test]
+    fn sync_overhead_in_paper_regime() {
+        let report = sync_overhead(&tiny_opts());
+        assert!(report.contains("E4 sync overhead"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Benchmark harnesses — one per paper figure, plus calibration.
+//!
+//! * [`x86`] — baseline wall-clock measurement + linear extrapolation.
+//! * [`figures`] — Fig 11 / Fig 12 / Fig 13 sweeps and the E4 sync-overhead
+//!   check, each printing the same series the paper plots.
+//! * [`calibrate`] — the frozen cost-model constants, the 270× anchor-point
+//!   comparison, and per-constant sensitivity.
+
+pub mod ablation;
+pub mod calibrate;
+pub mod figures;
+pub mod x86;
+
+pub use figures::{FigOpts, FigReport, fig11, fig12, fig13, sync_overhead};
+pub use x86::X86Cost;

@@ -1,0 +1,199 @@
+//! x86-baseline cost measurement and extrapolation.
+//!
+//! The figures compare simulated-POETS wall-clock against the single-threaded
+//! baseline's wall-clock on this host.  Full paper-scale baseline runs
+//! (10,000 targets × millions of MACs each) are impractical inside a bench
+//! sweep, so we measure the per-MAC throughput once on a calibration problem
+//! and extrapolate linearly — the baseline is exactly linear in
+//! `targets × (H²·M or H·M)` (asserted by `linearity_holds` below and the
+//! calibrate bench).  Every extrapolated cell in a report is marked as such.
+
+use crate::model::baseline::{Baseline, ImputeOut, Method};
+use crate::model::interpolation;
+use crate::model::panel::{ReferencePanel, TargetHaplotype};
+use crate::util::timed;
+
+/// Measured baseline throughput (MACs/second) per formulation.
+#[derive(Clone, Copy, Debug)]
+pub struct X86Cost {
+    pub dense_macs_per_s: f64,
+    pub rank1_macs_per_s: f64,
+}
+
+impl X86Cost {
+    /// Measure on a calibration problem sized to run in ~a second.
+    pub fn measure(panel: &ReferencePanel, target: &TargetHaplotype, reps: usize) -> X86Cost {
+        let b = Baseline::default();
+        let dense_flops = b.flops_per_target(panel, Method::DenseThreeLoop) as f64;
+        let rank1_flops = b.flops_per_target(panel, Method::Rank1) as f64;
+
+        let (_, t_dense) = timed(|| {
+            for _ in 0..reps {
+                let out: ImputeOut<f32> = b.impute(panel, target, Method::DenseThreeLoop);
+                std::hint::black_box(out);
+            }
+        });
+        let (_, t_rank1) = timed(|| {
+            for _ in 0..reps {
+                let out: ImputeOut<f32> = b.impute(panel, target, Method::Rank1);
+                std::hint::black_box(out);
+            }
+        });
+        X86Cost {
+            dense_macs_per_s: dense_flops * reps as f64 / t_dense.max(1e-9),
+            rank1_macs_per_s: rank1_flops * reps as f64 / t_rank1.max(1e-9),
+        }
+    }
+
+    /// Default calibration: a mid-size panel, 3 reps.
+    pub fn measure_default() -> X86Cost {
+        use crate::util::rng::Rng;
+        use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+        let cfg = PanelConfig {
+            n_hap: 64,
+            n_mark: 512,
+            annot_ratio: 0.01,
+            seed: 42,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&cfg);
+        let mut rng = Rng::new(7);
+        let target = generate_targets(&panel, &cfg, 1, &mut rng)
+            .into_iter()
+            .next()
+            .unwrap()
+            .masked;
+        X86Cost::measure(&panel, &target, 3)
+    }
+
+    /// Predicted baseline seconds for a raw run (dense three-loop — the
+    /// paper's matched optimisation level).
+    pub fn raw_seconds(&self, n_hap: usize, n_mark: usize, n_targets: usize) -> f64 {
+        let b = Baseline::default();
+        // flops_per_target needs a panel only for its dims; reconstruct.
+        let h = n_hap as u64;
+        let m = n_mark as u64;
+        let _ = b;
+        let flops = 2 * (m - 1) * h * (2 * h + 1) + m * 3 * h;
+        n_targets as f64 * flops as f64 / self.dense_macs_per_s
+    }
+
+    /// Predicted baseline seconds with linear interpolation (matched
+    /// optimisation on the x86 side, as in Fig 13).
+    pub fn interp_seconds(
+        &self,
+        n_hap: usize,
+        n_mark: usize,
+        n_anchors: usize,
+        n_targets: usize,
+    ) -> f64 {
+        let h = n_hap as u64;
+        let k = n_anchors as u64;
+        let m = n_mark as u64;
+        let flops = 2 * (k - 1) * h * (2 * h + 1) + k * 3 * h + m * 5 * h;
+        n_targets as f64 * flops as f64 / self.dense_macs_per_s
+    }
+
+    /// Directly measure a (feasible) raw batch, seconds.
+    pub fn measure_raw_batch(
+        panel: &ReferencePanel,
+        targets: &[TargetHaplotype],
+        method: Method,
+    ) -> f64 {
+        let b = Baseline::default();
+        let (_, t) = timed(|| {
+            for target in targets {
+                let out: ImputeOut<f32> = b.impute(panel, target, method);
+                std::hint::black_box(out);
+            }
+        });
+        t
+    }
+
+    /// Directly measure a (feasible) interpolated batch, seconds.
+    pub fn measure_interp_batch(panel: &ReferencePanel, targets: &[TargetHaplotype]) -> f64 {
+        let b = Baseline::default();
+        let (_, t) = timed(|| {
+            for target in targets {
+                let out: ImputeOut<f32> =
+                    interpolation::impute_interp(&b, panel, target, Method::DenseThreeLoop);
+                std::hint::black_box(out);
+            }
+        });
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+    fn small_problem() -> (ReferencePanel, Vec<TargetHaplotype>) {
+        let cfg = PanelConfig {
+            n_hap: 32,
+            n_mark: 256,
+            annot_ratio: 0.1,
+            seed: 1,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&cfg);
+        let mut rng = Rng::new(2);
+        let targets = generate_targets(&panel, &cfg, 4, &mut rng)
+            .into_iter()
+            .map(|c| c.masked)
+            .collect();
+        (panel, targets)
+    }
+
+    #[test]
+    fn measurement_positive_and_ordered() {
+        let (panel, targets) = small_problem();
+        let cost = X86Cost::measure(&panel, &targets[0], 2);
+        assert!(cost.dense_macs_per_s > 1e6, "{cost:?}");
+        assert!(cost.rank1_macs_per_s > 1e6, "{cost:?}");
+    }
+
+    #[test]
+    fn extrapolation_scales_linearly() {
+        let c = X86Cost {
+            dense_macs_per_s: 1e9,
+            rank1_macs_per_s: 1e9,
+        };
+        let t1 = c.raw_seconds(32, 100, 10);
+        let t2 = c.raw_seconds(32, 100, 20);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        let big = c.raw_seconds(64, 100, 10);
+        assert!(big > 3.5 * t1 && big < 4.5 * t1, "H² scaling expected");
+    }
+
+    #[test]
+    fn interp_prediction_cheaper_than_raw() {
+        let c = X86Cost {
+            dense_macs_per_s: 1e9,
+            rank1_macs_per_s: 1e9,
+        };
+        let raw = c.raw_seconds(64, 1000, 10);
+        let itp = c.interp_seconds(64, 1000, 100, 10);
+        assert!(itp < raw / 2.0, "raw {raw} vs interp {itp}");
+    }
+
+    #[test]
+    fn linearity_holds() {
+        // Extrapolation premise: measured time ~ linear in target count.
+        // Wall-clock under a parallel test harness is noisy — take the best
+        // of several attempts before declaring nonlinearity.
+        let (panel, targets) = small_problem();
+        let mut last = 0.0;
+        for _ in 0..5 {
+            let t2 = X86Cost::measure_raw_batch(&panel, &targets[..2], Method::DenseThreeLoop);
+            let t4 = X86Cost::measure_raw_batch(&panel, &targets[..4], Method::DenseThreeLoop);
+            last = t4 / t2.max(1e-12);
+            if (1.2..3.4).contains(&last) {
+                return;
+            }
+        }
+        panic!("nonlinear baseline? ratio {last}");
+    }
+}

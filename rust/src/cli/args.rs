@@ -1,0 +1,139 @@
+//! Minimal flag parser (offline substitute for `clap`).
+//!
+//! Grammar: `prog <command> [<subcommand>] [--flag value | --switch]...`.
+//! Values never start with `--`; unknown flags are an error (surfaced with
+//! the command's usage string).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    a.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                a.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        self.consumed.borrow_mut().push(name.to_string());
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: cannot parse {v:?}")),
+        }
+    }
+
+    /// String flag with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        self.consumed.borrow_mut().push(name.to_string());
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: bad element {x:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Boolean switch (present or absent).
+    pub fn has(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Error if any flag/switch was provided but never consumed.
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !seen.contains(k) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        for k in &self.switches {
+            if !seen.contains(k) {
+                return Err(format!("unknown switch --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positional_flags_switches() {
+        let a = Args::parse(&argv(&["bench", "fig11", "--boards", "1,2", "--skip-des"])).unwrap();
+        assert_eq!(a.positional, vec!["bench", "fig11"]);
+        assert_eq!(a.get_list("boards", &[]).unwrap(), vec![1, 2]);
+        assert!(a.has("skip-des"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(&argv(&["x", "--n", "42"])).unwrap();
+        assert_eq!(a.get("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get("m", 7usize).unwrap(), 7);
+        assert_eq!(a.get_str("s", "d"), "d");
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = Args::parse(&argv(&["x", "--n", "oops"])).unwrap();
+        assert!(a.get("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = Args::parse(&argv(&["x", "--mystery", "1"])).unwrap();
+        let _ = a.get("n", 0usize);
+        assert!(a.reject_unknown().is_err());
+    }
+}

@@ -1,0 +1,344 @@
+//! CLI subcommand implementations.
+
+use crate::bench::{self, FigOpts, X86Cost};
+use crate::imputation::app::{RawAppConfig, run_raw};
+use crate::imputation::interp_app::run_interp;
+use crate::model::accuracy;
+use crate::model::baseline::{Baseline, ImputeOut, Method};
+use crate::model::interpolation::impute_interp;
+use crate::poets::desim::SimConfig;
+use crate::poets::topology::ClusterConfig;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::{Table, fmt_count, fmt_secs};
+use crate::util::timed;
+use crate::workload::panelgen::{PanelConfig, TargetCase, generate_panel, generate_targets};
+
+use super::args::Args;
+
+pub const USAGE: &str = "\
+poets-impute — event-driven genotype imputation on a simulated POETS cluster
+
+USAGE:
+  poets-impute <COMMAND> [FLAGS]
+
+COMMANDS:
+  impute     run imputation on a synthetic workload and score accuracy
+             --hap N --mark N --targets N --seed S --annot-ratio R
+             --engine baseline|rank1|event|interp|xla --boards B --spt N [--json]
+  validate   run ALL engines on one workload and cross-check dosages
+             --hap N --mark N --targets N --seed S
+  bench      regenerate a paper experiment:
+             fig11|fig12|fig13|calibrate|sync-overhead
+             [--boards 1,2,..] [--spt 1,2,..] [--full-targets N]
+             [--des-targets N] [--des-states N] [--skip-des] [--json]
+  ablate     design-choice ablations (mapping locality, hardware multicast)
+             [--hap N] [--mark N] [--targets N] [--boards B] [--spt N]
+  project    capacity + next-gen (Stratix-10) cluster projection (paper §6.3)
+             [--states N]
+  info       print cluster topology + artifact inventory
+  help       this text
+";
+
+fn panel_cfg(args: &Args) -> Result<PanelConfig, String> {
+    Ok(PanelConfig {
+        n_hap: args.get("hap", 16usize)?,
+        n_mark: args.get("mark", 101usize)?,
+        maf: args.get("maf", 0.05f64)?,
+        annot_ratio: args.get("annot-ratio", 0.1f64)?,
+        seed: args.get("seed", 2023u64)?,
+        ..PanelConfig::default()
+    })
+}
+
+fn make_workload(cfg: &PanelConfig, n_targets: usize) -> (crate::model::panel::ReferencePanel, Vec<TargetCase>) {
+    let panel = generate_panel(cfg);
+    let mut rng = Rng::new(cfg.seed ^ 0x7A96);
+    let cases = generate_targets(&panel, cfg, n_targets, &mut rng);
+    (panel, cases)
+}
+
+pub fn cmd_impute(args: &Args) -> Result<i32, String> {
+    let cfg = panel_cfg(args)?;
+    let n_targets = args.get("targets", 4usize)?;
+    let engine = args.get_str("engine", "event");
+    let boards = args.get("boards", 4usize)?;
+    let spt = args.get("spt", 8usize)?;
+    let as_json = args.has("json");
+    args.reject_unknown()?;
+
+    let (panel, cases) = make_workload(&cfg, n_targets);
+    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+
+    let app = RawAppConfig {
+        cluster: ClusterConfig::with_boards(boards),
+        states_per_thread: spt,
+        sim: SimConfig::default(),
+        ..RawAppConfig::default()
+    };
+    let b = Baseline::default();
+
+    let (dosages, host_secs, sim_secs): (Vec<Vec<f32>>, f64, Option<f64>) = match engine.as_str() {
+        "baseline" => {
+            let (outs, t) = timed(|| b.impute_batch::<f32>(&panel, &targets, Method::DenseThreeLoop));
+            (outs.into_iter().map(|o| o.dosage).collect(), t, None)
+        }
+        "rank1" => {
+            let (outs, t) = timed(|| b.impute_batch::<f32>(&panel, &targets, Method::Rank1));
+            (outs.into_iter().map(|o| o.dosage).collect(), t, None)
+        }
+        "interp" => {
+            let (outs, t) = timed(|| {
+                targets
+                    .iter()
+                    .map(|t| impute_interp::<f32>(&b, &panel, t, Method::Rank1).dosage)
+                    .collect::<Vec<_>>()
+            });
+            (outs, t, None)
+        }
+        "event" => {
+            let (out, t) = timed(|| run_raw(&panel, &targets, &app));
+            (out.dosages.clone(), t, Some(out.sim_seconds))
+        }
+        "event-interp" => {
+            let (out, t) = timed(|| run_interp(&panel, &targets, &app));
+            (out.dosages.clone(), t, Some(out.sim_seconds))
+        }
+        "xla" => {
+            let rt = crate::runtime::Runtime::open_default().map_err(|e| e.to_string())?;
+            let mut imp = crate::runtime::XlaImputer::new(rt, app.params);
+            let (outs, t) = timed(|| imp.impute_batch(&panel, &targets));
+            (outs.map_err(|e| e.to_string())?, t, None)
+        }
+        other => return Err(format!("unknown engine {other:?}\n{USAGE}")),
+    };
+
+    let accs: Vec<_> = cases
+        .iter()
+        .zip(&dosages)
+        .map(|(c, d)| accuracy::score(d, &c.truth, &c.masked))
+        .collect();
+    let agg = accuracy::aggregate(&accs);
+
+    if as_json {
+        let mut j = Json::obj();
+        j.set("engine", engine.clone())
+            .set("panel", format!("{}x{}", panel.n_hap(), panel.n_mark()))
+            .set("targets", n_targets)
+            .set("host_seconds", host_secs)
+            .set("concordance", agg.concordance)
+            .set("minor_concordance", agg.minor_concordance)
+            .set("dosage_r2", agg.dosage_r2);
+        if let Some(s) = sim_secs {
+            j.set("poets_sim_seconds", s);
+        }
+        println!("{}", j.pretty());
+    } else {
+        println!(
+            "engine={engine} panel={}x{} ({} states) targets={n_targets}",
+            panel.n_hap(),
+            panel.n_mark(),
+            fmt_count(panel.n_states() as u64)
+        );
+        println!(
+            "accuracy: concordance={:.4} minor={:.4} dosage_r2={:.4} (scored {} markers)",
+            agg.concordance,
+            agg.minor_concordance,
+            agg.dosage_r2,
+            fmt_count(agg.n_scored as u64)
+        );
+        println!("host wall-clock: {}", fmt_secs(host_secs));
+        if let Some(s) = sim_secs {
+            println!("simulated POETS wall-clock: {}", fmt_secs(s));
+        }
+    }
+    Ok(0)
+}
+
+pub fn cmd_validate(args: &Args) -> Result<i32, String> {
+    let cfg = panel_cfg(args)?;
+    let n_targets = args.get("targets", 3usize)?;
+    args.reject_unknown()?;
+    let (panel, cases) = make_workload(&cfg, n_targets);
+    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+    let b = Baseline::default();
+    let app = RawAppConfig {
+        cluster: ClusterConfig::with_boards(2),
+        states_per_thread: 16,
+        ..RawAppConfig::default()
+    };
+
+    let dense: Vec<ImputeOut<f32>> = b.impute_batch(&panel, &targets, Method::DenseThreeLoop);
+    let rank1: Vec<ImputeOut<f32>> = b.impute_batch(&panel, &targets, Method::Rank1);
+    let event = run_raw(&panel, &targets, &app);
+    let xla = crate::runtime::Runtime::open_default()
+        .ok()
+        .map(|rt| crate::runtime::XlaImputer::new(rt, app.params))
+        .and_then(|mut i| i.impute_batch(&panel, &targets).ok());
+
+    let mut t = Table::new(&["pair", "max |Δdosage|"]);
+    let maxdiff = |a: &[f32], b: &[f32]| -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs() as f64)
+            .fold(0.0, f64::max)
+    };
+    let mut worst: f64 = 0.0;
+    for ti in 0..n_targets {
+        let d = maxdiff(&dense[ti].dosage, &rank1[ti].dosage);
+        worst = worst.max(d);
+    }
+    t.row(vec!["dense vs rank1".into(), format!("{worst:.2e}")]);
+    let mut w2: f64 = 0.0;
+    for ti in 0..n_targets {
+        w2 = w2.max(maxdiff(&dense[ti].dosage, &event.dosages[ti]));
+    }
+    t.row(vec!["dense vs event-driven".into(), format!("{w2:.2e}")]);
+    let mut w3 = f64::NAN;
+    if let Some(x) = &xla {
+        w3 = 0.0;
+        for ti in 0..n_targets {
+            w3 = w3.max(maxdiff(&dense[ti].dosage, &x[ti]));
+        }
+        t.row(vec!["dense vs XLA artifact".into(), format!("{w3:.2e}")]);
+    } else {
+        t.row(vec!["dense vs XLA artifact".into(), "skipped (no artifacts / H not canonical)".into()]);
+    }
+    println!("{}", t.render());
+    let ok = worst < 1e-4 && w2 < 1e-3 && (w3.is_nan() || w3 < 1e-3);
+    println!("validate: {}", if ok { "OK" } else { "MISMATCH" });
+    Ok(if ok { 0 } else { 1 })
+}
+
+pub fn cmd_bench(args: &Args) -> Result<i32, String> {
+    let which = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| format!("bench needs a figure name\n{USAGE}"))?;
+    let opts = FigOpts {
+        des_states_per_board: args.get("des-states", 128usize)?,
+        des_targets: args.get("des-targets", 12usize)?,
+        full_targets: args.get("full-targets", 10_000usize)?,
+        skip_des: args.has("skip-des"),
+        seed: args.get("seed", 2023u64)?,
+    };
+    let as_json = args.has("json");
+    let boards = args.get_list("boards", &[1, 2, 4, 8, 16, 32, 48])?;
+    let spt = args.get_list("spt", &[1, 2, 5, 10, 20, 40])?;
+    args.reject_unknown()?;
+
+    let needs_x86 = which != "sync-overhead";
+    let x86 = if needs_x86 {
+        eprintln!("calibrating x86 baseline throughput...");
+        X86Cost::measure_default()
+    } else {
+        X86Cost {
+            dense_macs_per_s: 1.0,
+            rank1_macs_per_s: 1.0,
+        }
+    };
+
+    let report = match which.as_str() {
+        "fig11" => Some(bench::fig11(&boards, &opts, &x86)),
+        "fig12" => Some(bench::fig12(&spt, &opts, &x86)),
+        "fig13" => Some(bench::fig13(&boards, &opts, &x86)),
+        "calibrate" => {
+            println!("{}", bench::calibrate::report(&x86));
+            None
+        }
+        "sync-overhead" => {
+            println!("{}", bench::sync_overhead(&opts));
+            None
+        }
+        other => return Err(format!("unknown bench {other:?}\n{USAGE}")),
+    };
+    if let Some(r) = report {
+        if as_json {
+            println!("{}", r.to_json().pretty());
+        } else {
+            println!("{}", r.render());
+            println!(
+                "notes: 'full' columns are the analytic model at paper scale \
+                 (aspect 100:1, {} targets); '~' marks extrapolated x86 time; \
+                 DES columns are exact simulation at reduced scale.",
+                opts.full_targets
+            );
+        }
+    }
+    Ok(0)
+}
+
+pub fn cmd_ablate(args: &Args) -> Result<i32, String> {
+    let n_hap = args.get("hap", 8usize)?;
+    let n_mark = args.get("mark", 80usize)?;
+    let n_targets = args.get("targets", 4usize)?;
+    let boards = args.get("boards", 4usize)?;
+    let spt = args.get("spt", 2usize)?;
+    let seed = args.get("seed", 2023u64)?;
+    args.reject_unknown()?;
+    let rows = crate::bench::ablation::mapping_ablation(n_hap, n_mark, n_targets, boards, spt, seed);
+    let mcast = crate::bench::ablation::multicast_ablation(n_hap, n_mark, n_targets);
+    println!("{}", crate::bench::ablation::report(&rows, mcast));
+    Ok(0)
+}
+
+pub fn cmd_project(args: &Args) -> Result<i32, String> {
+    use crate::poets::capacity::{GENUINE_PANEL_STATES, MemoryModel, capacity, stratix10_next_gen};
+    let states = args.get("states", GENUINE_PANEL_STATES)?;
+    args.reject_unknown()?;
+    let mem = MemoryModel::default();
+    let mut t = Table::new(&["cluster", "threads", "DRAM total", "fits?", "scale needed"]);
+    for (name, c) in [
+        ("POETS 48x Stratix-V", ClusterConfig::poets_48()),
+        ("next-gen Stratix-10", stratix10_next_gen()),
+    ] {
+        let r = capacity(states, &c, &mem);
+        t.row(vec![
+            name.into(),
+            fmt_count(c.total_threads() as u64),
+            format!("{} GiB", c.dram_per_board as u64 * c.n_boards as u64 >> 30),
+            if r.fits { "yes".into() } else { "NO".into() },
+            format!("{:.1}x", r.scale_factor_needed),
+        ]);
+    }
+    println!(
+        "capacity projection for {} panel states (paper §6.3: genuine panels \
+         need ~16x the current cluster):\n{}",
+        fmt_count(states),
+        t.render()
+    );
+    Ok(0)
+}
+
+pub fn cmd_info(args: &Args) -> Result<i32, String> {
+    args.reject_unknown()?;
+    let c = ClusterConfig::poets_48();
+    println!(
+        "POETS cluster model: {} boards ({}x{} grid), {} tiles/board, \
+         {} cores/tile, {} threads/core = {} hardware threads @ {:.0} MHz",
+        c.n_boards,
+        c.board_grid.0,
+        c.board_grid.1,
+        c.tiles_per_board,
+        c.cores_per_tile,
+        c.threads_per_core,
+        fmt_count(c.total_threads() as u64),
+        c.clock_hz / 1e6
+    );
+    match crate::runtime::Runtime::open_default() {
+        Ok(rt) => {
+            println!("artifacts ({}):", rt.manifest().artifacts.len());
+            for a in &rt.manifest().artifacts {
+                let ins: Vec<String> = a
+                    .inputs
+                    .iter()
+                    .map(|t| format!("{}:{:?}", t.name, t.shape))
+                    .collect();
+                println!("  {} [{}]", a.name, ins.join(", "));
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(0)
+}

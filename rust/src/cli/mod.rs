@@ -1,0 +1,79 @@
+//! Command-line interface (leader entrypoint).
+//!
+//! No `clap` in the offline environment — [`args`] is a small typed flag
+//! parser, [`commands`] implements the subcommands.  `poets-impute help`
+//! prints usage.
+
+pub mod args;
+pub mod commands;
+
+use args::Args;
+
+/// Run the CLI; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    match dispatch(&argv) {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            2
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<i32, String> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(String::as_str) {
+        Some("impute") => commands::cmd_impute(&args),
+        Some("validate") => commands::cmd_validate(&args),
+        Some("bench") => commands::cmd_bench(&args),
+        Some("ablate") => commands::cmd_ablate(&args),
+        Some("project") => commands::cmd_project(&args),
+        Some("info") => commands::cmd_info(&args),
+        Some("help") | None => {
+            println!("{}", commands::USAGE);
+            Ok(0)
+        }
+        Some(other) => Err(format!("unknown command {other:?}\n{}", commands::USAGE)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn help_succeeds() {
+        assert_eq!(run(argv(&["help"])), 0);
+        assert_eq!(run(argv(&[])), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run(argv(&["frobnicate"])), 2);
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert_eq!(run(argv(&["impute", "--bogus", "1"])), 2);
+    }
+
+    #[test]
+    fn impute_event_small_runs() {
+        assert_eq!(
+            run(argv(&[
+                "impute", "--hap", "8", "--mark", "31", "--targets", "2", "--engine", "event",
+                "--boards", "1", "--spt", "8", "--json"
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn info_runs() {
+        assert_eq!(run(argv(&["info"])), 0);
+    }
+}

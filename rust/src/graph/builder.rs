@@ -1,0 +1,180 @@
+//! Application-graph construction.
+//!
+//! Destination lists are pooled and shared: in the imputation graph every
+//! vertex of a column multicasts to the *same* set (the next/previous
+//! column), so storing the list once per column instead of once per vertex
+//! cuts edge memory by |H| — the same observation that makes Tinsel's
+//! hardware multicast effective.
+
+use super::device::{Device, PortId, VertexId};
+
+/// Shared destination-list handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DestListId(pub u32);
+
+/// An application graph: devices plus per-vertex output ports resolving to
+/// pooled destination lists.
+pub struct Graph<D: Device> {
+    pub devices: Vec<D>,
+    /// `ports[v][p]` → destination list of vertex `v`'s port `p`.
+    ports: Vec<Vec<DestListId>>,
+    pool: Vec<Vec<VertexId>>,
+}
+
+impl<D: Device> Graph<D> {
+    pub fn n_vertices(&self) -> usize {
+        self.devices.len()
+    }
+
+    #[inline]
+    pub fn dest_list(&self, v: VertexId, p: PortId) -> DestListId {
+        self.ports[v as usize][p as usize]
+    }
+
+    #[inline]
+    pub fn dests(&self, id: DestListId) -> &[VertexId] {
+        &self.pool[id.0 as usize]
+    }
+
+    pub fn n_dest_lists(&self) -> usize {
+        self.pool.len()
+    }
+
+    pub fn ports_of(&self, v: VertexId) -> &[DestListId] {
+        &self.ports[v as usize]
+    }
+
+    /// Total directed edge count (sum of port fan-outs over vertices).
+    pub fn n_edges(&self) -> u64 {
+        self.ports
+            .iter()
+            .flat_map(|ps| ps.iter())
+            .map(|&d| self.pool[d.0 as usize].len() as u64)
+            .sum()
+    }
+}
+
+/// Builder for [`Graph`].
+pub struct GraphBuilder<D: Device> {
+    devices: Vec<D>,
+    ports: Vec<Vec<DestListId>>,
+    pool: Vec<Vec<VertexId>>,
+}
+
+impl<D: Device> Default for GraphBuilder<D> {
+    fn default() -> Self {
+        GraphBuilder {
+            devices: Vec::new(),
+            ports: Vec::new(),
+            pool: Vec::new(),
+        }
+    }
+}
+
+impl<D: Device> GraphBuilder<D> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a vertex; returns its id.
+    pub fn add_vertex(&mut self, device: D) -> VertexId {
+        let id = self.devices.len() as VertexId;
+        self.devices.push(device);
+        self.ports.push(Vec::new());
+        id
+    }
+
+    /// Intern a destination list for sharing across vertices.
+    pub fn intern_dests(&mut self, dests: Vec<VertexId>) -> DestListId {
+        let id = DestListId(self.pool.len() as u32);
+        self.pool.push(dests);
+        id
+    }
+
+    /// Declare the next port of `v`, pointing at a shared destination list.
+    /// Ports must be declared in order (0, 1, 2, ...).
+    pub fn add_port(&mut self, v: VertexId, dests: DestListId) -> PortId {
+        assert!((dests.0 as usize) < self.pool.len(), "unknown dest list");
+        let ports = &mut self.ports[v as usize];
+        let pid = ports.len() as PortId;
+        ports.push(dests);
+        pid
+    }
+
+    /// Convenience: declare a port with a private (non-shared) list.
+    pub fn add_port_to(&mut self, v: VertexId, dests: Vec<VertexId>) -> PortId {
+        let id = self.intern_dests(dests);
+        self.add_port(v, id)
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn build(self) -> Graph<D> {
+        // Validate every destination id.
+        let n = self.devices.len() as u32;
+        for list in &self.pool {
+            for &d in list {
+                assert!(d < n, "edge to unknown vertex {d}");
+            }
+        }
+        Graph {
+            devices: self.devices,
+            ports: self.ports,
+            pool: self.pool,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::device::Ctx;
+
+    struct Null;
+    impl Device for Null {
+        type Msg = u8;
+        fn init(&mut self, _ctx: &mut Ctx<u8>) {}
+        fn recv(&mut self, _msg: &u8, _src: VertexId, _ctx: &mut Ctx<u8>) {}
+        fn step(&mut self, _ctx: &mut Ctx<u8>) -> bool {
+            false
+        }
+    }
+
+    #[test]
+    fn build_and_query() {
+        let mut b = GraphBuilder::new();
+        let v0 = b.add_vertex(Null);
+        let v1 = b.add_vertex(Null);
+        let v2 = b.add_vertex(Null);
+        let shared = b.intern_dests(vec![v1, v2]);
+        let p0 = b.add_port(v0, shared);
+        let p1 = b.add_port(v1, shared); // same list shared by two vertices
+        let p2 = b.add_port_to(v2, vec![v0]);
+        let g = b.build();
+        assert_eq!(g.n_vertices(), 3);
+        assert_eq!(g.dests(g.dest_list(v0, p0)), &[v1, v2]);
+        assert_eq!(g.dest_list(v0, p0), g.dest_list(v1, p1));
+        assert_eq!(g.dests(g.dest_list(v2, p2)), &[v0]);
+        assert_eq!(g.n_dest_lists(), 2);
+        assert_eq!(g.n_edges(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "edge to unknown vertex")]
+    fn rejects_dangling_edge() {
+        let mut b = GraphBuilder::new();
+        let v0 = b.add_vertex(Null);
+        b.add_port_to(v0, vec![99]);
+        b.build();
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown dest list")]
+    fn rejects_unknown_dest_list() {
+        let mut b = GraphBuilder::new();
+        let v0 = b.add_vertex(Null);
+        b.add_port(v0, DestListId(5));
+    }
+}

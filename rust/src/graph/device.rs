@@ -1,0 +1,117 @@
+//! The POLite-like device (vertex) abstraction — paper §4.2/§4.3.
+//!
+//! A device is a small state machine.  Handlers run only on event arrival (or
+//! at a globally-synchronised step, driven by termination detection); they may
+//! mutate device state and request sends on pre-declared output ports.  Ports
+//! are multicast groups: one send request delivers the event to every
+//! destination of the port (Tinsel's hardware multicast [21]).
+
+/// Vertex identifier within an application graph.
+pub type VertexId = u32;
+
+/// Port index within a vertex (output multicast group).
+pub type PortId = u8;
+
+/// Accounting + send interface handed to every handler invocation.
+///
+/// `flop(n)` records floating-point work for the timing model — the
+/// functional result is computed natively in the handler, but the simulated
+/// cost is derived from the recorded count.
+#[derive(Debug)]
+pub struct Ctx<M> {
+    /// This vertex's id.
+    pub me: VertexId,
+    /// Current global step number (target-haplotype pipelining wave).
+    pub step: u64,
+    flops: u64,
+    sends: Vec<(PortId, M)>,
+}
+
+impl<M> Ctx<M> {
+    pub fn new(me: VertexId, step: u64) -> Self {
+        Ctx {
+            me,
+            step,
+            flops: 0,
+            sends: Vec::new(),
+        }
+    }
+
+    /// Request a multicast send of `msg` on `port`.
+    #[inline]
+    pub fn send(&mut self, port: PortId, msg: M) {
+        self.sends.push((port, msg));
+    }
+
+    /// Record `n` floating-point operations for the cost model.
+    #[inline]
+    pub fn flop(&mut self, n: u64) {
+        self.flops += n;
+    }
+
+    /// Drain recorded sends (used by the simulator).
+    pub fn take_sends(&mut self) -> Vec<(PortId, M)> {
+        std::mem::take(&mut self.sends)
+    }
+
+    /// Recorded FP-op count.
+    pub fn flops(&self) -> u64 {
+        self.flops
+    }
+
+    /// Reset accounting between handler invocations (simulator use).
+    pub fn reset(&mut self, me: VertexId, step: u64) {
+        self.me = me;
+        self.step = step;
+        self.flops = 0;
+        debug_assert!(self.sends.is_empty(), "sends not drained");
+    }
+}
+
+/// A POLite-style device.
+///
+/// `Msg` must be `'static + Clone` and small — the simulator asserts it fits
+/// the 64-byte event budget of the Tinsel fabric.
+pub trait Device {
+    type Msg: Clone + 'static;
+
+    /// Cluster initialisation handler (paper Algorithm 1, Initialization).
+    fn init(&mut self, ctx: &mut Ctx<Self::Msg>);
+
+    /// Received-event handler.
+    fn recv(&mut self, msg: &Self::Msg, src: VertexId, ctx: &mut Ctx<Self::Msg>);
+
+    /// Step handler, invoked when termination detection finds no active send
+    /// requests (paper Algorithm 1, Step).  Return `false` to vote for halt;
+    /// the run ends when *all* devices vote halt and no events are in flight.
+    fn step(&mut self, ctx: &mut Ctx<Self::Msg>) -> bool;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_records_sends_and_flops() {
+        let mut ctx: Ctx<u32> = Ctx::new(7, 3);
+        ctx.flop(5);
+        ctx.flop(2);
+        ctx.send(0, 11);
+        ctx.send(1, 22);
+        assert_eq!(ctx.flops(), 7);
+        assert_eq!(ctx.me, 7);
+        assert_eq!(ctx.step, 3);
+        let sends = ctx.take_sends();
+        assert_eq!(sends, vec![(0, 11), (1, 22)]);
+        assert!(ctx.take_sends().is_empty());
+    }
+
+    #[test]
+    fn ctx_reset_clears_accounting() {
+        let mut ctx: Ctx<u32> = Ctx::new(0, 0);
+        ctx.flop(9);
+        ctx.reset(1, 2);
+        assert_eq!(ctx.flops(), 0);
+        assert_eq!((ctx.me, ctx.step), (1, 2));
+    }
+}

@@ -1,0 +1,158 @@
+//! Vertex → hardware-thread mapping — paper §4.3.
+//!
+//! Two mapping paths, as in POETS:
+//!
+//! * **Manual 2-D** (the Tinsel path): the imputation graph is itself a 2-D
+//!   array, so consecutive vertices (column-major) are packed onto
+//!   consecutive threads, `states_per_thread` at a time — this is exactly the
+//!   paper's soft-scheduling knob (Fig 12's x-axis).
+//! * **Partitioned** (the POLite path): an automatic partitioner (our
+//!   recursive-bisection METIS substitute, [`super::partition`]) assigns
+//!   balanced, low-edge-cut parts to threads.
+
+use crate::poets::topology::{ClusterConfig, ThreadId};
+
+use super::device::VertexId;
+
+/// A complete vertex→thread assignment.
+#[derive(Clone, Debug)]
+pub struct Mapping {
+    thread_of: Vec<ThreadId>,
+    n_threads_used: usize,
+}
+
+impl Mapping {
+    pub fn from_assignment(thread_of: Vec<ThreadId>, cluster: &ClusterConfig) -> Mapping {
+        let total = cluster.total_threads() as u32;
+        let mut used = std::collections::HashSet::new();
+        for t in &thread_of {
+            assert!(t.0 < total, "thread {} out of range", t.0);
+            used.insert(t.0);
+        }
+        Mapping {
+            thread_of,
+            n_threads_used: used.len(),
+        }
+    }
+
+    /// The paper's manual 2-D mapping with soft-scheduling.
+    ///
+    /// Vertices are assumed column-major (all |H| states of marker column 0,
+    /// then column 1, ...).  Threads are filled in order, `states_per_thread`
+    /// vertices each, so a column occupies a contiguous run of threads and
+    /// adjacent columns are physically adjacent — minimising NoC distance for
+    /// the column-to-column multicasts.
+    pub fn manual_2d(
+        n_vertices: usize,
+        states_per_thread: usize,
+        cluster: &ClusterConfig,
+    ) -> Mapping {
+        assert!(states_per_thread >= 1);
+        let needed = n_vertices.div_ceil(states_per_thread);
+        assert!(
+            needed <= cluster.total_threads(),
+            "graph needs {needed} threads, cluster has {} \
+             (raise states_per_thread — soft-scheduling)",
+            cluster.total_threads()
+        );
+        let thread_of = (0..n_vertices)
+            .map(|v| ThreadId((v / states_per_thread) as u32))
+            .collect();
+        Mapping {
+            thread_of,
+            n_threads_used: needed,
+        }
+    }
+
+    /// Round-robin across all threads (a deliberately locality-blind mapping,
+    /// used in tests and as an ablation).
+    pub fn round_robin(n_vertices: usize, cluster: &ClusterConfig) -> Mapping {
+        let total = cluster.total_threads();
+        let thread_of = (0..n_vertices)
+            .map(|v| ThreadId((v % total) as u32))
+            .collect();
+        Mapping {
+            thread_of,
+            n_threads_used: n_vertices.min(total),
+        }
+    }
+
+    #[inline]
+    pub fn thread_of(&self, v: VertexId) -> ThreadId {
+        self.thread_of[v as usize]
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.thread_of.len()
+    }
+
+    /// Number of distinct threads occupied.
+    pub fn n_threads_used(&self) -> usize {
+        self.n_threads_used
+    }
+
+    /// Maximum vertices on any one thread (the soft-scheduling factor
+    /// actually achieved).
+    pub fn max_load(&self) -> usize {
+        let mut counts = std::collections::HashMap::new();
+        for t in &self.thread_of {
+            *counts.entry(t.0).or_insert(0usize) += 1;
+        }
+        counts.values().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_2d_packs_contiguously() {
+        let c = ClusterConfig::tiny();
+        let m = Mapping::manual_2d(10, 2, &c);
+        assert_eq!(m.thread_of(0), ThreadId(0));
+        assert_eq!(m.thread_of(1), ThreadId(0));
+        assert_eq!(m.thread_of(2), ThreadId(1));
+        assert_eq!(m.thread_of(9), ThreadId(4));
+        assert_eq!(m.n_threads_used(), 5);
+        assert_eq!(m.max_load(), 2);
+    }
+
+    #[test]
+    fn manual_2d_keeps_columns_local() {
+        // Column-major vertex ids: a column of H=8 at 4 states/thread must
+        // span exactly 2 consecutive threads.
+        let c = ClusterConfig::poets_48();
+        let h = 8;
+        let m = Mapping::manual_2d(h * 100, 4, &c);
+        for col in 0..100u32 {
+            let threads: std::collections::HashSet<u32> = (0..h as u32)
+                .map(|i| m.thread_of(col * h as u32 + i).0)
+                .collect();
+            assert_eq!(threads.len(), 2, "column {col} spread {threads:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "soft-scheduling")]
+    fn manual_2d_rejects_overflow() {
+        let c = ClusterConfig::tiny(); // 2 boards x 4 tiles x 2 cores x 4 thr = 64
+        Mapping::manual_2d(100, 1, &c);
+    }
+
+    #[test]
+    fn round_robin_covers_threads() {
+        let c = ClusterConfig::tiny();
+        let m = Mapping::round_robin(200, &c);
+        assert_eq!(m.n_threads_used(), c.total_threads());
+        assert_eq!(m.thread_of(0), ThreadId(0));
+        assert_eq!(m.thread_of(64), ThreadId(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn from_assignment_validates() {
+        let c = ClusterConfig::tiny();
+        Mapping::from_assignment(vec![ThreadId(9999)], &c);
+    }
+}

@@ -1,0 +1,18 @@
+//! POLite-like application-graph framework — paper §4.2/§4.3.
+//!
+//! * [`device`] — the vertex abstraction: event handlers, ports, accounting.
+//! * [`builder`] — graph construction with pooled (shared) multicast
+//!   destination lists.
+//! * [`mapping`] — vertex→hardware-thread assignment: the paper's manual 2-D
+//!   mapping with soft-scheduling, plus round-robin for ablations.
+//! * [`partition`] — recursive-bisection auto-mapper (METIS substitute for
+//!   the POLite path).
+
+pub mod builder;
+pub mod device;
+pub mod mapping;
+pub mod partition;
+
+pub use builder::{DestListId, Graph, GraphBuilder};
+pub use device::{Ctx, Device, PortId, VertexId};
+pub use mapping::Mapping;

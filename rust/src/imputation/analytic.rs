@@ -1,0 +1,226 @@
+//! Closed-form step-time predictor.
+//!
+//! The DES is exact (within its cost model) but its host run-time grows with
+//! total message count, which caps the panel sizes it can sweep.  The paper's
+//! largest configurations (49,152+ threads, 10,000 targets) are reached by
+//! this analytic model instead: a steady-state bottleneck analysis of one
+//! pipelined superstep, cross-validated against the DES on every panel the
+//! DES can run (see rust/tests/cluster_invariants.rs and the calibrate
+//! bench) and documented in EXPERIMENTS.md.
+//!
+//! Model: per superstep, every active column's vertices each receive the full
+//! fan-in, so the *busiest core* and the *busiest mailbox* process
+//!
+//! * core:    v/core · [(fan_in+extra)·handler + sends·send_req + step-dispatch]
+//! * mailbox: v/tile · (fan_in+extra) · ingress
+//!
+//! and the step time is the slower of the two plus the termination wave.
+//! Total time = (pipeline fill + targets) · step.
+
+use crate::poets::costmodel::CostModel;
+use crate::poets::topology::ClusterConfig;
+
+/// Which application variant to predict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppKind {
+    Raw,
+    /// Linear interpolation with the given mean section length (markers per
+    /// anchor, e.g. 10 at ratio 1/10).
+    Interp { section: usize },
+}
+
+/// Workload description for the predictor.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub n_hap: usize,
+    pub n_mark: usize,
+    pub n_targets: usize,
+    pub states_per_thread: usize,
+    pub kind: AppKind,
+}
+
+/// Predicted timing decomposition.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub steps: u64,
+    pub core_cycles_per_step: u64,
+    pub mailbox_cycles_per_step: u64,
+    pub barrier_cycles: u64,
+    pub step_cycles: u64,
+    pub total_cycles: u64,
+    pub seconds: f64,
+}
+
+/// Predict the simulated wall-clock of one event-driven run.
+pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Prediction {
+    let h = w.n_hap as u64;
+    // Graph columns and per-vertex message counts by app kind.
+    let (columns, fan_in, sends_per_vertex, flops_per_msg) = match w.kind {
+        // Raw: α fan-in H, β fan-in H, ~1 posterior unicast in, 3 sends out.
+        AppKind::Raw => (w.n_mark as u64, 2 * h + 1, 3u64, 2u64),
+        // Interp: anchor grid columns; extra Section/HitVec/Tot traffic ≈ 3
+        // unicasts in/out per vertex wave.
+        AppKind::Interp { section } => (
+            (w.n_mark / section.max(1)).max(2) as u64,
+            2 * h + 4,
+            6u64,
+            2u64,
+        ),
+    };
+    let n_vertices = columns * h;
+
+    // Occupied threads under soft-scheduling.
+    let threads_used = (n_vertices as usize)
+        .div_ceil(w.states_per_thread)
+        .min(cluster.total_threads()) as u64;
+    let threads_per_core = cluster.threads_per_core as u64;
+    let cores_used = threads_used.div_ceil(threads_per_core).max(1);
+    let tiles_used = threads_used
+        .div_ceil(cluster.threads_per_tile() as u64)
+        .max(1);
+
+    let v_per_core = n_vertices.div_ceil(cores_used);
+    let v_per_tile = n_vertices.div_ceil(tiles_used);
+
+    // Steady state: every column is mid-wave, so each vertex handles one
+    // full fan-in per superstep (×2 while α and β waves overlap — they do,
+    // so fan_in already counts both directions).
+    let handler = cost.handler(flops_per_msg);
+    let core_cycles = v_per_core * (fan_in * handler + sends_per_vertex * cost.send_request
+        + cost.handler(0) /* step handler */);
+    let mailbox_cycles = v_per_tile * fan_in * cost.mailbox_ingress;
+
+    let barrier = cost.barrier(threads_used as usize);
+    let step = core_cycles.max(mailbox_cycles) + barrier;
+    // Pipeline: fill takes `columns` steps, then ~1 target completes per
+    // step, plus a drain tail of `columns`.
+    let steps = columns + w.n_targets as u64 + columns;
+    let total = steps * step;
+    Prediction {
+        steps,
+        core_cycles_per_step: core_cycles,
+        mailbox_cycles_per_step: mailbox_cycles,
+        barrier_cycles: barrier,
+        step_cycles: step,
+        total_cycles: total,
+        seconds: total as f64 / cluster.clock_hz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imputation::app::{RawAppConfig, run_raw};
+    use crate::poets::desim::SimConfig;
+    use crate::util::rng::Rng;
+    use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+    #[test]
+    fn predictor_tracks_des_on_small_panel() {
+        // The predictor is a *steady-state* model: valid when T ≳ M so the
+        // pipeline is full (the paper regime is T=10000 ≫ M).
+        let pcfg = PanelConfig {
+            n_hap: 8,
+            n_mark: 24,
+            annot_ratio: 0.2,
+            maf: 0.2,
+            seed: 11,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&pcfg);
+        let mut rng = Rng::new(99);
+        let targets: Vec<_> = generate_targets(&panel, &pcfg, 60, &mut rng)
+            .into_iter()
+            .map(|c| c.masked)
+            .collect();
+        let cluster = crate::poets::topology::ClusterConfig::with_boards(1);
+        let cfg = RawAppConfig {
+            cluster,
+            states_per_thread: 1,
+            sim: SimConfig::default(),
+            ..RawAppConfig::default()
+        };
+        let des = run_raw(&panel, &targets, &cfg);
+        let pred = predict(
+            &Workload {
+                n_hap: 8,
+                n_mark: 24,
+                n_targets: 60,
+                states_per_thread: 1,
+                kind: AppKind::Raw,
+            },
+            &cluster,
+            &CostModel::default(),
+        );
+        let ratio = pred.seconds / des.sim_seconds;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "analytic {}s vs DES {}s (ratio {ratio})",
+            pred.seconds,
+            des.sim_seconds
+        );
+    }
+
+    #[test]
+    fn predictor_monotone_in_targets_and_size() {
+        let cluster = crate::poets::topology::ClusterConfig::poets_48();
+        let cost = CostModel::default();
+        let base = Workload {
+            n_hap: 22,
+            n_mark: 2234,
+            n_targets: 100,
+            states_per_thread: 1,
+            kind: AppKind::Raw,
+        };
+        let p0 = predict(&base, &cluster, &cost);
+        let more_targets = predict(
+            &Workload {
+                n_targets: 1000,
+                ..base
+            },
+            &cluster,
+            &cost,
+        );
+        assert!(more_targets.seconds > p0.seconds);
+        let more_soft = predict(
+            &Workload {
+                states_per_thread: 10,
+                n_hap: 70,
+                n_mark: 7022,
+                ..base
+            },
+            &cluster,
+            &cost,
+        );
+        assert!(more_soft.step_cycles > p0.step_cycles);
+    }
+
+    #[test]
+    fn interp_predicts_fewer_cycles_than_raw() {
+        let cluster = crate::poets::topology::ClusterConfig::poets_48();
+        let cost = CostModel::default();
+        let raw = predict(
+            &Workload {
+                n_hap: 70,
+                n_mark: 7000,
+                n_targets: 1000,
+                states_per_thread: 10,
+                kind: AppKind::Raw,
+            },
+            &cluster,
+            &cost,
+        );
+        let itp = predict(
+            &Workload {
+                n_hap: 70,
+                n_mark: 7000,
+                n_targets: 1000,
+                states_per_thread: 10,
+                kind: AppKind::Interp { section: 10 },
+            },
+            &cluster,
+            &cost,
+        );
+        assert!(itp.total_cycles * 4 < raw.total_cycles);
+    }
+}

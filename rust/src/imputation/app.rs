@@ -1,0 +1,278 @@
+//! Raw-model application assembly — paper §5.1/§5.2.
+//!
+//! The reference panel becomes a 2-D application graph, one vertex per HMM
+//! state, column-major vertex ids (`v = m·H + h`) so the manual 2-D mapping
+//! packs columns contiguously.  Each column's forward/backward multicast
+//! destination lists are interned once and shared by the whole column.
+
+use std::sync::Arc;
+
+use crate::graph::builder::{Graph, GraphBuilder};
+use crate::graph::device::VertexId;
+use crate::graph::mapping::Mapping;
+use crate::model::panel::{ReferencePanel, TargetHaplotype};
+use crate::model::params::ModelParams;
+use crate::poets::costmodel::CostModel;
+use crate::poets::desim::{SimConfig, Simulator};
+use crate::poets::metrics::SimMetrics;
+use crate::poets::topology::ClusterConfig;
+
+use super::obs::ObsMatrix;
+use super::vertex::RawVertex;
+
+/// Everything needed to run the raw event-driven imputation.
+#[derive(Clone)]
+pub struct RawAppConfig {
+    pub params: ModelParams,
+    /// Soft-scheduling factor: panel states per hardware thread (Fig 12).
+    pub states_per_thread: usize,
+    pub cluster: ClusterConfig,
+    pub cost: CostModel,
+    pub sim: SimConfig,
+}
+
+impl Default for RawAppConfig {
+    fn default() -> Self {
+        RawAppConfig {
+            params: ModelParams::default(),
+            states_per_thread: 1,
+            cluster: ClusterConfig::poets_48(),
+            cost: CostModel::default(),
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+/// Result of an event-driven run.
+pub struct EventRunResult {
+    /// `dosages[target][marker]`.
+    pub dosages: Vec<Vec<f32>>,
+    pub metrics: SimMetrics,
+    /// Simulated POETS wall-clock seconds.
+    pub sim_seconds: f64,
+}
+
+/// Build the raw application graph (one vertex per panel state).
+pub fn build_raw_graph(
+    panel: &ReferencePanel,
+    targets: &[TargetHaplotype],
+    params: &ModelParams,
+) -> Graph<RawVertex> {
+    let (h_n, m_n) = (panel.n_hap(), panel.n_mark());
+    let obs = ObsMatrix::from_targets(targets);
+    assert_eq!(obs.n_mark(), m_n, "targets/panel marker mismatch");
+    let n_targets = targets.len() as u32;
+    let taus: Vec<f64> = (0..m_n)
+        .map(|m| {
+            if m == 0 {
+                0.0
+            } else {
+                params.tau(panel.gen_dist(m), h_n)
+            }
+        })
+        .collect();
+
+    let mut b = GraphBuilder::new();
+    for m in 0..m_n {
+        let tau_m = taus[m];
+        let tau_next = if m + 1 < m_n { taus[m + 1] } else { 0.0 };
+        for h in 0..h_n {
+            b.add_vertex(RawVertex::new(
+                h as u32,
+                m as u32,
+                h_n as u32,
+                m_n as u32,
+                panel.allele(h, m),
+                tau_m,
+                tau_next,
+                params.err,
+                n_targets,
+                Arc::clone(&obs),
+            ));
+        }
+    }
+
+    // Shared destination lists: one per column (its full vertex set), plus
+    // one per column for the accumulator unicast, plus one shared empty list.
+    let col_ids: Vec<Vec<VertexId>> = (0..m_n)
+        .map(|m| (0..h_n).map(|h| (m * h_n + h) as VertexId).collect())
+        .collect();
+    let col_lists: Vec<_> = col_ids.iter().map(|c| b.intern_dests(c.clone())).collect();
+    let down_lists: Vec<_> = (0..m_n)
+        .map(|m| b.intern_dests(vec![(m * h_n + h_n - 1) as VertexId]))
+        .collect();
+    let empty = b.intern_dests(vec![]);
+
+    for m in 0..m_n {
+        for h in 0..h_n {
+            let v = (m * h_n + h) as VertexId;
+            // PORT_FWD
+            b.add_port(v, if m + 1 < m_n { col_lists[m + 1] } else { empty });
+            // PORT_BWD
+            b.add_port(v, if m > 0 { col_lists[m - 1] } else { empty });
+            // PORT_DOWN (the accumulator itself tallies locally).
+            b.add_port(v, if h == h_n - 1 { empty } else { down_lists[m] });
+        }
+    }
+    b.build()
+}
+
+/// Run the raw event-driven imputation on the simulated cluster.
+pub fn run_raw(
+    panel: &ReferencePanel,
+    targets: &[TargetHaplotype],
+    cfg: &RawAppConfig,
+) -> EventRunResult {
+    let graph = build_raw_graph(panel, targets, &cfg.params);
+    let mapping = Mapping::manual_2d(graph.n_vertices(), cfg.states_per_thread, &cfg.cluster);
+    let mut sim = Simulator::new(graph, mapping, cfg.cluster, cfg.cost, cfg.sim);
+    sim.run();
+    extract_results(&sim, panel, targets.len())
+}
+
+/// Pull per-target dosage vectors out of the accumulator vertices.
+pub fn extract_results(
+    sim: &Simulator<RawVertex>,
+    panel: &ReferencePanel,
+    n_targets: usize,
+) -> EventRunResult {
+    let (h_n, m_n) = (panel.n_hap(), panel.n_mark());
+    let mut dosages = vec![vec![f32::NAN; m_n]; n_targets];
+    for m in 0..m_n {
+        let acc = &sim.graph.devices[m * h_n + (h_n - 1)];
+        assert_eq!(acc.dosage.len(), n_targets);
+        for (t, row) in dosages.iter_mut().enumerate() {
+            let d = acc.dosage[t];
+            assert!(
+                d.is_finite(),
+                "dosage for target {t} marker {m} never completed"
+            );
+            row[m] = d;
+        }
+    }
+    EventRunResult {
+        dosages,
+        metrics: sim.metrics.clone(),
+        sim_seconds: sim.sim_seconds(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::baseline::{Baseline, ImputeOut, Method};
+    use crate::util::rng::Rng;
+    use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+    fn small_cfg() -> RawAppConfig {
+        RawAppConfig {
+            cluster: ClusterConfig::with_boards(2),
+            states_per_thread: 4,
+            ..RawAppConfig::default()
+        }
+    }
+
+    fn problem(seed: u64, n_hap: usize, n_mark: usize, n_targets: usize)
+        -> (ReferencePanel, Vec<TargetHaplotype>) {
+        let pcfg = PanelConfig {
+            n_hap,
+            n_mark,
+            maf: 0.25,
+            annot_ratio: 0.2,
+            seed,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&pcfg);
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let targets = generate_targets(&panel, &pcfg, n_targets, &mut rng)
+            .into_iter()
+            .map(|c| c.masked)
+            .collect();
+        (panel, targets)
+    }
+
+    #[test]
+    fn graph_shape() {
+        let (panel, targets) = problem(1, 6, 10, 1);
+        let g = build_raw_graph(&panel, &targets, &ModelParams::default());
+        assert_eq!(g.n_vertices(), 60);
+        // fwd H per vertex except last column; bwd except first; down except
+        // accumulator row.
+        let expected_edges = (6 * 9 * 6) + (6 * 9 * 6) + (5 * 10);
+        assert_eq!(g.n_edges(), expected_edges as u64);
+    }
+
+    #[test]
+    fn event_driven_matches_baseline_single_target() {
+        let (panel, targets) = problem(2, 8, 12, 1);
+        let out = run_raw(&panel, &targets, &small_cfg());
+        let b = Baseline::default();
+        let want: ImputeOut<f32> = b.impute(&panel, &targets[0], Method::DenseThreeLoop);
+        for m in 0..panel.n_mark() {
+            assert!(
+                (out.dosages[0][m] - want.dosage[m]).abs() < 1e-4,
+                "marker {m}: event {} vs baseline {}",
+                out.dosages[0][m],
+                want.dosage[m]
+            );
+        }
+    }
+
+    #[test]
+    fn event_driven_matches_baseline_pipelined_targets() {
+        let (panel, targets) = problem(3, 6, 15, 4);
+        let out = run_raw(&panel, &targets, &small_cfg());
+        let b = Baseline::default();
+        for (t, target) in targets.iter().enumerate() {
+            let want: ImputeOut<f32> = b.impute(&panel, target, Method::DenseThreeLoop);
+            for m in 0..panel.n_mark() {
+                assert!(
+                    (out.dosages[t][m] - want.dosage[m]).abs() < 1e-4,
+                    "target {t} marker {m}: {} vs {}",
+                    out.dosages[t][m],
+                    want.dosage[m]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_completes_in_m_plus_t_steps() {
+        let (panel, targets) = problem(4, 6, 12, 5);
+        let out = run_raw(&panel, &targets, &small_cfg());
+        // One target injected per step; the last needs ~M more steps to
+        // drain, plus constant startup/drain slack.
+        let steps = out.metrics.steps;
+        let bound = (12 + 5 + 6) as u64;
+        assert!(steps <= bound, "steps {steps} > bound {bound}");
+        assert!(steps >= 12, "steps {steps} implausibly low");
+    }
+
+    #[test]
+    fn message_counts_match_theory() {
+        let (panel, targets) = problem(5, 6, 10, 2);
+        let out = run_raw(&panel, &targets, &small_cfg());
+        let (h, m, t) = (6u64, 10u64, 2u64);
+        // Multicast sends: α from columns 0..M-1, β from columns M-1..0 →
+        // each vertex sends one α (except last col) and one β (except col 0)
+        // per target. Posterior unicasts: (H-1) per column per target.
+        let expected_sends = t * ((m - 1) * h + (m - 1) * h + m * (h - 1));
+        assert_eq!(out.metrics.sends, expected_sends);
+        // Copies: each α/β multicast delivers H copies; posteriors 1 each.
+        let expected_copies = t * ((m - 1) * h * h * 2 + m * (h - 1));
+        assert_eq!(out.metrics.copies_delivered, expected_copies);
+    }
+
+    #[test]
+    fn soft_scheduling_changes_time_not_results() {
+        let (panel, targets) = problem(6, 8, 10, 2);
+        let mut cfg1 = small_cfg();
+        cfg1.states_per_thread = 1;
+        let mut cfg8 = small_cfg();
+        cfg8.states_per_thread = 8;
+        let a = run_raw(&panel, &targets, &cfg1);
+        let b = run_raw(&panel, &targets, &cfg8);
+        assert_eq!(a.dosages, b.dosages, "mapping must not change numerics");
+        assert!(a.sim_seconds != b.sim_seconds, "timing should differ");
+    }
+}

@@ -1,0 +1,295 @@
+//! Linear-interpolation application assembly — paper §5.3/§6.3.
+//!
+//! The anchor grid is the target set's annotated-marker grid (all targets
+//! share it: chips type the same loci for every sample).  Vertex ids are
+//! column-major over the K×H anchor grid; each vertex owns the section of
+//! intermediate panel states between its anchor and the next.
+
+use std::sync::Arc;
+
+use crate::graph::builder::{Graph, GraphBuilder};
+use crate::graph::device::VertexId;
+use crate::graph::mapping::Mapping;
+use crate::model::interpolation::blends;
+use crate::model::panel::{ReferencePanel, TargetHaplotype};
+use crate::poets::desim::Simulator;
+use crate::poets::topology::ClusterConfig;
+
+use super::app::{EventRunResult, RawAppConfig};
+use super::interp_vertex::InterpVertex;
+use super::obs::ObsMatrix;
+
+/// Build the interpolation application graph.
+///
+/// All targets must share the same annotation grid (`anchors`).
+pub fn build_interp_graph(
+    panel: &ReferencePanel,
+    targets: &[TargetHaplotype],
+    anchors: &[usize],
+    cfg: &RawAppConfig,
+) -> Graph<InterpVertex> {
+    let h_n = panel.n_hap();
+    let k_n = anchors.len();
+    assert!(k_n >= 2, "interpolation needs >= 2 anchors");
+    for t in targets {
+        assert_eq!(
+            t.annotated(),
+            anchors,
+            "all targets must share the annotation grid"
+        );
+    }
+    let obs = ObsMatrix::from_targets(targets);
+    let n_targets = targets.len() as u32;
+
+    // Anchor subproblem taus (accumulated genetic distances).
+    let sub = panel.select_markers(anchors);
+    let taus: Vec<f64> = (0..k_n)
+        .map(|k| {
+            if k == 0 {
+                0.0
+            } else {
+                cfg.params.tau(sub.gen_dist(k), h_n)
+            }
+        })
+        .collect();
+
+    // Per-marker blend weights over the full grid (paper Fig 10).
+    let weights = blends(panel, anchors);
+
+    let mut b = GraphBuilder::new();
+    for (k, &anchor_m) in anchors.iter().enumerate() {
+        let sec_range = if k + 1 < k_n {
+            anchor_m + 1..anchors[k + 1]
+        } else {
+            anchor_m + 1..anchor_m + 1 // empty: last anchor owns no section
+        };
+        let sec_fracs: Vec<f32> = sec_range
+            .clone()
+            .map(|m| {
+                debug_assert_eq!(weights[m].left, k);
+                weights[m].frac as f32
+            })
+            .collect();
+        let tau_k = taus[k];
+        let tau_next = if k + 1 < k_n { taus[k + 1] } else { 0.0 };
+        for h in 0..h_n {
+            let sec_alleles: Vec<u8> = sec_range.clone().map(|m| panel.allele(h, m)).collect();
+            b.add_vertex(InterpVertex::new(
+                h as u32,
+                k as u32,
+                h_n as u32,
+                k_n as u32,
+                anchor_m as u32,
+                panel.allele(h, anchor_m),
+                sec_alleles,
+                sec_fracs.clone(),
+                tau_k,
+                tau_next,
+                cfg.params.err,
+                n_targets,
+                Arc::clone(&obs),
+            ));
+        }
+    }
+
+    let col_ids: Vec<Vec<VertexId>> = (0..k_n)
+        .map(|k| (0..h_n).map(|h| (k * h_n + h) as VertexId).collect())
+        .collect();
+    let col_lists: Vec<_> = col_ids.iter().map(|c| b.intern_dests(c.clone())).collect();
+    let down_lists: Vec<_> = (0..k_n)
+        .map(|k| b.intern_dests(vec![(k * h_n + h_n - 1) as VertexId]))
+        .collect();
+    let empty = b.intern_dests(vec![]);
+
+    for k in 0..k_n {
+        for h in 0..h_n {
+            let v = (k * h_n + h) as VertexId;
+            let is_acc = h == h_n - 1;
+            // PORT_FWD / PORT_BWD over the anchor grid.
+            b.add_port(v, if k + 1 < k_n { col_lists[k + 1] } else { empty });
+            b.add_port(v, if k > 0 { col_lists[k - 1] } else { empty });
+            // PORT_DOWN: posterior + hit-vector unicasts to the accumulator.
+            b.add_port(v, if is_acc { empty } else { down_lists[k] });
+            // PORT_SECTION: own anchor posterior to the left neighbour.
+            let left = if k > 0 {
+                b.intern_dests(vec![((k - 1) * h_n + h) as VertexId])
+            } else {
+                empty
+            };
+            b.add_port(v, left);
+            // PORT_TOT: accumulator→left accumulator.
+            b.add_port(v, if is_acc && k > 0 { down_lists[k - 1] } else { empty });
+        }
+    }
+    b.build()
+}
+
+/// Run the interpolation app; returns full-grid dosages per target.
+pub fn run_interp(
+    panel: &ReferencePanel,
+    targets: &[TargetHaplotype],
+    cfg: &RawAppConfig,
+) -> EventRunResult {
+    let anchors = targets[0].annotated();
+    let graph = build_interp_graph(panel, targets, &anchors, cfg);
+    let mapping = interp_mapping(graph.n_vertices(), cfg.states_per_thread, &cfg.cluster);
+    let mut sim = Simulator::new(graph, mapping, cfg.cluster, cfg.cost, cfg.sim);
+    sim.run();
+    extract_interp_results(&sim, panel, &anchors, targets.len())
+}
+
+/// Soft-scheduling for sections: `states_per_thread` counts *panel states*,
+/// so sections-per-thread = states_per_thread / section_size (≥ 1).
+fn interp_mapping(
+    n_vertices: usize,
+    states_per_thread: usize,
+    cluster: &ClusterConfig,
+) -> Mapping {
+    Mapping::manual_2d(n_vertices, states_per_thread.max(1), cluster)
+}
+
+/// Reassemble per-target full-grid dosages from the accumulator vertices.
+pub fn extract_interp_results(
+    sim: &Simulator<InterpVertex>,
+    panel: &ReferencePanel,
+    anchors: &[usize],
+    n_targets: usize,
+) -> EventRunResult {
+    let h_n = panel.n_hap();
+    let m_n = panel.n_mark();
+    let mut dosages = vec![vec![f32::NAN; m_n]; n_targets];
+    for (k, &anchor_m) in anchors.iter().enumerate() {
+        let acc = &sim.graph.devices[k * h_n + (h_n - 1)];
+        let sec_len = acc.sec_len();
+        for (t, row) in dosages.iter_mut().enumerate() {
+            let d = acc.anchor_dosage[t];
+            assert!(d.is_finite(), "anchor dosage missing (t={t}, k={k})");
+            row[anchor_m] = d;
+            for i in 0..sec_len {
+                let d = acc.section_dosage[t * sec_len + i];
+                assert!(d.is_finite(), "section dosage missing (t={t}, k={k}, i={i})");
+                row[anchor_m + 1 + i] = d;
+            }
+        }
+    }
+    EventRunResult {
+        dosages,
+        metrics: sim.metrics.clone(),
+        sim_seconds: sim.sim_seconds(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::baseline::{Baseline, ImputeOut, Method};
+    use crate::model::interpolation::impute_interp;
+    use crate::poets::topology::ClusterConfig;
+    use crate::util::rng::Rng;
+    use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+    fn cfg() -> RawAppConfig {
+        RawAppConfig {
+            cluster: ClusterConfig::with_boards(2),
+            states_per_thread: 10,
+            ..RawAppConfig::default()
+        }
+    }
+
+    fn problem(seed: u64, n_hap: usize, n_mark: usize, n_targets: usize)
+        -> (ReferencePanel, Vec<TargetHaplotype>) {
+        let pcfg = PanelConfig {
+            n_hap,
+            n_mark,
+            maf: 0.25,
+            annot_ratio: 0.1,
+            seed,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&pcfg);
+        let mut rng = Rng::new(seed ^ 0xFEED);
+        let targets = generate_targets(&panel, &pcfg, n_targets, &mut rng)
+            .into_iter()
+            .map(|c| c.masked)
+            .collect();
+        (panel, targets)
+    }
+
+    #[test]
+    fn graph_is_sectioned() {
+        let (panel, targets) = problem(1, 6, 41, 1);
+        let anchors = targets[0].annotated();
+        let g = build_interp_graph(&panel, &targets, &anchors, &cfg());
+        // 41 markers at ratio 0.1 → anchors {0,10,20,30,40}: 5 anchor columns.
+        assert_eq!(anchors.len(), 5);
+        assert_eq!(g.n_vertices(), 5 * 6);
+        // Sections: anchors 0..3 own 9 intermediates each; last owns none.
+        let v0 = &g.devices[0];
+        assert_eq!(v0.sec_len(), 9);
+        let vlast = &g.devices[4 * 6];
+        assert_eq!(vlast.sec_len(), 0);
+    }
+
+    #[test]
+    fn interp_event_matches_interp_baseline() {
+        let (panel, targets) = problem(2, 8, 41, 1);
+        let out = run_interp(&panel, &targets, &cfg());
+        let b = Baseline::default();
+        let want: ImputeOut<f32> = impute_interp(&b, &panel, &targets[0], Method::DenseThreeLoop);
+        for m in 0..panel.n_mark() {
+            assert!(
+                (out.dosages[0][m] - want.dosage[m]).abs() < 2e-3,
+                "marker {m}: event {} vs baseline {}",
+                out.dosages[0][m],
+                want.dosage[m]
+            );
+        }
+    }
+
+    #[test]
+    fn interp_event_pipelined_targets_match() {
+        let (panel, targets) = problem(3, 6, 31, 4);
+        let out = run_interp(&panel, &targets, &cfg());
+        let b = Baseline::default();
+        for (t, target) in targets.iter().enumerate() {
+            let want: ImputeOut<f32> = impute_interp(&b, &panel, target, Method::DenseThreeLoop);
+            for m in 0..panel.n_mark() {
+                assert!(
+                    (out.dosages[t][m] - want.dosage[m]).abs() < 2e-3,
+                    "target {t} marker {m}: {} vs {}",
+                    out.dosages[t][m],
+                    want.dosage[m]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn message_reduction_vs_raw() {
+        // The §6.3 claim: sectioning cuts messages by roughly the section
+        // size. Compare send counts of raw vs interp on the same panel.
+        let (panel, targets) = problem(4, 8, 101, 2);
+        let raw = crate::imputation::app::run_raw(&panel, &targets, &cfg());
+        let itp = run_interp(&panel, &targets, &cfg());
+        let ratio = raw.metrics.sends as f64 / itp.metrics.sends as f64;
+        assert!(
+            ratio > 5.0,
+            "message reduction only {ratio:.1}x (raw {} vs interp {})",
+            raw.metrics.sends,
+            itp.metrics.sends
+        );
+    }
+
+    #[test]
+    fn interp_faster_than_raw_in_sim_time() {
+        let (panel, targets) = problem(5, 8, 101, 2);
+        let raw = crate::imputation::app::run_raw(&panel, &targets, &cfg());
+        let itp = run_interp(&panel, &targets, &cfg());
+        assert!(
+            itp.sim_seconds < raw.sim_seconds,
+            "interp {} vs raw {}",
+            itp.sim_seconds,
+            raw.sim_seconds
+        );
+    }
+}

@@ -1,0 +1,445 @@
+//! Linear-interpolation state-section vertex — paper §5.3 / §6.3.
+//!
+//! One vertex per *state section*: a single HMM state at an annotated-marker
+//! anchor plus the run of interpolation states up to (not including) the next
+//! anchor ("a single HMM state and 9 linear interpolation states").  The HMM
+//! part behaves exactly like [`super::vertex::RawVertex`] over the anchor
+//! grid (with accumulated genetic distances); the interpolation part blends
+//! the vertex's own anchor posterior with its right neighbour's and reduces
+//! each intermediate marker with that marker's own panel allele.
+//!
+//! Extra ports beyond the raw model:
+//! * `PORT_SECTION` (3) — unicast own anchor posterior to the *left*
+//!   neighbour `(h, k-1)`, which owns the section between the two anchors.
+//! * `PORT_TOT` (4) — accumulator-only: anchor-column posterior total to the
+//!   left accumulator (interpolated totals normalise intermediate columns).
+//!
+//! Message economics (the paper's §6.3 argument): a section of `L` states
+//! costs 2 multicasts + ≤3 unicasts per target instead of `L`·(2 multicasts +
+//! 1 unicast) — the ~10× message reduction that lifts the fan-in bottleneck.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::graph::device::{Ctx, Device, PortId, VertexId};
+
+use super::msg::{InterpMsg, MAX_SECTION};
+use super::obs::ObsMatrix;
+
+pub const PORT_FWD: PortId = 0;
+pub const PORT_BWD: PortId = 1;
+pub const PORT_DOWN: PortId = 2;
+pub const PORT_SECTION: PortId = 3;
+pub const PORT_TOT: PortId = 4;
+
+#[derive(Clone, Copy, Debug, Default)]
+struct PostAcc {
+    target: u32,
+    hit: f32,
+    tot: f32,
+    cnt: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct HitAcc {
+    target: u32,
+    vals: [f32; MAX_SECTION],
+    cnt: u32,
+}
+
+/// One state section (anchor `k`, haplotype `h`).
+pub struct InterpVertex {
+    pub h: u32,
+    pub k: u32,
+    h_n: u32,
+    k_n: u32,
+    /// Absolute marker index of the anchor.
+    m_abs: u32,
+    /// Allele at the anchor state.
+    allele: u8,
+    /// Alleles of the section's intermediate markers (may be empty).
+    sec_alleles: Vec<u8>,
+    /// Blend fraction per intermediate marker (paper Fig 10 apportioning).
+    sec_fracs: Vec<f32>,
+    a_same: f32,
+    a_diff: f32,
+    a_same_next: f32,
+    a_diff_next: f32,
+    err: f32,
+    n_targets: u32,
+    obs: Arc<ObsMatrix>,
+
+    acc_alpha: f32,
+    cnt_alpha: u32,
+    tgt_alpha: u32,
+    acc_beta: f32,
+    cnt_beta: u32,
+    tgt_beta: u32,
+    injected: u32,
+    pending_alpha: VecDeque<(u32, f32)>,
+    pending_beta: VecDeque<(u32, f32)>,
+    /// Own anchor posterior awaiting the right neighbour's Section message.
+    pending_p: VecDeque<(u32, f32)>,
+    pending_right: VecDeque<(u32, f32)>,
+
+    // Accumulator (h == H−1) state:
+    post: VecDeque<PostAcc>,
+    hits: VecDeque<HitAcc>,
+    /// Own anchor totals T_k per target (kept until section dosages done).
+    pending_t: VecDeque<(u32, f32)>,
+    /// Right accumulator's totals T_{k+1}.
+    pending_t_right: VecDeque<(u32, f32)>,
+    /// Anchor dosage per target (accumulators only).
+    pub anchor_dosage: Vec<f32>,
+    /// Section dosages, `[target * sec_len + i]` (accumulators only).
+    pub section_dosage: Vec<f32>,
+}
+
+impl InterpVertex {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        h: u32,
+        k: u32,
+        h_n: u32,
+        k_n: u32,
+        m_abs: u32,
+        allele: u8,
+        sec_alleles: Vec<u8>,
+        sec_fracs: Vec<f32>,
+        tau_k: f64,
+        tau_next: f64,
+        err: f64,
+        n_targets: u32,
+        obs: Arc<ObsMatrix>,
+    ) -> InterpVertex {
+        assert_eq!(sec_alleles.len(), sec_fracs.len());
+        assert!(
+            sec_alleles.len() <= MAX_SECTION,
+            "section of {} exceeds the {MAX_SECTION}-state event budget",
+            sec_alleles.len()
+        );
+        let hn = h_n as f64;
+        let is_acc = h == h_n - 1;
+        let sec_len = sec_alleles.len();
+        InterpVertex {
+            h,
+            k,
+            h_n,
+            k_n,
+            m_abs,
+            allele,
+            sec_alleles,
+            sec_fracs,
+            a_same: ((1.0 - tau_k) + tau_k / hn) as f32,
+            a_diff: (tau_k / hn) as f32,
+            a_same_next: ((1.0 - tau_next) + tau_next / hn) as f32,
+            a_diff_next: (tau_next / hn) as f32,
+            err: err as f32,
+            n_targets,
+            obs,
+            acc_alpha: 0.0,
+            cnt_alpha: 0,
+            tgt_alpha: 0,
+            acc_beta: 0.0,
+            cnt_beta: 0,
+            tgt_beta: 0,
+            injected: 0,
+            pending_alpha: VecDeque::new(),
+            pending_beta: VecDeque::new(),
+            pending_p: VecDeque::new(),
+            pending_right: VecDeque::new(),
+            post: VecDeque::new(),
+            hits: VecDeque::new(),
+            pending_t: VecDeque::new(),
+            pending_t_right: VecDeque::new(),
+            anchor_dosage: if is_acc {
+                vec![f32::NAN; n_targets as usize]
+            } else {
+                Vec::new()
+            },
+            section_dosage: if is_acc {
+                vec![f32::NAN; n_targets as usize * sec_len]
+            } else {
+                Vec::new()
+            },
+        }
+    }
+
+    #[inline]
+    fn is_accumulator(&self) -> bool {
+        self.h == self.h_n - 1
+    }
+
+    pub fn sec_len(&self) -> usize {
+        self.sec_alleles.len()
+    }
+
+    #[inline]
+    fn emission(&self, target: u32) -> f32 {
+        let o = self.obs.get(target, self.m_abs);
+        if o < 0 {
+            1.0
+        } else if o == self.allele as i8 {
+            1.0 - self.err
+        } else {
+            self.err
+        }
+    }
+
+    fn alpha_done(&mut self, target: u32, alpha: f32, ctx: &mut Ctx<InterpMsg>) {
+        if self.k + 1 < self.k_n {
+            ctx.send(PORT_FWD, InterpMsg::Alpha { target, val: alpha });
+        }
+        self.pending_alpha.push_back((target, alpha));
+        self.try_posterior(ctx);
+    }
+
+    fn beta_done(&mut self, target: u32, beta: f32, ctx: &mut Ctx<InterpMsg>) {
+        if self.k > 0 {
+            let folded = beta * self.emission(target);
+            ctx.flop(1);
+            ctx.send(PORT_BWD, InterpMsg::Beta { target, val: folded });
+        }
+        self.pending_beta.push_back((target, beta));
+        self.try_posterior(ctx);
+    }
+
+    fn try_posterior(&mut self, ctx: &mut Ctx<InterpMsg>) {
+        while let (Some(&(ta, a)), Some(&(tb, b))) =
+            (self.pending_alpha.front(), self.pending_beta.front())
+        {
+            if ta != tb {
+                break;
+            }
+            self.pending_alpha.pop_front();
+            self.pending_beta.pop_front();
+            let p = a * b;
+            ctx.flop(1);
+            if self.is_accumulator() {
+                self.tally(ta, self.allele == 1, p, ctx);
+            } else {
+                ctx.send(
+                    PORT_DOWN,
+                    InterpMsg::Post {
+                        target: ta,
+                        allele1: self.allele == 1,
+                        val: p,
+                    },
+                );
+            }
+            if self.k > 0 {
+                // Our anchor posterior is the right endpoint of the left
+                // neighbour's section.
+                ctx.send(PORT_SECTION, InterpMsg::Section { target: ta, val: p });
+            }
+            if self.k + 1 < self.k_n {
+                self.pending_p.push_back((ta, p));
+                self.try_section(ctx);
+            }
+        }
+    }
+
+    /// Blend own + right anchor posteriors over the section (Fig 10).
+    fn try_section(&mut self, ctx: &mut Ctx<InterpMsg>) {
+        while let (Some(&(tp, p)), Some(&(tr, pr))) =
+            (self.pending_p.front(), self.pending_right.front())
+        {
+            if tp != tr {
+                break;
+            }
+            self.pending_p.pop_front();
+            self.pending_right.pop_front();
+            if self.sec_alleles.is_empty() {
+                continue;
+            }
+            let mut vals = [0.0f32; MAX_SECTION];
+            for (i, (&a, &f)) in self.sec_alleles.iter().zip(&self.sec_fracs).enumerate() {
+                let blended = p + f * (pr - p);
+                vals[i] = if a == 1 { blended } else { 0.0 };
+                ctx.flop(3);
+            }
+            if self.is_accumulator() {
+                let n = self.sec_alleles.len() as u8;
+                self.take_hits(tp, n, &vals, ctx);
+            } else {
+                ctx.send(
+                    PORT_DOWN,
+                    InterpMsg::HitVec {
+                        target: tp,
+                        n: self.sec_alleles.len() as u8,
+                        vals,
+                    },
+                );
+            }
+        }
+    }
+
+    fn tally(&mut self, target: u32, allele1: bool, val: f32, ctx: &mut Ctx<InterpMsg>) {
+        debug_assert!(self.is_accumulator());
+        let acc = match self.post.iter_mut().find(|p| p.target == target) {
+            Some(acc) => acc,
+            None => {
+                self.post.push_back(PostAcc {
+                    target,
+                    ..Default::default()
+                });
+                self.post.back_mut().unwrap()
+            }
+        };
+        if allele1 {
+            acc.hit += val;
+        }
+        acc.tot += val;
+        acc.cnt += 1;
+        ctx.flop(2);
+        if acc.cnt == self.h_n {
+            let (hit, tot) = (acc.hit, acc.tot);
+            self.post.retain(|p| p.target != target);
+            self.anchor_dosage[target as usize] = if tot > 0.0 { hit / tot } else { 0.0 };
+            ctx.flop(1);
+            if self.k > 0 {
+                ctx.send(PORT_TOT, InterpMsg::Tot { target, val: tot });
+            }
+            if self.k + 1 < self.k_n {
+                self.pending_t.push_back((target, tot));
+                self.try_finish_section(ctx);
+            }
+        }
+    }
+
+    fn take_hits(
+        &mut self,
+        target: u32,
+        n: u8,
+        vals: &[f32; MAX_SECTION],
+        ctx: &mut Ctx<InterpMsg>,
+    ) {
+        debug_assert!(self.is_accumulator());
+        assert_eq!(n as usize, self.sec_alleles.len(), "hit-vector length");
+        let acc = match self.hits.iter_mut().find(|a| a.target == target) {
+            Some(acc) => acc,
+            None => {
+                self.hits.push_back(HitAcc {
+                    target,
+                    vals: [0.0; MAX_SECTION],
+                    cnt: 0,
+                });
+                self.hits.back_mut().unwrap()
+            }
+        };
+        for i in 0..n as usize {
+            acc.vals[i] += vals[i];
+            ctx.flop(1);
+        }
+        acc.cnt += 1;
+        self.try_finish_section(ctx);
+    }
+
+    /// Finish intermediate-marker dosages once hit sums and both anchor
+    /// totals are available for the front target.
+    fn try_finish_section(&mut self, ctx: &mut Ctx<InterpMsg>) {
+        loop {
+            let Some(hit) = self.hits.front() else { break };
+            if hit.cnt < self.h_n {
+                break;
+            }
+            let target = hit.target;
+            let Some(&(tt, t_own)) = self.pending_t.front() else { break };
+            let Some(&(ttr, t_right)) = self.pending_t_right.front() else {
+                break;
+            };
+            if tt != target || ttr != target {
+                break;
+            }
+            let vals = hit.vals;
+            self.hits.pop_front();
+            self.pending_t.pop_front();
+            self.pending_t_right.pop_front();
+            let sec_len = self.sec_alleles.len();
+            for i in 0..sec_len {
+                let tot = t_own + self.sec_fracs[i] * (t_right - t_own);
+                ctx.flop(3);
+                self.section_dosage[target as usize * sec_len + i] =
+                    if tot > 0.0 { vals[i] / tot } else { 0.0 };
+            }
+        }
+    }
+}
+
+impl Device for InterpVertex {
+    type Msg = InterpMsg;
+
+    fn init(&mut self, _ctx: &mut Ctx<InterpMsg>) {}
+
+    fn recv(&mut self, msg: &InterpMsg, src: VertexId, ctx: &mut Ctx<InterpMsg>) {
+        match *msg {
+            InterpMsg::Alpha { target, val } => {
+                assert_eq!(target, self.tgt_alpha, "α wave out of order");
+                let same = src % self.h_n == self.h;
+                let a_ij = if same { self.a_same } else { self.a_diff };
+                self.acc_alpha += a_ij * val;
+                self.cnt_alpha += 1;
+                ctx.flop(2);
+                if self.cnt_alpha == self.h_n {
+                    let alpha = self.acc_alpha * self.emission(target);
+                    ctx.flop(1);
+                    self.acc_alpha = 0.0;
+                    self.cnt_alpha = 0;
+                    self.tgt_alpha += 1;
+                    self.alpha_done(target, alpha, ctx);
+                }
+            }
+            InterpMsg::Beta { target, val } => {
+                assert_eq!(target, self.tgt_beta, "β wave out of order");
+                let same = src % self.h_n == self.h;
+                let a_ij = if same {
+                    self.a_same_next
+                } else {
+                    self.a_diff_next
+                };
+                self.acc_beta += a_ij * val;
+                self.cnt_beta += 1;
+                ctx.flop(2);
+                if self.cnt_beta == self.h_n {
+                    let beta = self.acc_beta;
+                    self.acc_beta = 0.0;
+                    self.cnt_beta = 0;
+                    self.tgt_beta += 1;
+                    self.beta_done(target, beta, ctx);
+                }
+            }
+            InterpMsg::Post {
+                target,
+                allele1,
+                val,
+            } => self.tally(target, allele1, val, ctx),
+            InterpMsg::Section { target, val } => {
+                self.pending_right.push_back((target, val));
+                self.try_section(ctx);
+            }
+            InterpMsg::HitVec { target, n, vals } => self.take_hits(target, n, &vals, ctx),
+            InterpMsg::Tot { target, val } => {
+                self.pending_t_right.push_back((target, val));
+                self.try_finish_section(ctx);
+            }
+        }
+    }
+
+    fn step(&mut self, ctx: &mut Ctx<InterpMsg>) -> bool {
+        if self.k == 0 && self.injected < self.n_targets {
+            let target = self.injected;
+            self.injected += 1;
+            self.tgt_alpha = target + 1;
+            self.alpha_done(target, 1.0 / self.h_n as f32, ctx);
+            return true;
+        }
+        if self.k == self.k_n - 1 && self.injected < self.n_targets {
+            let target = self.injected;
+            self.injected += 1;
+            self.tgt_beta = target + 1;
+            self.beta_done(target, 1.0, ctx);
+            return true;
+        }
+        false
+    }
+}

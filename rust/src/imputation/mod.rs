@@ -1,0 +1,20 @@
+//! The paper's contribution: event-driven genotype imputation (§5).
+//!
+//! * [`msg`] — 64-byte event payloads (α/β/posterior plus interpolation).
+//! * [`obs`] — shared target-observation storage (board-DRAM model).
+//! * [`vertex`] / [`app`] — the raw model: one vertex per HMM state,
+//!   Algorithm 1 handlers, target-haplotype pipelining, soft-scheduling.
+//! * [`interp_vertex`] / [`interp_app`] — the linear-interpolation variant:
+//!   one vertex per state *section* (1 HMM state + N interpolation states).
+//! * [`analytic`] — closed-form step-time predictor, cross-validated against
+//!   the DES and used to extrapolate figure sweeps to full paper scale.
+
+pub mod analytic;
+pub mod app;
+pub mod interp_app;
+pub mod interp_vertex;
+pub mod msg;
+pub mod obs;
+pub mod vertex;
+
+pub use app::{EventRunResult, RawAppConfig, build_raw_graph, run_raw};

@@ -1,0 +1,65 @@
+//! Event payloads for the imputation applications.
+//!
+//! Every variant fits the 64-byte Tinsel event budget (asserted by the
+//! simulator at load time).  Events carry the target-haplotype index so the
+//! pipelined waves of different targets can be disentangled — and so the
+//! vertices can *assert* no cross-target contamination, the hazard the
+//! paper's synchronised stepping exists to prevent.
+
+/// Maximum linear-interpolation section length (1 HMM state + 11 interp
+/// states) such that a per-section hit-vector still fits one event.
+pub const MAX_SECTION: usize = 12;
+
+/// Raw-model event (paper Algorithm 1: msgType ∈ {alpha, beta, posterior}).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RawMsg {
+    /// Forward variable of the sending vertex (receiver applies `a_ij`).
+    Alpha { target: u32, val: f32 },
+    /// Backward variable of the sender, pre-multiplied by the sender's own
+    /// emission `b_j(O_{m+1})` (receiver applies `a_ij`).
+    Beta { target: u32, val: f32 },
+    /// Posterior probability of one state, labelled with its allele, unicast
+    /// down the column to the accumulating vertex.
+    Post { target: u32, allele1: bool, val: f32 },
+}
+
+/// Linear-interpolation event (paper §5.3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InterpMsg {
+    /// As in the raw model, but over the anchor (annotated-marker) grid.
+    Alpha { target: u32, val: f32 },
+    Beta { target: u32, val: f32 },
+    Post { target: u32, allele1: bool, val: f32 },
+    /// Anchor posterior of vertex (h, k), sent right→left so the section
+    /// owner (h, k-1) can interpolate its intermediate states.
+    Section { target: u32, val: f32 },
+    /// Per-intermediate-marker allele-1 posterior contributions of one
+    /// haplotype's section, packed into a single event.
+    HitVec {
+        target: u32,
+        n: u8,
+        vals: [f32; MAX_SECTION],
+    },
+    /// Column posterior total of anchor k, sent right→left between
+    /// accumulators so intermediate totals can be interpolated.
+    Tot { target: u32, val: f32 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_msg_fits_event_budget() {
+        assert!(std::mem::size_of::<RawMsg>() <= 56);
+    }
+
+    #[test]
+    fn interp_msg_fits_event_budget() {
+        assert!(
+            std::mem::size_of::<InterpMsg>() <= 56,
+            "InterpMsg is {} bytes",
+            std::mem::size_of::<InterpMsg>()
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Shared target-observation storage.
+//!
+//! On the real cluster the host injects each target haplotype's annotated
+//! bases into the vertices step by step (Algorithm 1 line 26, "Inject next
+//! target haplotype").  In the simulator the full observation matrix lives in
+//! one shared allocation (it models the board DRAM the panel/targets are
+//! staged in) and vertices read their own marker's column on demand.
+
+use std::sync::Arc;
+
+use crate::model::panel::TargetHaplotype;
+
+/// Dense `[n_targets × n_mark]` observation matrix: -1 unannotated, else 0/1.
+#[derive(Debug)]
+pub struct ObsMatrix {
+    n_targets: usize,
+    n_mark: usize,
+    obs: Vec<i8>,
+}
+
+impl ObsMatrix {
+    pub fn from_targets(targets: &[TargetHaplotype]) -> Arc<ObsMatrix> {
+        assert!(!targets.is_empty(), "need at least one target");
+        let n_mark = targets[0].n_mark();
+        let mut obs = Vec::with_capacity(targets.len() * n_mark);
+        for t in targets {
+            assert_eq!(t.n_mark(), n_mark, "ragged target set");
+            obs.extend_from_slice(&t.obs);
+        }
+        Arc::new(ObsMatrix {
+            n_targets: targets.len(),
+            n_mark,
+            obs,
+        })
+    }
+
+    #[inline]
+    pub fn get(&self, target: u32, mark: u32) -> i8 {
+        debug_assert!((target as usize) < self.n_targets);
+        debug_assert!((mark as usize) < self.n_mark);
+        self.obs[target as usize * self.n_mark + mark as usize]
+    }
+
+    pub fn n_targets(&self) -> usize {
+        self.n_targets
+    }
+
+    pub fn n_mark(&self) -> usize {
+        self.n_mark
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t1 = TargetHaplotype::new(vec![-1, 0, 1]);
+        let t2 = TargetHaplotype::new(vec![1, -1, -1]);
+        let m = ObsMatrix::from_targets(&[t1, t2]);
+        assert_eq!(m.n_targets(), 2);
+        assert_eq!(m.n_mark(), 3);
+        assert_eq!(m.get(0, 0), -1);
+        assert_eq!(m.get(0, 2), 1);
+        assert_eq!(m.get(1, 0), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn rejects_ragged() {
+        ObsMatrix::from_targets(&[
+            TargetHaplotype::new(vec![0]),
+            TargetHaplotype::new(vec![0, 1]),
+        ]);
+    }
+}

@@ -1,0 +1,369 @@
+//! The raw-model state vertex — paper Algorithm 1, one HMM state per vertex.
+//!
+//! Ports (fixed order, empty destination lists at the panel edges):
+//! * `PORT_FWD` (0) — multicast α to every vertex of the next column.
+//! * `PORT_BWD` (1) — multicast β·b to every vertex of the previous column.
+//! * `PORT_DOWN` (2) — unicast posterior to the column's accumulating vertex
+//!   (the "final haplotype" vertex, h = H−1), which tallies allele-labelled
+//!   posterior mass and makes the major/minor call.
+//!
+//! Target-haplotype pipelining: column 0 / column M−1 vertices inject the
+//! next target's α/β at every global step (lines 26–28), so consecutive
+//! targets travel the panel one column apart.  Computed α values wait in a
+//! per-vertex ring until the matching β wave arrives (and vice versa); the
+//! rings are keyed by target index and every arrival asserts target ordering
+//! — the cross-contamination hazard the synchronised stepping prevents.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::graph::device::{Ctx, Device, PortId, VertexId};
+
+use super::msg::RawMsg;
+use super::obs::ObsMatrix;
+
+pub const PORT_FWD: PortId = 0;
+pub const PORT_BWD: PortId = 1;
+pub const PORT_DOWN: PortId = 2;
+
+/// Per-target posterior tally at an accumulating vertex.
+#[derive(Clone, Copy, Debug, Default)]
+struct PostAcc {
+    target: u32,
+    hit: f32,
+    tot: f32,
+    cnt: u32,
+}
+
+/// One HMM state (reference haplotype `h`, marker `m`).
+pub struct RawVertex {
+    pub h: u32,
+    pub m: u32,
+    h_n: u32,
+    m_n: u32,
+    /// Reference allele labelling this state.
+    allele: u8,
+    /// Transition factors *into this column* (τ_m): stay / jump.
+    a_same: f32,
+    a_diff: f32,
+    /// Transition factors into the previous column (τ_{m+1} as seen from
+    /// m; used when receiving β from column m+1 — β recurrence uses the
+    /// sender column's τ). Zero at the last column.
+    a_same_next: f32,
+    a_diff_next: f32,
+    err: f32,
+    n_targets: u32,
+    obs: Arc<ObsMatrix>,
+
+    // Forward accumulation (Algorithm 1 lines 4–13).
+    acc_alpha: f32,
+    cnt_alpha: u32,
+    tgt_alpha: u32,
+    // Backward accumulation (lines 14–22).
+    acc_beta: f32,
+    cnt_beta: u32,
+    tgt_beta: u32,
+    // Injection bookkeeping (edge columns).
+    injected: u32,
+    // Computed values awaiting their partner, ordered by target.
+    pending_alpha: VecDeque<(u32, f32)>,
+    pending_beta: VecDeque<(u32, f32)>,
+    // Accumulator role (h == H−1 only).
+    post: VecDeque<PostAcc>,
+    /// Finished dosages (target-indexed), accumulator vertices only.
+    pub dosage: Vec<f32>,
+}
+
+impl RawVertex {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        h: u32,
+        m: u32,
+        h_n: u32,
+        m_n: u32,
+        allele: u8,
+        tau_m: f64,
+        tau_next: f64,
+        err: f64,
+        n_targets: u32,
+        obs: Arc<ObsMatrix>,
+    ) -> RawVertex {
+        let hn = h_n as f64;
+        RawVertex {
+            h,
+            m,
+            h_n,
+            m_n,
+            allele,
+            a_same: ((1.0 - tau_m) + tau_m / hn) as f32,
+            a_diff: (tau_m / hn) as f32,
+            a_same_next: ((1.0 - tau_next) + tau_next / hn) as f32,
+            a_diff_next: (tau_next / hn) as f32,
+            err: err as f32,
+            n_targets,
+            obs,
+            acc_alpha: 0.0,
+            cnt_alpha: 0,
+            tgt_alpha: 0,
+            acc_beta: 0.0,
+            cnt_beta: 0,
+            tgt_beta: 0,
+            injected: 0,
+            pending_alpha: VecDeque::new(),
+            pending_beta: VecDeque::new(),
+            post: VecDeque::new(),
+            dosage: if h == h_n - 1 {
+                vec![f32::NAN; n_targets as usize]
+            } else {
+                Vec::new()
+            },
+        }
+    }
+
+    #[inline]
+    fn is_accumulator(&self) -> bool {
+        self.h == self.h_n - 1
+    }
+
+    /// Emission `b_h(O_m)` for one target at this vertex's marker.
+    #[inline]
+    fn emission(&self, target: u32) -> f32 {
+        let o = self.obs.get(target, self.m);
+        if o < 0 {
+            1.0
+        } else if o == self.allele as i8 {
+            1.0 - self.err
+        } else {
+            self.err
+        }
+    }
+
+    /// α complete for `target` → forward it, then try to pair a posterior.
+    fn alpha_done(&mut self, target: u32, alpha: f32, ctx: &mut Ctx<RawMsg>) {
+        if self.m + 1 < self.m_n {
+            ctx.send(PORT_FWD, RawMsg::Alpha { target, val: alpha });
+        }
+        self.pending_alpha.push_back((target, alpha));
+        self.try_posterior(ctx);
+    }
+
+    /// β complete for `target` → forward β·b backward, then try to pair.
+    fn beta_done(&mut self, target: u32, beta: f32, ctx: &mut Ctx<RawMsg>) {
+        if self.m > 0 {
+            let folded = beta * self.emission(target);
+            ctx.flop(1);
+            ctx.send(PORT_BWD, RawMsg::Beta { target, val: folded });
+        }
+        self.pending_beta.push_back((target, beta));
+        self.try_posterior(ctx);
+    }
+
+    /// Pair matching (α, β) fronts → posterior → unicast / local tally
+    /// (Algorithm 1 lines 9–11 / 18–20).
+    fn try_posterior(&mut self, ctx: &mut Ctx<RawMsg>) {
+        while let (Some(&(ta, a)), Some(&(tb, b))) =
+            (self.pending_alpha.front(), self.pending_beta.front())
+        {
+            if ta != tb {
+                // Rings are target-ordered; the smaller one waits for its
+                // partner. (They can differ by many targets mid-panel.)
+                if ta < tb {
+                    debug_assert!(
+                        self.pending_beta.iter().all(|&(t, _)| t > ta),
+                        "cross-target contamination at v=({},{})",
+                        self.h,
+                        self.m
+                    );
+                }
+                break;
+            }
+            self.pending_alpha.pop_front();
+            self.pending_beta.pop_front();
+            let p = a * b;
+            ctx.flop(1);
+            if self.is_accumulator() {
+                self.tally(ta, self.allele == 1, p, ctx);
+            } else {
+                ctx.send(
+                    PORT_DOWN,
+                    RawMsg::Post {
+                        target: ta,
+                        allele1: self.allele == 1,
+                        val: p,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Accumulate one posterior contribution (line 23–25 + step-four call).
+    fn tally(&mut self, target: u32, allele1: bool, val: f32, ctx: &mut Ctx<RawMsg>) {
+        debug_assert!(self.is_accumulator());
+        let acc = match self.post.iter_mut().find(|p| p.target == target) {
+            Some(acc) => acc,
+            None => {
+                self.post.push_back(PostAcc {
+                    target,
+                    ..Default::default()
+                });
+                self.post.back_mut().unwrap()
+            }
+        };
+        if allele1 {
+            acc.hit += val;
+        }
+        acc.tot += val;
+        acc.cnt += 1;
+        ctx.flop(2);
+        if acc.cnt == self.h_n {
+            let dosage = if acc.tot > 0.0 { acc.hit / acc.tot } else { 0.0 };
+            ctx.flop(1);
+            self.dosage[target as usize] = dosage;
+            let t = acc.target;
+            self.post.retain(|p| p.target != t);
+        }
+    }
+}
+
+impl Device for RawVertex {
+    type Msg = RawMsg;
+
+    fn init(&mut self, _ctx: &mut Ctx<RawMsg>) {
+        // Injection happens in the step handler so that init stays cheap on
+        // every vertex (the real cluster broadcasts one 'start' event).
+    }
+
+    fn recv(&mut self, msg: &RawMsg, src: VertexId, ctx: &mut Ctx<RawMsg>) {
+        match *msg {
+            RawMsg::Alpha { target, val } => {
+                assert_eq!(
+                    target, self.tgt_alpha,
+                    "α wave out of order at ({}, {})",
+                    self.h, self.m
+                );
+                // a_ij depends on whether sender and receiver share a haplotype.
+                let same = src % self.h_n == self.h;
+                let a_ij = if same { self.a_same } else { self.a_diff };
+                self.acc_alpha += a_ij * val;
+                self.cnt_alpha += 1;
+                ctx.flop(2);
+                if self.cnt_alpha == self.h_n {
+                    let alpha = self.acc_alpha * self.emission(target);
+                    ctx.flop(1);
+                    self.acc_alpha = 0.0;
+                    self.cnt_alpha = 0;
+                    self.tgt_alpha += 1;
+                    self.alpha_done(target, alpha, ctx);
+                }
+            }
+            RawMsg::Beta { target, val } => {
+                assert_eq!(
+                    target, self.tgt_beta,
+                    "β wave out of order at ({}, {})",
+                    self.h, self.m
+                );
+                let same = src % self.h_n == self.h;
+                let a_ij = if same { self.a_same_next } else { self.a_diff_next };
+                self.acc_beta += a_ij * val;
+                self.cnt_beta += 1;
+                ctx.flop(2);
+                if self.cnt_beta == self.h_n {
+                    let beta = self.acc_beta;
+                    self.acc_beta = 0.0;
+                    self.cnt_beta = 0;
+                    self.tgt_beta += 1;
+                    self.beta_done(target, beta, ctx);
+                }
+            }
+            RawMsg::Post {
+                target,
+                allele1,
+                val,
+            } => self.tally(target, allele1, val, ctx),
+        }
+    }
+
+    fn step(&mut self, ctx: &mut Ctx<RawMsg>) -> bool {
+        // Algorithm 1 lines 26–28: inject the next target haplotype.
+        if self.m == 0 && self.injected < self.n_targets {
+            let target = self.injected;
+            self.injected += 1;
+            let alpha = 1.0 / self.h_n as f32;
+            self.tgt_alpha = target + 1; // α is known, never received
+            self.alpha_done(target, alpha, ctx);
+            return true;
+        }
+        if self.m == self.m_n - 1 && self.injected < self.n_targets {
+            let target = self.injected;
+            self.injected += 1;
+            self.tgt_beta = target + 1;
+            self.beta_done(target, 1.0, ctx);
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::panel::TargetHaplotype;
+
+    fn mk(h: u32, m: u32) -> RawVertex {
+        let obs = ObsMatrix::from_targets(&[TargetHaplotype::new(vec![1, -1, 0])]);
+        RawVertex::new(h, m, 2, 3, 1, 0.1, 0.2, 1e-4, 1, obs)
+    }
+
+    #[test]
+    fn emission_uses_own_marker() {
+        let v = mk(0, 0);
+        assert!((v.emission(0) - (1.0 - 1e-4)).abs() < 1e-9); // obs 1, allele 1
+        let v = mk(0, 1);
+        assert_eq!(v.emission(0), 1.0); // unannotated
+        let v = mk(0, 2);
+        assert!((v.emission(0) - 1e-4).abs() < 1e-9); // obs 0 vs allele 1
+    }
+
+    #[test]
+    fn transition_factors_normalised() {
+        let v = mk(0, 1);
+        let row = v.a_same as f64 + v.a_diff as f64; // H=2: one same + one diff
+        assert!((row - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accumulator_is_last_haplotype() {
+        assert!(!mk(0, 0).is_accumulator());
+        assert!(mk(1, 0).is_accumulator());
+    }
+
+    #[test]
+    fn step_injects_each_target_once() {
+        let mut v = mk(0, 0); // column 0 vertex
+        let mut ctx = Ctx::new(0, 0);
+        assert!(v.step(&mut ctx)); // injects target 0
+        let sends = ctx.take_sends();
+        assert_eq!(sends.len(), 1);
+        assert!(matches!(
+            sends[0],
+            (PORT_FWD, RawMsg::Alpha { target: 0, .. })
+        ));
+        assert!(!v.step(&mut ctx)); // only 1 target configured
+        assert!(ctx.take_sends().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn detects_wave_disorder() {
+        let mut v = mk(0, 1);
+        let mut ctx = Ctx::new(0, 0);
+        v.recv(
+            &RawMsg::Alpha {
+                target: 5,
+                val: 0.1,
+            },
+            0,
+            &mut ctx,
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! # poets-impute
+//!
+//! A full reproduction of *"An Event-Driven Approach To Genotype Imputation On A
+//! Custom RISC-V FPGA Cluster"* (Morris et al., CS.DC 2023) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper maps the Li & Stephens imputation HMM onto POETS, an event-driven
+//! RISC-V NoC FPGA cluster, and evaluates scaling, soft-scheduling and a linear
+//! interpolation optimisation against a single-threaded x86 baseline. This crate
+//! rebuilds every layer of that system:
+//!
+//! * [`model`] — the Li & Stephens mathematics plus the paper's x86-style
+//!   baseline implementation (three nested loops) and linear interpolation.
+//! * [`workload`] — synthetic reference-panel / genetic-map generation following
+//!   the paper's §6.2 recipe (diallelic, 5 % MAF, 1/100 or 1/10 marker ratios).
+//! * [`poets`] — a cycle-approximate functional + timing simulator of the POETS
+//!   cluster: topology, NoC, mailboxes, hardware multicast, termination
+//!   detection, discrete-event core and a calibrated cost model.
+//! * [`graph`] — a POLite-like application-graph framework with manual 2-D and
+//!   partitioner-based vertex→thread mapping (soft-scheduling).
+//! * [`imputation`] — the paper's contribution: Algorithm 1 as event-driven
+//!   vertices, target-haplotype pipelining, and linear-interpolation sections.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) used as the fast compute plane and as the oracle.
+//! * [`bench`] — harnesses that regenerate every figure in the paper's
+//!   evaluation (Fig 11, 12, 13 plus claim checks).
+//! * [`util`], [`cli`] — offline-friendly substrates (RNG, JSON, tables,
+//!   property-testing, argument parsing) written against std only.
+
+pub mod bench;
+pub mod cli;
+pub mod graph;
+pub mod imputation;
+pub mod model;
+pub mod poets;
+pub mod runtime;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,9 @@
+//! Leader entrypoint for the `poets-impute` CLI.
+//!
+//! See `poets-impute help` for the list of subcommands. The binary is fully
+//! self-contained at run time: Python/JAX participate only in `make artifacts`.
+
+fn main() {
+    let code = poets_impute::cli::run(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

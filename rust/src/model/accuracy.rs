@@ -1,0 +1,145 @@
+//! Imputation-quality metrics: concordance and dosage r².
+//!
+//! Scored only at *masked* markers (the ones the engine had to infer) — the
+//! annotated ones were given away.  Dosage r² (squared Pearson correlation
+//! between dosage and truth) is the field-standard imputation quality metric.
+
+use crate::util::stats;
+
+use super::panel::TargetHaplotype;
+
+/// Accuracy summary for one imputed target.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Accuracy {
+    /// Fraction of masked markers whose hard call matches the truth.
+    pub concordance: f64,
+    /// Concordance restricted to markers where the truth is the minor allele
+    /// (the hard part — majority-vote gets the major ones for free).
+    pub minor_concordance: f64,
+    /// Squared Pearson correlation between dosage and truth at masked markers.
+    pub dosage_r2: f64,
+    /// Number of masked (scored) markers.
+    pub n_scored: usize,
+}
+
+/// Score one imputation against the withheld truth.
+pub fn score(dosage: &[f32], truth: &[u8], target: &TargetHaplotype) -> Accuracy {
+    assert_eq!(dosage.len(), truth.len());
+    assert_eq!(dosage.len(), target.obs.len());
+    let mut hits = 0usize;
+    let mut minor_hits = 0usize;
+    let mut minor_total = 0usize;
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for m in 0..dosage.len() {
+        if target.obs[m] >= 0 {
+            continue; // annotated: not imputed, not scored
+        }
+        let call = u8::from(dosage[m] > 0.5);
+        hits += usize::from(call == truth[m]);
+        if truth[m] == 1 {
+            minor_total += 1;
+            minor_hits += usize::from(call == 1);
+        }
+        xs.push(dosage[m] as f64);
+        ys.push(truth[m] as f64);
+    }
+    let n_scored = xs.len();
+    let r = stats::pearson(&xs, &ys);
+    Accuracy {
+        concordance: if n_scored > 0 {
+            hits as f64 / n_scored as f64
+        } else {
+            0.0
+        },
+        minor_concordance: if minor_total > 0 {
+            minor_hits as f64 / minor_total as f64
+        } else {
+            1.0
+        },
+        dosage_r2: r * r,
+        n_scored,
+    }
+}
+
+/// Aggregate accuracies across a batch of targets (weighted by markers scored).
+pub fn aggregate(accs: &[Accuracy]) -> Accuracy {
+    let total: usize = accs.iter().map(|a| a.n_scored).sum();
+    if total == 0 {
+        return Accuracy::default();
+    }
+    let w = |f: fn(&Accuracy) -> f64| -> f64 {
+        accs.iter()
+            .map(|a| f(a) * a.n_scored as f64)
+            .sum::<f64>()
+            / total as f64
+    };
+    Accuracy {
+        concordance: w(|a| a.concordance),
+        minor_concordance: w(|a| a.minor_concordance),
+        dosage_r2: w(|a| a.dosage_r2),
+        n_scored: total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_imputation_scores_one() {
+        let truth = vec![0, 1, 0, 1];
+        let target = TargetHaplotype::new(vec![0, -1, -1, -1]);
+        let dosage = vec![0.0, 0.9, 0.1, 0.8];
+        let a = score(&dosage, &truth, &target);
+        assert_eq!(a.n_scored, 3);
+        assert_eq!(a.concordance, 1.0);
+        assert_eq!(a.minor_concordance, 1.0);
+        assert!(a.dosage_r2 > 0.9);
+    }
+
+    #[test]
+    fn wrong_calls_counted() {
+        let truth = vec![1, 1, 0, 0];
+        let target = TargetHaplotype::new(vec![-1; 4]);
+        let dosage = vec![0.1, 0.9, 0.2, 0.8]; // wrong at 0 and 3
+        let a = score(&dosage, &truth, &target);
+        assert_eq!(a.concordance, 0.5);
+        assert_eq!(a.minor_concordance, 0.5);
+    }
+
+    #[test]
+    fn annotated_markers_excluded() {
+        let truth = vec![1, 0];
+        let target = TargetHaplotype::new(vec![1, -1]);
+        let dosage = vec![0.0 /* wrong but annotated */, 0.1];
+        let a = score(&dosage, &truth, &target);
+        assert_eq!(a.n_scored, 1);
+        assert_eq!(a.concordance, 1.0);
+    }
+
+    #[test]
+    fn aggregate_weights_by_count() {
+        let a = Accuracy {
+            concordance: 1.0,
+            minor_concordance: 1.0,
+            dosage_r2: 1.0,
+            n_scored: 10,
+        };
+        let b = Accuracy {
+            concordance: 0.0,
+            minor_concordance: 0.0,
+            dosage_r2: 0.0,
+            n_scored: 30,
+        };
+        let agg = aggregate(&[a, b]);
+        assert!((agg.concordance - 0.25).abs() < 1e-12);
+        assert_eq!(agg.n_scored, 40);
+    }
+
+    #[test]
+    fn empty_aggregate_is_default() {
+        let agg = aggregate(&[]);
+        assert_eq!(agg.n_scored, 0);
+    }
+}

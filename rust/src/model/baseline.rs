@@ -1,0 +1,435 @@
+//! The single-threaded baseline — paper §6.1.
+//!
+//! Two arithmetic formulations, same results:
+//!
+//! * [`Method::DenseThreeLoop`] — the paper's baseline verbatim: "three simple
+//!   for loops", the innermost computing one alpha/beta from all |H| values of
+//!   the neighbouring column via eqs. (2)/(3).  O(H²M) — the same number of
+//!   multiply-accumulate terms the event-driven graph evaluates with one
+//!   message each, so figure speedups compare matched optimisation levels.
+//! * [`Method::Rank1`] — the O(HM) form using the rank-1 structure of the
+//!   transition matrix (one column-sum per step).  This is the "further
+//!   optimised x86" used for honesty checks and is the arithmetic the Pallas
+//!   kernels/XLA plane implement.
+//!
+//! Arithmetic is generic over [`Real`] (f32 to match the event-driven
+//! vertices' message payloads; f64 as the oracle).
+
+use super::panel::{ReferencePanel, TargetHaplotype};
+use super::params::ModelParams;
+
+/// Minimal float abstraction so the same recursion checks f32 vs f64.
+pub trait Real:
+    Copy
+    + PartialOrd
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::fmt::Debug
+{
+    fn from64(x: f64) -> Self;
+    fn to64(self) -> f64;
+    const ZERO: Self;
+    const ONE: Self;
+}
+
+impl Real for f32 {
+    #[inline]
+    fn from64(x: f64) -> f32 {
+        x as f32
+    }
+    #[inline]
+    fn to64(self) -> f64 {
+        self as f64
+    }
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+}
+
+impl Real for f64 {
+    #[inline]
+    fn from64(x: f64) -> f64 {
+        x
+    }
+    #[inline]
+    fn to64(self) -> f64 {
+        self
+    }
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+}
+
+/// Which baseline formulation to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    DenseThreeLoop,
+    Rank1,
+}
+
+/// Imputation output for one target haplotype.
+#[derive(Clone, Debug)]
+pub struct ImputeOut<T = f32> {
+    /// Allele-1 dosage per marker (column-normalised posterior mass on
+    /// allele-1 states).
+    pub dosage: Vec<T>,
+}
+
+impl<T: Real> ImputeOut<T> {
+    /// Hard-called alleles (major/minor decision, paper §5.2 step four).
+    pub fn hard_calls(&self) -> Vec<u8> {
+        self.dosage
+            .iter()
+            .map(|d| u8::from(d.to64() > 0.5))
+            .collect()
+    }
+}
+
+/// The baseline imputation engine.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Baseline {
+    pub params: ModelParams,
+}
+
+impl Baseline {
+    pub fn new(params: ModelParams) -> Self {
+        Baseline { params }
+    }
+
+    /// τ per column (τ[0] unused, kept for regular indexing).
+    pub fn taus(&self, panel: &ReferencePanel) -> Vec<f64> {
+        (0..panel.n_mark())
+            .map(|m| {
+                if m == 0 {
+                    0.0
+                } else {
+                    self.params.tau(panel.gen_dist(m), panel.n_hap())
+                }
+            })
+            .collect()
+    }
+
+    /// Forward variables, flattened `[m * H + h]`.
+    pub fn forward<T: Real>(
+        &self,
+        panel: &ReferencePanel,
+        target: &TargetHaplotype,
+        method: Method,
+    ) -> Vec<T> {
+        let (h_n, m_n) = (panel.n_hap(), panel.n_mark());
+        assert_eq!(target.n_mark(), m_n, "target/panel marker count mismatch");
+        let taus = self.taus(panel);
+        let mut alphas = vec![T::ZERO; h_n * m_n];
+        let init = T::from64(1.0 / h_n as f64);
+        for h in 0..h_n {
+            alphas[h] = init; // Algorithm 1 line 2: alpha <- 1/|H| at m=1.
+        }
+        for m in 1..m_n {
+            let tau = taus[m];
+            let a_same = T::from64(self.params.a_same(tau, h_n));
+            let a_diff = T::from64(self.params.a_diff(tau, h_n));
+            let (prev, cur) = alphas.split_at_mut(m * h_n);
+            let prev = &prev[(m - 1) * h_n..];
+            let cur = &mut cur[..h_n];
+            match method {
+                Method::DenseThreeLoop => {
+                    // Paper baseline: innermost loop gathers all |H| terms.
+                    for j in 0..h_n {
+                        let mut acc = T::ZERO;
+                        for (i, &p) in prev.iter().enumerate() {
+                            let a_ij = if i == j { a_same } else { a_diff };
+                            acc = acc + p * a_ij;
+                        }
+                        let b = T::from64(self.params.emission(panel.allele(j, m), target.obs[m]));
+                        cur[j] = acc * b;
+                    }
+                }
+                Method::Rank1 => {
+                    // a_same = (1-τ) + τ/H and a_diff = τ/H, so the gather is
+                    // (1-τ)·prev[j] + (τ/H)·Σ prev.
+                    let mut sum = T::ZERO;
+                    for &p in prev.iter() {
+                        sum = sum + p;
+                    }
+                    let keep = a_same - a_diff; // (1-τ)
+                    let leak = a_diff * sum; // (τ/H)·Σ
+                    for j in 0..h_n {
+                        let b = T::from64(self.params.emission(panel.allele(j, m), target.obs[m]));
+                        cur[j] = (keep * prev[j] + leak) * b;
+                    }
+                }
+            }
+        }
+        alphas
+    }
+
+    /// Backward variables, flattened `[m * H + h]`.
+    pub fn backward<T: Real>(
+        &self,
+        panel: &ReferencePanel,
+        target: &TargetHaplotype,
+        method: Method,
+    ) -> Vec<T> {
+        let (h_n, m_n) = (panel.n_hap(), panel.n_mark());
+        assert_eq!(target.n_mark(), m_n, "target/panel marker count mismatch");
+        let taus = self.taus(panel);
+        let mut betas = vec![T::ZERO; h_n * m_n];
+        for h in 0..h_n {
+            betas[(m_n - 1) * h_n + h] = T::ONE; // Algorithm 1: beta <- 1 at m=M.
+        }
+        for m in (0..m_n - 1).rev() {
+            let tau = taus[m + 1];
+            let a_same = T::from64(self.params.a_same(tau, h_n));
+            let a_diff = T::from64(self.params.a_diff(tau, h_n));
+            // g_j = b_j(O_{m+1}) * beta_{m+1}(j)
+            let mut g = vec![T::ZERO; h_n];
+            for (j, gj) in g.iter_mut().enumerate() {
+                let b = T::from64(
+                    self.params
+                        .emission(panel.allele(j, m + 1), target.obs[m + 1]),
+                );
+                *gj = b * betas[(m + 1) * h_n + j];
+            }
+            match method {
+                Method::DenseThreeLoop => {
+                    for i in 0..h_n {
+                        let mut acc = T::ZERO;
+                        for (j, &gj) in g.iter().enumerate() {
+                            let a_ij = if i == j { a_same } else { a_diff };
+                            acc = acc + a_ij * gj;
+                        }
+                        betas[m * h_n + i] = acc;
+                    }
+                }
+                Method::Rank1 => {
+                    let mut sum = T::ZERO;
+                    for &gj in g.iter() {
+                        sum = sum + gj;
+                    }
+                    let keep = a_same - a_diff;
+                    let leak = a_diff * sum;
+                    for i in 0..h_n {
+                        betas[m * h_n + i] = keep * g[i] + leak;
+                    }
+                }
+            }
+        }
+        betas
+    }
+
+    /// Posterior allele-1 dosage per marker from precomputed sweeps.
+    pub fn dosage<T: Real>(
+        &self,
+        panel: &ReferencePanel,
+        alphas: &[T],
+        betas: &[T],
+    ) -> Vec<T> {
+        let (h_n, m_n) = (panel.n_hap(), panel.n_mark());
+        assert_eq!(alphas.len(), h_n * m_n);
+        assert_eq!(betas.len(), h_n * m_n);
+        let mut out = Vec::with_capacity(m_n);
+        for m in 0..m_n {
+            let mut tot = T::ZERO;
+            let mut hit = T::ZERO;
+            for h in 0..h_n {
+                let p = alphas[m * h_n + h] * betas[m * h_n + h];
+                tot = tot + p;
+                if panel.allele(h, m) == 1 {
+                    hit = hit + p;
+                }
+            }
+            out.push(if tot.to64() > 0.0 { hit / tot } else { T::ZERO });
+        }
+        out
+    }
+
+    /// Full pipeline for one target.
+    pub fn impute<T: Real>(
+        &self,
+        panel: &ReferencePanel,
+        target: &TargetHaplotype,
+        method: Method,
+    ) -> ImputeOut<T> {
+        let alphas = self.forward::<T>(panel, target, method);
+        let betas = self.backward::<T>(panel, target, method);
+        ImputeOut {
+            dosage: self.dosage(panel, &alphas, &betas),
+        }
+    }
+
+    /// Batch of targets, sequentially — exactly what the paper's
+    /// single-threaded x86 comparison point does.
+    pub fn impute_batch<T: Real>(
+        &self,
+        panel: &ReferencePanel,
+        targets: &[TargetHaplotype],
+        method: Method,
+    ) -> Vec<ImputeOut<T>> {
+        targets
+            .iter()
+            .map(|t| self.impute(panel, t, method))
+            .collect()
+    }
+
+    /// Floating-point multiply-accumulate count for one target (used by the
+    /// calibration bench and the cost-model cross-check).
+    pub fn flops_per_target(&self, panel: &ReferencePanel, method: Method) -> u64 {
+        let h = panel.n_hap() as u64;
+        let m = panel.n_mark() as u64;
+        let sweeps = match method {
+            // fwd: H MACs per state; bwd: same + emission multiply.
+            Method::DenseThreeLoop => 2 * (m - 1) * h * (2 * h + 1),
+            Method::Rank1 => 2 * (m - 1) * (5 * h),
+        };
+        let posterior = m * (3 * h);
+        sweeps + posterior
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+    fn problem(seed: u64, n_hap: usize, n_mark: usize) -> (ReferencePanel, TargetHaplotype) {
+        let cfg = PanelConfig {
+            n_hap,
+            n_mark,
+            maf: 0.25,
+            annot_ratio: 0.3,
+            seed,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&cfg);
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let targets = generate_targets(&panel, &cfg, 1, &mut rng);
+        (panel, targets.into_iter().next().unwrap().masked)
+    }
+
+    #[test]
+    fn dense_matches_rank1_forward() {
+        for seed in 0..5 {
+            let (panel, target) = problem(seed, 10, 20);
+            let b = Baseline::default();
+            let d: Vec<f64> = b.forward(&panel, &target, Method::DenseThreeLoop);
+            let r: Vec<f64> = b.forward(&panel, &target, Method::Rank1);
+            for (x, y) in d.iter().zip(&r) {
+                assert!((x - y).abs() <= 1e-12 * x.abs().max(1e-30), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_matches_rank1_backward() {
+        for seed in 0..5 {
+            let (panel, target) = problem(seed, 10, 20);
+            let b = Baseline::default();
+            let d: Vec<f64> = b.backward(&panel, &target, Method::DenseThreeLoop);
+            let r: Vec<f64> = b.backward(&panel, &target, Method::Rank1);
+            for (x, y) in d.iter().zip(&r) {
+                assert!((x - y).abs() <= 1e-12 * x.abs().max(1e-30), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_tracks_f64() {
+        let (panel, target) = problem(3, 12, 30);
+        let b = Baseline::default();
+        let lo: ImputeOut<f32> = b.impute(&panel, &target, Method::Rank1);
+        let hi: ImputeOut<f64> = b.impute(&panel, &target, Method::Rank1);
+        for (x, y) in lo.dosage.iter().zip(&hi.dosage) {
+            assert!((x.to64() - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn initialisation_matches_algorithm1() {
+        let (panel, target) = problem(4, 8, 10);
+        let b = Baseline::default();
+        let alphas: Vec<f64> = b.forward(&panel, &target, Method::Rank1);
+        let betas: Vec<f64> = b.backward(&panel, &target, Method::Rank1);
+        for h in 0..8 {
+            assert!((alphas[h] - 1.0 / 8.0).abs() < 1e-15);
+            assert_eq!(betas[9 * 8 + h], 1.0);
+        }
+    }
+
+    #[test]
+    fn likelihood_constant_across_columns() {
+        let (panel, target) = problem(5, 10, 25);
+        let b = Baseline::default();
+        let alphas: Vec<f64> = b.forward(&panel, &target, Method::Rank1);
+        let betas: Vec<f64> = b.backward(&panel, &target, Method::Rank1);
+        let h_n = panel.n_hap();
+        let lik: Vec<f64> = (0..panel.n_mark())
+            .map(|m| (0..h_n).map(|h| alphas[m * h_n + h] * betas[m * h_n + h]).sum())
+            .collect();
+        for l in &lik {
+            assert!((l - lik[0]).abs() < 1e-9 * lik[0].abs(), "{l} vs {}", lik[0]);
+        }
+    }
+
+    #[test]
+    fn dosage_bounded_and_hard_calls_binary() {
+        let (panel, target) = problem(6, 14, 40);
+        let b = Baseline::default();
+        let out: ImputeOut<f32> = b.impute(&panel, &target, Method::Rank1);
+        assert_eq!(out.dosage.len(), 40);
+        for &d in &out.dosage {
+            assert!((0.0..=1.0).contains(&d), "dosage {d} out of range");
+        }
+        assert!(out.hard_calls().iter().all(|&a| a <= 1));
+    }
+
+    #[test]
+    fn perfect_copy_recovered() {
+        // Target = exact copy of reference haplotype 0, fully observed.
+        let cfg = PanelConfig {
+            n_hap: 16,
+            n_mark: 32,
+            maf: 0.5,
+            seed: 7,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&cfg);
+        let obs: Vec<i8> = panel.haplotype(0).iter().map(|&a| a as i8).collect();
+        let target = TargetHaplotype::new(obs);
+        let b = Baseline::default();
+        let out: ImputeOut<f64> = b.impute(&panel, &target, Method::DenseThreeLoop);
+        assert_eq!(out.hard_calls(), panel.haplotype(0));
+    }
+
+    #[test]
+    fn unannotated_target_gives_allele_frequencies() {
+        let cfg = PanelConfig {
+            n_hap: 12,
+            n_mark: 20,
+            maf: 0.4,
+            seed: 8,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&cfg);
+        let target = TargetHaplotype::new(vec![-1; 20]);
+        let b = Baseline::default();
+        let out: ImputeOut<f64> = b.impute(&panel, &target, Method::Rank1);
+        for m in 0..20 {
+            assert!(
+                (out.dosage[m] - panel.allele_freq(m)).abs() < 1e-9,
+                "m={m}: {} vs {}",
+                out.dosage[m],
+                panel.allele_freq(m)
+            );
+        }
+    }
+
+    #[test]
+    fn flop_count_orders() {
+        let (panel, _) = problem(9, 16, 32);
+        let b = Baseline::default();
+        let dense = b.flops_per_target(&panel, Method::DenseThreeLoop);
+        let r1 = b.flops_per_target(&panel, Method::Rank1);
+        assert!(dense > r1 * 2, "dense {dense} should dwarf rank1 {r1}");
+    }
+}

@@ -1,0 +1,22 @@
+//! The Li & Stephens imputation model (paper §3) and the x86-style baseline
+//! implementation (paper §6.1).
+//!
+//! * [`params`] — model constants and the τ / transition / emission formulas
+//!   (paper eqs. (1)–(7)).
+//! * [`panel`] — reference panel, target haplotypes, observation encoding.
+//! * [`baseline`] — the single-threaded baseline in both the paper's literal
+//!   "three simple for loops" form (`dense_*`, O(H²M) — the arithmetic the
+//!   event-driven graph also performs, message per term) and the rank-1
+//!   optimised form (`rank1_*`, O(HM)).
+//! * [`interpolation`] — the linear-interpolation optimisation (paper §5.3).
+//! * [`accuracy`] — imputation-quality metrics (concordance, dosage r²).
+
+pub mod accuracy;
+pub mod baseline;
+pub mod interpolation;
+pub mod panel;
+pub mod params;
+
+pub use baseline::{Baseline, ImputeOut};
+pub use panel::{Obs, ReferencePanel, TargetHaplotype};
+pub use params::ModelParams;

@@ -1,0 +1,237 @@
+//! Reference panels and target haplotypes — paper §3.1 / Fig 1.
+//!
+//! The panel is the 2-D HMM state space: reference haplotypes stacked
+//! vertically, sampled marker locations horizontally, each state labelled
+//! with an allele.  Diallelic encoding: allele ∈ {0, 1} (major/minor).
+
+/// Observation at one marker of a target haplotype: `-1` unannotated, else
+/// the observed allele (0/1).
+pub type Obs = i8;
+
+/// The 2-D reference panel (HMM state space).
+#[derive(Clone, Debug)]
+pub struct ReferencePanel {
+    n_hap: usize,
+    n_mark: usize,
+    /// Row-major alleles: `alleles[h * n_mark + m]`.
+    alleles: Vec<u8>,
+    /// Genetic distance `d_m` from marker `m-1` to marker `m`; `gen_dist[0] = 0`.
+    gen_dist: Vec<f64>,
+}
+
+impl ReferencePanel {
+    pub fn new(n_hap: usize, n_mark: usize, alleles: Vec<u8>, gen_dist: Vec<f64>) -> Self {
+        assert!(n_hap >= 2, "need at least two reference haplotypes");
+        assert!(n_mark >= 2, "need at least two markers");
+        assert_eq!(alleles.len(), n_hap * n_mark, "allele buffer size mismatch");
+        assert_eq!(gen_dist.len(), n_mark, "genetic distance length mismatch");
+        assert_eq!(gen_dist[0], 0.0, "gen_dist[0] must be 0 (no left neighbour)");
+        assert!(
+            alleles.iter().all(|&a| a <= 1),
+            "diallelic panels only (alleles 0/1)"
+        );
+        assert!(
+            gen_dist[1..].iter().all(|&d| d > 0.0 && d.is_finite()),
+            "genetic distances must be positive and finite"
+        );
+        ReferencePanel {
+            n_hap,
+            n_mark,
+            alleles,
+            gen_dist,
+        }
+    }
+
+    #[inline]
+    pub fn n_hap(&self) -> usize {
+        self.n_hap
+    }
+
+    #[inline]
+    pub fn n_mark(&self) -> usize {
+        self.n_mark
+    }
+
+    /// Total number of HMM states (vertices in the raw application graph).
+    #[inline]
+    pub fn n_states(&self) -> usize {
+        self.n_hap * self.n_mark
+    }
+
+    #[inline]
+    pub fn allele(&self, hap: usize, mark: usize) -> u8 {
+        debug_assert!(hap < self.n_hap && mark < self.n_mark);
+        self.alleles[hap * self.n_mark + mark]
+    }
+
+    /// One reference haplotype row.
+    pub fn haplotype(&self, hap: usize) -> &[u8] {
+        &self.alleles[hap * self.n_mark..(hap + 1) * self.n_mark]
+    }
+
+    /// Column `m` as a fresh vector (marker-major views are not contiguous).
+    pub fn column(&self, mark: usize) -> Vec<u8> {
+        (0..self.n_hap).map(|h| self.allele(h, mark)).collect()
+    }
+
+    #[inline]
+    pub fn gen_dist(&self, mark: usize) -> f64 {
+        self.gen_dist[mark]
+    }
+
+    pub fn gen_dists(&self) -> &[f64] {
+        &self.gen_dist
+    }
+
+    /// Per-column allele-1 frequency.
+    pub fn allele_freq(&self, mark: usize) -> f64 {
+        let ones: usize = (0..self.n_hap)
+            .map(|h| self.allele(h, mark) as usize)
+            .sum();
+        ones as f64 / self.n_hap as f64
+    }
+
+    /// Memory footprint of the panel data in bytes (the paper's capacity
+    /// limit is "the memory required to store the reference panel").
+    pub fn mem_bytes(&self) -> usize {
+        self.alleles.len() + self.gen_dist.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Restrict to a subset of marker columns (used to build the annotated-
+    /// anchor subproblem for linear interpolation).  Genetic distances are
+    /// *accumulated* across the dropped columns — paper Fig 10.
+    pub fn select_markers(&self, marks: &[usize]) -> ReferencePanel {
+        assert!(marks.len() >= 2, "anchor subproblem needs >= 2 markers");
+        assert!(
+            marks.windows(2).all(|w| w[0] < w[1]),
+            "marker subset must be strictly increasing"
+        );
+        assert!(*marks.last().unwrap() < self.n_mark);
+        let mut alleles = Vec::with_capacity(self.n_hap * marks.len());
+        for h in 0..self.n_hap {
+            for &m in marks {
+                alleles.push(self.allele(h, m));
+            }
+        }
+        let mut gen_dist = Vec::with_capacity(marks.len());
+        for (k, &m) in marks.iter().enumerate() {
+            if k == 0 {
+                gen_dist.push(0.0);
+            } else {
+                // Accumulate d over (marks[k-1], marks[k]].
+                let lo = marks[k - 1];
+                gen_dist.push((lo + 1..=m).map(|i| self.gen_dist[i]).sum());
+            }
+        }
+        ReferencePanel::new(self.n_hap, marks.len(), alleles, gen_dist)
+    }
+}
+
+/// A target haplotype to impute: observations aligned to the panel's markers.
+#[derive(Clone, Debug)]
+pub struct TargetHaplotype {
+    pub obs: Vec<Obs>,
+}
+
+impl TargetHaplotype {
+    pub fn new(obs: Vec<Obs>) -> Self {
+        assert!(obs.iter().all(|&o| (-1..=1).contains(&o)));
+        TargetHaplotype { obs }
+    }
+
+    pub fn n_mark(&self) -> usize {
+        self.obs.len()
+    }
+
+    /// Indices of annotated (observed) markers, in order.
+    pub fn annotated(&self) -> Vec<usize> {
+        self.obs
+            .iter()
+            .enumerate()
+            .filter(|(_, &o)| o >= 0)
+            .map(|(m, _)| m)
+            .collect()
+    }
+
+    pub fn n_annotated(&self) -> usize {
+        self.obs.iter().filter(|&&o| o >= 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ReferencePanel {
+        // 2 haplotypes x 3 markers.
+        ReferencePanel::new(2, 3, vec![0, 1, 0, 1, 0, 1], vec![0.0, 1e-6, 2e-6])
+    }
+
+    #[test]
+    fn accessors() {
+        let p = tiny();
+        assert_eq!(p.n_hap(), 2);
+        assert_eq!(p.n_mark(), 3);
+        assert_eq!(p.n_states(), 6);
+        assert_eq!(p.allele(0, 1), 1);
+        assert_eq!(p.allele(1, 0), 1);
+        assert_eq!(p.haplotype(1), &[1, 0, 1]);
+        assert_eq!(p.column(2), vec![0, 1]);
+        assert_eq!(p.gen_dist(2), 2e-6);
+    }
+
+    #[test]
+    fn allele_freq_per_column() {
+        let p = tiny();
+        assert_eq!(p.allele_freq(0), 0.5);
+        assert_eq!(p.allele_freq(1), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "allele buffer size mismatch")]
+    fn rejects_bad_buffer() {
+        ReferencePanel::new(2, 3, vec![0; 5], vec![0.0, 1e-6, 1e-6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "diallelic")]
+    fn rejects_non_diallelic() {
+        ReferencePanel::new(2, 2, vec![0, 1, 2, 0], vec![0.0, 1e-6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "gen_dist[0]")]
+    fn rejects_nonzero_first_distance() {
+        ReferencePanel::new(2, 2, vec![0, 1, 1, 0], vec![1e-6, 1e-6]);
+    }
+
+    #[test]
+    fn select_markers_accumulates_distance() {
+        let p = ReferencePanel::new(
+            2,
+            5,
+            vec![0, 1, 0, 1, 0, 1, 0, 1, 0, 1],
+            vec![0.0, 1e-6, 2e-6, 3e-6, 4e-6],
+        );
+        let q = p.select_markers(&[0, 2, 4]);
+        assert_eq!(q.n_mark(), 3);
+        assert_eq!(q.gen_dist(0), 0.0);
+        assert!((q.gen_dist(1) - 3e-6).abs() < 1e-18); // 1e-6 + 2e-6
+        assert!((q.gen_dist(2) - 7e-6).abs() < 1e-18); // 3e-6 + 4e-6
+        assert_eq!(q.haplotype(0), &[0, 0, 0]);
+        assert_eq!(q.haplotype(1), &[1, 1, 1]);
+    }
+
+    #[test]
+    fn target_annotated_indices() {
+        let t = TargetHaplotype::new(vec![-1, 0, -1, 1]);
+        assert_eq!(t.annotated(), vec![1, 3]);
+        assert_eq!(t.n_annotated(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn target_rejects_bad_obs() {
+        TargetHaplotype::new(vec![2]);
+    }
+}

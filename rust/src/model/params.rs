@@ -1,0 +1,104 @@
+//! Model constants and formulas — paper §3.2, equations (1)–(7).
+
+/// Parameters of the Li & Stephens model.
+///
+/// `ne` is the effective population size ("simply a constant in the model");
+/// `err` is the genotyping error rate e (1/10000 in the paper).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelParams {
+    pub ne: f64,
+    pub err: f64,
+}
+
+impl Default for ModelParams {
+    fn default() -> Self {
+        ModelParams {
+            ne: 50_000.0,
+            err: 1e-4,
+        }
+    }
+}
+
+impl ModelParams {
+    /// Paper eq. (1): `tau_m = 1 - exp(-4 Ne d_m / |H|)`.
+    #[inline]
+    pub fn tau(&self, d_m: f64, n_hap: usize) -> f64 {
+        1.0 - (-4.0 * self.ne * d_m / n_hap as f64).exp()
+    }
+
+    /// Paper eq. (2): probability of *staying* on the same haplotype.
+    #[inline]
+    pub fn a_same(&self, tau_m: f64, n_hap: usize) -> f64 {
+        (1.0 - tau_m) + tau_m / n_hap as f64
+    }
+
+    /// Paper eq. (3): probability of *jumping* to one specific other haplotype.
+    #[inline]
+    pub fn a_diff(&self, tau_m: f64, n_hap: usize) -> f64 {
+        tau_m / n_hap as f64
+    }
+
+    /// Paper eqs. (6)/(7): emission given an annotated observation.
+    /// `None` observation (unannotated) → 1.0 (the term "falls out").
+    #[inline]
+    pub fn emission(&self, state_allele: u8, obs: i8) -> f64 {
+        if obs < 0 {
+            1.0
+        } else if state_allele as i8 == obs {
+            1.0 - self.err
+        } else {
+            self.err
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_matches_formula() {
+        let p = ModelParams::default();
+        let t = p.tau(1e-6, 100);
+        let want = 1.0 - f64::exp(-4.0 * 50_000.0 * 1e-6 / 100.0);
+        assert!((t - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn tau_zero_distance_is_zero() {
+        let p = ModelParams::default();
+        assert_eq!(p.tau(0.0, 10), 0.0);
+    }
+
+    #[test]
+    fn tau_monotone_in_distance() {
+        let p = ModelParams::default();
+        let mut prev = -1.0;
+        for k in 0..20 {
+            let t = p.tau(1e-8 * 2f64.powi(k), 50);
+            assert!(t > prev);
+            prev = t;
+        }
+        assert!(prev < 1.0);
+    }
+
+    #[test]
+    fn transition_row_sums_to_one() {
+        let p = ModelParams::default();
+        for &n in &[2usize, 7, 100] {
+            for &tau in &[0.0, 0.3, 0.99] {
+                let total = p.a_same(tau, n) + (n - 1) as f64 * p.a_diff(tau, n);
+                assert!((total - 1.0).abs() < 1e-12, "n={n} tau={tau}");
+            }
+        }
+    }
+
+    #[test]
+    fn emission_cases() {
+        let p = ModelParams::default();
+        assert_eq!(p.emission(0, -1), 1.0);
+        assert_eq!(p.emission(1, 1), 1.0 - 1e-4);
+        assert_eq!(p.emission(0, 1), 1e-4);
+        assert_eq!(p.emission(1, 0), 1e-4);
+    }
+}

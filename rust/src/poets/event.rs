@@ -1,0 +1,93 @@
+//! Event (message) plumbing for the discrete-event simulation.
+//!
+//! POETS events are small atomic packets (≤ 64 bytes) carrying both control
+//! and data.  The simulator is generic over the application's message type;
+//! [`assert_event_fits`] enforces the size budget at graph-load time, exactly
+//! where the real cluster would reject an oversized event.
+
+use std::cmp::Ordering;
+
+use crate::graph::builder::DestListId;
+use crate::graph::device::VertexId;
+
+/// Compile-time-ish check that a message type fits the Tinsel event budget
+/// (64 bytes minus an 8-byte header worth of routing metadata).
+pub fn assert_event_fits<M>(event_bytes: usize) {
+    let payload_budget = event_bytes - 8;
+    let size = std::mem::size_of::<M>();
+    assert!(
+        size <= payload_budget,
+        "message type {} is {size} bytes; events carry at most {payload_budget}",
+        std::any::type_name::<M>()
+    );
+}
+
+/// A multicast group arrival at one destination tile's mailbox.
+#[derive(Clone, Debug)]
+pub struct GroupArrival<M> {
+    /// Arrival time at the tile ingress (cycles).
+    pub t: u64,
+    /// Tie-break sequence for deterministic ordering.
+    pub seq: u64,
+    /// Sending vertex (receivers derive `a_ij` same/diff from it).
+    pub src: VertexId,
+    /// Which pooled destination list this send used.
+    pub list: DestListId,
+    /// Index of the tile group within the list's multicast plan.
+    pub group: u32,
+    pub msg: M,
+}
+
+impl<M> PartialEq for GroupArrival<M> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<M> Eq for GroupArrival<M> {}
+
+impl<M> PartialOrd for GroupArrival<M> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap ordering: earliest time first, then sequence.
+impl<M> Ord for GroupArrival<M> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.t, other.seq).cmp(&(self.t, self.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BinaryHeap;
+
+    #[test]
+    fn heap_pops_in_time_order() {
+        let mut h: BinaryHeap<GroupArrival<u8>> = BinaryHeap::new();
+        for (t, seq) in [(5u64, 0u64), (1, 1), (5, 2), (3, 3)] {
+            h.push(GroupArrival {
+                t,
+                seq,
+                src: 0,
+                list: DestListId(0),
+                group: 0,
+                msg: 0,
+            });
+        }
+        let order: Vec<(u64, u64)> = std::iter::from_fn(|| h.pop().map(|e| (e.t, e.seq))).collect();
+        assert_eq!(order, vec![(1, 1), (3, 3), (5, 0), (5, 2)]);
+    }
+
+    #[test]
+    fn small_messages_fit() {
+        assert_event_fits::<[f32; 4]>(64);
+    }
+
+    #[test]
+    #[should_panic(expected = "events carry at most")]
+    fn oversized_messages_rejected() {
+        assert_event_fits::<[u8; 100]>(64);
+    }
+}

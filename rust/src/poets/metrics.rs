@@ -1,0 +1,122 @@
+//! Simulation metrics: event counts, occupancy, per-step timings.
+
+use crate::util::json::Json;
+
+/// Aggregate counters from one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct SimMetrics {
+    /// Send requests issued (one per port-send, multicast counts once).
+    pub sends: u64,
+    /// Event copies delivered to destination vertices.
+    pub copies_delivered: u64,
+    /// Handler invocations (recv only; init/step counted separately).
+    pub recv_handlers: u64,
+    pub step_handlers: u64,
+    /// Events that crossed at least one inter-board link.
+    pub inter_board_sends: u64,
+    /// Global steps executed (target-haplotype pipeline waves).
+    pub steps: u64,
+    /// Final simulated time in cycles.
+    pub sim_cycles: u64,
+    /// Cycles spent inside termination-detection waves.
+    pub barrier_cycles: u64,
+    /// Busy cycles of the most-loaded core.
+    pub max_core_busy: u64,
+    /// Busy cycles of the most-loaded mailbox.
+    pub max_mailbox_busy: u64,
+    /// Per-step durations in cycles (recorded when enabled).
+    pub step_durations: Vec<u64>,
+}
+
+impl SimMetrics {
+    /// Simulated wall-clock seconds at the given core clock.
+    pub fn sim_seconds(&self, clock_hz: f64) -> f64 {
+        self.sim_cycles as f64 / clock_hz
+    }
+
+    /// Mean step duration in cycles.
+    pub fn mean_step_cycles(&self) -> f64 {
+        if self.step_durations.is_empty() {
+            return 0.0;
+        }
+        self.step_durations.iter().sum::<u64>() as f64 / self.step_durations.len() as f64
+    }
+
+    /// Fraction of simulated time the busiest core was busy.
+    pub fn core_occupancy(&self) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        self.max_core_busy as f64 / self.sim_cycles as f64
+    }
+
+    /// Barrier overhead as a fraction of total simulated time (the paper's
+    /// ~3 % claim is per-step; this is the run-level equivalent).
+    pub fn barrier_fraction(&self) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        self.barrier_cycles as f64 / self.sim_cycles as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("sends", self.sends)
+            .set("copies_delivered", self.copies_delivered)
+            .set("recv_handlers", self.recv_handlers)
+            .set("step_handlers", self.step_handlers)
+            .set("inter_board_sends", self.inter_board_sends)
+            .set("steps", self.steps)
+            .set("sim_cycles", self.sim_cycles)
+            .set("barrier_cycles", self.barrier_cycles)
+            .set("max_core_busy", self.max_core_busy)
+            .set("max_mailbox_busy", self.max_mailbox_busy);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seconds_at_clock() {
+        let m = SimMetrics {
+            sim_cycles: 210_000_000,
+            ..Default::default()
+        };
+        assert!((m.sim_seconds(210e6) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_and_fractions() {
+        let m = SimMetrics {
+            sim_cycles: 1000,
+            max_core_busy: 250,
+            barrier_cycles: 30,
+            step_durations: vec![400, 600],
+            ..Default::default()
+        };
+        assert!((m.core_occupancy() - 0.25).abs() < 1e-12);
+        assert!((m.barrier_fraction() - 0.03).abs() < 1e-12);
+        assert!((m.mean_step_cycles() - 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_cycles_no_nan() {
+        let m = SimMetrics::default();
+        assert_eq!(m.core_occupancy(), 0.0);
+        assert_eq!(m.barrier_fraction(), 0.0);
+        assert_eq!(m.mean_step_cycles(), 0.0);
+    }
+
+    #[test]
+    fn json_has_counters() {
+        let m = SimMetrics {
+            sends: 7,
+            ..Default::default()
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("sends"), Some(&crate::util::json::Json::Int(7)));
+    }
+}

@@ -1,0 +1,30 @@
+//! The POETS cluster substrate — paper §4.
+//!
+//! A cycle-approximate functional + timing simulator of the 48-FPGA RISC-V
+//! NoC cluster: topology ([`topology`]), calibrated cost model
+//! ([`costmodel`]), inter-board NoC ([`noc`]), tile mailboxes ([`mailbox`]),
+//! hardware multicast ([`multicast`]), termination detection
+//! ([`termination`]), the discrete-event core ([`desim`]) and run metrics
+//! ([`metrics`]).
+//!
+//! DESIGN.md §1 records why simulation preserves the paper's relative claims:
+//! every figure compares POETS wall-clock against x86 wall-clock, and the
+//! mechanisms those shapes come from (mailbox fan-in serialisation, multicast
+//! amortisation, link bandwidth, handler cost at 210 MHz, thread occupancy
+//! under soft-scheduling) are each modelled explicitly.
+
+pub mod capacity;
+pub mod costmodel;
+pub mod desim;
+pub mod event;
+pub mod mailbox;
+pub mod metrics;
+pub mod multicast;
+pub mod noc;
+pub mod termination;
+pub mod topology;
+
+pub use costmodel::CostModel;
+pub use desim::{SimConfig, Simulator};
+pub use metrics::SimMetrics;
+pub use topology::{ClusterConfig, ThreadId};

@@ -1,0 +1,133 @@
+//! Hardware-multicast planning — Tinsel's distributed multicast [21].
+//!
+//! A single send request covers an entire destination list; routers replicate
+//! the event so each inter-board link and each destination tile sees exactly
+//! one copy stream.  Since destination lists are pooled and static, the
+//! expansion (group destinations by tile, order groups by board) is
+//! precomputed once per (graph, mapping) pair.
+
+use crate::graph::builder::{DestListId, Graph};
+use crate::graph::device::{Device, VertexId};
+use crate::graph::mapping::Mapping;
+
+use super::topology::ClusterConfig;
+
+/// One tile's share of a multicast: the destination vertices resident there.
+#[derive(Clone, Debug)]
+pub struct TileGroup {
+    pub tile: u32,
+    pub board: u32,
+    pub dests: Vec<VertexId>,
+}
+
+/// The precomputed expansion of every pooled destination list.
+#[derive(Clone, Debug, Default)]
+pub struct McastPlan {
+    /// `groups[list.0]` → tile groups, sorted by (board, tile).
+    groups: Vec<Vec<TileGroup>>,
+}
+
+impl McastPlan {
+    pub fn build<D: Device>(
+        graph: &Graph<D>,
+        mapping: &Mapping,
+        cluster: &ClusterConfig,
+    ) -> McastPlan {
+        let mut groups = Vec::with_capacity(graph.n_dest_lists());
+        for list in 0..graph.n_dest_lists() {
+            let dests = graph.dests(DestListId(list as u32));
+            let mut by_tile: std::collections::BTreeMap<(u32, u32), Vec<VertexId>> =
+                Default::default();
+            for &d in dests {
+                let t = mapping.thread_of(d);
+                let tile = cluster.tile_of(t) as u32;
+                let board = cluster.board_of(t) as u32;
+                by_tile.entry((board, tile)).or_default().push(d);
+            }
+            groups.push(
+                by_tile
+                    .into_iter()
+                    .map(|((board, tile), dests)| TileGroup { tile, board, dests })
+                    .collect(),
+            );
+        }
+        McastPlan { groups }
+    }
+
+    #[inline]
+    pub fn tile_groups(&self, list: DestListId) -> &[TileGroup] {
+        &self.groups[list.0 as usize]
+    }
+
+    /// Total copies delivered by one send on this list.
+    pub fn fan_out(&self, list: DestListId) -> usize {
+        self.tile_groups(list).iter().map(|g| g.dests.len()).sum()
+    }
+
+    /// Distinct boards touched by one send on this list.
+    pub fn boards_spanned(&self, list: DestListId) -> usize {
+        let mut boards: Vec<u32> = self.tile_groups(list).iter().map(|g| g.board).collect();
+        boards.dedup();
+        boards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::device::Ctx;
+
+    struct Null;
+    impl Device for Null {
+        type Msg = u8;
+        fn init(&mut self, _c: &mut Ctx<u8>) {}
+        fn recv(&mut self, _m: &u8, _s: VertexId, _c: &mut Ctx<u8>) {}
+        fn step(&mut self, _c: &mut Ctx<u8>) -> bool {
+            false
+        }
+    }
+
+    #[test]
+    fn groups_by_tile_and_board() {
+        let cluster = ClusterConfig::tiny(); // 2 boards, 4 tiles, 8 thr/tile
+        let mut b = GraphBuilder::new();
+        // 40 vertices: round-robin over 64 threads puts consecutive vertices
+        // on consecutive threads.
+        for _ in 0..40 {
+            b.add_vertex(Null);
+        }
+        let all: Vec<VertexId> = (0..40).collect();
+        let list = b.intern_dests(all);
+        b.add_port(0, list);
+        let g = b.build();
+        let mapping = Mapping::round_robin(40, &cluster);
+        let plan = McastPlan::build(&g, &mapping, &cluster);
+
+        assert_eq!(plan.fan_out(DestListId(0)), 40);
+        let groups = plan.tile_groups(DestListId(0));
+        // 40 threads cover 5 tiles (8 threads/tile).
+        assert_eq!(groups.len(), 5);
+        // Sorted by (board, tile); all destinations preserved exactly once.
+        let mut seen: Vec<VertexId> = groups.iter().flat_map(|g| g.dests.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..40).collect::<Vec<_>>());
+        assert!(groups.windows(2).all(|w| (w[0].board, w[0].tile) < (w[1].board, w[1].tile)));
+        // Threads 0..31 are board 0 (4 tiles x 8), 32..39 board 1.
+        assert_eq!(plan.boards_spanned(DestListId(0)), 2);
+    }
+
+    #[test]
+    fn empty_list_empty_plan() {
+        let cluster = ClusterConfig::tiny();
+        let mut b = GraphBuilder::new();
+        b.add_vertex(Null);
+        let list = b.intern_dests(vec![]);
+        b.add_port(0, list);
+        let g = b.build();
+        let mapping = Mapping::round_robin(1, &cluster);
+        let plan = McastPlan::build(&g, &mapping, &cluster);
+        assert_eq!(plan.fan_out(DestListId(0)), 0);
+        assert!(plan.tile_groups(DestListId(0)).is_empty());
+    }
+}

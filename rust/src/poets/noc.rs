@@ -1,0 +1,150 @@
+//! Network-on-chip model: intra-board mesh + inter-board 10 Gbps links.
+//!
+//! Intra-board: a 4×4 wormhole mesh between tiles; we charge per-hop router
+//! latency (contention between tiles on the same board is dominated by the
+//! mailbox ingress serialisation, which the simulator models separately).
+//!
+//! Inter-board: each board has four directional links (N/E/S/W, Fig 3).
+//! Routing is dimension-ordered (X then Y) over the global board grid.  Each
+//! link is a serial resource: events crossing it queue behind one another at
+//! 64 B / 10 Gbps — this is where large fan-outs that span boards back up.
+
+use super::costmodel::CostModel;
+use super::topology::ClusterConfig;
+
+/// Link direction out of a board.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    East = 0,
+    West = 1,
+    North = 2,
+    South = 3,
+}
+
+/// One directional inter-board link, identified by (board, direction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkId(pub u32);
+
+/// The NoC state: busy-until time per inter-board link.
+#[derive(Clone, Debug)]
+pub struct Noc {
+    link_free: Vec<u64>,
+    /// Cumulative busy cycles per link (utilisation metric).
+    link_busy: Vec<u64>,
+    link_events: Vec<u64>,
+}
+
+impl Noc {
+    pub fn new(cluster: &ClusterConfig) -> Noc {
+        let n = cluster.n_boards * 4;
+        Noc {
+            link_free: vec![0; n],
+            link_busy: vec![0; n],
+            link_events: vec![0; n],
+        }
+    }
+
+    /// Dimension-ordered route between two boards: the sequence of outbound
+    /// links taken (empty if same board).
+    pub fn board_route(cluster: &ClusterConfig, from: usize, to: usize) -> Vec<LinkId> {
+        let mut path = Vec::new();
+        let (mut x, mut y) = cluster.board_xy(from);
+        let (tx, ty) = cluster.board_xy(to);
+        let board_at = |x: usize, y: usize| y * cluster.board_grid.0 + x;
+        while x != tx {
+            let dir = if tx > x { Dir::East } else { Dir::West };
+            path.push(LinkId((board_at(x, y) * 4 + dir as usize) as u32));
+            x = if tx > x { x + 1 } else { x - 1 };
+        }
+        while y != ty {
+            let dir = if ty > y { Dir::South } else { Dir::North };
+            path.push(LinkId((board_at(x, y) * 4 + dir as usize) as u32));
+            y = if ty > y { y + 1 } else { y - 1 };
+        }
+        path
+    }
+
+    /// Send one event along `route`, departing at `t`.  Each link serialises
+    /// (busy-until) and adds crossing latency.  Returns arrival time at the
+    /// destination board's ingress.
+    pub fn traverse(&mut self, route: &[LinkId], t: u64, cost: &CostModel) -> u64 {
+        let mut now = t;
+        for l in route {
+            let idx = l.0 as usize;
+            let start = now.max(self.link_free[idx]);
+            self.link_free[idx] = start + cost.board_link_serialize;
+            self.link_busy[idx] += cost.board_link_serialize;
+            self.link_events[idx] += 1;
+            now = start + cost.board_link_serialize + cost.board_link_latency;
+        }
+        now
+    }
+
+    /// Peak cumulative busy cycles over all links.
+    pub fn max_link_busy(&self) -> u64 {
+        self.link_busy.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Total events that crossed any board link.
+    pub fn total_link_events(&self) -> u64 {
+        self.link_events.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_board_route_empty() {
+        let c = ClusterConfig::poets_48();
+        assert!(Noc::board_route(&c, 7, 7).is_empty());
+    }
+
+    #[test]
+    fn route_length_is_manhattan() {
+        let c = ClusterConfig::poets_48(); // grid 6x8
+        // board 0 at (0,0); board 47 at (5,7) -> 5 + 7 hops.
+        assert_eq!(Noc::board_route(&c, 0, 47).len(), 12);
+        assert_eq!(Noc::board_route(&c, 47, 0).len(), 12);
+        assert_eq!(Noc::board_route(&c, 0, 5).len(), 5);
+        assert_eq!(Noc::board_route(&c, 0, 6).len(), 1);
+    }
+
+    #[test]
+    fn route_x_then_y() {
+        let c = ClusterConfig::poets_48();
+        let route = Noc::board_route(&c, 0, 8); // (0,0) -> (2,1)
+        assert_eq!(route.len(), 3);
+        // First two links eastbound from boards (0,0) and (1,0).
+        assert_eq!(route[0].0, (0 * 4 + Dir::East as usize) as u32);
+        assert_eq!(route[1].0, (1 * 4 + Dir::East as usize) as u32);
+        // Then south from (2,0) = board 2.
+        assert_eq!(route[2].0, (2 * 4 + Dir::South as usize) as u32);
+    }
+
+    #[test]
+    fn traverse_serialises_on_shared_link() {
+        let c = ClusterConfig::with_boards(2);
+        let cost = CostModel::default();
+        let mut noc = Noc::new(&c);
+        let route = Noc::board_route(&c, 0, 1);
+        assert_eq!(route.len(), 1);
+        let a1 = noc.traverse(&route, 0, &cost);
+        let a2 = noc.traverse(&route, 0, &cost);
+        assert_eq!(a1, cost.board_link_serialize + cost.board_link_latency);
+        assert_eq!(
+            a2,
+            2 * cost.board_link_serialize + cost.board_link_latency,
+            "second event must queue behind the first"
+        );
+        assert_eq!(noc.total_link_events(), 2);
+    }
+
+    #[test]
+    fn traverse_empty_route_is_free() {
+        let c = ClusterConfig::with_boards(2);
+        let mut noc = Noc::new(&c);
+        assert_eq!(noc.traverse(&[], 123, &CostModel::default()), 123);
+    }
+}

@@ -1,0 +1,275 @@
+//! POETS cluster topology — paper §4.2, Figures 2–5.
+//!
+//! Hierarchy (current cluster):
+//!
+//! * **tile**: 4 custom RV32IMF cores sharing a mailbox, cache and FPU;
+//!   16 hardware threads per core (Fig 2).
+//! * **board**: Stratix-V DE5-net with 16 tiles in a 4×4 mesh sharing 4 GB
+//!   DRAM; four 10 Gbps links for inter-board routing (Fig 3).
+//! * **box**: 6 boards in a 3×2 grid plus an x86 host (Fig 4).
+//! * **cluster**: 8 boxes in a 2×4 arrangement → 48 FPGAs, 49,152 truly
+//!   parallel hardware threads (Fig 5).
+//!
+//! Threads are numbered densely: thread-in-core, core-in-tile, tile-in-board,
+//! board-in-cluster.  Boards are laid out on a global 2-D grid (box grid ×
+//! board-in-box grid) for inter-board mesh routing.
+
+/// Global hardware-thread id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ThreadId(pub u32);
+
+/// Static description of a POETS cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub n_boards: usize,
+    /// Tiles per board, arranged `tile_mesh.0 × tile_mesh.1`.
+    pub tiles_per_board: usize,
+    pub tile_mesh: (usize, usize),
+    pub cores_per_tile: usize,
+    pub threads_per_core: usize,
+    /// Global board grid (columns, rows): the 48-board cluster is 6×8
+    /// (boxes 2×4, each box 3×2 boards).
+    pub board_grid: (usize, usize),
+    /// Core clock in Hz (210 MHz on the Stratix-V cluster).
+    pub clock_hz: f64,
+    /// DRAM per board in bytes (4 GB).
+    pub dram_per_board: usize,
+}
+
+impl ClusterConfig {
+    /// The full 48-FPGA cluster of the paper.
+    pub fn poets_48() -> ClusterConfig {
+        ClusterConfig {
+            n_boards: 48,
+            tiles_per_board: 16,
+            tile_mesh: (4, 4),
+            cores_per_tile: 4,
+            threads_per_core: 16,
+            board_grid: (6, 8),
+            clock_hz: 210e6,
+            dram_per_board: 4 << 30,
+        }
+    }
+
+    /// A cluster with `n` boards (1 ≤ n ≤ 48), board grid shrunk to fit —
+    /// the Fig 11 "expanding hardware" axis.
+    ///
+    /// The grid is always an exact rectangle (largest divisor of `n` that is
+    /// ≤ 6 columns, as boxes stack) so dimension-ordered routing never
+    /// crosses an empty grid position.
+    pub fn with_boards(n: usize) -> ClusterConfig {
+        assert!((1..=48).contains(&n), "boards must be in 1..=48");
+        let cols = (1..=n.min(6)).rev().find(|c| n % c == 0).unwrap_or(1);
+        ClusterConfig {
+            n_boards: n,
+            board_grid: (cols, n / cols),
+            ..ClusterConfig::poets_48()
+        }
+    }
+
+    /// A deliberately tiny cluster for unit tests.
+    pub fn tiny() -> ClusterConfig {
+        ClusterConfig {
+            n_boards: 2,
+            tiles_per_board: 4,
+            tile_mesh: (2, 2),
+            cores_per_tile: 2,
+            threads_per_core: 4,
+            board_grid: (2, 1),
+            clock_hz: 210e6,
+            dram_per_board: 1 << 20,
+        }
+    }
+
+    #[inline]
+    pub fn threads_per_tile(&self) -> usize {
+        self.cores_per_tile * self.threads_per_core
+    }
+
+    #[inline]
+    pub fn threads_per_board(&self) -> usize {
+        self.tiles_per_board * self.threads_per_tile()
+    }
+
+    #[inline]
+    pub fn total_threads(&self) -> usize {
+        self.n_boards * self.threads_per_board()
+    }
+
+    #[inline]
+    pub fn cores_per_board(&self) -> usize {
+        self.tiles_per_board * self.cores_per_tile
+    }
+
+    #[inline]
+    pub fn total_cores(&self) -> usize {
+        self.n_boards * self.cores_per_board()
+    }
+
+    #[inline]
+    pub fn total_tiles(&self) -> usize {
+        self.n_boards * self.tiles_per_board
+    }
+
+    /// Seconds per core cycle.
+    #[inline]
+    pub fn secs_per_cycle(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+
+    /// Decompose a thread id.
+    #[inline]
+    pub fn locate(&self, t: ThreadId) -> Location {
+        let t = t.0 as usize;
+        assert!(t < self.total_threads(), "thread {t} out of range");
+        let board = t / self.threads_per_board();
+        let in_board = t % self.threads_per_board();
+        let tile = in_board / self.threads_per_tile();
+        let in_tile = in_board % self.threads_per_tile();
+        let core = in_tile / self.threads_per_core;
+        let thread = in_tile % self.threads_per_core;
+        Location {
+            board,
+            tile,
+            core,
+            thread,
+        }
+    }
+
+    /// Global core index of a thread (cores are the serial compute servers).
+    #[inline]
+    pub fn core_of(&self, t: ThreadId) -> usize {
+        let l = self.locate(t);
+        (l.board * self.tiles_per_board + l.tile) * self.cores_per_tile + l.core
+    }
+
+    /// Global tile (= mailbox) index of a thread.
+    #[inline]
+    pub fn tile_of(&self, t: ThreadId) -> usize {
+        let l = self.locate(t);
+        l.board * self.tiles_per_board + l.tile
+    }
+
+    /// Board index of a thread.
+    #[inline]
+    pub fn board_of(&self, t: ThreadId) -> usize {
+        self.locate(t).board
+    }
+
+    /// (x, y) of a tile within its board mesh.
+    #[inline]
+    pub fn tile_xy(&self, tile_in_board: usize) -> (usize, usize) {
+        (
+            tile_in_board % self.tile_mesh.0,
+            tile_in_board / self.tile_mesh.0,
+        )
+    }
+
+    /// (x, y) of a board on the global board grid.
+    #[inline]
+    pub fn board_xy(&self, board: usize) -> (usize, usize) {
+        assert!(board < self.n_boards);
+        (board % self.board_grid.0, board / self.board_grid.0)
+    }
+
+    /// Manhattan hop count between two tiles on the same board.
+    #[inline]
+    pub fn intra_board_hops(&self, tile_a: usize, tile_b: usize) -> usize {
+        let (ax, ay) = self.tile_xy(tile_a);
+        let (bx, by) = self.tile_xy(tile_b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+}
+
+/// Decomposed thread position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Location {
+    pub board: usize,
+    pub tile: usize,
+    pub core: usize,
+    pub thread: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_counts() {
+        let c = ClusterConfig::poets_48();
+        assert_eq!(c.threads_per_tile(), 64);
+        assert_eq!(c.threads_per_board(), 1024);
+        assert_eq!(c.total_threads(), 49_152); // the paper's headline number
+        assert_eq!(c.total_cores(), 3072);
+        assert_eq!(c.total_tiles(), 768);
+    }
+
+    #[test]
+    fn locate_roundtrip() {
+        let c = ClusterConfig::poets_48();
+        let l = c.locate(ThreadId(0));
+        assert_eq!((l.board, l.tile, l.core, l.thread), (0, 0, 0, 0));
+        let last = ThreadId(c.total_threads() as u32 - 1);
+        let l = c.locate(last);
+        assert_eq!(l.board, 47);
+        assert_eq!(l.tile, 15);
+        assert_eq!(l.core, 3);
+        assert_eq!(l.thread, 15);
+    }
+
+    #[test]
+    fn locate_is_dense() {
+        let c = ClusterConfig::tiny();
+        let mut seen = std::collections::HashSet::new();
+        for t in 0..c.total_threads() {
+            let l = c.locate(ThreadId(t as u32));
+            assert!(seen.insert((l.board, l.tile, l.core, l.thread)));
+        }
+        assert_eq!(seen.len(), c.total_threads());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn locate_rejects_out_of_range() {
+        let c = ClusterConfig::tiny();
+        c.locate(ThreadId(c.total_threads() as u32));
+    }
+
+    #[test]
+    fn with_boards_shapes() {
+        for n in [1, 2, 6, 7, 12, 48] {
+            let c = ClusterConfig::with_boards(n);
+            assert_eq!(c.n_boards, n);
+            let (gx, gy) = c.board_grid;
+            assert!(gx * gy >= n, "grid {gx}x{gy} too small for {n}");
+            // Every board must have valid grid coordinates.
+            for b in 0..n {
+                let (x, y) = c.board_xy(b);
+                assert!(x < gx && y < gy);
+            }
+        }
+    }
+
+    #[test]
+    fn intra_board_hops_manhattan() {
+        let c = ClusterConfig::poets_48();
+        assert_eq!(c.intra_board_hops(0, 0), 0);
+        assert_eq!(c.intra_board_hops(0, 3), 3); // (0,0) -> (3,0)
+        assert_eq!(c.intra_board_hops(0, 15), 6); // (0,0) -> (3,3)
+        assert_eq!(c.intra_board_hops(5, 10), 2); // (1,1) -> (2,2)
+    }
+
+    #[test]
+    fn core_and_tile_indices_consistent() {
+        let c = ClusterConfig::tiny();
+        for t in 0..c.total_threads() {
+            let tid = ThreadId(t as u32);
+            let l = c.locate(tid);
+            assert_eq!(c.tile_of(tid), l.board * c.tiles_per_board + l.tile);
+            assert_eq!(
+                c.core_of(tid),
+                c.tile_of(tid) * c.cores_per_tile + l.core
+            );
+        }
+    }
+}

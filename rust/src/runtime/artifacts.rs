@@ -1,0 +1,199 @@
+//! AOT artifact registry: parse `artifacts/manifest.tsv`.
+//!
+//! The manifest is written by `python/compile/aot.py` (one row per artifact):
+//!
+//! ```text
+//! name<TAB>file<TAB>in:NAME:DTYPE:d0xd1<TAB>...<TAB>out:NAME:DTYPE:d0xd1
+//! ```
+//!
+//! TSV keeps the Rust side free of JSON machinery (offline environment) and
+//! the signature explicit enough to validate every execute call.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result, bail};
+
+/// Tensor element type (the subset the pipeline uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+}
+
+/// One tensor signature (argument or result).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(kind: &str, col: &str) -> Result<TensorSig> {
+        let parts: Vec<&str> = col.split(':').collect();
+        if parts.len() != 4 || parts[0] != kind {
+            bail!("bad manifest column {col:?} (expected {kind}:name:dtype:dims)");
+        }
+        let shape = parts[3]
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSig {
+            name: parts[1].to_string(),
+            dtype: DType::parse(parts[2])?,
+            shape,
+        })
+    }
+}
+
+/// One artifact: an HLO-text file plus its entry signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() < 4 {
+                bail!("manifest line {} too short: {line:?}", lineno + 1);
+            }
+            let mut inputs = Vec::new();
+            let mut outputs = Vec::new();
+            for col in &cols[2..] {
+                if col.starts_with("in:") {
+                    if !outputs.is_empty() {
+                        bail!("manifest line {}: input after output", lineno + 1);
+                    }
+                    inputs.push(TensorSig::parse("in", col)?);
+                } else if col.starts_with("out:") {
+                    outputs.push(TensorSig::parse("out", col)?);
+                } else {
+                    bail!("manifest line {}: bad column {col:?}", lineno + 1);
+                }
+            }
+            if outputs.is_empty() {
+                bail!("manifest line {}: no outputs", lineno + 1);
+            }
+            artifacts.push(ArtifactSpec {
+                name: cols[0].to_string(),
+                path: dir.join(cols[1]),
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest `impute_raw_h{H}_m{M}` artifact with exactly `h` haplotypes
+    /// and at least `m` markers.  H must match exactly: the 1/|H| prior and
+    /// τ/|H| leak are baked into the lowered HLO, so padding haplotype rows
+    /// would change the model (padding markers with τ=0/emis=1 is inert —
+    /// verified by rust/tests/runtime_artifacts.rs).
+    pub fn find_raw(&self, h: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name.starts_with("impute_raw_h"))
+            .filter(|a| {
+                let emis = &a.inputs[1];
+                emis.shape[1] == h && emis.shape[0] >= m
+            })
+            .min_by_key(|a| a.inputs[1].shape[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "impute_raw_h16_m32\timpute_raw_h16_m32.hlo.txt\tin:tau:float32:32\tin:emis:float32:32x16\tin:alleles:float32:32x16\tout:dosage:float32:32\n\
+impute_raw_h64_m128\timpute_raw_h64_m128.hlo.txt\tin:tau:float32:128\tin:emis:float32:128x64\tin:alleles:float32:128x64\tout:dosage:float32:128\n\
+fwd_h16_m32\tfwd_h16_m32.hlo.txt\tin:tau:float32:32\tin:emis:float32:32x16\tout:alphas:float32:32x16\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.get("impute_raw_h16_m32").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![32]);
+        assert_eq!(a.inputs[1].shape, vec![32, 16]);
+        assert_eq!(a.inputs[1].dtype, DType::F32);
+        assert_eq!(a.outputs[0].name, "dosage");
+        assert_eq!(a.path, Path::new("/tmp/a/impute_raw_h16_m32.hlo.txt"));
+    }
+
+    #[test]
+    fn find_raw_matches_h_exactly_pads_m() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.find_raw(16, 20).unwrap().name, "impute_raw_h16_m32");
+        assert_eq!(m.find_raw(16, 32).unwrap().name, "impute_raw_h16_m32");
+        assert!(m.find_raw(16, 33).is_none()); // M too large for the menu
+        assert!(m.find_raw(17, 10).is_none()); // H must match exactly
+        assert_eq!(m.find_raw(64, 100).unwrap().name, "impute_raw_h64_m128");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("a\tb\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("a\tb\tin:x:float32:4\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("a\tb\tin:x:float99:4\tout:y:float32:4\n", Path::new("/")).is_err());
+        assert!(
+            Manifest::parse(
+                "a\tb\tout:y:float32:4\tin:x:float32:4\n",
+                Path::new("/")
+            )
+            .is_err()
+        );
+    }
+
+    #[test]
+    fn tensor_sig_elems() {
+        let t = TensorSig {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![3, 4, 5],
+        };
+        assert_eq!(t.n_elems(), 60);
+    }
+}

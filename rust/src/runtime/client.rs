@@ -1,0 +1,172 @@
+//! PJRT execution of AOT artifacts (the L2/L1 compute plane).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `client.compile` → `execute`.  HLO *text* is the
+//! interchange format (see python/compile/aot.py and DESIGN.md): the
+//! xla_extension 0.5.1 proto parser rejects jax ≥ 0.5's 64-bit instruction
+//! ids, the text parser reassigns them.
+//!
+//! Executables are compiled lazily on first use and cached for the process
+//! lifetime — Python never runs at request time.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result, bail};
+
+use super::artifacts::{ArtifactSpec, DType, Manifest};
+
+/// A loaded artifact runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// A typed host tensor handed to / returned from [`Runtime::execute`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.tsv`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Open the default `artifacts/` directory next to the workspace root.
+    pub fn open_default() -> Result<Runtime> {
+        Self::open(Path::new("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&mut self, spec: &ArtifactSpec) -> Result<()> {
+        if self.cache.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = spec
+            .path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {:?}", spec.path))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", spec.name))?;
+        self.cache.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact by name with shape/dtype-checked host tensors.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: {} inputs given, {} expected",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, sig) in inputs.iter().zip(&spec.inputs) {
+            if t.dtype() != sig.dtype {
+                bail!("artifact {name} input {}: dtype mismatch", sig.name);
+            }
+            if t.len() != sig.n_elems() {
+                bail!(
+                    "artifact {name} input {}: {} elements given, {:?} expected",
+                    sig.name,
+                    t.len(),
+                    sig.shape
+                );
+            }
+            literals.push(t.to_literal(&sig.shape)?);
+        }
+        self.compile(&spec)?;
+        let exe = self.cache.get(&spec.name).expect("just compiled");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: {} outputs returned, {} expected",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, sig) in parts.into_iter().zip(&spec.outputs) {
+            let t = match sig.dtype {
+                DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+                DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+            };
+            if t.len() != sig.n_elems() {
+                bail!("artifact {name} output {}: shape mismatch", sig.name);
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn n_compiled(&self) -> usize {
+        self.cache.len()
+    }
+}

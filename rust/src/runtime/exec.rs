@@ -1,0 +1,119 @@
+//! Typed entry points over the artifact runtime, with marker padding.
+//!
+//! Padding strategy (see `Manifest::find_raw`): haplotype count must match a
+//! canonical artifact exactly (|H| is baked into the lowered constants);
+//! marker count pads up with inert columns — τ=0 (identity transition),
+//! emission=1 (unannotated), allele=0 — appended on the right.  Inertness is
+//! asserted against the native baseline in rust/tests/runtime_artifacts.rs.
+
+use anyhow::{Context, Result};
+
+use crate::model::panel::{ReferencePanel, TargetHaplotype};
+use crate::model::params::ModelParams;
+
+use super::client::{HostTensor, Runtime};
+
+/// High-level imputation façade over the XLA compute plane.
+pub struct XlaImputer {
+    pub runtime: Runtime,
+    pub params: ModelParams,
+}
+
+impl XlaImputer {
+    pub fn new(runtime: Runtime, params: ModelParams) -> XlaImputer {
+        XlaImputer { runtime, params }
+    }
+
+    /// Canonical H values available for a given panel (sorted).
+    pub fn supported_h(&self) -> Vec<usize> {
+        let mut hs: Vec<usize> = self
+            .runtime
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with("impute_raw_h"))
+            .map(|a| a.inputs[1].shape[1])
+            .collect();
+        hs.sort_unstable();
+        hs.dedup();
+        hs
+    }
+
+    /// Build (tau, emis, alleles) padded to `m_pad` markers.
+    fn build_inputs(
+        &self,
+        panel: &ReferencePanel,
+        target: &TargetHaplotype,
+        m_pad: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (h_n, m_n) = (panel.n_hap(), panel.n_mark());
+        assert!(m_pad >= m_n);
+        let mut tau = vec![0.0f32; m_pad];
+        let mut emis = vec![1.0f32; m_pad * h_n];
+        let mut alleles = vec![0.0f32; m_pad * h_n];
+        for m in 0..m_n {
+            if m > 0 {
+                tau[m] = self.params.tau(panel.gen_dist(m), h_n) as f32;
+            }
+            for h in 0..h_n {
+                let a = panel.allele(h, m);
+                alleles[m * h_n + h] = a as f32;
+                emis[m * h_n + h] = self.params.emission(a, target.obs[m]) as f32;
+            }
+        }
+        (tau, emis, alleles)
+    }
+
+    /// Impute one target through the AOT `impute_raw` artifact.
+    pub fn impute_raw(
+        &mut self,
+        panel: &ReferencePanel,
+        target: &TargetHaplotype,
+    ) -> Result<Vec<f32>> {
+        let (h_n, m_n) = (panel.n_hap(), panel.n_mark());
+        let spec = self
+            .runtime
+            .manifest()
+            .find_raw(h_n, m_n)
+            .with_context(|| {
+                format!(
+                    "no impute_raw artifact for H={h_n}, M<={m_n} \
+                     (canonical H: {:?}; extend aot.py's RAW_SHAPES)",
+                    self.supported_h()
+                )
+            })?
+            .name
+            .clone();
+        let m_pad = self
+            .runtime
+            .manifest()
+            .get(&spec)
+            .expect("spec just found")
+            .inputs[1]
+            .shape[0];
+        let (tau, emis, alleles) = self.build_inputs(panel, target, m_pad);
+        let out = self.runtime.execute(
+            &spec,
+            &[
+                HostTensor::F32(tau),
+                HostTensor::F32(emis),
+                HostTensor::F32(alleles),
+            ],
+        )?;
+        let mut dosage = match out.into_iter().next().expect("one output") {
+            HostTensor::F32(v) => v,
+            _ => anyhow::bail!("dosage dtype"),
+        };
+        dosage.truncate(m_n);
+        Ok(dosage)
+    }
+
+    /// Impute a batch of targets sequentially through the artifact plane.
+    pub fn impute_batch(
+        &mut self,
+        panel: &ReferencePanel,
+        targets: &[TargetHaplotype],
+    ) -> Result<Vec<Vec<f32>>> {
+        targets.iter().map(|t| self.impute_raw(panel, t)).collect()
+    }
+}

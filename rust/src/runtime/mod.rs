@@ -1,0 +1,16 @@
+//! PJRT runtime: load and execute the AOT JAX/Pallas artifacts.
+//!
+//! * [`artifacts`] — `manifest.tsv` parsing and shape lookup.
+//! * [`client`] — PJRT CPU client, lazy compile cache, checked execution.
+//! * [`exec`] — typed imputation entry points with marker padding.
+//!
+//! The Rust binary is self-contained after `make artifacts`: Python/JAX run
+//! once at build time, never on the request path.
+
+pub mod artifacts;
+pub mod client;
+pub mod exec;
+
+pub use artifacts::{ArtifactSpec, DType, Manifest, TensorSig};
+pub use client::{HostTensor, Runtime};
+pub use exec::XlaImputer;

@@ -1,0 +1,54 @@
+//! Offline-friendly substrates: RNG, JSON, statistics, tables, property tests.
+//!
+//! The build environment has no network access and only the `xla` crate's
+//! dependency closure vendored, so the conveniences normally pulled from
+//! crates.io (`rand`, `serde_json`, `criterion`, `proptest`, `clap`) are
+//! re-implemented here at the scale this project needs.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+use std::time::Instant;
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// Time `f` repeatedly: one warmup call plus `reps` measured calls.
+pub fn timed_reps<T>(reps: usize, mut f: impl FnMut() -> T) -> (T, Vec<f64>) {
+    assert!(reps >= 1);
+    let mut out = f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let start = Instant::now();
+        out = f();
+        times.push(start.elapsed().as_secs_f64());
+    }
+    (out, times)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value_and_positive_time() {
+        let (v, t) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn timed_reps_counts() {
+        let mut calls = 0;
+        let (_, times) = timed_reps(3, || calls += 1);
+        assert_eq!(calls, 4); // warmup + 3
+        assert_eq!(times.len(), 3);
+    }
+}

@@ -1,0 +1,114 @@
+//! Genetic-map generation — inter-marker genetic distances `d_m`.
+//!
+//! GBC technology picks marker loci for an even physical distribution, but the
+//! *genetic* distances between adjacent pairs differ slightly (paper §3.2).
+//! The paper draws them from "a randomized uniform distribution seeded from
+//! HapMap3 data"; we do the same with a configurable uniform range whose
+//! default is picked so τ lands in the regime genuine panels see.
+
+use crate::util::rng::Rng;
+
+/// Uniform-range genetic-map model.
+#[derive(Clone, Copy, Debug)]
+pub struct GenMapConfig {
+    /// Lower bound of the uniform inter-marker distance (Morgans).
+    pub d_lo: f64,
+    /// Upper bound.
+    pub d_hi: f64,
+}
+
+impl Default for GenMapConfig {
+    fn default() -> Self {
+        // HapMap3-like: ~36 Morgans over ~1.4M sampled markers genome-wide
+        // gives a mean adjacent-marker distance of ~2.6e-5 M.  Benchmark
+        // panels here are much denser than HapMap3 in markers-per-haplotype
+        // (aspect ratio 100:1 at small H), so we scale the per-step distance
+        // down a decade to keep τ per transition in the strongly-linked
+        // regime (τ ~ 1e-2..1e-1) that eq. (2) assumes — otherwise the chain
+        // recombines every step and imputation signal vanishes for any model.
+        GenMapConfig {
+            d_lo: 5e-7,
+            d_hi: 5e-6,
+        }
+    }
+}
+
+/// Generate `n_mark` genetic distances; `d[0] = 0` (no left neighbour).
+pub fn generate(cfg: &GenMapConfig, n_mark: usize, rng: &mut Rng) -> Vec<f64> {
+    assert!(cfg.d_lo > 0.0 && cfg.d_lo < cfg.d_hi, "bad distance range");
+    let mut d = Vec::with_capacity(n_mark);
+    d.push(0.0);
+    for _ in 1..n_mark {
+        d.push(rng.uniform(cfg.d_lo, cfg.d_hi));
+    }
+    d
+}
+
+/// Total genetic length of a map (sum of distances).
+pub fn total_length(d: &[f64]) -> f64 {
+    d.iter().sum()
+}
+
+/// Cumulative genetic position of every marker (position[0] = 0).
+pub fn positions(d: &[f64]) -> Vec<f64> {
+    let mut pos = Vec::with_capacity(d.len());
+    let mut acc = 0.0;
+    for &x in d {
+        acc += x;
+        pos.push(acc);
+    }
+    pos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_distance_zero_rest_in_range() {
+        let cfg = GenMapConfig::default();
+        let mut rng = Rng::new(1);
+        let d = generate(&cfg, 1000, &mut rng);
+        assert_eq!(d[0], 0.0);
+        assert!(d[1..].iter().all(|&x| x >= cfg.d_lo && x < cfg.d_hi));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = GenMapConfig::default();
+        let a = generate(&cfg, 100, &mut Rng::new(5));
+        let b = generate(&cfg, 100, &mut Rng::new(5));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mean_near_midpoint() {
+        let cfg = GenMapConfig::default();
+        let mut rng = Rng::new(2);
+        let d = generate(&cfg, 100_000, &mut rng);
+        let mean = total_length(&d) / (d.len() - 1) as f64;
+        let mid = (cfg.d_lo + cfg.d_hi) / 2.0;
+        assert!((mean - mid).abs() / mid < 0.02, "mean={mean} mid={mid}");
+    }
+
+    #[test]
+    fn positions_monotone() {
+        let cfg = GenMapConfig::default();
+        let mut rng = Rng::new(3);
+        let d = generate(&cfg, 500, &mut rng);
+        let pos = positions(&d);
+        assert_eq!(pos[0], 0.0);
+        assert!(pos.windows(2).all(|w| w[1] > w[0]));
+        assert!((pos.last().unwrap() - total_length(&d)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad distance range")]
+    fn rejects_inverted_range() {
+        generate(
+            &GenMapConfig { d_lo: 1.0, d_hi: 0.5 },
+            10,
+            &mut Rng::new(0),
+        );
+    }
+}

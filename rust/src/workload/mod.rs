@@ -1,0 +1,15 @@
+//! Synthetic workload generation — the paper's §6.2 recipe.
+//!
+//! The paper evaluates on synthetic reference panels "generated using features
+//! from genuine GWAS": diallelic data at 5 % overall minor-allele frequency,
+//! genetic distances drawn from a randomized uniform distribution seeded from
+//! HapMap3 scale, a 1/100 (raw) or 1/10 (interp) target:reference marker
+//! ratio, and aspect ratios following haplotype/marker counts in existing
+//! GWAS (chromosome 1 ≈ 8 % of the genome).  This module reproduces exactly
+//! that generation process.
+
+pub mod genmap;
+pub mod panelgen;
+pub mod scenarios;
+
+pub use panelgen::{PanelConfig, TargetCase, generate_panel, generate_targets};

@@ -1,0 +1,157 @@
+//! Paper-shaped workload sizing.
+//!
+//! §6.2: "The aspect ratio of the reference panels was chosen based on
+//! haplotypes/markers in existing GWAS, assuming genotyping technology chooses
+//! markers for a uniform distribution and noting that chromosome 1 accounts
+//! for approximately 8 % of the whole human genome."
+//!
+//! HapMap3-like numbers: ~1,000 haplotypes over ~1.4 M genome-wide markers →
+//! chromosome 1 carries ~112k markers, i.e. roughly 100 markers per haplotype.
+//! We keep that markers-per-haplotype ratio as panels scale.
+
+use super::panelgen::PanelConfig;
+
+/// Markers-per-haplotype aspect ratio (see module docs).
+pub const MARKERS_PER_HAP: f64 = 100.0;
+
+/// POETS hardware-thread count per FPGA board (16 tiles × 4 cores × 16 threads).
+pub const THREADS_PER_BOARD: usize = 1024;
+
+/// Full-cluster thread count (48 boards).
+pub const FULL_CLUSTER_THREADS: usize = 48 * THREADS_PER_BOARD;
+
+/// Split a state budget into (n_hap, n_mark) at the paper's aspect ratio.
+///
+/// `n_hap · n_mark ≈ n_states` with `n_mark / n_hap ≈ MARKERS_PER_HAP`,
+/// both at least 2.
+pub fn aspect_for_states(n_states: usize) -> (usize, usize) {
+    aspect_for_states_ratio(n_states, MARKERS_PER_HAP)
+}
+
+/// As [`aspect_for_states`] with an explicit markers-per-haplotype ratio.
+/// DES-feasible sweeps use a squarer aspect (e.g. 10:1) so the haplotype
+/// fan-in stays representative at small state counts; full-scale analytic
+/// sweeps keep the paper's 100:1.
+pub fn aspect_for_states_ratio(n_states: usize, markers_per_hap: f64) -> (usize, usize) {
+    assert!(n_states >= 4, "panel needs at least 2x2 states");
+    let n_hap = ((n_states as f64 / markers_per_hap).sqrt().round() as usize).max(2);
+    let n_mark = (n_states / n_hap).max(2);
+    (n_hap, n_mark)
+}
+
+/// Panel config sized for `boards` FPGA boards at one state per hardware
+/// thread (the Fig 11 regime: "reference panel sizes less than the 49,152
+/// hardware threads available").
+pub fn fig11_config(boards: usize, seed: u64) -> PanelConfig {
+    let (n_hap, n_mark) = aspect_for_states(boards * THREADS_PER_BOARD);
+    PanelConfig {
+        n_hap,
+        n_mark,
+        maf: 0.05,
+        annot_ratio: 0.01,
+        seed,
+        ..PanelConfig::default()
+    }
+}
+
+/// Panel config for the Fig 12 soft-scheduling sweep: the full cluster with
+/// `states_per_thread` panel states per hardware thread.
+pub fn fig12_config(states_per_thread: usize, seed: u64) -> PanelConfig {
+    let (n_hap, n_mark) = aspect_for_states(FULL_CLUSTER_THREADS * states_per_thread);
+    PanelConfig {
+        n_hap,
+        n_mark,
+        maf: 0.05,
+        annot_ratio: 0.01,
+        seed,
+        ..PanelConfig::default()
+    }
+}
+
+/// Panel config for Fig 13 (linear interpolation): ratio 1/10, each thread
+/// governing one HMM state + 9 interpolation states per section.
+pub fn fig13_config(boards: usize, sections_per_thread: usize, seed: u64) -> PanelConfig {
+    let states = boards * THREADS_PER_BOARD * sections_per_thread * 10;
+    let (n_hap, n_mark) = aspect_for_states(states);
+    PanelConfig {
+        n_hap,
+        n_mark,
+        maf: 0.05,
+        annot_ratio: 0.1,
+        seed,
+        ..PanelConfig::default()
+    }
+}
+
+/// Scale a paper-shaped config down by `factor` in state count (keeping the
+/// aspect ratio) so CI-sized runs keep the figure's *shape*.
+pub fn scaled(cfg: &PanelConfig, factor: usize) -> PanelConfig {
+    assert!(factor >= 1);
+    let states = (cfg.n_hap * cfg.n_mark / factor).max(4);
+    let (n_hap, n_mark) = aspect_for_states(states);
+    PanelConfig {
+        n_hap,
+        n_mark,
+        ..*cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aspect_ratio_held() {
+        let (h, m) = aspect_for_states(49_152);
+        assert!(h >= 2 && m >= 2);
+        let ratio = m as f64 / h as f64;
+        assert!(
+            (ratio / MARKERS_PER_HAP - 1.0).abs() < 0.35,
+            "ratio {ratio} too far from {MARKERS_PER_HAP}"
+        );
+        let states = h * m;
+        assert!(
+            (states as f64 / 49_152.0 - 1.0).abs() < 0.1,
+            "states {states}"
+        );
+    }
+
+    #[test]
+    fn aspect_small_panels_clamped() {
+        let (h, m) = aspect_for_states(4);
+        assert!(h >= 2 && m >= 2);
+    }
+
+    #[test]
+    fn fig11_scales_with_boards() {
+        let one = fig11_config(1, 0);
+        let full = fig11_config(48, 0);
+        assert!(full.n_hap * full.n_mark > 40 * one.n_hap * one.n_mark);
+        assert_eq!(one.annot_ratio, 0.01);
+    }
+
+    #[test]
+    fn fig12_scales_with_softsched() {
+        let a = fig12_config(1, 0);
+        let b = fig12_config(10, 0);
+        let fa = a.n_hap * a.n_mark;
+        let fb = b.n_hap * b.n_mark;
+        assert!(fb > 8 * fa && fb < 12 * fa, "{fa} -> {fb}");
+    }
+
+    #[test]
+    fn fig13_ratio_is_one_tenth() {
+        let cfg = fig13_config(2, 1, 0);
+        assert_eq!(cfg.annot_ratio, 0.1);
+        assert!(cfg.n_hap * cfg.n_mark >= 2 * THREADS_PER_BOARD * 10 * 9 / 10);
+    }
+
+    #[test]
+    fn scaled_preserves_other_fields() {
+        let cfg = fig11_config(48, 7);
+        let s = scaled(&cfg, 64);
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.annot_ratio, cfg.annot_ratio);
+        assert!(s.n_hap * s.n_mark <= cfg.n_hap * cfg.n_mark / 32);
+    }
+}

@@ -1,0 +1,94 @@
+//! End-to-end: the full GWAS-upscale workflow (workload generation →
+//! event-driven imputation on the simulated cluster → accuracy scoring →
+//! figure-harness sanity), mirroring examples/gwas_upscale.rs at test size.
+
+use poets_impute::bench::{FigOpts, X86Cost, fig11, fig13};
+use poets_impute::imputation::app::{RawAppConfig, run_raw};
+use poets_impute::imputation::interp_app::run_interp;
+use poets_impute::model::accuracy;
+use poets_impute::poets::topology::ClusterConfig;
+use poets_impute::util::rng::Rng;
+use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+#[test]
+fn gwas_upscale_end_to_end() {
+    let cfg = PanelConfig {
+        n_hap: 24,
+        n_mark: 201,
+        maf: 0.05,
+        annot_ratio: 0.1,
+        seed: 77,
+        ..PanelConfig::default()
+    };
+    let panel = generate_panel(&cfg);
+    let mut rng = Rng::new(78);
+    let cases = generate_targets(&panel, &cfg, 8, &mut rng);
+    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+
+    let app = RawAppConfig {
+        cluster: ClusterConfig::with_boards(4),
+        states_per_thread: 4,
+        ..RawAppConfig::default()
+    };
+    let raw = run_raw(&panel, &targets, &app);
+    let itp = run_interp(
+        &panel,
+        &targets,
+        &RawAppConfig {
+            states_per_thread: 1,
+            ..app
+        },
+    );
+
+    // Both engines must genuinely impute (accuracy far above the 5% MAF
+    // majority-vote floor would sit near 0.95 concordance; require learning
+    // beyond "always major" by checking minor-allele concordance too).
+    for (name, dosages) in [("raw", &raw.dosages), ("interp", &itp.dosages)] {
+        let accs: Vec<_> = cases
+            .iter()
+            .zip(dosages)
+            .map(|(c, d)| accuracy::score(d, &c.truth, &c.masked))
+            .collect();
+        let agg = accuracy::aggregate(&accs);
+        assert!(
+            agg.concordance > 0.9,
+            "{name}: concordance {agg:?}"
+        );
+        assert!(
+            agg.minor_concordance > 0.1,
+            "{name}: no minor-allele signal {agg:?}"
+        );
+    }
+
+    // The paper's economics, end to end.
+    assert!(raw.metrics.sends > 5 * itp.metrics.sends);
+    assert!(itp.sim_seconds < raw.sim_seconds);
+    // Pipelined run completes in ~M + T + slack steps.
+    assert!(raw.metrics.steps <= (201 + 8 + 8) as u64);
+}
+
+#[test]
+fn figure_harnesses_end_to_end_tiny() {
+    // The complete figure pipeline (workload gen → DES + analytic + x86
+    // measurement → report) at minimum size.
+    let opts = FigOpts {
+        des_states_per_board: 32,
+        des_targets: 4,
+        full_targets: 10_000,
+        skip_des: false,
+        seed: 3,
+    };
+    let x86 = X86Cost::measure_default();
+    let f11 = fig11(&[1, 2], &opts, &x86);
+    assert_eq!(f11.rows.len(), 2);
+    for row in &f11.rows {
+        assert!(row.des_speedup.is_some());
+        assert!(row.full_speedup > 0.0);
+        assert!(row.full_poets_s > 0.0);
+    }
+    let f13 = fig13(&[1], &opts, &x86);
+    assert!(f13.rows[0].des_speedup.is_some());
+    // Rendering must produce the paper-style series.
+    assert!(f11.render().contains("boards"));
+    assert!(f13.to_json().render().contains("rows"));
+}

@@ -1,0 +1,221 @@
+//! Property-based invariants (offline proptest substitute, util::prop):
+//! randomised sweeps over panels, mappings and cluster shapes asserting the
+//! model/simulator invariants that no example should ever violate.
+
+use poets_impute::graph::mapping::Mapping;
+use poets_impute::graph::partition::{adjacency, bisect, edge_cut};
+use poets_impute::imputation::app::{RawAppConfig, build_raw_graph, run_raw};
+use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
+use poets_impute::model::interpolation::blends;
+use poets_impute::poets::topology::ClusterConfig;
+use poets_impute::util::prop::forall;
+use poets_impute::util::rng::Rng;
+use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+fn random_problem(
+    rng: &mut Rng,
+    max_h: usize,
+    max_m: usize,
+    n_targets: usize,
+) -> (
+    poets_impute::model::panel::ReferencePanel,
+    Vec<poets_impute::workload::panelgen::TargetCase>,
+) {
+    let cfg = PanelConfig {
+        n_hap: rng.range(2, max_h),
+        n_mark: rng.range(2, max_m),
+        maf: rng.uniform(0.05, 0.45),
+        annot_ratio: rng.uniform(0.05, 0.5),
+        seed: rng.next_u64(),
+        ..PanelConfig::default()
+    };
+    let panel = generate_panel(&cfg);
+    let mut trng = Rng::new(rng.next_u64());
+    let cases = generate_targets(&panel, &cfg, n_targets, &mut trng);
+    (panel, cases)
+}
+
+#[test]
+fn prop_dosage_in_unit_interval_all_engines() {
+    forall("dosage ∈ [0,1]", 25, |rng| {
+        let (panel, cases) = random_problem(rng, 12, 40, 1);
+        let target = &cases[0].masked;
+        let b = Baseline::default();
+        let dense: ImputeOut<f32> = b.impute(&panel, target, Method::DenseThreeLoop);
+        let r1: ImputeOut<f32> = b.impute(&panel, target, Method::Rank1);
+        for d in dense.dosage.iter().chain(&r1.dosage) {
+            if !(-1e-5..=1.00001).contains(&(*d as f64)) {
+                return Err(format!("dosage {d} out of range"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dense_equals_rank1() {
+    forall("dense == rank1", 25, |rng| {
+        let (panel, cases) = random_problem(rng, 12, 30, 1);
+        let b = Baseline::default();
+        let d: ImputeOut<f64> = b.impute(&panel, &cases[0].masked, Method::DenseThreeLoop);
+        let r: ImputeOut<f64> = b.impute(&panel, &cases[0].masked, Method::Rank1);
+        for (x, y) in d.dosage.iter().zip(&r.dosage) {
+            if (x - y).abs() > 1e-9 {
+                return Err(format!("{x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_driven_equals_baseline() {
+    forall("event == baseline", 10, |rng| {
+        let (panel, cases) = random_problem(rng, 9, 24, 2);
+        let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+        let app = RawAppConfig {
+            cluster: ClusterConfig::with_boards(rng.range(1, 4)),
+            states_per_thread: rng.range(1, 32),
+            ..RawAppConfig::default()
+        };
+        let out = run_raw(&panel, &targets, &app);
+        let b = Baseline::default();
+        for (t, target) in targets.iter().enumerate() {
+            let want: ImputeOut<f32> = b.impute(&panel, target, Method::DenseThreeLoop);
+            for m in 0..panel.n_mark() {
+                if (out.dosages[t][m] - want.dosage[m]).abs() >= 1e-3 {
+                    return Err(format!(
+                        "t={t} m={m}: {} vs {}",
+                        out.dosages[t][m], want.dosage[m]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blends_are_valid_convex_weights() {
+    forall("blend fracs ∈ [0,1], anchors exact", 40, |rng| {
+        let (panel, cases) = random_problem(rng, 8, 60, 1);
+        let anchors = cases[0].masked.annotated();
+        if anchors.len() < 2 {
+            return Ok(()); // degenerate: nothing to interpolate
+        }
+        let ws = blends(&panel, &anchors);
+        if ws.len() != panel.n_mark() {
+            return Err("blend length".into());
+        }
+        for (m, w) in ws.iter().enumerate() {
+            if !(0.0..=1.0).contains(&w.frac) {
+                return Err(format!("frac {} at {m}", w.frac));
+            }
+            if w.left + 1 >= anchors.len() {
+                return Err(format!("left index {} out of range", w.left));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mapping_covers_all_vertices_within_cluster() {
+    forall("mapping total and in-range", 40, |rng| {
+        let n = rng.range(1, 2000);
+        let spt = rng.range(1, 64);
+        let cluster = ClusterConfig::with_boards(rng.range(1, 49));
+        if n.div_ceil(spt) > cluster.total_threads() {
+            return Ok(()); // would be rejected (tested elsewhere)
+        }
+        let m = Mapping::manual_2d(n, spt, &cluster);
+        if m.n_vertices() != n {
+            return Err("vertex count".into());
+        }
+        if m.max_load() > spt {
+            return Err(format!("load {} > spt {spt}", m.max_load()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitioner_balanced_and_no_worse_than_random() {
+    forall("bisection balance", 15, |rng| {
+        let (panel, cases) = random_problem(rng, 8, 30, 1);
+        let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+        let g = build_raw_graph(&panel, &targets, &Default::default());
+        let adj = adjacency(&g);
+        let parts = rng.range(2, 9);
+        let assign = bisect(&adj, parts);
+        let mut counts = vec![0usize; parts];
+        for &p in &assign {
+            if p as usize >= parts {
+                return Err(format!("part id {p} out of range"));
+            }
+            counts[p as usize] += 1;
+        }
+        let n = assign.len();
+        let target = n / parts;
+        for &c in &counts {
+            if c > 2 * target + 2 {
+                return Err(format!("imbalance {counts:?}"));
+            }
+        }
+        // Sanity: cut no worse than round-robin's.
+        let rr: Vec<u32> = (0..n).map(|v| (v % parts) as u32).collect();
+        if edge_cut(&adj, &assign) > edge_cut(&adj, &rr) {
+            return Err("worse than round-robin".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_route_lengths_symmetric_and_bounded() {
+    use poets_impute::poets::noc::Noc;
+    forall("route symmetry", 60, |rng| {
+        let boards = rng.range(1, 49);
+        let c = ClusterConfig::with_boards(boards);
+        let a = rng.range(0, boards);
+        let b = rng.range(0, boards);
+        let ab = Noc::board_route(&c, a, b).len();
+        let ba = Noc::board_route(&c, b, a).len();
+        if ab != ba {
+            return Err(format!("asymmetric {a}->{b}: {ab} vs {ba}"));
+        }
+        let (gx, gy) = c.board_grid;
+        if ab > gx + gy {
+            return Err(format!("route too long: {ab}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_metrics_consistent() {
+    forall("metrics consistency", 8, |rng| {
+        let (panel, cases) = random_problem(rng, 8, 20, 2);
+        let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+        let app = RawAppConfig {
+            cluster: ClusterConfig::with_boards(2),
+            states_per_thread: rng.range(1, 16),
+            ..RawAppConfig::default()
+        };
+        let out = run_raw(&panel, &targets, &app);
+        let m = &out.metrics;
+        if m.copies_delivered != m.recv_handlers {
+            return Err("copies != handlers".into());
+        }
+        if m.sim_cycles == 0 || m.steps == 0 {
+            return Err("empty run".into());
+        }
+        if m.max_core_busy > m.sim_cycles {
+            return Err("core busier than time".into());
+        }
+        if m.step_durations.len() as u64 != m.steps {
+            return Err("step records mismatch".into());
+        }
+        Ok(())
+    });
+}

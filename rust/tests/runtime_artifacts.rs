@@ -1,0 +1,144 @@
+//! Integration: the AOT artifact plane (JAX/Pallas → HLO text → PJRT)
+//! against the native Rust baseline — the cross-language correctness seam.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise, but `make test`
+//! always builds artifacts first).
+
+use std::path::Path;
+
+use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
+use poets_impute::model::panel::TargetHaplotype;
+use poets_impute::model::params::ModelParams;
+use poets_impute::runtime::{Runtime, XlaImputer};
+use poets_impute::util::rng::Rng;
+use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.tsv").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn problem(seed: u64, n_hap: usize, n_mark: usize, n: usize) -> (poets_impute::model::panel::ReferencePanel, Vec<TargetHaplotype>) {
+    let cfg = PanelConfig {
+        n_hap,
+        n_mark,
+        maf: 0.2,
+        annot_ratio: 0.2,
+        seed,
+        ..PanelConfig::default()
+    };
+    let panel = generate_panel(&cfg);
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let targets = generate_targets(&panel, &cfg, n, &mut rng)
+        .into_iter()
+        .map(|c| c.masked)
+        .collect();
+    (panel, targets)
+}
+
+#[test]
+fn manifest_loads_and_lists_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).expect("open runtime");
+    assert!(rt.manifest().artifacts.len() >= 10);
+    assert!(rt.manifest().get("impute_raw_h16_m32").is_some());
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn xla_plane_matches_native_baseline_exact_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).expect("open runtime");
+    let mut imputer = XlaImputer::new(rt, ModelParams::default());
+    let (panel, targets) = problem(1, 16, 32, 3);
+    let b = Baseline::default();
+    for t in &targets {
+        let got = imputer.impute_raw(&panel, t).expect("xla impute");
+        let want: ImputeOut<f32> = b.impute(&panel, t, Method::Rank1);
+        assert_eq!(got.len(), 32);
+        for m in 0..32 {
+            assert!(
+                (got[m] - want.dosage[m]).abs() < 1e-4,
+                "marker {m}: xla {} vs native {}",
+                got[m],
+                want.dosage[m]
+            );
+        }
+    }
+}
+
+#[test]
+fn marker_padding_is_inert() {
+    // M=20 < canonical 32: the runtime pads with τ=0/emis=1/allele=0 columns;
+    // dosages over the real markers must be unchanged.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).expect("open runtime");
+    let mut imputer = XlaImputer::new(rt, ModelParams::default());
+    let (panel, targets) = problem(2, 16, 20, 2);
+    let b = Baseline::default();
+    for t in &targets {
+        let got = imputer.impute_raw(&panel, t).expect("xla impute (padded)");
+        let want: ImputeOut<f32> = b.impute(&panel, t, Method::Rank1);
+        assert_eq!(got.len(), 20);
+        for m in 0..20 {
+            assert!(
+                (got[m] - want.dosage[m]).abs() < 1e-4,
+                "marker {m}: padded xla {} vs native {}",
+                got[m],
+                want.dosage[m]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_plane_matches_event_driven() {
+    // Full three-layer agreement: Pallas/XLA plane == event-driven cluster.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).expect("open runtime");
+    let mut imputer = XlaImputer::new(rt, ModelParams::default());
+    let (panel, targets) = problem(3, 16, 30, 2);
+    let cfg = poets_impute::imputation::RawAppConfig {
+        cluster: poets_impute::poets::topology::ClusterConfig::with_boards(2),
+        states_per_thread: 8,
+        ..Default::default()
+    };
+    let event = poets_impute::imputation::run_raw(&panel, &targets, &cfg);
+    for (t, target) in targets.iter().enumerate() {
+        let xla = imputer.impute_raw(&panel, target).expect("xla");
+        for m in 0..panel.n_mark() {
+            assert!(
+                (xla[m] - event.dosages[t][m]).abs() < 1e-3,
+                "target {t} marker {m}: xla {} vs event {}",
+                xla[m],
+                event.dosages[t][m]
+            );
+        }
+    }
+}
+
+#[test]
+fn unknown_h_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).expect("open runtime");
+    let mut imputer = XlaImputer::new(rt, ModelParams::default());
+    let (panel, targets) = problem(4, 12, 20, 1); // H=12 not canonical
+    let err = imputer.impute_raw(&panel, &targets[0]).unwrap_err();
+    assert!(err.to_string().contains("canonical H"), "{err}");
+}
+
+#[test]
+fn executables_are_cached() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).expect("open runtime");
+    let mut imputer = XlaImputer::new(rt, ModelParams::default());
+    let (panel, targets) = problem(5, 16, 32, 4);
+    assert_eq!(imputer.runtime.n_compiled(), 0);
+    imputer.impute_batch(&panel, &targets).expect("batch");
+    assert_eq!(imputer.runtime.n_compiled(), 1, "one artifact, one compile");
+}
