@@ -2,25 +2,37 @@
 //! host-side event throughput (events/second of *host* time), the quantity
 //! that bounds how large a panel the DES plane can sweep.  This is the L3
 //! optimisation target of EXPERIMENTS.md §Perf.
+//!
+//! Sweeps host worker threads (`SimConfig::threads`) per config and emits a
+//! machine-readable `BENCH_desim.json` so the perf trajectory is tracked
+//! across PRs.  Functional results are thread-count invariant (asserted
+//! here via `sim_cycles`), so the sweep measures host throughput only.
 
-use poets_impute::imputation::app::{RawAppConfig, run_raw};
+use poets_impute::imputation::app::{EventRunResult, RawAppConfig, run_raw};
 use poets_impute::imputation::interp_app::run_interp;
 use poets_impute::poets::topology::ClusterConfig;
+use poets_impute::util::json::Json;
 use poets_impute::util::rng::Rng;
 use poets_impute::util::table::{Table, fmt_count, fmt_secs};
 use poets_impute::util::timed;
 use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+const THREAD_SWEEP: &[usize] = &[1, 2, 4, 8];
 
 fn main() {
     let mut t = Table::new(&[
         "app",
         "panel",
         "targets",
+        "threads",
         "host time",
         "events",
         "host events/s",
+        "speedup",
         "sim time",
     ]);
+    let mut json_rows = Json::Arr(Vec::new());
+
     for &(h, m, targets) in &[(16usize, 160usize, 8usize), (32, 320, 8)] {
         let cfg = PanelConfig {
             n_hap: h,
@@ -35,40 +47,75 @@ fn main() {
             .into_iter()
             .map(|c| c.masked)
             .collect();
-        let app = RawAppConfig {
+        let base = RawAppConfig {
             cluster: ClusterConfig::with_boards(4),
             states_per_thread: 4,
             ..RawAppConfig::default()
         };
-        let (raw, host) = timed(|| run_raw(&panel, &tgts, &app));
-        t.row(vec![
-            "raw".into(),
-            format!("{h}x{m}"),
-            targets.to_string(),
-            fmt_secs(host),
-            fmt_count(raw.metrics.copies_delivered),
-            format!("{:.2e}", raw.metrics.copies_delivered as f64 / host),
-            fmt_secs(raw.sim_seconds),
-        ]);
-        let (itp, host) = timed(|| {
-            run_interp(
-                &panel,
-                &tgts,
-                &RawAppConfig {
-                    states_per_thread: 1,
-                    ..app
-                },
-            )
-        });
-        t.row(vec![
-            "interp".into(),
-            format!("{h}x{m}"),
-            targets.to_string(),
-            fmt_secs(host),
-            fmt_count(itp.metrics.copies_delivered),
-            format!("{:.2e}", itp.metrics.copies_delivered as f64 / host),
-            fmt_secs(itp.sim_seconds),
-        ]);
+
+        for (app_name, spt) in [("raw", 4usize), ("interp", 1usize)] {
+            let mut serial_time = 0.0f64;
+            let mut serial_cycles = 0u64;
+            for &threads in THREAD_SWEEP {
+                let app = RawAppConfig {
+                    states_per_thread: spt,
+                    ..base.clone()
+                }
+                .with_threads(threads);
+                let (out, host): (EventRunResult, f64) = if app_name == "raw" {
+                    timed(|| run_raw(&panel, &tgts, &app))
+                } else {
+                    timed(|| run_interp(&panel, &tgts, &app))
+                };
+                if threads == 1 {
+                    serial_time = host;
+                    serial_cycles = out.metrics.sim_cycles;
+                } else {
+                    assert_eq!(
+                        out.metrics.sim_cycles, serial_cycles,
+                        "thread count changed simulated timing"
+                    );
+                }
+                let events = out.metrics.copies_delivered;
+                let eps = events as f64 / host;
+                t.row(vec![
+                    app_name.into(),
+                    format!("{h}x{m}"),
+                    targets.to_string(),
+                    threads.to_string(),
+                    fmt_secs(host),
+                    fmt_count(events),
+                    format!("{eps:.2e}"),
+                    format!("{:.2}x", serial_time / host),
+                    fmt_secs(out.sim_seconds),
+                ]);
+                let mut row = Json::obj();
+                row.set("app", app_name)
+                    .set("panel", format!("{h}x{m}"))
+                    .set("n_hap", h)
+                    .set("n_mark", m)
+                    .set("targets", targets)
+                    .set("threads", threads)
+                    .set("host_seconds", host)
+                    .set("events", events)
+                    .set("events_per_s", eps)
+                    .set("speedup_vs_serial", serial_time / host)
+                    .set("sim_seconds", out.sim_seconds);
+                json_rows.push(row);
+            }
+        }
     }
+
     println!("## DES hot path (host-side throughput)\n{}", t.render());
+
+    let mut report = Json::obj();
+    report
+        .set("bench", "desim_hotpath")
+        .set("thread_sweep", Json::Arr(THREAD_SWEEP.iter().map(|&n| Json::Int(n as i64)).collect()))
+        .set("rows", json_rows);
+    let path = "BENCH_desim.json";
+    match std::fs::write(path, report.pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

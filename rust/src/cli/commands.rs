@@ -25,7 +25,9 @@ USAGE:
 COMMANDS:
   impute     run imputation on a synthetic workload and score accuracy
              --hap N --mark N --targets N --seed S --annot-ratio R
-             --engine baseline|rank1|event|interp|xla --boards B --spt N [--json]
+             --engine baseline|rank1|event|interp|xla --boards B --spt N
+             --threads N (host workers for the DES deliver/step phases;
+             results are thread-count invariant) [--json]
   validate   run ALL engines on one workload and cross-check dosages
              --hap N --mark N --targets N --seed S
   bench      regenerate a paper experiment:
@@ -64,6 +66,7 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
     let engine = args.get_str("engine", "event");
     let boards = args.get("boards", 4usize)?;
     let spt = args.get("spt", 8usize)?;
+    let threads = args.get("threads", 1usize)?;
     let as_json = args.has("json");
     args.reject_unknown()?;
 
@@ -75,7 +78,8 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
         states_per_thread: spt,
         sim: SimConfig::default(),
         ..RawAppConfig::default()
-    };
+    }
+    .with_threads(threads);
     let b = Baseline::default();
 
     let (dosages, host_secs, sim_secs): (Vec<Vec<f32>>, f64, Option<f64>) = match engine.as_str() {

@@ -22,8 +22,10 @@ pub struct Graph<D: Device> {
 }
 
 impl<D: Device> Graph<D> {
+    /// Vertex count — derived from the port table so it stays correct while
+    /// devices are temporarily moved out via [`Graph::take_devices`].
     pub fn n_vertices(&self) -> usize {
-        self.devices.len()
+        self.ports.len()
     }
 
     #[inline]
@@ -42,6 +44,29 @@ impl<D: Device> Graph<D> {
 
     pub fn ports_of(&self, v: VertexId) -> &[DestListId] {
         &self.ports[v as usize]
+    }
+
+    /// Move every device out of the graph (the delivery engine repartitions
+    /// them into per-tile shards for the duration of a run).  The graph's
+    /// ports and destination pool stay intact; `devices` is left empty until
+    /// [`Graph::restore_devices`] puts the same devices back.
+    pub fn take_devices(&mut self) -> Vec<D> {
+        std::mem::take(&mut self.devices)
+    }
+
+    /// Restore devices previously moved out with [`Graph::take_devices`]
+    /// (in vertex-id order).
+    pub fn restore_devices(&mut self, devices: Vec<D>) {
+        assert!(
+            self.devices.is_empty(),
+            "restore_devices on a graph that still owns devices"
+        );
+        assert_eq!(
+            devices.len(),
+            self.ports.len(),
+            "restored device count does not match vertex count"
+        );
+        self.devices = devices;
     }
 
     /// Total directed edge count (sum of port fan-outs over vertices).
@@ -159,6 +184,30 @@ mod tests {
         assert_eq!(g.dests(g.dest_list(v2, p2)), &[v0]);
         assert_eq!(g.n_dest_lists(), 2);
         assert_eq!(g.n_edges(), 5);
+    }
+
+    #[test]
+    fn devices_roundtrip_through_take_restore() {
+        let mut b = GraphBuilder::new();
+        b.add_vertex(Null);
+        b.add_vertex(Null);
+        let mut g = b.build();
+        let devs = g.take_devices();
+        assert_eq!(devs.len(), 2);
+        assert!(g.devices.is_empty());
+        assert_eq!(g.n_vertices(), 2, "vertex count survives the take");
+        g.restore_devices(devs);
+        assert_eq!(g.devices.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match vertex count")]
+    fn restore_rejects_wrong_count() {
+        let mut b = GraphBuilder::new();
+        b.add_vertex(Null);
+        let mut g = b.build();
+        g.take_devices();
+        g.restore_devices(vec![]);
     }
 
     #[test]

@@ -54,6 +54,12 @@ impl<M> Ctx<M> {
         std::mem::take(&mut self.sends)
     }
 
+    /// Drain recorded sends in place, reusing the buffer (hot path: the
+    /// delivery engine calls this once per handler invocation).
+    pub fn drain_sends(&mut self) -> std::vec::Drain<'_, (PortId, M)> {
+        self.sends.drain(..)
+    }
+
     /// Recorded FP-op count.
     pub fn flops(&self) -> u64 {
         self.flops
@@ -72,8 +78,15 @@ impl<M> Ctx<M> {
 ///
 /// `Msg` must be `'static + Clone` and small — the simulator asserts it fits
 /// the 64-byte event budget of the Tinsel fabric.
-pub trait Device {
-    type Msg: Clone + 'static;
+///
+/// Devices are `Send` and messages `Send + Sync`: the simulator's delivery
+/// engine partitions devices into per-tile shards and fans the deliver/step
+/// phases out across host threads, with each superstep's message arena shared
+/// read-only between shards.  Device state itself is never shared — a shard
+/// owns its resident devices exclusively — so no `Sync` bound is needed on
+/// the device type.
+pub trait Device: Send {
+    type Msg: Clone + Send + Sync + 'static;
 
     /// Cluster initialisation handler (paper Algorithm 1, Initialization).
     fn init(&mut self, ctx: &mut Ctx<Self::Msg>);
@@ -103,6 +116,18 @@ mod tests {
         assert_eq!(ctx.step, 3);
         let sends = ctx.take_sends();
         assert_eq!(sends, vec![(0, 11), (1, 22)]);
+        assert!(ctx.take_sends().is_empty());
+    }
+
+    #[test]
+    fn ctx_drain_reuses_buffer() {
+        let mut ctx: Ctx<u32> = Ctx::new(0, 0);
+        ctx.send(0, 1);
+        ctx.send(2, 3);
+        let drained: Vec<_> = ctx.drain_sends().collect();
+        assert_eq!(drained, vec![(0, 1), (2, 3)]);
+        // Buffer empty again: reset's debug assertion must hold.
+        ctx.reset(1, 1);
         assert!(ctx.take_sends().is_empty());
     }
 

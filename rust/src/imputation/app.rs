@@ -43,6 +43,17 @@ impl Default for RawAppConfig {
     }
 }
 
+impl RawAppConfig {
+    /// Fan the simulator's deliver/step phases out over `threads` host
+    /// workers.  Functional results and simulated timings are thread-count
+    /// invariant (the superstep barrier makes parallel delivery exact — see
+    /// `poets::desim` module docs); only host wall-clock changes.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.sim.threads = Some(threads.max(1));
+        self
+    }
+}
+
 /// Result of an event-driven run.
 pub struct EventRunResult {
     /// `dosages[target][marker]`.
@@ -261,6 +272,20 @@ mod tests {
         // Copies: each α/β multicast delivers H copies; posteriors 1 each.
         let expected_copies = t * ((m - 1) * h * h * 2 + m * (h - 1));
         assert_eq!(out.metrics.copies_delivered, expected_copies);
+    }
+
+    #[test]
+    fn host_threads_do_not_change_results_or_timing() {
+        let (panel, targets) = problem(7, 8, 14, 3);
+        let serial = run_raw(&panel, &targets, &small_cfg());
+        let parallel = run_raw(&panel, &targets, &small_cfg().with_threads(4));
+        assert_eq!(serial.dosages, parallel.dosages, "thread count changed numerics");
+        assert_eq!(serial.metrics.sim_cycles, parallel.metrics.sim_cycles);
+        assert_eq!(serial.metrics.sends, parallel.metrics.sends);
+        assert_eq!(
+            serial.metrics.copies_delivered,
+            parallel.metrics.copies_delivered
+        );
     }
 
     #[test]

@@ -265,6 +265,16 @@ mod tests {
     }
 
     #[test]
+    fn interp_host_threads_do_not_change_results() {
+        let (panel, targets) = problem(6, 6, 31, 2);
+        let serial = run_interp(&panel, &targets, &cfg());
+        let parallel = run_interp(&panel, &targets, &cfg().with_threads(8));
+        assert_eq!(serial.dosages, parallel.dosages, "thread count changed numerics");
+        assert_eq!(serial.metrics.sim_cycles, parallel.metrics.sim_cycles);
+        assert_eq!(serial.metrics.steps, parallel.metrics.steps);
+    }
+
+    #[test]
     fn message_reduction_vs_raw() {
         // The §6.3 claim: sectioning cuts messages by roughly the section
         // size. Compare send counts of raw vs interp on the same panel.

@@ -10,25 +10,48 @@
 //! 1. **Dispatch** — send requests buffered during the previous superstep are
 //!    serviced: the sending core pays the send-request cost, the event
 //!    traverses the NoC (inter-board links serialise per event), and one
-//!    *group arrival* per destination tile is pushed onto the time-ordered
-//!    heap.
-//! 2. **Deliver** — group arrivals pop in time order; the tile mailbox
-//!    ingests one copy per destination vertex (serialised — the fan-in
-//!    bottleneck), and each copy's `recv` handler executes on its vertex's
-//!    core (cores are serial servers shared by their resident threads, which
-//!    is how soft-scheduling costs emerge).  Handlers buffer new sends for
-//!    the *next* superstep.
-//! 3. **Step** — when the heap drains, the termination wave runs; if every
+//!    *group arrival* per destination tile is appended to that tile's queue.
+//! 2. **Deliver** — each tile processes its own queue in time order; the tile
+//!    mailbox ingests one copy per destination vertex (serialised — the
+//!    fan-in bottleneck), and each copy's `recv` handler executes on its
+//!    vertex's core (cores are serial servers shared by their resident
+//!    threads, which is how soft-scheduling costs emerge).  Handlers buffer
+//!    new sends for the *next* superstep.
+//! 3. **Step** — when every queue drains, the termination wave runs; if every
 //!    device voted halt and nothing is buffered, the run ends, otherwise all
 //!    `step` handlers execute and the next superstep begins.
+//!
+//! # The execution-semantics contract (host-side parallelism)
 //!
 //! Because messages sent in superstep *k* are delivered only in *k+1*, the
 //! functional results are independent of the timing model — timing
 //! approximations can never corrupt numerics (asserted by the
-//! baseline-vs-event integration tests).
+//! baseline-vs-event integration tests).  The same barrier makes the
+//! *deliver* and *step* phases embarrassingly parallel on the host — the
+//! property POETS itself exploits in hardware:
+//!
+//! * every resource a delivery touches (mailbox, cores, resident devices) is
+//!   owned by exactly one tile, so the simulator partitions all mutable
+//!   per-tile state into [`TileShard`]s and hands disjoint shard slices to
+//!   worker threads (type-level disjointness — no locks, no aliasing);
+//! * message payloads are written once per superstep into a shared
+//!   read-only *arena*; queue entries are 32-byte POD records
+//!   ([`GroupArrival`]) carrying an arena index, so multicast never clones
+//!   a payload per destination group;
+//! * the only cross-tile values are the quiesce time (a `max`-reduce,
+//!   exact over `u64`) and the halt vote (an `and`-reduce), so a run is
+//!   **bit-identical for every thread count** — `SimConfig::threads`
+//!   changes host wall-clock only, never dosages, `sim_cycles`, or event
+//!   counts (asserted by `tests/parallel_equivalence.rs`).
+//!
+//! Set [`SimConfig::threads`] to `Some(n)` to fan each superstep's
+//! deliver+step phases out over `n` OS threads (`None`/`Some(1)` = serial;
+//! the same shard code runs either way).  Dispatch stays serial: it mutates
+//! the global NoC link clocks and assigns the deterministic arrival
+//! sequence numbers.
 
-use std::collections::BinaryHeap;
-use std::sync::Arc;
+use std::sync::Barrier;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::graph::builder::Graph;
 use crate::graph::device::{Ctx, Device, PortId, VertexId};
@@ -36,7 +59,7 @@ use crate::graph::mapping::Mapping;
 
 use super::costmodel::CostModel;
 use super::event::{GroupArrival, assert_event_fits};
-use super::mailbox::MailboxBank;
+use super::mailbox::Mailbox;
 use super::metrics::SimMetrics;
 use super::multicast::McastPlan;
 use super::noc::Noc;
@@ -50,6 +73,10 @@ pub struct SimConfig {
     pub max_steps: u64,
     /// Record per-step durations (small overhead, used by figure harnesses).
     pub record_steps: bool,
+    /// Host worker threads for the deliver/step phases.  `None` or `Some(1)`
+    /// runs serially; `Some(n)` fans the per-tile shards out over `n` OS
+    /// threads.  Results are bit-identical for every value (see module docs).
+    pub threads: Option<usize>,
 }
 
 impl Default for SimConfig {
@@ -57,12 +84,234 @@ impl Default for SimConfig {
         SimConfig {
             max_steps: 1_000_000,
             record_steps: true,
+            threads: None,
         }
     }
 }
 
 /// A buffered send request: (sender, port, message).
-type Send<M> = (VertexId, PortId, M);
+type SendReq<M> = (VertexId, PortId, M);
+
+/// All mutable state owned by one tile: its mailbox, its cores' clocks, the
+/// devices resident on it, its superstep delivery queue and its outbound
+/// send buffer.  Shards are disjoint by construction, so the deliver/step
+/// phases may run one shard per worker with no synchronisation.
+struct TileShard<D: Device> {
+    /// Resident vertices, ascending vertex id (slot order).
+    vertices: Vec<VertexId>,
+    /// Devices for `vertices` (same order), moved out of the graph per run.
+    devices: Vec<D>,
+    /// Busy-until / cumulative-busy clocks of this tile's cores.
+    core_free: Vec<u64>,
+    core_busy: Vec<u64>,
+    /// Resident vertices per local core (bulk step-handler charging).
+    core_vertex_count: Vec<u32>,
+    mailbox: Mailbox,
+    /// Group arrivals for the current superstep (bucketed by dispatch).
+    queue: Vec<GroupArrival>,
+    /// Sends buffered by this shard's handlers during the current superstep.
+    out: Vec<SendReq<D::Msg>>,
+    /// Reusable handler context.
+    ctx: Ctx<D::Msg>,
+    /// Latest completion time produced by the current phase.
+    latest: u64,
+    /// Whether any resident device voted to continue this superstep.
+    voted_continue: bool,
+    // Per-shard event counters, folded into `SimMetrics` at run end.
+    copies_delivered: u64,
+    recv_handlers: u64,
+}
+
+/// Immutable per-superstep environment shared by every shard worker.
+struct Env<'a, M> {
+    plan: &'a McastPlan,
+    cost: &'a CostModel,
+    /// This superstep's message payloads (one slot per send request).
+    arena: &'a [M],
+    /// Vertex → slot within its tile shard.
+    slot_of: &'a [u32],
+    /// Vertex → core index within its tile.
+    local_core_of: &'a [u32],
+    /// Simulated hardware threads (termination-wave cost input).
+    n_sim_threads: usize,
+}
+
+impl<D: Device> TileShard<D> {
+    /// Charge one handler invocation on `v`'s core; returns its finish time.
+    fn charge_handler(&mut self, v: VertexId, ready: u64, env: &Env<'_, D::Msg>) -> u64 {
+        let lc = env.local_core_of[v as usize] as usize;
+        let start = ready.max(self.core_free[lc]);
+        let cycles = env.cost.handler(self.ctx.flops());
+        self.core_free[lc] = start + cycles;
+        self.core_busy[lc] += cycles;
+        start + cycles
+    }
+
+    /// Move the context's buffered sends into this shard's outbox.
+    fn flush_sends(&mut self, v: VertexId) {
+        for (port, msg) in self.ctx.drain_sends() {
+            self.out.push((v, port, msg));
+        }
+    }
+
+    /// Superstep 0: run every resident device's init handler.
+    fn init_phase(&mut self, env: &Env<'_, D::Msg>) {
+        let mut latest = 0u64;
+        for slot in 0..self.vertices.len() {
+            let v = self.vertices[slot];
+            self.ctx.reset(v, 0);
+            self.devices[slot].init(&mut self.ctx);
+            latest = latest.max(self.charge_handler(v, 0, env));
+            self.flush_sends(v);
+        }
+        self.latest = latest;
+    }
+
+    /// Deliver this tile's group arrivals in time order: mailbox ingest +
+    /// per-copy recv handlers, all against tile-local state.
+    #[allow(clippy::needless_range_loop)] // index loop: `self` split-borrows
+    fn deliver_phase(&mut self, step: u64, env: &Env<'_, D::Msg>) {
+        self.queue.sort_unstable(); // ascending (t, seq)
+        let mut latest = 0u64;
+        for qi in 0..self.queue.len() {
+            let ev = self.queue[qi];
+            let dests = env.plan.group_dests(ev.group as usize);
+            let n = dests.len();
+            let first_ready = self.mailbox.ingest(ev.t, n, env.cost);
+            self.copies_delivered += n as u64;
+            self.recv_handlers += n as u64;
+            latest = latest.max(ev.t);
+            let msg = &env.arena[ev.msg_idx as usize];
+            for (i, &d) in dests.iter().enumerate() {
+                let ready = first_ready + i as u64 * env.cost.mailbox_ingress;
+                let slot = env.slot_of[d as usize] as usize;
+                self.ctx.reset(d, step);
+                self.devices[slot].recv(msg, ev.src, &mut self.ctx);
+                latest = latest.max(self.charge_handler(d, ready, env));
+                self.flush_sends(d);
+            }
+        }
+        self.queue.clear();
+        self.latest = latest;
+    }
+
+    /// Latest busy-until point this shard contributes to the quiesce time.
+    fn quiesce_point(&self) -> u64 {
+        let core_max = self.core_free.iter().copied().max().unwrap_or(0);
+        self.latest.max(core_max).max(self.mailbox.free_at())
+    }
+
+    /// Post-barrier phase: floor clocks to the step signal, bulk-charge the
+    /// uniform handler cost, run every resident device's step handler.
+    #[allow(clippy::needless_range_loop)] // index loop: `self` split-borrows
+    fn step_phase(&mut self, now: u64, step: u64, env: &Env<'_, D::Msg>) {
+        for f in &mut self.core_free {
+            *f = (*f).max(now);
+        }
+        self.mailbox.advance_to(now);
+        // At the barrier all cores are synced to `now`, so per-vertex serial
+        // charging telescopes to count·handler(0) per core.  Only the rare
+        // handlers that do extra FP work pay the delta individually.
+        for lc in 0..self.core_vertex_count.len() {
+            let cycles = self.core_vertex_count[lc] as u64 * env.cost.handler(0);
+            self.core_free[lc] += cycles;
+            self.core_busy[lc] += cycles;
+        }
+        let mut any_continue = false;
+        for slot in 0..self.vertices.len() {
+            let v = self.vertices[slot];
+            self.ctx.reset(v, step);
+            any_continue |= self.devices[slot].step(&mut self.ctx);
+            if self.ctx.flops() > 0 {
+                let lc = env.local_core_of[v as usize] as usize;
+                let cycles = self.ctx.flops() * env.cost.flop;
+                self.core_free[lc] += cycles;
+                self.core_busy[lc] += cycles;
+            }
+            self.flush_sends(v);
+        }
+        self.voted_continue = any_continue;
+    }
+}
+
+/// One worker's share of a superstep: deliver its shards, contribute to the
+/// global quiesce max, wait at the barrier, then run its shards' step
+/// handlers against the (identically recomputed) step-signal time.
+fn superstep_worker<D: Device>(
+    shards: &mut [TileShard<D>],
+    env: &Env<'_, D::Msg>,
+    step: u64,
+    step_start: u64,
+    quiesce: &AtomicU64,
+    barrier: &Barrier,
+) {
+    let mut local_q = step_start;
+    for s in shards.iter_mut() {
+        s.deliver_phase(step, env);
+        local_q = local_q.max(s.quiesce_point());
+    }
+    quiesce.fetch_max(local_q, Ordering::SeqCst);
+    barrier.wait();
+    // Every worker derives the same step-signal time from the shared quiesce
+    // point — exact u64 arithmetic, so bit-identical across thread counts.
+    let q = quiesce.load(Ordering::SeqCst);
+    let now = termination::detect(q, env.n_sim_threads, true, 0, env.cost).step_at;
+    for s in shards.iter_mut() {
+        s.step_phase(now, step, env);
+    }
+}
+
+/// Run one full superstep (deliver + step phases) over all shards, fanning
+/// out over at most `host_threads` workers.  Returns the quiesce time.
+fn run_superstep<D: Device>(
+    shards: &mut [TileShard<D>],
+    host_threads: usize,
+    env: &Env<'_, D::Msg>,
+    step: u64,
+    step_start: u64,
+) -> u64 {
+    let n = shards.len();
+    let quiesce = AtomicU64::new(step_start);
+    if host_threads <= 1 || n <= 1 {
+        let barrier = Barrier::new(1);
+        superstep_worker(shards, env, step, step_start, &quiesce, &barrier);
+    } else {
+        let workers = host_threads.min(n);
+        let chunk = n.div_ceil(workers);
+        let n_chunks = n.div_ceil(chunk);
+        let barrier = Barrier::new(n_chunks);
+        std::thread::scope(|sc| {
+            let (envr, qr, br) = (env, &quiesce, &barrier);
+            for ch in shards.chunks_mut(chunk) {
+                sc.spawn(move || superstep_worker(ch, envr, step, step_start, qr, br));
+            }
+        });
+    }
+    quiesce.load(Ordering::SeqCst)
+}
+
+/// Run the init phase over all shards (tile-parallel, no barrier needed).
+fn run_init<D: Device>(shards: &mut [TileShard<D>], host_threads: usize, env: &Env<'_, D::Msg>) {
+    let n = shards.len();
+    if host_threads <= 1 || n <= 1 {
+        for s in shards.iter_mut() {
+            s.init_phase(env);
+        }
+    } else {
+        let workers = host_threads.min(n);
+        let chunk = n.div_ceil(workers);
+        std::thread::scope(|sc| {
+            let envr = env;
+            for ch in shards.chunks_mut(chunk) {
+                sc.spawn(move || {
+                    for s in ch.iter_mut() {
+                        s.init_phase(envr);
+                    }
+                });
+            }
+        });
+    }
+}
 
 /// The simulator. Owns the application graph and all cluster state.
 pub struct Simulator<D: Device> {
@@ -71,22 +320,18 @@ pub struct Simulator<D: Device> {
     cluster: ClusterConfig,
     cost: CostModel,
     cfg: SimConfig,
-    /// Immutable after build; Arc so the delivery hot path can hold a view
-    /// while mutating simulator state (no per-event clone of dest lists).
-    plan: Arc<McastPlan>,
+    /// Immutable after build; flat offsets pre-resolved so the dispatch and
+    /// deliver hot paths do no per-event `Arc` or nested-`Vec` traffic.
+    plan: McastPlan,
     noc: Noc,
-    mailboxes: MailboxBank,
-    core_free: Vec<u64>,
-    core_busy: Vec<u64>,
-    /// Cached core index per vertex (hot path).
-    core_of: Vec<u32>,
-    /// Vertices per core (bulk step-handler charging).
-    core_vertex_count: Vec<u32>,
-    /// Cached (board, tile) per vertex's thread.
+    /// Per-tile mutable state (see [`TileShard`]).
+    shards: Vec<TileShard<D>>,
+    /// Cached (board, tile, core-in-tile, slot-in-shard) per vertex.
     board_of: Vec<u32>,
     tile_of: Vec<u32>,
-    pending: Vec<Send<D::Msg>>,
-    heap: BinaryHeap<GroupArrival<D::Msg>>,
+    local_core_of: Vec<u32>,
+    slot_of: Vec<u32>,
+    pending: Vec<SendReq<D::Msg>>,
     seq: u64,
     pub metrics: SimMetrics,
 }
@@ -105,22 +350,46 @@ impl<D: Device> Simulator<D> {
             graph.n_vertices(),
             "mapping covers a different vertex count"
         );
-        let plan = Arc::new(McastPlan::build(&graph, &mapping, &cluster));
-        let n_cores = cluster.total_cores();
+        let plan = McastPlan::build(&graph, &mapping, &cluster);
         let n_tiles = cluster.total_tiles();
-        let core_of: Vec<u32> = (0..graph.n_vertices())
-            .map(|v| cluster.core_of(mapping.thread_of(v as VertexId)) as u32)
-            .collect();
-        let mut core_vertex_count = vec![0u32; n_cores];
-        for &c in &core_of {
-            core_vertex_count[c as usize] += 1;
+        let cpt = cluster.cores_per_tile;
+        let n_v = graph.n_vertices();
+
+        let mut board_of = Vec::with_capacity(n_v);
+        let mut tile_of = Vec::with_capacity(n_v);
+        let mut local_core_of = Vec::with_capacity(n_v);
+        for v in 0..n_v {
+            let t = mapping.thread_of(v as VertexId);
+            board_of.push(cluster.board_of(t) as u32);
+            tile_of.push(cluster.tile_of(t) as u32);
+            local_core_of.push((cluster.core_of(t) % cpt) as u32);
         }
-        let board_of: Vec<u32> = (0..graph.n_vertices())
-            .map(|v| cluster.board_of(mapping.thread_of(v as VertexId)) as u32)
+
+        let mut shards: Vec<TileShard<D>> = (0..n_tiles)
+            .map(|_| TileShard {
+                vertices: Vec::new(),
+                devices: Vec::new(),
+                core_free: vec![0; cpt],
+                core_busy: vec![0; cpt],
+                core_vertex_count: vec![0; cpt],
+                mailbox: Mailbox::new(),
+                queue: Vec::new(),
+                out: Vec::new(),
+                ctx: Ctx::new(0, 0),
+                latest: 0,
+                voted_continue: false,
+                copies_delivered: 0,
+                recv_handlers: 0,
+            })
             .collect();
-        let tile_of: Vec<u32> = (0..graph.n_vertices())
-            .map(|v| cluster.tile_of(mapping.thread_of(v as VertexId)) as u32)
-            .collect();
+        let mut slot_of = vec![0u32; n_v];
+        for v in 0..n_v {
+            let shard = &mut shards[tile_of[v] as usize];
+            slot_of[v] = shard.vertices.len() as u32;
+            shard.vertices.push(v as VertexId);
+            shard.core_vertex_count[local_core_of[v] as usize] += 1;
+        }
+
         Simulator {
             graph,
             mapping,
@@ -129,15 +398,12 @@ impl<D: Device> Simulator<D> {
             cfg,
             plan,
             noc: Noc::new(&cluster),
-            mailboxes: MailboxBank::new(n_tiles),
-            core_free: vec![0; n_cores],
-            core_busy: vec![0; n_cores],
-            core_of,
-            core_vertex_count,
+            shards,
             board_of,
             tile_of,
+            local_core_of,
+            slot_of,
             pending: Vec::new(),
-            heap: BinaryHeap::new(),
             seq: 0,
             metrics: SimMetrics::default(),
         }
@@ -157,73 +423,87 @@ impl<D: Device> Simulator<D> {
 
     /// Run to halt (or `max_steps`). Returns the final metrics.
     pub fn run(&mut self) -> &SimMetrics {
-        let mut now = 0u64;
+        let host_threads = self.cfg.threads.unwrap_or(1).max(1);
+        let n_sim_threads = self.mapping.n_threads_used();
+        let n_vertices = self.graph.n_vertices() as u64;
+        let max_steps = self.cfg.max_steps;
+        let record_steps = self.cfg.record_steps;
+
+        // Partition the devices into their tile shards (vertex-id order is
+        // slot order); restored to the graph before returning.
+        let devices = self.graph.take_devices();
+        for (v, dev) in devices.into_iter().enumerate() {
+            self.shards[self.tile_of[v] as usize].devices.push(dev);
+        }
+
+        // Superstep message arena + dispatch metadata, reused across steps.
+        let mut arena: Vec<D::Msg> = Vec::new();
+        let mut meta: Vec<(VertexId, PortId)> = Vec::new();
+
         // Superstep 0: init handlers on every device.
-        let mut ctx = Ctx::new(0, 0);
-        for v in 0..self.graph.n_vertices() as u32 {
-            ctx.reset(v, 0);
-            self.graph.devices[v as usize].init(&mut ctx);
-            now = now.max(self.charge_handler(v, ctx.flops(), 0));
-            self.buffer_sends(v, &mut ctx);
+        {
+            let env = Env {
+                plan: &self.plan,
+                cost: &self.cost,
+                arena: &arena,
+                slot_of: &self.slot_of,
+                local_core_of: &self.local_core_of,
+                n_sim_threads,
+            };
+            run_init(&mut self.shards, host_threads, &env);
+        }
+        let mut now = 0u64;
+        for s in &mut self.shards {
+            now = now.max(s.latest);
+            self.pending.extend(s.out.drain(..));
         }
 
         let mut step = 0u64;
+        // Superstep 0's handler time is folded into the first recorded step
+        // so `step_durations.iter().sum() == sim_cycles` (see metrics).
+        let mut record_from = 0u64;
         loop {
-            // Phase 1: dispatch buffered sends.
+            // Phase 1: fill the arena from the buffered sends, dispatch
+            // serially (NoC link clocks + arrival sequencing are global).
             let step_start = now;
-            let sends = std::mem::take(&mut self.pending);
-            for (src, port, msg) in sends {
-                self.dispatch(src, port, msg, step_start);
+            arena.clear();
+            meta.clear();
+            for (src, port, msg) in self.pending.drain(..) {
+                meta.push((src, port));
+                arena.push(msg);
             }
-            // Phase 2: deliver group arrivals in time order.
-            let mut quiesce = step_start;
-            while let Some(ev) = self.heap.pop() {
-                quiesce = quiesce.max(self.deliver(ev, step));
+            for (i, &(src, port)) in meta.iter().enumerate() {
+                self.dispatch(src, port, i as u32, step_start);
             }
-            quiesce = quiesce.max(self.core_free.iter().copied().max().unwrap_or(0));
-            quiesce = quiesce.max(self.mailboxes.max_free());
 
-            // Phase 3: termination detection + step handlers.
-            let mut all_halt = true;
-            let mut ctx = Ctx::new(0, step);
-            // Step handlers run after the barrier; their sends go into the
-            // next superstep.
-            let decision = termination::detect(
-                quiesce,
-                self.mapping.n_threads_used(),
-                true, // vote collected below; recomputed before halt
-                self.pending.len(),
-                &self.cost,
-            );
+            // Phases 2+3: tile-parallel deliver, barrier, step handlers.
+            let quiesce = {
+                let env = Env {
+                    plan: &self.plan,
+                    cost: &self.cost,
+                    arena: &arena,
+                    slot_of: &self.slot_of,
+                    local_core_of: &self.local_core_of,
+                    n_sim_threads,
+                };
+                run_superstep(&mut self.shards, host_threads, &env, step, step_start)
+            };
+            let decision = termination::detect(quiesce, n_sim_threads, true, 0, &self.cost);
             self.metrics.barrier_cycles += decision.step_at - quiesce;
             now = decision.step_at;
-            self.sync_clocks(now);
 
-            // Bulk-charge the uniform part of every step handler: at the
-            // barrier all cores are synced to `now`, so per-vertex serial
-            // charging telescopes to count·handler(0) per core.  Only the
-            // rare handlers that do extra FP work pay the delta individually.
-            for (c, &n) in self.core_vertex_count.iter().enumerate() {
-                let cycles = n as u64 * self.cost.handler(0);
-                self.core_free[c] += cycles;
-                self.core_busy[c] += cycles;
+            // Reduce shard outputs: halt votes and next superstep's sends
+            // (deterministic tile order).
+            let mut all_halt = true;
+            for s in &mut self.shards {
+                all_halt &= !s.voted_continue;
+                self.pending.extend(s.out.drain(..));
             }
-            self.metrics.step_handlers += self.graph.n_vertices() as u64;
-            for v in 0..self.graph.n_vertices() as u32 {
-                ctx.reset(v, step);
-                let vote_continue = self.graph.devices[v as usize].step(&mut ctx);
-                all_halt &= !vote_continue;
-                if ctx.flops() > 0 {
-                    let core = self.core_of[v as usize] as usize;
-                    let cycles = ctx.flops() * self.cost.flop;
-                    self.core_free[core] += cycles;
-                    self.core_busy[core] += cycles;
-                }
-                self.buffer_sends(v, &mut ctx);
+            self.metrics.step_handlers += n_vertices;
+            if record_steps {
+                self.metrics.step_durations.push(now - record_from);
             }
-            if self.cfg.record_steps {
-                self.metrics.step_durations.push(now - step_start);
-            }
+            record_from = now;
             step += 1;
             self.metrics.steps = step;
 
@@ -231,17 +511,40 @@ impl<D: Device> Simulator<D> {
                 break;
             }
             assert!(
-                step < self.cfg.max_steps,
-                "simulation exceeded max_steps={} — runaway application?",
-                self.cfg.max_steps
+                step < max_steps,
+                "simulation exceeded max_steps={max_steps} — runaway application?"
             );
         }
 
-        // Account for the final quiesce point.
-        let end = now.max(self.core_free.iter().copied().max().unwrap_or(0));
+        // Account for the final quiesce point (the step handlers that ran
+        // after the last barrier); fold the tail into the last recorded step
+        // so recorded durations cover the whole timeline exactly.
+        let mut end = now;
+        for s in &self.shards {
+            end = end.max(s.core_free.iter().copied().max().unwrap_or(0));
+        }
+        if record_steps {
+            if let Some(last) = self.metrics.step_durations.last_mut() {
+                *last += end - now;
+            }
+        }
         self.metrics.sim_cycles = end;
-        self.metrics.max_core_busy = self.core_busy.iter().copied().max().unwrap_or(0);
-        self.metrics.max_mailbox_busy = self.mailboxes.max_busy();
+        let mut max_core_busy = 0u64;
+        let mut max_mailbox_busy = 0u64;
+        let mut copies = 0u64;
+        let mut recvs = 0u64;
+        for s in &self.shards {
+            max_core_busy = max_core_busy.max(s.core_busy.iter().copied().max().unwrap_or(0));
+            max_mailbox_busy = max_mailbox_busy.max(s.mailbox.busy_cycles());
+            copies += s.copies_delivered;
+            recvs += s.recv_handlers;
+        }
+        self.metrics.max_core_busy = max_core_busy;
+        self.metrics.max_mailbox_busy = max_mailbox_busy;
+        self.metrics.copies_delivered = copies;
+        self.metrics.recv_handlers = recvs;
+
+        self.restore_devices();
         &self.metrics
     }
 
@@ -252,62 +555,46 @@ impl<D: Device> Simulator<D> {
 
     // ----- internals -------------------------------------------------------
 
-    fn buffer_sends(&mut self, v: VertexId, ctx: &mut Ctx<D::Msg>) {
-        for (port, msg) in ctx.take_sends() {
-            self.pending.push((v, port, msg));
-        }
-    }
-
-    /// Charge a handler invocation to the vertex's core; returns finish time.
-    fn charge_handler(&mut self, v: VertexId, flops: u64, ready: u64) -> u64 {
-        let core = self.core_of[v as usize] as usize;
-        let start = ready.max(self.core_free[core]);
-        let cycles = self.cost.handler(flops);
-        self.core_free[core] = start + cycles;
-        self.core_busy[core] += cycles;
-        start + cycles
-    }
-
-    /// Service one send request: NoC transit + one group arrival per tile.
-    fn dispatch(&mut self, src: VertexId, port: PortId, msg: D::Msg, step_start: u64) {
-        let core = self.core_of[src as usize] as usize;
-        let t_send = step_start.max(self.core_free[core]) + self.cost.send_request;
-        self.core_free[core] = t_send;
-        self.core_busy[core] += self.cost.send_request;
+    /// Service one send request: charge the sending core, route over the
+    /// NoC, and append one POD group arrival per destination tile queue.
+    fn dispatch(&mut self, src: VertexId, port: PortId, msg_idx: u32, step_start: u64) {
+        let src_tile = self.tile_of[src as usize] as usize;
+        let lc = self.local_core_of[src as usize] as usize;
+        let shard = &mut self.shards[src_tile];
+        let t_send = step_start.max(shard.core_free[lc]) + self.cost.send_request;
+        shard.core_free[lc] = t_send;
+        shard.core_busy[lc] += self.cost.send_request;
         self.metrics.sends += 1;
 
         let list = self.graph.dest_list(src, port);
         let src_board = self.board_of[src as usize];
-        let src_tile = self.tile_of[src as usize] as usize;
-        let plan = Arc::clone(&self.plan);
-        let groups = plan.tile_groups(list);
+        let src_tile_in_board = src_tile % self.cluster.tiles_per_board;
         let mut crossed_board = false;
-        for (gi, group) in groups.iter().enumerate() {
-            let t_arr = if group.board == src_board {
+        for g in self.plan.group_range(list) {
+            let (board, tile) = self.plan.group_loc(g);
+            let t_arr = if board == src_board {
                 // Intra-board mesh: per-hop latency.
-                let hops =
-                    self.cluster.intra_board_hops(
-                        src_tile % self.cluster.tiles_per_board,
-                        group.tile as usize % self.cluster.tiles_per_board,
-                    ) as u64;
+                let hops = self.cluster.intra_board_hops(
+                    src_tile_in_board,
+                    tile as usize % self.cluster.tiles_per_board,
+                ) as u64;
                 t_send + hops * self.cost.hop
             } else {
                 crossed_board = true;
                 // Inter-board: dimension-ordered over board links (serialised
                 // per event per link), then worst-case half-mesh to the tile.
-                let route = Noc::board_route(&self.cluster, src_board as usize, group.board as usize);
+                let route = Noc::board_route(&self.cluster, src_board as usize, board as usize);
                 let t_board = self.noc.traverse(&route, t_send, &self.cost);
                 let ingress_hops = (self.cluster.tile_mesh.0 + self.cluster.tile_mesh.1) as u64 / 2;
                 t_board + ingress_hops * self.cost.hop
             };
             self.seq += 1;
-            self.heap.push(GroupArrival {
+            self.shards[tile as usize].queue.push(GroupArrival {
                 t: t_arr,
                 seq: self.seq,
                 src,
-                list,
-                group: gi as u32,
-                msg: msg.clone(),
+                group: g as u32,
+                msg_idx,
             });
         }
         if crossed_board {
@@ -315,36 +602,22 @@ impl<D: Device> Simulator<D> {
         }
     }
 
-    /// Deliver one group arrival: mailbox ingest + per-copy recv handlers.
-    /// Returns the latest completion time it produced.
-    fn deliver(&mut self, ev: GroupArrival<D::Msg>, step: u64) -> u64 {
-        let plan = Arc::clone(&self.plan);
-        let group = &plan.tile_groups(ev.list)[ev.group as usize];
-        let tile = group.tile as usize;
-        let n = group.dests.len();
-        let first_ready = self.mailboxes.ingest(tile, ev.t, n, &self.cost);
-        self.metrics.copies_delivered += n as u64;
-
-        let mut ctx = Ctx::new(0, step);
-        let mut latest = ev.t;
-        for (i, &d) in group.dests.iter().enumerate() {
-            let ready = first_ready + i as u64 * self.cost.mailbox_ingress;
-            ctx.reset(d, step);
-            self.graph.devices[d as usize].recv(&ev.msg, ev.src, &mut ctx);
-            let done = self.charge_handler(d, ctx.flops(), ready);
-            latest = latest.max(done);
-            self.buffer_sends(d, &mut ctx);
+    /// Hand the devices back to the graph in vertex-id order.
+    fn restore_devices(&mut self) {
+        let n = self.graph.n_vertices();
+        let mut slots: Vec<Option<D>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for s in &mut self.shards {
+            for (slot, dev) in s.devices.drain(..).enumerate() {
+                slots[s.vertices[slot] as usize] = Some(dev);
+            }
         }
-        self.metrics.recv_handlers += n as u64;
-        latest
-    }
-
-    /// Floor every resource clock to `t` at a superstep boundary.
-    fn sync_clocks(&mut self, t: u64) {
-        for f in &mut self.core_free {
-            *f = (*f).max(t);
-        }
-        self.mailboxes.advance_to(t);
+        self.graph.restore_devices(
+            slots
+                .into_iter()
+                .map(|d| d.expect("every device accounted for"))
+                .collect(),
+        );
     }
 }
 
@@ -352,6 +625,7 @@ impl<D: Device> Simulator<D> {
 mod tests {
     use super::*;
     use crate::graph::builder::GraphBuilder;
+    use crate::graph::mapping::Mapping;
 
     /// Ring of N devices passing a token `rounds` times.
     struct Ring {
@@ -387,7 +661,7 @@ mod tests {
         }
     }
 
-    fn ring_sim(n: usize, rounds: u32) -> Simulator<Ring> {
+    fn ring_sim_threads(n: usize, rounds: u32, threads: Option<usize>) -> Simulator<Ring> {
         let mut b = GraphBuilder::new();
         for i in 0..n {
             b.add_vertex(Ring {
@@ -403,7 +677,20 @@ mod tests {
         let g = b.build();
         let cluster = ClusterConfig::tiny();
         let mapping = Mapping::round_robin(n, &cluster);
-        Simulator::new(g, mapping, cluster, CostModel::default(), SimConfig::default())
+        Simulator::new(
+            g,
+            mapping,
+            cluster,
+            CostModel::default(),
+            SimConfig {
+                threads,
+                ..SimConfig::default()
+            },
+        )
+    }
+
+    fn ring_sim(n: usize, rounds: u32) -> Simulator<Ring> {
+        ring_sim_threads(n, rounds, None)
     }
 
     #[test]
@@ -430,6 +717,53 @@ mod tests {
             s.metrics.sim_cycles
         };
         assert!(long > short, "{long} vs {short}");
+    }
+
+    #[test]
+    fn parallel_run_is_bit_identical_to_serial() {
+        // The execution-semantics contract: thread count changes host
+        // wall-clock only.  Same graph, same mapping, 1 vs 4 workers.
+        let mut serial = ring_sim_threads(12, 17, None);
+        serial.run();
+        let mut parallel = ring_sim_threads(12, 17, Some(4));
+        parallel.run();
+        let hops = |s: &Simulator<Ring>| -> Vec<u32> {
+            s.graph.devices.iter().map(|d| d.hops_seen).collect()
+        };
+        assert_eq!(hops(&serial), hops(&parallel));
+        assert_eq!(serial.metrics.sim_cycles, parallel.metrics.sim_cycles);
+        assert_eq!(serial.metrics.sends, parallel.metrics.sends);
+        assert_eq!(
+            serial.metrics.copies_delivered,
+            parallel.metrics.copies_delivered
+        );
+        assert_eq!(serial.metrics.steps, parallel.metrics.steps);
+        assert_eq!(
+            serial.metrics.step_durations,
+            parallel.metrics.step_durations
+        );
+    }
+
+    #[test]
+    fn step_durations_sum_to_sim_cycles() {
+        // Superstep 0 (init) and the trailing step-handler work are folded
+        // into the recorded timeline.
+        let mut sim = ring_sim(6, 9);
+        sim.run();
+        assert_eq!(
+            sim.metrics.step_durations.iter().sum::<u64>(),
+            sim.metrics.sim_cycles
+        );
+    }
+
+    #[test]
+    fn devices_restored_after_run() {
+        let mut sim = ring_sim(5, 2);
+        sim.run();
+        assert_eq!(sim.graph.devices.len(), 5);
+        // Slot order round-trips to vertex-id order: the seed is vertex 0.
+        assert!(sim.graph.devices[0].is_seed);
+        assert!(!sim.graph.devices[1].is_seed);
     }
 
     /// A broadcaster fanning out to N listeners through one multicast send.
@@ -558,6 +892,7 @@ mod tests {
             SimConfig {
                 max_steps: 50,
                 record_steps: false,
+                threads: None,
             },
         );
         sim.run();

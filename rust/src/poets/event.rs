@@ -4,10 +4,16 @@
 //! and data.  The simulator is generic over the application's message type;
 //! [`assert_event_fits`] enforces the size budget at graph-load time, exactly
 //! where the real cluster would reject an oversized event.
+//!
+//! Host-side representation: the simulator stores each superstep's message
+//! payloads once in a *message arena* (`Vec<Msg>`, one slot per send request,
+//! shared by every destination tile of the multicast).  A [`GroupArrival`]
+//! is therefore a fixed-size POD record — an arena index plus routing
+//! metadata — so per-tile delivery queues sort and copy 32-byte values
+//! instead of cloning message payloads per destination group.
 
 use std::cmp::Ordering;
 
-use crate::graph::builder::DestListId;
 use crate::graph::device::VertexId;
 
 /// Compile-time-ish check that a message type fits the Tinsel event budget
@@ -23,61 +29,72 @@ pub fn assert_event_fits<M>(event_bytes: usize) {
 }
 
 /// A multicast group arrival at one destination tile's mailbox.
-#[derive(Clone, Debug)]
-pub struct GroupArrival<M> {
+///
+/// Plain-old-data: the payload lives in the superstep message arena and is
+/// referenced by `msg_idx`; `group` indexes the flattened multicast plan
+/// ([`super::multicast::McastPlan`]), which resolves to the destination tile
+/// and its resident destination vertices.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupArrival {
     /// Arrival time at the tile ingress (cycles).
     pub t: u64,
     /// Tie-break sequence for deterministic ordering.
     pub seq: u64,
     /// Sending vertex (receivers derive `a_ij` same/diff from it).
     pub src: VertexId,
-    /// Which pooled destination list this send used.
-    pub list: DestListId,
-    /// Index of the tile group within the list's multicast plan.
+    /// Global tile-group index within the multicast plan.
     pub group: u32,
-    pub msg: M,
+    /// Index of the payload in the superstep message arena.
+    pub msg_idx: u32,
 }
 
-impl<M> PartialEq for GroupArrival<M> {
+impl PartialEq for GroupArrival {
     fn eq(&self, other: &Self) -> bool {
         self.t == other.t && self.seq == other.seq
     }
 }
-impl<M> Eq for GroupArrival<M> {}
+impl Eq for GroupArrival {}
 
-impl<M> PartialOrd for GroupArrival<M> {
+impl PartialOrd for GroupArrival {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-/// Min-heap ordering: earliest time first, then sequence.
-impl<M> Ord for GroupArrival<M> {
+/// Natural (ascending) delivery order: earliest time first, then sequence.
+/// Per-tile queues sort ascending and deliver front-to-back.
+impl Ord for GroupArrival {
     fn cmp(&self, other: &Self) -> Ordering {
-        (other.t, other.seq).cmp(&(self.t, self.seq))
+        (self.t, self.seq).cmp(&(other.t, other.seq))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::collections::BinaryHeap;
+
+    fn ev(t: u64, seq: u64) -> GroupArrival {
+        GroupArrival {
+            t,
+            seq,
+            src: 0,
+            group: 0,
+            msg_idx: 0,
+        }
+    }
 
     #[test]
-    fn heap_pops_in_time_order() {
-        let mut h: BinaryHeap<GroupArrival<u8>> = BinaryHeap::new();
-        for (t, seq) in [(5u64, 0u64), (1, 1), (5, 2), (3, 3)] {
-            h.push(GroupArrival {
-                t,
-                seq,
-                src: 0,
-                list: DestListId(0),
-                group: 0,
-                msg: 0,
-            });
-        }
-        let order: Vec<(u64, u64)> = std::iter::from_fn(|| h.pop().map(|e| (e.t, e.seq))).collect();
+    fn sorts_in_time_order() {
+        let mut q = vec![ev(5, 0), ev(1, 1), ev(5, 2), ev(3, 3)];
+        q.sort_unstable();
+        let order: Vec<(u64, u64)> = q.iter().map(|e| (e.t, e.seq)).collect();
         assert_eq!(order, vec![(1, 1), (3, 3), (5, 0), (5, 2)]);
+    }
+
+    #[test]
+    fn arrival_is_fixed_size_pod() {
+        // The whole point of the arena: queue entries are small and Copy.
+        assert!(std::mem::size_of::<GroupArrival>() <= 32);
     }
 
     #[test]

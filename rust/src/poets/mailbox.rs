@@ -4,62 +4,108 @@
 //! are ingested serially — one copy per destination software thread — which
 //! makes the mailbox the fan-in bottleneck the paper identifies: a vertex
 //! with |H| predecessors causes |H| serialised ingest operations per wave at
-//! its tile.  Ingest is FIFO in arrival order (the simulator pops group
-//! arrivals from a time-ordered heap).
+//! its tile.  Ingest is FIFO in arrival order (the simulator delivers each
+//! tile's group arrivals in time order from its per-tile queue).
+//!
+//! [`Mailbox`] is the single-tile state; the delivery engine embeds one per
+//! tile shard so that the deliver phase mutates strictly tile-local state.
+//! [`MailboxBank`] is a convenience wrapper (indexed collection) kept for
+//! standalone mailbox modelling and its own invariant tests; the simulator
+//! itself no longer uses it.
 
 use super::costmodel::CostModel;
 
-/// Busy-until state for every mailbox (one per tile).
-#[derive(Clone, Debug)]
-pub struct MailboxBank {
-    free: Vec<u64>,
-    busy: Vec<u64>,
-    copies: Vec<u64>,
+/// Busy-until state of one tile's mailbox.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Mailbox {
+    free: u64,
+    busy: u64,
+    copies: u64,
 }
 
-impl MailboxBank {
-    pub fn new(n_tiles: usize) -> MailboxBank {
-        MailboxBank {
-            free: vec![0; n_tiles],
-            busy: vec![0; n_tiles],
-            copies: vec![0; n_tiles],
-        }
+impl Mailbox {
+    pub fn new() -> Mailbox {
+        Mailbox::default()
     }
 
     /// Ingest `n_copies` event copies arriving at `t`; returns the time the
     /// first copy is ready for its handler.  Copy `i`'s ready time is
     /// `ret + i * ingress`.
-    pub fn ingest(&mut self, tile: usize, t: u64, n_copies: usize, cost: &CostModel) -> u64 {
-        let start = t.max(self.free[tile]);
+    pub fn ingest(&mut self, t: u64, n_copies: usize, cost: &CostModel) -> u64 {
+        let start = t.max(self.free);
         let work = n_copies as u64 * cost.mailbox_ingress;
-        self.free[tile] = start + work;
-        self.busy[tile] += work;
-        self.copies[tile] += n_copies as u64;
+        self.free = start + work;
+        self.busy += work;
+        self.copies += n_copies as u64;
         start + cost.mailbox_ingress
+    }
+
+    /// Queueing delay visible to an arrival at time `t`.
+    pub fn backlog(&self, t: u64) -> u64 {
+        self.free.saturating_sub(t)
+    }
+
+    /// Busy-until clock (the time this mailbox next idles).
+    pub fn free_at(&self) -> u64 {
+        self.free
+    }
+
+    /// Cumulative busy cycles.
+    pub fn busy_cycles(&self) -> u64 {
+        self.busy
+    }
+
+    /// Total copies ingested.
+    pub fn copies(&self) -> u64 {
+        self.copies
+    }
+
+    /// Floor the busy-until clock to `t` (superstep boundary).
+    pub fn advance_to(&mut self, t: u64) {
+        self.free = self.free.max(t);
+    }
+}
+
+/// Indexed mailbox collection (one per tile).
+#[derive(Clone, Debug)]
+pub struct MailboxBank {
+    boxes: Vec<Mailbox>,
+}
+
+impl MailboxBank {
+    pub fn new(n_tiles: usize) -> MailboxBank {
+        MailboxBank {
+            boxes: vec![Mailbox::new(); n_tiles],
+        }
+    }
+
+    /// Ingest at one tile; see [`Mailbox::ingest`].
+    pub fn ingest(&mut self, tile: usize, t: u64, n_copies: usize, cost: &CostModel) -> u64 {
+        self.boxes[tile].ingest(t, n_copies, cost)
     }
 
     /// Queueing delay currently visible at a tile arriving at time `t`.
     pub fn backlog(&self, tile: usize, t: u64) -> u64 {
-        self.free[tile].saturating_sub(t)
+        self.boxes[tile].backlog(t)
     }
 
     pub fn max_free(&self) -> u64 {
-        self.free.iter().copied().max().unwrap_or(0)
+        self.boxes.iter().map(|b| b.free_at()).max().unwrap_or(0)
     }
 
     /// Cumulative busy cycles of the most-loaded mailbox.
     pub fn max_busy(&self) -> u64 {
-        self.busy.iter().copied().max().unwrap_or(0)
+        self.boxes.iter().map(|b| b.busy_cycles()).max().unwrap_or(0)
     }
 
     pub fn total_copies(&self) -> u64 {
-        self.copies.iter().sum()
+        self.boxes.iter().map(|b| b.copies()).sum()
     }
 
     /// Reset busy-until clocks to `t` (superstep boundary) keeping counters.
     pub fn advance_to(&mut self, t: u64) {
-        for f in &mut self.free {
-            *f = (*f).max(t);
+        for b in &mut self.boxes {
+            b.advance_to(t);
         }
     }
 }
@@ -109,5 +155,16 @@ mod tests {
         mb.advance_to(1000);
         let r = mb.ingest(0, 500, 1, &cost);
         assert_eq!(r, 1000 + cost.mailbox_ingress);
+    }
+
+    #[test]
+    fn single_mailbox_tracks_its_own_state() {
+        let cost = CostModel::default();
+        let mut m = Mailbox::new();
+        let r = m.ingest(10, 2, &cost);
+        assert_eq!(r, 10 + cost.mailbox_ingress);
+        assert_eq!(m.free_at(), 10 + 2 * cost.mailbox_ingress);
+        assert_eq!(m.busy_cycles(), 2 * cost.mailbox_ingress);
+        assert_eq!(m.copies(), 2);
     }
 }

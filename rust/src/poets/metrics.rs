@@ -34,6 +34,14 @@ impl SimMetrics {
         self.sim_cycles as f64 / clock_hz
     }
 
+    /// Total recorded step time in cycles.  The simulator folds superstep 0
+    /// (init handlers) into the first recorded step and the post-final-barrier
+    /// step-handler tail into the last, so with `record_steps` enabled this
+    /// equals `sim_cycles` exactly.
+    pub fn total_step_cycles(&self) -> u64 {
+        self.step_durations.iter().sum()
+    }
+
     /// Mean step duration in cycles.
     pub fn mean_step_cycles(&self) -> f64 {
         if self.step_durations.is_empty() {
@@ -100,6 +108,7 @@ mod tests {
         assert!((m.core_occupancy() - 0.25).abs() < 1e-12);
         assert!((m.barrier_fraction() - 0.03).abs() < 1e-12);
         assert!((m.mean_step_cycles() - 500.0).abs() < 1e-12);
+        assert_eq!(m.total_step_cycles(), 1000);
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! one copy stream.  Since destination lists are pooled and static, the
 //! expansion (group destinations by tile, order groups by board) is
 //! precomputed once per (graph, mapping) pair.
+//!
+//! The plan is stored *flat*: all tile groups of all lists live in one arena
+//! with `(offset, len)` spans per list, and all group destinations live in a
+//! single pooled `Vec<VertexId>`.  The dispatch hot path reads a group's
+//! `(board, tile)` by value and the deliver hot path borrows its destination
+//! slice — no per-event `Arc` traffic, no nested `Vec` pointer chasing.
+
+use std::ops::Range;
 
 use crate::graph::builder::{DestListId, Graph};
 use crate::graph::device::{Device, VertexId};
@@ -12,19 +20,21 @@ use crate::graph::mapping::Mapping;
 
 use super::topology::ClusterConfig;
 
-/// One tile's share of a multicast: the destination vertices resident there.
-#[derive(Clone, Debug)]
-pub struct TileGroup {
-    pub tile: u32,
-    pub board: u32,
-    pub dests: Vec<VertexId>,
-}
-
 /// The precomputed expansion of every pooled destination list.
+///
+/// Group ids are *global* (they index the flat arena); a list resolves to a
+/// contiguous range of group ids via [`McastPlan::group_range`], sorted by
+/// `(board, tile)`.
 #[derive(Clone, Debug, Default)]
 pub struct McastPlan {
-    /// `groups[list.0]` → tile groups, sorted by (board, tile).
-    groups: Vec<Vec<TileGroup>>,
+    /// Per list: `(first_group, n_groups)` into the group arena.
+    list_spans: Vec<(u32, u32)>,
+    /// Per group: destination `(board, tile)`.
+    group_loc: Vec<(u32, u32)>,
+    /// Per group: `(first_dest, n_dests)` into `dest_pool`.
+    dest_spans: Vec<(u32, u32)>,
+    /// Pooled destination vertices of every group, concatenated.
+    dest_pool: Vec<VertexId>,
 }
 
 impl McastPlan {
@@ -33,7 +43,7 @@ impl McastPlan {
         mapping: &Mapping,
         cluster: &ClusterConfig,
     ) -> McastPlan {
-        let mut groups = Vec::with_capacity(graph.n_dest_lists());
+        let mut plan = McastPlan::default();
         for list in 0..graph.n_dest_lists() {
             let dests = graph.dests(DestListId(list as u32));
             let mut by_tile: std::collections::BTreeMap<(u32, u32), Vec<VertexId>> =
@@ -44,30 +54,59 @@ impl McastPlan {
                 let board = cluster.board_of(t) as u32;
                 by_tile.entry((board, tile)).or_default().push(d);
             }
-            groups.push(
-                by_tile
-                    .into_iter()
-                    .map(|((board, tile), dests)| TileGroup { tile, board, dests })
-                    .collect(),
-            );
+            let first = plan.group_loc.len() as u32;
+            for ((board, tile), ds) in by_tile {
+                plan.group_loc.push((board, tile));
+                let fd = plan.dest_pool.len() as u32;
+                plan.dest_spans.push((fd, ds.len() as u32));
+                plan.dest_pool.extend_from_slice(&ds);
+            }
+            let n = plan.group_loc.len() as u32 - first;
+            plan.list_spans.push((first, n));
         }
-        McastPlan { groups }
+        plan
     }
 
+    /// Global group-id range of one destination list (sorted by board, tile).
     #[inline]
-    pub fn tile_groups(&self, list: DestListId) -> &[TileGroup] {
-        &self.groups[list.0 as usize]
+    pub fn group_range(&self, list: DestListId) -> Range<usize> {
+        let (first, n) = self.list_spans[list.0 as usize];
+        first as usize..(first + n) as usize
+    }
+
+    /// `(board, tile)` of a global group id — returned by value so the
+    /// dispatch hot path holds no borrow while mutating simulator state.
+    #[inline]
+    pub fn group_loc(&self, group: usize) -> (u32, u32) {
+        self.group_loc[group]
+    }
+
+    /// Destination vertices of a global group id (all resident on its tile).
+    #[inline]
+    pub fn group_dests(&self, group: usize) -> &[VertexId] {
+        let (first, n) = self.dest_spans[group];
+        &self.dest_pool[first as usize..(first + n) as usize]
+    }
+
+    /// Number of tile groups one send on this list fans out to.
+    pub fn n_groups(&self, list: DestListId) -> usize {
+        self.list_spans[list.0 as usize].1 as usize
     }
 
     /// Total copies delivered by one send on this list.
     pub fn fan_out(&self, list: DestListId) -> usize {
-        self.tile_groups(list).iter().map(|g| g.dests.len()).sum()
+        self.group_range(list)
+            .map(|g| self.group_dests(g).len())
+            .sum()
     }
 
     /// Distinct boards touched by one send on this list.
     pub fn boards_spanned(&self, list: DestListId) -> usize {
-        let mut boards: Vec<u32> = self.tile_groups(list).iter().map(|g| g.board).collect();
-        boards.dedup();
+        let mut boards: Vec<u32> = self
+            .group_range(list)
+            .map(|g| self.group_loc(g).0)
+            .collect();
+        boards.dedup(); // groups are sorted by (board, tile)
         boards.len()
     }
 }
@@ -105,14 +144,19 @@ mod tests {
         let plan = McastPlan::build(&g, &mapping, &cluster);
 
         assert_eq!(plan.fan_out(DestListId(0)), 40);
-        let groups = plan.tile_groups(DestListId(0));
         // 40 threads cover 5 tiles (8 threads/tile).
-        assert_eq!(groups.len(), 5);
+        let range = plan.group_range(DestListId(0));
+        assert_eq!(range.len(), 5);
+        assert_eq!(plan.n_groups(DestListId(0)), 5);
         // Sorted by (board, tile); all destinations preserved exactly once.
-        let mut seen: Vec<VertexId> = groups.iter().flat_map(|g| g.dests.clone()).collect();
+        let mut seen: Vec<VertexId> = range
+            .clone()
+            .flat_map(|g| plan.group_dests(g).to_vec())
+            .collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..40).collect::<Vec<_>>());
-        assert!(groups.windows(2).all(|w| (w[0].board, w[0].tile) < (w[1].board, w[1].tile)));
+        let locs: Vec<(u32, u32)> = range.clone().map(|g| plan.group_loc(g)).collect();
+        assert!(locs.windows(2).all(|w| w[0] < w[1]));
         // Threads 0..31 are board 0 (4 tiles x 8), 32..39 board 1.
         assert_eq!(plan.boards_spanned(DestListId(0)), 2);
     }
@@ -128,6 +172,26 @@ mod tests {
         let mapping = Mapping::round_robin(1, &cluster);
         let plan = McastPlan::build(&g, &mapping, &cluster);
         assert_eq!(plan.fan_out(DestListId(0)), 0);
-        assert!(plan.tile_groups(DestListId(0)).is_empty());
+        assert!(plan.group_range(DestListId(0)).is_empty());
+    }
+
+    #[test]
+    fn global_group_ids_are_contiguous_per_list() {
+        let cluster = ClusterConfig::tiny();
+        let mut b = GraphBuilder::new();
+        for _ in 0..16 {
+            b.add_vertex(Null);
+        }
+        let l0 = b.intern_dests((0..16).collect());
+        let l1 = b.intern_dests(vec![0, 1]);
+        b.add_port(0, l0);
+        b.add_port(1, l1);
+        let g = b.build();
+        let mapping = Mapping::round_robin(16, &cluster);
+        let plan = McastPlan::build(&g, &mapping, &cluster);
+        let r0 = plan.group_range(DestListId(0));
+        let r1 = plan.group_range(DestListId(1));
+        assert_eq!(r0.end, r1.start, "lists pack the group arena densely");
+        assert_eq!(plan.fan_out(DestListId(1)), 2);
     }
 }

@@ -11,7 +11,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result, bail};
+use super::error::{Context, Result, bail};
 
 /// Tensor element type (the subset the pipeline uses).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

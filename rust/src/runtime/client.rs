@@ -8,20 +8,24 @@
 //!
 //! Executables are compiled lazily on first use and cached for the process
 //! lifetime — Python never runs at request time.
+//!
+//! # The `pjrt` feature gate
+//!
+//! The default (offline) build has no `xla`/`anyhow` dependency closure, so
+//! the PJRT-backed implementation is gated behind the `pjrt` cargo feature
+//! and a std-only stub with the identical API takes its place: `open` fails
+//! with a clear message and every caller degrades the same way it does when
+//! `artifacts/` has not been built.  Enabling `pjrt` additionally requires
+//! vendoring the `xla` crate and declaring it in Cargo.toml.
 
-use std::collections::HashMap;
+#[cfg(not(feature = "pjrt"))]
 use std::path::Path;
 
-use anyhow::{Context, Result, bail};
-
-use super::artifacts::{ArtifactSpec, DType, Manifest};
-
-/// A loaded artifact runtime.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+use super::artifacts::DType;
+#[cfg(not(feature = "pjrt"))]
+use super::artifacts::Manifest;
+#[cfg(not(feature = "pjrt"))]
+use super::error::Result;
 
 /// A typed host tensor handed to / returned from [`Runtime::execute`].
 #[derive(Clone, Debug, PartialEq)]
@@ -55,27 +59,167 @@ impl HostTensor {
             _ => panic!("tensor is not f32"),
         }
     }
+}
 
-    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            HostTensor::F32(v) => xla::Literal::vec1(v),
-            HostTensor::I32(v) => xla::Literal::vec1(v),
-        };
-        Ok(lit.reshape(&dims)?)
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use super::super::artifacts::{ArtifactSpec, DType, Manifest};
+    use super::super::error::{Context, Result, bail};
+    use super::HostTensor;
+
+    impl HostTensor {
+        fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = match self {
+                HostTensor::F32(v) => xla::Literal::vec1(v),
+                HostTensor::I32(v) => xla::Literal::vec1(v),
+            };
+            lit.reshape(&dims).context("reshaping literal")
+        }
+    }
+
+    /// A loaded artifact runtime.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Runtime {
+        /// Open the artifacts directory (must contain `manifest.tsv`).
+        pub fn open(dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                manifest,
+                cache: HashMap::new(),
+            })
+        }
+
+        /// Open the default `artifacts/` directory next to the workspace root.
+        pub fn open_default() -> Result<Runtime> {
+            Self::open(Path::new("artifacts"))
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn compile(&mut self, spec: &ArtifactSpec) -> Result<()> {
+            if self.cache.contains_key(&spec.name) {
+                return Ok(());
+            }
+            let path = spec
+                .path
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", spec.path))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", spec.name))?;
+            self.cache.insert(spec.name.clone(), exe);
+            Ok(())
+        }
+
+        /// Execute an artifact by name with shape/dtype-checked host tensors.
+        pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            let spec = self
+                .manifest
+                .get(name)
+                .with_context(|| format!("unknown artifact {name:?}"))?
+                .clone();
+            if inputs.len() != spec.inputs.len() {
+                bail!(
+                    "artifact {name}: {} inputs given, {} expected",
+                    inputs.len(),
+                    spec.inputs.len()
+                );
+            }
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (t, sig) in inputs.iter().zip(&spec.inputs) {
+                if t.dtype() != sig.dtype {
+                    bail!("artifact {name} input {}: dtype mismatch", sig.name);
+                }
+                if t.len() != sig.n_elems() {
+                    bail!(
+                        "artifact {name} input {}: {} elements given, {:?} expected",
+                        sig.name,
+                        t.len(),
+                        sig.shape
+                    );
+                }
+                literals.push(t.to_literal(&sig.shape)?);
+            }
+            self.compile(&spec)?;
+            let exe = self.cache.get(&spec.name).expect("just compiled");
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .context("executing artifact")?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // aot.py lowers with return_tuple=True.
+            let parts = result.to_tuple().context("untupling result")?;
+            if parts.len() != spec.outputs.len() {
+                bail!(
+                    "artifact {name}: {} outputs returned, {} expected",
+                    parts.len(),
+                    spec.outputs.len()
+                );
+            }
+            let mut out = Vec::with_capacity(parts.len());
+            for (lit, sig) in parts.into_iter().zip(&spec.outputs) {
+                let t = match sig.dtype {
+                    DType::F32 => HostTensor::F32(lit.to_vec::<f32>().context("reading f32 output")?),
+                    DType::I32 => HostTensor::I32(lit.to_vec::<i32>().context("reading i32 output")?),
+                };
+                if t.len() != sig.n_elems() {
+                    bail!("artifact {name} output {}: shape mismatch", sig.name);
+                }
+                out.push(t);
+            }
+            Ok(out)
+        }
+
+        /// Number of compiled executables currently cached.
+        pub fn n_compiled(&self) -> usize {
+            self.cache.len()
+        }
     }
 }
 
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Runtime;
+
+/// Offline stub: identical API, but opening always fails so every caller
+/// takes its artifacts-unavailable path (the same one it takes when
+/// `make artifacts` has not run).
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
 impl Runtime {
-    /// Open the artifacts directory (must contain `manifest.tsv`).
+    /// Open the artifacts directory — always fails in the offline build.
     pub fn open(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: HashMap::new(),
-        })
+        // Validate the manifest anyway so errors stay informative.
+        let _ = Manifest::load(dir)?;
+        Err(super::error::Error::msg(
+            "PJRT compute plane not built: compiled without the `pjrt` feature \
+             (the offline image lacks the xla dependency closure); \
+             see rust/src/runtime/client.rs",
+        ))
     }
 
     /// Open the default `artifacts/` directory next to the workspace root.
@@ -88,85 +232,44 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "unavailable".to_string()
     }
 
-    fn compile(&mut self, spec: &ArtifactSpec) -> Result<()> {
-        if self.cache.contains_key(&spec.name) {
-            return Ok(());
-        }
-        let path = spec
-            .path
-            .to_str()
-            .with_context(|| format!("non-utf8 path {:?}", spec.path))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {}", spec.name))?;
-        self.cache.insert(spec.name.clone(), exe);
-        Ok(())
-    }
-
-    /// Execute an artifact by name with shape/dtype-checked host tensors.
-    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let spec = self
-            .manifest
-            .get(name)
-            .with_context(|| format!("unknown artifact {name:?}"))?
-            .clone();
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "artifact {name}: {} inputs given, {} expected",
-                inputs.len(),
-                spec.inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (t, sig) in inputs.iter().zip(&spec.inputs) {
-            if t.dtype() != sig.dtype {
-                bail!("artifact {name} input {}: dtype mismatch", sig.name);
-            }
-            if t.len() != sig.n_elems() {
-                bail!(
-                    "artifact {name} input {}: {} elements given, {:?} expected",
-                    sig.name,
-                    t.len(),
-                    sig.shape
-                );
-            }
-            literals.push(t.to_literal(&sig.shape)?);
-        }
-        self.compile(&spec)?;
-        let exe = self.cache.get(&spec.name).expect("just compiled");
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        let parts = result.to_tuple()?;
-        if parts.len() != spec.outputs.len() {
-            bail!(
-                "artifact {name}: {} outputs returned, {} expected",
-                parts.len(),
-                spec.outputs.len()
-            );
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, sig) in parts.into_iter().zip(&spec.outputs) {
-            let t = match sig.dtype {
-                DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
-                DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
-            };
-            if t.len() != sig.n_elems() {
-                bail!("artifact {name} output {}: shape mismatch", sig.name);
-            }
-            out.push(t);
-        }
-        Ok(out)
+    /// Execute an artifact — unreachable in practice (open never succeeds)
+    /// but present so callers compile unchanged.
+    pub fn execute(&mut self, name: &str, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        Err(super::error::Error::msg(format!(
+            "cannot execute {name:?}: PJRT plane not built (enable the `pjrt` feature)"
+        )))
     }
 
     /// Number of compiled executables currently cached.
     pub fn n_compiled(&self) -> usize {
-        self.cache.len()
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::F32(vec![1.0, 2.0]);
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.as_f32(), &[1.0, 2.0]);
+        let i = HostTensor::I32(vec![]);
+        assert!(i.is_empty());
+        assert_eq!(i.dtype(), DType::I32);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_open_fails_with_clear_message() {
+        // Missing manifest: the manifest error surfaces first.
+        let e = Runtime::open(Path::new("/nonexistent-artifacts")).unwrap_err();
+        assert!(e.to_string().contains("manifest"), "{e}");
     }
 }

@@ -1,0 +1,93 @@
+//! Std-only error plumbing for the runtime layer.
+//!
+//! The offline build environment has no crates.io access, so the `anyhow`
+//! conveniences this layer originally leaned on are re-implemented here at
+//! the scale the runtime needs: a string-backed error, a `Context` extension
+//! trait for `Result`/`Option`, and a `bail!` macro.
+
+use std::fmt;
+
+/// A runtime-layer error: a human-readable message chain.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Runtime-layer result (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style message chaining for results and options.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`].
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::runtime::error::Error::msg(format!($($arg)*)))
+    };
+}
+pub(crate) use bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let o: Option<u32> = Some(7);
+        assert_eq!(o.with_context(|| "x".into()).unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(n: usize) -> Result<()> {
+            if n > 3 {
+                bail!("too many: {n}");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(9).unwrap_err().to_string(), "too many: 9");
+    }
+}

@@ -6,12 +6,11 @@
 //! emission=1 (unannotated), allele=0 — appended on the right.  Inertness is
 //! asserted against the native baseline in rust/tests/runtime_artifacts.rs.
 
-use anyhow::{Context, Result};
-
 use crate::model::panel::{ReferencePanel, TargetHaplotype};
 use crate::model::params::ModelParams;
 
 use super::client::{HostTensor, Runtime};
+use super::error::{Context, Result, bail};
 
 /// High-level imputation façade over the XLA compute plane.
 pub struct XlaImputer {
@@ -102,7 +101,7 @@ impl XlaImputer {
         )?;
         let mut dosage = match out.into_iter().next().expect("one output") {
             HostTensor::F32(v) => v,
-            _ => anyhow::bail!("dosage dtype"),
+            _ => bail!("dosage dtype"),
         };
         dosage.truncate(m_n);
         Ok(dosage)

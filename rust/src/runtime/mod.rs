@@ -6,11 +6,18 @@
 //!
 //! The Rust binary is self-contained after `make artifacts`: Python/JAX run
 //! once at build time, never on the request path.
+//!
+//! The PJRT-backed client is gated behind the `pjrt` cargo feature (the
+//! offline build has no `xla` dependency closure); without it a std-only
+//! stub with the identical API reports the plane as unavailable.  Error
+//! handling is std-only throughout ([`error`]).
 
 pub mod artifacts;
 pub mod client;
+pub mod error;
 pub mod exec;
 
 pub use artifacts::{ArtifactSpec, DType, Manifest, TensorSig};
 pub use client::{HostTensor, Runtime};
+pub use error::{Error, Result};
 pub use exec::XlaImputer;

@@ -14,6 +14,10 @@ use poets_impute::util::rng::Rng;
 use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
 
 fn artifacts_dir() -> Option<&'static Path> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature (stub runtime)");
+        return None;
+    }
     let p = Path::new("artifacts");
     if p.join("manifest.tsv").exists() {
         Some(p)
