@@ -3,10 +3,11 @@
 //!
 //! A chromosome-1-like reference panel is generated with the paper's §6.2
 //! recipe; a cohort of target haplotypes (drawn from the Li & Stephens
-//! mosaic process, truth withheld) is imputed four ways:
+//! mosaic process, truth withheld) is imputed through the session API on
+//! every available compute plane:
 //!
 //! 1. x86-style dense baseline (the paper's comparison point),
-//! 2. event-driven raw model on the simulated cluster (paper §5.2),
+//! 2. event-driven raw plane on the simulated cluster (paper §5.2),
 //! 3. event-driven + linear interpolation (paper §5.3),
 //! 4. the AOT JAX/Pallas artifact through PJRT (the XLA compute plane),
 //!
@@ -18,28 +19,24 @@
 //! ```
 
 use poets_impute::bench::X86Cost;
-use poets_impute::imputation::app::{RawAppConfig, run_raw};
-use poets_impute::imputation::interp_app::run_interp;
-use poets_impute::model::accuracy::{self, Accuracy};
-use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
-use poets_impute::model::params::ModelParams;
-use poets_impute::poets::topology::ClusterConfig;
-use poets_impute::runtime::{Runtime, XlaImputer};
-use poets_impute::util::rng::Rng;
+use poets_impute::model::baseline::Method;
+use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
 use poets_impute::util::table::{Table, fmt_count, fmt_secs};
-use poets_impute::util::timed;
-use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use poets_impute::workload::panelgen::PanelConfig;
 
-fn score(
-    dosages: &[Vec<f32>],
-    cases: &[poets_impute::workload::panelgen::TargetCase],
-) -> Accuracy {
-    let accs: Vec<_> = cases
-        .iter()
-        .zip(dosages)
-        .map(|(c, d)| accuracy::score(d, &c.truth, &c.masked))
-        .collect();
-    accuracy::aggregate(&accs)
+fn add_row(table: &mut Table, name: &str, report: &ImputeReport) {
+    let acc = report.accuracy.expect("synthetic workload has truth");
+    table.row(vec![
+        name.into(),
+        fmt_secs(report.host_seconds),
+        report.sim_seconds.map_or("-".into(), fmt_secs),
+        report
+            .metrics
+            .as_ref()
+            .map_or("-".into(), |m| fmt_count(m.copies_delivered)),
+        format!("{:.4}", acc.concordance),
+        format!("{:.4}", acc.dosage_r2),
+    ]);
 }
 
 fn main() {
@@ -53,18 +50,22 @@ fn main() {
         seed: 1000,
         ..PanelConfig::default()
     };
-    let n_targets = 24;
-    let panel = generate_panel(&cfg);
-    let mut rng = Rng::new(99);
-    let cases = generate_targets(&panel, &cfg, n_targets, &mut rng);
-    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+    let workload = Workload::synthetic(&cfg, 24);
     println!(
         "== GWAS upscale: {}x{} panel ({} states), {} targets, ratio 1/10 ==\n",
-        panel.n_hap(),
-        panel.n_mark(),
-        fmt_count(panel.n_states() as u64),
-        n_targets
+        workload.panel().n_hap(),
+        workload.panel().n_mark(),
+        fmt_count(workload.panel().n_states() as u64),
+        workload.n_targets()
     );
+
+    let session = |engine: EngineSpec, spt: usize| {
+        ImputeSession::new(workload.clone())
+            .engine(engine)
+            .boards(8)
+            .states_per_thread(spt)
+            .run()
+    };
 
     let mut table = Table::new(&[
         "engine",
@@ -76,99 +77,48 @@ fn main() {
     ]);
 
     // 1. Dense baseline.
-    let b = Baseline::default();
-    let (dense, t_dense) = timed(|| {
-        b.impute_batch::<f32>(&panel, &targets, Method::DenseThreeLoop)
-            .into_iter()
-            .map(|o: ImputeOut<f32>| o.dosage)
-            .collect::<Vec<_>>()
-    });
-    let a = score(&dense, &cases);
-    table.row(vec![
-        "x86 dense baseline".into(),
-        fmt_secs(t_dense),
-        "-".into(),
-        "-".into(),
-        format!("{:.4}", a.concordance),
-        format!("{:.4}", a.dosage_r2),
-    ]);
+    let dense = session(EngineSpec::Baseline, 4).expect("baseline plane");
+    add_row(&mut table, "x86 dense baseline", &dense);
 
     // 2. Event-driven raw on 8 boards.
-    let app = RawAppConfig {
-        cluster: ClusterConfig::with_boards(8),
-        states_per_thread: 4,
-        ..RawAppConfig::default()
-    };
-    let (raw, t_raw) = timed(|| run_raw(&panel, &targets, &app));
-    let a = score(&raw.dosages, &cases);
-    table.row(vec![
-        "event-driven raw".into(),
-        fmt_secs(t_raw),
-        fmt_secs(raw.sim_seconds),
-        fmt_count(raw.metrics.copies_delivered),
-        format!("{:.4}", a.concordance),
-        format!("{:.4}", a.dosage_r2),
-    ]);
+    let raw = session(EngineSpec::Event, 4).expect("event plane");
+    add_row(&mut table, "event-driven raw", &raw);
 
     // 3. Event-driven + linear interpolation (one section vertex per thread).
-    let app_itp = RawAppConfig {
-        states_per_thread: 1,
-        ..app
-    };
-    let (itp, t_itp) = timed(|| run_interp(&panel, &targets, &app_itp));
-    let a = score(&itp.dosages, &cases);
-    table.row(vec![
-        "event-driven interp".into(),
-        fmt_secs(t_itp),
-        fmt_secs(itp.sim_seconds),
-        fmt_count(itp.metrics.copies_delivered),
-        format!("{:.4}", a.concordance),
-        format!("{:.4}", a.dosage_r2),
-    ]);
+    let itp = session(EngineSpec::Interp, 1).expect("interp plane");
+    add_row(&mut table, "event-driven interp", &itp);
 
     // 4. XLA artifact plane (AOT JAX/Pallas via PJRT), if artifacts exist.
-    match Runtime::open_default() {
-        Ok(rt) => {
-            let mut imputer = XlaImputer::new(rt, ModelParams::default());
-            let (xla, t_xla) = timed(|| imputer.impute_batch(&panel, &targets));
-            match xla {
-                Ok(xla) => {
-                    let a = score(&xla, &cases);
-                    table.row(vec![
-                        "XLA artifact (Pallas)".into(),
-                        fmt_secs(t_xla),
-                        "-".into(),
-                        "-".into(),
-                        format!("{:.4}", a.concordance),
-                        format!("{:.4}", a.dosage_r2),
-                    ]);
-                }
-                Err(e) => println!("XLA plane skipped: {e}"),
-            }
-        }
+    match session(EngineSpec::Xla, 4) {
+        Ok(xla) => add_row(&mut table, "XLA artifact (Pallas)", &xla),
         Err(e) => println!("XLA plane skipped: {e} (run `make artifacts`)"),
     }
 
     println!("{}", table.render());
 
     // Message economics (the paper's §6.3 argument in one line):
+    let raw_m = raw.metrics.as_ref().expect("event plane reports metrics");
+    let itp_m = itp.metrics.as_ref().expect("interp plane reports metrics");
     println!(
         "message reduction raw -> interp: {:.1}x (sends {} -> {})",
-        raw.metrics.sends as f64 / itp.metrics.sends as f64,
-        fmt_count(raw.metrics.sends),
-        fmt_count(itp.metrics.sends),
+        raw_m.sends as f64 / itp_m.sends as f64,
+        fmt_count(raw_m.sends),
+        fmt_count(itp_m.sends),
     );
-    println!(
-        "simulated speedup interp vs raw: {:.1}x",
-        raw.sim_seconds / itp.sim_seconds
-    );
+    let raw_sim = raw.sim_seconds.expect("event plane reports sim time");
+    let itp_sim = itp.sim_seconds.expect("interp plane reports sim time");
+    println!("simulated speedup interp vs raw: {:.1}x", raw_sim / itp_sim);
 
     // Simulated POETS vs measured baseline: the figure currency.
-    let x86 = X86Cost::measure_raw_batch(&panel, &targets, Method::DenseThreeLoop);
+    let x86 = X86Cost::measure_raw_batch(
+        workload.panel(),
+        workload.targets(),
+        Method::DenseThreeLoop,
+    );
     println!(
         "this-host x86 dense {} vs simulated POETS raw {} -> speedup {:.1}x",
         fmt_secs(x86),
-        fmt_secs(raw.sim_seconds),
-        x86 / raw.sim_seconds
+        fmt_secs(raw_sim),
+        x86 / raw_sim
     );
 }

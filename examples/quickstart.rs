@@ -1,17 +1,13 @@
-//! Quickstart: impute one small synthetic workload three ways and watch the
-//! answers agree.
+//! Quickstart: impute one small synthetic workload through the session API
+//! on two compute planes and watch the answers agree.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use poets_impute::imputation::app::{RawAppConfig, run_raw};
-use poets_impute::model::accuracy;
-use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
-use poets_impute::poets::topology::ClusterConfig;
-use poets_impute::util::rng::Rng;
+use poets_impute::session::{EngineSpec, ImputeSession, Workload, max_abs_dosage_diff};
 use poets_impute::util::table::fmt_secs;
-use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use poets_impute::workload::panelgen::PanelConfig;
 
 fn main() {
     // 1. A small reference panel and three target haplotypes, generated with
@@ -24,54 +20,44 @@ fn main() {
         seed: 42,
         ..PanelConfig::default()
     };
-    let panel = generate_panel(&cfg);
-    let mut rng = Rng::new(7);
-    let cases = generate_targets(&panel, &cfg, 3, &mut rng);
-    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+    let workload = Workload::synthetic(&cfg, 3);
     println!(
         "panel: {} haplotypes x {} markers; {} targets, {} annotated markers each",
-        panel.n_hap(),
-        panel.n_mark(),
-        targets.len(),
-        targets[0].n_annotated()
+        workload.panel().n_hap(),
+        workload.panel().n_mark(),
+        workload.n_targets(),
+        workload.targets()[0].n_annotated()
     );
 
     // 2. The x86-style baseline (paper §6.1: three nested loops).
-    let baseline = Baseline::default();
-    let want: Vec<ImputeOut<f32>> =
-        baseline.impute_batch(&panel, &targets, Method::DenseThreeLoop);
+    let baseline = ImputeSession::new(workload.clone())
+        .engine(EngineSpec::Baseline)
+        .run()
+        .expect("baseline plane");
 
-    // 3. The event-driven algorithm on a simulated 2-board POETS cluster
+    // 3. The event-driven plane on a simulated 2-board POETS cluster
     //    (paper §5: one vertex per HMM state, α/β waves, posterior unicast).
-    let app = RawAppConfig {
-        cluster: ClusterConfig::with_boards(2),
-        states_per_thread: 8,
-        ..RawAppConfig::default()
-    };
-    let event = run_raw(&panel, &targets, &app);
+    let event = ImputeSession::new(workload)
+        .engine(EngineSpec::Event)
+        .boards(2)
+        .states_per_thread(8)
+        .run()
+        .expect("event plane");
+    let metrics = event.metrics.as_ref().expect("event plane reports metrics");
     println!(
         "event-driven run: {} steps, {} events, simulated wall-clock {}",
-        event.metrics.steps,
-        event.metrics.copies_delivered,
-        fmt_secs(event.sim_seconds)
+        metrics.steps,
+        metrics.copies_delivered,
+        fmt_secs(event.sim_seconds.expect("event plane reports sim time"))
     );
 
-    // 4. Agreement + accuracy against the withheld truth.
-    let mut max_diff = 0.0f32;
-    for (t, out) in want.iter().enumerate() {
-        for m in 0..panel.n_mark() {
-            max_diff = max_diff.max((out.dosage[m] - event.dosages[t][m]).abs());
-        }
-    }
+    // 4. Agreement + accuracy against the withheld truth (scored by the
+    //    session because the synthetic workload retains truth).
+    let max_diff = max_abs_dosage_diff(&baseline.dosages, &event.dosages);
     println!("max |dosage difference| baseline vs event-driven: {max_diff:.2e}");
     assert!(max_diff < 1e-3, "engines disagree!");
 
-    let accs: Vec<_> = cases
-        .iter()
-        .zip(&event.dosages)
-        .map(|(c, d)| accuracy::score(d, &c.truth, &c.masked))
-        .collect();
-    let agg = accuracy::aggregate(&accs);
+    let agg = event.accuracy.expect("synthetic workload has truth");
     println!(
         "imputation accuracy on masked markers: concordance {:.3}, dosage r² {:.3}",
         agg.concordance, agg.dosage_r2

@@ -8,14 +8,11 @@
 //! across PRs.  Functional results are thread-count invariant (asserted
 //! here via `sim_cycles`), so the sweep measures host throughput only.
 
-use poets_impute::imputation::app::{EventRunResult, RawAppConfig, run_raw};
-use poets_impute::imputation::interp_app::run_interp;
-use poets_impute::poets::topology::ClusterConfig;
+use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
 use poets_impute::util::json::Json;
-use poets_impute::util::rng::Rng;
 use poets_impute::util::table::{Table, fmt_count, fmt_secs};
 use poets_impute::util::timed;
-use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use poets_impute::workload::panelgen::PanelConfig;
 
 const THREAD_SWEEP: &[usize] = &[1, 2, 4, 8];
 
@@ -41,42 +38,33 @@ fn main() {
             seed: 7,
             ..PanelConfig::default()
         };
-        let panel = generate_panel(&cfg);
-        let mut rng = Rng::new(8);
-        let tgts: Vec<_> = generate_targets(&panel, &cfg, targets, &mut rng)
-            .into_iter()
-            .map(|c| c.masked)
-            .collect();
-        let base = RawAppConfig {
-            cluster: ClusterConfig::with_boards(4),
-            states_per_thread: 4,
-            ..RawAppConfig::default()
-        };
+        let workload = Workload::synthetic(&cfg, targets);
 
-        for (app_name, spt) in [("raw", 4usize), ("interp", 1usize)] {
+        for (app_name, engine, spt) in [
+            ("raw", EngineSpec::Event, 4usize),
+            ("interp", EngineSpec::Interp, 1usize),
+        ] {
             let mut serial_time = 0.0f64;
             let mut serial_cycles = 0u64;
             for &threads in THREAD_SWEEP {
-                let app = RawAppConfig {
-                    states_per_thread: spt,
-                    ..base.clone()
-                }
-                .with_threads(threads);
-                let (out, host): (EventRunResult, f64) = if app_name == "raw" {
-                    timed(|| run_raw(&panel, &tgts, &app))
-                } else {
-                    timed(|| run_interp(&panel, &tgts, &app))
-                };
+                let session = ImputeSession::new(workload.clone())
+                    .engine(engine)
+                    .boards(4)
+                    .states_per_thread(spt)
+                    .threads(threads);
+                let (out, host): (ImputeReport, f64) =
+                    timed(|| session.run().expect("event planes are always available"));
+                let metrics = out.metrics.as_ref().expect("event planes report metrics");
                 if threads == 1 {
                     serial_time = host;
-                    serial_cycles = out.metrics.sim_cycles;
+                    serial_cycles = metrics.sim_cycles;
                 } else {
                     assert_eq!(
-                        out.metrics.sim_cycles, serial_cycles,
+                        metrics.sim_cycles, serial_cycles,
                         "thread count changed simulated timing"
                     );
                 }
-                let events = out.metrics.copies_delivered;
+                let events = metrics.copies_delivered;
                 let eps = events as f64 / host;
                 t.row(vec![
                     app_name.into(),
@@ -87,7 +75,7 @@ fn main() {
                     fmt_count(events),
                     format!("{eps:.2e}"),
                     format!("{:.2}x", serial_time / host),
-                    fmt_secs(out.sim_seconds),
+                    fmt_secs(out.sim_seconds.expect("event planes report sim time")),
                 ]);
                 let mut row = Json::obj();
                 row.set("app", app_name)
@@ -100,7 +88,7 @@ fn main() {
                     .set("events", events)
                     .set("events_per_s", eps)
                     .set("speedup_vs_serial", serial_time / host)
-                    .set("sim_seconds", out.sim_seconds);
+                    .set("sim_seconds", out.sim_seconds.unwrap_or(0.0));
                 json_rows.push(row);
             }
         }

@@ -7,15 +7,11 @@
 //! * **Multicast** — Tinsel's hardware multicast vs naive unicast fan-out:
 //!   the send-request amortisation the event-driven formulation depends on.
 
-use crate::graph::mapping::Mapping;
-use crate::graph::partition::partition_mapping;
-use crate::imputation::app::{RawAppConfig, build_raw_graph, extract_results};
-use crate::poets::costmodel::CostModel;
-use crate::poets::desim::{SimConfig, Simulator};
+use crate::graph::mapping::MappingStrategy;
 use crate::poets::topology::ClusterConfig;
-use crate::util::rng::Rng;
+use crate::session::{EngineSpec, ImputeSession, Workload};
 use crate::util::table::{Table, fmt_count, fmt_secs};
-use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use crate::workload::panelgen::PanelConfig;
 
 /// One ablation row.
 #[derive(Clone, Debug)]
@@ -44,49 +40,34 @@ pub fn mapping_ablation(
         seed,
         ..PanelConfig::default()
     };
-    let panel = generate_panel(&cfg);
-    let mut rng = Rng::new(seed ^ 0xAB1A);
-    let targets: Vec<_> = generate_targets(&panel, &cfg, n_targets, &mut rng)
-        .into_iter()
-        .map(|c| c.masked)
-        .collect();
-    let cluster = ClusterConfig::with_boards(boards);
-    let app = RawAppConfig {
-        cluster,
-        states_per_thread,
-        ..RawAppConfig::default()
-    };
+    let workload = Workload::synthetic(&cfg, n_targets);
 
     let mut rows = Vec::new();
     let mut reference: Option<Vec<Vec<f32>>> = None;
-    for name in ["manual-2d", "partitioned", "shuffled"] {
-        let graph = build_raw_graph(&panel, &targets, &app.params);
-        let mapping = match name {
-            "manual-2d" => Mapping::manual_2d(graph.n_vertices(), states_per_thread, &cluster),
-            "partitioned" => partition_mapping(&graph, states_per_thread, &cluster),
-            _ => {
-                // Locality-blind control: the manual packing, randomly
-                // permuted (column neighbourhoods scatter across boards).
-                use crate::poets::topology::ThreadId;
-                let n = graph.n_vertices();
-                let mut assign: Vec<ThreadId> = (0..n)
-                    .map(|v| ThreadId((v / states_per_thread) as u32))
-                    .collect();
-                let mut srng = Rng::new(seed ^ 0x50F1E);
-                srng.shuffle(&mut assign);
-                Mapping::from_assignment(assign, &cluster)
-            }
-        };
-        let mut sim = Simulator::new(graph, mapping, cluster, CostModel::default(), SimConfig::default());
-        sim.run();
-        let out = extract_results(&sim, &panel, targets.len());
+    for strategy in [
+        MappingStrategy::Manual2d,
+        MappingStrategy::Partitioned,
+        // Locality-blind control: the manual packing, randomly permuted
+        // (column neighbourhoods scatter across boards).
+        MappingStrategy::Shuffled {
+            seed: seed ^ 0x50F1E,
+        },
+    ] {
+        let report = ImputeSession::new(workload.clone())
+            .engine(EngineSpec::Event)
+            .cluster(ClusterConfig::with_boards(boards))
+            .states_per_thread(states_per_thread)
+            .mapping(strategy)
+            .run()
+            .expect("event plane is always available");
+        let name = strategy.name();
         // Mapping must not change numerics beyond f32 reassociation: message
         // arrival order (and hence accumulation order) is mapping-dependent,
         // so agreement is to tolerance, not bitwise.
         match &reference {
-            None => reference = Some(out.dosages.clone()),
+            None => reference = Some(report.dosages.clone()),
             Some(want) => {
-                for (a, b) in want.iter().flatten().zip(out.dosages.iter().flatten()) {
+                for (a, b) in want.iter().flatten().zip(report.dosages.iter().flatten()) {
                     assert!(
                         (a - b).abs() < 1e-3,
                         "{name} changed numerics: {a} vs {b}"
@@ -94,12 +75,13 @@ pub fn mapping_ablation(
                 }
             }
         }
+        let metrics = report.metrics.expect("event plane reports metrics");
         rows.push(AblationRow {
             name: name.into(),
-            sim_seconds: out.sim_seconds,
-            inter_board_sends: out.metrics.inter_board_sends,
-            sends: out.metrics.sends,
-            max_mailbox_busy: out.metrics.max_mailbox_busy,
+            sim_seconds: report.sim_seconds.expect("event plane reports sim time"),
+            inter_board_sends: metrics.inter_board_sends,
+            sends: metrics.sends,
+            max_mailbox_busy: metrics.max_mailbox_busy,
         });
     }
     rows

@@ -16,17 +16,14 @@
 //! DES scale, throughput-extrapolated at full scale (marked `~`).
 
 use crate::imputation::analytic::{AppKind, Workload, predict};
-use crate::imputation::app::{RawAppConfig, run_raw};
-use crate::imputation::interp_app::run_interp;
 use crate::model::baseline::Method;
 use crate::poets::costmodel::CostModel;
-use crate::poets::desim::SimConfig;
 use crate::poets::termination;
 use crate::poets::topology::ClusterConfig;
+use crate::session::{EngineSpec, ImputeSession, Workload as SessionWorkload};
 use crate::util::json::Json;
-use crate::util::rng::Rng;
 use crate::util::table::{Table, fmt_count, fmt_secs, fmt_speedup};
-use crate::workload::panelgen::{PanelConfig, annotated_markers, generate_panel, generate_targets};
+use crate::workload::panelgen::{PanelConfig, annotated_markers};
 use crate::workload::scenarios;
 
 use super::x86::X86Cost;
@@ -147,24 +144,19 @@ fn des_run_raw(
     states_per_thread: usize,
     n_targets: usize,
 ) -> (f64, f64, u64) {
-    let panel = generate_panel(cfg);
-    let mut rng = Rng::new(cfg.seed ^ 0xD15);
-    let targets: Vec<_> = generate_targets(&panel, cfg, n_targets, &mut rng)
-        .into_iter()
-        .map(|c| c.masked)
-        .collect();
-    let app = RawAppConfig {
-        cluster: ClusterConfig::with_boards(boards),
-        states_per_thread,
-        sim: SimConfig {
-            record_steps: true,
-            ..SimConfig::default()
-        },
-        ..RawAppConfig::default()
-    };
-    let out = run_raw(&panel, &targets, &app);
-    let x86 = X86Cost::measure_raw_batch(&panel, &targets, Method::DenseThreeLoop);
-    (out.sim_seconds, x86, out.metrics.sends)
+    let wl = SessionWorkload::synthetic(cfg, n_targets);
+    let x86 = X86Cost::measure_raw_batch(wl.panel(), wl.targets(), Method::DenseThreeLoop);
+    let report = ImputeSession::new(wl)
+        .engine(EngineSpec::Event)
+        .boards(boards)
+        .states_per_thread(states_per_thread)
+        .run()
+        .expect("event plane is always available");
+    (
+        report.sim_seconds.expect("event plane reports sim time"),
+        x86,
+        report.metrics.expect("event plane reports metrics").sends,
+    )
 }
 
 /// Fig 11 — raw algorithm over expanding hardware (boards sweep).
@@ -295,20 +287,19 @@ pub fn fig13(boards_sweep: &[usize], opts: &FigOpts, x86: &X86Cost) -> FigReport
             (None, None, None)
         } else {
             let cfg = des_panel_cfg(boards * opts.des_states_per_board * 4, 0.1, opts.seed);
-            let panel = generate_panel(&cfg);
-            let mut rng = Rng::new(cfg.seed ^ 0xF13);
-            let targets: Vec<_> = generate_targets(&panel, &cfg, opts.des_targets, &mut rng)
-                .into_iter()
-                .map(|c| c.masked)
-                .collect();
-            let app = RawAppConfig {
-                cluster: ClusterConfig::with_boards(boards),
-                states_per_thread: 1, // one section vertex per thread
-                ..RawAppConfig::default()
-            };
-            let out = run_interp(&panel, &targets, &app);
-            let x = X86Cost::measure_interp_batch(&panel, &targets);
-            (Some(out.sim_seconds), Some(x), Some(out.metrics.sends))
+            let wl = SessionWorkload::synthetic(&cfg, opts.des_targets);
+            let x = X86Cost::measure_interp_batch(wl.panel(), wl.targets());
+            let report = ImputeSession::new(wl)
+                .engine(EngineSpec::Interp)
+                .boards(boards)
+                .states_per_thread(1) // one section vertex per thread
+                .run()
+                .expect("interp plane on a shared annotation grid");
+            (
+                report.sim_seconds,
+                Some(x),
+                report.metrics.map(|m| m.sends),
+            )
         };
         rows.push(FigRow {
             x: boards.to_string(),
@@ -369,29 +360,24 @@ pub fn sync_overhead(opts: &FigOpts) -> String {
     // (b) DES trend: same cluster, growing panels.
     for mult in [1usize, 4, 16] {
         let cfg = des_panel_cfg(mult * opts.des_states_per_board, 0.01, opts.seed);
-        let panel = generate_panel(&cfg);
-        let mut rng = Rng::new(cfg.seed ^ 0xE4);
-        let targets: Vec<_> = generate_targets(&panel, &cfg, opts.des_targets, &mut rng)
-            .into_iter()
-            .map(|c| c.masked)
-            .collect();
-        let app = RawAppConfig {
-            cluster: ClusterConfig::with_boards(1),
-            states_per_thread: 4 * mult,
-            ..RawAppConfig::default()
-        };
-        let run = run_raw(&panel, &targets, &app);
+        let report = ImputeSession::new(SessionWorkload::synthetic(&cfg, opts.des_targets))
+            .engine(EngineSpec::Event)
+            .boards(1)
+            .states_per_thread(4 * mult)
+            .run()
+            .expect("event plane is always available");
+        let metrics = report.metrics.expect("event plane reports metrics");
         let frac = termination::overhead_fraction(
-            run.metrics.mean_step_cycles() as u64,
+            metrics.mean_step_cycles() as u64,
             scenarios::THREADS_PER_BOARD,
             &cost,
         );
         out.push_str(&format!(
             "  {}x{} panel ({} states/thread): mean step {:.0} cycles, barrier {:.1}%\n",
-            panel.n_hap(),
-            panel.n_mark(),
+            report.n_hap,
+            report.n_mark,
             4 * mult,
-            run.metrics.mean_step_cycles(),
+            metrics.mean_step_cycles(),
             frac * 100.0
         ));
     }

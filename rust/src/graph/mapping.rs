@@ -11,8 +11,10 @@
 //!   balanced, low-edge-cut parts to threads.
 
 use crate::poets::topology::{ClusterConfig, ThreadId};
+use crate::util::rng::Rng;
 
-use super::device::VertexId;
+use super::builder::Graph;
+use super::device::{Device, VertexId};
 
 /// A complete vertex→thread assignment.
 #[derive(Clone, Debug)]
@@ -99,6 +101,54 @@ impl Mapping {
             *counts.entry(t.0).or_insert(0usize) += 1;
         }
         counts.values().copied().max().unwrap_or(0)
+    }
+}
+
+/// Named vertex→thread mapping strategies — the session-level configuration
+/// surface over the mapping paths above (plus the locality-blind control the
+/// ablation bench uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MappingStrategy {
+    /// The paper's manual 2-D column-packed mapping (default).
+    Manual2d,
+    /// POLite-style recursive-bisection auto-partitioner.
+    Partitioned,
+    /// Locality-blind control: the manual packing randomly permuted, so
+    /// column neighbourhoods scatter across boards.
+    Shuffled { seed: u64 },
+}
+
+impl MappingStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            MappingStrategy::Manual2d => "manual-2d",
+            MappingStrategy::Partitioned => "partitioned",
+            MappingStrategy::Shuffled { .. } => "shuffled",
+        }
+    }
+
+    /// Build the mapping for a graph under this strategy.
+    pub fn build<D: Device>(
+        self,
+        graph: &Graph<D>,
+        states_per_thread: usize,
+        cluster: &ClusterConfig,
+    ) -> Mapping {
+        let n = graph.n_vertices();
+        match self {
+            MappingStrategy::Manual2d => Mapping::manual_2d(n, states_per_thread, cluster),
+            MappingStrategy::Partitioned => {
+                super::partition::partition_mapping(graph, states_per_thread, cluster)
+            }
+            MappingStrategy::Shuffled { seed } => {
+                let mut assign: Vec<ThreadId> = (0..n)
+                    .map(|v| ThreadId((v / states_per_thread) as u32))
+                    .collect();
+                let mut rng = Rng::new(seed);
+                rng.shuffle(&mut assign);
+                Mapping::from_assignment(assign, cluster)
+            }
+        }
     }
 }
 

@@ -4,7 +4,8 @@
 //! * [`builder`] — graph construction with pooled (shared) multicast
 //!   destination lists.
 //! * [`mapping`] — vertex→hardware-thread assignment: the paper's manual 2-D
-//!   mapping with soft-scheduling, plus round-robin for ablations.
+//!   mapping with soft-scheduling, plus the named [`mapping::MappingStrategy`]
+//!   surface (manual / partitioned / shuffled) the session API exposes.
 //! * [`partition`] — recursive-bisection auto-mapper (METIS substitute for
 //!   the POLite path).
 
@@ -15,4 +16,4 @@ pub mod partition;
 
 pub use builder::{DestListId, Graph, GraphBuilder};
 pub use device::{Ctx, Device, PortId, VertexId};
-pub use mapping::Mapping;
+pub use mapping::{Mapping, MappingStrategy};

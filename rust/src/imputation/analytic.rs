@@ -108,6 +108,7 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // DES cross-check goes through the run_raw shim
 mod tests {
     use super::*;
     use crate::imputation::app::{RawAppConfig, run_raw};

@@ -9,7 +9,6 @@ use std::sync::Arc;
 
 use crate::graph::builder::{Graph, GraphBuilder};
 use crate::graph::device::VertexId;
-use crate::graph::mapping::Mapping;
 use crate::model::panel::{ReferencePanel, TargetHaplotype};
 use crate::model::params::ModelParams;
 use crate::poets::costmodel::CostModel;
@@ -129,16 +128,34 @@ pub fn build_raw_graph(
 }
 
 /// Run the raw event-driven imputation on the simulated cluster.
+///
+/// Thin shim over the session pipeline, kept so downstream diffs stay
+/// reviewable while callers migrate.
+#[deprecated(
+    note = "use session::ImputeSession with EngineSpec::Event (rust/src/session/)"
+)]
 pub fn run_raw(
     panel: &ReferencePanel,
     targets: &[TargetHaplotype],
     cfg: &RawAppConfig,
 ) -> EventRunResult {
-    let graph = build_raw_graph(panel, targets, &cfg.params);
-    let mapping = Mapping::manual_2d(graph.n_vertices(), cfg.states_per_thread, &cfg.cluster);
-    let mut sim = Simulator::new(graph, mapping, cfg.cluster, cfg.cost, cfg.sim);
-    sim.run();
-    extract_results(&sim, panel, targets.len())
+    use crate::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
+    let report = ImputeSession::new(Workload::from_parts(panel.clone(), targets.to_vec()))
+        .engine(EngineSpec::Event)
+        .app_config(cfg.clone())
+        .run()
+        .expect("event plane is always available");
+    let ImputeReport {
+        dosages,
+        metrics,
+        sim_seconds,
+        ..
+    } = report;
+    EventRunResult {
+        dosages,
+        metrics: metrics.expect("event plane reports metrics"),
+        sim_seconds: sim_seconds.expect("event plane reports simulated time"),
+    }
 }
 
 /// Pull per-target dosage vectors out of the accumulator vertices.
@@ -168,7 +185,11 @@ pub fn extract_results(
     }
 }
 
+// The shim is the unit under test here: these are the raw plane's canonical
+// numerics/metrics checks and they deliberately run through the deprecated
+// entry point so it stays correct until removal.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::model::baseline::{Baseline, ImputeOut, Method};

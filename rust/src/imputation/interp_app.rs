@@ -9,11 +9,9 @@ use std::sync::Arc;
 
 use crate::graph::builder::{Graph, GraphBuilder};
 use crate::graph::device::VertexId;
-use crate::graph::mapping::Mapping;
 use crate::model::interpolation::blends;
 use crate::model::panel::{ReferencePanel, TargetHaplotype};
 use crate::poets::desim::Simulator;
-use crate::poets::topology::ClusterConfig;
 
 use super::app::{EventRunResult, RawAppConfig};
 use super::interp_vertex::InterpVertex;
@@ -125,27 +123,34 @@ pub fn build_interp_graph(
 }
 
 /// Run the interpolation app; returns full-grid dosages per target.
+///
+/// Thin shim over the session pipeline, kept so downstream diffs stay
+/// reviewable while callers migrate.
+#[deprecated(
+    note = "use session::ImputeSession with EngineSpec::Interp (rust/src/session/)"
+)]
 pub fn run_interp(
     panel: &ReferencePanel,
     targets: &[TargetHaplotype],
     cfg: &RawAppConfig,
 ) -> EventRunResult {
-    let anchors = targets[0].annotated();
-    let graph = build_interp_graph(panel, targets, &anchors, cfg);
-    let mapping = interp_mapping(graph.n_vertices(), cfg.states_per_thread, &cfg.cluster);
-    let mut sim = Simulator::new(graph, mapping, cfg.cluster, cfg.cost, cfg.sim);
-    sim.run();
-    extract_interp_results(&sim, panel, &anchors, targets.len())
-}
-
-/// Soft-scheduling for sections: `states_per_thread` counts *panel states*,
-/// so sections-per-thread = states_per_thread / section_size (≥ 1).
-fn interp_mapping(
-    n_vertices: usize,
-    states_per_thread: usize,
-    cluster: &ClusterConfig,
-) -> Mapping {
-    Mapping::manual_2d(n_vertices, states_per_thread.max(1), cluster)
+    use crate::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
+    let report = ImputeSession::new(Workload::from_parts(panel.clone(), targets.to_vec()))
+        .engine(EngineSpec::Interp)
+        .app_config(cfg.clone())
+        .run()
+        .expect("interp plane: targets must share an annotation grid");
+    let ImputeReport {
+        dosages,
+        metrics,
+        sim_seconds,
+        ..
+    } = report;
+    EventRunResult {
+        dosages,
+        metrics: metrics.expect("interp plane reports metrics"),
+        sim_seconds: sim_seconds.expect("interp plane reports simulated time"),
+    }
 }
 
 /// Reassemble per-target full-grid dosages from the accumulator vertices.
@@ -179,7 +184,10 @@ pub fn extract_interp_results(
     }
 }
 
+// These canonical interp-plane checks deliberately run through the
+// deprecated shims so they stay correct until removal.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::model::baseline::{Baseline, ImputeOut, Method};

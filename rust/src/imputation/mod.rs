@@ -8,6 +8,9 @@
 //!   one vertex per state *section* (1 HMM state + N interpolation states).
 //! * [`analytic`] — closed-form step-time predictor, cross-validated against
 //!   the DES and used to extrapolate figure sweeps to full paper scale.
+//!
+//! Execution goes through the unified pipeline in [`crate::session`]; the
+//! `run_raw` / `run_interp` entry points survive only as deprecated shims.
 
 pub mod analytic;
 pub mod app;
@@ -17,4 +20,7 @@ pub mod msg;
 pub mod obs;
 pub mod vertex;
 
-pub use app::{EventRunResult, RawAppConfig, build_raw_graph, run_raw};
+pub use app::{EventRunResult, RawAppConfig, build_raw_graph};
+// Deprecated shim, re-exported for downstream-compat until removal.
+#[allow(deprecated)]
+pub use app::run_raw;

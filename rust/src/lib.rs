@@ -1,27 +1,57 @@
 //! # poets-impute
 //!
-//! A full reproduction of *"An Event-Driven Approach To Genotype Imputation On A
-//! Custom RISC-V FPGA Cluster"* (Morris et al., CS.DC 2023) as a three-layer
-//! Rust + JAX + Pallas stack.
+//! A full reproduction of *"An Event-Driven Approach To Genotype Imputation
+//! On A Custom RISC-V FPGA Cluster"* (Morris et al., CS.DC 2023) as a
+//! three-layer Rust + JAX + Pallas stack.
 //!
-//! The paper maps the Li & Stephens imputation HMM onto POETS, an event-driven
-//! RISC-V NoC FPGA cluster, and evaluates scaling, soft-scheduling and a linear
-//! interpolation optimisation against a single-threaded x86 baseline. This crate
-//! rebuilds every layer of that system:
+//! The paper maps the Li & Stephens imputation HMM onto POETS, an
+//! event-driven RISC-V NoC FPGA cluster, and evaluates scaling,
+//! soft-scheduling and a linear interpolation optimisation against a
+//! single-threaded x86 baseline.
 //!
+//! ## The session API
+//!
+//! All five compute planes are driven through one typed pipeline,
+//! [`session`]: build a [`session::Workload`], pick a plane with
+//! [`session::EngineSpec`], and run it through a [`session::ImputeSession`]:
+//!
+//! ```
+//! use poets_impute::session::{EngineSpec, ImputeSession, Workload};
+//! use poets_impute::workload::panelgen::PanelConfig;
+//!
+//! let cfg = PanelConfig { n_hap: 8, n_mark: 21, annot_ratio: 0.2, seed: 1,
+//!                         ..PanelConfig::default() };
+//! let report = ImputeSession::new(Workload::synthetic(&cfg, 2))
+//!     .engine(EngineSpec::Baseline)
+//!     .run()
+//!     .expect("baseline plane");
+//! assert!(report.accuracy.unwrap().concordance > 0.0);
+//! ```
+//!
+//! The CLI (`poets-impute impute|validate`), the figure/ablation benches and
+//! every example run on this API; the plane-specific entry points of earlier
+//! revisions survive only as deprecated shims.
+//!
+//! ## Layers
+//!
+//! * [`session`] — the unified pipeline: `Engine` trait over the five
+//!   planes, target batching, accuracy scoring, serialisable reports.
 //! * [`model`] — the Li & Stephens mathematics plus the paper's x86-style
 //!   baseline implementation (three nested loops) and linear interpolation.
-//! * [`workload`] — synthetic reference-panel / genetic-map generation following
-//!   the paper's §6.2 recipe (diallelic, 5 % MAF, 1/100 or 1/10 marker ratios).
-//! * [`poets`] — a cycle-approximate functional + timing simulator of the POETS
-//!   cluster: topology, NoC, mailboxes, hardware multicast, termination
-//!   detection, discrete-event core and a calibrated cost model.
-//! * [`graph`] — a POLite-like application-graph framework with manual 2-D and
-//!   partitioner-based vertex→thread mapping (soft-scheduling).
+//! * [`workload`] — synthetic reference-panel / genetic-map generation
+//!   following the paper's §6.2 recipe (diallelic, 5 % MAF, 1/100 or 1/10
+//!   marker ratios).
+//! * [`poets`] — a cycle-approximate functional + timing simulator of the
+//!   POETS cluster: topology, NoC, mailboxes, hardware multicast,
+//!   termination detection, discrete-event core and a calibrated cost model.
+//! * [`graph`] — a POLite-like application-graph framework with manual 2-D
+//!   and partitioner-based vertex→thread mapping (soft-scheduling).
 //! * [`imputation`] — the paper's contribution: Algorithm 1 as event-driven
-//!   vertices, target-haplotype pipelining, and linear-interpolation sections.
+//!   vertices, target-haplotype pipelining, and linear-interpolation
+//!   sections.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
-//!   (`artifacts/*.hlo.txt`) used as the fast compute plane and as the oracle.
+//!   (`artifacts/*.hlo.txt`) used as the fast compute plane and as the
+//!   oracle.
 //! * [`bench`] — harnesses that regenerate every figure in the paper's
 //!   evaluation (Fig 11, 12, 13 plus claim checks).
 //! * [`util`], [`cli`] — offline-friendly substrates (RNG, JSON, tables,
@@ -34,5 +64,6 @@ pub mod imputation;
 pub mod model;
 pub mod poets;
 pub mod runtime;
+pub mod session;
 pub mod util;
 pub mod workload;

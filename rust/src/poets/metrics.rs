@@ -67,6 +67,23 @@ impl SimMetrics {
         self.barrier_cycles as f64 / self.sim_cycles as f64
     }
 
+    /// Accumulate another run's counters — used when a session executes a
+    /// workload as several sequential target batches (counts and cycles add;
+    /// peak-occupancy gauges take the max).
+    pub fn absorb(&mut self, other: &SimMetrics) {
+        self.sends += other.sends;
+        self.copies_delivered += other.copies_delivered;
+        self.recv_handlers += other.recv_handlers;
+        self.step_handlers += other.step_handlers;
+        self.inter_board_sends += other.inter_board_sends;
+        self.steps += other.steps;
+        self.sim_cycles += other.sim_cycles;
+        self.barrier_cycles += other.barrier_cycles;
+        self.max_core_busy = self.max_core_busy.max(other.max_core_busy);
+        self.max_mailbox_busy = self.max_mailbox_busy.max(other.max_mailbox_busy);
+        self.step_durations.extend_from_slice(&other.step_durations);
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("sends", self.sends)
@@ -117,6 +134,33 @@ mod tests {
         assert_eq!(m.core_occupancy(), 0.0);
         assert_eq!(m.barrier_fraction(), 0.0);
         assert_eq!(m.mean_step_cycles(), 0.0);
+    }
+
+    #[test]
+    fn absorb_adds_counts_and_maxes_gauges() {
+        let mut a = SimMetrics {
+            sends: 10,
+            sim_cycles: 100,
+            steps: 2,
+            max_core_busy: 40,
+            step_durations: vec![60, 40],
+            ..Default::default()
+        };
+        let b = SimMetrics {
+            sends: 5,
+            sim_cycles: 50,
+            steps: 1,
+            max_core_busy: 45,
+            step_durations: vec![50],
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.sends, 15);
+        assert_eq!(a.sim_cycles, 150);
+        assert_eq!(a.steps, 3);
+        assert_eq!(a.max_core_busy, 45);
+        assert_eq!(a.step_durations, vec![60, 40, 50]);
+        assert_eq!(a.total_step_cycles(), 150);
     }
 
     #[test]

@@ -1,0 +1,446 @@
+//! The [`Engine`] trait and its five implementations — one per compute plane.
+//!
+//! Every execution strategy the paper evaluates is an `Engine`: bind it to a
+//! workload with [`Engine::prepare`], then feed it [`TargetBatch`]es with
+//! [`Engine::run`].  The trait is object-safe so the session can treat all
+//! planes uniformly; engines are stateful (prepare stores the bound panel,
+//! and the XLA plane opens its PJRT runtime there).
+//!
+//! The event-driven planes specialise their application graph per batch (the
+//! observation matrix and target count are baked into vertex state), so graph
+//! construction happens inside `run`, not `prepare`.
+
+use std::sync::Arc;
+
+use crate::graph::mapping::MappingStrategy;
+use crate::imputation::app::{EventRunResult, RawAppConfig, build_raw_graph, extract_results};
+use crate::imputation::interp_app::{build_interp_graph, extract_interp_results};
+use crate::model::baseline::{Baseline, ImputeOut, Method};
+use crate::model::panel::ReferencePanel;
+use crate::poets::desim::Simulator;
+use crate::poets::metrics::SimMetrics;
+use crate::runtime::{Runtime, XlaImputer};
+
+use super::workload::{TargetBatch, Workload};
+
+/// Which compute plane to run — the typed replacement for the stringly
+/// `--engine` flag.  All five planes compute Li & Stephens dosages; they
+/// differ in arithmetic formulation and execution substrate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineSpec {
+    /// x86-style dense three-loop baseline (the paper's §6.1 comparison
+    /// point, and the oracle the other planes are checked against).
+    Baseline,
+    /// x86 baseline using the rank-1 transition structure (the "further
+    /// optimised x86"; also the arithmetic the Pallas kernels implement).
+    Rank1,
+    /// Event-driven raw graph on the simulated POETS cluster (§5.2).
+    Event,
+    /// Event-driven linear-interpolation graph (§5.3): HMM at annotated
+    /// anchors only, linear interpolation in between.
+    Interp,
+    /// AOT JAX/Pallas artifacts executed through PJRT (the fast compute
+    /// plane; unavailable without the `pjrt` feature + built artifacts).
+    Xla,
+}
+
+impl EngineSpec {
+    /// Every plane, in oracle-first order.
+    pub const ALL: [EngineSpec; 5] = [
+        EngineSpec::Baseline,
+        EngineSpec::Rank1,
+        EngineSpec::Event,
+        EngineSpec::Interp,
+        EngineSpec::Xla,
+    ];
+
+    /// The `--engine` spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineSpec::Baseline => "baseline",
+            EngineSpec::Rank1 => "rank1",
+            EngineSpec::Event => "event",
+            EngineSpec::Interp => "interp",
+            EngineSpec::Xla => "xla",
+        }
+    }
+
+    /// Max |Δdosage| this plane is allowed against its oracle (see
+    /// [`EngineSpec::oracle_name`]); the tolerances the repo's equivalence
+    /// tests have always enforced.
+    pub fn tolerance(self) -> f64 {
+        match self {
+            EngineSpec::Baseline => 0.0,
+            EngineSpec::Rank1 => 1e-4,
+            EngineSpec::Event => 1e-3,
+            EngineSpec::Interp => 2e-3,
+            EngineSpec::Xla => 1e-3,
+        }
+    }
+
+    /// What this plane's dosages are compared against.  The interpolated
+    /// plane approximates the HMM by design, so its oracle is the x86
+    /// interpolation pipeline, not the dense baseline.
+    pub fn oracle_name(self) -> &'static str {
+        match self {
+            EngineSpec::Interp => "x86 interp",
+            _ => "dense baseline",
+        }
+    }
+}
+
+impl std::str::FromStr for EngineSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<EngineSpec, String> {
+        match s {
+            "baseline" | "dense" => Ok(EngineSpec::Baseline),
+            "rank1" => Ok(EngineSpec::Rank1),
+            "event" => Ok(EngineSpec::Event),
+            // "event-interp" is the pre-session CLI spelling.
+            "interp" | "event-interp" => Ok(EngineSpec::Interp),
+            "xla" => Ok(EngineSpec::Xla),
+            other => Err(format!(
+                "unknown engine {other:?} (expected baseline|rank1|event|interp|xla)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What an engine produces for one batch.
+#[derive(Clone, Debug)]
+pub struct EngineOutput {
+    /// `dosages[target_in_batch][marker]`.
+    pub dosages: Vec<Vec<f32>>,
+    /// Simulated POETS wall-clock seconds (event planes only).
+    pub sim_seconds: Option<f64>,
+    /// DES counters (event planes only).
+    pub metrics: Option<SimMetrics>,
+}
+
+impl EngineOutput {
+    fn host_only(dosages: Vec<Vec<f32>>) -> EngineOutput {
+        EngineOutput {
+            dosages,
+            sim_seconds: None,
+            metrics: None,
+        }
+    }
+
+    fn from_event(res: EventRunResult) -> EngineOutput {
+        EngineOutput {
+            dosages: res.dosages,
+            sim_seconds: Some(res.sim_seconds),
+            metrics: Some(res.metrics),
+        }
+    }
+}
+
+/// A compute plane bound to (at most) one workload at a time.
+///
+/// Lifecycle: `prepare` binds the workload (shares the panel via `Arc`,
+/// opens runtimes, validates shapes), then `run` services target batches
+/// against it.  `run` before `prepare` is an error.
+pub trait Engine {
+    /// Which plane this is (for reports and error messages).
+    fn spec(&self) -> EngineSpec;
+
+    /// Bind the engine to a workload.
+    fn prepare(&mut self, workload: &Workload) -> Result<(), String>;
+
+    /// Impute every target in `batch`, in order.
+    fn run(&mut self, batch: &TargetBatch<'_>) -> Result<EngineOutput, String>;
+}
+
+/// Instantiate the engine for a spec.  `app` carries the shared knobs (model
+/// params, cluster shape, soft-scheduling, host threads); `mapping` selects
+/// the vertex→thread strategy for the event planes.
+pub fn build_engine(
+    spec: EngineSpec,
+    app: &RawAppConfig,
+    mapping: MappingStrategy,
+) -> Box<dyn Engine> {
+    match spec {
+        EngineSpec::Baseline => Box::new(BaselineEngine::new(Method::DenseThreeLoop, app.clone())),
+        EngineSpec::Rank1 => Box::new(BaselineEngine::new(Method::Rank1, app.clone())),
+        EngineSpec::Event => Box::new(EventEngine::new(app.clone(), mapping)),
+        EngineSpec::Interp => Box::new(InterpEngine::new(app.clone(), mapping)),
+        EngineSpec::Xla => Box::new(XlaEngine::new(app.clone())),
+    }
+}
+
+fn bound_panel<'a>(
+    panel: &'a Option<Arc<ReferencePanel>>,
+    spec: EngineSpec,
+) -> Result<&'a ReferencePanel, String> {
+    panel
+        .as_deref()
+        .ok_or_else(|| format!("{} engine: run() before prepare()", spec.name()))
+}
+
+/// The x86 baseline planes (dense three-loop and rank-1), run sequentially —
+/// exactly the paper's single-threaded comparison point.
+pub struct BaselineEngine {
+    method: Method,
+    baseline: Baseline,
+    panel: Option<Arc<ReferencePanel>>,
+}
+
+impl BaselineEngine {
+    pub fn new(method: Method, app: RawAppConfig) -> BaselineEngine {
+        BaselineEngine {
+            method,
+            baseline: Baseline::new(app.params),
+            panel: None,
+        }
+    }
+}
+
+impl Engine for BaselineEngine {
+    fn spec(&self) -> EngineSpec {
+        match self.method {
+            Method::DenseThreeLoop => EngineSpec::Baseline,
+            Method::Rank1 => EngineSpec::Rank1,
+        }
+    }
+
+    fn prepare(&mut self, workload: &Workload) -> Result<(), String> {
+        self.panel = Some(workload.panel_arc());
+        Ok(())
+    }
+
+    fn run(&mut self, batch: &TargetBatch<'_>) -> Result<EngineOutput, String> {
+        let panel = bound_panel(&self.panel, self.spec())?;
+        let outs: Vec<ImputeOut<f32>> =
+            self.baseline.impute_batch(panel, batch.targets(), self.method);
+        Ok(EngineOutput::host_only(
+            outs.into_iter().map(|o| o.dosage).collect(),
+        ))
+    }
+}
+
+/// The event-driven raw plane: one vertex per HMM state on the simulated
+/// POETS cluster.
+pub struct EventEngine {
+    cfg: RawAppConfig,
+    mapping: MappingStrategy,
+    panel: Option<Arc<ReferencePanel>>,
+}
+
+impl EventEngine {
+    pub fn new(cfg: RawAppConfig, mapping: MappingStrategy) -> EventEngine {
+        EventEngine {
+            cfg,
+            mapping,
+            panel: None,
+        }
+    }
+}
+
+impl Engine for EventEngine {
+    fn spec(&self) -> EngineSpec {
+        EngineSpec::Event
+    }
+
+    fn prepare(&mut self, workload: &Workload) -> Result<(), String> {
+        self.panel = Some(workload.panel_arc());
+        Ok(())
+    }
+
+    fn run(&mut self, batch: &TargetBatch<'_>) -> Result<EngineOutput, String> {
+        if batch.is_empty() {
+            return Err("event engine: empty target batch".into());
+        }
+        let panel = bound_panel(&self.panel, EngineSpec::Event)?;
+        let graph = build_raw_graph(panel, batch.targets(), &self.cfg.params);
+        let mapping = self
+            .mapping
+            .build(&graph, self.cfg.states_per_thread, &self.cfg.cluster);
+        let mut sim = Simulator::new(graph, mapping, self.cfg.cluster, self.cfg.cost, self.cfg.sim);
+        sim.run();
+        Ok(EngineOutput::from_event(extract_results(
+            &sim,
+            panel,
+            batch.len(),
+        )))
+    }
+}
+
+/// The event-driven linear-interpolation plane: one vertex per anchor-state
+/// section.
+pub struct InterpEngine {
+    cfg: RawAppConfig,
+    mapping: MappingStrategy,
+    panel: Option<Arc<ReferencePanel>>,
+}
+
+impl InterpEngine {
+    pub fn new(cfg: RawAppConfig, mapping: MappingStrategy) -> InterpEngine {
+        InterpEngine {
+            cfg,
+            mapping,
+            panel: None,
+        }
+    }
+}
+
+impl Engine for InterpEngine {
+    fn spec(&self) -> EngineSpec {
+        EngineSpec::Interp
+    }
+
+    fn prepare(&mut self, workload: &Workload) -> Result<(), String> {
+        // All targets must share one annotation grid with >= 2 anchors
+        // (chips type the same loci for every sample).
+        let anchors = match workload.targets().first() {
+            Some(t) => t.annotated(),
+            None => Vec::new(),
+        };
+        if !workload.targets().is_empty() && anchors.len() < 2 {
+            return Err("interp engine: targets have < 2 annotated markers".into());
+        }
+        for t in workload.targets() {
+            if t.annotated() != anchors {
+                return Err("interp engine: targets disagree on the annotation grid".into());
+            }
+        }
+        self.panel = Some(workload.panel_arc());
+        Ok(())
+    }
+
+    fn run(&mut self, batch: &TargetBatch<'_>) -> Result<EngineOutput, String> {
+        if batch.is_empty() {
+            return Err("interp engine: empty target batch".into());
+        }
+        let panel = bound_panel(&self.panel, EngineSpec::Interp)?;
+        let anchors = batch.targets()[0].annotated();
+        let graph = build_interp_graph(panel, batch.targets(), &anchors, &self.cfg);
+        let mapping =
+            self.mapping
+                .build(&graph, self.cfg.states_per_thread.max(1), &self.cfg.cluster);
+        let mut sim = Simulator::new(graph, mapping, self.cfg.cluster, self.cfg.cost, self.cfg.sim);
+        sim.run();
+        Ok(EngineOutput::from_event(extract_interp_results(
+            &sim,
+            panel,
+            &anchors,
+            batch.len(),
+        )))
+    }
+}
+
+/// The AOT JAX/Pallas plane through PJRT.  `prepare` opens the artifact
+/// runtime — in offline builds (no `pjrt` feature) or without built
+/// artifacts this fails with a clear message and the session surfaces it.
+pub struct XlaEngine {
+    cfg: RawAppConfig,
+    imputer: Option<XlaImputer>,
+    panel: Option<Arc<ReferencePanel>>,
+}
+
+impl XlaEngine {
+    pub fn new(cfg: RawAppConfig) -> XlaEngine {
+        XlaEngine {
+            cfg,
+            imputer: None,
+            panel: None,
+        }
+    }
+}
+
+impl Engine for XlaEngine {
+    fn spec(&self) -> EngineSpec {
+        EngineSpec::Xla
+    }
+
+    fn prepare(&mut self, workload: &Workload) -> Result<(), String> {
+        let rt = Runtime::open_default().map_err(|e| e.to_string())?;
+        self.imputer = Some(XlaImputer::new(rt, self.cfg.params));
+        self.panel = Some(workload.panel_arc());
+        Ok(())
+    }
+
+    fn run(&mut self, batch: &TargetBatch<'_>) -> Result<EngineOutput, String> {
+        let panel = bound_panel(&self.panel, EngineSpec::Xla)?;
+        let imputer = self
+            .imputer
+            .as_mut()
+            .ok_or("xla engine: run() before prepare()")?;
+        let dosages = imputer
+            .impute_batch(panel, batch.targets())
+            .map_err(|e| e.to_string())?;
+        Ok(EngineOutput::host_only(dosages))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::panelgen::PanelConfig;
+
+    fn wl() -> Workload {
+        let cfg = PanelConfig {
+            n_hap: 6,
+            n_mark: 21,
+            maf: 0.25,
+            annot_ratio: 0.2,
+            seed: 9,
+            ..PanelConfig::default()
+        };
+        Workload::synthetic(&cfg, 2)
+    }
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        for spec in EngineSpec::ALL {
+            assert_eq!(spec.name().parse::<EngineSpec>().unwrap(), spec);
+        }
+        assert_eq!(
+            "event-interp".parse::<EngineSpec>().unwrap(),
+            EngineSpec::Interp
+        );
+        assert!("frobnicate".parse::<EngineSpec>().is_err());
+    }
+
+    #[test]
+    fn run_before_prepare_is_an_error() {
+        let wl = wl();
+        let mut e = BaselineEngine::new(Method::Rank1, RawAppConfig::default());
+        let err = e.run(&wl.full_batch()).unwrap_err();
+        assert!(err.contains("before prepare"), "{err}");
+    }
+
+    #[test]
+    fn baseline_engine_runs_a_batch() {
+        let wl = wl();
+        let mut e = BaselineEngine::new(Method::DenseThreeLoop, RawAppConfig::default());
+        e.prepare(&wl).unwrap();
+        let out = e.run(&wl.full_batch()).unwrap();
+        assert_eq!(out.dosages.len(), 2);
+        assert_eq!(out.dosages[0].len(), 21);
+        assert!(out.sim_seconds.is_none());
+        assert!(out.metrics.is_none());
+    }
+
+    #[test]
+    fn interp_engine_rejects_mismatched_grids() {
+        let wl = wl();
+        let mut odd = wl.targets()[0].clone();
+        // Annotate one extra marker so the grids disagree.
+        let extra = odd.obs.iter().position(|&o| o < 0).unwrap();
+        odd.obs[extra] = 0;
+        let bad = Workload::from_parts(
+            wl.panel().clone(),
+            vec![wl.targets()[0].clone(), odd],
+        );
+        let mut e = InterpEngine::new(RawAppConfig::default(), MappingStrategy::Manual2d);
+        let err = e.prepare(&bad).unwrap_err();
+        assert!(err.contains("annotation grid"), "{err}");
+    }
+}

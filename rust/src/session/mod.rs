@@ -1,0 +1,317 @@
+//! The unified imputation pipeline — one typed API over all five compute
+//! planes.
+//!
+//! Every execution strategy the paper evaluates (x86 dense baseline, x86
+//! rank-1, event-driven raw graph, event-driven linear interpolation, and
+//! the AOT JAX/Pallas XLA plane) is an [`Engine`], selected by the
+//! [`EngineSpec`] enum.  [`ImputeSession`] owns everything around the
+//! engine: workload assembly ([`Workload`]), target batching
+//! ([`TargetBatch`] — the seam where panel-level batching across targets
+//! lands), per-engine configuration, accuracy scoring and the serialisable
+//! [`ImputeReport`] with its `BENCH_*.json`-style run manifest.
+//!
+//! End to end:
+//!
+//! ```
+//! use poets_impute::session::{EngineSpec, ImputeSession, Workload};
+//! use poets_impute::workload::panelgen::PanelConfig;
+//!
+//! let cfg = PanelConfig { n_hap: 8, n_mark: 21, annot_ratio: 0.2, seed: 1,
+//!                         ..PanelConfig::default() };
+//! let report = ImputeSession::new(Workload::synthetic(&cfg, 2))
+//!     .engine(EngineSpec::Event)   // any of the five planes
+//!     .boards(1)
+//!     .states_per_thread(8)        // soft-scheduling (Fig 12)
+//!     .threads(2)                  // host workers; results invariant
+//!     .batch(2)                    // targets per engine batch
+//!     .run()
+//!     .expect("event plane is always available");
+//! assert_eq!(report.dosages.len(), 2);
+//! println!("{}", report.to_json().pretty());
+//! ```
+//!
+//! The legacy per-engine entry points (`imputation::app::run_raw`,
+//! `imputation::interp_app::run_interp`) are deprecated shims over this API.
+
+pub mod engine;
+pub mod report;
+pub mod workload;
+
+pub use engine::{
+    BaselineEngine, Engine, EngineOutput, EngineSpec, EventEngine, InterpEngine, XlaEngine,
+    build_engine,
+};
+pub use report::{ImputeReport, max_abs_dosage_diff};
+pub use workload::{TargetBatch, Workload};
+
+use crate::graph::mapping::MappingStrategy;
+use crate::imputation::app::RawAppConfig;
+use crate::model::accuracy;
+use crate::model::params::ModelParams;
+use crate::poets::costmodel::CostModel;
+use crate::poets::desim::SimConfig;
+use crate::poets::metrics::SimMetrics;
+use crate::poets::topology::ClusterConfig;
+
+/// Builder for one imputation run: workload in, [`ImputeReport`] out.
+///
+/// Defaults: the event-driven plane on the full 48-board cluster, one state
+/// per thread, serial host delivery, all targets in a single batch.
+#[derive(Clone)]
+pub struct ImputeSession {
+    workload: Workload,
+    spec: EngineSpec,
+    app: RawAppConfig,
+    mapping: MappingStrategy,
+    /// Targets per engine batch; `None` = all in one batch.
+    batch: Option<usize>,
+}
+
+impl ImputeSession {
+    pub fn new(workload: Workload) -> ImputeSession {
+        ImputeSession {
+            workload,
+            spec: EngineSpec::Event,
+            app: RawAppConfig::default(),
+            mapping: MappingStrategy::Manual2d,
+            batch: None,
+        }
+    }
+
+    /// Select the compute plane.
+    pub fn engine(mut self, spec: EngineSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Replace the whole engine configuration at once (cluster, params,
+    /// soft-scheduling, cost model, sim switches).
+    pub fn app_config(mut self, app: RawAppConfig) -> Self {
+        self.app = app;
+        self
+    }
+
+    /// Model constants (Ne, error rate) shared by every plane.
+    pub fn params(mut self, params: ModelParams) -> Self {
+        self.app.params = params;
+        self
+    }
+
+    /// Simulated cluster shape for the event planes.
+    pub fn cluster(mut self, cluster: ClusterConfig) -> Self {
+        self.app.cluster = cluster;
+        self
+    }
+
+    /// Shorthand: an `n`-board cluster ([`ClusterConfig::with_boards`]).
+    pub fn boards(mut self, n: usize) -> Self {
+        self.app.cluster = ClusterConfig::with_boards(n);
+        self
+    }
+
+    /// Soft-scheduling factor: panel states per hardware thread (Fig 12).
+    pub fn states_per_thread(mut self, n: usize) -> Self {
+        self.app.states_per_thread = n.max(1);
+        self
+    }
+
+    /// Host worker threads for the DES deliver/step phases.  Results are
+    /// thread-count invariant (superstep barrier); only host time changes.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.app.sim.threads = Some(n.max(1));
+        self
+    }
+
+    /// DES cost model override.
+    pub fn cost(mut self, cost: CostModel) -> Self {
+        self.app.cost = cost;
+        self
+    }
+
+    /// DES switches (step cap, step recording) override.
+    pub fn sim(mut self, sim: SimConfig) -> Self {
+        self.app.sim = sim;
+        self
+    }
+
+    /// Vertex→thread mapping strategy for the event planes.
+    pub fn mapping(mut self, mapping: MappingStrategy) -> Self {
+        self.mapping = mapping;
+        self
+    }
+
+    /// Targets per engine batch (default: all targets in one batch).
+    pub fn batch(mut self, batch_size: usize) -> Self {
+        assert!(batch_size >= 1, "batch size must be >= 1");
+        self.batch = Some(batch_size);
+        self
+    }
+
+    /// Execute: prepare the engine, run every batch in order, score accuracy
+    /// when truth is available, and assemble the report.
+    pub fn run(self) -> Result<ImputeReport, String> {
+        let n_targets = self.workload.n_targets();
+        if n_targets == 0 {
+            return Err("workload has no targets".into());
+        }
+        let batch_size = self.batch.unwrap_or(n_targets).min(n_targets);
+        let mut engine = build_engine(self.spec, &self.app, self.mapping);
+
+        engine.prepare(&self.workload)?;
+        // Time only the batch runs: one-time preparation (panel binding,
+        // XLA artifact loading) is excluded so `host_seconds` stays
+        // comparable across planes and with the pre-session harnesses.
+        let start = std::time::Instant::now();
+        let mut dosages: Vec<Vec<f32>> = Vec::with_capacity(n_targets);
+        let mut sim_seconds: Option<f64> = None;
+        let mut metrics: Option<SimMetrics> = None;
+        let mut n_batches = 0usize;
+        for batch in self.workload.batches(batch_size) {
+            let out = engine.run(&batch)?;
+            if out.dosages.len() != batch.len() {
+                return Err(format!(
+                    "{} engine returned {} dosage rows for a {}-target batch",
+                    self.spec.name(),
+                    out.dosages.len(),
+                    batch.len()
+                ));
+            }
+            dosages.extend(out.dosages);
+            if let Some(s) = out.sim_seconds {
+                *sim_seconds.get_or_insert(0.0) += s;
+            }
+            if let Some(m) = out.metrics {
+                match &mut metrics {
+                    None => metrics = Some(m),
+                    Some(acc) => acc.absorb(&m),
+                }
+            }
+            n_batches += 1;
+        }
+        let host_seconds = start.elapsed().as_secs_f64();
+
+        let accuracy = self.workload.truth().map(|truth| {
+            let per: Vec<_> = truth
+                .iter()
+                .zip(&dosages)
+                .zip(self.workload.targets())
+                .map(|((t, d), target)| accuracy::score(d, t, target))
+                .collect();
+            accuracy::aggregate(&per)
+        });
+
+        Ok(ImputeReport {
+            engine: self.spec,
+            n_hap: self.workload.panel().n_hap(),
+            n_mark: self.workload.panel().n_mark(),
+            n_targets,
+            provenance: self.workload.provenance().copied(),
+            batch_size,
+            n_batches,
+            boards: self.app.cluster.n_boards,
+            states_per_thread: self.app.states_per_thread,
+            threads: self.app.sim.threads.unwrap_or(1),
+            mapping: self.mapping,
+            dosages,
+            accuracy,
+            host_seconds,
+            sim_seconds,
+            metrics,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::panelgen::PanelConfig;
+
+    fn wl(n_targets: usize) -> Workload {
+        let cfg = PanelConfig {
+            n_hap: 8,
+            n_mark: 21,
+            maf: 0.2,
+            annot_ratio: 0.2,
+            seed: 31,
+            ..PanelConfig::default()
+        };
+        Workload::synthetic(&cfg, n_targets)
+    }
+
+    #[test]
+    fn baseline_session_scores_accuracy() {
+        let report = ImputeSession::new(wl(3))
+            .engine(EngineSpec::Baseline)
+            .run()
+            .unwrap();
+        assert_eq!(report.dosages.len(), 3);
+        assert_eq!(report.n_batches, 1);
+        assert_eq!(report.batch_size, 3);
+        let acc = report.accuracy.expect("synthetic workload has truth");
+        assert!(acc.n_scored > 0);
+        assert!(report.sim_seconds.is_none());
+    }
+
+    #[test]
+    fn event_session_reports_sim_plane() {
+        let report = ImputeSession::new(wl(2))
+            .engine(EngineSpec::Event)
+            .boards(1)
+            .states_per_thread(8)
+            .run()
+            .unwrap();
+        assert!(report.sim_seconds.unwrap() > 0.0);
+        let m = report.metrics.expect("event plane reports metrics");
+        assert!(m.sends > 0);
+        assert_eq!(report.boards, 1);
+        assert_eq!(report.states_per_thread, 8);
+    }
+
+    #[test]
+    fn batching_splits_and_accumulates() {
+        let report = ImputeSession::new(wl(5))
+            .engine(EngineSpec::Event)
+            .boards(1)
+            .states_per_thread(8)
+            .batch(2)
+            .run()
+            .unwrap();
+        assert_eq!(report.n_batches, 3);
+        assert_eq!(report.batch_size, 2);
+        assert_eq!(report.dosages.len(), 5);
+        // Metrics accumulate across batches: 3 sequential runs' steps.
+        let m = report.metrics.unwrap();
+        assert_eq!(m.step_durations.len() as u64, m.steps);
+    }
+
+    #[test]
+    fn oversized_batch_clamps_to_target_count() {
+        let report = ImputeSession::new(wl(2))
+            .engine(EngineSpec::Rank1)
+            .batch(64)
+            .run()
+            .unwrap();
+        assert_eq!(report.batch_size, 2);
+        assert_eq!(report.n_batches, 1);
+    }
+
+    #[test]
+    fn empty_workload_is_an_error() {
+        let base = wl(1);
+        let empty = Workload::from_parts(base.panel().clone(), Vec::new());
+        let err = ImputeSession::new(empty).run().unwrap_err();
+        assert!(err.contains("no targets"), "{err}");
+    }
+
+    #[test]
+    fn workload_without_truth_skips_scoring() {
+        let base = wl(2);
+        let bare = Workload::from_parts(base.panel().clone(), base.targets().to_vec());
+        let report = ImputeSession::new(bare)
+            .engine(EngineSpec::Rank1)
+            .run()
+            .unwrap();
+        assert!(report.accuracy.is_none());
+        assert_eq!(report.dosages.len(), 2);
+    }
+}

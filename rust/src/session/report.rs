@@ -1,0 +1,211 @@
+//! The serialisable result of one [`ImputeSession`](super::ImputeSession)
+//! run: dosages, accuracy, host/simulated timings, DES counters and the run
+//! manifest emitted as the `BENCH_*.json`-style JSON schema
+//! (`poets-impute/impute-report/v1`).
+
+use crate::graph::mapping::MappingStrategy;
+use crate::model::accuracy::Accuracy;
+use crate::poets::metrics::SimMetrics;
+use crate::util::json::Json;
+use crate::util::table::{fmt_count, fmt_secs};
+use crate::workload::panelgen::PanelConfig;
+
+use super::engine::EngineSpec;
+
+/// Everything one session run produced.
+#[derive(Clone, Debug)]
+pub struct ImputeReport {
+    pub engine: EngineSpec,
+    // Workload shape.
+    pub n_hap: usize,
+    pub n_mark: usize,
+    pub n_targets: usize,
+    /// Generation recipe when the workload was synthetic.
+    pub provenance: Option<PanelConfig>,
+    // Run configuration.
+    pub batch_size: usize,
+    pub n_batches: usize,
+    pub boards: usize,
+    pub states_per_thread: usize,
+    /// Host worker threads for the DES deliver/step phases.
+    pub threads: usize,
+    pub mapping: MappingStrategy,
+    // Results.
+    /// `dosages[target][marker]`, in workload target order.
+    pub dosages: Vec<Vec<f32>>,
+    /// Aggregate accuracy against withheld truth (synthetic workloads only).
+    pub accuracy: Option<Accuracy>,
+    /// Host wall-clock seconds spent running all batches (one-time engine
+    /// preparation — panel binding, XLA artifact loading — excluded).
+    pub host_seconds: f64,
+    /// Total simulated POETS wall-clock seconds (event planes only).
+    pub sim_seconds: Option<f64>,
+    /// DES counters accumulated over all batches (event planes only).
+    pub metrics: Option<SimMetrics>,
+}
+
+impl ImputeReport {
+    /// The run manifest (schema `poets-impute/impute-report/v1`).  Dosages
+    /// are deliberately not serialised — the manifest is the provenance +
+    /// metrics record benches archive as `BENCH_*.json`.
+    pub fn to_json(&self) -> Json {
+        let mut workload = Json::obj();
+        workload
+            .set("n_hap", self.n_hap)
+            .set("n_mark", self.n_mark)
+            .set("n_targets", self.n_targets);
+        if let Some(p) = &self.provenance {
+            workload
+                .set("maf", p.maf)
+                .set("annot_ratio", p.annot_ratio)
+                .set("seed", p.seed);
+        }
+
+        let mut run = Json::obj();
+        run.set("batch_size", self.batch_size)
+            .set("n_batches", self.n_batches)
+            .set("boards", self.boards)
+            .set("states_per_thread", self.states_per_thread)
+            .set("threads", self.threads)
+            .set("mapping", self.mapping.name());
+
+        let mut timing = Json::obj();
+        timing.set("host_seconds", self.host_seconds);
+        if let Some(s) = self.sim_seconds {
+            timing.set("poets_sim_seconds", s);
+        }
+
+        let mut j = Json::obj();
+        j.set("schema", "poets-impute/impute-report/v1")
+            .set("engine", self.engine.name())
+            .set("workload", workload)
+            .set("run", run)
+            .set("timing", timing);
+        if let Some(a) = &self.accuracy {
+            let mut acc = Json::obj();
+            acc.set("concordance", a.concordance)
+                .set("minor_concordance", a.minor_concordance)
+                .set("dosage_r2", a.dosage_r2)
+                .set("n_scored", a.n_scored);
+            j.set("accuracy", acc);
+        }
+        if let Some(m) = &self.metrics {
+            j.set("sim_metrics", m.to_json());
+        }
+        j
+    }
+
+    /// Human-readable summary (the CLI's non-`--json` output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "engine={} panel={}x{} ({} states) targets={}",
+            self.engine.name(),
+            self.n_hap,
+            self.n_mark,
+            fmt_count((self.n_hap * self.n_mark) as u64),
+            self.n_targets
+        );
+        if self.n_batches > 1 {
+            out.push_str(&format!(
+                " batches={} (size {})",
+                self.n_batches, self.batch_size
+            ));
+        }
+        out.push('\n');
+        if let Some(a) = &self.accuracy {
+            out.push_str(&format!(
+                "accuracy: concordance={:.4} minor={:.4} dosage_r2={:.4} (scored {} markers)\n",
+                a.concordance,
+                a.minor_concordance,
+                a.dosage_r2,
+                fmt_count(a.n_scored as u64)
+            ));
+        }
+        out.push_str(&format!("host wall-clock: {}", fmt_secs(self.host_seconds)));
+        if let Some(s) = self.sim_seconds {
+            out.push_str(&format!(
+                "\nsimulated POETS wall-clock: {}",
+                fmt_secs(s)
+            ));
+        }
+        out
+    }
+
+    /// Max |Δdosage| between this report and another dosage set (the
+    /// `validate` currency).
+    pub fn max_abs_diff(&self, other: &[Vec<f32>]) -> f64 {
+        max_abs_dosage_diff(&self.dosages, other)
+    }
+}
+
+/// Max |Δdosage| over two equally-shaped dosage sets.
+pub fn max_abs_dosage_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dosage sets have different target counts");
+    let mut worst = 0.0f64;
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.len(), rb.len(), "dosage rows have different lengths");
+        for (x, y) in ra.iter().zip(rb) {
+            worst = worst.max((x - y).abs() as f64);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ImputeReport {
+        ImputeReport {
+            engine: EngineSpec::Event,
+            n_hap: 8,
+            n_mark: 21,
+            n_targets: 2,
+            provenance: None,
+            batch_size: 2,
+            n_batches: 1,
+            boards: 2,
+            states_per_thread: 4,
+            threads: 1,
+            mapping: MappingStrategy::Manual2d,
+            dosages: vec![vec![0.5; 21], vec![0.25; 21]],
+            accuracy: None,
+            host_seconds: 0.1,
+            sim_seconds: Some(0.01),
+            metrics: Some(SimMetrics::default()),
+        }
+    }
+
+    #[test]
+    fn manifest_has_schema_and_sections() {
+        let j = report().to_json();
+        assert_eq!(
+            j.get("schema"),
+            Some(&Json::Str("poets-impute/impute-report/v1".into()))
+        );
+        assert_eq!(j.get("engine"), Some(&Json::Str("event".into())));
+        for key in ["workload", "run", "timing", "sim_metrics"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert!(j.get("accuracy").is_none(), "no truth, no accuracy");
+        let run = j.get("run").unwrap();
+        assert_eq!(run.get("n_batches"), Some(&Json::Int(1)));
+        assert_eq!(run.get("mapping"), Some(&Json::Str("manual-2d".into())));
+    }
+
+    #[test]
+    fn render_mentions_engine_and_timing() {
+        let text = report().render();
+        assert!(text.contains("engine=event"));
+        assert!(text.contains("host wall-clock"));
+        assert!(text.contains("simulated POETS wall-clock"));
+    }
+
+    #[test]
+    fn diff_is_symmetric_max() {
+        let a = vec![vec![0.0f32, 0.5], vec![1.0, 0.25]];
+        let b = vec![vec![0.1f32, 0.5], vec![1.0, 0.75]];
+        assert!((max_abs_dosage_diff(&a, &b) - 0.5).abs() < 1e-9);
+        assert!((max_abs_dosage_diff(&b, &a) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,224 @@
+//! Workload assembly: the panel + target set every engine consumes.
+//!
+//! A [`Workload`] owns the reference panel, the target haplotypes to impute
+//! and (when the targets are synthetic) the withheld truth used for accuracy
+//! scoring.  [`TargetBatch`] is the unit of work handed to an [`Engine`]
+//! — the session splits a workload's targets into batches, and the batch is
+//! the seam where panel-level batching across targets lands (engines must
+//! accept multi-target batches, never assume one target per call).
+//!
+//! [`Engine`]: super::Engine
+
+use std::sync::Arc;
+
+use crate::model::panel::{ReferencePanel, TargetHaplotype};
+use crate::util::rng::Rng;
+use crate::workload::panelgen::{PanelConfig, TargetCase, generate_panel, generate_targets};
+
+/// A fully-assembled imputation problem: one reference panel plus the target
+/// haplotypes to impute against it.
+///
+/// The panel is shared (`Arc`), so cloning a workload — and binding engines
+/// to it — never copies panel data; only the target vectors are deep-cloned.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    panel: Arc<ReferencePanel>,
+    targets: Vec<TargetHaplotype>,
+    /// Withheld truth per target (synthetic workloads only) — enables
+    /// accuracy scoring in the report.
+    truth: Option<Vec<Vec<u8>>>,
+    /// Generation recipe, when the workload is synthetic (recorded in the
+    /// run manifest for reproducibility).
+    provenance: Option<PanelConfig>,
+}
+
+impl Workload {
+    /// Generate a synthetic workload with the paper's §6.2 recipe: panel from
+    /// `cfg`, `n_targets` Li & Stephens mosaic targets with truth retained.
+    pub fn synthetic(cfg: &PanelConfig, n_targets: usize) -> Workload {
+        let panel = generate_panel(cfg);
+        let mut rng = Rng::new(cfg.seed ^ 0x7A96);
+        let cases = generate_targets(&panel, cfg, n_targets, &mut rng);
+        let mut wl = Workload::from_cases(panel, cases);
+        wl.provenance = Some(*cfg);
+        wl
+    }
+
+    /// Wrap an existing panel + generated cases (truth retained for scoring).
+    pub fn from_cases(panel: ReferencePanel, cases: Vec<TargetCase>) -> Workload {
+        let mut targets = Vec::with_capacity(cases.len());
+        let mut truth = Vec::with_capacity(cases.len());
+        for c in cases {
+            targets.push(c.masked);
+            truth.push(c.truth);
+        }
+        Workload {
+            panel: Arc::new(panel),
+            targets,
+            truth: Some(truth),
+            provenance: None,
+        }
+    }
+
+    /// Wrap an existing panel + target set with no withheld truth (real
+    /// cohorts): the report carries dosages and timings but no accuracy.
+    pub fn from_parts(panel: ReferencePanel, targets: Vec<TargetHaplotype>) -> Workload {
+        for t in &targets {
+            assert_eq!(
+                t.n_mark(),
+                panel.n_mark(),
+                "target/panel marker count mismatch"
+            );
+        }
+        Workload {
+            panel: Arc::new(panel),
+            targets,
+            truth: None,
+            provenance: None,
+        }
+    }
+
+    pub fn panel(&self) -> &ReferencePanel {
+        &self.panel
+    }
+
+    /// Shared handle to the panel — what engines bind in `prepare` (cheap;
+    /// no panel data is copied).
+    pub fn panel_arc(&self) -> Arc<ReferencePanel> {
+        Arc::clone(&self.panel)
+    }
+
+    pub fn targets(&self) -> &[TargetHaplotype] {
+        &self.targets
+    }
+
+    pub fn n_targets(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Withheld truth per target, when known.
+    pub fn truth(&self) -> Option<&[Vec<u8>]> {
+        self.truth.as_deref()
+    }
+
+    /// Generation recipe, when synthetic.
+    pub fn provenance(&self) -> Option<&PanelConfig> {
+        self.provenance.as_ref()
+    }
+
+    /// One batch covering every target.
+    pub fn full_batch(&self) -> TargetBatch<'_> {
+        TargetBatch {
+            targets: &self.targets,
+            start: 0,
+        }
+    }
+
+    /// Split the targets into batches of at most `batch_size`, in order.
+    pub fn batches(&self, batch_size: usize) -> impl Iterator<Item = TargetBatch<'_>> {
+        assert!(batch_size >= 1, "batch size must be >= 1");
+        self.targets
+            .chunks(batch_size)
+            .enumerate()
+            .map(move |(i, chunk)| TargetBatch {
+                targets: chunk,
+                start: i * batch_size,
+            })
+    }
+}
+
+/// A contiguous slice of a workload's targets — the unit of work an
+/// [`Engine`](super::Engine) executes.  Always potentially multi-target:
+/// engines service every target in the batch in one call.
+#[derive(Clone, Copy, Debug)]
+pub struct TargetBatch<'a> {
+    targets: &'a [TargetHaplotype],
+    start: usize,
+}
+
+impl<'a> TargetBatch<'a> {
+    /// A standalone batch over a target slice (index origin 0).
+    pub fn new(targets: &'a [TargetHaplotype]) -> TargetBatch<'a> {
+        TargetBatch { targets, start: 0 }
+    }
+
+    pub fn targets(&self) -> &'a [TargetHaplotype] {
+        self.targets
+    }
+
+    /// Index of this batch's first target within the parent workload.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PanelConfig {
+        PanelConfig {
+            n_hap: 8,
+            n_mark: 21,
+            maf: 0.2,
+            annot_ratio: 0.2,
+            seed: 5,
+            ..PanelConfig::default()
+        }
+    }
+
+    #[test]
+    fn synthetic_keeps_truth_and_provenance() {
+        let wl = Workload::synthetic(&cfg(), 3);
+        assert_eq!(wl.n_targets(), 3);
+        assert_eq!(wl.truth().unwrap().len(), 3);
+        assert_eq!(wl.provenance().unwrap().n_hap, 8);
+        assert_eq!(wl.panel().n_mark(), 21);
+    }
+
+    #[test]
+    fn from_parts_has_no_truth() {
+        let wl = Workload::synthetic(&cfg(), 2);
+        let bare = Workload::from_parts(wl.panel().clone(), wl.targets().to_vec());
+        assert!(bare.truth().is_none());
+        assert!(bare.provenance().is_none());
+    }
+
+    #[test]
+    fn batches_cover_all_targets_in_order() {
+        let wl = Workload::synthetic(&cfg(), 5);
+        let batches: Vec<_> = wl.batches(2).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].len(), 2);
+        assert_eq!(batches[2].len(), 1);
+        assert_eq!(batches[1].start(), 2);
+        assert_eq!(batches[2].start(), 4);
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn full_batch_spans_everything() {
+        let wl = Workload::synthetic(&cfg(), 4);
+        let b = wl.full_batch();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.start(), 0);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "marker count mismatch")]
+    fn from_parts_rejects_ragged_targets() {
+        let wl = Workload::synthetic(&cfg(), 1);
+        let bad = TargetHaplotype::new(vec![-1; 7]);
+        Workload::from_parts(wl.panel().clone(), vec![bad]);
+    }
+}

@@ -1,17 +1,16 @@
 //! Integration: event-driven cluster execution vs the x86-style baseline
-//! across a grid of panel shapes, target counts, mappings and cluster sizes.
+//! across a grid of panel shapes, target counts, mappings and cluster sizes,
+//! all driven through the session API.
 //!
 //! This is the paper's central correctness property: Algorithm 1 running as
 //! messages over the simulated POETS fabric computes exactly the Li &
 //! Stephens forward/backward posteriors (§3.2 / §5.2).
 
-use poets_impute::imputation::app::{RawAppConfig, run_raw};
-use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
-use poets_impute::poets::topology::ClusterConfig;
-use poets_impute::util::rng::Rng;
-use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use poets_impute::graph::mapping::MappingStrategy;
+use poets_impute::session::{EngineSpec, ImputeSession, Workload};
+use poets_impute::workload::panelgen::PanelConfig;
 
-fn check(seed: u64, n_hap: usize, n_mark: usize, n_targets: usize, boards: usize, spt: usize) {
+fn workload(seed: u64, n_hap: usize, n_mark: usize, n_targets: usize) -> Workload {
     let cfg = PanelConfig {
         n_hap,
         n_mark,
@@ -20,29 +19,30 @@ fn check(seed: u64, n_hap: usize, n_mark: usize, n_targets: usize, boards: usize
         seed,
         ..PanelConfig::default()
     };
-    let panel = generate_panel(&cfg);
-    let mut rng = Rng::new(seed ^ 0xE1E1);
-    let targets: Vec<_> = generate_targets(&panel, &cfg, n_targets, &mut rng)
-        .into_iter()
-        .map(|c| c.masked)
-        .collect();
-    let app = RawAppConfig {
-        cluster: ClusterConfig::with_boards(boards),
-        states_per_thread: spt,
-        ..RawAppConfig::default()
-    };
-    let out = run_raw(&panel, &targets, &app);
-    let b = Baseline::default();
-    for (t, target) in targets.iter().enumerate() {
-        let want: ImputeOut<f32> = b.impute(&panel, target, Method::DenseThreeLoop);
+    Workload::synthetic(&cfg, n_targets)
+}
+
+fn check(seed: u64, n_hap: usize, n_mark: usize, n_targets: usize, boards: usize, spt: usize) {
+    let wl = workload(seed, n_hap, n_mark, n_targets);
+    let event = ImputeSession::new(wl.clone())
+        .engine(EngineSpec::Event)
+        .boards(boards)
+        .states_per_thread(spt)
+        .run()
+        .unwrap();
+    let dense = ImputeSession::new(wl)
+        .engine(EngineSpec::Baseline)
+        .run()
+        .unwrap();
+    for t in 0..n_targets {
         for m in 0..n_mark {
-            let d = (out.dosages[t][m] - want.dosage[m]).abs();
+            let d = (event.dosages[t][m] - dense.dosages[t][m]).abs();
             assert!(
                 d < 1e-3,
                 "seed={seed} H={n_hap} M={n_mark} boards={boards} spt={spt} \
                  target={t} marker={m}: event {} vs baseline {}",
-                out.dosages[t][m],
-                want.dosage[m]
+                event.dosages[t][m],
+                dense.dosages[t][m]
             );
         }
     }
@@ -89,43 +89,22 @@ fn heavy_soft_scheduling() {
 #[test]
 fn partitioned_mapping_matches_too() {
     // POLite-style auto-partitioned mapping must not change numerics.
-    use poets_impute::graph::partition::partition_mapping;
-    use poets_impute::imputation::app::{build_raw_graph, extract_results};
-    use poets_impute::poets::desim::{SimConfig, Simulator};
-
-    let cfg = PanelConfig {
-        n_hap: 8,
-        n_mark: 30,
-        maf: 0.2,
-        annot_ratio: 0.15,
-        seed: 8,
-        ..PanelConfig::default()
-    };
-    let panel = generate_panel(&cfg);
-    let mut rng = Rng::new(0x9A9A);
-    let targets: Vec<_> = generate_targets(&panel, &cfg, 2, &mut rng)
-        .into_iter()
-        .map(|c| c.masked)
-        .collect();
-    let cluster = ClusterConfig::with_boards(2);
-    let graph = build_raw_graph(&panel, &targets, &Default::default());
-    let mapping = partition_mapping(&graph, 4, &cluster);
-    let mut sim = Simulator::new(
-        graph,
-        mapping,
-        cluster,
-        Default::default(),
-        SimConfig::default(),
-    );
-    sim.run();
-    let out = extract_results(&sim, &panel, targets.len());
-
-    let b = Baseline::default();
-    for (t, target) in targets.iter().enumerate() {
-        let want: ImputeOut<f32> = b.impute(&panel, target, Method::DenseThreeLoop);
-        for m in 0..panel.n_mark() {
+    let wl = workload(8, 8, 30, 2);
+    let event = ImputeSession::new(wl.clone())
+        .engine(EngineSpec::Event)
+        .boards(2)
+        .states_per_thread(4)
+        .mapping(MappingStrategy::Partitioned)
+        .run()
+        .unwrap();
+    let dense = ImputeSession::new(wl)
+        .engine(EngineSpec::Baseline)
+        .run()
+        .unwrap();
+    for t in 0..2 {
+        for m in 0..30 {
             assert!(
-                (out.dosages[t][m] - want.dosage[m]).abs() < 1e-3,
+                (event.dosages[t][m] - dense.dosages[t][m]).abs() < 1e-3,
                 "partitioned mapping corrupted numerics at t={t} m={m}"
             );
         }

@@ -1,17 +1,16 @@
 //! Integration: simulator-level invariants of the POETS model — message
 //! conservation, timing monotonicity, mapping-independence of results,
-//! analytic-model agreement, and the E4 sync-overhead regime.
+//! analytic-model agreement, and the E4 sync-overhead regime — driven
+//! through the session API.
 
-use poets_impute::imputation::analytic::{AppKind, Workload, predict};
-use poets_impute::imputation::app::{RawAppConfig, build_raw_graph, run_raw};
+use poets_impute::imputation::analytic::{AppKind, Workload as AnalyticWorkload, predict};
+use poets_impute::imputation::app::build_raw_graph;
 use poets_impute::poets::costmodel::CostModel;
-use poets_impute::poets::desim::SimConfig;
 use poets_impute::poets::topology::ClusterConfig;
-use poets_impute::util::rng::Rng;
-use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
+use poets_impute::workload::panelgen::PanelConfig;
 
-fn workload(seed: u64, h: usize, m: usize, t: usize)
-    -> (poets_impute::model::panel::ReferencePanel, Vec<poets_impute::model::panel::TargetHaplotype>) {
+fn workload(seed: u64, h: usize, m: usize, t: usize) -> Workload {
     let cfg = PanelConfig {
         n_hap: h,
         n_mark: m,
@@ -20,22 +19,16 @@ fn workload(seed: u64, h: usize, m: usize, t: usize)
         seed,
         ..PanelConfig::default()
     };
-    let panel = generate_panel(&cfg);
-    let mut rng = Rng::new(seed ^ 0xC1A0);
-    let targets = generate_targets(&panel, &cfg, t, &mut rng)
-        .into_iter()
-        .map(|c| c.masked)
-        .collect();
-    (panel, targets)
+    Workload::synthetic(&cfg, t)
 }
 
-fn app(boards: usize, spt: usize) -> RawAppConfig {
-    RawAppConfig {
-        cluster: ClusterConfig::with_boards(boards),
-        states_per_thread: spt,
-        sim: SimConfig::default(),
-        ..RawAppConfig::default()
-    }
+fn run(wl: &Workload, boards: usize, spt: usize) -> ImputeReport {
+    ImputeSession::new(wl.clone())
+        .engine(EngineSpec::Event)
+        .boards(boards)
+        .states_per_thread(spt)
+        .run()
+        .unwrap()
 }
 
 #[test]
@@ -43,22 +36,22 @@ fn message_conservation_exact() {
     // Every multicast copy is delivered exactly once: counts follow the
     // closed form T·(2(M−1)H² + M(H−1)).
     let (h, m, t) = (7usize, 13usize, 3usize);
-    let (panel, targets) = workload(1, h, m, t);
-    let out = run_raw(&panel, &targets, &app(2, 4));
+    let out = run(&workload(1, h, m, t), 2, 4);
+    let metrics = out.metrics.as_ref().unwrap();
     let expected = t as u64
         * ((2 * (m as u64 - 1) * (h as u64).pow(2)) + m as u64 * (h as u64 - 1));
-    assert_eq!(out.metrics.copies_delivered, expected);
+    assert_eq!(metrics.copies_delivered, expected);
     assert_eq!(
-        out.metrics.recv_handlers, expected,
+        metrics.recv_handlers, expected,
         "every delivered copy runs exactly one handler"
     );
 }
 
 #[test]
 fn results_independent_of_cluster_shape() {
-    let (panel, targets) = workload(2, 8, 40, 3);
-    let a = run_raw(&panel, &targets, &app(1, 16));
-    let b = run_raw(&panel, &targets, &app(48, 1));
+    let wl = workload(2, 8, 40, 3);
+    let a = run(&wl, 1, 16);
+    let b = run(&wl, 48, 1);
     assert_eq!(a.dosages, b.dosages, "cluster shape changed numerics");
 }
 
@@ -67,9 +60,9 @@ fn more_boards_never_slower_at_fixed_softsched() {
     // Same panel, same states/thread, more boards → more cores/mailboxes →
     // simulated time must not increase (locality effects are second-order
     // next to serial-resource relief in this workload).
-    let (panel, targets) = workload(3, 16, 64, 6);
-    let t1 = run_raw(&panel, &targets, &app(1, 16)).sim_seconds;
-    let t4 = run_raw(&panel, &targets, &app(4, 4)).sim_seconds;
+    let wl = workload(3, 16, 64, 6);
+    let t1 = run(&wl, 1, 16).sim_seconds.unwrap();
+    let t4 = run(&wl, 4, 4).sim_seconds.unwrap();
     assert!(
         t4 <= t1 * 1.05,
         "4 boards ({t4}s) slower than 1 board ({t1}s)"
@@ -78,9 +71,10 @@ fn more_boards_never_slower_at_fixed_softsched() {
 
 #[test]
 fn sim_time_scales_with_targets() {
-    let (panel, targets) = workload(4, 8, 30, 24);
-    let few = run_raw(&panel, &targets[..6].to_vec(), &app(1, 8)).sim_seconds;
-    let many = run_raw(&panel, &targets, &app(1, 8)).sim_seconds;
+    let wl = workload(4, 8, 30, 24);
+    let small = Workload::from_parts(wl.panel().clone(), wl.targets()[..6].to_vec());
+    let few = run(&small, 1, 8).sim_seconds.unwrap();
+    let many = run(&wl, 1, 8).sim_seconds.unwrap();
     // 24 vs 6 targets in a pipeline of depth 30: sub-linear but strictly more.
     assert!(many > few * 1.2, "few={few} many={many}");
     assert!(many < few * 4.0, "pipelining should amortise: few={few} many={many}");
@@ -89,10 +83,9 @@ fn sim_time_scales_with_targets() {
 #[test]
 fn analytic_predictor_within_band_of_des() {
     // Steady-state regime (T ≳ M) on one board.
-    let (panel, targets) = workload(5, 8, 24, 60);
-    let des = run_raw(&panel, &targets, &app(1, 1));
+    let des = run(&workload(5, 8, 24, 60), 1, 1);
     let pred = predict(
-        &Workload {
+        &AnalyticWorkload {
             n_hap: 8,
             n_mark: 24,
             n_targets: 60,
@@ -102,28 +95,27 @@ fn analytic_predictor_within_band_of_des() {
         &ClusterConfig::with_boards(1),
         &CostModel::default(),
     );
-    let ratio = pred.seconds / des.sim_seconds;
+    let des_seconds = des.sim_seconds.unwrap();
+    let ratio = pred.seconds / des_seconds;
     assert!(
         (0.3..3.0).contains(&ratio),
-        "analytic {} vs DES {} (x{ratio:.2})",
+        "analytic {} vs DES {des_seconds} (x{ratio:.2})",
         pred.seconds,
-        des.sim_seconds
     );
 }
 
 #[test]
 fn barrier_fraction_reported() {
-    let (panel, targets) = workload(6, 8, 40, 10);
-    let out = run_raw(&panel, &targets, &app(2, 8));
-    let f = out.metrics.barrier_fraction();
+    let out = run(&workload(6, 8, 40, 10), 2, 8);
+    let f = out.metrics.as_ref().unwrap().barrier_fraction();
     assert!(f > 0.0 && f < 0.9, "barrier fraction {f}");
 }
 
 #[test]
 fn graph_memory_within_board_dram() {
     // The paper's capacity limit: panel + graph state must fit board DRAM.
-    let (panel, targets) = workload(7, 16, 100, 2);
-    let graph = build_raw_graph(&panel, &targets, &Default::default());
+    let wl = workload(7, 16, 100, 2);
+    let graph = build_raw_graph(wl.panel(), wl.targets(), &Default::default());
     let cluster = ClusterConfig::with_boards(1);
     // Rough per-vertex footprint: device struct + shared dest lists.
     let bytes = graph.n_vertices() * 200 + graph.n_edges() as usize * 4;
@@ -135,10 +127,11 @@ fn graph_memory_within_board_dram() {
 
 #[test]
 fn deterministic_across_runs() {
-    let (panel, targets) = workload(8, 8, 30, 4);
-    let a = run_raw(&panel, &targets, &app(2, 8));
-    let b = run_raw(&panel, &targets, &app(2, 8));
+    let wl = workload(8, 8, 30, 4);
+    let a = run(&wl, 2, 8);
+    let b = run(&wl, 2, 8);
     assert_eq!(a.dosages, b.dosages);
-    assert_eq!(a.metrics.sim_cycles, b.metrics.sim_cycles);
-    assert_eq!(a.metrics.copies_delivered, b.metrics.copies_delivered);
+    let (am, bm) = (a.metrics.as_ref().unwrap(), b.metrics.as_ref().unwrap());
+    assert_eq!(am.sim_cycles, bm.sim_cycles);
+    assert_eq!(am.copies_delivered, bm.copies_delivered);
 }

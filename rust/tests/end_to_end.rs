@@ -1,14 +1,11 @@
 //! End-to-end: the full GWAS-upscale workflow (workload generation →
 //! event-driven imputation on the simulated cluster → accuracy scoring →
-//! figure-harness sanity), mirroring examples/gwas_upscale.rs at test size.
+//! figure-harness sanity), mirroring examples/gwas_upscale.rs at test size —
+//! all through the session API.
 
 use poets_impute::bench::{FigOpts, X86Cost, fig11, fig13};
-use poets_impute::imputation::app::{RawAppConfig, run_raw};
-use poets_impute::imputation::interp_app::run_interp;
-use poets_impute::model::accuracy;
-use poets_impute::poets::topology::ClusterConfig;
-use poets_impute::util::rng::Rng;
-use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use poets_impute::session::{EngineSpec, ImputeSession, Workload};
+use poets_impute::workload::panelgen::PanelConfig;
 
 #[test]
 fn gwas_upscale_end_to_end() {
@@ -20,40 +17,27 @@ fn gwas_upscale_end_to_end() {
         seed: 77,
         ..PanelConfig::default()
     };
-    let panel = generate_panel(&cfg);
-    let mut rng = Rng::new(78);
-    let cases = generate_targets(&panel, &cfg, 8, &mut rng);
-    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+    let workload = Workload::synthetic(&cfg, 8);
 
-    let app = RawAppConfig {
-        cluster: ClusterConfig::with_boards(4),
-        states_per_thread: 4,
-        ..RawAppConfig::default()
-    };
-    let raw = run_raw(&panel, &targets, &app);
-    let itp = run_interp(
-        &panel,
-        &targets,
-        &RawAppConfig {
-            states_per_thread: 1,
-            ..app
-        },
-    );
+    let raw = ImputeSession::new(workload.clone())
+        .engine(EngineSpec::Event)
+        .boards(4)
+        .states_per_thread(4)
+        .run()
+        .unwrap();
+    let itp = ImputeSession::new(workload)
+        .engine(EngineSpec::Interp)
+        .boards(4)
+        .states_per_thread(1)
+        .run()
+        .unwrap();
 
     // Both engines must genuinely impute (accuracy far above the 5% MAF
     // majority-vote floor would sit near 0.95 concordance; require learning
     // beyond "always major" by checking minor-allele concordance too).
-    for (name, dosages) in [("raw", &raw.dosages), ("interp", &itp.dosages)] {
-        let accs: Vec<_> = cases
-            .iter()
-            .zip(dosages)
-            .map(|(c, d)| accuracy::score(d, &c.truth, &c.masked))
-            .collect();
-        let agg = accuracy::aggregate(&accs);
-        assert!(
-            agg.concordance > 0.9,
-            "{name}: concordance {agg:?}"
-        );
+    for (name, report) in [("raw", &raw), ("interp", &itp)] {
+        let agg = report.accuracy.expect("synthetic workload has truth");
+        assert!(agg.concordance > 0.9, "{name}: concordance {agg:?}");
         assert!(
             agg.minor_concordance > 0.1,
             "{name}: no minor-allele signal {agg:?}"
@@ -61,10 +45,12 @@ fn gwas_upscale_end_to_end() {
     }
 
     // The paper's economics, end to end.
-    assert!(raw.metrics.sends > 5 * itp.metrics.sends);
-    assert!(itp.sim_seconds < raw.sim_seconds);
+    let raw_m = raw.metrics.as_ref().unwrap();
+    let itp_m = itp.metrics.as_ref().unwrap();
+    assert!(raw_m.sends > 5 * itp_m.sends);
+    assert!(itp.sim_seconds.unwrap() < raw.sim_seconds.unwrap());
     // Pipelined run completes in ~M + T + slack steps.
-    assert!(raw.metrics.steps <= (201 + 8 + 8) as u64);
+    assert!(raw_m.steps <= (201 + 8 + 8) as u64);
 }
 
 #[test]

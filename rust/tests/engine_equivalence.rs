@@ -1,0 +1,159 @@
+//! Integration: every `EngineSpec` through `ImputeSession` on one small
+//! workload, asserting dosage agreement within the repo's established
+//! tolerances — the acceptance test of the unified session API.
+//!
+//! Oracles: the dense three-loop baseline for rank1/event/xla; the x86
+//! interpolation pipeline for the interp plane (it approximates the HMM by
+//! design, so comparing it to the dense baseline would conflate model error
+//! with execution error).
+
+use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
+use poets_impute::model::interpolation::impute_interp;
+use poets_impute::session::{
+    EngineSpec, ImputeSession, Workload, max_abs_dosage_diff,
+};
+use poets_impute::util::json::Json;
+use poets_impute::workload::panelgen::PanelConfig;
+
+fn workload() -> Workload {
+    let cfg = PanelConfig {
+        n_hap: 8,
+        n_mark: 41,
+        maf: 0.2,
+        annot_ratio: 0.1,
+        seed: 2024,
+        ..PanelConfig::default()
+    };
+    Workload::synthetic(&cfg, 3)
+}
+
+fn session(spec: EngineSpec) -> ImputeSession {
+    ImputeSession::new(workload())
+        .engine(spec)
+        .boards(2)
+        .states_per_thread(4)
+}
+
+/// The interp plane's oracle: the x86 interpolation pipeline.
+fn interp_oracle(wl: &Workload) -> Vec<Vec<f32>> {
+    let b = Baseline::default();
+    wl.targets()
+        .iter()
+        .map(|t| {
+            let out: ImputeOut<f32> = impute_interp(&b, wl.panel(), t, Method::DenseThreeLoop);
+            out.dosage
+        })
+        .collect()
+}
+
+#[test]
+fn every_engine_agrees_with_its_oracle() {
+    let wl = workload();
+    let dense = session(EngineSpec::Baseline).run().unwrap();
+    let interp_want = interp_oracle(&wl);
+
+    for spec in EngineSpec::ALL {
+        let report = match session(spec).run() {
+            Ok(r) => r,
+            Err(e) => {
+                // The XLA plane needs the `pjrt` feature + built artifacts;
+                // every other plane must always be available.
+                assert_eq!(spec, EngineSpec::Xla, "{spec:?} unavailable: {e}");
+                continue;
+            }
+        };
+        assert_eq!(report.engine, spec);
+        assert_eq!(report.dosages.len(), wl.n_targets());
+        let oracle: &[Vec<f32>] = if spec == EngineSpec::Interp {
+            &interp_want
+        } else {
+            &dense.dosages
+        };
+        let diff = max_abs_dosage_diff(&report.dosages, oracle);
+        assert!(
+            diff <= spec.tolerance(),
+            "{spec:?} vs {}: max |Δdosage| {diff:.2e} > tolerance {:.0e}",
+            spec.oracle_name(),
+            spec.tolerance()
+        );
+    }
+}
+
+#[test]
+fn event_plane_batching_preserves_results() {
+    // TargetBatch is the seam for panel-level batching across targets: a
+    // batched run must cover every target and agree with the one-shot run
+    // (to f32 reassociation — batch composition shifts arrival order).
+    let full = session(EngineSpec::Event).run().unwrap();
+    let batched = session(EngineSpec::Event).batch(1).run().unwrap();
+    assert_eq!(batched.n_batches, 3);
+    assert_eq!(batched.dosages.len(), full.dosages.len());
+    let diff = max_abs_dosage_diff(&batched.dosages, &full.dosages);
+    assert!(diff <= 1e-3, "batched vs one-shot diverged: {diff:.2e}");
+    // Accounting accumulates across batches.
+    let m = batched.metrics.as_ref().unwrap();
+    assert_eq!(m.step_durations.len() as u64, m.steps);
+    assert!(m.sends > 0);
+}
+
+#[test]
+fn report_manifest_matches_schema() {
+    let report = session(EngineSpec::Event).batch(2).run().unwrap();
+    let j = report.to_json();
+    assert_eq!(
+        j.get("schema"),
+        Some(&Json::Str("poets-impute/impute-report/v1".into()))
+    );
+    assert_eq!(j.get("engine"), Some(&Json::Str("event".into())));
+    for key in ["workload", "run", "timing", "accuracy", "sim_metrics"] {
+        assert!(j.get(key).is_some(), "manifest missing {key:?}");
+    }
+    let wl = j.get("workload").unwrap();
+    assert_eq!(wl.get("n_targets"), Some(&Json::Int(3)));
+    assert_eq!(wl.get("seed"), Some(&Json::Int(2024)));
+    let run = j.get("run").unwrap();
+    assert_eq!(run.get("batch_size"), Some(&Json::Int(2)));
+    assert_eq!(run.get("n_batches"), Some(&Json::Int(2)));
+    let timing = j.get("timing").unwrap();
+    assert!(timing.get("host_seconds").is_some());
+    assert!(timing.get("poets_sim_seconds").is_some());
+}
+
+#[test]
+fn spec_parsing_matches_cli_surface() {
+    for spec in EngineSpec::ALL {
+        assert_eq!(spec.name().parse::<EngineSpec>().unwrap(), spec);
+    }
+    // Legacy spelling from the pre-session CLI.
+    assert_eq!(
+        "event-interp".parse::<EngineSpec>().unwrap(),
+        EngineSpec::Interp
+    );
+    assert!("".parse::<EngineSpec>().is_err());
+}
+
+#[test]
+fn deprecated_shims_still_delegate() {
+    // Satellite guarantee: the old entry points remain and route through the
+    // session pipeline with identical results.
+    #[allow(deprecated)]
+    fn via_shims(wl: &Workload) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        use poets_impute::imputation::app::{RawAppConfig, run_raw};
+        use poets_impute::imputation::interp_app::run_interp;
+        use poets_impute::poets::topology::ClusterConfig;
+        let cfg = RawAppConfig {
+            cluster: ClusterConfig::with_boards(2),
+            states_per_thread: 4,
+            ..RawAppConfig::default()
+        };
+        let raw = run_raw(wl.panel(), wl.targets(), &cfg);
+        let itp = run_interp(wl.panel(), wl.targets(), &cfg);
+        (raw.dosages, itp.dosages)
+    }
+    let wl = workload();
+    let (raw, itp) = via_shims(&wl);
+    let event = session(EngineSpec::Event).run().unwrap();
+    let interp = session(EngineSpec::Interp).run().unwrap();
+    assert_eq!(raw, event.dosages, "run_raw shim drifted from the session");
+    assert_eq!(itp, interp.dosages, "run_interp shim drifted from the session");
+}

@@ -1,24 +1,13 @@
-//! Integration: the event-driven linear-interpolation app vs the baseline
-//! interpolation pipeline vs the raw model (accuracy preservation).
+//! Integration: the event-driven linear-interpolation plane vs the baseline
+//! interpolation pipeline vs the raw plane (accuracy preservation), driven
+//! through the session API.
 
-use poets_impute::imputation::app::{RawAppConfig, run_raw};
-use poets_impute::imputation::interp_app::run_interp;
-use poets_impute::model::accuracy;
 use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
 use poets_impute::model::interpolation::impute_interp;
-use poets_impute::poets::topology::ClusterConfig;
-use poets_impute::util::rng::Rng;
-use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
+use poets_impute::workload::panelgen::PanelConfig;
 
-fn workload(
-    seed: u64,
-    n_hap: usize,
-    n_mark: usize,
-    n: usize,
-) -> (
-    poets_impute::model::panel::ReferencePanel,
-    Vec<poets_impute::workload::panelgen::TargetCase>,
-) {
+fn workload(seed: u64, n_hap: usize, n_mark: usize, n: usize) -> Workload {
     let cfg = PanelConfig {
         n_hap,
         n_mark,
@@ -27,30 +16,27 @@ fn workload(
         seed,
         ..PanelConfig::default()
     };
-    let panel = generate_panel(&cfg);
-    let mut rng = Rng::new(seed ^ 0x17E9);
-    let cases = generate_targets(&panel, &cfg, n, &mut rng);
-    (panel, cases)
+    Workload::synthetic(&cfg, n)
 }
 
-fn app(spt: usize) -> RawAppConfig {
-    RawAppConfig {
-        cluster: ClusterConfig::with_boards(2),
-        states_per_thread: spt,
-        ..RawAppConfig::default()
-    }
+fn run(engine: EngineSpec, wl: &Workload, spt: usize) -> ImputeReport {
+    ImputeSession::new(wl.clone())
+        .engine(engine)
+        .boards(2)
+        .states_per_thread(spt)
+        .run()
+        .expect("event planes are always available")
 }
 
 #[test]
 fn event_interp_matches_baseline_interp_across_shapes() {
     for &(seed, h, m) in &[(1u64, 6usize, 41usize), (2, 12, 61), (3, 4, 101)] {
-        let (panel, cases) = workload(seed, h, m, 2);
-        let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
-        let out = run_interp(&panel, &targets, &app(1));
+        let wl = workload(seed, h, m, 2);
+        let out = run(EngineSpec::Interp, &wl, 1);
         let b = Baseline::default();
-        for (t, target) in targets.iter().enumerate() {
+        for (t, target) in wl.targets().iter().enumerate() {
             let want: ImputeOut<f32> =
-                impute_interp(&b, &panel, target, Method::DenseThreeLoop);
+                impute_interp(&b, wl.panel(), target, Method::DenseThreeLoop);
             for mk in 0..m {
                 assert!(
                     (out.dosages[t][mk] - want.dosage[mk]).abs() < 2e-3,
@@ -67,21 +53,12 @@ fn event_interp_matches_baseline_interp_across_shapes() {
 fn interp_accuracy_within_tolerance_of_raw() {
     // Paper §5.3: "significant performance improvement in exchange for a
     // negligible impact on the accuracy of the results".
-    let (panel, cases) = workload(10, 16, 201, 6);
-    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
-    let raw = run_raw(&panel, &targets, &app(16));
-    let itp = run_interp(&panel, &targets, &app(2));
+    let wl = workload(10, 16, 201, 6);
+    let raw = run(EngineSpec::Event, &wl, 16);
+    let itp = run(EngineSpec::Interp, &wl, 2);
 
-    let agg = |dosages: &[Vec<f32>]| {
-        let accs: Vec<_> = cases
-            .iter()
-            .zip(dosages)
-            .map(|(c, d)| accuracy::score(d, &c.truth, &c.masked))
-            .collect();
-        accuracy::aggregate(&accs)
-    };
-    let raw_acc = agg(&raw.dosages);
-    let itp_acc = agg(&itp.dosages);
+    let raw_acc = raw.accuracy.expect("synthetic workload has truth");
+    let itp_acc = itp.accuracy.expect("synthetic workload has truth");
     assert!(raw_acc.concordance > 0.85, "raw {raw_acc:?}");
     assert!(
         itp_acc.concordance > raw_acc.concordance - 0.03,
@@ -94,15 +71,16 @@ fn interp_accuracy_within_tolerance_of_raw() {
 #[test]
 fn interp_message_and_time_economics() {
     // §6.3: message count drops by ~the section size; simulated time follows.
-    let (panel, cases) = workload(11, 10, 201, 3);
-    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
-    let raw = run_raw(&panel, &targets, &app(8));
-    let itp = run_interp(&panel, &targets, &app(1));
-    let msg_ratio = raw.metrics.copies_delivered as f64 / itp.metrics.copies_delivered as f64;
+    let wl = workload(11, 10, 201, 3);
+    let raw = run(EngineSpec::Event, &wl, 8);
+    let itp = run(EngineSpec::Interp, &wl, 1);
+    let raw_m = raw.metrics.as_ref().unwrap();
+    let itp_m = itp.metrics.as_ref().unwrap();
+    let msg_ratio = raw_m.copies_delivered as f64 / itp_m.copies_delivered as f64;
     assert!(msg_ratio > 4.0, "copies ratio {msg_ratio}");
     assert!(
-        itp.sim_seconds < raw.sim_seconds / 2.0,
-        "interp {} vs raw {}",
+        itp.sim_seconds.unwrap() < raw.sim_seconds.unwrap() / 2.0,
+        "interp {:?} vs raw {:?}",
         itp.sim_seconds,
         raw.sim_seconds
     );
@@ -112,11 +90,10 @@ fn interp_message_and_time_economics() {
 fn anchor_columns_match_raw_model_closely() {
     // At annotated columns the interpolated pipeline runs the HMM (with
     // accumulated distances); its dosages there track the full model.
-    let (panel, cases) = workload(12, 8, 101, 2);
-    let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
-    let raw = run_raw(&panel, &targets, &app(8));
-    let itp = run_interp(&panel, &targets, &app(1));
-    for (t, target) in targets.iter().enumerate() {
+    let wl = workload(12, 8, 101, 2);
+    let raw = run(EngineSpec::Event, &wl, 8);
+    let itp = run(EngineSpec::Interp, &wl, 1);
+    for (t, target) in wl.targets().iter().enumerate() {
         for &a in &target.annotated() {
             assert!(
                 (raw.dosages[t][a] - itp.dosages[t][a]).abs() < 5e-2,

@@ -1,27 +1,17 @@
 //! Integration: the execution-semantics contract of the parallel delivery
 //! engine — host thread count must never change anything observable except
-//! host wall-clock.  Runs both applications at threads = 1, 2, 8 over three
-//! seeds and asserts bit-identical dosages plus identical event/step
-//! accounting (the superstep barrier makes the equivalence exact, not
-//! approximate — see `poets::desim` module docs).
+//! host wall-clock.  Runs both event planes through the session API at
+//! threads = 1, 2, 8 over three seeds and asserts bit-identical dosages plus
+//! identical event/step accounting (the superstep barrier makes the
+//! equivalence exact, not approximate — see `poets::desim` module docs).
 
-use poets_impute::imputation::app::{EventRunResult, RawAppConfig, run_raw};
-use poets_impute::imputation::interp_app::run_interp;
-use poets_impute::model::panel::{ReferencePanel, TargetHaplotype};
-use poets_impute::poets::topology::ClusterConfig;
-use poets_impute::util::rng::Rng;
-use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
+use poets_impute::workload::panelgen::PanelConfig;
 
 const SEEDS: [u64; 3] = [11, 29, 4242];
 const THREADS: [usize; 3] = [1, 2, 8];
 
-fn problem(
-    seed: u64,
-    n_hap: usize,
-    n_mark: usize,
-    n_targets: usize,
-    annot_ratio: f64,
-) -> (ReferencePanel, Vec<TargetHaplotype>) {
+fn workload(seed: u64, n_hap: usize, n_mark: usize, n_targets: usize, annot_ratio: f64) -> Workload {
     let cfg = PanelConfig {
         n_hap,
         n_mark,
@@ -30,50 +20,46 @@ fn problem(
         seed,
         ..PanelConfig::default()
     };
-    let panel = generate_panel(&cfg);
-    let mut rng = Rng::new(seed ^ 0xE91A);
-    let targets = generate_targets(&panel, &cfg, n_targets, &mut rng)
-        .into_iter()
-        .map(|c| c.masked)
-        .collect();
-    (panel, targets)
+    Workload::synthetic(&cfg, n_targets)
 }
 
-fn cfg(threads: usize) -> RawAppConfig {
-    RawAppConfig {
-        cluster: ClusterConfig::with_boards(2),
-        states_per_thread: 4,
-        ..RawAppConfig::default()
-    }
-    .with_threads(threads)
+fn run(engine: EngineSpec, workload: &Workload, threads: usize) -> ImputeReport {
+    ImputeSession::new(workload.clone())
+        .engine(engine)
+        .boards(2)
+        .states_per_thread(4)
+        .threads(threads)
+        .run()
+        .expect("event planes are always available")
 }
 
 /// Everything observable about a run that must be thread-count invariant.
-fn fingerprint(out: &EventRunResult) -> (Vec<Vec<u32>>, u64, u64, u64, u64, u64) {
+fn fingerprint(report: &ImputeReport) -> (Vec<Vec<u32>>, u64, u64, u64, u64, u64) {
     // Compare dosages bit-exactly via their raw representation so an assert
     // failure shows the differing bits rather than rounded decimals.
-    let bits: Vec<Vec<u32>> = out
+    let bits: Vec<Vec<u32>> = report
         .dosages
         .iter()
         .map(|row| row.iter().map(|d| d.to_bits()).collect())
         .collect();
+    let m = report.metrics.as_ref().expect("event planes report metrics");
     (
         bits,
-        out.metrics.sim_cycles,
-        out.metrics.sends,
-        out.metrics.copies_delivered,
-        out.metrics.recv_handlers,
-        out.metrics.steps,
+        m.sim_cycles,
+        m.sends,
+        m.copies_delivered,
+        m.recv_handlers,
+        m.steps,
     )
 }
 
 #[test]
 fn raw_app_is_thread_count_invariant() {
     for &seed in &SEEDS {
-        let (panel, targets) = problem(seed, 8, 24, 3, 0.2);
-        let reference = fingerprint(&run_raw(&panel, &targets, &cfg(1)));
+        let wl = workload(seed, 8, 24, 3, 0.2);
+        let reference = fingerprint(&run(EngineSpec::Event, &wl, 1));
         for &threads in &THREADS[1..] {
-            let got = fingerprint(&run_raw(&panel, &targets, &cfg(threads)));
+            let got = fingerprint(&run(EngineSpec::Event, &wl, threads));
             assert_eq!(
                 reference, got,
                 "raw app diverged at seed={seed} threads={threads}"
@@ -85,10 +71,10 @@ fn raw_app_is_thread_count_invariant() {
 #[test]
 fn interp_app_is_thread_count_invariant() {
     for &seed in &SEEDS {
-        let (panel, targets) = problem(seed, 6, 41, 2, 0.1);
-        let reference = fingerprint(&run_interp(&panel, &targets, &cfg(1)));
+        let wl = workload(seed, 6, 41, 2, 0.1);
+        let reference = fingerprint(&run(EngineSpec::Interp, &wl, 1));
         for &threads in &THREADS[1..] {
-            let got = fingerprint(&run_interp(&panel, &targets, &cfg(threads)));
+            let got = fingerprint(&run(EngineSpec::Interp, &wl, threads));
             assert_eq!(
                 reference, got,
                 "interp app diverged at seed={seed} threads={threads}"
@@ -101,12 +87,13 @@ fn interp_app_is_thread_count_invariant() {
 fn step_timeline_is_fully_accounted() {
     // Satellite invariant: recorded step durations cover the whole simulated
     // timeline (superstep 0 and the final step-handler tail included).
-    let (panel, targets) = problem(7, 8, 20, 2, 0.2);
+    let wl = workload(7, 8, 20, 2, 0.2);
     for &threads in &THREADS {
-        let out = run_raw(&panel, &targets, &cfg(threads));
+        let report = run(EngineSpec::Event, &wl, threads);
+        let m = report.metrics.as_ref().unwrap();
         assert_eq!(
-            out.metrics.step_durations.iter().sum::<u64>(),
-            out.metrics.sim_cycles,
+            m.step_durations.iter().sum::<u64>(),
+            m.sim_cycles,
             "timeline gap at threads={threads}"
         );
     }
@@ -115,8 +102,8 @@ fn step_timeline_is_fully_accounted() {
 #[test]
 fn oversubscribed_threads_are_safe() {
     // More workers than tiles with work: the engine clamps and stays exact.
-    let (panel, targets) = problem(13, 6, 16, 2, 0.2);
-    let reference = fingerprint(&run_raw(&panel, &targets, &cfg(1)));
-    let got = fingerprint(&run_raw(&panel, &targets, &cfg(64)));
+    let wl = workload(13, 6, 16, 2, 0.2);
+    let reference = fingerprint(&run(EngineSpec::Event, &wl, 1));
+    let got = fingerprint(&run(EngineSpec::Event, &wl, 64));
     assert_eq!(reference, got);
 }

@@ -1,13 +1,15 @@
 //! Property-based invariants (offline proptest substitute, util::prop):
 //! randomised sweeps over panels, mappings and cluster shapes asserting the
-//! model/simulator invariants that no example should ever violate.
+//! model/simulator invariants that no example should ever violate.  Engine
+//! runs go through the session API.
 
 use poets_impute::graph::mapping::Mapping;
 use poets_impute::graph::partition::{adjacency, bisect, edge_cut};
-use poets_impute::imputation::app::{RawAppConfig, build_raw_graph, run_raw};
+use poets_impute::imputation::app::build_raw_graph;
 use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
 use poets_impute::model::interpolation::blends;
 use poets_impute::poets::topology::ClusterConfig;
+use poets_impute::session::{EngineSpec, ImputeSession, Workload};
 use poets_impute::util::prop::forall;
 use poets_impute::util::rng::Rng;
 use poets_impute::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
@@ -33,6 +35,11 @@ fn random_problem(
     let mut trng = Rng::new(rng.next_u64());
     let cases = generate_targets(&panel, &cfg, n_targets, &mut trng);
     (panel, cases)
+}
+
+fn random_workload(rng: &mut Rng, max_h: usize, max_m: usize, n_targets: usize) -> Workload {
+    let (panel, cases) = random_problem(rng, max_h, max_m, n_targets);
+    Workload::from_cases(panel, cases)
 }
 
 #[test]
@@ -71,18 +78,19 @@ fn prop_dense_equals_rank1() {
 #[test]
 fn prop_event_driven_equals_baseline() {
     forall("event == baseline", 10, |rng| {
-        let (panel, cases) = random_problem(rng, 9, 24, 2);
-        let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
-        let app = RawAppConfig {
-            cluster: ClusterConfig::with_boards(rng.range(1, 4)),
-            states_per_thread: rng.range(1, 32),
-            ..RawAppConfig::default()
-        };
-        let out = run_raw(&panel, &targets, &app);
+        let wl = random_workload(rng, 9, 24, 2);
+        let boards = rng.range(1, 4);
+        let spt = rng.range(1, 32);
+        let out = ImputeSession::new(wl.clone())
+            .engine(EngineSpec::Event)
+            .boards(boards)
+            .states_per_thread(spt)
+            .run()
+            .map_err(|e| format!("session: {e}"))?;
         let b = Baseline::default();
-        for (t, target) in targets.iter().enumerate() {
-            let want: ImputeOut<f32> = b.impute(&panel, target, Method::DenseThreeLoop);
-            for m in 0..panel.n_mark() {
+        for (t, target) in wl.targets().iter().enumerate() {
+            let want: ImputeOut<f32> = b.impute(wl.panel(), target, Method::DenseThreeLoop);
+            for m in 0..wl.panel().n_mark() {
                 if (out.dosages[t][m] - want.dosage[m]).abs() >= 1e-3 {
                     return Err(format!(
                         "t={t} m={m}: {} vs {}",
@@ -195,15 +203,15 @@ fn prop_route_lengths_symmetric_and_bounded() {
 #[test]
 fn prop_sim_metrics_consistent() {
     forall("metrics consistency", 8, |rng| {
-        let (panel, cases) = random_problem(rng, 8, 20, 2);
-        let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
-        let app = RawAppConfig {
-            cluster: ClusterConfig::with_boards(2),
-            states_per_thread: rng.range(1, 16),
-            ..RawAppConfig::default()
-        };
-        let out = run_raw(&panel, &targets, &app);
-        let m = &out.metrics;
+        let wl = random_workload(rng, 8, 20, 2);
+        let spt = rng.range(1, 16);
+        let out = ImputeSession::new(wl)
+            .engine(EngineSpec::Event)
+            .boards(2)
+            .states_per_thread(spt)
+            .run()
+            .map_err(|e| format!("session: {e}"))?;
+        let m = out.metrics.as_ref().unwrap();
         if m.copies_delivered != m.recv_handlers {
             return Err("copies != handlers".into());
         }

@@ -107,12 +107,14 @@ fn xla_plane_matches_event_driven() {
     let rt = Runtime::open(dir).expect("open runtime");
     let mut imputer = XlaImputer::new(rt, ModelParams::default());
     let (panel, targets) = problem(3, 16, 30, 2);
-    let cfg = poets_impute::imputation::RawAppConfig {
-        cluster: poets_impute::poets::topology::ClusterConfig::with_boards(2),
-        states_per_thread: 8,
-        ..Default::default()
-    };
-    let event = poets_impute::imputation::run_raw(&panel, &targets, &cfg);
+    let event = poets_impute::session::ImputeSession::new(
+        poets_impute::session::Workload::from_parts(panel.clone(), targets.clone()),
+    )
+    .engine(poets_impute::session::EngineSpec::Event)
+    .boards(2)
+    .states_per_thread(8)
+    .run()
+    .expect("event plane");
     for (t, target) in targets.iter().enumerate() {
         let xla = imputer.impute_raw(&panel, target).expect("xla");
         for m in 0..panel.n_mark() {
