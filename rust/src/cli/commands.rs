@@ -1,10 +1,15 @@
 //! CLI subcommand implementations — thin argument plumbing over the
 //! [`session`](crate::session) pipeline.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use crate::bench::{self, FigOpts, X86Cost};
 use crate::model::baseline::{Baseline, Method};
 use crate::model::interpolation::impute_interp;
 use crate::poets::topology::ClusterConfig;
+use crate::serve::bench::BenchServeOpts;
+use crate::serve::{CoalescePolicy, PanelRegistry, ServeConfig, Service, jsonl};
 use crate::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
 use crate::util::table::{Table, fmt_count};
 use crate::workload::panelgen::PanelConfig;
@@ -15,37 +20,58 @@ pub const USAGE: &str = "\
 poets-impute — event-driven genotype imputation on a simulated POETS cluster
 
 All commands drive the unified session pipeline (rust/src/session/): one
-Workload, one EngineSpec, one ImputeSession, one ImputeReport.
+Workload, one EngineSpec, one ImputeSession, one ImputeReport.  The serve
+commands stack the multi-tenant service layer (rust/src/serve/) on top.
 
 USAGE:
   poets-impute <COMMAND> [FLAGS]
 
 COMMANDS:
-  impute     run one engine on a synthetic workload and score accuracy
-             --hap N --mark N --targets N --seed S --annot-ratio R
-             --engine baseline|rank1|event|interp|xla (EngineSpec;
-             interp is the event-driven linear-interpolation plane,
-             formerly spelled event-interp — the x86 interpolation
-             pipeline remains the interp plane's oracle in validate)
-             --boards B --spt N (soft-scheduling states/thread)
-             --batch B (targets per engine batch; default all at once)
-             --threads N (host workers for the DES deliver/step phases;
-             results are thread-count invariant)
-             [--json]  (emit the ImputeReport run manifest,
-             schema poets-impute/impute-report/v1)
-  validate   run ALL engines on one workload and report per-engine
-             max |Δdosage| against each engine's oracle
-             --hap N --mark N --targets N --seed S
-  bench      regenerate a paper experiment:
-             fig11|fig12|fig13|calibrate|sync-overhead
-             [--boards 1,2,..] [--spt 1,2,..] [--full-targets N]
-             [--des-targets N] [--des-states N] [--skip-des] [--json]
-  ablate     design-choice ablations (mapping locality, hardware multicast)
-             [--hap N] [--mark N] [--targets N] [--boards B] [--spt N]
-  project    capacity + next-gen (Stratix-10) cluster projection (paper §6.3)
-             [--states N]
-  info       print cluster topology + artifact inventory
-  help       this text
+  impute       run one engine on a synthetic workload and score accuracy
+               --hap N --mark N --targets N --seed S --annot-ratio R
+               --engine baseline|rank1|event|interp|xla (EngineSpec;
+               interp is the event-driven linear-interpolation plane —
+               the old spelling event-interp still parses, with a
+               deprecation note; the x86 interpolation pipeline remains
+               the interp plane's oracle in validate)
+               --boards B --spt N (soft-scheduling states/thread)
+               --batch B (targets per engine batch; default all at once)
+               --threads N (host workers for the DES deliver/step phases;
+               results are thread-count invariant)
+               [--json]  (emit the ImputeReport run manifest,
+               schema poets-impute/impute-report/v1)
+  validate     run ALL engines on one workload and report per-engine
+               max |Δdosage| against each engine's oracle
+               --hap N --mark N --targets N --seed S
+  serve        multi-tenant imputation service over stdin/stdout JSONL:
+               one JSON request per input line, one response per output
+               line, in request order (responses: serve-report/v1 on
+               success, serve-error/v1 in-band on failure).  Request:
+               {\"id\":1, \"panel\":\"synth:hap=8,mark=21,annot=0.2,seed=7\",
+                \"engine\":\"event\", \"synth_targets\":2, \"target_seed\":9}
+               (or \"targets\":[[-1,0,1,..],..] for explicit observations)
+               --workers N (pool threads, default 2)
+               --max-batch T (coalescer target budget; 1 = no coalescing)
+               --linger-ms L (coalescer wait for batch-mates, default 2)
+               --queue-cap N (admission bound, default 1024)
+               --boards B --spt N --threads N (engine knobs, as impute)
+  bench-serve  closed-loop load generator: sweeps worker pool sizes x
+               client counts x coalescing on/off and writes BENCH_serve.json
+               (requests/s, p50/p99 latency, mean coalesce width)
+               --workers 1,4 --clients 1,4,8 --requests N (per client)
+               --targets-per-request K --engine E
+               --hap N --mark N --annot-ratio R --seed S
+               --max-batch T --linger-ms L
+  bench        regenerate a paper experiment:
+               fig11|fig12|fig13|calibrate|sync-overhead
+               [--boards 1,2,..] [--spt 1,2,..] [--full-targets N]
+               [--des-targets N] [--des-states N] [--skip-des] [--json]
+  ablate       design-choice ablations (mapping locality, hardware multicast)
+               [--hap N] [--mark N] [--targets N] [--boards B] [--spt N]
+  project      capacity + next-gen (Stratix-10) cluster projection (paper §6.3)
+               [--states N]
+  info         print cluster topology + artifact inventory
+  help         this text
 ";
 
 fn panel_cfg(args: &Args) -> Result<PanelConfig, String> {
@@ -165,6 +191,76 @@ pub fn cmd_validate(args: &Args) -> Result<i32, String> {
     println!("{}", t.render());
     println!("validate: {}", if all_ok { "OK" } else { "MISMATCH" });
     Ok(if all_ok { 0 } else { 1 })
+}
+
+/// The coalescing policy shared by `serve` and `bench-serve` flags.
+fn coalesce_from_args(args: &Args, default_batch: usize) -> Result<CoalescePolicy, String> {
+    let max_batch = args.get("max-batch", default_batch)?;
+    let linger_ms = args.get("linger-ms", 2u64)?;
+    Ok(CoalescePolicy {
+        max_batch_targets: max_batch.max(1),
+        max_linger: Duration::from_millis(linger_ms),
+    })
+}
+
+pub fn cmd_serve(args: &Args) -> Result<i32, String> {
+    let cfg = ServeConfig::default()
+        .workers(args.get("workers", 2usize)?)
+        .coalesce(coalesce_from_args(args, 16)?)
+        .queue_capacity(args.get("queue-cap", 1024usize)?)
+        .boards(args.get("boards", 2usize)?)
+        .states_per_thread(args.get("spt", 8usize)?)
+        .threads(args.get("threads", 1usize)?);
+    args.reject_unknown()?;
+
+    let service = Service::start(Arc::new(PanelRegistry::new()), cfg);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let summary = jsonl::serve_stream(&service, stdin.lock(), stdout.lock())?;
+    let stats = service.shutdown();
+    eprintln!(
+        "serve: {} requests ({} ok, {} failed), {} batches, mean width {:.2}",
+        summary.requests,
+        summary.ok,
+        summary.failed,
+        stats.batches,
+        stats.mean_batch_width()
+    );
+    // Per-request failures are reported in-band on stdout; a clean stream
+    // (read to EOF, every response written) exits 0.
+    Ok(0)
+}
+
+pub fn cmd_bench_serve(args: &Args) -> Result<i32, String> {
+    let defaults = BenchServeOpts::default();
+    let panel = format!(
+        "synth:hap={},mark={},annot={},seed={}",
+        args.get("hap", 16usize)?,
+        args.get("mark", 101usize)?,
+        args.get("annot-ratio", 0.1f64)?,
+        args.get("seed", 2023u64)?
+    );
+    let opts = BenchServeOpts {
+        clients: args.get_list("clients", &defaults.clients)?,
+        workers: args.get_list("workers", &defaults.workers)?,
+        requests_per_client: args.get("requests", defaults.requests_per_client)?,
+        targets_per_request: args.get("targets-per-request", defaults.targets_per_request)?,
+        engine: args.get_str("engine", defaults.engine.name()).parse()?,
+        panel,
+        coalesce: coalesce_from_args(args, defaults.coalesce.max_batch_targets)?,
+    };
+    args.reject_unknown()?;
+
+    let (table, json) = crate::serve::bench::run(&opts)?;
+    println!(
+        "## serve throughput baseline (engine {}, panel {})\n{table}",
+        opts.engine.name(),
+        opts.panel
+    );
+    let path = "BENCH_serve.json";
+    std::fs::write(path, json.pretty()).map_err(|e| format!("could not write {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(0)
 }
 
 pub fn cmd_bench(args: &Args) -> Result<i32, String> {

@@ -25,6 +25,8 @@ fn dispatch(argv: &[String]) -> Result<i32, String> {
     match args.positional.first().map(String::as_str) {
         Some("impute") => commands::cmd_impute(&args),
         Some("validate") => commands::cmd_validate(&args),
+        Some("serve") => commands::cmd_serve(&args),
+        Some("bench-serve") => commands::cmd_bench_serve(&args),
         Some("bench") => commands::cmd_bench(&args),
         Some("ablate") => commands::cmd_ablate(&args),
         Some("project") => commands::cmd_project(&args),

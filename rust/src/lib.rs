@@ -32,6 +32,17 @@
 //! every example run on this API; the plane-specific entry points of earlier
 //! revisions survive only as deprecated shims.
 //!
+//! ## Serving
+//!
+//! [`serve`] turns the pipeline into a multi-tenant service: a
+//! [`serve::PanelRegistry`] shares loaded panels across requests, a bounded
+//! queue coalesces concurrent same-panel requests into engine batches, and a
+//! worker pool answers each request with a
+//! [`serve::ServeReport`] (schema `poets-impute/serve-report/v1`).  The
+//! `serve` subcommand speaks the same API as newline-delimited JSON over
+//! stdin/stdout, and `bench-serve` is the closed-loop load generator that
+//! archives the service throughput baseline (`BENCH_serve.json`).
+//!
 //! ## Layers
 //!
 //! * [`session`] — the unified pipeline: `Engine` trait over the five
@@ -52,6 +63,9 @@
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) used as the fast compute plane and as the
 //!   oracle.
+//! * [`serve`] — the multi-tenant service layer: panel registry, request
+//!   coalescing, admission control, worker pool, JSONL frontend and the
+//!   closed-loop load generator.
 //! * [`bench`] — harnesses that regenerate every figure in the paper's
 //!   evaluation (Fig 11, 12, 13 plus claim checks).
 //! * [`util`], [`cli`] — offline-friendly substrates (RNG, JSON, tables,
@@ -64,6 +78,7 @@ pub mod imputation;
 pub mod model;
 pub mod poets;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod util;
 pub mod workload;

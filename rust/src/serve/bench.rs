@@ -1,0 +1,274 @@
+//! `bench-serve` — a closed-loop load generator for the service.
+//!
+//! Sweeps worker counts × client counts × coalescing on/off against one
+//! panel and engine.  Each simulated client is closed-loop (submit, block
+//! for the answer, repeat), the classic service-benchmark shape: offered
+//! load scales with client count and queueing shows up as latency rather
+//! than unbounded backlog.  Per config the sweep reports throughput
+//! (requests/s), latency percentiles (p50/p99) and the achieved mean
+//! coalesce width — the numbers archived in `BENCH_serve.json` that the
+//! panel-level wave-batching perf work must beat (see `ROADMAP.md`).
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::session::EngineSpec;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::util::table::{Table, fmt_secs};
+
+use super::queue::CoalescePolicy;
+use super::{ImputeRequest, PanelRegistry, ServeConfig, Service};
+
+/// Sweep shape.  Defaults are sized to finish in seconds on a laptop while
+/// still showing the coalescing and pool-scaling effects.
+#[derive(Clone, Debug)]
+pub struct BenchServeOpts {
+    /// Concurrent closed-loop clients (one sweep point per entry).
+    pub clients: Vec<usize>,
+    /// Service worker-pool sizes (one sweep point per entry; keep >= 2
+    /// entries so the baseline records pool scaling).
+    pub workers: Vec<usize>,
+    /// Requests each client submits per sweep point.
+    pub requests_per_client: usize,
+    /// Targets per request.
+    pub targets_per_request: usize,
+    /// Compute plane under load.
+    pub engine: EngineSpec,
+    /// Panel spec every request hits (the multi-tenant hot-panel case).
+    pub panel: String,
+    /// Coalescing policy for the "on" half of the sweep.
+    pub coalesce: CoalescePolicy,
+}
+
+impl Default for BenchServeOpts {
+    fn default() -> Self {
+        BenchServeOpts {
+            clients: vec![1, 4, 8],
+            workers: vec![1, 4],
+            requests_per_client: 16,
+            targets_per_request: 2,
+            engine: EngineSpec::Rank1,
+            panel: "synth:hap=16,mark=101,annot=0.1,seed=2023".into(),
+            coalesce: CoalescePolicy {
+                max_batch_targets: 16,
+                max_linger: Duration::from_millis(1),
+            },
+        }
+    }
+}
+
+/// One sweep point's measurements.
+#[derive(Clone, Debug)]
+pub struct BenchServeRow {
+    pub workers: usize,
+    pub clients: usize,
+    pub coalesce: bool,
+    pub requests: usize,
+    pub wall_seconds: f64,
+    pub requests_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch_width: f64,
+    pub batches: u64,
+}
+
+/// Run the sweep.  Returns the rendered table and the
+/// `poets-impute/bench-serve/v1` JSON document (the caller archives it as
+/// `BENCH_serve.json`).
+pub fn run(opts: &BenchServeOpts) -> Result<(String, Json), String> {
+    if opts.clients.is_empty() || opts.workers.is_empty() {
+        return Err("bench-serve: need at least one client and worker count".into());
+    }
+    if opts.requests_per_client == 0 || opts.targets_per_request == 0 {
+        return Err("bench-serve: requests and targets per request must be >= 1".into());
+    }
+    let registry = Arc::new(PanelRegistry::new());
+    // Resolve once up front: panel generation must not pollute the first
+    // sweep point's latencies.
+    registry.resolve(&opts.panel)?;
+
+    let mut table = Table::new(&[
+        "workers", "clients", "coalesce", "requests", "wall", "req/s", "p50", "p99",
+        "mean width",
+    ]);
+    let mut rows = Vec::new();
+    for &workers in &opts.workers {
+        for &clients in &opts.clients {
+            for coalesce in [false, true] {
+                let row = sweep_point(&registry, opts, workers, clients, coalesce)?;
+                table.row(vec![
+                    row.workers.to_string(),
+                    row.clients.to_string(),
+                    if row.coalesce { "on" } else { "off" }.into(),
+                    row.requests.to_string(),
+                    fmt_secs(row.wall_seconds),
+                    format!("{:.1}", row.requests_per_s),
+                    format!("{:.2}ms", row.p50_ms),
+                    format!("{:.2}ms", row.p99_ms),
+                    format!("{:.2}", row.mean_batch_width),
+                ]);
+                rows.push(row);
+            }
+        }
+    }
+    Ok((table.render(), to_json(opts, &rows)))
+}
+
+/// One (workers, clients, coalesce) config: fresh service, closed-loop
+/// clients with disjoint per-client target sets, merged latency stats.
+fn sweep_point(
+    registry: &Arc<PanelRegistry>,
+    opts: &BenchServeOpts,
+    workers: usize,
+    clients: usize,
+    coalesce: bool,
+) -> Result<BenchServeRow, String> {
+    let policy = if coalesce {
+        opts.coalesce
+    } else {
+        CoalescePolicy::off()
+    };
+    let cfg = ServeConfig::default()
+        .workers(workers)
+        .coalesce(policy)
+        .queue_capacity((clients * opts.requests_per_client).max(16));
+    let service = Service::start(Arc::clone(registry), cfg);
+
+    // Disjoint per-client targets, minted outside the timed section.
+    let panel = registry.resolve(&opts.panel)?;
+    let per_client: Vec<_> = (0..clients)
+        .map(|c| panel.synthetic_targets(opts.targets_per_request, 0x10AD + c as u64))
+        .collect::<Result<_, _>>()?;
+
+    let start = Instant::now();
+    let latencies: Vec<Vec<f64>> = thread::scope(|s| {
+        let handles: Vec<_> = per_client
+            .into_iter()
+            .map(|targets| {
+                let service = &service;
+                let panel_name = opts.panel.clone();
+                let engine = opts.engine;
+                let n = opts.requests_per_client;
+                s.spawn(move || -> Result<Vec<f64>, String> {
+                    let mut lats = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let t0 = Instant::now();
+                        service.submit_wait(ImputeRequest {
+                            panel: panel_name.clone(),
+                            engine,
+                            targets: targets.clone(),
+                        })?;
+                        lats.push(t0.elapsed().as_secs_f64());
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("bench client panicked"))
+            .collect::<Result<Vec<Vec<f64>>, String>>()
+    })?;
+    let wall_seconds = start.elapsed().as_secs_f64();
+    let stats = service.shutdown();
+
+    let all: Vec<f64> = latencies.into_iter().flatten().collect();
+    let requests = all.len();
+    Ok(BenchServeRow {
+        workers,
+        clients,
+        coalesce,
+        requests,
+        wall_seconds,
+        requests_per_s: requests as f64 / wall_seconds.max(1e-12),
+        p50_ms: percentile(&all, 50.0) * 1e3,
+        p99_ms: percentile(&all, 99.0) * 1e3,
+        mean_batch_width: stats.mean_batch_width(),
+        batches: stats.batches,
+    })
+}
+
+fn to_json(opts: &BenchServeOpts, rows: &[BenchServeRow]) -> Json {
+    let mut json_rows = Json::Arr(Vec::new());
+    for r in rows {
+        let mut j = Json::obj();
+        j.set("workers", r.workers)
+            .set("clients", r.clients)
+            .set("coalesce", r.coalesce)
+            .set("requests", r.requests)
+            .set("wall_seconds", r.wall_seconds)
+            .set("requests_per_s", r.requests_per_s)
+            .set("p50_ms", r.p50_ms)
+            .set("p99_ms", r.p99_ms)
+            .set("mean_batch_width", r.mean_batch_width)
+            .set("batches", r.batches);
+        json_rows.push(j);
+    }
+    let mut j = Json::obj();
+    j.set("schema", "poets-impute/bench-serve/v1")
+        .set("bench", "serve")
+        .set("engine", opts.engine.name())
+        .set("panel", opts.panel.as_str())
+        .set("requests_per_client", opts.requests_per_client)
+        .set("targets_per_request", opts.targets_per_request)
+        .set("rows", json_rows);
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_produces_rows_for_every_config() {
+        let opts = BenchServeOpts {
+            clients: vec![1, 2],
+            workers: vec![1, 2],
+            requests_per_client: 3,
+            targets_per_request: 1,
+            engine: EngineSpec::Rank1,
+            panel: "synth:hap=8,mark=21,annot=0.2,seed=5".into(),
+            coalesce: CoalescePolicy {
+                max_batch_targets: 8,
+                max_linger: Duration::from_millis(1),
+            },
+        };
+        let (text, json) = run(&opts).unwrap();
+        assert!(text.contains("req/s"));
+        assert_eq!(
+            json.get("schema").unwrap().as_str(),
+            Some("poets-impute/bench-serve/v1")
+        );
+        let rows = json.get("rows").unwrap().as_arr().unwrap();
+        // workers × clients × {off, on}.
+        assert_eq!(rows.len(), 8);
+        let worker_counts: std::collections::BTreeSet<i64> = rows
+            .iter()
+            .map(|r| r.get("workers").unwrap().as_i64().unwrap())
+            .collect();
+        assert_eq!(worker_counts.len(), 2, "baseline must cover >= 2 pool sizes");
+        for r in rows {
+            assert_eq!(r.get("requests").unwrap().as_i64(), Some(3 * r.get("clients").unwrap().as_i64().unwrap()));
+            assert!(r.get("requests_per_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(r.get("p99_ms").unwrap().as_f64().unwrap()
+                >= r.get("p50_ms").unwrap().as_f64().unwrap());
+            assert!(r.get("mean_batch_width").unwrap().as_f64().unwrap() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn degenerate_opts_are_rejected() {
+        let no_requests = BenchServeOpts {
+            requests_per_client: 0,
+            ..BenchServeOpts::default()
+        };
+        assert!(run(&no_requests).is_err());
+        let no_workers = BenchServeOpts {
+            workers: Vec::new(),
+            ..BenchServeOpts::default()
+        };
+        assert!(run(&no_workers).is_err());
+    }
+}

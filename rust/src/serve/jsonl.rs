@@ -1,0 +1,437 @@
+//! Newline-delimited JSON frontend — `poets-impute serve`.
+//!
+//! One request per input line, one response per output line, responses in
+//! request order.  No sockets: the transport is stdin/stdout, which makes
+//! the service scriptable and CI-testable (`printf ... | poets-impute
+//! serve`) in the offline environment; a network listener is a transport
+//! wrapper away and deliberately out of scope here.
+//!
+//! ## Request line
+//!
+//! ```json
+//! {"id": 1, "panel": "synth:hap=8,mark=21,annot=0.2,seed=7",
+//!  "engine": "event", "synth_targets": 2, "target_seed": 9}
+//! ```
+//!
+//! * `panel` (string, required) — registry name, e.g. a `synth:` spec.
+//! * `engine` (string, default `"event"`) — any `EngineSpec` spelling.
+//! * `targets` (array of arrays) — observation vectors, one per target:
+//!   `-1` untyped, `0`/`1` typed alleles.  Mutually exclusive with:
+//! * `synth_targets` (int) + `target_seed` (int, default 0) — mint targets
+//!   from the panel's synthetic recipe server-side (testing/load-gen).
+//! * `id` (int, default: 1-based line number) — echoed in the response.
+//!
+//! ## Response line
+//!
+//! On success, the `poets-impute/serve-report/v1` document (see
+//! [`super::report`]) plus `"id"` and `"ok": true`.  On failure,
+//! `{"schema": "poets-impute/serve-error/v1", "id": .., "ok": false,
+//! "error": ".."}` — a bad request fails in-band and the stream keeps
+//! serving; only transport errors (unreadable input, broken pipe) abort.
+//!
+//! Responses are emitted in request order, but requests are submitted as
+//! they are read — the service coalesces and executes them concurrently,
+//! so piping a burst of same-panel lines exercises the real batching path.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, Write};
+
+use crate::model::panel::TargetHaplotype;
+use crate::session::EngineSpec;
+use crate::util::json::Json;
+
+use super::queue::Ticket;
+use super::{ImputeRequest, ServeReport, Service};
+
+/// What a stream session did (the CLI prints this to stderr at EOF).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamSummary {
+    pub requests: u64,
+    pub ok: u64,
+    pub failed: u64,
+}
+
+/// An in-order response slot: answered immediately (parse/admission error)
+/// or waiting on a service ticket.
+enum Slot {
+    Ready(Json),
+    InFlight(i64, Ticket),
+}
+
+/// Drive the service from `input` to `output` until EOF.  Per-request
+/// failures are in-band error lines; only transport failures return `Err`.
+pub fn serve_stream<R: BufRead, W: Write>(
+    service: &Service,
+    input: R,
+    mut output: W,
+) -> Result<StreamSummary, String> {
+    let mut summary = StreamSummary::default();
+    let mut slots: VecDeque<Slot> = VecDeque::new();
+    let mut line_no = 0i64;
+
+    for line in input.lines() {
+        let line = line.map_err(|e| format!("reading request stream: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        line_no += 1;
+        summary.requests += 1;
+        let slot = match parse_request(&line, line_no, service) {
+            Ok((id, req)) => loop {
+                match service.submit(req.clone()) {
+                    Ok(ticket) => break Slot::InFlight(id, ticket),
+                    // Backpressure, not failure: this reader is the only
+                    // submitter of these slots, so when the queue is full we
+                    // block on our own head-of-line response (freeing queue
+                    // space) and resubmit, instead of failing requests a
+                    // blocking pipe was happy to wait for.
+                    Err(e) if e.starts_with("admission: queue full") && !slots.is_empty() => {
+                        if let Some(json) = pop_ready(&mut slots, &mut summary, true) {
+                            write_line(&mut output, &json)?;
+                        }
+                    }
+                    Err(e) => break Slot::Ready(error_response(id, &e, &mut summary)),
+                }
+            },
+            Err((id, e)) => Slot::Ready(error_response(id, &e, &mut summary)),
+        };
+        slots.push_back(slot);
+        // Opportunistically flush responses that are already done, in
+        // order, so a long-lived pipe sees answers without waiting for EOF.
+        while let Some(json) = pop_ready(&mut slots, &mut summary, false) {
+            write_line(&mut output, &json)?;
+        }
+    }
+    // EOF: block for everything still in flight.
+    while let Some(json) = pop_ready(&mut slots, &mut summary, true) {
+        write_line(&mut output, &json)?;
+    }
+    Ok(summary)
+}
+
+/// Pop the head slot if it has (or, when `block`, once it gets) an answer.
+fn pop_ready(
+    slots: &mut VecDeque<Slot>,
+    summary: &mut StreamSummary,
+    block: bool,
+) -> Option<Json> {
+    let ready = match slots.front() {
+        None => return None,
+        Some(Slot::Ready(_)) => true,
+        Some(Slot::InFlight(..)) => block,
+    };
+    if !ready {
+        // Head still in flight and we may not block: peek without consuming.
+        if let Some(Slot::InFlight(id, ticket)) = slots.front() {
+            let result = ticket.try_wait()?;
+            let json = result_response(*id, result, summary);
+            slots.pop_front();
+            return Some(json);
+        }
+        return None;
+    }
+    match slots.pop_front()? {
+        Slot::Ready(json) => Some(json),
+        Slot::InFlight(id, ticket) => Some(result_response(id, ticket.wait(), summary)),
+    }
+}
+
+fn write_line<W: Write>(output: &mut W, json: &Json) -> Result<(), String> {
+    writeln!(output, "{}", json.render()).map_err(|e| format!("writing response: {e}"))?;
+    output
+        .flush()
+        .map_err(|e| format!("flushing response: {e}"))
+}
+
+fn result_response(
+    id: i64,
+    result: Result<ServeReport, String>,
+    summary: &mut StreamSummary,
+) -> Json {
+    match result {
+        Ok(report) => {
+            summary.ok += 1;
+            let mut j = report.to_json();
+            j.set("id", id).set("ok", true);
+            j
+        }
+        Err(e) => error_response(id, &e, summary),
+    }
+}
+
+fn error_response(id: i64, error: &str, summary: &mut StreamSummary) -> Json {
+    summary.failed += 1;
+    let mut j = Json::obj();
+    j.set("schema", "poets-impute/serve-error/v1")
+        .set("id", id)
+        .set("ok", false)
+        .set("error", error);
+    j
+}
+
+const KNOWN_KEYS: [&str; 6] = [
+    "id",
+    "panel",
+    "engine",
+    "targets",
+    "synth_targets",
+    "target_seed",
+];
+
+/// Parse one request line.  Errors carry the best-known request id so the
+/// error response still correlates with the input line.
+fn parse_request(
+    line: &str,
+    line_no: i64,
+    service: &Service,
+) -> Result<(i64, ImputeRequest), (i64, String)> {
+    let j = Json::parse(line).map_err(|e| (line_no, format!("bad request JSON: {e}")))?;
+    // Client ids are echoed verbatim (negative ids included), so they stay
+    // i64 end to end instead of wrapping through a u64 cast.
+    let id = j.get("id").and_then(Json::as_i64).unwrap_or(line_no);
+    let fail = |e: String| (id, e);
+
+    if let Json::Obj(pairs) = &j {
+        for (key, _) in pairs {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                return Err(fail(format!(
+                    "unknown request key {key:?} (expected one of {KNOWN_KEYS:?})"
+                )));
+            }
+        }
+    } else {
+        return Err(fail("request line must be a JSON object".into()));
+    }
+
+    let panel = j
+        .get("panel")
+        .and_then(Json::as_str)
+        .ok_or_else(|| fail("request needs a \"panel\" string".into()))?
+        .to_string();
+    let engine: EngineSpec = j
+        .get("engine")
+        .and_then(Json::as_str)
+        .unwrap_or("event")
+        .parse()
+        .map_err(fail)?;
+
+    let targets = match (j.get("targets"), j.get("synth_targets")) {
+        (Some(_), Some(_)) => {
+            return Err(fail(
+                "\"targets\" and \"synth_targets\" are mutually exclusive".into(),
+            ));
+        }
+        (Some(t), None) => parse_targets(t).map_err(fail)?,
+        (None, Some(n)) => {
+            let count = n
+                .as_usize()
+                .ok_or_else(|| fail("\"synth_targets\" must be a non-negative int".into()))?;
+            let seed = j
+                .get("target_seed")
+                .and_then(Json::as_i64)
+                .unwrap_or(0) as u64;
+            let panel = service.registry().resolve(&panel).map_err(fail)?;
+            panel.synthetic_targets(count, seed).map_err(fail)?
+        }
+        (None, None) => {
+            return Err(fail(
+                "request needs \"targets\" or \"synth_targets\"".into(),
+            ));
+        }
+    };
+
+    Ok((id, ImputeRequest {
+        panel,
+        engine,
+        targets,
+    }))
+}
+
+/// Observation vectors: arrays of `-1 | 0 | 1`, one per target.
+fn parse_targets(j: &Json) -> Result<Vec<TargetHaplotype>, String> {
+    let rows = j
+        .as_arr()
+        .ok_or("\"targets\" must be an array of observation arrays")?;
+    let mut targets = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let obs_row = row
+            .as_arr()
+            .ok_or_else(|| format!("target {i} must be an array of -1|0|1"))?;
+        let mut obs = Vec::with_capacity(obs_row.len());
+        for v in obs_row {
+            let o = v
+                .as_i64()
+                .filter(|o| (-1..=1).contains(o))
+                .ok_or_else(|| format!("target {i}: observations must be -1|0|1"))?;
+            obs.push(o as i8);
+        }
+        targets.push(TargetHaplotype::new(obs));
+    }
+    Ok(targets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{PanelRegistry, ServeConfig};
+    use std::sync::Arc;
+
+    const PANEL: &str = "synth:hap=8,mark=21,annot=0.2,seed=7";
+
+    fn run(input: &str) -> (StreamSummary, Vec<Json>) {
+        let service = Service::start(Arc::new(PanelRegistry::new()), ServeConfig::default());
+        let mut out = Vec::new();
+        let summary = serve_stream(&service, input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines = text
+            .lines()
+            .map(|l| Json::parse(l).expect("every response line is valid JSON"))
+            .collect();
+        (summary, lines)
+    }
+
+    #[test]
+    fn three_requests_three_wellformed_responses() {
+        let l1 = format!(r#"{{"id":1,"panel":"{PANEL}","engine":"baseline","synth_targets":2}}"#);
+        let l2 = format!(
+            r#"{{"id":2,"panel":"{PANEL}","engine":"rank1","synth_targets":1,"target_seed":3}}"#
+        );
+        let l3 = format!(r#"{{"id":3,"panel":"{PANEL}","engine":"event","synth_targets":1}}"#);
+        let input = format!("{l1}\n{l2}\n{l3}\n");
+        let (summary, lines) = run(&input);
+        assert_eq!(summary.requests, 3);
+        assert_eq!(summary.ok, 3);
+        assert_eq!(summary.failed, 0);
+        assert_eq!(lines.len(), 3);
+        for (i, j) in lines.iter().enumerate() {
+            assert_eq!(
+                j.get("schema").unwrap().as_str(),
+                Some("poets-impute/serve-report/v1")
+            );
+            assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+            assert_eq!(j.get("id").unwrap().as_i64(), Some(i as i64 + 1));
+            assert!(!j.get("dosages").unwrap().as_arr().unwrap().is_empty());
+        }
+        // Responses preserve request order.
+        assert_eq!(lines[0].get("engine").unwrap().as_str(), Some("baseline"));
+        assert_eq!(lines[2].get("engine").unwrap().as_str(), Some("event"));
+    }
+
+    #[test]
+    fn explicit_targets_and_blank_lines() {
+        let obs: Vec<String> = (0..21)
+            .map(|m| (if m % 5 == 0 { "1" } else { "-1" }).to_string())
+            .collect();
+        let input = format!(
+            "\n{{\"panel\":\"{PANEL}\",\"engine\":\"baseline\",\"targets\":[[{}]]}}\n\n",
+            obs.join(",")
+        );
+        let (summary, lines) = run(&input);
+        assert_eq!(summary.requests, 1);
+        assert_eq!(summary.ok, 1);
+        assert_eq!(lines.len(), 1);
+        // Default id = 1-based request number.
+        assert_eq!(lines[0].get("id").unwrap().as_i64(), Some(1));
+        let d = lines[0].get("dosages").unwrap().as_arr().unwrap();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].as_arr().unwrap().len(), 21);
+    }
+
+    #[test]
+    fn bad_lines_fail_in_band_and_the_stream_continues() {
+        let input = format!(
+            "not json at all\n\
+             {{\"id\":7,\"panel\":\"{PANEL}\",\"engine\":\"warp\",\"synth_targets\":1}}\n\
+             {{\"id\":8,\"panel\":\"{PANEL}\",\"bogus\":1,\"synth_targets\":1}}\n\
+             {{\"id\":9,\"panel\":\"{PANEL}\",\"synth_targets\":1}}\n"
+        );
+        let (summary, lines) = run(&input);
+        assert_eq!(summary.requests, 4);
+        assert_eq!(summary.ok, 1);
+        assert_eq!(summary.failed, 3);
+        assert_eq!(lines.len(), 4);
+        for j in &lines[..3] {
+            assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+            assert_eq!(
+                j.get("schema").unwrap().as_str(),
+                Some("poets-impute/serve-error/v1")
+            );
+            assert!(j.get("error").unwrap().as_str().is_some());
+        }
+        assert_eq!(lines[1].get("id").unwrap().as_i64(), Some(7));
+        assert_eq!(lines[2].get("id").unwrap().as_i64(), Some(8));
+        assert_eq!(lines[3].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(lines[3].get("id").unwrap().as_i64(), Some(9));
+    }
+
+    #[test]
+    fn backpressure_blocks_instead_of_shedding_for_pipes() {
+        // Capacity 1, one worker, eight lines: the reader must throttle on
+        // its own in-flight responses, so a blocking pipe never sees
+        // spurious "queue full" failures.
+        let service = Service::start(
+            Arc::new(PanelRegistry::new()),
+            ServeConfig::default().workers(1).queue_capacity(1),
+        );
+        let mut input = String::new();
+        for i in 0..8 {
+            input.push_str(&format!(
+                r#"{{"id":{i},"panel":"{PANEL}","engine":"rank1","synth_targets":1}}"#
+            ));
+            input.push('\n');
+        }
+        let mut out = Vec::new();
+        let summary = serve_stream(&service, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(summary.requests, 8);
+        assert_eq!(summary.ok, 8, "queue-full must backpressure, not shed");
+        assert_eq!(summary.failed, 0);
+    }
+
+    #[test]
+    fn negative_ids_echo_verbatim() {
+        let input = format!(r#"{{"id":-3,"panel":"{PANEL}","engine":"rank1","synth_targets":1}}"#)
+            + "\n";
+        let (summary, lines) = run(&input);
+        assert_eq!(summary.ok, 1);
+        assert_eq!(lines[0].get("id").unwrap().as_i64(), Some(-3));
+    }
+
+    #[test]
+    fn out_of_range_synth_spec_fails_in_band() {
+        // A spec that would trip panelgen asserts must come back as an
+        // in-band error line, not kill the stream (or a pool worker).
+        let input = concat!(
+            r#"{"id":1,"panel":"synth:hap=8,mark=21,maf=0.9","synth_targets":1}"#,
+            "\n",
+            r#"{"id":2,"panel":"synth:hap=8,mark=21,annot=0.2,seed=7","engine":"rank1","synth_targets":1}"#,
+            "\n"
+        );
+        let (summary, lines) = run(input);
+        assert_eq!(summary.failed, 1);
+        assert_eq!(summary.ok, 1);
+        assert!(
+            lines[0]
+                .get("error")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .contains("synth spec")
+        );
+        assert_eq!(lines[1].get("ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn targets_must_be_valid_observations() {
+        let input = format!(r#"{{"panel":"{PANEL}","targets":[[0,2,1]]}}"#) + "\n";
+        let (summary, lines) = run(&input);
+        assert_eq!(summary.failed, 1);
+        assert!(
+            lines[0]
+                .get("error")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .contains("-1|0|1")
+        );
+    }
+}

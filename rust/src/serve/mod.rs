@@ -1,0 +1,732 @@
+//! `serve` — a multi-tenant imputation service over the session pipeline.
+//!
+//! The paper's wall-clock wins only matter downstream if the engine can be
+//! *served*: many independent clients, many panels, heavy concurrent
+//! traffic.  This subsystem is that serving layer, std-only like the rest of
+//! the offline build:
+//!
+//! * [`PanelRegistry`] — named reference panels loaded once and shared via
+//!   `Arc`; every request against the same panel reuses one in-memory copy.
+//! * [`ImputeRequest`] / [`Ticket`] — the tenant-facing request/response
+//!   pair.  Admission control is a bounded queue: past the configured
+//!   capacity ([`ServeConfig`]) pending requests, submits are rejected with
+//!   an `admission:` error instead of growing latency without bound.
+//! * The **coalescer** ([`CoalescePolicy`]) — concurrently submitted
+//!   requests for the same (panel, engine) pair merge into one engine batch
+//!   group, bounded by a target budget and an optional linger window.
+//!   Within a group the engine is built once and bound once (per request
+//!   instead when its `prepare` validates targets, as the interp plane's
+//!   grid check does); each member request is then executed as its own
+//!   [`TargetBatch`], preserving request
+//!   boundaries so every response is **bit-identical** to a standalone
+//!   [`ImputeSession`](crate::session::ImputeSession) run (the event plane's
+//!   f32 accumulation is sensitive to batch composition — see
+//!   `tests/engine_equivalence.rs` — so target-level merging across requests
+//!   is deliberately left to the panel-level wave-batching engine work that
+//!   `ROADMAP.md` tracks; it lands behind `EventEngine::run` and this seam
+//!   won't move).
+//! * The **worker pool** — `ServeConfig::workers` OS threads (the same
+//!   std::thread fan-out style as the DES delivery engine), each owning one
+//!   [`Engine`] per (panel, engine-spec) pair it has served.  Engine panics
+//!   are caught and reported as per-request errors; a failing engine is
+//!   dropped from the cache rather than reused.
+//! * [`ServeReport`] — the per-request manifest, schema
+//!   `poets-impute/serve-report/v1` (the impute-report manifest plus
+//!   queue-wait / coalesce-width / batch-id fields and the dosages; see
+//!   [`report`]).
+//!
+//! Three frontends: this library API, `poets-impute serve` (newline-
+//! delimited JSON over stdin/stdout, [`jsonl`]), and the `bench-serve`
+//! closed-loop load generator ([`bench`]) that establishes the throughput
+//! baseline recorded in `BENCH_serve.json`.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use poets_impute::serve::{ImputeRequest, PanelRegistry, ServeConfig, Service};
+//! use poets_impute::session::EngineSpec;
+//!
+//! let registry = Arc::new(PanelRegistry::new());
+//! let panel = registry.resolve("synth:hap=8,mark=21,annot=0.2,seed=1").unwrap();
+//! let targets = panel.synthetic_targets(2, 7).unwrap();
+//!
+//! let service = Service::start(Arc::clone(&registry), ServeConfig::default().workers(2));
+//! let report = service
+//!     .submit(ImputeRequest {
+//!         panel: panel.name().to_string(),
+//!         engine: EngineSpec::Rank1,
+//!         targets,
+//!     })
+//!     .unwrap()
+//!     .wait()
+//!     .unwrap();
+//! assert_eq!(report.dosages().len(), 2);
+//! let stats = service.shutdown();
+//! assert_eq!(stats.completed, 1);
+//! ```
+
+pub mod bench;
+pub mod jsonl;
+pub mod queue;
+pub mod registry;
+pub mod report;
+
+pub use queue::{CoalescePolicy, ImputeRequest, ServiceStats, Ticket};
+pub use registry::{PanelRegistry, RegisteredPanel};
+pub use report::ServeReport;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, mpsc};
+use std::thread;
+use std::time::Instant;
+
+use crate::graph::mapping::MappingStrategy;
+use crate::imputation::app::RawAppConfig;
+use crate::poets::topology::ClusterConfig;
+use crate::session::{Engine, EngineSpec, ImputeReport, TargetBatch, Workload, build_engine};
+
+use queue::{Pending, QueueState};
+
+const POISONED: &str = "serve queue lock poisoned";
+
+/// Service shape: pool size, coalescing policy, admission bound and the
+/// engine knobs every request runs under (one service = one engine
+/// configuration; run several services for A/B configurations).
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Worker threads servicing coalesced batches.
+    pub workers: usize,
+    /// Request-merging policy ([`CoalescePolicy::off`] disables).
+    pub coalesce: CoalescePolicy,
+    /// Max requests waiting in the queue before submits are rejected.
+    pub queue_capacity: usize,
+    /// Engine configuration (cluster shape, model params, soft-scheduling,
+    /// DES host threads) shared by every request.
+    pub app: RawAppConfig,
+    /// Vertex→thread mapping strategy for the event planes.
+    pub mapping: MappingStrategy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            coalesce: CoalescePolicy::default(),
+            queue_capacity: 1024,
+            app: RawAppConfig {
+                cluster: ClusterConfig::with_boards(2),
+                states_per_thread: 8,
+                ..RawAppConfig::default()
+            },
+            mapping: MappingStrategy::Manual2d,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    pub fn coalesce(mut self, policy: CoalescePolicy) -> Self {
+        self.coalesce = policy;
+        self
+    }
+
+    /// Disable request merging (every request runs alone).
+    pub fn no_coalesce(self) -> Self {
+        self.coalesce(CoalescePolicy::off())
+    }
+
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.queue_capacity = n.max(1);
+        self
+    }
+
+    /// Simulated cluster size for the event planes.
+    pub fn boards(mut self, n: usize) -> Self {
+        self.app.cluster = ClusterConfig::with_boards(n);
+        self
+    }
+
+    /// Soft-scheduling factor (panel states per hardware thread).
+    pub fn states_per_thread(mut self, n: usize) -> Self {
+        self.app.states_per_thread = n.max(1);
+        self
+    }
+
+    /// Host worker threads for the DES deliver/step phases *inside* one
+    /// engine run (orthogonal to the service worker pool).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.app.sim.threads = Some(n.max(1));
+        self
+    }
+}
+
+/// Everything submitters and workers share.
+struct Shared {
+    registry: Arc<PanelRegistry>,
+    cfg: ServeConfig,
+    state: Mutex<QueueState>,
+    work: Condvar,
+}
+
+/// A coalesced batch popped from the queue.
+struct Group {
+    batch_id: u64,
+    members: Vec<Pending>,
+}
+
+/// One worker's engine cache: the live [`Engine`] per (panel, spec) pair it
+/// has served.  Engines stay on their worker thread for their whole life, so
+/// the trait needs no `Send` bound.
+type EngineCache = HashMap<(String, EngineSpec), Box<dyn Engine>>;
+
+/// The multi-tenant imputation service: a panel registry, a bounded
+/// coalescing queue and a worker pool.  See the [module docs](self) for the
+/// execution model; construction is [`Service::start`], teardown is
+/// [`Service::shutdown`] (or drop), both of which drain already-admitted
+/// requests before the workers exit.
+pub struct Service {
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Spawn the worker pool and start serving.
+    pub fn start(registry: Arc<PanelRegistry>, cfg: ServeConfig) -> Service {
+        let n_workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            registry,
+            cfg,
+            state: Mutex::new(QueueState::default()),
+            work: Condvar::new(),
+        });
+        let workers = (0..n_workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("serve-{i}"))
+                    .spawn(move || worker_loop(&shared, i))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Service {
+            shared,
+            next_id: AtomicU64::new(0),
+            workers,
+        }
+    }
+
+    /// Admit a request.  Fails fast (`admission: ...`) when the request is
+    /// empty, the queue is full, or the service is shutting down.
+    pub fn submit(&self, req: ImputeRequest) -> Result<Ticket, String> {
+        let mut st = self.shared.state.lock().expect(POISONED);
+        if req.targets.is_empty() {
+            st.stats.rejected += 1;
+            return Err("admission: request has no targets".into());
+        }
+        if st.shutdown {
+            st.stats.rejected += 1;
+            return Err("admission: service is shutting down".into());
+        }
+        if st.pending.len() >= self.shared.cfg.queue_capacity {
+            st.stats.rejected += 1;
+            return Err(format!(
+                "admission: queue full ({} pending, capacity {})",
+                st.pending.len(),
+                self.shared.cfg.queue_capacity
+            ));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        st.stats.accepted += 1;
+        let (tx, rx) = mpsc::channel();
+        st.pending.push_back(Pending {
+            id,
+            req,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        drop(st);
+        // Wake every worker: idle ones race for the head, lingering ones
+        // re-scan for batch-mates.
+        self.shared.work.notify_all();
+        Ok(Ticket { id, rx })
+    }
+
+    /// Submit and block for the result (the one-shot convenience path).
+    pub fn submit_wait(&self, req: ImputeRequest) -> Result<ServeReport, String> {
+        self.submit(req)?.wait()
+    }
+
+    /// Snapshot of the aggregate counters.
+    pub fn stats(&self) -> ServiceStats {
+        self.shared.state.lock().expect(POISONED).stats
+    }
+
+    /// The shared panel registry.
+    pub fn registry(&self) -> &Arc<PanelRegistry> {
+        &self.shared.registry
+    }
+
+    /// Stop admitting, drain every already-admitted request, join the
+    /// workers, and return the final counters.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.finish();
+        self.stats()
+    }
+
+    fn finish(&mut self) {
+        if self.workers.is_empty() {
+            return;
+        }
+        self.shared.state.lock().expect(POISONED).shutdown = true;
+        self.shared.work.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// One pool worker: pop coalesced groups until shutdown drains the queue.
+fn worker_loop(shared: &Shared, worker: usize) {
+    let mut engines = EngineCache::new();
+    while let Some(group) = next_group(shared) {
+        run_group(shared, &mut engines, group, worker);
+    }
+}
+
+/// Pop the next coalesced group: the head request plus every same-key
+/// pending request within the target budget, lingering up to the policy's
+/// window for stragglers (never past shutdown).
+fn next_group(shared: &Shared) -> Option<Group> {
+    let policy = shared.cfg.coalesce;
+    let mut st = shared.state.lock().expect(POISONED);
+    let first = loop {
+        if let Some(p) = st.pending.pop_front() {
+            break p;
+        }
+        if st.shutdown {
+            return None;
+        }
+        st = shared.work.wait(st).expect(POISONED);
+    };
+    let panel_key = first.req.panel.clone();
+    let spec = first.req.engine;
+    let mut total = first.req.targets.len();
+    let mut members = vec![first];
+    if !policy.is_off() {
+        let deadline = Instant::now() + policy.max_linger;
+        loop {
+            total = st.drain_matching(
+                (panel_key.as_str(), spec),
+                &mut members,
+                total,
+                policy.max_batch_targets,
+            );
+            if total >= policy.max_batch_targets || st.shutdown {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (relocked, _timeout) = shared
+                .work
+                .wait_timeout(st, deadline - now)
+                .expect(POISONED);
+            st = relocked;
+        }
+    }
+    st.next_batch_id += 1;
+    let batch_id = st.next_batch_id;
+    st.stats.batches += 1;
+    st.stats.coalesced_requests += members.len() as u64;
+    Some(Group { batch_id, members })
+}
+
+/// Execute one coalesced group: resolve the panel, bind the cached engine
+/// (once per group when `prepare` is target-independent, once per request
+/// when it validates targets), then serve each member request as its own
+/// [`TargetBatch`] — request boundaries preserved, see module docs.  Every
+/// engine failure, panics included, degrades to per-request errors.
+fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: usize) {
+    let Group { batch_id, members } = group;
+    let started = Instant::now();
+    let panel_name = members[0].req.panel.clone();
+    let spec = members[0].req.engine;
+
+    // Guarded like the engine calls: a panicking resolve (or any future
+    // pre-engine step) must degrade to per-request errors, never kill the
+    // worker and strand the queue.
+    let panel = match guard("resolve", || shared.registry.resolve(&panel_name)) {
+        Ok(p) => p,
+        Err(e) => {
+            for p in members {
+                finish(shared, p, Err(e.clone()));
+            }
+            return;
+        }
+    };
+
+    // Per-request shape validation: a malformed request fails alone.
+    let n_mark = panel.panel().n_mark();
+    let (good, bad): (Vec<Pending>, Vec<Pending>) = members
+        .into_iter()
+        .partition(|p| p.req.targets.iter().all(|t| t.n_mark() == n_mark));
+    for p in bad {
+        finish(
+            shared,
+            p,
+            Err(format!(
+                "target/panel marker mismatch (panel {panel_name:?} has {n_mark} markers)"
+            )),
+        );
+    }
+    if good.is_empty() {
+        return;
+    }
+
+    let key = (panel_name, spec);
+    let mut had_error = false;
+    {
+        let engine = engines
+            .entry(key.clone())
+            .or_insert_with(|| build_engine(spec, &shared.cfg.app, shared.cfg.mapping));
+        let width = good.len();
+        // Target-independent prepares (panel binding, runtime opening) run
+        // once per group against a target-less workload — zero copies of
+        // observation data.  Engines whose prepare validates the request's
+        // targets (the interp plane's annotation-grid check) are re-prepared
+        // per request below, exactly like a solo session, so one bad
+        // request's validation failure never poisons its batch-mates.
+        let per_request_prepare = engine.prepare_inspects_targets();
+        let group_bind = if per_request_prepare {
+            Ok(())
+        } else {
+            Workload::from_shared(panel.panel_arc(), Vec::new())
+                .and_then(|bind| guard("prepare", || engine.prepare(&bind)))
+        };
+        match group_bind {
+            Err(e) => {
+                had_error = true;
+                for p in good {
+                    finish(shared, p, Err(e.clone()));
+                }
+            }
+            Ok(()) => {
+                for p in good {
+                    let ctx = RequestCtx {
+                        batch_id,
+                        width,
+                        queue_wait_seconds: started.duration_since(p.enqueued).as_secs_f64(),
+                        worker,
+                    };
+                    let result = if per_request_prepare {
+                        prepare_and_serve(shared, engine.as_mut(), &panel, &p, &ctx)
+                    } else {
+                        serve_one(shared, engine.as_mut(), &panel, &p, &ctx)
+                    };
+                    had_error |= result.is_err();
+                    finish(shared, p, result);
+                }
+            }
+        }
+    }
+    // Engines that errored (or panicked) are rebuilt from scratch next time
+    // rather than trusted to have consistent internal state.
+    if had_error {
+        engines.remove(&key);
+    }
+}
+
+/// Service-side labels for one request's execution.
+struct RequestCtx {
+    batch_id: u64,
+    width: usize,
+    queue_wait_seconds: f64,
+    worker: usize,
+}
+
+/// Prepare the engine on this request's own workload, then serve it — the
+/// path for engines whose `prepare` validates targets; identical to what a
+/// solo `ImputeSession` run does.
+fn prepare_and_serve(
+    shared: &Shared,
+    engine: &mut dyn Engine,
+    panel: &RegisteredPanel,
+    p: &Pending,
+    ctx: &RequestCtx,
+) -> Result<ServeReport, String> {
+    let wl = Workload::from_shared(panel.panel_arc(), p.req.targets.clone())?;
+    guard("prepare", || engine.prepare(&wl))?;
+    serve_one(shared, engine, panel, p, ctx)
+}
+
+/// Run one member request as its own batch and assemble its report.
+fn serve_one(
+    shared: &Shared,
+    engine: &mut dyn Engine,
+    panel: &RegisteredPanel,
+    p: &Pending,
+    ctx: &RequestCtx,
+) -> Result<ServeReport, String> {
+    let n_targets = p.req.targets.len();
+    let t0 = Instant::now();
+    let out = guard("run", || engine.run(&TargetBatch::new(&p.req.targets)))?;
+    let host_seconds = t0.elapsed().as_secs_f64();
+    if out.dosages.len() != n_targets {
+        return Err(format!(
+            "{} engine returned {} dosage rows for a {}-target request",
+            p.req.engine.name(),
+            out.dosages.len(),
+            n_targets
+        ));
+    }
+    Ok(ServeReport {
+        request_id: p.id,
+        panel: panel.name().to_string(),
+        batch_id: ctx.batch_id,
+        coalesce_width: ctx.width,
+        queue_wait_seconds: ctx.queue_wait_seconds,
+        worker: ctx.worker,
+        report: ImputeReport {
+            engine: p.req.engine,
+            n_hap: panel.panel().n_hap(),
+            n_mark: panel.panel().n_mark(),
+            n_targets,
+            provenance: panel.recipe().copied(),
+            batch_size: n_targets,
+            n_batches: 1,
+            boards: shared.cfg.app.cluster.n_boards,
+            states_per_thread: shared.cfg.app.states_per_thread,
+            threads: shared.cfg.app.sim.threads.unwrap_or(1),
+            mapping: shared.cfg.mapping,
+            dosages: out.dosages,
+            accuracy: None,
+            host_seconds,
+            sim_seconds: out.sim_seconds,
+            metrics: out.metrics,
+        },
+    })
+}
+
+/// Answer a request and bump the counters.
+fn finish(shared: &Shared, p: Pending, result: Result<ServeReport, String>) {
+    {
+        let mut st = shared.state.lock().expect(POISONED);
+        if result.is_ok() {
+            st.stats.completed += 1;
+        } else {
+            st.stats.failed += 1;
+        }
+    }
+    // A client that dropped its ticket just doesn't read the answer.
+    let _ = p.reply.send(result);
+}
+
+/// Convert engine panics (e.g. a mapping capacity assert on an oversized
+/// request) into per-request errors so one bad request cannot kill a pool
+/// worker and starve the queue.
+fn guard<T>(phase: &str, f: impl FnOnce() -> Result<T, String>) -> Result<T, String> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".into());
+            Err(format!("{phase} panicked: {msg}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    const PANEL: &str = "synth:hap=8,mark=21,annot=0.2,seed=11";
+
+    fn service(cfg: ServeConfig) -> Service {
+        Service::start(Arc::new(PanelRegistry::new()), cfg)
+    }
+
+    fn request(service: &Service, engine: EngineSpec, n: usize, seed: u64) -> ImputeRequest {
+        let panel = service.registry().resolve(PANEL).unwrap();
+        ImputeRequest {
+            panel: PANEL.to_string(),
+            engine,
+            targets: panel.synthetic_targets(n, seed).unwrap(),
+        }
+    }
+
+    #[test]
+    fn submit_wait_roundtrip() {
+        let svc = service(ServeConfig::default());
+        let report = svc
+            .submit_wait(request(&svc, EngineSpec::Baseline, 2, 1))
+            .unwrap();
+        assert_eq!(report.dosages().len(), 2);
+        assert_eq!(report.report.n_mark, 21);
+        assert_eq!(report.report.engine, EngineSpec::Baseline);
+        assert!(report.coalesce_width >= 1);
+        assert!(report.queue_wait_seconds >= 0.0);
+        let stats = svc.shutdown();
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.failed, 0);
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn empty_requests_are_rejected_at_admission() {
+        let svc = service(ServeConfig::default());
+        let err = svc
+            .submit(ImputeRequest {
+                panel: PANEL.into(),
+                engine: EngineSpec::Baseline,
+                targets: Vec::new(),
+            })
+            .unwrap_err();
+        assert!(err.starts_with("admission:"), "{err}");
+        assert_eq!(svc.shutdown().rejected, 1);
+    }
+
+    #[test]
+    fn unknown_panel_fails_the_request_not_the_worker() {
+        let svc = service(ServeConfig::default().workers(1));
+        let err = svc
+            .submit_wait(ImputeRequest {
+                panel: "nonexistent".into(),
+                engine: EngineSpec::Baseline,
+                targets: vec![crate::model::panel::TargetHaplotype::new(vec![-1, 0, 1])],
+            })
+            .unwrap_err();
+        assert!(err.contains("unknown panel"), "{err}");
+        // The worker survived: a valid follow-up request still works.
+        let ok = svc.submit_wait(request(&svc, EngineSpec::Rank1, 1, 2));
+        assert!(ok.is_ok(), "{ok:?}");
+        let stats = svc.shutdown();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn marker_mismatch_fails_individually() {
+        let svc = service(ServeConfig::default().workers(1));
+        let err = svc
+            .submit_wait(ImputeRequest {
+                panel: PANEL.into(),
+                engine: EngineSpec::Baseline,
+                targets: vec![crate::model::panel::TargetHaplotype::new(vec![-1; 7])],
+            })
+            .unwrap_err();
+        assert!(err.contains("marker mismatch"), "{err}");
+        let stats = svc.shutdown();
+        assert_eq!(stats.failed, 1);
+    }
+
+    #[test]
+    fn queue_capacity_sheds_load() {
+        // One worker, capacity 1: stuff the queue faster than it drains and
+        // at least the capacity bound must hold (no unbounded growth).
+        let svc = service(
+            ServeConfig::default()
+                .workers(1)
+                .queue_capacity(1)
+                .coalesce(CoalescePolicy {
+                    max_batch_targets: 1,
+                    max_linger: Duration::ZERO,
+                }),
+        );
+        let mut tickets = Vec::new();
+        let mut rejected = 0u64;
+        for i in 0..32 {
+            match svc.submit(request(&svc, EngineSpec::Baseline, 1, i)) {
+                Ok(t) => tickets.push(t),
+                Err(e) => {
+                    assert!(e.starts_with("admission: queue full"), "{e}");
+                    rejected += 1;
+                }
+            }
+        }
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.rejected, rejected);
+        assert_eq!(stats.accepted + stats.rejected, 32);
+        assert_eq!(stats.completed, stats.accepted);
+    }
+
+    #[test]
+    fn coalescing_merges_same_key_requests() {
+        // Single worker + generous linger: submit a burst, then check at
+        // least one batch served more than one request.  (The window is
+        // deliberately much larger than the submit loop so slow CI schedulers
+        // can't starve the coalescer.)
+        let svc = service(ServeConfig::default().workers(1).coalesce(CoalescePolicy {
+            max_batch_targets: 16,
+            max_linger: Duration::from_millis(200),
+        }));
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|i| svc.submit(request(&svc, EngineSpec::Rank1, 1, i)).unwrap())
+            .collect();
+        let reports: Vec<ServeReport> =
+            tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        let max_width = reports.iter().map(|r| r.coalesce_width).max().unwrap();
+        assert!(
+            max_width >= 2,
+            "expected some coalescing under a 200ms linger; widths: {:?}",
+            reports.iter().map(|r| r.coalesce_width).collect::<Vec<_>>()
+        );
+        let stats = svc.shutdown();
+        assert_eq!(stats.completed, 4);
+        assert!(stats.batches < 4, "linger should have merged batches");
+        assert!(stats.mean_batch_width() > 1.0);
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_requests() {
+        let svc = service(ServeConfig::default().workers(2));
+        let tickets: Vec<Ticket> = (0..6)
+            .map(|i| svc.submit(request(&svc, EngineSpec::Baseline, 1, i)).unwrap())
+            .collect();
+        let stats = svc.shutdown(); // joins workers; queue must be drained
+        assert_eq!(stats.completed + stats.failed, 6);
+        for t in tickets {
+            t.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn oversized_event_request_errors_instead_of_killing_the_worker() {
+        // A panel too big for the simulated cluster at the configured
+        // soft-scheduling makes the mapping assert; the guard must convert
+        // that into a per-request error and the worker must keep serving.
+        let svc = service(ServeConfig::default().workers(1).states_per_thread(1));
+        let big = "synth:hap=64,mark=512,seed=3";
+        let panel = svc.registry().resolve(big).unwrap();
+        let err = svc
+            .submit_wait(ImputeRequest {
+                panel: big.into(),
+                engine: EngineSpec::Event,
+                targets: panel.synthetic_targets(1, 0).unwrap(),
+            })
+            .unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        let ok = svc.submit_wait(request(&svc, EngineSpec::Baseline, 1, 4));
+        assert!(ok.is_ok(), "{ok:?}");
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,252 @@
+//! Admission queue + request coalescer.
+//!
+//! A bounded FIFO of submitted requests guarded by one mutex/condvar pair.
+//! Workers pop *coalesced groups*: the head request plus every other pending
+//! request for the same (panel, engine) key, up to a target budget
+//! ([`CoalescePolicy::max_batch_targets`]), optionally lingering
+//! ([`CoalescePolicy::max_linger`]) for stragglers so short bursts merge
+//! even when the queue momentarily empties.  Coalescing is strictly
+//! work-conserving apart from that bounded linger: a group never waits once
+//! its target budget is met, and `max_batch_targets = 1` disables merging
+//! (and therefore lingering) entirely.
+//!
+//! Admission control is a hard cap on pending requests
+//! ([`CoalescePolicy`] is about *shape*; capacity lives on the service
+//! config): a full queue rejects at submit time with an `admission:` error
+//! rather than queueing unboundedly — under overload a service must shed
+//! load, not grow latency without bound.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::model::panel::TargetHaplotype;
+use crate::session::EngineSpec;
+
+use super::report::ServeReport;
+
+/// One tenant request: impute `targets` against the named panel on the
+/// selected compute plane.
+#[derive(Clone, Debug)]
+pub struct ImputeRequest {
+    /// Registry name ([`crate::serve::PanelRegistry`]); requests with the
+    /// same name share one in-memory panel.
+    pub panel: String,
+    /// Compute plane to run.
+    pub engine: EngineSpec,
+    /// Target haplotypes to impute (`-1` = untyped marker).
+    pub targets: Vec<TargetHaplotype>,
+}
+
+/// How the coalescer merges concurrent requests.
+#[derive(Clone, Copy, Debug)]
+pub struct CoalescePolicy {
+    /// Max total targets per coalesced engine batch.  `1` disables
+    /// coalescing (every request runs alone).  A single request larger than
+    /// the budget is never split — it runs as its own group.
+    pub max_batch_targets: usize,
+    /// How long a popped group may wait for more same-key requests while
+    /// under budget.  Zero means "merge only what is already queued".
+    pub max_linger: Duration,
+}
+
+impl Default for CoalescePolicy {
+    fn default() -> Self {
+        CoalescePolicy {
+            max_batch_targets: 16,
+            max_linger: Duration::from_millis(2),
+        }
+    }
+}
+
+impl CoalescePolicy {
+    /// A policy that never merges requests.
+    pub fn off() -> CoalescePolicy {
+        CoalescePolicy {
+            max_batch_targets: 1,
+            max_linger: Duration::ZERO,
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.max_batch_targets <= 1
+    }
+}
+
+/// A request admitted to the queue, waiting for a worker.
+pub(crate) struct Pending {
+    pub id: u64,
+    pub req: ImputeRequest,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Result<ServeReport, String>>,
+}
+
+/// Handle returned by `Service::submit`: redeem it for the request's report.
+pub struct Ticket {
+    pub(crate) id: u64,
+    pub(crate) rx: mpsc::Receiver<Result<ServeReport, String>>,
+}
+
+impl Ticket {
+    /// The service-assigned request id (matches the report's
+    /// `serve.request_id`).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request is served (or failed).
+    pub fn wait(self) -> Result<ServeReport, String> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err("service dropped the request (worker exited)".into()))
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.  A
+    /// dead worker (sender dropped without a reply) yields the same error
+    /// as [`Ticket::wait`] rather than `None`, so pollers can't spin on a
+    /// request that will never complete.
+    pub fn try_wait(&self) -> Option<Result<ServeReport, String>> {
+        match self.rx.try_recv() {
+            Ok(result) => Some(result),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err("service dropped the request (worker exited)".into()))
+            }
+        }
+    }
+}
+
+/// Aggregate service counters (snapshot via `Service::stats`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    /// Requests admitted to the queue.
+    pub accepted: u64,
+    /// Requests refused at submit time (queue full / invalid / shutdown).
+    pub rejected: u64,
+    /// Requests answered successfully.
+    pub completed: u64,
+    /// Requests answered with an error.
+    pub failed: u64,
+    /// Coalesced engine batches run.
+    pub batches: u64,
+    /// Sum of batch widths (requests) over all batches.
+    pub coalesced_requests: u64,
+}
+
+impl ServiceStats {
+    /// Mean requests per coalesced batch (1.0 = coalescing never merged).
+    pub fn mean_batch_width(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.coalesced_requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Mutex-guarded queue state shared by submitters and workers.
+#[derive(Default)]
+pub(crate) struct QueueState {
+    pub pending: VecDeque<Pending>,
+    pub shutdown: bool,
+    pub next_batch_id: u64,
+    pub stats: ServiceStats,
+}
+
+impl QueueState {
+    /// Pull every queued request matching `key` into `group`, respecting the
+    /// remaining target budget.  Returns the updated total target count.
+    pub fn drain_matching(
+        &mut self,
+        key: (&str, EngineSpec),
+        group: &mut Vec<Pending>,
+        mut total_targets: usize,
+        max_batch_targets: usize,
+    ) -> usize {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if total_targets >= max_batch_targets {
+                break;
+            }
+            let p = &self.pending[i];
+            let fits = p.req.panel == key.0
+                && p.req.engine == key.1
+                && total_targets + p.req.targets.len() <= max_batch_targets;
+            if fits {
+                let p = self.pending.remove(i).expect("index checked above");
+                total_targets += p.req.targets.len();
+                group.push(p);
+            } else {
+                i += 1;
+            }
+        }
+        total_targets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(id: u64, panel: &str, spec: EngineSpec, n_targets: usize) -> Pending {
+        // These queue-shape tests never redeem tickets, so the receiver side
+        // is dropped immediately.
+        let (tx, _rx) = mpsc::channel();
+        Pending {
+            id,
+            req: ImputeRequest {
+                panel: panel.to_string(),
+                engine: spec,
+                targets: vec![TargetHaplotype::new(vec![-1, 0, 1]); n_targets],
+            },
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn drain_matching_respects_key_and_budget() {
+        let mut st = QueueState::default();
+        st.pending.push_back(pending(1, "a", EngineSpec::Event, 2));
+        st.pending.push_back(pending(2, "b", EngineSpec::Event, 1));
+        st.pending.push_back(pending(3, "a", EngineSpec::Rank1, 1));
+        st.pending.push_back(pending(4, "a", EngineSpec::Event, 3));
+        st.pending.push_back(pending(5, "a", EngineSpec::Event, 1));
+
+        let mut group = Vec::new();
+        // Budget 4, 1 target already in hand: takes #1 (2), skips #4 (would
+        // overflow), takes #5 (1).
+        let total = st.drain_matching(("a", EngineSpec::Event), &mut group, 1, 4);
+        assert_eq!(total, 4);
+        assert_eq!(
+            group.iter().map(|p| p.id).collect::<Vec<_>>(),
+            vec![1, 5]
+        );
+        // Non-matching and oversized requests stay queued, order preserved.
+        assert_eq!(
+            st.pending.iter().map(|p| p.id).collect::<Vec<_>>(),
+            vec![2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn coalesce_policy_off_disables_merging() {
+        assert!(CoalescePolicy::off().is_off());
+        assert!(!CoalescePolicy::default().is_off());
+        let mut st = QueueState::default();
+        st.pending.push_back(pending(1, "a", EngineSpec::Event, 1));
+        let mut group = Vec::new();
+        let total = st.drain_matching(("a", EngineSpec::Event), &mut group, 1, 1);
+        assert_eq!(total, 1);
+        assert!(group.is_empty(), "budget 1 means the head runs alone");
+    }
+
+    #[test]
+    fn stats_mean_width() {
+        let mut s = ServiceStats::default();
+        assert_eq!(s.mean_batch_width(), 0.0);
+        s.batches = 4;
+        s.coalesced_requests = 10;
+        assert!((s.mean_batch_width() - 2.5).abs() < 1e-12);
+    }
+}

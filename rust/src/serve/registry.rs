@@ -1,0 +1,346 @@
+//! The panel registry: named reference panels loaded once, cached behind
+//! `Arc`, and handed out as shared [`Workload`]s.
+//!
+//! Panels are the heavy shared state of a multi-tenant imputation service —
+//! a genuine panel is hundreds of MiB, so every concurrent request against
+//! the same panel must share one in-memory copy.  The registry owns that
+//! copy: [`PanelRegistry::resolve`] returns an `Arc`-shared
+//! [`RegisteredPanel`], and [`RegisteredPanel::workload`] assembles a request
+//! workload around the shared handle without copying panel data
+//! ([`Workload::from_shared`]).
+//!
+//! Two ways for a panel to enter the registry:
+//!
+//! * **Explicit registration** ([`PanelRegistry::register`]) — the embedding
+//!   application loads a cohort panel and names it.
+//! * **Synthetic specs** — a panel name of the form
+//!   `synth:hap=H,mark=M[,maf=F][,annot=R][,seed=S]` is generated on first
+//!   use with the paper's §6.2 recipe and cached under that exact string.
+//!   This keeps the `serve`/`bench-serve` CLI self-contained (no panel files
+//!   in the offline environment) and makes request lines reproducible.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::model::panel::{ReferencePanel, TargetHaplotype};
+use crate::session::Workload;
+use crate::util::rng::Rng;
+use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+/// A panel held by the registry: the shared data plus (when synthetic) the
+/// generation recipe, which lets the serve CLI mint matching targets and the
+/// per-request report record provenance.
+#[derive(Debug)]
+pub struct RegisteredPanel {
+    name: String,
+    panel: Arc<ReferencePanel>,
+    recipe: Option<PanelConfig>,
+}
+
+impl RegisteredPanel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn panel(&self) -> &ReferencePanel {
+        &self.panel
+    }
+
+    /// Shared handle to the panel data (cheap clone).
+    pub fn panel_arc(&self) -> Arc<ReferencePanel> {
+        Arc::clone(&self.panel)
+    }
+
+    /// Generation recipe, when the panel is synthetic.
+    pub fn recipe(&self) -> Option<&PanelConfig> {
+        self.recipe.as_ref()
+    }
+
+    /// Assemble a request workload around the shared panel (no panel copy).
+    pub fn workload(&self, targets: Vec<TargetHaplotype>) -> Result<Workload, String> {
+        Workload::from_shared(self.panel_arc(), targets)
+    }
+
+    /// Mint `count` masked targets from the panel's own recipe (synthetic
+    /// panels only) — how serve clients without real cohort data, the CI
+    /// smoke test and the load generator obtain valid request payloads.
+    /// Distinct `seed`s give disjoint target sets.  Like the spec parser,
+    /// this caps the total allocation (`count * n_mark`) because the count
+    /// arrives from untrusted request lines.
+    pub fn synthetic_targets(
+        &self,
+        count: usize,
+        seed: u64,
+    ) -> Result<Vec<TargetHaplotype>, String> {
+        let recipe = self
+            .recipe
+            .ok_or_else(|| format!("panel {:?} has no synthetic recipe", self.name))?;
+        if count.saturating_mul(self.panel.n_mark()) > MAX_SYNTH_STATES {
+            return Err(format!(
+                "{count} synthetic targets x {} markers exceeds the service cap \
+                 of {MAX_SYNTH_STATES} observations",
+                self.panel.n_mark()
+            ));
+        }
+        let mut rng = Rng::new(seed ^ recipe.seed.rotate_left(17) ^ 0x5EED_7A26);
+        Ok(generate_targets(&self.panel, &recipe, count, &mut rng)
+            .into_iter()
+            .map(|case| case.masked)
+            .collect())
+    }
+}
+
+/// Thread-safe name → panel cache.  `resolve` is what the serve workers call
+/// on every coalesced batch; hits are one mutex lock + one `Arc` clone.
+#[derive(Default)]
+pub struct PanelRegistry {
+    panels: Mutex<HashMap<String, Arc<RegisteredPanel>>>,
+}
+
+impl PanelRegistry {
+    pub fn new() -> PanelRegistry {
+        PanelRegistry::default()
+    }
+
+    /// Register a pre-loaded panel under `name` (replacing any previous
+    /// holder of the name).  Returns the shared handle.
+    pub fn register(&self, name: &str, panel: ReferencePanel) -> Arc<RegisteredPanel> {
+        self.insert(RegisteredPanel {
+            name: name.to_string(),
+            panel: Arc::new(panel),
+            recipe: None,
+        })
+    }
+
+    /// Register a synthetic panel under `name`, generated from `cfg` now.
+    /// The recipe is retained so `synthetic_targets` works.
+    pub fn register_synthetic(&self, name: &str, cfg: &PanelConfig) -> Arc<RegisteredPanel> {
+        self.insert(RegisteredPanel {
+            name: name.to_string(),
+            panel: Arc::new(generate_panel(cfg)),
+            recipe: Some(*cfg),
+        })
+    }
+
+    fn insert(&self, panel: RegisteredPanel) -> Arc<RegisteredPanel> {
+        let shared = Arc::new(panel);
+        self.panels
+            .lock()
+            .expect("panel registry poisoned")
+            .insert(shared.name.clone(), Arc::clone(&shared));
+        shared
+    }
+
+    /// Look up `name`, generating and caching `synth:` specs on first use.
+    ///
+    /// The cache key is the exact spec string, so two spellings of the same
+    /// recipe (`synth:hap=8,mark=21` vs `synth:mark=21,hap=8`) cache
+    /// separately — canonicalise spellings client-side if that matters.
+    pub fn resolve(&self, name: &str) -> Result<Arc<RegisteredPanel>, String> {
+        let mut panels = self.panels.lock().expect("panel registry poisoned");
+        if let Some(p) = panels.get(name) {
+            return Ok(Arc::clone(p));
+        }
+        let Some(spec) = name.strip_prefix("synth:") else {
+            return Err(format!(
+                "unknown panel {name:?} (register it, or use a synth:hap=..,mark=.. spec)"
+            ));
+        };
+        // Generate while holding the lock: concurrent first requests for the
+        // same spec then build it exactly once (generation is fast relative
+        // to imputation; a successor can move to per-entry once-cells if a
+        // huge synthetic panel ever stalls the registry).
+        let cfg = parse_synth_spec(spec)?;
+        let shared = Arc::new(RegisteredPanel {
+            name: name.to_string(),
+            panel: Arc::new(generate_panel(&cfg)),
+            recipe: Some(cfg),
+        });
+        panels.insert(name.to_string(), Arc::clone(&shared));
+        Ok(shared)
+    }
+
+    /// Names currently cached (sorted, for `info`-style listings).
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .panels
+            .lock()
+            .expect("panel registry poisoned")
+            .keys()
+            .cloned()
+            .collect();
+        names.sort();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        self.panels.lock().expect("panel registry poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parse the body of a `synth:` panel name: comma-separated `key=value`
+/// pairs.  `hap` and `mark` are required; `maf`, `annot`, `seed` default to
+/// the paper's recipe (0.05, 0.1, 0).
+fn parse_synth_spec(spec: &str) -> Result<PanelConfig, String> {
+    let mut cfg = PanelConfig {
+        annot_ratio: 0.1,
+        ..PanelConfig::default()
+    };
+    let (mut saw_hap, mut saw_mark) = (false, false);
+    for field in spec.split(',') {
+        let field = field.trim();
+        if field.is_empty() {
+            continue;
+        }
+        let Some((key, value)) = field.split_once('=') else {
+            return Err(format!("synth spec field {field:?} is not key=value"));
+        };
+        fn parse_field<T: std::str::FromStr>(key: &str, value: &str) -> Result<T, String> {
+            value
+                .trim()
+                .parse()
+                .map_err(|_| format!("synth spec: cannot parse {key}={value:?}"))
+        }
+        match key.trim() {
+            "hap" => {
+                cfg.n_hap = parse_field(key, value)?;
+                saw_hap = true;
+            }
+            "mark" => {
+                cfg.n_mark = parse_field(key, value)?;
+                saw_mark = true;
+            }
+            "maf" => cfg.maf = parse_field(key, value)?,
+            "annot" => cfg.annot_ratio = parse_field(key, value)?,
+            "seed" => cfg.seed = parse_field(key, value)?,
+            other => {
+                return Err(format!(
+                    "synth spec: unknown key {other:?} (expected hap|mark|maf|annot|seed)"
+                ));
+            }
+        }
+    }
+    if !saw_hap || !saw_mark {
+        return Err("synth spec needs at least hap=.. and mark=..".into());
+    }
+    // Specs arrive from untrusted request lines: every range that would
+    // trip an assert (and panic the service) deeper in panelgen must be
+    // rejected here with a recoverable error instead.
+    if cfg.n_hap < 2 || cfg.n_mark < 2 {
+        return Err("synth spec: hap and mark must be >= 2".into());
+    }
+    if cfg.n_hap.saturating_mul(cfg.n_mark) > MAX_SYNTH_STATES {
+        return Err(format!(
+            "synth spec: hap*mark = {} exceeds the service cap of {MAX_SYNTH_STATES} states",
+            cfg.n_hap.saturating_mul(cfg.n_mark)
+        ));
+    }
+    if !(cfg.maf > 0.0 && cfg.maf <= 0.5) {
+        return Err("synth spec: maf must be in (0, 0.5]".into());
+    }
+    if !(cfg.annot_ratio > 0.0 && cfg.annot_ratio <= 1.0) {
+        return Err("synth spec: annot must be in (0, 1]".into());
+    }
+    Ok(cfg)
+}
+
+/// Admission cap on `hap * mark` for request-line synth specs (and on
+/// `count * mark` for minted targets), so one request cannot make the
+/// registry allocate an absurd amount of memory.
+const MAX_SYNTH_STATES: usize = 1 << 24;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = "synth:hap=8,mark=21,annot=0.2,seed=7";
+
+    #[test]
+    fn synth_specs_resolve_and_cache() {
+        let reg = PanelRegistry::new();
+        let a = reg.resolve(SPEC).unwrap();
+        let b = reg.resolve(SPEC).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second resolve must hit the cache");
+        assert_eq!(a.panel().n_hap(), 8);
+        assert_eq!(a.panel().n_mark(), 21);
+        assert_eq!(a.recipe().unwrap().seed, 7);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.names(), vec![SPEC.to_string()]);
+    }
+
+    #[test]
+    fn unknown_and_malformed_names_are_errors() {
+        let reg = PanelRegistry::new();
+        assert!(reg.resolve("ukb-chr20").unwrap_err().contains("unknown panel"));
+        assert!(reg.resolve("synth:hap=8").unwrap_err().contains("mark"));
+        assert!(reg.resolve("synth:hap=8,mark=nope").is_err());
+        assert!(reg.resolve("synth:hap=8,mark=21,zap=1").is_err());
+        assert!(reg.resolve("synth:hap=1,mark=21").is_err());
+        assert!(reg.is_empty(), "failed resolves must not cache");
+    }
+
+    #[test]
+    fn out_of_range_specs_error_instead_of_panicking() {
+        // These values trip asserts deeper in panelgen; the registry must
+        // reject them as recoverable errors (requests are untrusted input).
+        let reg = PanelRegistry::new();
+        for bad in [
+            "synth:hap=8,mark=21,maf=0.9",
+            "synth:hap=8,mark=21,maf=0",
+            "synth:hap=8,mark=21,annot=0",
+            "synth:hap=8,mark=21,annot=2",
+            "synth:hap=99999,mark=99999",
+        ] {
+            let err = reg.resolve(bad).unwrap_err();
+            assert!(err.contains("synth spec"), "{bad}: {err}");
+        }
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn registered_panels_resolve_by_name() {
+        let reg = PanelRegistry::new();
+        let cfg = PanelConfig {
+            n_hap: 6,
+            n_mark: 11,
+            annot_ratio: 0.3,
+            seed: 3,
+            ..PanelConfig::default()
+        };
+        reg.register_synthetic("chip-a", &cfg);
+        let p = reg.resolve("chip-a").unwrap();
+        assert_eq!(p.panel().n_hap(), 6);
+        let targets = p.synthetic_targets(2, 99).unwrap();
+        assert_eq!(targets.len(), 2);
+        assert_eq!(targets[0].n_mark(), 11);
+        // Distinct seeds give distinct target sets.
+        let other = p.synthetic_targets(2, 100).unwrap();
+        assert_ne!(targets[0].obs, other[0].obs);
+        // Same seed is reproducible.
+        let again = p.synthetic_targets(2, 99).unwrap();
+        assert_eq!(targets[0].obs, again[0].obs);
+        // Absurd counts are admission errors, not multi-GB allocations.
+        let err = p.synthetic_targets(usize::MAX / 2, 0).unwrap_err();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn explicit_panels_have_no_recipe() {
+        let reg = PanelRegistry::new();
+        let cfg = PanelConfig {
+            n_hap: 4,
+            n_mark: 9,
+            seed: 1,
+            ..PanelConfig::default()
+        };
+        let p = reg.register("cohort", generate_panel(&cfg));
+        assert!(p.recipe().is_none());
+        assert!(p.synthetic_targets(1, 0).unwrap_err().contains("recipe"));
+        let wl = p.workload(Vec::new()).unwrap();
+        assert_eq!(wl.n_targets(), 0);
+    }
+}

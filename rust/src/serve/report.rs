@@ -1,0 +1,145 @@
+//! The per-request result of a served imputation: the session's
+//! [`ImputeReport`] manifest plus the service-side observability fields,
+//! serialised as schema **`poets-impute/serve-report/v1`**.
+//!
+//! ## Schema (`poets-impute/serve-report/v1`)
+//!
+//! The JSON document is the `poets-impute/impute-report/v1` manifest (see
+//! [`crate::session::report`]) with three changes:
+//!
+//! * `"schema"` is `"poets-impute/serve-report/v1"`;
+//! * a `"serve"` section carries the service-side fields:
+//!   - `request_id` — the service-assigned admission id,
+//!   - `panel` — the registry name the request resolved against,
+//!   - `batch_id` — which coalesced engine batch served this request,
+//!   - `coalesce_width` — how many requests shared that batch (1 = no
+//!     coalescing happened, whether disabled or just no concurrent traffic),
+//!   - `queue_wait_seconds` — admission → batch-start wait,
+//!   - `worker` — which pool worker ran the batch;
+//! * a `"dosages"` array (`dosages[target][marker]`) — unlike the archived
+//!   bench manifest, a service response must carry the actual answer.
+//!
+//! Everything else (`workload`, `run`, `timing`, optional `accuracy` /
+//! `sim_metrics` sections) is exactly the impute-report layout, so tooling
+//! that reads one schema reads both.
+
+use crate::session::ImputeReport;
+use crate::util::json::Json;
+
+/// Everything the service produced for one request.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Service-assigned admission id (monotonic per service).
+    pub request_id: u64,
+    /// Registry name of the panel the request ran against.
+    pub panel: String,
+    /// Coalesced engine batch that served this request.
+    pub batch_id: u64,
+    /// Requests sharing that batch (1 = ran alone).
+    pub coalesce_width: usize,
+    /// Seconds between admission and the batch starting to execute.
+    pub queue_wait_seconds: f64,
+    /// Pool worker index that ran the batch.
+    pub worker: usize,
+    /// The underlying per-request run manifest + dosages.
+    pub report: ImputeReport,
+}
+
+impl ServeReport {
+    /// The response document (schema `poets-impute/serve-report/v1`).
+    pub fn to_json(&self) -> Json {
+        let mut j = self.report.to_json();
+        j.set("schema", "poets-impute/serve-report/v1");
+
+        let mut serve = Json::obj();
+        serve
+            .set("request_id", self.request_id)
+            .set("panel", self.panel.as_str())
+            .set("batch_id", self.batch_id)
+            .set("coalesce_width", self.coalesce_width)
+            .set("queue_wait_seconds", self.queue_wait_seconds)
+            .set("worker", self.worker);
+        j.set("serve", serve);
+
+        let dosages: Vec<Json> = self
+            .report
+            .dosages
+            .iter()
+            .map(|row| Json::Arr(row.iter().map(|&d| Json::Num(d as f64)).collect()))
+            .collect();
+        j.set("dosages", Json::Arr(dosages));
+        j
+    }
+
+    /// `dosages[target][marker]` for this request, in submission order.
+    pub fn dosages(&self) -> &[Vec<f32>] {
+        &self.report.dosages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::mapping::MappingStrategy;
+    use crate::session::EngineSpec;
+
+    fn report() -> ServeReport {
+        ServeReport {
+            request_id: 7,
+            panel: "synth:hap=8,mark=3".into(),
+            batch_id: 2,
+            coalesce_width: 3,
+            queue_wait_seconds: 0.004,
+            worker: 1,
+            report: ImputeReport {
+                engine: EngineSpec::Rank1,
+                n_hap: 8,
+                n_mark: 3,
+                n_targets: 2,
+                provenance: None,
+                batch_size: 2,
+                n_batches: 1,
+                boards: 2,
+                states_per_thread: 8,
+                threads: 1,
+                mapping: MappingStrategy::Manual2d,
+                dosages: vec![vec![0.5, 0.25, 1.0], vec![0.0, 0.75, 0.5]],
+                accuracy: None,
+                host_seconds: 0.01,
+                sim_seconds: None,
+                metrics: None,
+            },
+        }
+    }
+
+    #[test]
+    fn schema_overrides_impute_report() {
+        let j = report().to_json();
+        assert_eq!(
+            j.get("schema"),
+            Some(&Json::Str("poets-impute/serve-report/v1".into()))
+        );
+        // The impute-report sections survive untouched.
+        for key in ["engine", "workload", "run", "timing"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn serve_section_and_dosages_present() {
+        let j = report().to_json();
+        let s = j.get("serve").unwrap();
+        assert_eq!(s.get("request_id").unwrap().as_i64(), Some(7));
+        assert_eq!(s.get("batch_id").unwrap().as_i64(), Some(2));
+        assert_eq!(s.get("coalesce_width").unwrap().as_i64(), Some(3));
+        assert_eq!(s.get("worker").unwrap().as_i64(), Some(1));
+        assert!(s.get("queue_wait_seconds").unwrap().as_f64().unwrap() > 0.0);
+        let d = j.get("dosages").unwrap().as_arr().unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].as_arr().unwrap().len(), 3);
+        // Round-trips through the parser (what the CLI client sees).
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back.get("serve").unwrap().get("panel").unwrap().as_str(),
+                   Some("synth:hap=8,mark=3"));
+    }
+}

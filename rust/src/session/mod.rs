@@ -141,8 +141,11 @@ impl ImputeSession {
     }
 
     /// Targets per engine batch (default: all targets in one batch).
+    ///
+    /// A size larger than the target count clamps to it; `0` is rejected by
+    /// [`ImputeSession::run`] as an error (not a panic — batch sizes often
+    /// arrive from flags and requests, i.e. untrusted input).
     pub fn batch(mut self, batch_size: usize) -> Self {
-        assert!(batch_size >= 1, "batch size must be >= 1");
         self.batch = Some(batch_size);
         self
     }
@@ -154,7 +157,16 @@ impl ImputeSession {
         if n_targets == 0 {
             return Err("workload has no targets".into());
         }
-        let batch_size = self.batch.unwrap_or(n_targets).min(n_targets);
+        let batch_size = match self.batch {
+            Some(0) => {
+                return Err(
+                    "batch size 0 (must be >= 1; omit .batch() to run all targets at once)"
+                        .into(),
+                );
+            }
+            Some(n) => n.min(n_targets),
+            None => n_targets,
+        };
         let mut engine = build_engine(self.spec, &self.app, self.mapping);
 
         engine.prepare(&self.workload)?;
@@ -293,6 +305,16 @@ mod tests {
             .unwrap();
         assert_eq!(report.batch_size, 2);
         assert_eq!(report.n_batches, 1);
+    }
+
+    #[test]
+    fn zero_batch_is_an_error_not_a_panic() {
+        let err = ImputeSession::new(wl(2))
+            .engine(EngineSpec::Baseline)
+            .batch(0)
+            .run()
+            .unwrap_err();
+        assert!(err.contains("batch size 0"), "{err}");
     }
 
     #[test]

@@ -2,6 +2,13 @@
 //! run: dosages, accuracy, host/simulated timings, DES counters and the run
 //! manifest emitted as the `BENCH_*.json`-style JSON schema
 //! (`poets-impute/impute-report/v1`).
+//!
+//! The serving layer derives its per-request response schema
+//! (`poets-impute/serve-report/v1`) from this manifest: same `workload` /
+//! `run` / `timing` (/ `accuracy` / `sim_metrics`) sections, plus a `serve`
+//! section (queue wait, coalesce width, batch id, worker) and the dosages —
+//! see [`crate::serve::report`] for the delta.  Tooling that reads one
+//! schema reads both.
 
 use crate::graph::mapping::MappingStrategy;
 use crate::model::accuracy::Accuracy;

@@ -78,6 +78,33 @@ impl Workload {
         }
     }
 
+    /// Wrap an already-shared panel handle + target set with no withheld
+    /// truth — the serve path: [`crate::serve::PanelRegistry`] hands out one
+    /// `Arc` per panel and every request's workload shares it, so neither
+    /// workload assembly nor engine binding ever copies panel data.  Unlike
+    /// [`Workload::from_parts`] a shape mismatch is a recoverable error, not
+    /// a panic (requests are untrusted input).
+    pub fn from_shared(
+        panel: Arc<ReferencePanel>,
+        targets: Vec<TargetHaplotype>,
+    ) -> Result<Workload, String> {
+        for (i, t) in targets.iter().enumerate() {
+            if t.n_mark() != panel.n_mark() {
+                return Err(format!(
+                    "target {i} has {} markers, panel has {}",
+                    t.n_mark(),
+                    panel.n_mark()
+                ));
+            }
+        }
+        Ok(Workload {
+            panel,
+            targets,
+            truth: None,
+            provenance: None,
+        })
+    }
+
     pub fn panel(&self) -> &ReferencePanel {
         &self.panel
     }
@@ -220,5 +247,22 @@ mod tests {
         let wl = Workload::synthetic(&cfg(), 1);
         let bad = TargetHaplotype::new(vec![-1; 7]);
         Workload::from_parts(wl.panel().clone(), vec![bad]);
+    }
+
+    #[test]
+    fn from_shared_shares_the_panel_arc() {
+        let wl = Workload::synthetic(&cfg(), 2);
+        let arc = wl.panel_arc();
+        let shared = Workload::from_shared(Arc::clone(&arc), wl.targets().to_vec()).unwrap();
+        assert!(Arc::ptr_eq(&arc, &shared.panel_arc()));
+        assert!(shared.truth().is_none());
+    }
+
+    #[test]
+    fn from_shared_rejects_ragged_targets_without_panicking() {
+        let wl = Workload::synthetic(&cfg(), 1);
+        let bad = TargetHaplotype::new(vec![-1; 7]);
+        let err = Workload::from_shared(wl.panel_arc(), vec![bad]).unwrap_err();
+        assert!(err.contains("7 markers"), "{err}");
     }
 }

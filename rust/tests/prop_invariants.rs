@@ -227,3 +227,74 @@ fn prop_sim_metrics_consistent() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_mapping_strategies_valid_and_shuffled_is_a_permutation() {
+    use poets_impute::graph::mapping::MappingStrategy;
+    forall("mapping strategies valid; shuffled permutes manual-2d", 15, |rng| {
+        let (panel, cases) = random_problem(rng, 9, 24, 2);
+        let targets: Vec<_> = cases.iter().map(|c| c.masked.clone()).collect();
+        let g = build_raw_graph(&panel, &targets, &Default::default());
+        let n = g.n_vertices();
+        let cluster = ClusterConfig::with_boards(rng.range(1, 5));
+        // Keep the graph mappable at this soft-scheduling factor.
+        let spt = rng.range(1, 9).max(n.div_ceil(cluster.total_threads()));
+        let seed = rng.next_u64();
+
+        // Every strategy must yield a complete, in-range thread assignment.
+        let strategies = [
+            MappingStrategy::Manual2d,
+            MappingStrategy::Partitioned,
+            MappingStrategy::Shuffled { seed },
+        ];
+        for strategy in strategies {
+            let m = strategy.build(&g, spt, &cluster);
+            if m.n_vertices() != n {
+                return Err(format!("{}: vertex count", strategy.name()));
+            }
+            if m.n_threads_used() == 0 || m.n_threads_used() > cluster.total_threads() {
+                return Err(format!(
+                    "{}: {} threads used",
+                    strategy.name(),
+                    m.n_threads_used()
+                ));
+            }
+            for v in 0..n {
+                let t = m.thread_of(v as u32).0 as usize;
+                if t >= cluster.total_threads() {
+                    return Err(format!(
+                        "{}: vertex {v} on out-of-range thread {t}",
+                        strategy.name()
+                    ));
+                }
+            }
+        }
+
+        // Shuffled is the manual packing randomly permuted: same thread
+        // multiset (so same device set and identical load shape), just
+        // scattered — and deterministic under a fixed seed.
+        let manual = MappingStrategy::Manual2d.build(&g, spt, &cluster);
+        let shuffled = MappingStrategy::Shuffled { seed }.build(&g, spt, &cluster);
+        let sorted_ids = |m: &Mapping| {
+            let mut ids: Vec<u32> = (0..n).map(|v| m.thread_of(v as u32).0).collect();
+            ids.sort_unstable();
+            ids
+        };
+        if sorted_ids(&manual) != sorted_ids(&shuffled) {
+            return Err("shuffled is not a permutation of manual-2d".into());
+        }
+        if manual.max_load() != shuffled.max_load()
+            || manual.n_threads_used() != shuffled.n_threads_used()
+        {
+            return Err("permutation changed the load shape".into());
+        }
+        let again = MappingStrategy::Shuffled { seed }.build(&g, spt, &cluster);
+        let assignment = |m: &Mapping| -> Vec<u32> {
+            (0..n).map(|v| m.thread_of(v as u32).0).collect()
+        };
+        if assignment(&shuffled) != assignment(&again) {
+            return Err("shuffled mapping is not deterministic under a fixed seed".into());
+        }
+        Ok(())
+    });
+}

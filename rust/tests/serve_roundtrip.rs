@@ -1,0 +1,218 @@
+//! Integration: the serve acceptance test.
+//!
+//! N concurrent clients submit disjoint target sets through
+//! `serve::Service`; every client's dosages must be **bit-identical** to a
+//! direct single-request `ImputeSession` run with the same engine
+//! configuration, for every `EngineSpec` (the XLA plane may be absent in
+//! offline builds — then both paths must agree it is unavailable), with
+//! coalescing both on and off.  Plus: the `bench-serve` CLI must emit a
+//! `BENCH_serve.json` throughput baseline covering >= 2 worker-pool sizes.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use poets_impute::serve::{
+    CoalescePolicy, ImputeRequest, PanelRegistry, ServeConfig, Service,
+};
+use poets_impute::session::{EngineSpec, ImputeSession, Workload};
+use poets_impute::util::json::Json;
+
+const PANEL: &str = "synth:hap=8,mark=41,annot=0.1,seed=2024";
+const N_CLIENTS: usize = 3;
+
+fn serve_config(coalesce: bool) -> ServeConfig {
+    let base = ServeConfig::default()
+        .workers(3)
+        .boards(2)
+        .states_per_thread(8);
+    if coalesce {
+        base.coalesce(CoalescePolicy {
+            max_batch_targets: 64,
+            max_linger: Duration::from_millis(25),
+        })
+    } else {
+        base.no_coalesce()
+    }
+}
+
+#[test]
+fn concurrent_clients_match_direct_sessions_bit_exactly() {
+    for spec in EngineSpec::ALL {
+        for coalesce in [false, true] {
+            let registry = Arc::new(PanelRegistry::new());
+            let panel = registry.resolve(PANEL).unwrap();
+            // Disjoint per-client target sets (distinct seeds).
+            let per_client: Vec<_> = (0..N_CLIENTS)
+                .map(|c| panel.synthetic_targets(2, 100 + c as u64).unwrap())
+                .collect();
+            let cfg = serve_config(coalesce);
+            let app = cfg.app.clone();
+            let mapping = cfg.mapping;
+            let service = Service::start(Arc::clone(&registry), cfg);
+
+            let served: Vec<Result<_, String>> = thread::scope(|s| {
+                let handles: Vec<_> = per_client
+                    .iter()
+                    .map(|targets| {
+                        let service = &service;
+                        let targets = targets.clone();
+                        s.spawn(move || {
+                            service.submit_wait(ImputeRequest {
+                                panel: PANEL.into(),
+                                engine: spec,
+                                targets,
+                            })
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+            for (c, result) in served.iter().enumerate() {
+                let direct = ImputeSession::new(
+                    Workload::from_shared(panel.panel_arc(), per_client[c].clone()).unwrap(),
+                )
+                .engine(spec)
+                .app_config(app.clone())
+                .mapping(mapping)
+                .run();
+                match (result, direct) {
+                    (Ok(report), Ok(direct)) => {
+                        assert_eq!(
+                            report.dosages(),
+                            &direct.dosages[..],
+                            "{spec:?} coalesce={coalesce} client {c}: served dosages \
+                             are not bit-identical to the direct session run"
+                        );
+                        assert_eq!(report.report.n_targets, 2);
+                        assert!(report.coalesce_width >= 1);
+                        if !coalesce {
+                            assert_eq!(
+                                report.coalesce_width, 1,
+                                "coalescing off must never merge requests"
+                            );
+                        }
+                    }
+                    // Offline builds have no XLA runtime: both paths must
+                    // agree the plane is unavailable.
+                    (Err(se), Err(de)) if spec == EngineSpec::Xla => {
+                        assert!(!se.is_empty() && !de.is_empty());
+                    }
+                    (r, d) => panic!(
+                        "{spec:?} coalesce={coalesce} client {c}: serve and direct \
+                         disagree on availability: served {r:?} vs direct {d:?}"
+                    ),
+                }
+            }
+            let stats = service.shutdown();
+            assert_eq!(stats.accepted, N_CLIENTS as u64);
+            assert_eq!(stats.completed + stats.failed, N_CLIENTS as u64);
+        }
+    }
+}
+
+#[test]
+fn coalesced_burst_actually_merges_and_still_matches() {
+    // Beyond bit-equality: under a single worker and a generous linger a
+    // same-panel burst must actually share engine batches (width > 1), and
+    // the answers must still be per-request exact.
+    let registry = Arc::new(PanelRegistry::new());
+    let panel = registry.resolve(PANEL).unwrap();
+    let cfg = ServeConfig::default()
+        .workers(1)
+        .boards(2)
+        .states_per_thread(8)
+        .coalesce(CoalescePolicy {
+            max_batch_targets: 64,
+            max_linger: Duration::from_millis(200),
+        });
+    let app = cfg.app.clone();
+    let mapping = cfg.mapping;
+    let service = Service::start(Arc::clone(&registry), cfg);
+
+    let tickets: Vec<_> = (0..4)
+        .map(|c| {
+            service
+                .submit(ImputeRequest {
+                    panel: PANEL.into(),
+                    engine: EngineSpec::Rank1,
+                    targets: panel.synthetic_targets(1, 500 + c).unwrap(),
+                })
+                .unwrap()
+        })
+        .collect();
+    let reports: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    let max_width = reports.iter().map(|r| r.coalesce_width).max().unwrap();
+    assert!(max_width >= 2, "burst should coalesce (got width {max_width})");
+
+    for (c, report) in reports.iter().enumerate() {
+        let direct = ImputeSession::new(
+            Workload::from_shared(
+                panel.panel_arc(),
+                panel.synthetic_targets(1, 500 + c as u64).unwrap(),
+            )
+            .unwrap(),
+        )
+        .engine(EngineSpec::Rank1)
+        .app_config(app.clone())
+        .mapping(mapping)
+        .run()
+        .unwrap();
+        assert_eq!(report.dosages(), &direct.dosages[..], "client {c}");
+    }
+    service.shutdown();
+}
+
+#[test]
+fn bench_serve_cli_emits_throughput_baseline() {
+    let argv: Vec<String> = [
+        "bench-serve",
+        "--clients",
+        "1,2",
+        "--workers",
+        "1,2",
+        "--requests",
+        "2",
+        "--targets-per-request",
+        "1",
+        "--hap",
+        "8",
+        "--mark",
+        "21",
+        "--annot-ratio",
+        "0.2",
+        "--engine",
+        "rank1",
+        "--linger-ms",
+        "1",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(poets_impute::cli::run(argv), 0);
+
+    let text = std::fs::read_to_string("BENCH_serve.json").unwrap();
+    let _ = std::fs::remove_file("BENCH_serve.json");
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(
+        j.get("schema").unwrap().as_str(),
+        Some("poets-impute/bench-serve/v1")
+    );
+    let rows = j.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 8, "workers x clients x coalesce on/off");
+    let workers: std::collections::BTreeSet<i64> = rows
+        .iter()
+        .map(|r| r.get("workers").unwrap().as_i64().unwrap())
+        .collect();
+    assert!(
+        workers.len() >= 2,
+        "baseline must cover >= 2 worker counts, got {workers:?}"
+    );
+    for r in rows {
+        assert!(r.get("requests_per_s").unwrap().as_f64().unwrap() > 0.0);
+        for key in ["p50_ms", "p99_ms", "mean_batch_width"] {
+            assert!(r.get(key).unwrap().as_f64().is_some(), "row missing {key}");
+        }
+    }
+}
