@@ -5,6 +5,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::bench::{self, FigOpts, X86Cost};
+use crate::genomics::packed::PackedPanel;
+use crate::genomics::window::{WindowPlan, run_windowed};
+use crate::genomics::vcf::{self, VcfOptions};
 use crate::model::baseline::{Baseline, Method};
 use crate::model::interpolation::impute_interp;
 use crate::poets::topology::ClusterConfig;
@@ -27,8 +30,18 @@ USAGE:
   poets-impute <COMMAND> [FLAGS]
 
 COMMANDS:
-  impute       run one engine on a synthetic workload and score accuracy
-               --hap N --mark N --targets N --seed S --annot-ratio R
+  impute       run one engine on a workload and score accuracy
+               --hap N --mark N --maf F (synthetic panel shape; ignored
+               when --panel is given) --targets N --annot-ratio R
+               --seed S (panel generation and target-minting seed)
+               --panel SPEC (real panels: vcf:<path>, packed:<path>, a
+               bare .vcf/.ppnl path, or a synth: spec — targets are
+               minted as Li & Stephens mosaics of the panel, masked to
+               the --annot-ratio grid, truth retained for accuracy
+               scoring; --seed picks the mosaic draw)
+               --window W --overlap V (slice the marker axis into
+               overlapping W-marker windows, impute each, stitch dosages
+               at overlap midpoints; 0 = unwindowed)
                --engine baseline|rank1|event|interp|xla (EngineSpec;
                interp is the event-driven linear-interpolation plane —
                the old spelling event-interp still parses, with a
@@ -40,6 +53,14 @@ COMMANDS:
                results are thread-count invariant)
                [--json]  (emit the ImputeReport run manifest,
                schema poets-impute/impute-report/v1)
+  panel        real-panel tooling (rust/src/genomics/):
+               panel ingest <in.vcf> [out.ppnl]  parse a phased bi-allelic
+                 VCF and write the bit-packed .ppnl panel (1 bit/allele,
+                 checksummed; site metadata retained)
+                 [--morgans-per-bp R]  physical->genetic rate (default 1e-8)
+               panel info <spec|path>  shape, memory and site summary of
+                 any panel spec (vcf:/packed:/synth:; bare .vcf and .ppnl
+                 paths are recognised)
   validate     run ALL engines on one workload and report per-engine
                max |Δdosage| against each engine's oracle
                --hap N --mark N --targets N --seed S
@@ -49,7 +70,9 @@ COMMANDS:
                success, serve-error/v1 in-band on failure).  Request:
                {\"id\":1, \"panel\":\"synth:hap=8,mark=21,annot=0.2,seed=7\",
                 \"engine\":\"event\", \"synth_targets\":2, \"target_seed\":9}
-               (or \"targets\":[[-1,0,1,..],..] for explicit observations)
+               (or \"targets\":[[-1,0,1,..],..] for explicit observations;
+               \"panel\" also accepts vcf:<path> / packed:<path> — a
+               missing or corrupt file fails that request in-band)
                --workers N (pool threads, default 2)
                --max-batch T (coalescer target budget; 1 = no coalescing)
                --linger-ms L (coalescer wait for batch-mates, default 2)
@@ -87,30 +110,177 @@ fn panel_cfg(args: &Args) -> Result<PanelConfig, String> {
 
 pub fn cmd_impute(args: &Args) -> Result<i32, String> {
     let cfg = panel_cfg(args)?;
+    let panel_spec = args.get_str("panel", "");
     let n_targets = args.get("targets", 4usize)?;
     let engine: EngineSpec = args.get_str("engine", "event").parse()?;
     let boards = args.get("boards", 4usize)?;
     let spt = args.get("spt", 8usize)?;
     let threads = args.get("threads", 1usize)?;
     let batch = args.get("batch", 0usize)?;
+    let window = args.get("window", 0usize)?;
+    let overlap = args.get("overlap", 0usize)?;
     let as_json = args.has("json");
     args.reject_unknown()?;
 
-    let mut session = ImputeSession::new(Workload::synthetic(&cfg, n_targets))
-        .engine(engine)
-        .boards(boards)
-        .states_per_thread(spt)
-        .threads(threads);
-    if batch > 0 {
-        session = session.batch(batch);
+    let workload = if panel_spec.is_empty() {
+        Workload::synthetic(&cfg, n_targets)
+    } else {
+        // A named panel source: resolve it, then mint mosaic targets from
+        // the panel itself (truth retained, so accuracy is still scored).
+        // The CLI is a trusted caller — no serve-style size caps, so
+        // chromosome-scale panels load (that is what --window is for).
+        let registry = PanelRegistry::unbounded();
+        let panel = registry.resolve(&normalize_panel_spec(&panel_spec))?;
+        let cases = panel.mosaic_targets(n_targets, cfg.annot_ratio, cfg.seed)?;
+        Workload::from_shared_cases(panel.panel_arc(), cases)?
+    };
+
+    let configure = |mut session: ImputeSession| {
+        session = session
+            .engine(engine)
+            .boards(boards)
+            .states_per_thread(spt)
+            .threads(threads);
+        if batch > 0 {
+            session = session.batch(batch);
+        }
+        session
+    };
+    let mut report = if window > 0 {
+        let plan = WindowPlan::new(workload.panel().n_mark(), window, overlap)?;
+        run_windowed(&workload, &plan, configure)?
+    } else {
+        configure(ImputeSession::new(workload)).run()?
+    };
+    if !panel_spec.is_empty() {
+        report.panel = Some(panel_spec);
     }
-    let report = session.run()?;
 
     if as_json {
         println!("{}", report.to_json().pretty());
     } else {
         println!("{}", report.render());
     }
+    Ok(0)
+}
+
+/// `panel ingest <in.vcf> [out.ppnl]` / `panel info <spec|path>`.
+pub fn cmd_panel(args: &Args) -> Result<i32, String> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("ingest") => cmd_panel_ingest(args),
+        Some("info") => cmd_panel_info(args),
+        other => Err(format!(
+            "panel needs a subcommand (ingest|info), got {other:?}\n{USAGE}"
+        )),
+    }
+}
+
+fn cmd_panel_ingest(args: &Args) -> Result<i32, String> {
+    let input = args
+        .positional
+        .get(2)
+        .cloned()
+        .ok_or_else(|| format!("panel ingest needs an input .vcf path\n{USAGE}"))?;
+    let output = match args.positional.get(3) {
+        Some(o) => o.clone(),
+        None => match input.strip_suffix(".vcf") {
+            Some(stem) => format!("{stem}.ppnl"),
+            None => format!("{input}.ppnl"),
+        },
+    };
+    let rate = args.get("morgans-per-bp", 1e-8f64)?;
+    args.reject_unknown()?;
+
+    let parsed = vcf::load_with(&input, &VcfOptions { morgans_per_bp: rate })?;
+    let packed = PackedPanel::from_vcf(&parsed);
+    packed.write(&output)?;
+    let raw_bytes = parsed.panel.n_hap() * parsed.panel.n_mark();
+    println!(
+        "ingested {input}: {} sites x {} haplotypes ({} samples), {}..{} on chromosome {}",
+        parsed.panel.n_mark(),
+        parsed.panel.n_hap(),
+        parsed.n_samples(),
+        parsed.sites[0].pos,
+        parsed.sites.last().expect(">= 2 sites").pos,
+        parsed.sites[0].chrom,
+    );
+    println!(
+        "wrote {output}: allele matrix {} B packed vs {} B unpacked ({:.1}x), \
+         {} B on disk",
+        packed.packed_allele_bytes(),
+        raw_bytes,
+        raw_bytes as f64 / packed.packed_allele_bytes() as f64,
+        packed.encode().len()
+    );
+    Ok(0)
+}
+
+/// Bare paths are sugar for their spec prefix: `x.vcf` → `vcf:x.vcf`,
+/// `x.ppnl` → `packed:x.ppnl` — applied consistently by `panel info` and
+/// `impute --panel` (serve request lines stay strict).
+fn normalize_panel_spec(arg: &str) -> String {
+    if arg.contains(':') {
+        arg.to_string()
+    } else if arg.ends_with(".vcf") {
+        format!("vcf:{arg}")
+    } else if arg.ends_with(".ppnl") {
+        format!("packed:{arg}")
+    } else {
+        arg.to_string()
+    }
+}
+
+fn cmd_panel_info(args: &Args) -> Result<i32, String> {
+    let arg = args
+        .positional
+        .get(2)
+        .cloned()
+        .ok_or_else(|| format!("panel info needs a spec or path\n{USAGE}"))?;
+    args.reject_unknown()?;
+    let spec = normalize_panel_spec(&arg);
+    let registry = PanelRegistry::unbounded(); // trusted caller: no size cap
+    let panel = registry.resolve(&spec)?;
+    let p = panel.panel();
+
+    let mut t = Table::new(&["property", "value"]);
+    t.row(vec!["panel".into(), spec.clone()]);
+    t.row(vec!["haplotypes".into(), fmt_count(p.n_hap() as u64)]);
+    t.row(vec!["markers".into(), fmt_count(p.n_mark() as u64)]);
+    t.row(vec!["states".into(), fmt_count(p.n_states() as u64)]);
+    t.row(vec![
+        "memory (unpacked)".into(),
+        format!("{} B", p.mem_bytes()),
+    ]);
+    t.row(vec![
+        "alleles (1 bit each)".into(),
+        format!("{} B", p.n_hap() * p.n_mark().div_ceil(8)),
+    ]);
+    let mean_af: f64 =
+        (0..p.n_mark()).map(|m| p.allele_freq(m)).sum::<f64>() / p.n_mark() as f64;
+    t.row(vec!["mean allele-1 freq".into(), format!("{mean_af:.4}")]);
+    if let Some(recipe) = panel.recipe() {
+        t.row(vec![
+            "synthetic recipe".into(),
+            format!(
+                "maf={} annot={} seed={}",
+                recipe.maf, recipe.annot_ratio, recipe.seed
+            ),
+        ]);
+    }
+    if let Some(sites) = panel.sites() {
+        let (first, last) = (&sites[0], &sites[sites.len() - 1]);
+        t.row(vec![
+            "sites".into(),
+            format!(
+                "{}:{}..{} ({} records)",
+                first.chrom,
+                first.pos,
+                last.pos,
+                sites.len()
+            ),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(0)
 }
 
@@ -430,6 +600,60 @@ mod tests {
         ]);
         // Offline builds skip the XLA row; everything else must agree.
         assert_eq!(cmd_validate(&args).unwrap(), 0);
+    }
+
+    const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/data/tiny.vcf");
+
+    #[test]
+    fn panel_ingest_info_and_windowed_real_impute() {
+        let out = std::env::temp_dir().join(format!(
+            "poets-cli-tiny-{}.ppnl",
+            std::process::id()
+        ));
+        let out = out.to_str().unwrap().to_string();
+        assert_eq!(
+            cmd_panel(&argv(&["panel", "ingest", FIXTURE, out.as_str()])).unwrap(),
+            0
+        );
+        let spec = format!("packed:{out}");
+        assert_eq!(cmd_panel(&argv(&["panel", "info", spec.as_str()])).unwrap(), 0);
+        // Bare-path sugar resolves the same file.
+        assert_eq!(cmd_panel(&argv(&["panel", "info", out.as_str()])).unwrap(), 0);
+        // Windowed impute against the packed real panel, manifest emitted.
+        let args = argv(&[
+            "impute", "--panel", spec.as_str(), "--targets", "2", "--annot-ratio",
+            "0.25", "--engine", "baseline", "--window", "30", "--overlap", "20",
+            "--json",
+        ]);
+        assert_eq!(cmd_impute(&args).unwrap(), 0);
+        // Bare-path sugar works for impute too, like panel info.
+        let args = argv(&[
+            "impute", "--panel", out.as_str(), "--targets", "1", "--annot-ratio",
+            "0.25", "--engine", "baseline",
+        ]);
+        assert_eq!(cmd_impute(&args).unwrap(), 0);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn panel_command_rejects_bad_usage() {
+        assert!(cmd_panel(&argv(&["panel"])).is_err());
+        assert!(cmd_panel(&argv(&["panel", "frobnicate"])).is_err());
+        assert!(cmd_panel(&argv(&["panel", "ingest"])).is_err());
+        assert!(cmd_panel(&argv(&["panel", "info"])).is_err());
+        assert!(cmd_panel(&argv(&["panel", "info", "vcf:/nonexistent.vcf"])).is_err());
+        assert!(
+            cmd_panel(&argv(&["panel", "ingest", "/nonexistent.vcf", "/tmp/x.ppnl"])).is_err()
+        );
+    }
+
+    #[test]
+    fn impute_rejects_bad_window_geometry() {
+        let args = argv(&[
+            "impute", "--hap", "8", "--mark", "21", "--targets", "1", "--engine",
+            "baseline", "--window", "8", "--overlap", "8",
+        ]);
+        assert!(cmd_impute(&args).unwrap_err().contains("overlap"));
     }
 
     #[test]

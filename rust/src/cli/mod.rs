@@ -24,6 +24,7 @@ fn dispatch(argv: &[String]) -> Result<i32, String> {
     let args = Args::parse(argv)?;
     match args.positional.first().map(String::as_str) {
         Some("impute") => commands::cmd_impute(&args),
+        Some("panel") => commands::cmd_panel(&args),
         Some("validate") => commands::cmd_validate(&args),
         Some("serve") => commands::cmd_serve(&args),
         Some("bench-serve") => commands::cmd_bench_serve(&args),

@@ -1,0 +1,38 @@
+//! Real-data panels: VCF ingestion, bit-packed storage and windowed
+//! chunking — the front door that lets every compute plane run the paper's
+//! *actual* workload (impute targets against a real reference panel) instead
+//! of only `workload::panelgen` synthetics.
+//!
+//! Three layers, each usable on its own:
+//!
+//! * [`vcf`] — a zero-dependency parser for the VCF subset imputation
+//!   reference panels actually use (bi-allelic, phased GT records on one
+//!   chromosome).  Produces a [`crate::model::panel::ReferencePanel`] plus
+//!   per-site metadata ([`vcf::Site`]: CHROM/POS/ID and allele frequency),
+//!   with strict per-line error reporting — a malformed panel must fail
+//!   loudly at ingest, never silently skew dosages.
+//! * [`packed`] — [`packed::PackedPanel`], the haplotype matrix at **1 bit
+//!   per allele** (8x smaller than the `Vec<u8>` working representation)
+//!   with a checksummed on-disk format (`.ppnl`) and a lossless
+//!   [`ReferencePanel`](crate::model::panel::ReferencePanel) round-trip.
+//!   This is what `poets-impute panel ingest` writes and what `packed:`
+//!   registry specs load.
+//! * [`window`] — chromosome-scale chunking: slice a panel into overlapping
+//!   marker windows ([`window::WindowPlan`]), run any engine per window
+//!   through the unified session pipeline, and stitch the per-window dosages
+//!   back together ([`window::run_windowed`]), resolving overlaps at the
+//!   window midpoint.  This is how a workload larger than one graph build
+//!   runs on the event planes.
+//!
+//! Wiring: [`crate::serve::PanelRegistry`] resolves `vcf:<path>` and
+//! `packed:<path>` specs alongside `synth:`, the CLI gains
+//! `panel ingest`/`panel info`, and `impute --panel <spec> --window W`
+//! drives the windowed path end to end (see `tests/real_panel_e2e.rs`).
+
+pub mod packed;
+pub mod vcf;
+pub mod window;
+
+pub use packed::PackedPanel;
+pub use vcf::{Site, VcfOptions, VcfPanel};
+pub use window::{MarkerWindow, WindowPlan, run_windowed, stitch};

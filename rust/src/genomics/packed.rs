@@ -1,0 +1,505 @@
+//! [`PackedPanel`] — the reference panel at 1 bit per allele, with a
+//! checksummed on-disk format.
+//!
+//! The working representation ([`ReferencePanel`]) spends one byte per
+//! allele because the compute planes index it hot; at rest that is 8x more
+//! memory and disk than a diallelic matrix needs.  `PackedPanel` stores the
+//! same matrix bit-packed (row-major, LSB-first within each byte, rows
+//! padded to whole bytes with zero bits) and round-trips losslessly:
+//! `PackedPanel::from_panel(&p).to_panel()` reproduces `p` exactly,
+//! genetic distances bit-for-bit (they are stored as raw IEEE-754 doubles).
+//!
+//! ## The `.ppnl` format (version 1)
+//!
+//! Everything is little-endian.  Layout:
+//!
+//! ```text
+//! offset  size           field
+//! 0       8              magic: the ASCII bytes "POETSPNL"
+//! 8       4              format version (u32) = 1
+//! 12      4              flags (u32): bit 0 = site metadata present
+//! 16      8              n_hap  (u64 header)
+//! 24      8              n_mark (u64 header)
+//! 32      8 x n_mark     genetic distances (f64 bit patterns)
+//! ...     r x n_hap      allele bits, r = ceil(n_mark / 8) bytes per row
+//! ...     sites          (only when flags bit 0 is set) n_mark records:
+//!                          u16 chrom length + bytes, u16 id length + bytes,
+//!                          u64 pos, f64 allele-1 frequency (chrom/id are
+//!                          capped at 65,535 bytes — enforced at VCF ingest)
+//! ...     8              FNV-1a 64 checksum of every preceding byte
+//! ```
+//!
+//! Decoding is strict and total: wrong magic, unknown version, truncated or
+//! oversized payloads, non-canonical padding bits, invalid genetic
+//! distances and checksum mismatches are all recoverable `Err`s (panel
+//! files reach the serve layer via untrusted `packed:` request specs, so a
+//! corrupt file must never panic a worker).
+
+use crate::model::panel::ReferencePanel;
+
+use super::vcf::{Site, VcfPanel};
+
+/// Magic prefix of every `.ppnl` file.
+pub const MAGIC: [u8; 8] = *b"POETSPNL";
+/// Current (only) format version.
+pub const VERSION: u32 = 1;
+/// Conventional file extension.
+pub const EXTENSION: &str = "ppnl";
+
+const FLAG_SITES: u32 = 1;
+/// Fixed-size prefix: magic + version + flags + n_hap + n_mark.
+const HEADER_BYTES: usize = 8 + 4 + 4 + 8 + 8;
+
+/// A reference panel bit-packed to 1 bit per allele, plus the genetic
+/// distances and (when ingested from VCF) per-site metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedPanel {
+    n_hap: usize,
+    n_mark: usize,
+    /// Bytes per haplotype row: `ceil(n_mark / 8)`.
+    row_bytes: usize,
+    /// Row-major packed alleles; bit `m % 8` of byte `h * row_bytes + m / 8`
+    /// is the allele of haplotype `h` at marker `m`.  Padding bits are zero.
+    bits: Vec<u8>,
+    gen_dist: Vec<f64>,
+    sites: Option<Vec<Site>>,
+}
+
+impl PackedPanel {
+    /// Pack a working panel (no site metadata).
+    pub fn from_panel(panel: &ReferencePanel) -> PackedPanel {
+        Self::pack(panel, None)
+    }
+
+    /// Pack a VCF-ingested panel, keeping its site metadata.
+    pub fn from_vcf(vcf: &VcfPanel) -> PackedPanel {
+        Self::pack(&vcf.panel, Some(vcf.sites.clone()))
+    }
+
+    fn pack(panel: &ReferencePanel, sites: Option<Vec<Site>>) -> PackedPanel {
+        if let Some(s) = &sites {
+            assert_eq!(s.len(), panel.n_mark(), "site metadata length mismatch");
+        }
+        let (n_hap, n_mark) = (panel.n_hap(), panel.n_mark());
+        let row_bytes = n_mark.div_ceil(8);
+        let mut bits = vec![0u8; n_hap * row_bytes];
+        for h in 0..n_hap {
+            let row = &mut bits[h * row_bytes..(h + 1) * row_bytes];
+            for m in 0..n_mark {
+                // The panel guarantees alleles are 0/1.
+                row[m / 8] |= panel.allele(h, m) << (m % 8);
+            }
+        }
+        PackedPanel {
+            n_hap,
+            n_mark,
+            row_bytes,
+            bits,
+            gen_dist: panel.gen_dists().to_vec(),
+            sites,
+        }
+    }
+
+    #[inline]
+    pub fn n_hap(&self) -> usize {
+        self.n_hap
+    }
+
+    #[inline]
+    pub fn n_mark(&self) -> usize {
+        self.n_mark
+    }
+
+    #[inline]
+    pub fn allele(&self, hap: usize, mark: usize) -> u8 {
+        debug_assert!(hap < self.n_hap && mark < self.n_mark);
+        (self.bits[hap * self.row_bytes + mark / 8] >> (mark % 8)) & 1
+    }
+
+    /// Site metadata, when the panel was ingested from VCF.
+    pub fn sites(&self) -> Option<&[Site]> {
+        self.sites.as_deref()
+    }
+
+    /// Bytes the packed allele matrix occupies (the 8x-smaller number; the
+    /// working panel spends `n_hap * n_mark` bytes on the same data).
+    pub fn packed_allele_bytes(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Unpack to the working representation.  Lossless: alleles and genetic
+    /// distances reproduce the packed source exactly.
+    pub fn to_panel(&self) -> ReferencePanel {
+        let mut alleles = Vec::with_capacity(self.n_hap * self.n_mark);
+        for h in 0..self.n_hap {
+            for m in 0..self.n_mark {
+                alleles.push(self.allele(h, m));
+            }
+        }
+        ReferencePanel::new(self.n_hap, self.n_mark, alleles, self.gen_dist.clone())
+    }
+
+    /// Serialise to the `.ppnl` byte format (see module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            HEADER_BYTES + self.gen_dist.len() * 8 + self.bits.len() + 8,
+        );
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        let flags = if self.sites.is_some() { FLAG_SITES } else { 0 };
+        out.extend_from_slice(&flags.to_le_bytes());
+        out.extend_from_slice(&(self.n_hap as u64).to_le_bytes());
+        out.extend_from_slice(&(self.n_mark as u64).to_le_bytes());
+        for &d in &self.gen_dist {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(&self.bits);
+        if let Some(sites) = &self.sites {
+            for s in sites {
+                encode_str(&mut out, &s.chrom);
+                encode_str(&mut out, &s.id);
+                out.extend_from_slice(&s.pos.to_le_bytes());
+                out.extend_from_slice(&s.af.to_le_bytes());
+            }
+        }
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse the `.ppnl` byte format.  Strict: every structural defect is a
+    /// descriptive error, and trailing bytes beyond the checksum are
+    /// rejected.
+    pub fn decode(bytes: &[u8]) -> Result<PackedPanel, String> {
+        if bytes.len() < HEADER_BYTES + 8 {
+            return Err(format!(
+                "truncated: {} bytes is smaller than any valid .ppnl",
+                bytes.len()
+            ));
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().expect("8 bytes"));
+        let computed = fnv1a64(body);
+        if stored != computed {
+            return Err(format!(
+                "checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — \
+                 the file is corrupt or was not written by `panel ingest`"
+            ));
+        }
+        let mut r = Reader { bytes: body, pos: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            return Err(format!("bad magic {magic:?} (expected {MAGIC:?})"));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(format!(
+                "unsupported format version {version} (this build reads version {VERSION})"
+            ));
+        }
+        let flags = r.u32()?;
+        if flags & !FLAG_SITES != 0 {
+            return Err(format!("unknown flag bits {flags:#x}"));
+        }
+        let n_hap = r.u64()? as usize;
+        let n_mark = r.u64()? as usize;
+        if n_hap < 2 || n_mark < 2 {
+            return Err(format!(
+                "panel shape {n_hap}x{n_mark} is too small (need >= 2 haplotypes and markers)"
+            ));
+        }
+        // Reject absurd headers before sizing any allocation from them.
+        let row_bytes = n_mark.div_ceil(8);
+        let need = n_mark
+            .checked_mul(8)
+            .and_then(|g| g.checked_add(n_hap.checked_mul(row_bytes)?))
+            .ok_or("panel shape overflows")?;
+        if need > body.len() {
+            return Err(format!(
+                "truncated: header promises {need} payload bytes, file has {}",
+                body.len() - r.pos
+            ));
+        }
+
+        let mut gen_dist = Vec::with_capacity(n_mark);
+        for m in 0..n_mark {
+            let d = f64::from_bits(u64::from_le_bytes(
+                r.take(8)?.try_into().expect("8 bytes"),
+            ));
+            let valid = if m == 0 { d == 0.0 } else { d > 0.0 && d.is_finite() };
+            if !valid {
+                return Err(format!("invalid genetic distance {d} at marker {m}"));
+            }
+            gen_dist.push(d);
+        }
+        let bits = r.take(n_hap * row_bytes)?.to_vec();
+        // Canonical encoding: padding bits beyond n_mark must be zero, so
+        // byte equality (and the checksum) is a function of the panel alone.
+        if n_mark % 8 != 0 {
+            let mask = !0u8 << (n_mark % 8);
+            for h in 0..n_hap {
+                let last = bits[h * row_bytes + row_bytes - 1];
+                if last & mask != 0 {
+                    return Err(format!("non-zero padding bits in haplotype {h}"));
+                }
+            }
+        }
+        let sites = if flags & FLAG_SITES != 0 {
+            let mut sites = Vec::with_capacity(n_mark);
+            for m in 0..n_mark {
+                let chrom = r.string().map_err(|e| format!("site {m} chrom: {e}"))?;
+                let id = r.string().map_err(|e| format!("site {m} id: {e}"))?;
+                let pos = r.u64().map_err(|e| format!("site {m}: {e}"))?;
+                let af = f64::from_bits(u64::from_le_bytes(
+                    r.take(8).map_err(|e| format!("site {m}: {e}"))?.try_into().expect("8 bytes"),
+                ));
+                if !(0.0..=1.0).contains(&af) {
+                    return Err(format!("site {m}: allele frequency {af} out of [0,1]"));
+                }
+                sites.push(Site { chrom, pos, id, af });
+            }
+            Some(sites)
+        } else {
+            None
+        };
+        if r.pos != body.len() {
+            return Err(format!(
+                "{} trailing bytes after the payload",
+                body.len() - r.pos
+            ));
+        }
+        Ok(PackedPanel {
+            n_hap,
+            n_mark,
+            row_bytes,
+            bits,
+            gen_dist,
+            sites,
+        })
+    }
+
+    /// Read just the fixed header of a `.ppnl` file: `(n_hap, n_mark)`.
+    ///
+    /// 32 bytes of I/O and no payload parsing — the cheap pre-admission
+    /// check serve-facing loaders run before committing to a full
+    /// [`PackedPanel::read`] (which still validates everything, checksum
+    /// included).
+    pub fn peek_shape(path: &str) -> Result<(usize, usize), String> {
+        use std::io::Read;
+        let mut head = [0u8; HEADER_BYTES];
+        let mut file =
+            std::fs::File::open(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        file.read_exact(&mut head)
+            .map_err(|e| format!("{path}: truncated header: {e}"))?;
+        if head[0..8] != MAGIC {
+            return Err(format!("{path}: bad magic (expected {MAGIC:?})"));
+        }
+        let version = u32::from_le_bytes(head[8..12].try_into().expect("4 bytes"));
+        if version != VERSION {
+            return Err(format!("{path}: unsupported format version {version}"));
+        }
+        let n_hap = u64::from_le_bytes(head[16..24].try_into().expect("8 bytes")) as usize;
+        let n_mark = u64::from_le_bytes(head[24..32].try_into().expect("8 bytes")) as usize;
+        Ok((n_hap, n_mark))
+    }
+
+    /// Write the `.ppnl` file.
+    pub fn write(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.encode()).map_err(|e| format!("cannot write {path}: {e}"))
+    }
+
+    /// Read a `.ppnl` file.
+    pub fn read(path: &str) -> Result<PackedPanel, String> {
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        Self::decode(&bytes).map_err(|e| format!("{path}: {e}"))
+    }
+}
+
+fn encode_str(out: &mut Vec<u8>, s: &str) {
+    // The format stores a u16 length; the VCF parser enforces this limit at
+    // ingest ([`super::vcf`]), so overflowing it here means a programming
+    // error upstream — fail loudly rather than truncate (a silent cut could
+    // split a UTF-8 character and produce a file that fails its own decode).
+    assert!(
+        s.len() <= u16::MAX as usize,
+        "site string of {} bytes exceeds the .ppnl u16 length field",
+        s.len()
+    );
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// FNV-1a 64 — tiny, dependency-free integrity check (not cryptographic;
+/// it guards against truncation and bit rot, not tampering).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian cursor.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.bytes.len() {
+            return Err(format!(
+                "truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.bytes.len() - self.pos
+            ));
+        }
+        let slice = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(slice)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        let len = u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")) as usize;
+        String::from_utf8(self.take(len)?.to_vec()).map_err(|_| "invalid UTF-8".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::panelgen::{PanelConfig, generate_panel};
+
+    fn panel(n_hap: usize, n_mark: usize, seed: u64) -> ReferencePanel {
+        generate_panel(&PanelConfig {
+            n_hap,
+            n_mark,
+            maf: 0.3,
+            seed,
+            ..PanelConfig::default()
+        })
+    }
+
+    fn assert_same_panel(a: &ReferencePanel, b: &ReferencePanel) {
+        assert_eq!(a.n_hap(), b.n_hap());
+        assert_eq!(a.n_mark(), b.n_mark());
+        for h in 0..a.n_hap() {
+            assert_eq!(a.haplotype(h), b.haplotype(h), "haplotype {h}");
+        }
+        // Bit-exact doubles, not approximate.
+        for m in 0..a.n_mark() {
+            assert_eq!(a.gen_dist(m).to_bits(), b.gen_dist(m).to_bits(), "d[{m}]");
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_lossless_at_ragged_width() {
+        // 21 % 8 != 0: the last byte of each row is padded.
+        let p = panel(6, 21, 1);
+        let packed = PackedPanel::from_panel(&p);
+        assert_eq!(packed.packed_allele_bytes(), 6 * 3);
+        assert!(packed.packed_allele_bytes() * 8 >= 6 * 21);
+        assert_same_panel(&p, &packed.to_panel());
+        // And through the byte format.
+        let back = PackedPanel::decode(&packed.encode()).unwrap();
+        assert_eq!(back, packed);
+        assert_same_panel(&p, &back.to_panel());
+    }
+
+    #[test]
+    fn roundtrip_with_sites() {
+        let p = panel(4, 9, 2);
+        let sites: Vec<Site> = (0..9)
+            .map(|m| Site {
+                chrom: "20".into(),
+                pos: 1000 + 100 * m as u64,
+                id: if m % 2 == 0 { format!("rs{m}") } else { ".".into() },
+                af: p.allele_freq(m),
+            })
+            .collect();
+        let vcf = VcfPanel { panel: p.clone(), sites: sites.clone() };
+        let packed = PackedPanel::from_vcf(&vcf);
+        let back = PackedPanel::decode(&packed.encode()).unwrap();
+        assert_eq!(back.sites(), Some(&sites[..]));
+        assert_same_panel(&p, &back.to_panel());
+    }
+
+    #[test]
+    fn eight_x_smaller_in_the_limit() {
+        let p = panel(16, 256, 3);
+        let packed = PackedPanel::from_panel(&p);
+        // 256 markers pack to exactly 32 bytes/row: an exact 8x.
+        assert_eq!(packed.packed_allele_bytes() * 8, 16 * 256);
+    }
+
+    #[test]
+    fn corrupt_files_are_errors_not_panics() {
+        let packed = PackedPanel::from_panel(&panel(4, 11, 4));
+        let good = packed.encode();
+
+        // Truncations at every boundary class.
+        for cut in [0, 4, HEADER_BYTES - 1, good.len() - 9, good.len() - 1] {
+            let e = PackedPanel::decode(&good[..cut]).unwrap_err();
+            assert!(
+                e.contains("truncated") || e.contains("checksum"),
+                "cut {cut}: {e}"
+            );
+        }
+        // A flipped payload byte breaks the checksum.
+        let mut flipped = good.clone();
+        flipped[HEADER_BYTES + 3] ^= 0x40;
+        assert!(PackedPanel::decode(&flipped).unwrap_err().contains("checksum"));
+        // Wrong magic (checksum recomputed so the magic check is what trips).
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        let sum = fnv1a64(&bad_magic[..bad_magic.len() - 8]).to_le_bytes();
+        let n = bad_magic.len();
+        bad_magic[n - 8..].copy_from_slice(&sum);
+        assert!(PackedPanel::decode(&bad_magic).unwrap_err().contains("magic"));
+        // Future version.
+        let mut v2 = good.clone();
+        v2[8] = 2;
+        let sum = fnv1a64(&v2[..v2.len() - 8]).to_le_bytes();
+        let n = v2.len();
+        v2[n - 8..].copy_from_slice(&sum);
+        assert!(PackedPanel::decode(&v2).unwrap_err().contains("version"));
+        // Non-canonical padding bits.
+        let mut pad = good.clone();
+        let bits_start = HEADER_BYTES + 11 * 8;
+        pad[bits_start + 1] |= 0x80; // 11 % 8 = 3 → bits 3..8 of byte 1 are padding
+        let sum = fnv1a64(&pad[..pad.len() - 8]).to_le_bytes();
+        let n = pad.len();
+        pad[n - 8..].copy_from_slice(&sum);
+        assert!(PackedPanel::decode(&pad).unwrap_err().contains("padding"));
+        // Arbitrary garbage.
+        assert!(PackedPanel::decode(b"POETSPNLgarbage").is_err());
+        assert!(PackedPanel::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let packed = PackedPanel::from_panel(&panel(4, 13, 5));
+        let path = std::env::temp_dir().join(format!(
+            "poets-ppnl-test-{}.ppnl",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        packed.write(&path).unwrap();
+        assert_eq!(PackedPanel::peek_shape(&path).unwrap(), (4, 13));
+        let back = PackedPanel::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back, packed);
+        assert!(PackedPanel::read("/nonexistent/x.ppnl").unwrap_err().contains("cannot read"));
+        assert!(PackedPanel::peek_shape("/nonexistent/x.ppnl").unwrap_err().contains("cannot read"));
+    }
+}

@@ -1,0 +1,452 @@
+//! A zero-dependency parser for the VCF subset imputation panels use.
+//!
+//! Reference panels for imputation are phased, bi-allelic SNP matrices — the
+//! general VCF zoo (multi-allelic records, indels, unphased or missing
+//! genotypes, per-sample annotations) has no meaning to the Li & Stephens
+//! state space, so this parser accepts exactly the subset the model consumes
+//! and rejects everything else with a `line N:` error.  Strictness is the
+//! point: a silently skipped record would shift every downstream marker
+//! index and corrupt dosages without any visible failure.
+//!
+//! Accepted grammar per data line (tab-separated, one chromosome per file):
+//!
+//! ```text
+//! CHROM  POS  ID  REF  ALT  QUAL  FILTER  INFO  FORMAT  sample1 ... sampleS
+//! ```
+//!
+//! * `POS` strictly increasing; `REF`/`ALT` single bases (bi-allelic SNP);
+//! * `FORMAT` must contain `GT`; each sample's GT field must be a phased
+//!   diploid `a|b` with `a, b ∈ {0, 1}` — so each sample contributes two
+//!   haplotype rows and the panel has `2 x S` haplotypes;
+//! * genetic distances are derived from physical positions at a constant
+//!   rate ([`VcfOptions::morgans_per_bp`], default 1 cM/Mb = 1e-8 M/bp) —
+//!   the classic flat-map approximation; a genuine genetic map can replace
+//!   it later without touching the parser.
+
+use crate::model::panel::ReferencePanel;
+
+/// Per-site metadata carried alongside the allele matrix (the panel itself
+/// only knows alleles + genetic distances).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Site {
+    /// Chromosome name, identical for every site in a panel.
+    pub chrom: String,
+    /// 1-based physical position (strictly increasing).
+    pub pos: u64,
+    /// The VCF ID column (`.` when absent — kept verbatim).
+    pub id: String,
+    /// ALT (allele 1) frequency over the panel haplotypes.
+    pub af: f64,
+}
+
+/// Parser knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct VcfOptions {
+    /// Physical→genetic conversion rate (Morgans per base pair).  The
+    /// default is the field-standard flat 1 cM/Mb.
+    pub morgans_per_bp: f64,
+}
+
+impl Default for VcfOptions {
+    fn default() -> Self {
+        VcfOptions {
+            morgans_per_bp: 1e-8,
+        }
+    }
+}
+
+/// A parsed panel: the Li & Stephens state space plus site metadata.
+#[derive(Clone, Debug)]
+pub struct VcfPanel {
+    pub panel: ReferencePanel,
+    /// One entry per marker column, in panel order.
+    pub sites: Vec<Site>,
+}
+
+impl VcfPanel {
+    /// Number of samples the file carried (haplotypes / 2).
+    pub fn n_samples(&self) -> usize {
+        self.panel.n_hap() / 2
+    }
+}
+
+/// Read and parse a VCF file.
+pub fn load(path: &str) -> Result<VcfPanel, String> {
+    load_with(path, &VcfOptions::default())
+}
+
+/// Read and parse a VCF file with explicit options.  Streams line by line
+/// (the grammar is strictly line-oriented), so peak memory is the parsed
+/// records, not an extra whole-file text copy — chromosome-scale inputs are
+/// this path's whole point.
+pub fn load_with(path: &str, opts: &VcfOptions) -> Result<VcfPanel, String> {
+    use std::io::BufRead;
+    let file = std::fs::File::open(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    let lines = std::io::BufReader::new(file)
+        .lines()
+        .map(|l| l.map_err(|e| format!("read error: {e}")));
+    parse_lines(lines, opts).map_err(|e| format!("{path}: {e}"))
+}
+
+/// Parse VCF text with default options.
+pub fn parse(text: &str) -> Result<VcfPanel, String> {
+    parse_with(text, &VcfOptions::default())
+}
+
+/// One parsed data line, before column-major assembly.
+struct Record {
+    site: Site,
+    /// `2 x S` alleles for this site: sample s contributes haplotypes
+    /// `2s` and `2s + 1`.
+    alleles: Vec<u8>,
+}
+
+/// Parse VCF text.  Every rejection names the offending 1-based line.
+pub fn parse_with(text: &str, opts: &VcfOptions) -> Result<VcfPanel, String> {
+    parse_lines(text.lines().map(|l| Ok(l.to_string())), opts)
+}
+
+/// Parse a stream of lines (the engine behind [`parse_with`] and the
+/// streaming [`load_with`]).
+fn parse_lines<I>(lines: I, opts: &VcfOptions) -> Result<VcfPanel, String>
+where
+    I: Iterator<Item = Result<String, String>>,
+{
+    if !(opts.morgans_per_bp > 0.0 && opts.morgans_per_bp.is_finite()) {
+        return Err("morgans_per_bp must be positive and finite".into());
+    }
+    let mut header: Option<Vec<String>> = None;
+    let mut records: Vec<Record> = Vec::new();
+    for (idx, raw) in lines.enumerate() {
+        let line_no = idx + 1;
+        let fail = |msg: String| format!("line {line_no}: {msg}");
+        let raw = raw.map_err(fail)?;
+        let line = raw.trim_end_matches('\r');
+        if line.is_empty() || line.starts_with("##") {
+            continue; // meta-information lines carry nothing the model needs
+        }
+        if let Some(hdr) = line.strip_prefix('#') {
+            if header.is_some() {
+                return Err(fail("duplicate #CHROM header line".into()));
+            }
+            header = Some(parse_header(hdr).map_err(fail)?);
+            continue;
+        }
+        let Some(columns) = &header else {
+            return Err(fail("data line before the #CHROM header".into()));
+        };
+        let record = parse_record(line, columns, records.last()).map_err(fail)?;
+        records.push(record);
+    }
+    if header.is_none() {
+        return Err("no #CHROM header line".into());
+    }
+    if records.len() < 2 {
+        return Err(format!(
+            "need at least 2 bi-allelic sites, found {}",
+            records.len()
+        ));
+    }
+
+    // Column-major records → row-major panel alleles + flat-map distances.
+    let n_mark = records.len();
+    let n_hap = records[0].alleles.len();
+    let mut alleles = vec![0u8; n_hap * n_mark];
+    let mut gen_dist = Vec::with_capacity(n_mark);
+    let mut sites = Vec::with_capacity(n_mark);
+    for (m, rec) in records.iter().enumerate() {
+        for (h, &a) in rec.alleles.iter().enumerate() {
+            alleles[h * n_mark + m] = a;
+        }
+        gen_dist.push(if m == 0 {
+            0.0
+        } else {
+            (rec.site.pos - records[m - 1].site.pos) as f64 * opts.morgans_per_bp
+        });
+        sites.push(rec.site.clone());
+    }
+    Ok(VcfPanel {
+        panel: ReferencePanel::new(n_hap, n_mark, alleles, gen_dist),
+        sites,
+    })
+}
+
+/// The 8 fixed VCF columns before FORMAT.
+const FIXED_COLUMNS: [&str; 8] = [
+    "CHROM", "POS", "ID", "REF", "ALT", "QUAL", "FILTER", "INFO",
+];
+
+/// Validate the `#CHROM ...` header and return its column names.
+fn parse_header(hdr: &str) -> Result<Vec<String>, String> {
+    let cols: Vec<String> = hdr.split('\t').map(|c| c.to_string()).collect();
+    for (i, want) in FIXED_COLUMNS.iter().enumerate() {
+        if cols.get(i).map(String::as_str) != Some(*want) {
+            return Err(format!(
+                "header column {} must be {want:?}, found {:?}",
+                i + 1,
+                cols.get(i).map(String::as_str).unwrap_or("<missing>")
+            ));
+        }
+    }
+    if cols.get(8).map(String::as_str) != Some("FORMAT") {
+        return Err("header needs a FORMAT column (genotype panels carry GT data)".into());
+    }
+    if cols.len() < 10 {
+        return Err("header lists no samples after FORMAT".into());
+    }
+    Ok(cols)
+}
+
+/// Parse one data line against the header; `prev` enforces file-wide
+/// invariants (single chromosome, strictly increasing POS, fixed sample
+/// count).
+fn parse_record(
+    line: &str,
+    columns: &[String],
+    prev: Option<&Record>,
+) -> Result<Record, String> {
+    let fields: Vec<&str> = line.split('\t').collect();
+    if fields.len() != columns.len() {
+        return Err(format!(
+            "expected {} tab-separated fields (per the header), found {}",
+            columns.len(),
+            fields.len()
+        ));
+    }
+    // Downstream formats (the .ppnl site records) store these as
+    // u16-length strings; anything near that size is not a plausible
+    // CHROM/ID anyway, so reject at ingest.
+    for (name, value) in [("CHROM", fields[0]), ("ID", fields[2])] {
+        if value.len() > u16::MAX as usize {
+            return Err(format!(
+                "{name} is {} bytes long (limit 65535)",
+                value.len()
+            ));
+        }
+    }
+    let chrom = fields[0].to_string();
+    let pos: u64 = fields[1]
+        .parse()
+        .map_err(|_| format!("POS {:?} is not a positive integer", fields[1]))?;
+    if let Some(p) = prev {
+        if chrom != p.site.chrom {
+            return Err(format!(
+                "chromosome changes from {:?} to {chrom:?} (one chromosome per panel; \
+                 split multi-chromosome VCFs before ingest)",
+                p.site.chrom
+            ));
+        }
+        if pos <= p.site.pos {
+            return Err(format!(
+                "POS {pos} is not strictly greater than the previous site's {}",
+                p.site.pos
+            ));
+        }
+    }
+    let (reference, alt) = (fields[3], fields[4]);
+    for (name, allele) in [("REF", reference), ("ALT", alt)] {
+        if !matches!(allele, "A" | "C" | "G" | "T") {
+            return Err(format!(
+                "{name} {allele:?} is not a single base (bi-allelic SNPs only; \
+                 multi-allelic and indel records must be filtered before ingest)"
+            ));
+        }
+    }
+    if reference == alt {
+        return Err(format!("REF and ALT are both {reference:?}"));
+    }
+
+    // GT may sit anywhere in FORMAT; everything else in it is ignored.
+    let gt_index = fields[8]
+        .split(':')
+        .position(|k| k == "GT")
+        .ok_or_else(|| format!("FORMAT {:?} has no GT field", fields[8]))?;
+
+    let mut alleles = Vec::with_capacity((fields.len() - 9) * 2);
+    for (s, sample) in fields[9..].iter().enumerate() {
+        let gt = sample.split(':').nth(gt_index).ok_or_else(|| {
+            format!("sample {} has no field {gt_index} for GT", s + 1)
+        })?;
+        let (a, b) = gt.split_once('|').ok_or_else(|| {
+            format!(
+                "sample {} GT {gt:?} is not phased (expected a|b; unphased '/' and \
+                 haploid calls are not representable as reference haplotypes)",
+                s + 1
+            )
+        })?;
+        for part in [a, b] {
+            alleles.push(match part {
+                "0" => 0,
+                "1" => 1,
+                _ => {
+                    return Err(format!(
+                        "sample {} GT {gt:?}: allele {part:?} is not 0 or 1 \
+                         (missing or multi-allelic genotypes are rejected)",
+                        s + 1
+                    ));
+                }
+            });
+        }
+    }
+    if let Some(p) = prev {
+        if alleles.len() != p.alleles.len() {
+            // Unreachable while the field count is checked against the
+            // header, but kept as a defence against future header handling.
+            return Err(format!(
+                "sample count changed: {} haplotypes here vs {} before",
+                alleles.len(),
+                p.alleles.len()
+            ));
+        }
+    }
+    let af = alleles.iter().map(|&a| a as usize).sum::<usize>() as f64
+        / alleles.len() as f64;
+    Ok(Record {
+        site: Site {
+            chrom,
+            pos,
+            id: fields[2].to_string(),
+            af,
+        },
+        alleles,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HEADER: &str =
+        "#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tINFO\tFORMAT\ts1\ts2";
+
+    fn vcf(lines: &[&str]) -> String {
+        let mut text = String::from("##fileformat=VCFv4.2\n##source=test\n");
+        text.push_str(HEADER);
+        text.push('\n');
+        for l in lines {
+            text.push_str(l);
+            text.push('\n');
+        }
+        text
+    }
+
+    fn site(pos: u64, id: &str, gts: [&str; 2]) -> String {
+        format!("20\t{pos}\t{id}\tA\tG\t.\tPASS\t.\tGT\t{}\t{}", gts[0], gts[1])
+    }
+
+    #[test]
+    fn parses_panel_sites_and_distances() {
+        let text = vcf(&[
+            &site(100, "rs1", ["0|1", "0|0"]),
+            &site(300, "rs2", ["1|1", "0|1"]),
+            &site(1300, ".", ["0|0", "1|0"]),
+        ]);
+        let v = parse(&text).unwrap();
+        assert_eq!(v.panel.n_hap(), 4);
+        assert_eq!(v.panel.n_mark(), 3);
+        assert_eq!(v.n_samples(), 2);
+        // Haplotype rows: s1 gives rows 0/1, s2 rows 2/3, in GT order.
+        assert_eq!(v.panel.haplotype(0), &[0, 1, 0]);
+        assert_eq!(v.panel.haplotype(1), &[1, 1, 0]);
+        assert_eq!(v.panel.haplotype(2), &[0, 0, 1]);
+        assert_eq!(v.panel.haplotype(3), &[0, 1, 0]);
+        // Flat-map distances at the default 1e-8 M/bp.
+        assert_eq!(v.panel.gen_dist(0), 0.0);
+        assert!((v.panel.gen_dist(1) - 200.0 * 1e-8).abs() < 1e-18);
+        assert!((v.panel.gen_dist(2) - 1000.0 * 1e-8).abs() < 1e-18);
+        // Site metadata, including AF.
+        assert_eq!(v.sites[0].chrom, "20");
+        assert_eq!(v.sites[0].pos, 100);
+        assert_eq!(v.sites[0].id, "rs1");
+        assert_eq!(v.sites[2].id, ".");
+        assert!((v.sites[0].af - 0.25).abs() < 1e-12);
+        assert!((v.sites[1].af - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gt_position_in_format_is_respected() {
+        let text = vcf(&[
+            "20\t10\t.\tA\tG\t.\tPASS\t.\tDP:GT\t9:0|1\t7:1|0",
+            "20\t20\t.\tC\tT\t.\tPASS\t.\tDP:GT\t3:0|0\t2:1|1",
+        ]);
+        let v = parse(&text).unwrap();
+        assert_eq!(v.panel.haplotype(0), &[0, 0]);
+        assert_eq!(v.panel.haplotype(3), &[0, 1]);
+    }
+
+    #[test]
+    fn custom_rate_scales_distances() {
+        let text = vcf(&[
+            &site(100, ".", ["0|1", "0|0"]),
+            &site(200, ".", ["1|0", "0|1"]),
+        ]);
+        let v = parse_with(&text, &VcfOptions { morgans_per_bp: 1e-6 }).unwrap();
+        assert!((v.panel.gen_dist(1) - 1e-4).abs() < 1e-15);
+        assert!(parse_with(&text, &VcfOptions { morgans_per_bp: 0.0 }).is_err());
+    }
+
+    /// Every rejection must carry the 1-based line number.
+    fn err_of(lines: &[&str]) -> String {
+        parse(&vcf(lines)).unwrap_err()
+    }
+
+    #[test]
+    fn rejects_malformed_lines_with_line_numbers() {
+        // Data lines start at line 4 (two ## lines + header).
+        let base = site(100, ".", ["0|1", "0|0"]);
+        for (bad, needle) in [
+            (site(100, ".", ["0|1", "0|0"]), "strictly greater"),
+            (site(50, ".", ["0|1", "0|0"]), "strictly greater"),
+            ("20\tx\t.\tA\tG\t.\tPASS\t.\tGT\t0|1\t0|0".to_string(), "POS"),
+            ("20\t200\t.\tA\tG,T\t.\tPASS\t.\tGT\t0|1\t0|0".to_string(), "single base"),
+            ("20\t200\t.\tAT\tG\t.\tPASS\t.\tGT\t0|1\t0|0".to_string(), "single base"),
+            ("20\t200\t.\tA\tA\t.\tPASS\t.\tGT\t0|1\t0|0".to_string(), "REF and ALT"),
+            ("20\t200\t.\tA\tG\t.\tPASS\t.\tGT\t0/1\t0|0".to_string(), "not phased"),
+            ("20\t200\t.\tA\tG\t.\tPASS\t.\tGT\t.|1\t0|0".to_string(), "not 0 or 1"),
+            ("20\t200\t.\tA\tG\t.\tPASS\t.\tGT\t0|2\t0|0".to_string(), "not 0 or 1"),
+            ("20\t200\t.\tA\tG\t.\tPASS\t.\tDP\t9\t7".to_string(), "no GT"),
+            ("20\t200\t.\tA\tG\t.\tPASS\t.\tGT\t0|1".to_string(), "fields"),
+            ("21\t200\t.\tA\tG\t.\tPASS\t.\tGT\t0|1\t0|0".to_string(), "chromosome"),
+            // IDs wider than the .ppnl u16 length field are rejected at
+            // ingest, never truncated downstream.
+            (
+                format!(
+                    "20\t200\t{}\tA\tG\t.\tPASS\t.\tGT\t0|1\t0|0",
+                    "x".repeat(70_000)
+                ),
+                "65535",
+            ),
+        ] {
+            let e = err_of(&[base.as_str(), bad.as_str()]);
+            assert!(e.contains("line 5"), "{bad:?}: {e}");
+            assert!(e.contains(needle), "{bad:?}: expected {needle:?} in {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_structural_problems() {
+        assert!(parse("").unwrap_err().contains("no #CHROM"));
+        assert!(
+            parse("20\t1\t.\tA\tG\t.\t.\t.\tGT\t0|1\n")
+                .unwrap_err()
+                .contains("before the #CHROM")
+        );
+        let no_samples = "#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tINFO\tFORMAT\n";
+        assert!(parse(no_samples).unwrap_err().contains("no samples"));
+        let bad_col = "#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tEXTRA\tFORMAT\ts1\n";
+        assert!(parse(bad_col).unwrap_err().contains("INFO"));
+        // A single site cannot form a panel.
+        let only = site(100, ".", ["0|1", "0|0"]);
+        let e = err_of(&[only.as_str()]);
+        assert!(e.contains("at least 2"), "{e}");
+        // Duplicate header.
+        let two_headers = format!("{HEADER}\n{HEADER}\n");
+        assert!(parse(&two_headers).unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn load_reports_missing_files() {
+        let e = load("/nonexistent/panel.vcf").unwrap_err();
+        assert!(e.contains("cannot read"), "{e}");
+    }
+}

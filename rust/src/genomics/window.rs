@@ -1,0 +1,463 @@
+//! Windowed chunking: run any engine on panels larger than one graph build.
+//!
+//! A chromosome-scale panel does not fit one event-driven application graph
+//! (the mapping layer rejects graphs beyond the cluster's thread capacity),
+//! and even on the x86 planes one monolithic run serialises poorly.  The
+//! standard solution — GEDI-style window slicing — carves the marker axis
+//! into overlapping windows, imputes each window independently, and stitches
+//! per-window dosages back together.
+//!
+//! * [`WindowPlan`] — the slicing: fixed-length windows at a fixed stride,
+//!   every marker covered, the last window shifted left (never shortened) so
+//!   ragged tails still get a full-length window.  Each window owns a
+//!   disjoint **core** interval; cores partition the marker axis and the
+//!   boundary between two cores sits at the midpoint of their windows'
+//!   overlap, so every core marker is buffered from its window edge by half
+//!   the overlap — where the Li & Stephens chain has forgotten the window
+//!   boundary condition.
+//! * [`WindowPlan::slice_workload`] — one [`Workload`] per window: panel
+//!   columns via
+//!   [`ReferencePanel::select_markers`](crate::model::panel::ReferencePanel::select_markers)
+//!   (contiguous ranges keep genetic distances bit-exact) and target
+//!   observations sliced to match.
+//! * [`stitch`] — merge per-window dosage matrices by copying each window's
+//!   core columns into the full-width result.
+//! * [`run_windowed`] — the whole pipeline over [`ImputeSession`]: slice,
+//!   run every window on the configured engine, stitch, re-score accuracy
+//!   against the full workload's truth, and merge timings/metrics into one
+//!   [`ImputeReport`] (its `windows` field records the plan size).
+//!
+//! Windowing composes with any [`EngineSpec`](crate::session::EngineSpec):
+//! the per-window runs are ordinary sessions, so the event planes keep their
+//! determinism guarantees (a windowed run is bit-identical for any host
+//! thread count), and a single-window plan reproduces the unwindowed run
+//! bit-for-bit.
+//!
+//! One caveat: the linear-interpolation plane imputes only between a
+//! window's first and last *annotated* markers (that is its model, on
+//! windows as on whole chromosomes), so windowing an interp workload is
+//! only full-coverage when window boundaries land on the chip grid.  The
+//! dense planes (baseline/rank1/event/xla) have no such constraint.
+
+use crate::model::accuracy;
+use crate::model::panel::TargetHaplotype;
+use crate::session::{ImputeReport, ImputeSession, Workload};
+
+/// One marker window: `[start, end)` is what an engine sees, `[core_start,
+/// core_end)` is the sub-interval whose dosages the stitcher keeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MarkerWindow {
+    pub start: usize,
+    pub end: usize,
+    pub core_start: usize,
+    pub core_end: usize,
+}
+
+impl MarkerWindow {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// A full slicing of `0..n_mark` into overlapping windows with disjoint
+/// cores.  Construction is total over its domain: any `window_len >= 2` and
+/// `overlap < window_len` yields a valid plan for any `n_mark >= 2`.
+#[derive(Clone, Debug)]
+pub struct WindowPlan {
+    n_mark: usize,
+    windows: Vec<MarkerWindow>,
+}
+
+impl WindowPlan {
+    /// Plan windows of `window_len` markers overlapping by `overlap`.
+    ///
+    /// `window_len` clamps to the panel width (a window cannot exceed the
+    /// chromosome), so `window_len >= n_mark` yields the single-window plan.
+    /// Errors, not panics: window geometry arrives from CLI flags and
+    /// request fields.
+    pub fn new(n_mark: usize, window_len: usize, overlap: usize) -> Result<WindowPlan, String> {
+        if n_mark < 2 {
+            return Err(format!("cannot window a {n_mark}-marker panel (need >= 2)"));
+        }
+        if window_len < 2 {
+            return Err(format!("window length {window_len} too small (need >= 2)"));
+        }
+        let w = window_len.min(n_mark);
+        if overlap >= w {
+            return Err(format!(
+                "overlap {overlap} must be smaller than the effective window length {w}"
+            ));
+        }
+        let stride = w - overlap;
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0usize;
+        loop {
+            let end = start + w;
+            spans.push((start, end));
+            if end >= n_mark {
+                break;
+            }
+            // Keep full-length windows: when the next regular stride would
+            // overshoot, shift it left to end exactly at the chromosome end
+            // (the overlap with the previous window grows, never shrinks).
+            start = if start + stride + w > n_mark {
+                n_mark - w
+            } else {
+                start + stride
+            };
+        }
+        // Core boundaries: midpoints of consecutive windows' overlaps.
+        let mut windows = Vec::with_capacity(spans.len());
+        for (i, &(start, end)) in spans.iter().enumerate() {
+            let core_start = if i == 0 {
+                0
+            } else {
+                (start + spans[i - 1].1) / 2
+            };
+            let core_end = if i + 1 == spans.len() {
+                n_mark
+            } else {
+                (spans[i + 1].0 + end) / 2
+            };
+            windows.push(MarkerWindow {
+                start,
+                end,
+                core_start,
+                core_end,
+            });
+        }
+        Ok(WindowPlan { n_mark, windows })
+    }
+
+    pub fn n_mark(&self) -> usize {
+        self.n_mark
+    }
+
+    pub fn windows(&self) -> &[MarkerWindow] {
+        &self.windows
+    }
+
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Assemble the sub-workload one window sees: panel columns `[start,
+    /// end)` and every target's observations sliced to match.  Contiguous
+    /// `select_markers` ranges pass genetic distances through bit-exactly,
+    /// so a single-window plan reproduces the original workload.  Withheld
+    /// truth is *not* propagated — per-window accuracy over a fragment is
+    /// meaningless; [`run_windowed`] re-scores on the stitched result.
+    pub fn slice_workload(&self, full: &Workload, window: &MarkerWindow) -> Workload {
+        let marks: Vec<usize> = (window.start..window.end).collect();
+        let panel = full.panel().select_markers(&marks);
+        let targets: Vec<TargetHaplotype> = full
+            .targets()
+            .iter()
+            .map(|t| TargetHaplotype::new(t.obs[window.start..window.end].to_vec()))
+            .collect();
+        Workload::from_parts(panel, targets)
+    }
+}
+
+/// Merge per-window dosage matrices into one full-width matrix: each
+/// window contributes exactly its core columns.  `per_window[i]` must be
+/// the dosages of window `i` (`[target][marker-within-window]`).
+pub fn stitch(plan: &WindowPlan, per_window: &[Vec<Vec<f32>>]) -> Result<Vec<Vec<f32>>, String> {
+    if per_window.len() != plan.len() {
+        return Err(format!(
+            "stitch: {} dosage sets for a {}-window plan",
+            per_window.len(),
+            plan.len()
+        ));
+    }
+    let n_targets = per_window.first().map_or(0, Vec::len);
+    let mut full = vec![vec![0.0f32; plan.n_mark()]; n_targets];
+    for (i, (win, dosages)) in plan.windows().iter().zip(per_window).enumerate() {
+        if dosages.len() != n_targets {
+            return Err(format!(
+                "stitch: window {i} has {} targets, window 0 has {n_targets}",
+                dosages.len()
+            ));
+        }
+        for (t, row) in dosages.iter().enumerate() {
+            if row.len() != win.len() {
+                return Err(format!(
+                    "stitch: window {i} target {t} has {} markers, window spans {}",
+                    row.len(),
+                    win.len()
+                ));
+            }
+            full[t][win.core_start..win.core_end]
+                .copy_from_slice(&row[win.core_start - win.start..win.core_end - win.start]);
+        }
+    }
+    Ok(full)
+}
+
+/// Run a workload window-by-window and stitch one report.
+///
+/// `configure` applies the engine selection and knobs to each per-window
+/// session (it receives a fresh `ImputeSession::new(window_workload)` and
+/// must return the configured builder) — the same closure shape the CLI
+/// builds from its flags.  The merged report carries the stitched dosages,
+/// summed host/simulated timings, accumulated DES counters, accuracy
+/// re-scored against the full workload's truth, and `windows = plan.len()`.
+pub fn run_windowed<F>(
+    full: &Workload,
+    plan: &WindowPlan,
+    configure: F,
+) -> Result<ImputeReport, String>
+where
+    F: Fn(ImputeSession) -> ImputeSession,
+{
+    if plan.n_mark() != full.panel().n_mark() {
+        return Err(format!(
+            "window plan covers {} markers, workload has {}",
+            plan.n_mark(),
+            full.panel().n_mark()
+        ));
+    }
+    if full.n_targets() == 0 {
+        return Err("workload has no targets".into());
+    }
+    let mut reports = Vec::with_capacity(plan.len());
+    for (i, win) in plan.windows().iter().enumerate() {
+        let report = configure(ImputeSession::new(plan.slice_workload(full, win)))
+            .run()
+            .map_err(|e| format!("window {i} ([{}, {})): {e}", win.start, win.end))?;
+        reports.push(report);
+    }
+    // Drain the per-window dosages rather than cloning them: on the
+    // chromosome-scale runs windowing exists for, the dosage matrices are
+    // the dominant allocation.
+    let per_window: Vec<Vec<Vec<f32>>> = reports
+        .iter_mut()
+        .map(|r| std::mem::take(&mut r.dosages))
+        .collect();
+    let dosages = stitch(plan, &per_window)?;
+    drop(per_window);
+
+    let accuracy = full
+        .truth()
+        .map(|truth| accuracy::score_set(&dosages, truth, full.targets()));
+
+    let mut merged = reports.remove(0);
+    for r in &reports {
+        merged.host_seconds += r.host_seconds;
+        merged.n_batches += r.n_batches;
+        if let Some(s) = r.sim_seconds {
+            *merged.sim_seconds.get_or_insert(0.0) += s;
+        }
+        if let Some(m) = &r.metrics {
+            match &mut merged.metrics {
+                None => merged.metrics = Some(m.clone()),
+                Some(acc) => acc.absorb(m),
+            }
+        }
+    }
+    merged.n_mark = full.panel().n_mark();
+    merged.dosages = dosages;
+    merged.accuracy = accuracy;
+    merged.provenance = full.provenance().copied();
+    merged.windows = Some(plan.len());
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{EngineSpec, max_abs_dosage_diff};
+    use crate::workload::panelgen::PanelConfig;
+
+    fn plan(n_mark: usize, w: usize, v: usize) -> WindowPlan {
+        WindowPlan::new(n_mark, w, v).unwrap()
+    }
+
+    fn workload(n_mark: usize, n_targets: usize) -> Workload {
+        Workload::synthetic(
+            &PanelConfig {
+                n_hap: 8,
+                n_mark,
+                maf: 0.2,
+                annot_ratio: 0.25,
+                seed: 77,
+                ..PanelConfig::default()
+            },
+            n_targets,
+        )
+    }
+
+    #[test]
+    fn plan_covers_and_partitions() {
+        let p = plan(40, 20, 10);
+        assert_eq!(p.len(), 3);
+        assert_eq!(
+            p.windows()[0],
+            MarkerWindow { start: 0, end: 20, core_start: 0, core_end: 15 }
+        );
+        assert_eq!(
+            p.windows()[1],
+            MarkerWindow { start: 10, end: 30, core_start: 15, core_end: 25 }
+        );
+        assert_eq!(
+            p.windows()[2],
+            MarkerWindow { start: 20, end: 40, core_start: 25, core_end: 40 }
+        );
+    }
+
+    #[test]
+    fn ragged_tail_shifts_the_last_window() {
+        // 45 markers, windows of 20, stride 10: the last window would start
+        // at 30 and overshoot, so it shifts to [25, 45) — still 20 long.
+        let p = plan(45, 20, 10);
+        let last = *p.windows().last().unwrap();
+        assert_eq!((last.start, last.end), (25, 45));
+        assert!(p.windows().iter().all(|w| w.len() == 20));
+        assert_eq!(last.core_end, 45);
+    }
+
+    #[test]
+    fn single_window_when_panel_fits() {
+        for w in [40, 64, 1000] {
+            let p = plan(40, w, 8);
+            assert_eq!(p.len(), 1);
+            assert_eq!(
+                p.windows()[0],
+                MarkerWindow { start: 0, end: 40, core_start: 0, core_end: 40 }
+            );
+        }
+    }
+
+    #[test]
+    fn zero_overlap_abuts() {
+        let p = plan(40, 10, 0);
+        assert_eq!(p.len(), 4);
+        for (i, w) in p.windows().iter().enumerate() {
+            assert_eq!((w.start, w.end), (10 * i, 10 * i + 10));
+            assert_eq!((w.core_start, w.core_end), (10 * i, 10 * i + 10));
+        }
+    }
+
+    #[test]
+    fn bad_geometry_is_an_error() {
+        assert!(WindowPlan::new(1, 4, 0).is_err());
+        assert!(WindowPlan::new(40, 1, 0).is_err());
+        assert!(WindowPlan::new(40, 8, 8).is_err());
+        assert!(WindowPlan::new(40, 8, 12).is_err());
+        // Overlap checked against the *effective* (clamped) length.
+        assert!(WindowPlan::new(10, 100, 50).is_err());
+        assert!(WindowPlan::new(10, 100, 5).is_ok());
+    }
+
+    #[test]
+    fn sliced_workload_matches_columns() {
+        let wl = workload(30, 2);
+        let p = plan(30, 12, 4);
+        let win = p.windows()[1];
+        let sub = p.slice_workload(&wl, &win);
+        assert_eq!(sub.panel().n_mark(), win.len());
+        assert_eq!(sub.n_targets(), 2);
+        assert!(sub.truth().is_none());
+        for m in 0..win.len() {
+            assert_eq!(sub.panel().column(m), wl.panel().column(win.start + m));
+            // Interior distances pass through bit-exactly.
+            if m > 0 {
+                assert_eq!(
+                    sub.panel().gen_dist(m).to_bits(),
+                    wl.panel().gen_dist(win.start + m).to_bits()
+                );
+            }
+            assert_eq!(sub.targets()[0].obs[m], wl.targets()[0].obs[win.start + m]);
+        }
+        assert_eq!(sub.panel().gen_dist(0), 0.0);
+    }
+
+    #[test]
+    fn stitch_takes_each_core_from_its_window() {
+        let p = plan(40, 20, 10);
+        // Fill each window's dosages with its own index; the stitched row
+        // must read the owning window's index at every marker.
+        let per: Vec<Vec<Vec<f32>>> = (0..p.len())
+            .map(|i| vec![vec![i as f32; p.windows()[i].len()]; 2])
+            .collect();
+        let full = stitch(&p, &per).unwrap();
+        assert_eq!(full.len(), 2);
+        for (i, w) in p.windows().iter().enumerate() {
+            for m in w.core_start..w.core_end {
+                assert_eq!(full[0][m], i as f32, "marker {m}");
+            }
+        }
+        // Shape mismatches are errors.
+        assert!(stitch(&p, &per[..2]).is_err());
+        let mut ragged = per.clone();
+        ragged[1][0].pop();
+        assert!(stitch(&p, &ragged).is_err());
+    }
+
+    #[test]
+    fn single_window_run_is_bit_identical_to_plain_session() {
+        let wl = workload(21, 2);
+        let p = plan(21, 64, 4);
+        let windowed = run_windowed(&wl, &p, |s| {
+            s.engine(EngineSpec::Event).boards(1).states_per_thread(8)
+        })
+        .unwrap();
+        let plain = ImputeSession::new(wl.clone())
+            .engine(EngineSpec::Event)
+            .boards(1)
+            .states_per_thread(8)
+            .run()
+            .unwrap();
+        assert_eq!(windowed.dosages, plain.dosages);
+        assert_eq!(windowed.windows, Some(1));
+        assert!(windowed.accuracy.is_some(), "truth re-scored on the stitch");
+    }
+
+    #[test]
+    fn windowed_engines_agree_and_track_the_full_run() {
+        let wl = workload(40, 2);
+        // Starts (0, 7, 14) avoid the 1-in-4 annotation grid: a window
+        // applies no emission at its first marker, so starting on an anchor
+        // would discard that anchor's evidence.
+        let p = plan(40, 26, 19);
+        let base = run_windowed(&wl, &p, |s| s.engine(EngineSpec::Baseline)).unwrap();
+        let event = run_windowed(&wl, &p, |s| {
+            s.engine(EngineSpec::Event).boards(1).states_per_thread(8)
+        })
+        .unwrap();
+        // Engine equivalence survives windowing (same tolerance as unwindowed).
+        assert!(max_abs_dosage_diff(&base.dosages, &event.dosages) <= 1e-3);
+        // Cores are buffered by overlap/2 = 8 markers, so the stitched run
+        // tracks the full run closely (window boundary conditions decay).
+        let full = ImputeSession::new(wl.clone())
+            .engine(EngineSpec::Baseline)
+            .run()
+            .unwrap();
+        let drift = max_abs_dosage_diff(&base.dosages, &full.dosages);
+        assert!(drift < 0.2, "windowed drifted {drift} from the full run");
+        // Accounting merges across windows.
+        assert_eq!(event.windows, Some(p.len()));
+        assert!(event.sim_seconds.unwrap() > 0.0);
+        assert!(event.metrics.unwrap().sends > 0);
+        assert_eq!(base.n_mark, 40);
+        assert_eq!(base.dosages[0].len(), 40);
+    }
+
+    #[test]
+    fn plan_mismatch_and_empty_workload_are_errors() {
+        let wl = workload(30, 1);
+        let p = plan(40, 20, 10);
+        assert!(run_windowed(&wl, &p, |s| s).is_err());
+        let empty = Workload::from_parts(wl.panel().clone(), Vec::new());
+        let p30 = plan(30, 20, 10);
+        assert!(run_windowed(&empty, &p30, |s| s).is_err());
+    }
+}

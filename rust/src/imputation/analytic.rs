@@ -108,11 +108,11 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // DES cross-check goes through the run_raw shim
 mod tests {
     use super::*;
-    use crate::imputation::app::{RawAppConfig, run_raw};
+    use crate::imputation::app::RawAppConfig;
     use crate::poets::desim::SimConfig;
+    use crate::session::{EngineSpec, ImputeSession};
     use crate::util::rng::Rng;
     use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
 
@@ -141,7 +141,13 @@ mod tests {
             sim: SimConfig::default(),
             ..RawAppConfig::default()
         };
-        let des = run_raw(&panel, &targets, &cfg);
+        // DES cross-check through the session pipeline (analytic::Workload
+        // is this module's own shape descriptor, hence the full path).
+        let des = ImputeSession::new(crate::session::Workload::from_parts(panel, targets))
+            .engine(EngineSpec::Event)
+            .app_config(cfg)
+            .run()
+            .expect("event plane is always available");
         let pred = predict(
             &Workload {
                 n_hap: 8,
@@ -153,12 +159,13 @@ mod tests {
             &cluster,
             &CostModel::default(),
         );
-        let ratio = pred.seconds / des.sim_seconds;
+        let des_seconds = des.sim_seconds.expect("event plane reports simulated time");
+        let ratio = pred.seconds / des_seconds;
         assert!(
             (0.3..3.0).contains(&ratio),
             "analytic {}s vs DES {}s (ratio {ratio})",
             pred.seconds,
-            des.sim_seconds
+            des_seconds
         );
     }
 

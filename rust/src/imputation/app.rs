@@ -127,37 +127,6 @@ pub fn build_raw_graph(
     b.build()
 }
 
-/// Run the raw event-driven imputation on the simulated cluster.
-///
-/// Thin shim over the session pipeline, kept so downstream diffs stay
-/// reviewable while callers migrate.
-#[deprecated(
-    note = "use session::ImputeSession with EngineSpec::Event (rust/src/session/)"
-)]
-pub fn run_raw(
-    panel: &ReferencePanel,
-    targets: &[TargetHaplotype],
-    cfg: &RawAppConfig,
-) -> EventRunResult {
-    use crate::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
-    let report = ImputeSession::new(Workload::from_parts(panel.clone(), targets.to_vec()))
-        .engine(EngineSpec::Event)
-        .app_config(cfg.clone())
-        .run()
-        .expect("event plane is always available");
-    let ImputeReport {
-        dosages,
-        metrics,
-        sim_seconds,
-        ..
-    } = report;
-    EventRunResult {
-        dosages,
-        metrics: metrics.expect("event plane reports metrics"),
-        sim_seconds: sim_seconds.expect("event plane reports simulated time"),
-    }
-}
-
 /// Pull per-target dosage vectors out of the accumulator vertices.
 pub fn extract_results(
     sim: &Simulator<RawVertex>,
@@ -185,16 +154,34 @@ pub fn extract_results(
     }
 }
 
-// The shim is the unit under test here: these are the raw plane's canonical
-// numerics/metrics checks and they deliberately run through the deprecated
-// entry point so it stays correct until removal.
+// The raw plane's canonical numerics/metrics checks, driven through the
+// session pipeline (the only entry point since the deprecated `run_raw`
+// shim was removed).
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::model::baseline::{Baseline, ImputeOut, Method};
+    use crate::session::{EngineSpec, ImputeSession, Workload};
     use crate::util::rng::Rng;
     use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+    /// Run the raw event plane on one workload (what `run_raw` used to do).
+    fn run_event(
+        panel: &ReferencePanel,
+        targets: &[TargetHaplotype],
+        cfg: &RawAppConfig,
+    ) -> EventRunResult {
+        let report = ImputeSession::new(Workload::from_parts(panel.clone(), targets.to_vec()))
+            .engine(EngineSpec::Event)
+            .app_config(cfg.clone())
+            .run()
+            .expect("event plane is always available");
+        EventRunResult {
+            dosages: report.dosages,
+            metrics: report.metrics.expect("event plane reports metrics"),
+            sim_seconds: report.sim_seconds.expect("event plane reports simulated time"),
+        }
+    }
 
     fn small_cfg() -> RawAppConfig {
         RawAppConfig {
@@ -237,7 +224,7 @@ mod tests {
     #[test]
     fn event_driven_matches_baseline_single_target() {
         let (panel, targets) = problem(2, 8, 12, 1);
-        let out = run_raw(&panel, &targets, &small_cfg());
+        let out = run_event(&panel, &targets, &small_cfg());
         let b = Baseline::default();
         let want: ImputeOut<f32> = b.impute(&panel, &targets[0], Method::DenseThreeLoop);
         for m in 0..panel.n_mark() {
@@ -253,7 +240,7 @@ mod tests {
     #[test]
     fn event_driven_matches_baseline_pipelined_targets() {
         let (panel, targets) = problem(3, 6, 15, 4);
-        let out = run_raw(&panel, &targets, &small_cfg());
+        let out = run_event(&panel, &targets, &small_cfg());
         let b = Baseline::default();
         for (t, target) in targets.iter().enumerate() {
             let want: ImputeOut<f32> = b.impute(&panel, target, Method::DenseThreeLoop);
@@ -271,7 +258,7 @@ mod tests {
     #[test]
     fn pipeline_completes_in_m_plus_t_steps() {
         let (panel, targets) = problem(4, 6, 12, 5);
-        let out = run_raw(&panel, &targets, &small_cfg());
+        let out = run_event(&panel, &targets, &small_cfg());
         // One target injected per step; the last needs ~M more steps to
         // drain, plus constant startup/drain slack.
         let steps = out.metrics.steps;
@@ -283,7 +270,7 @@ mod tests {
     #[test]
     fn message_counts_match_theory() {
         let (panel, targets) = problem(5, 6, 10, 2);
-        let out = run_raw(&panel, &targets, &small_cfg());
+        let out = run_event(&panel, &targets, &small_cfg());
         let (h, m, t) = (6u64, 10u64, 2u64);
         // Multicast sends: α from columns 0..M-1, β from columns M-1..0 →
         // each vertex sends one α (except last col) and one β (except col 0)
@@ -298,8 +285,8 @@ mod tests {
     #[test]
     fn host_threads_do_not_change_results_or_timing() {
         let (panel, targets) = problem(7, 8, 14, 3);
-        let serial = run_raw(&panel, &targets, &small_cfg());
-        let parallel = run_raw(&panel, &targets, &small_cfg().with_threads(4));
+        let serial = run_event(&panel, &targets, &small_cfg());
+        let parallel = run_event(&panel, &targets, &small_cfg().with_threads(4));
         assert_eq!(serial.dosages, parallel.dosages, "thread count changed numerics");
         assert_eq!(serial.metrics.sim_cycles, parallel.metrics.sim_cycles);
         assert_eq!(serial.metrics.sends, parallel.metrics.sends);
@@ -316,8 +303,8 @@ mod tests {
         cfg1.states_per_thread = 1;
         let mut cfg8 = small_cfg();
         cfg8.states_per_thread = 8;
-        let a = run_raw(&panel, &targets, &cfg1);
-        let b = run_raw(&panel, &targets, &cfg8);
+        let a = run_event(&panel, &targets, &cfg1);
+        let b = run_event(&panel, &targets, &cfg8);
         assert_eq!(a.dosages, b.dosages, "mapping must not change numerics");
         assert!(a.sim_seconds != b.sim_seconds, "timing should differ");
     }

@@ -122,37 +122,6 @@ pub fn build_interp_graph(
     b.build()
 }
 
-/// Run the interpolation app; returns full-grid dosages per target.
-///
-/// Thin shim over the session pipeline, kept so downstream diffs stay
-/// reviewable while callers migrate.
-#[deprecated(
-    note = "use session::ImputeSession with EngineSpec::Interp (rust/src/session/)"
-)]
-pub fn run_interp(
-    panel: &ReferencePanel,
-    targets: &[TargetHaplotype],
-    cfg: &RawAppConfig,
-) -> EventRunResult {
-    use crate::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
-    let report = ImputeSession::new(Workload::from_parts(panel.clone(), targets.to_vec()))
-        .engine(EngineSpec::Interp)
-        .app_config(cfg.clone())
-        .run()
-        .expect("interp plane: targets must share an annotation grid");
-    let ImputeReport {
-        dosages,
-        metrics,
-        sim_seconds,
-        ..
-    } = report;
-    EventRunResult {
-        dosages,
-        metrics: metrics.expect("interp plane reports metrics"),
-        sim_seconds: sim_seconds.expect("interp plane reports simulated time"),
-    }
-}
-
 /// Reassemble per-target full-grid dosages from the accumulator vertices.
 pub fn extract_interp_results(
     sim: &Simulator<InterpVertex>,
@@ -184,17 +153,45 @@ pub fn extract_interp_results(
     }
 }
 
-// These canonical interp-plane checks deliberately run through the
-// deprecated shims so they stay correct until removal.
+// The interp plane's canonical checks, driven through the session pipeline
+// (the only entry point since the deprecated `run_interp` shim was removed).
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::model::baseline::{Baseline, ImputeOut, Method};
     use crate::model::interpolation::impute_interp;
     use crate::poets::topology::ClusterConfig;
+    use crate::session::{EngineSpec, ImputeSession, Workload};
     use crate::util::rng::Rng;
     use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+
+    /// Run one event plane on a bare workload (what the removed
+    /// `run_raw`/`run_interp` shims did).
+    fn run_plane(
+        spec: EngineSpec,
+        panel: &ReferencePanel,
+        targets: &[TargetHaplotype],
+        cfg: &RawAppConfig,
+    ) -> EventRunResult {
+        let report = ImputeSession::new(Workload::from_parts(panel.clone(), targets.to_vec()))
+            .engine(spec)
+            .app_config(cfg.clone())
+            .run()
+            .expect("event planes are always available");
+        EventRunResult {
+            dosages: report.dosages,
+            metrics: report.metrics.expect("event planes report metrics"),
+            sim_seconds: report.sim_seconds.expect("event planes report simulated time"),
+        }
+    }
+
+    fn run_interp(
+        panel: &ReferencePanel,
+        targets: &[TargetHaplotype],
+        cfg: &RawAppConfig,
+    ) -> EventRunResult {
+        run_plane(EngineSpec::Interp, panel, targets, cfg)
+    }
 
     fn cfg() -> RawAppConfig {
         RawAppConfig {
@@ -287,7 +284,7 @@ mod tests {
         // The §6.3 claim: sectioning cuts messages by roughly the section
         // size. Compare send counts of raw vs interp on the same panel.
         let (panel, targets) = problem(4, 8, 101, 2);
-        let raw = crate::imputation::app::run_raw(&panel, &targets, &cfg());
+        let raw = run_plane(EngineSpec::Event, &panel, &targets, &cfg());
         let itp = run_interp(&panel, &targets, &cfg());
         let ratio = raw.metrics.sends as f64 / itp.metrics.sends as f64;
         assert!(
@@ -301,7 +298,7 @@ mod tests {
     #[test]
     fn interp_faster_than_raw_in_sim_time() {
         let (panel, targets) = problem(5, 8, 101, 2);
-        let raw = crate::imputation::app::run_raw(&panel, &targets, &cfg());
+        let raw = run_plane(EngineSpec::Event, &panel, &targets, &cfg());
         let itp = run_interp(&panel, &targets, &cfg());
         assert!(
             itp.sim_seconds < raw.sim_seconds,

@@ -9,8 +9,10 @@
 //! * [`analytic`] — closed-form step-time predictor, cross-validated against
 //!   the DES and used to extrapolate figure sweeps to full paper scale.
 //!
-//! Execution goes through the unified pipeline in [`crate::session`]; the
-//! `run_raw` / `run_interp` entry points survive only as deprecated shims.
+//! Execution goes through the unified pipeline in [`crate::session`] —
+//! build a workload, pick [`EngineSpec::Event`](crate::session::EngineSpec)
+//! or `Interp`, run an `ImputeSession` (the old `run_raw` / `run_interp`
+//! entry points are gone).
 
 pub mod analytic;
 pub mod app;
@@ -21,6 +23,3 @@ pub mod obs;
 pub mod vertex;
 
 pub use app::{EventRunResult, RawAppConfig, build_raw_graph};
-// Deprecated shim, re-exported for downstream-compat until removal.
-#[allow(deprecated)]
-pub use app::run_raw;

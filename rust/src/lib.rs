@@ -29,8 +29,21 @@
 //! ```
 //!
 //! The CLI (`poets-impute impute|validate`), the figure/ablation benches and
-//! every example run on this API; the plane-specific entry points of earlier
-//! revisions survive only as deprecated shims.
+//! every example run on this API (the deprecated per-plane entry points of
+//! earlier revisions have been removed).
+//!
+//! ## Real panels
+//!
+//! [`genomics`] is the real-data front door: `poets-impute panel ingest
+//! cohort.vcf cohort.ppnl` parses a phased bi-allelic VCF
+//! ([`genomics::vcf`]) and writes it bit-packed at 1 bit/allele
+//! ([`genomics::packed::PackedPanel`], the `.ppnl` format).  Anywhere a
+//! panel is named — `impute --panel`, serve request lines, the
+//! [`serve::PanelRegistry`] API — `vcf:<path>` and `packed:<path>` specs
+//! load real panels alongside `synth:` recipes, and `impute --panel ...
+//! --window W --overlap V` runs chromosome-scale inputs as overlapping
+//! marker windows stitched back into one report
+//! ([`genomics::window::run_windowed`]).
 //!
 //! ## Serving
 //!
@@ -52,6 +65,8 @@
 //! * [`workload`] — synthetic reference-panel / genetic-map generation
 //!   following the paper's §6.2 recipe (diallelic, 5 % MAF, 1/100 or 1/10
 //!   marker ratios).
+//! * [`genomics`] — real-data panels: the VCF-subset parser, the bit-packed
+//!   `.ppnl` panel store, and windowed chunking with dosage stitching.
 //! * [`poets`] — a cycle-approximate functional + timing simulator of the
 //!   POETS cluster: topology, NoC, mailboxes, hardware multicast,
 //!   termination detection, discrete-event core and a calibrated cost model.
@@ -73,6 +88,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod genomics;
 pub mod graph;
 pub mod imputation;
 pub mod model;

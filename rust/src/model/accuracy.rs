@@ -62,6 +62,25 @@ pub fn score(dosage: &[f32], truth: &[u8], target: &TargetHaplotype) -> Accuracy
     }
 }
 
+/// Score a whole run: per-target scores against the withheld truth,
+/// aggregated with markers-scored weighting.  The single convention shared
+/// by `ImputeSession::run` and the windowed pipeline
+/// (`genomics::window::run_windowed`) — keep them on this helper so the
+/// scoring rules cannot drift apart.
+pub fn score_set(
+    dosages: &[Vec<f32>],
+    truth: &[Vec<u8>],
+    targets: &[TargetHaplotype],
+) -> Accuracy {
+    let per: Vec<Accuracy> = truth
+        .iter()
+        .zip(dosages)
+        .zip(targets)
+        .map(|((t, d), target)| score(d, t, target))
+        .collect();
+    aggregate(&per)
+}
+
 /// Aggregate accuracies across a batch of targets (weighted by markers scored).
 pub fn aggregate(accs: &[Accuracy]) -> Accuracy {
     let total: usize = accs.iter().map(|a| a.n_scored).sum();

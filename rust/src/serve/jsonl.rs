@@ -13,12 +13,23 @@
 //!  "engine": "event", "synth_targets": 2, "target_seed": 9}
 //! ```
 //!
-//! * `panel` (string, required) — registry name, e.g. a `synth:` spec.
+//! * `panel` (string, required) — registry name: a registered panel, a
+//!   `synth:hap=..,mark=..` spec, or a file-backed `vcf:<path>` /
+//!   `packed:<path>` spec (see [`super::registry`]).  A missing or corrupt
+//!   file fails that request in-band (`serve-error/v1`), like any other
+//!   bad request — never a worker panic.
 //! * `engine` (string, default `"event"`) — any `EngineSpec` spelling.
 //! * `targets` (array of arrays) — observation vectors, one per target:
 //!   `-1` untyped, `0`/`1` typed alleles.  Mutually exclusive with:
 //! * `synth_targets` (int) + `target_seed` (int, default 0) — mint targets
-//!   from the panel's synthetic recipe server-side (testing/load-gen).
+//!   server-side (testing/load-gen): from the panel's synthetic recipe when
+//!   it has one, otherwise Li & Stephens mosaics of the panel itself on a
+//!   1-in-10 annotation grid (so file-backed panels work too).  Caveat:
+//!   minting needs the panel, so `synth_targets` resolves it on the stream
+//!   reader thread — a slow file-backed load head-of-line blocks admission
+//!   of later lines (explicit `targets` requests resolve in the workers and
+//!   do not).  Prefer explicit targets for file-backed panels on shared
+//!   streams; moving minting into the workers is tracked in ROADMAP.
 //! * `id` (int, default: 1-based line number) — echoed in the response.
 //!
 //! ## Response line
@@ -231,7 +242,7 @@ fn parse_request(
                 .and_then(Json::as_i64)
                 .unwrap_or(0) as u64;
             let panel = service.registry().resolve(&panel).map_err(fail)?;
-            panel.synthetic_targets(count, seed).map_err(fail)?
+            panel.minted_targets(count, seed).map_err(fail)?
         }
         (None, None) => {
             return Err(fail(

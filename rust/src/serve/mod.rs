@@ -7,6 +7,9 @@
 //!
 //! * [`PanelRegistry`] — named reference panels loaded once and shared via
 //!   `Arc`; every request against the same panel reuses one in-memory copy.
+//!   Resolves `synth:` recipes and file-backed `vcf:`/`packed:` specs, with
+//!   a bounded least-recently-resolved spec cache (pinned registrations
+//!   exempt).
 //! * [`ImputeRequest`] / [`Ticket`] — the tenant-facing request/response
 //!   pair.  Admission control is a bounded queue: past the configured
 //!   capacity ([`ServeConfig`]) pending requests, submits are rejected with
@@ -178,10 +181,59 @@ struct Group {
     members: Vec<Pending>,
 }
 
+/// Bound on live engines per worker.  A prepared engine pins its panel via
+/// `Arc`, so an unbounded cache would keep every panel a worker ever served
+/// resident even after [`PanelRegistry`] evicts it — the cache must be
+/// bounded for the registry bound to mean anything.
+const ENGINE_CACHE_CAP: usize = 8;
+
 /// One worker's engine cache: the live [`Engine`] per (panel, spec) pair it
-/// has served.  Engines stay on their worker thread for their whole life, so
+/// has served, bounded by [`ENGINE_CACHE_CAP`] with least-recently-used
+/// eviction.  Engines stay on their worker thread for their whole life, so
 /// the trait needs no `Send` bound.
-type EngineCache = HashMap<(String, EngineSpec), Box<dyn Engine>>;
+struct EngineCache {
+    entries: HashMap<(String, EngineSpec), (Box<dyn Engine>, u64)>,
+    tick: u64,
+}
+
+impl EngineCache {
+    fn new() -> EngineCache {
+        EngineCache {
+            entries: HashMap::new(),
+            tick: 0,
+        }
+    }
+
+    /// Fetch the cached engine for `key`, building and inserting it when
+    /// absent (evicting the least-recently-used entry past the cap).
+    fn get_or_build<F: FnOnce() -> Box<dyn Engine>>(
+        &mut self,
+        key: &(String, EngineSpec),
+        build: F,
+    ) -> &mut Box<dyn Engine> {
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.entries.contains_key(key) {
+            while self.entries.len() >= ENGINE_CACHE_CAP {
+                let victim = self
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, (_, last_used))| *last_used)
+                    .map(|(k, _)| k.clone())
+                    .expect("cache at capacity is nonempty");
+                self.entries.remove(&victim);
+            }
+            self.entries.insert(key.clone(), (build(), tick));
+        }
+        let slot = self.entries.get_mut(key).expect("just ensured present");
+        slot.1 = tick;
+        &mut slot.0
+    }
+
+    fn remove(&mut self, key: &(String, EngineSpec)) {
+        self.entries.remove(key);
+    }
+}
 
 /// The multi-tenant imputation service: a panel registry, a bounded
 /// coalescing queue and a worker pool.  See the [module docs](self) for the
@@ -398,9 +450,8 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
     let key = (panel_name, spec);
     let mut had_error = false;
     {
-        let engine = engines
-            .entry(key.clone())
-            .or_insert_with(|| build_engine(spec, &shared.cfg.app, shared.cfg.mapping));
+        let engine =
+            engines.get_or_build(&key, || build_engine(spec, &shared.cfg.app, shared.cfg.mapping));
         let width = good.len();
         // Target-independent prepares (panel binding, runtime opening) run
         // once per group against a target-less workload — zero copies of
@@ -503,9 +554,11 @@ fn serve_one(
             n_hap: panel.panel().n_hap(),
             n_mark: panel.panel().n_mark(),
             n_targets,
+            panel: Some(panel.name().to_string()),
             provenance: panel.recipe().copied(),
             batch_size: n_targets,
             n_batches: 1,
+            windows: None,
             boards: shared.cfg.app.cluster.n_boards,
             states_per_thread: shared.cfg.app.states_per_thread,
             threads: shared.cfg.app.sim.threads.unwrap_or(1),
@@ -707,6 +760,30 @@ mod tests {
         for t in tickets {
             t.wait().unwrap();
         }
+    }
+
+    #[test]
+    fn engine_cache_is_bounded_with_lru_eviction() {
+        let mut cache = EngineCache::new();
+        let app = RawAppConfig::default();
+        let key = |i: usize| (format!("panel-{i}"), EngineSpec::Baseline);
+        for i in 0..ENGINE_CACHE_CAP + 4 {
+            cache.get_or_build(&key(i), || {
+                build_engine(EngineSpec::Baseline, &app, MappingStrategy::Manual2d)
+            });
+        }
+        assert_eq!(cache.entries.len(), ENGINE_CACHE_CAP, "cache must stay bounded");
+        // The most recent key survives; the oldest was evicted.
+        assert!(cache.entries.contains_key(&key(ENGINE_CACHE_CAP + 3)));
+        assert!(!cache.entries.contains_key(&key(0)));
+        // Touching an entry refreshes it past newer insertions.
+        cache.get_or_build(&key(5), || unreachable!("cached"));
+        cache.get_or_build(&key(100), || {
+            build_engine(EngineSpec::Baseline, &app, MappingStrategy::Manual2d)
+        });
+        assert!(cache.entries.contains_key(&key(5)), "freshly-used entry evicted");
+        cache.remove(&key(5));
+        assert!(!cache.entries.contains_key(&key(5)));
     }
 
     #[test]

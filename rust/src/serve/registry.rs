@@ -9,32 +9,56 @@
 //! workload around the shared handle without copying panel data
 //! ([`Workload::from_shared`]).
 //!
-//! Two ways for a panel to enter the registry:
+//! Ways for a panel to enter the registry:
 //!
 //! * **Explicit registration** ([`PanelRegistry::register`]) — the embedding
-//!   application loads a cohort panel and names it.
-//! * **Synthetic specs** — a panel name of the form
-//!   `synth:hap=H,mark=M[,maf=F][,annot=R][,seed=S]` is generated on first
-//!   use with the paper's §6.2 recipe and cached under that exact string.
-//!   This keeps the `serve`/`bench-serve` CLI self-contained (no panel files
-//!   in the offline environment) and makes request lines reproducible.
+//!   application loads a cohort panel and names it.  Registered panels are
+//!   **pinned**: the capacity bound below never evicts them.
+//! * **Spec resolution** — a panel name with a recognised prefix is loaded
+//!   on first use and cached under that exact string:
+//!   - `synth:hap=H,mark=M[,maf=F][,annot=R][,seed=S]` — generated with the
+//!     paper's §6.2 recipe (keeps the `serve`/`bench-serve` CLI
+//!     self-contained and request lines reproducible);
+//!   - `vcf:<path>` — ingested through [`crate::genomics::vcf`] (bi-allelic
+//!     phased sites, per-site metadata retained);
+//!   - `packed:<path>` — a bit-packed `.ppnl` file written by
+//!     `poets-impute panel ingest` ([`crate::genomics::packed`]).
+//!
+//!   File-backed specs read whatever path the request names, so expose the
+//!   serve frontends only to clients you would hand shell access to the
+//!   panel directory anyway; loading failures (missing file, corrupt
+//!   payload, malformed VCF) are recoverable errors that serve reports
+//!   in-band, never worker panics.
+//!
+//! Spec-resolved panels are cached with **least-recently-resolved
+//! eviction**: at most [`PanelRegistry::with_capacity`] unpinned panels
+//! stay resident (default [`DEFAULT_SPEC_CAPACITY`]), so a stream of
+//! distinct specs cannot grow the cache without bound.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::genomics::packed::PackedPanel;
+use crate::genomics::vcf::{self, Site};
 use crate::model::panel::{ReferencePanel, TargetHaplotype};
 use crate::session::Workload;
 use crate::util::rng::Rng;
-use crate::workload::panelgen::{PanelConfig, generate_panel, generate_targets};
+use crate::workload::panelgen::{PanelConfig, TargetCase, generate_panel, generate_targets};
 
 /// A panel held by the registry: the shared data plus (when synthetic) the
 /// generation recipe, which lets the serve CLI mint matching targets and the
-/// per-request report record provenance.
+/// per-request report record provenance, and (when file-backed) the VCF
+/// site metadata.
 #[derive(Debug)]
 pub struct RegisteredPanel {
     name: String,
     panel: Arc<ReferencePanel>,
     recipe: Option<PanelConfig>,
+    sites: Option<Arc<Vec<Site>>>,
+    /// Cap on `count * n_mark` for minted targets, inherited from the
+    /// registry that created this panel (`usize::MAX` for unbounded
+    /// registries).
+    mint_cap: usize,
 }
 
 impl RegisteredPanel {
@@ -56,6 +80,12 @@ impl RegisteredPanel {
         self.recipe.as_ref()
     }
 
+    /// Per-site metadata (CHROM/POS/ID, allele frequency), when the panel
+    /// came from a VCF or a `.ppnl` that carried it.
+    pub fn sites(&self) -> Option<&[Site]> {
+        self.sites.as_deref().map(Vec::as_slice)
+    }
+
     /// Assemble a request workload around the shared panel (no panel copy).
     pub fn workload(&self, targets: Vec<TargetHaplotype>) -> Result<Workload, String> {
         Workload::from_shared(self.panel_arc(), targets)
@@ -75,11 +105,12 @@ impl RegisteredPanel {
         let recipe = self
             .recipe
             .ok_or_else(|| format!("panel {:?} has no synthetic recipe", self.name))?;
-        if count.saturating_mul(self.panel.n_mark()) > MAX_SYNTH_STATES {
+        if count.saturating_mul(self.panel.n_mark()) > self.mint_cap {
             return Err(format!(
                 "{count} synthetic targets x {} markers exceeds the service cap \
-                 of {MAX_SYNTH_STATES} observations",
-                self.panel.n_mark()
+                 of {} observations",
+                self.panel.n_mark(),
+                self.mint_cap
             ));
         }
         let mut rng = Rng::new(seed ^ recipe.seed.rotate_left(17) ^ 0x5EED_7A26);
@@ -88,13 +119,107 @@ impl RegisteredPanel {
             .map(|case| case.masked)
             .collect())
     }
+
+    /// Mint `count` Li & Stephens mosaic targets from the panel itself,
+    /// masked to an `annot_ratio` grid, **truth retained** — works for any
+    /// panel (file-backed included): the mosaic process only needs the
+    /// panel's haplotypes and genetic distances.  This is the paper's
+    /// generative model, so accuracy scored against the retained truth is
+    /// meaningful.  Deterministic in `seed`; capped like
+    /// [`RegisteredPanel::synthetic_targets`].
+    pub fn mosaic_targets(
+        &self,
+        count: usize,
+        annot_ratio: f64,
+        seed: u64,
+    ) -> Result<Vec<TargetCase>, String> {
+        if !(annot_ratio > 0.0 && annot_ratio <= 1.0) {
+            return Err(format!("annot_ratio {annot_ratio} must be in (0, 1]"));
+        }
+        if count.saturating_mul(self.panel.n_mark()) > self.mint_cap {
+            return Err(format!(
+                "{count} mosaic targets x {} markers exceeds the service cap \
+                 of {} observations",
+                self.panel.n_mark(),
+                self.mint_cap
+            ));
+        }
+        let cfg = PanelConfig {
+            n_hap: self.panel.n_hap(),
+            n_mark: self.panel.n_mark(),
+            annot_ratio,
+            seed,
+            ..PanelConfig::default()
+        };
+        let mut rng = Rng::new(seed.rotate_left(11) ^ 0x7A26_5EED);
+        Ok(generate_targets(&self.panel, &cfg, count, &mut rng))
+    }
+
+    /// Mint masked request targets from whatever this panel can offer: the
+    /// synthetic recipe when there is one, otherwise mosaic targets on a
+    /// default 1-in-10 annotation grid — so `"synth_targets"` request lines
+    /// work against `vcf:`/`packed:` panels too.
+    pub fn minted_targets(
+        &self,
+        count: usize,
+        seed: u64,
+    ) -> Result<Vec<TargetHaplotype>, String> {
+        if self.recipe.is_some() {
+            self.synthetic_targets(count, seed)
+        } else {
+            Ok(self
+                .mosaic_targets(count, DEFAULT_MINT_ANNOT_RATIO, seed)?
+                .into_iter()
+                .map(|case| case.masked)
+                .collect())
+        }
+    }
+}
+
+/// One cache slot: the shared panel plus its eviction bookkeeping.
+struct Entry {
+    panel: Arc<RegisteredPanel>,
+    /// Explicitly registered panels are never evicted.
+    pinned: bool,
+    /// Tick of the most recent resolve/insert (the LRU ordering key).
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct RegistryState {
+    entries: HashMap<String, Entry>,
+    tick: u64,
 }
 
 /// Thread-safe name → panel cache.  `resolve` is what the serve workers call
 /// on every coalesced batch; hits are one mutex lock + one `Arc` clone.
-#[derive(Default)]
+/// Spec-resolved entries are bounded (least-recently-resolved eviction);
+/// registered panels are pinned and do not count against the bound.
+///
+/// Two admission policies, both per-registry:
+///
+/// * `capacity` — how many spec-resolved panels stay resident;
+/// * `state_cap` — the largest `hap * mark` a spec may load (and the cap on
+///   minted-target allocations).  The default suits serve frontends, where
+///   specs arrive on untrusted request lines; trusted embedders loading
+///   chromosome-scale panels (the CLI) use [`PanelRegistry::unbounded`].
 pub struct PanelRegistry {
-    panels: Mutex<HashMap<String, Arc<RegisteredPanel>>>,
+    state: Mutex<RegistryState>,
+    capacity: usize,
+    state_cap: usize,
+}
+
+/// Default bound on resident spec-resolved panels.
+pub const DEFAULT_SPEC_CAPACITY: usize = 32;
+
+/// Annotation grid used when minting targets for panels without a synthetic
+/// recipe (see [`RegisteredPanel::minted_targets`]).
+pub const DEFAULT_MINT_ANNOT_RATIO: f64 = 0.1;
+
+impl Default for PanelRegistry {
+    fn default() -> Self {
+        PanelRegistry::with_caps(DEFAULT_SPEC_CAPACITY, MAX_PANEL_STATES)
+    }
 }
 
 impl PanelRegistry {
@@ -102,13 +227,40 @@ impl PanelRegistry {
         PanelRegistry::default()
     }
 
+    /// A registry keeping at most `capacity` spec-resolved panels resident
+    /// (pinned registered panels are exempt and uncounted).
+    pub fn with_capacity(capacity: usize) -> PanelRegistry {
+        PanelRegistry::with_caps(capacity, MAX_PANEL_STATES)
+    }
+
+    /// A registry for trusted callers: no panel-size or minted-target cap
+    /// (cache bound still applies).  This is what `impute --panel` and
+    /// `panel info` use — a chromosome-scale `.ppnl` is the point of the
+    /// windowed pipeline, not an attack.
+    pub fn unbounded() -> PanelRegistry {
+        PanelRegistry::with_caps(DEFAULT_SPEC_CAPACITY, usize::MAX)
+    }
+
+    /// Full control over both bounds (`state_cap` = max `hap * mark` a spec
+    /// may load, and the minted-target observation cap).
+    pub fn with_caps(capacity: usize, state_cap: usize) -> PanelRegistry {
+        PanelRegistry {
+            state: Mutex::new(RegistryState::default()),
+            capacity: capacity.max(1),
+            state_cap,
+        }
+    }
+
     /// Register a pre-loaded panel under `name` (replacing any previous
-    /// holder of the name).  Returns the shared handle.
+    /// holder of the name).  Returns the shared handle.  Registered panels
+    /// are pinned: eviction never touches them.
     pub fn register(&self, name: &str, panel: ReferencePanel) -> Arc<RegisteredPanel> {
         self.insert(RegisteredPanel {
             name: name.to_string(),
             panel: Arc::new(panel),
             recipe: None,
+            sites: None,
+            mint_cap: self.state_cap,
         })
     }
 
@@ -119,53 +271,96 @@ impl PanelRegistry {
             name: name.to_string(),
             panel: Arc::new(generate_panel(cfg)),
             recipe: Some(*cfg),
+            sites: None,
+            mint_cap: self.state_cap,
         })
     }
 
     fn insert(&self, panel: RegisteredPanel) -> Arc<RegisteredPanel> {
         let shared = Arc::new(panel);
-        self.panels
-            .lock()
-            .expect("panel registry poisoned")
-            .insert(shared.name.clone(), Arc::clone(&shared));
+        let mut st = self.state.lock().expect(POISONED);
+        st.tick += 1;
+        let tick = st.tick;
+        st.entries.insert(
+            shared.name.clone(),
+            Entry {
+                panel: Arc::clone(&shared),
+                pinned: true,
+                last_used: tick,
+            },
+        );
         shared
     }
 
-    /// Look up `name`, generating and caching `synth:` specs on first use.
+    /// Look up `name`, loading recognised specs (`synth:` / `vcf:` /
+    /// `packed:`) on first use.
     ///
     /// The cache key is the exact spec string, so two spellings of the same
     /// recipe (`synth:hap=8,mark=21` vs `synth:mark=21,hap=8`) cache
     /// separately — canonicalise spellings client-side if that matters.
+    /// Loading happens **outside** the lock: a request naming a slow or
+    /// blocking path (NFS, a FIFO) stalls only its own resolve, never the
+    /// whole registry.  The price is that concurrent first requests for the
+    /// same spec may both load it; the first insert wins and later loaders
+    /// adopt the cached copy, so callers still share one panel.
     pub fn resolve(&self, name: &str) -> Result<Arc<RegisteredPanel>, String> {
-        let mut panels = self.panels.lock().expect("panel registry poisoned");
-        if let Some(p) = panels.get(name) {
-            return Ok(Arc::clone(p));
+        {
+            let mut st = self.state.lock().expect(POISONED);
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some(e) = st.entries.get_mut(name) {
+                e.last_used = tick;
+                return Ok(Arc::clone(&e.panel));
+            }
         }
-        let Some(spec) = name.strip_prefix("synth:") else {
-            return Err(format!(
-                "unknown panel {name:?} (register it, or use a synth:hap=..,mark=.. spec)"
-            ));
-        };
-        // Generate while holding the lock: concurrent first requests for the
-        // same spec then build it exactly once (generation is fast relative
-        // to imputation; a successor can move to per-entry once-cells if a
-        // huge synthetic panel ever stalls the registry).
-        let cfg = parse_synth_spec(spec)?;
-        let shared = Arc::new(RegisteredPanel {
-            name: name.to_string(),
-            panel: Arc::new(generate_panel(&cfg)),
-            recipe: Some(cfg),
-        });
-        panels.insert(name.to_string(), Arc::clone(&shared));
-        Ok(shared)
+        let loaded = Arc::new(load_spec(name, self.state_cap)?);
+        let mut st = self.state.lock().expect(POISONED);
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(e) = st.entries.get_mut(name) {
+            // A racing resolve beat us to the insert: share its copy and
+            // drop ours.
+            e.last_used = tick;
+            return Ok(Arc::clone(&e.panel));
+        }
+        st.entries.insert(
+            name.to_string(),
+            Entry {
+                panel: Arc::clone(&loaded),
+                pinned: false,
+                last_used: tick,
+            },
+        );
+        self.evict_over_capacity(&mut st);
+        Ok(loaded)
+    }
+
+    /// Drop least-recently-resolved unpinned entries until the bound holds.
+    /// The entry just inserted carries the newest tick, so it survives.
+    fn evict_over_capacity(&self, st: &mut RegistryState) {
+        loop {
+            let unpinned = st.entries.values().filter(|e| !e.pinned).count();
+            if unpinned <= self.capacity {
+                return;
+            }
+            let victim = st
+                .entries
+                .iter()
+                .filter(|(_, e)| !e.pinned)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("unpinned count > 0");
+            st.entries.remove(&victim);
+        }
     }
 
     /// Names currently cached (sorted, for `info`-style listings).
     pub fn names(&self) -> Vec<String> {
         let mut names: Vec<String> = self
-            .panels
+            .state
             .lock()
-            .expect("panel registry poisoned")
+            .expect(POISONED)
+            .entries
             .keys()
             .cloned()
             .collect();
@@ -174,7 +369,7 @@ impl PanelRegistry {
     }
 
     pub fn len(&self) -> usize {
-        self.panels.lock().expect("panel registry poisoned").len()
+        self.state.lock().expect(POISONED).entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -182,10 +377,106 @@ impl PanelRegistry {
     }
 }
 
+const POISONED: &str = "panel registry poisoned";
+
+/// Load a spec-named panel: dispatch on the prefix.  `state_cap` is the
+/// owning registry's admission bound on `hap * mark`.
+fn load_spec(name: &str, state_cap: usize) -> Result<RegisteredPanel, String> {
+    if let Some(spec) = name.strip_prefix("synth:") {
+        let cfg = parse_synth_spec(spec, state_cap)?;
+        return Ok(RegisteredPanel {
+            name: name.to_string(),
+            panel: Arc::new(generate_panel(&cfg)),
+            recipe: Some(cfg),
+            sites: None,
+            mint_cap: state_cap,
+        });
+    }
+    if let Some(path) = name.strip_prefix("vcf:") {
+        // Pre-admission by file size: every haplotype-site costs >= 2 bytes
+        // of GT text, so a file bigger than 16 bytes/state is over any cap
+        // with enormous slack — rejected before the read, so cheap request
+        // lines cannot repeatedly trigger multi-GB parses.
+        if state_cap != usize::MAX {
+            let bytes = std::fs::metadata(path)
+                .map_err(|e| format!("cannot read {path}: {e}"))?
+                .len();
+            let budget = (state_cap as u64).saturating_mul(16).max(64 << 20);
+            if bytes > budget {
+                return Err(format!(
+                    "{path} is {bytes} bytes, over this registry's admission budget \
+                     of {budget} (the panel cannot fit the {state_cap}-state cap)"
+                ));
+            }
+        }
+        let v = vcf::load(path)?;
+        check_loaded_size(v.panel.n_hap(), v.panel.n_mark(), state_cap)?;
+        return Ok(RegisteredPanel {
+            name: name.to_string(),
+            panel: Arc::new(v.panel),
+            recipe: None,
+            sites: Some(Arc::new(v.sites)),
+            mint_cap: state_cap,
+        });
+    }
+    if let Some(path) = name.strip_prefix("packed:") {
+        // Pre-admission from the 32-byte header: reject over-cap panels
+        // before reading, checksumming and unpacking the whole file.
+        let (n_hap, n_mark) = PackedPanel::peek_shape(path)?;
+        check_loaded_size(n_hap, n_mark, state_cap)?;
+        // And by file size: a file vastly larger than its claimed shape can
+        // justify (distances + bit rows + a generous 1 KiB/site metadata
+        // allowance) is garbage-padded — reject before `read` loads it all.
+        if state_cap != usize::MAX {
+            let bytes = std::fs::metadata(path)
+                .map_err(|e| format!("cannot read {path}: {e}"))?
+                .len();
+            let budget = 40u64
+                .saturating_add(n_mark as u64 * 8)
+                .saturating_add(n_hap as u64 * n_mark.div_ceil(8) as u64)
+                .saturating_add(n_mark as u64 * 1024)
+                .max(1 << 20);
+            if bytes > budget {
+                return Err(format!(
+                    "{path} is {bytes} bytes but its header claims a \
+                     {n_hap}x{n_mark} panel (budget {budget} bytes) — refusing to load"
+                ));
+            }
+        }
+        let packed = PackedPanel::read(path)?;
+        check_loaded_size(packed.n_hap(), packed.n_mark(), state_cap)?;
+        let sites = packed.sites().map(|s| Arc::new(s.to_vec()));
+        return Ok(RegisteredPanel {
+            name: name.to_string(),
+            panel: Arc::new(packed.to_panel()),
+            recipe: None,
+            sites,
+            mint_cap: state_cap,
+        });
+    }
+    Err(format!(
+        "unknown panel {name:?} (register it, or use a synth:hap=..,mark=.. / \
+         vcf:<path> / packed:<path> spec)"
+    ))
+}
+
+/// File-backed panels answer to the same admission cap as synth specs: a
+/// request naming a huge file must fail cleanly, not balloon the registry.
+fn check_loaded_size(n_hap: usize, n_mark: usize, state_cap: usize) -> Result<(), String> {
+    if n_hap.saturating_mul(n_mark) > state_cap {
+        return Err(format!(
+            "panel has {} states ({n_hap} x {n_mark}), over the service cap of \
+             {state_cap}",
+            n_hap.saturating_mul(n_mark)
+        ));
+    }
+    Ok(())
+}
+
 /// Parse the body of a `synth:` panel name: comma-separated `key=value`
 /// pairs.  `hap` and `mark` are required; `maf`, `annot`, `seed` default to
 /// the paper's recipe (0.05, 0.1, 0).
-fn parse_synth_spec(spec: &str) -> Result<PanelConfig, String> {
+fn parse_synth_spec(spec: &str, state_cap: usize) -> Result<PanelConfig, String> {
     let mut cfg = PanelConfig {
         annot_ratio: 0.1,
         ..PanelConfig::default()
@@ -233,9 +524,9 @@ fn parse_synth_spec(spec: &str) -> Result<PanelConfig, String> {
     if cfg.n_hap < 2 || cfg.n_mark < 2 {
         return Err("synth spec: hap and mark must be >= 2".into());
     }
-    if cfg.n_hap.saturating_mul(cfg.n_mark) > MAX_SYNTH_STATES {
+    if cfg.n_hap.saturating_mul(cfg.n_mark) > state_cap {
         return Err(format!(
-            "synth spec: hap*mark = {} exceeds the service cap of {MAX_SYNTH_STATES} states",
+            "synth spec: hap*mark = {} exceeds the service cap of {state_cap} states",
             cfg.n_hap.saturating_mul(cfg.n_mark)
         ));
     }
@@ -248,10 +539,11 @@ fn parse_synth_spec(spec: &str) -> Result<PanelConfig, String> {
     Ok(cfg)
 }
 
-/// Admission cap on `hap * mark` for request-line synth specs (and on
-/// `count * mark` for minted targets), so one request cannot make the
-/// registry allocate an absurd amount of memory.
-const MAX_SYNTH_STATES: usize = 1 << 24;
+/// Default admission cap on `hap * mark` for request-line panel specs (and
+/// on `count * mark` for minted targets), so one serve request cannot make
+/// the registry allocate an absurd amount of memory.  Trusted callers lift
+/// it with [`PanelRegistry::unbounded`] / [`PanelRegistry::with_caps`].
+const MAX_PANEL_STATES: usize = 1 << 24;
 
 #[cfg(test)]
 mod tests {
@@ -268,6 +560,7 @@ mod tests {
         assert_eq!(a.panel().n_hap(), 8);
         assert_eq!(a.panel().n_mark(), 21);
         assert_eq!(a.recipe().unwrap().seed, 7);
+        assert!(a.sites().is_none());
         assert_eq!(reg.len(), 1);
         assert_eq!(reg.names(), vec![SPEC.to_string()]);
     }
@@ -342,5 +635,136 @@ mod tests {
         assert!(p.synthetic_targets(1, 0).unwrap_err().contains("recipe"));
         let wl = p.workload(Vec::new()).unwrap();
         assert_eq!(wl.n_targets(), 0);
+    }
+
+    #[test]
+    fn mosaic_targets_work_for_any_panel_and_are_deterministic() {
+        let reg = PanelRegistry::new();
+        let cfg = PanelConfig {
+            n_hap: 6,
+            n_mark: 20,
+            seed: 5,
+            ..PanelConfig::default()
+        };
+        let p = reg.register("cohort", generate_panel(&cfg));
+        let cases = p.mosaic_targets(3, 0.25, 42).unwrap();
+        assert_eq!(cases.len(), 3);
+        for c in &cases {
+            assert_eq!(c.truth.len(), 20);
+            assert_eq!(c.masked.n_mark(), 20);
+            // Masked to the 1-in-4 grid: some markers observed, most not.
+            assert!(c.masked.n_annotated() >= 2);
+            assert!(c.masked.n_annotated() < 20);
+        }
+        let again = p.mosaic_targets(3, 0.25, 42).unwrap();
+        assert_eq!(cases[0].masked.obs, again[0].masked.obs);
+        assert_eq!(cases[0].truth, again[0].truth);
+        // Guard rails.
+        assert!(p.mosaic_targets(1, 0.0, 0).is_err());
+        assert!(p.mosaic_targets(usize::MAX / 2, 0.5, 0).unwrap_err().contains("cap"));
+        // minted_targets falls back to the mosaic path without a recipe.
+        let minted = p.minted_targets(2, 9).unwrap();
+        assert_eq!(minted.len(), 2);
+        assert_eq!(minted[0].n_mark(), 20);
+    }
+
+    #[test]
+    fn spec_cache_evicts_least_recently_resolved() {
+        let reg = PanelRegistry::with_capacity(2);
+        let spec = |seed: u64| format!("synth:hap=4,mark=9,seed={seed}");
+        reg.resolve(&spec(1)).unwrap();
+        reg.resolve(&spec(2)).unwrap();
+        // Touch 1 so 2 becomes the LRU victim.
+        reg.resolve(&spec(1)).unwrap();
+        reg.resolve(&spec(3)).unwrap();
+        assert_eq!(reg.len(), 2);
+        let names = reg.names();
+        assert!(names.contains(&spec(1)), "{names:?}");
+        assert!(names.contains(&spec(3)), "{names:?}");
+        assert!(!names.contains(&spec(2)), "LRU entry must be evicted: {names:?}");
+        // An evicted spec transparently reloads.
+        assert_eq!(reg.resolve(&spec(2)).unwrap().panel().n_mark(), 9);
+    }
+
+    #[test]
+    fn pinned_panels_survive_eviction_pressure() {
+        let reg = PanelRegistry::with_capacity(1);
+        let cfg = PanelConfig {
+            n_hap: 4,
+            n_mark: 9,
+            seed: 8,
+            ..PanelConfig::default()
+        };
+        let pinned = reg.register_synthetic("cohort", &cfg);
+        for seed in 0..5 {
+            reg.resolve(&format!("synth:hap=4,mark=9,seed={seed}")).unwrap();
+        }
+        // One unpinned survivor + the pinned panel.
+        assert_eq!(reg.len(), 2);
+        let resolved = reg.resolve("cohort").unwrap();
+        assert!(Arc::ptr_eq(&pinned, &resolved), "pinned panel must never reload");
+    }
+
+    #[test]
+    fn state_cap_is_registry_policy_not_a_global() {
+        // A tiny cap rejects specs the default registry accepts...
+        let strict = PanelRegistry::with_caps(4, 100);
+        let err = strict.resolve("synth:hap=20,mark=20").unwrap_err();
+        assert!(err.contains("cap of 100"), "{err}");
+        // ...while small panels still load, and minted targets answer to
+        // the same per-registry cap.
+        let p = strict.resolve("synth:hap=4,mark=11").unwrap();
+        let err = p.synthetic_targets(10, 0).unwrap_err(); // 110 obs > 100
+        assert!(err.contains("cap"), "{err}");
+        let err = p.mosaic_targets(10, 0.5, 0).unwrap_err();
+        assert!(err.contains("cap"), "{err}");
+        // The unbounded registry (the CLI's) accepts what serve rejects.
+        let open = PanelRegistry::unbounded();
+        assert!(open.resolve("synth:hap=20,mark=20").is_ok());
+        let p = open.resolve("synth:hap=4,mark=11").unwrap();
+        assert!(p.synthetic_targets(10, 0).is_ok());
+    }
+
+    #[test]
+    fn file_backed_specs_resolve_and_fail_cleanly() {
+        let reg = PanelRegistry::new();
+        // Missing files and corrupt payloads are recoverable errors.
+        assert!(
+            reg.resolve("vcf:/nonexistent/panel.vcf").unwrap_err().contains("cannot read")
+        );
+        assert!(
+            reg.resolve("packed:/nonexistent/panel.ppnl")
+                .unwrap_err()
+                .contains("cannot read")
+        );
+        let dir = std::env::temp_dir();
+        let corrupt = dir.join(format!("poets-reg-corrupt-{}.ppnl", std::process::id()));
+        std::fs::write(&corrupt, b"POETSPNL but not really").unwrap();
+        let err = reg.resolve(&format!("packed:{}", corrupt.display())).unwrap_err();
+        assert!(err.contains("truncated") || err.contains("checksum"), "{err}");
+        let _ = std::fs::remove_file(&corrupt);
+        assert!(reg.is_empty(), "failed loads must not cache");
+
+        // A genuine .ppnl resolves, caches, and carries no recipe.
+        let cfg = PanelConfig {
+            n_hap: 4,
+            n_mark: 11,
+            seed: 2,
+            ..PanelConfig::default()
+        };
+        let panel = generate_panel(&cfg);
+        let path = dir.join(format!("poets-reg-good-{}.ppnl", std::process::id()));
+        PackedPanel::from_panel(&panel).write(path.to_str().unwrap()).unwrap();
+        let spec = format!("packed:{}", path.display());
+        let p = reg.resolve(&spec).unwrap();
+        let again = reg.resolve(&spec).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(Arc::ptr_eq(&p, &again), "second resolve must hit the cache");
+        assert_eq!(p.panel().n_hap(), 4);
+        assert_eq!(p.panel().n_mark(), 11);
+        assert!(p.recipe().is_none());
+        for m in 0..11 {
+            assert_eq!(p.panel().column(m), panel.column(m));
+        }
     }
 }

@@ -22,6 +22,12 @@
 //! Everything else (`workload`, `run`, `timing`, optional `accuracy` /
 //! `sim_metrics` sections) is exactly the impute-report layout, so tooling
 //! that reads one schema reads both.
+//!
+//! Related formats: the `workload.panel` key (when present) names the
+//! registry spec the request resolved — for file-backed panels that is a
+//! `packed:<path>` spec whose on-disk `.ppnl` layout is documented in
+//! [`crate::genomics::packed`], or a `vcf:<path>` spec parsed by
+//! [`crate::genomics::vcf`].
 
 use crate::session::ImputeReport;
 use crate::util::json::Json;
@@ -96,9 +102,11 @@ mod tests {
                 n_hap: 8,
                 n_mark: 3,
                 n_targets: 2,
+                panel: Some("synth:hap=8,mark=3".into()),
                 provenance: None,
                 batch_size: 2,
                 n_batches: 1,
+                windows: None,
                 boards: 2,
                 states_per_thread: 8,
                 threads: 1,

@@ -30,8 +30,9 @@
 //! println!("{}", report.to_json().pretty());
 //! ```
 //!
-//! The legacy per-engine entry points (`imputation::app::run_raw`,
-//! `imputation::interp_app::run_interp`) are deprecated shims over this API.
+//! This is the only execution entry point: the legacy per-engine functions
+//! (`run_raw`, `run_interp`) were deprecated shims over this API and have
+//! been removed.
 
 pub mod engine;
 pub mod report;
@@ -202,24 +203,21 @@ impl ImputeSession {
         }
         let host_seconds = start.elapsed().as_secs_f64();
 
-        let accuracy = self.workload.truth().map(|truth| {
-            let per: Vec<_> = truth
-                .iter()
-                .zip(&dosages)
-                .zip(self.workload.targets())
-                .map(|((t, d), target)| accuracy::score(d, t, target))
-                .collect();
-            accuracy::aggregate(&per)
-        });
+        let accuracy = self
+            .workload
+            .truth()
+            .map(|truth| accuracy::score_set(&dosages, truth, self.workload.targets()));
 
         Ok(ImputeReport {
             engine: self.spec,
             n_hap: self.workload.panel().n_hap(),
             n_mark: self.workload.panel().n_mark(),
             n_targets,
+            panel: None,
             provenance: self.workload.provenance().copied(),
             batch_size,
             n_batches,
+            windows: None,
             boards: self.app.cluster.n_boards,
             states_per_thread: self.app.states_per_thread,
             threads: self.app.sim.threads.unwrap_or(1),

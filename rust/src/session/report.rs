@@ -27,11 +27,19 @@ pub struct ImputeReport {
     pub n_hap: usize,
     pub n_mark: usize,
     pub n_targets: usize,
+    /// Registry spec / panel name the workload ran against, when it came
+    /// from a named source (`synth:` / `vcf:` / `packed:`) rather than
+    /// inline generation.
+    pub panel: Option<String>,
     /// Generation recipe when the workload was synthetic.
     pub provenance: Option<PanelConfig>,
     // Run configuration.
     pub batch_size: usize,
     pub n_batches: usize,
+    /// How many marker windows produced this report, when it was stitched
+    /// by [`crate::genomics::window::run_windowed`] (absent: one full-width
+    /// run).
+    pub windows: Option<usize>,
     pub boards: usize,
     pub states_per_thread: usize,
     /// Host worker threads for the DES deliver/step phases.
@@ -61,6 +69,9 @@ impl ImputeReport {
             .set("n_hap", self.n_hap)
             .set("n_mark", self.n_mark)
             .set("n_targets", self.n_targets);
+        if let Some(name) = &self.panel {
+            workload.set("panel", name.as_str());
+        }
         if let Some(p) = &self.provenance {
             workload
                 .set("maf", p.maf)
@@ -70,8 +81,11 @@ impl ImputeReport {
 
         let mut run = Json::obj();
         run.set("batch_size", self.batch_size)
-            .set("n_batches", self.n_batches)
-            .set("boards", self.boards)
+            .set("n_batches", self.n_batches);
+        if let Some(w) = self.windows {
+            run.set("windows", w);
+        }
+        run.set("boards", self.boards)
             .set("states_per_thread", self.states_per_thread)
             .set("threads", self.threads)
             .set("mapping", self.mapping.name());
@@ -168,9 +182,11 @@ mod tests {
             n_hap: 8,
             n_mark: 21,
             n_targets: 2,
+            panel: None,
             provenance: None,
             batch_size: 2,
             n_batches: 1,
+            windows: None,
             boards: 2,
             states_per_thread: 4,
             threads: 1,
@@ -198,6 +214,22 @@ mod tests {
         let run = j.get("run").unwrap();
         assert_eq!(run.get("n_batches"), Some(&Json::Int(1)));
         assert_eq!(run.get("mapping"), Some(&Json::Str("manual-2d".into())));
+        // Optional source/windowing keys are absent unless set.
+        assert!(j.get("workload").unwrap().get("panel").is_none());
+        assert!(run.get("windows").is_none());
+    }
+
+    #[test]
+    fn panel_and_windows_serialise_when_present() {
+        let mut r = report();
+        r.panel = Some("packed:chr20.ppnl".into());
+        r.windows = Some(3);
+        let j = r.to_json();
+        assert_eq!(
+            j.get("workload").unwrap().get("panel"),
+            Some(&Json::Str("packed:chr20.ppnl".into()))
+        );
+        assert_eq!(j.get("run").unwrap().get("windows"), Some(&Json::Int(3)));
     }
 
     #[test]

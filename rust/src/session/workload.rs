@@ -78,6 +78,36 @@ impl Workload {
         }
     }
 
+    /// Like [`Workload::from_cases`] but sharing an existing panel handle —
+    /// how registry-resolved panels (`vcf:`/`packed:`/`synth:` specs) take
+    /// minted mosaic targets with truth retained, without copying panel
+    /// data.  Shape mismatches are recoverable errors (specs and counts
+    /// arrive from flags and requests).
+    pub fn from_shared_cases(
+        panel: Arc<ReferencePanel>,
+        cases: Vec<TargetCase>,
+    ) -> Result<Workload, String> {
+        let mut targets = Vec::with_capacity(cases.len());
+        let mut truth = Vec::with_capacity(cases.len());
+        for (i, c) in cases.into_iter().enumerate() {
+            if c.masked.n_mark() != panel.n_mark() || c.truth.len() != panel.n_mark() {
+                return Err(format!(
+                    "case {i} has {} markers, panel has {}",
+                    c.masked.n_mark(),
+                    panel.n_mark()
+                ));
+            }
+            targets.push(c.masked);
+            truth.push(c.truth);
+        }
+        Ok(Workload {
+            panel,
+            targets,
+            truth: Some(truth),
+            provenance: None,
+        })
+    }
+
     /// Wrap an already-shared panel handle + target set with no withheld
     /// truth — the serve path: [`crate::serve::PanelRegistry`] hands out one
     /// `Arc` per panel and every request's workload shares it, so neither
@@ -256,6 +286,26 @@ mod tests {
         let shared = Workload::from_shared(Arc::clone(&arc), wl.targets().to_vec()).unwrap();
         assert!(Arc::ptr_eq(&arc, &shared.panel_arc()));
         assert!(shared.truth().is_none());
+    }
+
+    #[test]
+    fn from_shared_cases_keeps_truth_and_shares_the_panel() {
+        let cfg = cfg();
+        let base = Workload::synthetic(&cfg, 1);
+        let panel = base.panel_arc();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let cases = crate::workload::panelgen::generate_targets(base.panel(), &cfg, 2, &mut rng);
+        let wl = Workload::from_shared_cases(Arc::clone(&panel), cases).unwrap();
+        assert!(Arc::ptr_eq(&panel, &wl.panel_arc()));
+        assert_eq!(wl.n_targets(), 2);
+        assert_eq!(wl.truth().unwrap().len(), 2);
+        // Ragged cases are a recoverable error.
+        let bad = crate::workload::panelgen::TargetCase {
+            truth: vec![0; 7],
+            masked: TargetHaplotype::new(vec![-1; 7]),
+        };
+        let err = Workload::from_shared_cases(panel, vec![bad]).unwrap_err();
+        assert!(err.contains("7 markers"), "{err}");
     }
 
     #[test]

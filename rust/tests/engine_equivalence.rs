@@ -131,29 +131,3 @@ fn spec_parsing_matches_cli_surface() {
     );
     assert!("".parse::<EngineSpec>().is_err());
 }
-
-#[test]
-fn deprecated_shims_still_delegate() {
-    // Satellite guarantee: the old entry points remain and route through the
-    // session pipeline with identical results.
-    #[allow(deprecated)]
-    fn via_shims(wl: &Workload) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
-        use poets_impute::imputation::app::{RawAppConfig, run_raw};
-        use poets_impute::imputation::interp_app::run_interp;
-        use poets_impute::poets::topology::ClusterConfig;
-        let cfg = RawAppConfig {
-            cluster: ClusterConfig::with_boards(2),
-            states_per_thread: 4,
-            ..RawAppConfig::default()
-        };
-        let raw = run_raw(wl.panel(), wl.targets(), &cfg);
-        let itp = run_interp(wl.panel(), wl.targets(), &cfg);
-        (raw.dosages, itp.dosages)
-    }
-    let wl = workload();
-    let (raw, itp) = via_shims(&wl);
-    let event = session(EngineSpec::Event).run().unwrap();
-    let interp = session(EngineSpec::Interp).run().unwrap();
-    assert_eq!(raw, event.dosages, "run_raw shim drifted from the session");
-    assert_eq!(itp, interp.dosages, "run_interp shim drifted from the session");
-}

@@ -3,11 +3,14 @@
 //! model/simulator invariants that no example should ever violate.  Engine
 //! runs go through the session API.
 
+use poets_impute::genomics::packed::PackedPanel;
+use poets_impute::genomics::window::{WindowPlan, stitch};
 use poets_impute::graph::mapping::Mapping;
 use poets_impute::graph::partition::{adjacency, bisect, edge_cut};
 use poets_impute::imputation::app::build_raw_graph;
 use poets_impute::model::baseline::{Baseline, ImputeOut, Method};
 use poets_impute::model::interpolation::blends;
+use poets_impute::model::panel::ReferencePanel;
 use poets_impute::poets::topology::ClusterConfig;
 use poets_impute::session::{EngineSpec, ImputeSession, Workload};
 use poets_impute::util::prop::forall;
@@ -294,6 +297,125 @@ fn prop_mapping_strategies_valid_and_shuffled_is_a_permutation() {
         };
         if assignment(&shuffled) != assignment(&again) {
             return Err("shuffled mapping is not deterministic under a fixed seed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_panel_roundtrip_lossless_at_ragged_widths() {
+    forall("pack/encode/decode/unpack is lossless", 60, |rng| {
+        // Widths deliberately hit n_mark % 8 != 0 most of the time, so row
+        // padding is exercised alongside whole-byte rows.
+        let n_hap = rng.range(2, 12);
+        let n_mark = rng.range(2, 48);
+        let mut alleles = vec![0u8; n_hap * n_mark];
+        for a in alleles.iter_mut() {
+            if rng.chance(0.35) {
+                *a = 1;
+            }
+        }
+        let mut gen_dist = vec![0.0];
+        for _ in 1..n_mark {
+            gen_dist.push(rng.uniform(1e-7, 1e-5));
+        }
+        let panel = ReferencePanel::new(n_hap, n_mark, alleles, gen_dist);
+        let packed = PackedPanel::from_panel(&panel);
+        if packed.packed_allele_bytes() != n_hap * n_mark.div_ceil(8) {
+            return Err(format!(
+                "{}x{n_mark}: packed to {} bytes",
+                n_hap,
+                packed.packed_allele_bytes()
+            ));
+        }
+        let back = PackedPanel::decode(&packed.encode()).map_err(|e| format!("decode: {e}"))?;
+        let unpacked = back.to_panel();
+        for h in 0..n_hap {
+            if unpacked.haplotype(h) != panel.haplotype(h) {
+                return Err(format!("haplotype {h} changed"));
+            }
+        }
+        for m in 0..n_mark {
+            if unpacked.gen_dist(m).to_bits() != panel.gen_dist(m).to_bits() {
+                return Err(format!("gen_dist[{m}] not bit-exact"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_plan_covers_all_markers_with_consistent_overlaps() {
+    forall("windows cover; cores partition; stitch routes cores", 60, |rng| {
+        let n_mark = rng.range(2, 300);
+        let w = rng.range(2, 64);
+        let eff = w.min(n_mark);
+        let v = rng.range(0, eff);
+        let plan = WindowPlan::new(n_mark, w, v)?;
+        let ws = plan.windows();
+        if ws[0].start != 0 || ws[ws.len() - 1].end != n_mark {
+            return Err(format!("span {:?}..{:?}", ws[0], ws[ws.len() - 1]));
+        }
+        let mut prev_core_end = 0usize;
+        for (i, win) in ws.iter().enumerate() {
+            if win.len() != eff {
+                return Err(format!("window {i} has length {}", win.len()));
+            }
+            if i > 0 {
+                let prev = ws[i - 1];
+                if prev.start >= win.start {
+                    return Err(format!("starts not increasing at {i}"));
+                }
+                if prev.end < win.start {
+                    return Err(format!("coverage gap before window {i}"));
+                }
+            }
+            // Cores: nonempty, inside their window, and an exact partition.
+            if win.core_start != prev_core_end
+                || win.core_start >= win.core_end
+                || win.core_start < win.start
+                || win.core_end > win.end
+            {
+                return Err(format!("bad core in window {i}: {win:?}"));
+            }
+            prev_core_end = win.core_end;
+        }
+        if prev_core_end != n_mark {
+            return Err(format!("cores end at {prev_core_end}, not {n_mark}"));
+        }
+        // Stitch must read every core from its own window: fill window i's
+        // dosages with the constant i and check the stitched row.
+        let per: Vec<Vec<Vec<f32>>> = (0..ws.len())
+            .map(|i| vec![vec![i as f32; eff]])
+            .collect();
+        let full = stitch(&plan, &per).map_err(|e| format!("stitch: {e}"))?;
+        for (i, win) in ws.iter().enumerate() {
+            for m in win.core_start..win.core_end {
+                if full[0][m] != i as f32 {
+                    return Err(format!("marker {m} stitched from the wrong window"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_window_stitch_is_identity() {
+    forall("stitch of a 1-window split is identity", 40, |rng| {
+        let n_mark = rng.range(2, 100);
+        let n_targets = rng.range(1, 4);
+        let plan = WindowPlan::new(n_mark, n_mark + rng.range(0, 50), 0)?;
+        if plan.len() != 1 {
+            return Err(format!("{} windows for a full-width plan", plan.len()));
+        }
+        let dosages: Vec<Vec<f32>> = (0..n_targets)
+            .map(|_| (0..n_mark).map(|_| rng.f64() as f32).collect())
+            .collect();
+        let full = stitch(&plan, std::slice::from_ref(&dosages))
+            .map_err(|e| format!("stitch: {e}"))?;
+        if full != dosages {
+            return Err("identity stitch changed the dosages".into());
         }
         Ok(())
     });

@@ -1,0 +1,170 @@
+//! Integration: the real-data acceptance test.
+//!
+//! `examples/data/tiny.vcf` (40 phased bi-allelic sites, 8 haplotypes, one
+//! chromosome) flows through the whole genomics front door: VCF parse →
+//! bit-packed `.ppnl` → `packed:` registry resolution → mosaic targets →
+//! windowed imputation stitched back to full width.  The fixture's blocks
+//! of 10 sites are separated by 10 Mb gaps (τ = 1 recombination hotspots),
+//! and the window geometry (length 30, overlap 20) puts window edges on
+//! those gaps at unobserved markers — so the Li & Stephens chain carries no
+//! information across a window boundary and the windowed run must match the
+//! unwindowed run everywhere, not just deep in the cores.
+//!
+//! Bit-level guarantees asserted here: the packed round-trip is lossless
+//! (alleles and f64 distances exact), a single-window plan reproduces the
+//! unwindowed run bit-for-bit, and the windowed event plane is
+//! bit-identical across host thread counts.  Cross-engine and
+//! windowed-vs-full agreement hold at the planes' established tolerances.
+
+use std::sync::Arc;
+
+use poets_impute::genomics::packed::PackedPanel;
+use poets_impute::genomics::vcf;
+use poets_impute::genomics::window::{WindowPlan, run_windowed};
+use poets_impute::serve::{PanelRegistry, RegisteredPanel};
+use poets_impute::session::{EngineSpec, ImputeSession, Workload, max_abs_dosage_diff};
+
+const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/data/tiny.vcf");
+const N_TARGETS: usize = 3;
+const ANNOT: f64 = 0.25;
+
+fn resolve_fixture() -> (PanelRegistry, Arc<RegisteredPanel>) {
+    let registry = PanelRegistry::new();
+    let panel = registry.resolve(&format!("vcf:{FIXTURE}")).unwrap();
+    (registry, panel)
+}
+
+fn fixture_workload(panel: &RegisteredPanel) -> Workload {
+    let cases = panel.mosaic_targets(N_TARGETS, ANNOT, 9).unwrap();
+    Workload::from_shared_cases(panel.panel_arc(), cases).unwrap()
+}
+
+fn configure(
+    spec: EngineSpec,
+    threads: usize,
+) -> impl Fn(ImputeSession) -> ImputeSession {
+    move |s: ImputeSession| {
+        s.engine(spec).boards(1).states_per_thread(8).threads(threads)
+    }
+}
+
+#[test]
+fn vcf_ingest_pack_and_registry_roundtrip() {
+    let parsed = vcf::load(FIXTURE).unwrap();
+    assert_eq!(parsed.panel.n_hap(), 8);
+    assert_eq!(parsed.panel.n_mark(), 40);
+    assert_eq!(parsed.n_samples(), 4);
+    assert_eq!(parsed.sites[0].chrom, "20");
+    // Block structure: 10 Mb gaps every 10 markers (τ = 1 hotspots),
+    // ~200 bp spacing inside blocks.
+    for m in 1..40 {
+        let d = parsed.panel.gen_dist(m);
+        if m % 10 == 0 {
+            assert!((d - 0.1).abs() < 1e-12, "gap distance at {m}: {d}");
+        } else {
+            assert!((d - 2e-6).abs() < 1e-12, "in-block distance at {m}: {d}");
+        }
+    }
+
+    // Pack, write, resolve through the registry as `packed:`.
+    let packed = PackedPanel::from_vcf(&parsed);
+    assert_eq!(packed.packed_allele_bytes(), 8 * 5); // 40 bits -> 5 B/row
+    let path = std::env::temp_dir().join(format!("poets-e2e-{}.ppnl", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    packed.write(&path).unwrap();
+
+    let (_registry, from_packed) = {
+        let registry = PanelRegistry::new();
+        let p = registry.resolve(&format!("packed:{path}")).unwrap();
+        (registry, p)
+    };
+    let _ = std::fs::remove_file(&path);
+    // Lossless both ways: alleles and bit-exact distances survive the disk.
+    for h in 0..8 {
+        assert_eq!(
+            from_packed.panel().haplotype(h),
+            parsed.panel.haplotype(h),
+            "haplotype {h}"
+        );
+    }
+    for m in 0..40 {
+        assert_eq!(
+            from_packed.panel().gen_dist(m).to_bits(),
+            parsed.panel.gen_dist(m).to_bits()
+        );
+    }
+    // Site metadata survives the .ppnl round-trip.
+    assert_eq!(from_packed.sites().unwrap(), &parsed.sites[..]);
+}
+
+#[test]
+fn windowed_real_dosages_match_across_engines_and_the_full_run() {
+    let (_registry, panel) = resolve_fixture();
+    let wl = fixture_workload(&panel);
+    // Window edges at markers 10 and 30 — hotspot boundaries where the
+    // chain forgets its history, and *unobserved* markers on the 1-in-4
+    // mosaic grid (a window applies no emission at its first marker, so an
+    // exact match needs the full run to carry no evidence there either).
+    let plan = WindowPlan::new(40, 30, 20).unwrap();
+    assert_eq!(plan.len(), 2);
+    assert_eq!(
+        plan.windows().iter().map(|w| (w.start, w.end)).collect::<Vec<_>>(),
+        vec![(0, 30), (10, 40)]
+    );
+
+    let full_base = configure(EngineSpec::Baseline, 1)(ImputeSession::new(wl.clone()))
+        .run()
+        .unwrap();
+    let full_event = configure(EngineSpec::Event, 1)(ImputeSession::new(wl.clone()))
+        .run()
+        .unwrap();
+    let win_base = run_windowed(&wl, &plan, configure(EngineSpec::Baseline, 1)).unwrap();
+    let win_event = run_windowed(&wl, &plan, configure(EngineSpec::Event, 1)).unwrap();
+
+    assert_eq!(win_base.dosages.len(), N_TARGETS);
+    assert_eq!(win_base.dosages[0].len(), 40);
+    assert_eq!(win_event.windows, Some(2));
+
+    // The engines agree on the windowed pipeline exactly as tightly as the
+    // repo's engine-equivalence tests demand unwindowed.
+    let cross = max_abs_dosage_diff(&win_base.dosages, &win_event.dosages);
+    assert!(cross <= 1e-3, "windowed baseline vs event: {cross:.2e}");
+
+    // Hotspot-aligned windows: the stitched run tracks the full run within
+    // f32 noise on every marker (the boundary condition is identical — in
+    // exact arithmetic windowed == full, verified to 3e-16 in f64).
+    let drift_base = max_abs_dosage_diff(&win_base.dosages, &full_base.dosages);
+    assert!(drift_base <= 1e-4, "windowed baseline drifted {drift_base:.2e}");
+    // Event bound by the triangle through the baseline runs: within the
+    // 1e-3 engine tolerance of win_base, which equals full_base, which is
+    // within 1e-3 of full_event.
+    let drift_event = max_abs_dosage_diff(&win_event.dosages, &full_event.dosages);
+    assert!(drift_event <= 2e-3, "windowed event drifted {drift_event:.2e}");
+
+    // The windowed event plane keeps the execution-semantics contract:
+    // bit-identical results for any host thread count.
+    let win_event_mt = run_windowed(&wl, &plan, configure(EngineSpec::Event, 4)).unwrap();
+    assert_eq!(
+        win_event.dosages, win_event_mt.dosages,
+        "host thread count changed windowed numerics"
+    );
+
+    // Truth survived the pipeline: accuracy is re-scored on the stitch and
+    // beats chance (mosaic targets are drawn from the panel itself).
+    let acc = win_event.accuracy.expect("mosaic targets retain truth");
+    assert!(acc.n_scored > 0);
+    assert!(acc.concordance > 0.5, "concordance {}", acc.concordance);
+}
+
+#[test]
+fn single_window_plan_reproduces_the_unwindowed_run_bit_for_bit() {
+    let (_registry, panel) = resolve_fixture();
+    let wl = fixture_workload(&panel);
+    let plan = WindowPlan::new(40, 64, 0).unwrap();
+    assert_eq!(plan.len(), 1);
+    for spec in [EngineSpec::Baseline, EngineSpec::Event] {
+        let windowed = run_windowed(&wl, &plan, configure(spec, 1)).unwrap();
+        let plain = configure(spec, 1)(ImputeSession::new(wl.clone())).run().unwrap();
+        assert_eq!(windowed.dosages, plain.dosages, "{spec:?}");
+    }
+}

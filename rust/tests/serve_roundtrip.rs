@@ -165,6 +165,76 @@ fn coalesced_burst_actually_merges_and_still_matches() {
 }
 
 #[test]
+fn file_backed_panel_failures_are_in_band_serve_errors() {
+    // A request naming a missing or corrupt vcf:/packed: path must come
+    // back as a serve-error/v1 line — the worker survives and the stream
+    // keeps serving (the same contract as admission: rejects).
+    use poets_impute::serve::jsonl::serve_stream;
+
+    let corrupt = std::env::temp_dir().join(format!(
+        "poets-serve-corrupt-{}.ppnl",
+        std::process::id()
+    ));
+    // A well-formed 32-byte header (magic, version 1, no flags, 4 x 11)
+    // followed by garbage: passes the cheap pre-admission shape peek, then
+    // fails the full read's integrity check.
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"POETSPNL");
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(&0u32.to_le_bytes());
+    bytes.extend_from_slice(&4u64.to_le_bytes());
+    bytes.extend_from_slice(&11u64.to_le_bytes());
+    bytes.extend_from_slice(&[0xAB; 120]);
+    std::fs::write(&corrupt, &bytes).unwrap();
+    let corrupt_spec = format!("packed:{}", corrupt.display());
+
+    // Lines 1+2 fail in the worker (resolve), line 3 fails at parse time
+    // (synth_targets needs the panel), line 4 must still succeed.
+    let l1 = r#"{"id":1,"panel":"packed:/nonexistent/cohort.ppnl","engine":"baseline","targets":[[0,1,-1]]}"#;
+    let l2 = format!(
+        r#"{{"id":2,"panel":"{corrupt_spec}","engine":"baseline","targets":[[0,1,-1]]}}"#
+    );
+    let l3 = r#"{"id":3,"panel":"vcf:/nonexistent/cohort.vcf","engine":"baseline","synth_targets":1}"#;
+    let l4 = format!(r#"{{"id":4,"panel":"{PANEL}","engine":"rank1","synth_targets":1}}"#);
+    let input = format!("{l1}\n{l2}\n{l3}\n{l4}\n");
+    let service = Service::start(
+        Arc::new(PanelRegistry::new()),
+        ServeConfig::default().workers(2),
+    );
+    let mut out = Vec::new();
+    let summary = serve_stream(&service, input.as_bytes(), &mut out).unwrap();
+    let _ = std::fs::remove_file(&corrupt);
+    service.shutdown();
+
+    assert_eq!(summary.requests, 4);
+    assert_eq!(summary.failed, 3);
+    assert_eq!(summary.ok, 1);
+    let lines: Vec<Json> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).expect("every response line is valid JSON"))
+        .collect();
+    assert_eq!(lines.len(), 4);
+    for (i, needle) in [
+        (0, "cannot read"),
+        (1, "checksum"), // corrupt .ppnl trips the integrity check
+        (2, "cannot read"),
+    ] {
+        let j = &lines[i];
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "line {i}");
+        assert_eq!(
+            j.get("schema").unwrap().as_str(),
+            Some("poets-impute/serve-error/v1"),
+            "line {i}"
+        );
+        let err = j.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains(needle), "line {i}: {err}");
+    }
+    assert_eq!(lines[3].get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(lines[3].get("id").unwrap().as_i64(), Some(4));
+}
+
+#[test]
 fn bench_serve_cli_emits_throughput_baseline() {
     let argv: Vec<String> = [
         "bench-serve",
