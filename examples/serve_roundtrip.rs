@@ -53,7 +53,7 @@ fn main() {
                         .submit_wait(ImputeRequest {
                             panel: PANEL.to_string(),
                             engine: EngineSpec::Rank1,
-                            targets,
+                            targets: targets.into(),
                         })
                         .expect("rank1 plane is always available")
                 })

@@ -1,36 +1,57 @@
 //! `cargo bench --bench desim_hotpath` — micro-benchmark of the simulator's
-//! host-side event throughput (events/second of *host* time), the quantity
-//! that bounds how large a panel the DES plane can sweep.  This is the L3
-//! optimisation target of EXPERIMENTS.md §Perf.
+//! host-side event throughput, the quantity that bounds how large a panel
+//! the DES plane can sweep.  This is the L3 optimisation target of
+//! EXPERIMENTS.md §Perf and the tracked gate of the wave-batching PR.
 //!
-//! Sweeps host worker threads (`SimConfig::threads`) per config and emits a
-//! machine-readable `BENCH_desim.json` so the perf trajectory is tracked
-//! across PRs.  Functional results are thread-count invariant (asserted
-//! here via `sim_cycles`), so the sweep measures host throughput only.
+//! Two sweeps, emitted into a machine-readable `BENCH_desim.json` so the
+//! perf trajectory is tracked across PRs:
+//!
+//! * **host threads** (`SimConfig::threads`) per config — functional results
+//!   are thread-count invariant (asserted here via `sim_cycles`), so this
+//!   axis measures host parallel speedup only;
+//! * **batch width** (the event plane's wave width) — width 1 is the
+//!   per-target plane, width `LANES` packs a full SoA slab per event.
+//!   Dosages are bit-identical across widths (asserted here), and the gate
+//!   asserts that full-lane waves deliver **>= 2x fewer events per imputed
+//!   target** than the per-target plane (they deliver ~LANES x fewer).
+//!
+//! `--smoke` runs a reduced sweep for CI (the JSON is uploaded as a
+//! workflow artifact per PR).
 
+use poets_impute::imputation::msg::LANES;
 use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
 use poets_impute::util::json::Json;
 use poets_impute::util::table::{Table, fmt_count, fmt_secs};
 use poets_impute::util::timed;
 use poets_impute::workload::panelgen::PanelConfig;
 
-const THREAD_SWEEP: &[usize] = &[1, 2, 4, 8];
-
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let thread_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let width_sweep: [usize; 2] = [1, LANES];
+    let panels: &[(usize, usize, usize)] = if smoke {
+        &[(16, 160, 8)]
+    } else {
+        &[(16, 160, 8), (32, 320, 8)]
+    };
+
     let mut t = Table::new(&[
         "app",
         "panel",
         "targets",
+        "width",
         "threads",
         "host time",
         "events",
+        "events/target",
         "host events/s",
+        "targets/s",
         "speedup",
         "sim time",
     ]);
     let mut json_rows = Json::Arr(Vec::new());
 
-    for &(h, m, targets) in &[(16usize, 160usize, 8usize), (32, 320, 8)] {
+    for &(h, m, targets) in panels {
         let cfg = PanelConfig {
             n_hap: h,
             n_mark: m,
@@ -44,62 +65,104 @@ fn main() {
             ("raw", EngineSpec::Event, 4usize),
             ("interp", EngineSpec::Interp, 1usize),
         ] {
-            let mut serial_time = 0.0f64;
-            let mut serial_cycles = 0u64;
-            for &threads in THREAD_SWEEP {
-                let session = ImputeSession::new(workload.clone())
-                    .engine(engine)
-                    .boards(4)
-                    .states_per_thread(spt)
-                    .threads(threads);
-                let (out, host): (ImputeReport, f64) =
-                    timed(|| session.run().expect("event planes are always available"));
-                let metrics = out.metrics.as_ref().expect("event planes report metrics");
-                if threads == 1 {
-                    serial_time = host;
-                    serial_cycles = metrics.sim_cycles;
-                } else {
-                    assert_eq!(
-                        metrics.sim_cycles, serial_cycles,
-                        "thread count changed simulated timing"
-                    );
+            // Reference dosages + events/target of the per-target plane
+            // (width 1, serial) — the batching gate compares against these.
+            let mut reference: Option<(Vec<Vec<f32>>, f64)> = None;
+            for &width in &width_sweep {
+                let mut serial_time = 0.0f64;
+                let mut serial_cycles = 0u64;
+                for &threads in thread_sweep {
+                    let session = ImputeSession::new(workload.clone())
+                        .engine(engine)
+                        .boards(4)
+                        .states_per_thread(spt)
+                        .batch(width)
+                        .threads(threads);
+                    let (out, host): (ImputeReport, f64) =
+                        timed(|| session.run().expect("event planes are always available"));
+                    let metrics = out.metrics.as_ref().expect("event planes report metrics");
+                    if threads == thread_sweep[0] {
+                        serial_time = host;
+                        serial_cycles = metrics.sim_cycles;
+                    } else {
+                        assert_eq!(
+                            metrics.sim_cycles, serial_cycles,
+                            "thread count changed simulated timing"
+                        );
+                    }
+                    let events = metrics.copies_delivered;
+                    let events_per_target = events as f64 / targets as f64;
+                    let eps = events as f64 / host;
+                    match &reference {
+                        None => reference = Some((out.dosages.clone(), events_per_target)),
+                        Some((dosages, width1_ept)) => {
+                            assert_eq!(
+                                &out.dosages, dosages,
+                                "{app_name}: width {width} / threads {threads} changed dosages"
+                            );
+                            // The tracked gate: full-lane waves must at least
+                            // halve delivered events per imputed target.
+                            if width >= LANES {
+                                assert!(
+                                    events_per_target * 2.0 <= *width1_ept,
+                                    "{app_name}: width {width} events/target \
+                                     {events_per_target:.1} vs per-target plane \
+                                     {width1_ept:.1} — batching gate (>= 2x) FAILED"
+                                );
+                            }
+                        }
+                    }
+                    t.row(vec![
+                        app_name.into(),
+                        format!("{h}x{m}"),
+                        targets.to_string(),
+                        width.to_string(),
+                        threads.to_string(),
+                        fmt_secs(host),
+                        fmt_count(events),
+                        format!("{events_per_target:.1}"),
+                        format!("{eps:.2e}"),
+                        format!("{:.1}", targets as f64 / host),
+                        format!("{:.2}x", serial_time / host),
+                        fmt_secs(out.sim_seconds.expect("event planes report sim time")),
+                    ]);
+                    let mut row = Json::obj();
+                    row.set("app", app_name)
+                        .set("panel", format!("{h}x{m}"))
+                        .set("n_hap", h)
+                        .set("n_mark", m)
+                        .set("targets", targets)
+                        .set("batch_width", width)
+                        .set("threads", threads)
+                        .set("host_seconds", host)
+                        .set("events", events)
+                        .set("lanes", metrics.lanes_delivered)
+                        .set("events_per_target", events_per_target)
+                        .set("events_per_s", eps)
+                        .set("targets_per_s", targets as f64 / host)
+                        .set("speedup_vs_serial", serial_time / host)
+                        .set("sim_seconds", out.sim_seconds.unwrap_or(0.0));
+                    json_rows.push(row);
                 }
-                let events = metrics.copies_delivered;
-                let eps = events as f64 / host;
-                t.row(vec![
-                    app_name.into(),
-                    format!("{h}x{m}"),
-                    targets.to_string(),
-                    threads.to_string(),
-                    fmt_secs(host),
-                    fmt_count(events),
-                    format!("{eps:.2e}"),
-                    format!("{:.2}x", serial_time / host),
-                    fmt_secs(out.sim_seconds.expect("event planes report sim time")),
-                ]);
-                let mut row = Json::obj();
-                row.set("app", app_name)
-                    .set("panel", format!("{h}x{m}"))
-                    .set("n_hap", h)
-                    .set("n_mark", m)
-                    .set("targets", targets)
-                    .set("threads", threads)
-                    .set("host_seconds", host)
-                    .set("events", events)
-                    .set("events_per_s", eps)
-                    .set("speedup_vs_serial", serial_time / host)
-                    .set("sim_seconds", out.sim_seconds.unwrap_or(0.0));
-                json_rows.push(row);
             }
         }
     }
 
-    println!("## DES hot path (host-side throughput)\n{}", t.render());
+    println!("## DES hot path (host-side throughput, thread x wave-width sweep)\n{}", t.render());
 
     let mut report = Json::obj();
     report
         .set("bench", "desim_hotpath")
-        .set("thread_sweep", Json::Arr(THREAD_SWEEP.iter().map(|&n| Json::Int(n as i64)).collect()))
+        .set("smoke", smoke)
+        .set("lanes", LANES)
+        .set(
+            "thread_sweep",
+            Json::Arr(thread_sweep.iter().map(|&n| Json::Int(n as i64)).collect()),
+        )
+        .set(
+            "width_sweep",
+            Json::Arr(width_sweep.iter().map(|&n| Json::Int(n as i64)).collect()),
+        )
         .set("rows", json_rows);
     let path = "BENCH_desim.json";
     match std::fs::write(path, report.pretty()) {

@@ -36,6 +36,7 @@ pub fn anchor_speedup(cost: &CostModel, macs_per_s: f64, full_targets: usize) ->
             n_mark: full.n_mark,
             n_targets: full_targets,
             states_per_thread: 10,
+            lane_width: 1, // paper-anchor regime: per-target pipeline
             kind: AppKind::Raw,
         },
         &ClusterConfig::poets_48(),

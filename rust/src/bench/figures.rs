@@ -171,6 +171,7 @@ pub fn fig11(boards_sweep: &[usize], opts: &FigOpts, x86: &X86Cost) -> FigReport
                 n_mark: full.n_mark,
                 n_targets: opts.full_targets,
                 states_per_thread: 1,
+                lane_width: 1, // paper-anchor regime: per-target pipeline
                 kind: AppKind::Raw,
             },
             &ClusterConfig::with_boards(boards),
@@ -220,6 +221,7 @@ pub fn fig12(spt_sweep: &[usize], opts: &FigOpts, x86: &X86Cost) -> FigReport {
                 n_mark: full.n_mark,
                 n_targets: opts.full_targets,
                 states_per_thread: spt,
+                lane_width: 1, // paper-anchor regime: per-target pipeline
                 kind: AppKind::Raw,
             },
             &ClusterConfig::poets_48(),
@@ -275,6 +277,7 @@ pub fn fig13(boards_sweep: &[usize], opts: &FigOpts, x86: &X86Cost) -> FigReport
                 // One section VERTEX per thread (each holding `section`
                 // panel states) — the paper's sub-49,152 configuration.
                 states_per_thread: 1,
+                lane_width: 1, // paper-anchor regime: per-target pipeline
                 kind: AppKind::Interp { section },
             },
             &ClusterConfig::with_boards(boards),
@@ -343,6 +346,7 @@ pub fn sync_overhead(opts: &FigOpts) -> String {
             n_mark: full.n_mark,
             n_targets: opts.full_targets,
             states_per_thread: 10,
+            lane_width: 1, // paper-anchor regime: per-target pipeline
             kind: AppKind::Raw,
         },
         &ClusterConfig::poets_48(),
@@ -456,6 +460,7 @@ mod tests {
                 n_mark: full.n_mark,
                 n_targets: 10_000,
                 states_per_thread: 10,
+                lane_width: 1, // paper-anchor regime: per-target pipeline
                 kind: AppKind::Raw,
             },
             &cluster,
@@ -467,6 +472,7 @@ mod tests {
                 n_mark: full.n_mark,
                 n_targets: 10_000,
                 states_per_thread: 1,
+                lane_width: 1, // paper-anchor regime: per-target pipeline
                 kind: AppKind::Interp { section: 10 },
             },
             &cluster,

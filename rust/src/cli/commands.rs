@@ -6,7 +6,7 @@ use std::time::Duration;
 
 use crate::bench::{self, FigOpts, X86Cost};
 use crate::genomics::packed::PackedPanel;
-use crate::genomics::window::{WindowPlan, run_windowed};
+use crate::genomics::window::{WindowPlan, run_windowed_threads};
 use crate::genomics::vcf::{self, VcfOptions};
 use crate::model::baseline::{Baseline, Method};
 use crate::model::interpolation::impute_interp;
@@ -42,13 +42,19 @@ COMMANDS:
                --window W --overlap V (slice the marker axis into
                overlapping W-marker windows, impute each, stitch dosages
                at overlap midpoints; 0 = unwindowed)
+               --window-threads N (run windows on N host threads —
+               windows are independent, stitch order is deterministic;
+               multi-window interp plans are validated against the chip
+               grid and misaligned geometry is a hard error)
                --engine baseline|rank1|event|interp|xla (EngineSpec;
                interp is the event-driven linear-interpolation plane —
                the old spelling event-interp still parses, with a
                deprecation note; the x86 interpolation pipeline remains
                the interp plane's oracle in validate)
                --boards B --spt N (soft-scheduling states/thread)
-               --batch B (targets per engine batch; default all at once)
+               --batch B (targets per engine batch = the event plane's
+               wave width; default all at once.  Dosages are batch-width
+               invariant — width 1 reproduces per-target events)
                --threads N (host workers for the DES deliver/step phases;
                results are thread-count invariant)
                [--json]  (emit the ImputeReport run manifest,
@@ -74,7 +80,11 @@ COMMANDS:
                \"panel\" also accepts vcf:<path> / packed:<path> — a
                missing or corrupt file fails that request in-band)
                --workers N (pool threads, default 2)
-               --max-batch T (coalescer target budget; 1 = no coalescing)
+               --max-batch T (coalescer target budget; 1 = no coalescing.
+               Coalesced event-plane groups merge member targets into ONE
+               wave sweep — responses stay bit-identical to solo runs;
+               synth_targets minting runs in the workers, so a slow
+               file-backed panel never blocks the request stream)
                --linger-ms L (coalescer wait for batch-mates, default 2)
                --queue-cap N (admission bound, default 1024)
                --boards B --spt N --threads N (engine knobs, as impute)
@@ -119,6 +129,7 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
     let batch = args.get("batch", 0usize)?;
     let window = args.get("window", 0usize)?;
     let overlap = args.get("overlap", 0usize)?;
+    let window_threads = args.get("window-threads", 1usize)?;
     let as_json = args.has("json");
     args.reject_unknown()?;
 
@@ -148,7 +159,7 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
     };
     let mut report = if window > 0 {
         let plan = WindowPlan::new(workload.panel().n_mark(), window, overlap)?;
-        run_windowed(&workload, &plan, configure)?
+        run_windowed_threads(&workload, &plan, window_threads, configure)?
     } else {
         configure(ImputeSession::new(workload)).run()?
     };
@@ -663,5 +674,29 @@ mod tests {
             "3", "--engine", "event", "--boards", "1", "--spt", "8", "--batch", "2",
         ]);
         assert_eq!(cmd_impute(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn impute_supports_window_threads() {
+        let args = argv(&[
+            "impute", "--hap", "8", "--mark", "40", "--annot-ratio", "0.25", "--targets",
+            "2", "--engine", "baseline", "--window", "26", "--overlap", "19",
+            "--window-threads", "3",
+        ]);
+        assert_eq!(cmd_impute(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn impute_rejects_misaligned_interp_windows() {
+        // Chip grid every 10th marker; this geometry leaves a window core
+        // ahead of its first anchor — must be a hard error, not silent
+        // partial coverage.
+        let args = argv(&[
+            "impute", "--hap", "8", "--mark", "41", "--annot-ratio", "0.1", "--targets",
+            "1", "--engine", "interp", "--boards", "1", "--spt", "1", "--window", "21",
+            "--overlap", "3",
+        ]);
+        let err = cmd_impute(&args).unwrap_err();
+        assert!(err.contains("chip"), "{err}");
     }
 }

@@ -35,4 +35,4 @@ pub mod window;
 
 pub use packed::PackedPanel;
 pub use vcf::{Site, VcfOptions, VcfPanel};
-pub use window::{MarkerWindow, WindowPlan, run_windowed, stitch};
+pub use window::{MarkerWindow, WindowPlan, run_windowed, run_windowed_threads, stitch};

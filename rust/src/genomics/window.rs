@@ -33,15 +33,27 @@
 //! thread count), and a single-window plan reproduces the unwindowed run
 //! bit-for-bit.
 //!
-//! One caveat: the linear-interpolation plane imputes only between a
-//! window's first and last *annotated* markers (that is its model, on
-//! windows as on whole chromosomes), so windowing an interp workload is
-//! only full-coverage when window boundaries land on the chip grid.  The
-//! dense planes (baseline/rank1/event/xla) have no such constraint.
+//! Windows are embarrassingly parallel: [`run_windowed_threads`] fans the
+//! per-window sessions out over std threads (`--window-threads` on the
+//! CLI).  Results are deterministic regardless of scheduling — each window
+//! writes its own slot and the stitch/merge walks windows in plan order, so
+//! a parallel run is identical to the serial one (module tests assert it).
+//!
+//! The linear-interpolation plane imputes only between a window's first and
+//! last *annotated* markers (that is its model, on windows as on whole
+//! chromosomes), so windowing an interp workload is only full-coverage when
+//! window boundaries land on the chip grid.  Multi-window interp plans are
+//! therefore **validated up front** ([`WindowPlan::validate_interp_coverage`])
+//! and a plan whose cores aren't covered is a hard error with a
+//! fix-your-geometry message — never silent partial coverage.  The dense
+//! planes (baseline/rank1/event/xla) have no such constraint.
+
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::model::accuracy;
 use crate::model::panel::TargetHaplotype;
-use crate::session::{ImputeReport, ImputeSession, Workload};
+use crate::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
 
 /// One marker window: `[start, end)` is what an engine sees, `[core_start,
 /// core_end)` is the sub-interval whose dosages the stitcher keeps.
@@ -149,6 +161,65 @@ impl WindowPlan {
         self.windows.is_empty()
     }
 
+    /// Check that every window of a multi-window plan fully covers its core
+    /// on the linear-interpolation plane, whose model imputes only between
+    /// a window's first and last *annotated* markers (`anchors` is the
+    /// shared chip grid, ascending absolute marker indices).  Partial
+    /// coverage would silently leave core markers unimputed, so
+    /// [`run_windowed`] turns it into a hard error for interp runs.
+    ///
+    /// Markers outside the plan-wide anchor span `[anchors[0],
+    /// anchors.last()]` are exempt: no interp run — windowed or not — ever
+    /// covers them (the unwindowed plane's documented head/tail behaviour),
+    /// so they are not a *windowing* defect and must not make every
+    /// geometry unsatisfiable on grids that stop short of the panel ends.
+    pub fn validate_interp_coverage(&self, anchors: &[usize]) -> Result<(), String> {
+        let (Some(&span_first), Some(&span_last)) = (anchors.first(), anchors.last()) else {
+            return Err("interp windowing: targets have no annotated markers".into());
+        };
+        for (i, w) in self.windows.iter().enumerate() {
+            let first = anchors.iter().copied().find(|&a| a >= w.start && a < w.end);
+            let last = anchors
+                .iter()
+                .rev()
+                .copied()
+                .find(|&a| a >= w.start && a < w.end);
+            let in_window = anchors
+                .iter()
+                .filter(|&&a| a >= w.start && a < w.end)
+                .count();
+            let (Some(first), Some(last)) = (first, last) else {
+                return Err(format!(
+                    "interp window {i} [{}, {}) contains no annotated marker; \
+                     align --window/--overlap to the chip grid",
+                    w.start, w.end
+                ));
+            };
+            if in_window < 2 {
+                return Err(format!(
+                    "interp window {i} [{}, {}) contains only one annotated marker \
+                     (interpolation needs >= 2); align --window/--overlap to the chip grid",
+                    w.start, w.end
+                ));
+            }
+            // The part of this window's core any interp run could cover.
+            let need_start = w.core_start.max(span_first);
+            let need_end = w.core_end.min(span_last + 1);
+            if need_start < need_end && (first > need_start || last + 1 < need_end) {
+                return Err(format!(
+                    "interp window {i} [{}, {}) covers only markers [{first}, {last}] \
+                     but its core needs [{need_start}, {need_end}): the \
+                     linear-interpolation plane imputes only between a window's first \
+                     and last annotated markers, so this plan would silently skip core \
+                     markers — choose --window/--overlap so every window edge lands on \
+                     the chip (annotation) grid",
+                    w.start, w.end
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Assemble the sub-workload one window sees: panel columns `[start,
     /// end)` and every target's observations sliced to match.  Contiguous
     /// `select_markers` ranges pass genetic distances through bit-exactly,
@@ -202,21 +273,45 @@ pub fn stitch(plan: &WindowPlan, per_window: &[Vec<Vec<f32>>]) -> Result<Vec<Vec
     Ok(full)
 }
 
-/// Run a workload window-by-window and stitch one report.
-///
-/// `configure` applies the engine selection and knobs to each per-window
-/// session (it receives a fresh `ImputeSession::new(window_workload)` and
-/// must return the configured builder) — the same closure shape the CLI
-/// builds from its flags.  The merged report carries the stitched dosages,
-/// summed host/simulated timings, accumulated DES counters, accuracy
-/// re-scored against the full workload's truth, and `windows = plan.len()`.
+/// Run a workload window-by-window and stitch one report (serial windows —
+/// [`run_windowed_threads`] with one thread).
 pub fn run_windowed<F>(
     full: &Workload,
     plan: &WindowPlan,
     configure: F,
 ) -> Result<ImputeReport, String>
 where
-    F: Fn(ImputeSession) -> ImputeSession,
+    F: Fn(ImputeSession) -> ImputeSession + Sync,
+{
+    run_windowed_threads(full, plan, 1, configure)
+}
+
+/// Run a workload window-by-window, fanning the windows out over up to
+/// `window_threads` std threads, and stitch one report.
+///
+/// `configure` applies the engine selection and knobs to each per-window
+/// session (it receives a fresh `ImputeSession::new(window_workload)` and
+/// must return the configured builder) — the same closure shape the CLI
+/// builds from its flags.  The closure must be a **pure builder**: besides
+/// the per-window sessions it is invoked once more on a zero-target probe
+/// session (never run) to learn the engine spec for plan validation, and
+/// under `window_threads > 1` it is called from worker threads.  The
+/// merged report carries the stitched dosages,
+/// summed host/simulated timings, accumulated DES counters, accuracy
+/// re-scored against the full workload's truth, and `windows = plan.len()`.
+///
+/// Windows are independent problems, so the fan-out changes wall-clock
+/// only: each window writes its own result slot and stitching/merging walks
+/// windows in plan order, making the report deterministic for any thread
+/// count (on error, the lowest-indexed failing window's error is returned).
+pub fn run_windowed_threads<F>(
+    full: &Workload,
+    plan: &WindowPlan,
+    window_threads: usize,
+    configure: F,
+) -> Result<ImputeReport, String>
+where
+    F: Fn(ImputeSession) -> ImputeSession + Sync,
 {
     if plan.n_mark() != full.panel().n_mark() {
         return Err(format!(
@@ -228,12 +323,58 @@ where
     if full.n_targets() == 0 {
         return Err("workload has no targets".into());
     }
-    let mut reports = Vec::with_capacity(plan.len());
-    for (i, win) in plan.windows().iter().enumerate() {
-        let report = configure(ImputeSession::new(plan.slice_workload(full, win)))
+    // Engine-specific plan validation: the interp plane's coverage caveat is
+    // a hard error on multi-window plans (a single-window plan is exactly
+    // the unwindowed run, whose anchor-span behaviour is documented).  The
+    // probe session carries no targets — it exists only to read the spec the
+    // closure configures.
+    if plan.len() > 1 {
+        let probe = Workload::from_shared(full.panel_arc(), Vec::new())?;
+        if configure(ImputeSession::new(probe)).engine_spec() == EngineSpec::Interp {
+            let anchors = full.targets()[0].annotated();
+            plan.validate_interp_coverage(&anchors)?;
+        }
+    }
+
+    let n = plan.len();
+    let threads = window_threads.max(1).min(n);
+    let run_window = |i: usize| -> Result<ImputeReport, String> {
+        let win = &plan.windows()[i];
+        configure(ImputeSession::new(plan.slice_workload(full, win)))
             .run()
-            .map_err(|e| format!("window {i} ([{}, {})): {e}", win.start, win.end))?;
-        reports.push(report);
+            .map_err(|e| format!("window {i} ([{}, {})): {e}", win.start, win.end))
+    };
+    let mut reports: Vec<ImputeReport> = Vec::with_capacity(n);
+    if threads <= 1 {
+        for i in 0..n {
+            reports.push(run_window(i)?);
+        }
+    } else {
+        // Work-stealing over window indices; every claimed index fills its
+        // own slot, so completion order never affects the result.
+        #[allow(clippy::type_complexity)]
+        let slots: Vec<Mutex<Option<Result<ImputeReport, String>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|sc| {
+            for _ in 0..threads {
+                sc.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let result = run_window(i);
+                    *slots[i].lock().expect("window slot poisoned") = Some(result);
+                });
+            }
+        });
+        for slot in slots {
+            let result = slot
+                .into_inner()
+                .expect("window slot poisoned")
+                .expect("every window index was claimed");
+            reports.push(result?);
+        }
     }
     // Drain the per-window dosages rather than cloning them: on the
     // chromosome-scale runs windowing exists for, the dosage matrices are
@@ -281,18 +422,22 @@ mod tests {
         WindowPlan::new(n_mark, w, v).unwrap()
     }
 
-    fn workload(n_mark: usize, n_targets: usize) -> Workload {
+    fn workload_ratio(n_mark: usize, n_targets: usize, annot_ratio: f64) -> Workload {
         Workload::synthetic(
             &PanelConfig {
                 n_hap: 8,
                 n_mark,
                 maf: 0.2,
-                annot_ratio: 0.25,
+                annot_ratio,
                 seed: 77,
                 ..PanelConfig::default()
             },
             n_targets,
         )
+    }
+
+    fn workload(n_mark: usize, n_targets: usize) -> Workload {
+        workload_ratio(n_mark, n_targets, 0.25)
     }
 
     #[test]
@@ -449,6 +594,88 @@ mod tests {
         assert!(event.metrics.unwrap().sends > 0);
         assert_eq!(base.n_mark, 40);
         assert_eq!(base.dosages[0].len(), 40);
+    }
+
+    #[test]
+    fn window_threads_do_not_change_the_stitched_report() {
+        let wl = workload(40, 2);
+        let p = plan(40, 26, 19);
+        let cfg = |s: ImputeSession| s.engine(EngineSpec::Event).boards(1).states_per_thread(8);
+        let serial = run_windowed(&wl, &p, cfg).unwrap();
+        let parallel = run_windowed_threads(&wl, &p, 3, cfg).unwrap();
+        assert_eq!(serial.dosages, parallel.dosages, "fan-out changed numerics");
+        assert_eq!(serial.windows, parallel.windows);
+        let (sm, pm) = (serial.metrics.unwrap(), parallel.metrics.unwrap());
+        assert_eq!(sm.sends, pm.sends);
+        assert_eq!(sm.sim_cycles, pm.sim_cycles);
+        assert_eq!(sm.step_durations, pm.step_durations, "merge order must be plan order");
+        // Oversubscription clamps to the window count.
+        let many = run_windowed_threads(&wl, &p, 64, cfg).unwrap();
+        assert_eq!(serial.dosages, many.dosages);
+    }
+
+    #[test]
+    fn misaligned_interp_windows_are_hard_errors() {
+        // Chip grid every 10th marker (0,10,20,30,40); window starts at 18
+        // and 20 leave the second window's core start (19) ahead of its
+        // first anchor (20) — previously silent partial coverage.
+        let wl = workload_ratio(41, 1, 0.1);
+        let bad = plan(41, 21, 3);
+        let err = run_windowed(&wl, &bad, |s| {
+            s.engine(EngineSpec::Interp).boards(1).states_per_thread(1)
+        })
+        .unwrap_err();
+        assert!(err.contains("chip"), "unexpected message: {err}");
+        // The event plane has no grid constraint: the same plan runs.
+        let ok = run_windowed(&wl, &bad, |s| {
+            s.engine(EngineSpec::Event).boards(1).states_per_thread(8)
+        });
+        assert!(ok.is_ok(), "{ok:?}");
+    }
+
+    #[test]
+    fn aligned_interp_windows_validate_and_run() {
+        let wl = workload_ratio(41, 2, 0.1);
+        // Spans [0,21) and [20,41) split cores at marker 20 — every core is
+        // inside its window's [first, last] anchor span.
+        let p = plan(41, 21, 1);
+        let anchors = wl.targets()[0].annotated();
+        p.validate_interp_coverage(&anchors).unwrap();
+        let report = run_windowed_threads(&wl, &p, 2, |s| {
+            s.engine(EngineSpec::Interp).boards(1).states_per_thread(1)
+        })
+        .unwrap();
+        assert_eq!(report.windows, Some(2));
+        assert_eq!(report.dosages[0].len(), 41);
+        assert!(report.dosages[0].iter().all(|d| d.is_finite()));
+    }
+
+    #[test]
+    fn interp_coverage_validator_rejects_anchorless_windows() {
+        // A fabricated sparse grid: windows [10,20) hold no anchor at all.
+        let p = plan(40, 10, 0);
+        let err = p.validate_interp_coverage(&[0, 5, 25, 35, 39]).unwrap_err();
+        assert!(err.contains("annotated"), "{err}");
+        // A one-anchor window is rejected too (interpolation needs >= 2).
+        let err = p.validate_interp_coverage(&[0, 9, 15, 25, 35, 39]).unwrap_err();
+        assert!(err.contains(">= 2"), "{err}");
+        // An empty grid is its own error.
+        let err = p.validate_interp_coverage(&[]).unwrap_err();
+        assert!(err.contains("no annotated"), "{err}");
+    }
+
+    #[test]
+    fn interp_coverage_exempts_markers_outside_the_anchor_span() {
+        // A chip grid that stops short of the panel ends: markers before 4
+        // and after 34 are uncovered by ANY interp run (windowed or not),
+        // so a plan whose interior seams sit on the grid must validate.
+        let p = plan(40, 20, 10);
+        p.validate_interp_coverage(&[4, 9, 14, 19, 24, 29, 34]).unwrap();
+        // ...but an interior gap is still a hard error.
+        let err = p
+            .validate_interp_coverage(&[4, 9, 29, 34])
+            .unwrap_err();
+        assert!(err.contains("chip"), "{err}");
     }
 
     #[test]

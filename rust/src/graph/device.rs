@@ -98,6 +98,16 @@ pub trait Device: Send {
     /// requests (paper Algorithm 1, Step).  Return `false` to vote for halt;
     /// the run ends when *all* devices vote halt and no events are in flight.
     fn step(&mut self, ctx: &mut Ctx<Self::Msg>) -> bool;
+
+    /// How many *lanes* (independent per-target payload slots) one message
+    /// carries.  Scalar applications leave the default of 1; wave-batched
+    /// applications report their SoA slab occupancy so the simulator can
+    /// account delivered events and delivered lanes separately
+    /// (`SimMetrics::lanes_delivered` — the quantity that shows the
+    /// per-message amortisation of multi-target waves).
+    fn lanes(_msg: &Self::Msg) -> u32 {
+        1
+    }
 }
 
 #[cfg(test)]

@@ -4,19 +4,32 @@
 //! total message count, which caps the panel sizes it can sweep.  The paper's
 //! largest configurations (49,152+ threads, 10,000 targets) are reached by
 //! this analytic model instead: a steady-state bottleneck analysis of one
-//! pipelined superstep, cross-validated against the DES on every panel the
-//! DES can run (see rust/tests/cluster_invariants.rs and the calibrate
-//! bench) and documented in EXPERIMENTS.md.
+//! superstep, cross-validated against the DES on every panel the DES can run
+//! (see rust/tests/cluster_invariants.rs and the calibrate bench) and
+//! documented in EXPERIMENTS.md.
 //!
-//! Model: per superstep, every active column's vertices each receive the full
-//! fan-in, so the *busiest core* and the *busiest mailbox* process
+//! Two execution regimes, selected by [`Workload::lane_width`]:
 //!
-//! * core:    v/core · [(fan_in+extra)·handler + sends·send_req + step-dispatch]
-//! * mailbox: v/tile · (fan_in+extra) · ingress
+//! * **`lane_width <= 1` — the paper's per-target pipeline.**  Per superstep
+//!   every active column's vertices each receive the full fan-in, so the
+//!   *busiest core* and the *busiest mailbox* process
 //!
-//! and the step time is the slower of the two plus the termination wave.
-//! Total time = (pipeline fill + targets) · step.
+//!   - core:    v/core · [(fan_in+extra)·handler + sends·send_req + step]
+//!   - mailbox: v/tile · (fan_in+extra) · ingress
+//!
+//!   and total time = (pipeline fill + targets + drain) · step.  This is the
+//!   regime the calibration anchor (Fig 12, ≈270×) is stated in.
+//!
+//! * **`lane_width > 1` — the wave-batched plane (PR 5).**  The whole lane
+//!   group sweeps the panel as one wave of `ceil(width / LANES)`-chunk SoA
+//!   events, so only the wavefront columns are active per superstep: the
+//!   busiest core hosts one active column's vertices, each ingesting
+//!   `H · chunks` events and doing the whole lane group's FP work, on top of
+//!   the all-vertex step-handler floor; steps ≈ waves · (columns + slack).
+//!   Fewer, fatter events — the per-message overhead amortisation the DES
+//!   measures as `lanes_delivered / copies_delivered`.
 
+use crate::imputation::msg::LANES;
 use crate::poets::costmodel::CostModel;
 use crate::poets::topology::ClusterConfig;
 
@@ -36,6 +49,11 @@ pub struct Workload {
     pub n_mark: usize,
     pub n_targets: usize,
     pub states_per_thread: usize,
+    /// Targets per wave (the session's batch width).  `1` models the
+    /// paper's per-target pipelined plane; larger widths model the
+    /// wave-batched plane (each engine batch sweeps the panel as one SoA
+    /// wave) — see the module docs for the two regimes.
+    pub lane_width: usize,
     pub kind: AppKind,
 }
 
@@ -54,10 +72,10 @@ pub struct Prediction {
 /// Predict the simulated wall-clock of one event-driven run.
 pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Prediction {
     let h = w.n_hap as u64;
-    // Graph columns and per-vertex message counts by app kind.
-    let (columns, fan_in, sends_per_vertex, flops_per_msg) = match w.kind {
+    // Graph columns and per-vertex per-target traffic by app kind.
+    let (columns, fan_in, sends_per_vertex, flops_per_msg, section) = match w.kind {
         // Raw: α fan-in H, β fan-in H, ~1 posterior unicast in, 3 sends out.
-        AppKind::Raw => (w.n_mark as u64, 2 * h + 1, 3u64, 2u64),
+        AppKind::Raw => (w.n_mark as u64, 2 * h + 1, 3u64, 2u64, 0u64),
         // Interp: anchor grid columns; extra Section/HitVec/Tot traffic ≈ 3
         // unicasts in/out per vertex wave.
         AppKind::Interp { section } => (
@@ -65,6 +83,7 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
             2 * h + 4,
             6u64,
             2u64,
+            section as u64,
         ),
     };
     let n_vertices = columns * h;
@@ -81,20 +100,58 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
 
     let v_per_core = n_vertices.div_ceil(cores_used);
     let v_per_tile = n_vertices.div_ceil(tiles_used);
-
-    // Steady state: every column is mid-wave, so each vertex handles one
-    // full fan-in per superstep (×2 while α and β waves overlap — they do,
-    // so fan_in already counts both directions).
-    let handler = cost.handler(flops_per_msg);
-    let core_cycles = v_per_core * (fan_in * handler + sends_per_vertex * cost.send_request
-        + cost.handler(0) /* step handler */);
-    let mailbox_cycles = v_per_tile * fan_in * cost.mailbox_ingress;
-
     let barrier = cost.barrier(threads_used as usize);
+
+    let (steps, core_cycles, mailbox_cycles) = if w.lane_width <= 1 {
+        // ----- per-target pipelined regime (the paper's design) ----------
+        // Steady state: every column is mid-wave, so each vertex handles one
+        // full fan-in per superstep (×2 while α and β waves overlap — they
+        // do, so fan_in already counts both directions).
+        let handler = cost.handler(flops_per_msg);
+        let core_cycles = v_per_core
+            * (fan_in * handler + sends_per_vertex * cost.send_request
+                + cost.handler(0) /* step handler */);
+        let mailbox_cycles = v_per_tile * fan_in * cost.mailbox_ingress;
+        // Pipeline: fill takes `columns` steps, then ~1 target completes per
+        // step, plus a drain tail of `columns`.
+        let steps = columns + w.n_targets as u64 + columns;
+        (steps, core_cycles, mailbox_cycles)
+    } else {
+        // ----- wave-batched regime (PR 5) --------------------------------
+        let lanes = w.lane_width.min(w.n_targets.max(1)) as u64;
+        let chunks = lanes.div_ceil(LANES as u64);
+        let waves = (w.n_targets.max(1) as u64).div_ceil(lanes);
+        // Only the wavefront columns are active per superstep.  How many of
+        // an active column's H vertices share one core / one tile under the
+        // column-major manual mapping:
+        let col_threads = h.div_ceil(w.states_per_thread as u64).max(1);
+        let col_cores = col_threads.div_ceil(threads_per_core).max(1);
+        let col_tiles = col_threads
+            .div_ceil(cluster.threads_per_tile() as u64)
+            .max(1);
+        let v_active_per_core = h.div_ceil(col_cores);
+        let v_active_per_tile = h.div_ceil(col_tiles);
+        // Per active vertex per superstep: one direction's wave = H senders
+        // × chunks events; the whole lane group's FP work (reduce + emission
+        // + posterior ≈ lanes·(2H+2), plus the section blend on the interp
+        // plane); sends = own chunks (+ per-target hit vectors on interp).
+        let events_in = fan_in * chunks;
+        let flops = lanes * (2 * h + 2) + lanes * 3 * section;
+        let sends = sends_per_vertex.min(3) * chunks
+            + if section > 0 { lanes } else { 0 };
+        let core_active = v_active_per_core
+            * (events_in * cost.handler(0) + flops * cost.flop + sends * cost.send_request);
+        // Idle floor: every resident vertex's step handler runs each
+        // superstep (the DES bulk-charges count·handler(0) per core).
+        let step_floor = v_per_core * cost.handler(0);
+        let core_cycles = core_active + step_floor;
+        let mailbox_cycles = v_active_per_tile * events_in * cost.mailbox_ingress;
+        // One wave sweeps in ~columns supersteps (+ pairing/drain slack).
+        let steps = waves * (columns + 4);
+        (steps, core_cycles, mailbox_cycles)
+    };
+
     let step = core_cycles.max(mailbox_cycles) + barrier;
-    // Pipeline: fill takes `columns` steps, then ~1 target completes per
-    // step, plus a drain tail of `columns`.
-    let steps = columns + w.n_targets as u64 + columns;
     let total = steps * step;
     Prediction {
         steps,
@@ -118,8 +175,8 @@ mod tests {
 
     #[test]
     fn predictor_tracks_des_on_small_panel() {
-        // The predictor is a *steady-state* model: valid when T ≳ M so the
-        // pipeline is full (the paper regime is T=10000 ≫ M).
+        // Wave regime: the session runs all T targets as one lane group, so
+        // the predictor is checked at lane_width = n_targets.
         let pcfg = PanelConfig {
             n_hap: 8,
             n_mark: 24,
@@ -154,6 +211,7 @@ mod tests {
                 n_mark: 24,
                 n_targets: 60,
                 states_per_thread: 1,
+                lane_width: 60,
                 kind: AppKind::Raw,
             },
             &cluster,
@@ -173,23 +231,39 @@ mod tests {
     fn predictor_monotone_in_targets_and_size() {
         let cluster = crate::poets::topology::ClusterConfig::poets_48();
         let cost = CostModel::default();
+        for lane_width in [1usize, 1000] {
+            let base = Workload {
+                n_hap: 22,
+                n_mark: 2234,
+                n_targets: 100,
+                states_per_thread: 1,
+                lane_width: lane_width.min(100),
+                kind: AppKind::Raw,
+            };
+            let p0 = predict(&base, &cluster, &cost);
+            let more_targets = predict(
+                &Workload {
+                    n_targets: 1000,
+                    lane_width,
+                    ..base
+                },
+                &cluster,
+                &cost,
+            );
+            assert!(
+                more_targets.seconds > p0.seconds,
+                "lane_width {lane_width}: more targets must cost more"
+            );
+        }
         let base = Workload {
             n_hap: 22,
             n_mark: 2234,
             n_targets: 100,
             states_per_thread: 1,
+            lane_width: 1,
             kind: AppKind::Raw,
         };
         let p0 = predict(&base, &cluster, &cost);
-        let more_targets = predict(
-            &Workload {
-                n_targets: 1000,
-                ..base
-            },
-            &cluster,
-            &cost,
-        );
-        assert!(more_targets.seconds > p0.seconds);
         let more_soft = predict(
             &Workload {
                 states_per_thread: 10,
@@ -204,31 +278,74 @@ mod tests {
     }
 
     #[test]
+    fn wave_batching_predicts_fewer_cycles_when_targets_dominate() {
+        // In the T ≳ M regime a single wave (M+slack steps, amortised
+        // events) beats the per-target pipeline (2M+T steps).  The trade
+        // flips at chromosome scale with T ≪ M·LANES — only the wavefront
+        // columns are busy per superstep — which is why the paper-anchor
+        // figures keep lane_width = 1 (see the calibrate bench).
+        let cluster = crate::poets::topology::ClusterConfig::with_boards(1);
+        let cost = CostModel::default();
+        let shape = Workload {
+            n_hap: 8,
+            n_mark: 24,
+            n_targets: 60,
+            states_per_thread: 1,
+            lane_width: 1,
+            kind: AppKind::Raw,
+        };
+        let per_target = predict(&shape, &cluster, &cost);
+        let batched = predict(
+            &Workload {
+                lane_width: 60,
+                ..shape
+            },
+            &cluster,
+            &cost,
+        );
+        assert!(
+            batched.total_cycles < per_target.total_cycles,
+            "batched {} vs per-target {}",
+            batched.total_cycles,
+            per_target.total_cycles
+        );
+    }
+
+    #[test]
     fn interp_predicts_fewer_cycles_than_raw() {
         let cluster = crate::poets::topology::ClusterConfig::poets_48();
         let cost = CostModel::default();
-        let raw = predict(
-            &Workload {
-                n_hap: 70,
-                n_mark: 7000,
-                n_targets: 1000,
-                states_per_thread: 10,
-                kind: AppKind::Raw,
-            },
-            &cluster,
-            &cost,
-        );
-        let itp = predict(
-            &Workload {
-                n_hap: 70,
-                n_mark: 7000,
-                n_targets: 1000,
-                states_per_thread: 10,
-                kind: AppKind::Interp { section: 10 },
-            },
-            &cluster,
-            &cost,
-        );
-        assert!(itp.total_cycles * 4 < raw.total_cycles);
+        for lane_width in [1usize, 1000] {
+            let raw = predict(
+                &Workload {
+                    n_hap: 70,
+                    n_mark: 7000,
+                    n_targets: 1000,
+                    states_per_thread: 10,
+                    lane_width,
+                    kind: AppKind::Raw,
+                },
+                &cluster,
+                &cost,
+            );
+            let itp = predict(
+                &Workload {
+                    n_hap: 70,
+                    n_mark: 7000,
+                    n_targets: 1000,
+                    states_per_thread: 10,
+                    lane_width,
+                    kind: AppKind::Interp { section: 10 },
+                },
+                &cluster,
+                &cost,
+            );
+            assert!(
+                itp.total_cycles * 4 < raw.total_cycles,
+                "lane_width {lane_width}: interp {} vs raw {}",
+                itp.total_cycles,
+                raw.total_cycles
+            );
+        }
     }
 }

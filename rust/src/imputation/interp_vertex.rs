@@ -1,51 +1,55 @@
-//! Linear-interpolation state-section vertex — paper §5.3 / §6.3.
+//! Linear-interpolation state-section vertex — paper §5.3 / §6.3,
+//! wave-batched across targets (PR 5).
 //!
 //! One vertex per *state section*: a single HMM state at an annotated-marker
 //! anchor plus the run of interpolation states up to (not including) the next
 //! anchor ("a single HMM state and 9 linear interpolation states").  The HMM
 //! part behaves exactly like [`super::vertex::RawVertex`] over the anchor
 //! grid (with accumulated genetic distances); the interpolation part blends
-//! the vertex's own anchor posterior with its right neighbour's and reduces
+//! the vertex's own anchor posteriors with its right neighbour's and reduces
 //! each intermediate marker with that marker's own panel allele.
 //!
 //! Extra ports beyond the raw model:
-//! * `PORT_SECTION` (3) — unicast own anchor posterior to the *left*
+//! * `PORT_SECTION` (3) — unicast own anchor posteriors to the *left*
 //!   neighbour `(h, k-1)`, which owns the section between the two anchors.
-//! * `PORT_TOT` (4) — accumulator-only: anchor-column posterior total to the
+//! * `PORT_TOT` (4) — accumulator-only: anchor-column posterior totals to the
 //!   left accumulator (interpolated totals normalise intermediate columns).
 //!
-//! Message economics (the paper's §6.3 argument): a section of `L` states
-//! costs 2 multicasts + ≤3 unicasts per target instead of `L`·(2 multicasts +
-//! 1 unicast) — the ~10× message reduction that lifts the fan-in bottleneck.
+//! # Wave batching
+//!
+//! Like the raw plane, all targets of one run form a single lane group: the
+//! α/β/posterior/Section/Tot traffic carries [`LANES`](super::msg::LANES)-
+//! wide SoA slabs (one recv handler per wave chunk instead of per target),
+//! with arrivals buffered per sender haplotype (`WaveBuf`, allocated on
+//! first arrival, freed on completion) and reduced in canonical sender
+//! order — dosages are bit-identical for every batch width and host thread
+//! count.  The one exception is the **hit vector**: its 12-value section
+//! slab already fills the 56-byte event budget, so `HitVec` stays one event
+//! per (haplotype, target) and only its fan-in *sum* is canonicalised.
+//!
+//! Message economics (the paper's §6.3 argument, updated): a section of `L`
+//! states costs 2 multicast chunks + ≲3 unicast chunks per *wave* instead of
+//! per target — the anchor-grid shrink (K ≪ M columns) still lifts the
+//! fan-in bottleneck, but because hit vectors cannot lane-batch, the raw
+//! plane narrows the per-message gap as the lane width grows.
 
-use std::collections::VecDeque;
+// Canonical-order reductions index several parallel slabs by lane/sender —
+// explicit index loops keep the summation order visibly fixed.
+#![allow(clippy::needless_range_loop)]
+
 use std::sync::Arc;
 
 use crate::graph::device::{Ctx, Device, PortId, VertexId};
 
-use super::msg::{InterpMsg, MAX_SECTION};
+use super::msg::{InterpMsg, MAX_SECTION, for_each_chunk};
 use super::obs::ObsMatrix;
+use super::wave::{WaveBuf, reduce_hit_tot, reduce_same_diff};
 
 pub const PORT_FWD: PortId = 0;
 pub const PORT_BWD: PortId = 1;
 pub const PORT_DOWN: PortId = 2;
 pub const PORT_SECTION: PortId = 3;
 pub const PORT_TOT: PortId = 4;
-
-#[derive(Clone, Copy, Debug, Default)]
-struct PostAcc {
-    target: u32,
-    hit: f32,
-    tot: f32,
-    cnt: u32,
-}
-
-#[derive(Clone, Copy, Debug)]
-struct HitAcc {
-    target: u32,
-    vals: [f32; MAX_SECTION],
-    cnt: u32,
-}
 
 /// One state section (anchor `k`, haplotype `h`).
 pub struct InterpVertex {
@@ -69,26 +73,40 @@ pub struct InterpVertex {
     n_targets: u32,
     obs: Arc<ObsMatrix>,
 
-    acc_alpha: f32,
-    cnt_alpha: u32,
-    tgt_alpha: u32,
-    acc_beta: f32,
-    cnt_beta: u32,
-    tgt_beta: u32,
-    injected: u32,
-    pending_alpha: VecDeque<(u32, f32)>,
-    pending_beta: VecDeque<(u32, f32)>,
-    /// Own anchor posterior awaiting the right neighbour's Section message.
-    pending_p: VecDeque<(u32, f32)>,
-    pending_right: VecDeque<(u32, f32)>,
+    // α/β waves keyed by sender haplotype (canonical reduce — see
+    // super::vertex module docs; same invariance argument).
+    alpha_wave: WaveBuf,
+    beta_wave: WaveBuf,
+    alpha: Vec<f32>,
+    alpha_done: bool,
+    beta: Vec<f32>,
+    beta_done: bool,
+    posterior_done: bool,
+    injected_alpha: bool,
+    injected_beta: bool,
+
+    // Section interpolation (k+1 < k_n): own anchor posteriors await the
+    // right neighbour's Section wave.
+    own_p: Vec<f32>,
+    own_p_done: bool,
+    right_p_wave: WaveBuf,
+    right_p_complete: bool,
+    section_done: bool,
 
     // Accumulator (h == H−1) state:
-    post: VecDeque<PostAcc>,
-    hits: VecDeque<HitAcc>,
+    post_wave: WaveBuf,
+    post_allele1: Vec<bool>,
+    /// Hit contributions keyed by (sender haplotype, target × section):
+    /// a `[h_n × (n_targets · sec_len)]` canonical summation buffer.
+    hit_wave: WaveBuf,
+    hits_complete: bool,
     /// Own anchor totals T_k per target (kept until section dosages done).
-    pending_t: VecDeque<(u32, f32)>,
+    own_tot: Vec<f32>,
+    own_tot_done: bool,
     /// Right accumulator's totals T_{k+1}.
-    pending_t_right: VecDeque<(u32, f32)>,
+    right_tot_wave: WaveBuf,
+    right_tot_complete: bool,
+    sections_finished: bool,
     /// Anchor dosage per target (accumulators only).
     pub anchor_dosage: Vec<f32>,
     /// Section dosages, `[target * sec_len + i]` (accumulators only).
@@ -121,6 +139,7 @@ impl InterpVertex {
         let hn = h_n as f64;
         let is_acc = h == h_n - 1;
         let sec_len = sec_alleles.len();
+        let c = n_targets as usize;
         InterpVertex {
             h,
             k,
@@ -137,28 +156,32 @@ impl InterpVertex {
             err: err as f32,
             n_targets,
             obs,
-            acc_alpha: 0.0,
-            cnt_alpha: 0,
-            tgt_alpha: 0,
-            acc_beta: 0.0,
-            cnt_beta: 0,
-            tgt_beta: 0,
-            injected: 0,
-            pending_alpha: VecDeque::new(),
-            pending_beta: VecDeque::new(),
-            pending_p: VecDeque::new(),
-            pending_right: VecDeque::new(),
-            post: VecDeque::new(),
-            hits: VecDeque::new(),
-            pending_t: VecDeque::new(),
-            pending_t_right: VecDeque::new(),
-            anchor_dosage: if is_acc {
-                vec![f32::NAN; n_targets as usize]
-            } else {
-                Vec::new()
-            },
+            alpha_wave: WaveBuf::new(),
+            beta_wave: WaveBuf::new(),
+            alpha: Vec::new(),
+            alpha_done: false,
+            beta: Vec::new(),
+            beta_done: false,
+            posterior_done: false,
+            injected_alpha: false,
+            injected_beta: false,
+            own_p: Vec::new(),
+            own_p_done: false,
+            right_p_wave: WaveBuf::new(),
+            right_p_complete: false,
+            section_done: false,
+            post_wave: WaveBuf::new(),
+            post_allele1: if is_acc { vec![false; h_n as usize] } else { Vec::new() },
+            hit_wave: WaveBuf::new(),
+            hits_complete: false,
+            own_tot: Vec::new(),
+            own_tot_done: false,
+            right_tot_wave: WaveBuf::new(),
+            right_tot_complete: false,
+            sections_finished: false,
+            anchor_dosage: if is_acc { vec![f32::NAN; c] } else { Vec::new() },
             section_dosage: if is_acc {
-                vec![f32::NAN; n_targets as usize * sec_len]
+                vec![f32::NAN; c * sec_len]
             } else {
                 Vec::new()
             },
@@ -186,87 +209,148 @@ impl InterpVertex {
         }
     }
 
-    fn alpha_done(&mut self, target: u32, alpha: f32, ctx: &mut Ctx<InterpMsg>) {
-        if self.k + 1 < self.k_n {
-            ctx.send(PORT_FWD, InterpMsg::Alpha { target, val: alpha });
-        }
-        self.pending_alpha.push_back((target, alpha));
-        self.try_posterior(ctx);
-    }
-
-    fn beta_done(&mut self, target: u32, beta: f32, ctx: &mut Ctx<InterpMsg>) {
-        if self.k > 0 {
-            let folded = beta * self.emission(target);
-            ctx.flop(1);
-            ctx.send(PORT_BWD, InterpMsg::Beta { target, val: folded });
-        }
-        self.pending_beta.push_back((target, beta));
-        self.try_posterior(ctx);
-    }
-
-    fn try_posterior(&mut self, ctx: &mut Ctx<InterpMsg>) {
-        while let (Some(&(ta, a)), Some(&(tb, b))) =
-            (self.pending_alpha.front(), self.pending_beta.front())
-        {
-            if ta != tb {
-                break;
+    fn take_alpha(&mut self, base: usize, vals: &[f32], src: VertexId, ctx: &mut Ctx<InterpMsg>) {
+        let c = self.n_targets as usize;
+        let src_h = (src % self.h_n) as usize;
+        if self.alpha_wave.store(self.h_n as usize, c, src_h, base, vals, "α") {
+            let buf = self.alpha_wave.take();
+            let mut alpha =
+                reduce_same_diff(&buf, self.h_n as usize, c, self.h as usize, self.a_same, self.a_diff);
+            for (t, a) in alpha.iter_mut().enumerate() {
+                ctx.flop(2 * self.h_n as u64);
+                *a *= self.emission(t as u32);
+                ctx.flop(1);
             }
-            self.pending_alpha.pop_front();
-            self.pending_beta.pop_front();
-            let p = a * b;
+            self.finish_alpha(alpha, ctx);
+        }
+    }
+
+    fn take_beta(&mut self, base: usize, vals: &[f32], src: VertexId, ctx: &mut Ctx<InterpMsg>) {
+        let c = self.n_targets as usize;
+        let src_h = (src % self.h_n) as usize;
+        if self.beta_wave.store(self.h_n as usize, c, src_h, base, vals, "β") {
+            let buf = self.beta_wave.take();
+            let beta = reduce_same_diff(
+                &buf,
+                self.h_n as usize,
+                c,
+                self.h as usize,
+                self.a_same_next,
+                self.a_diff_next,
+            );
+            ctx.flop(2 * self.h_n as u64 * c as u64);
+            self.finish_beta(beta, ctx);
+        }
+    }
+
+    fn finish_alpha(&mut self, alpha: Vec<f32>, ctx: &mut Ctx<InterpMsg>) {
+        if self.k + 1 < self.k_n {
+            for_each_chunk(&alpha, |base, n, vals| {
+                ctx.send(PORT_FWD, InterpMsg::AlphaVec { base, n, vals });
+            });
+        }
+        self.alpha = alpha;
+        self.alpha_done = true;
+        self.try_posterior(ctx);
+    }
+
+    fn finish_beta(&mut self, beta: Vec<f32>, ctx: &mut Ctx<InterpMsg>) {
+        if self.k > 0 {
+            let folded: Vec<f32> = beta
+                .iter()
+                .enumerate()
+                .map(|(t, &b)| {
+                    ctx.flop(1);
+                    b * self.emission(t as u32)
+                })
+                .collect();
+            for_each_chunk(&folded, |base, n, vals| {
+                ctx.send(PORT_BWD, InterpMsg::BetaVec { base, n, vals });
+            });
+        }
+        self.beta = beta;
+        self.beta_done = true;
+        self.try_posterior(ctx);
+    }
+
+    /// Both waves in → per-lane anchor posteriors → tally/unicast, Section
+    /// wave to the left neighbour, and the section blend when ready.
+    fn try_posterior(&mut self, ctx: &mut Ctx<InterpMsg>) {
+        if self.posterior_done || !self.alpha_done || !self.beta_done {
+            return;
+        }
+        self.posterior_done = true;
+        let c = self.n_targets as usize;
+        let mut post = vec![0.0f32; c];
+        for t in 0..c {
+            post[t] = self.alpha[t] * self.beta[t];
             ctx.flop(1);
-            if self.is_accumulator() {
-                self.tally(ta, self.allele == 1, p, ctx);
-            } else {
+        }
+        self.alpha = Vec::new();
+        self.beta = Vec::new();
+        if self.is_accumulator() {
+            let h = self.h;
+            let allele1 = self.allele == 1;
+            self.take_posts(h, allele1, 0, &post, ctx);
+        } else {
+            let allele1 = self.allele == 1;
+            for_each_chunk(&post, |base, n, vals| {
                 ctx.send(
                     PORT_DOWN,
-                    InterpMsg::Post {
-                        target: ta,
-                        allele1: self.allele == 1,
-                        val: p,
+                    InterpMsg::PostVec {
+                        base,
+                        n,
+                        allele1,
+                        vals,
                     },
                 );
-            }
-            if self.k > 0 {
-                // Our anchor posterior is the right endpoint of the left
-                // neighbour's section.
-                ctx.send(PORT_SECTION, InterpMsg::Section { target: ta, val: p });
-            }
-            if self.k + 1 < self.k_n {
-                self.pending_p.push_back((ta, p));
-                self.try_section(ctx);
-            }
+            });
+        }
+        if self.k > 0 {
+            // Our anchor posteriors are the right endpoints of the left
+            // neighbour's section.
+            for_each_chunk(&post, |base, n, vals| {
+                ctx.send(PORT_SECTION, InterpMsg::SectionVec { base, n, vals });
+            });
+        }
+        if self.k + 1 < self.k_n {
+            self.own_p = post;
+            self.own_p_done = true;
+            self.try_section(ctx);
         }
     }
 
-    /// Blend own + right anchor posteriors over the section (Fig 10).
+    /// Blend own + right anchor posteriors over the section (Fig 10),
+    /// for every lane at once.
     fn try_section(&mut self, ctx: &mut Ctx<InterpMsg>) {
-        while let (Some(&(tp, p)), Some(&(tr, pr))) =
-            (self.pending_p.front(), self.pending_right.front())
-        {
-            if tp != tr {
-                break;
-            }
-            self.pending_p.pop_front();
-            self.pending_right.pop_front();
-            if self.sec_alleles.is_empty() {
-                continue;
-            }
+        if self.section_done || !self.own_p_done || !self.right_p_complete {
+            return;
+        }
+        self.section_done = true;
+        let own_p = std::mem::take(&mut self.own_p);
+        let right_p = self.right_p_wave.take();
+        if self.sec_alleles.is_empty() {
+            return;
+        }
+        let c = self.n_targets as usize;
+        let sec_len = self.sec_alleles.len();
+        for t in 0..c {
+            let (p, pr) = (own_p[t], right_p[t]);
             let mut vals = [0.0f32; MAX_SECTION];
-            for (i, (&a, &f)) in self.sec_alleles.iter().zip(&self.sec_fracs).enumerate() {
-                let blended = p + f * (pr - p);
-                vals[i] = if a == 1 { blended } else { 0.0 };
+            for i in 0..sec_len {
+                let blended = p + self.sec_fracs[i] * (pr - p);
+                vals[i] = if self.sec_alleles[i] == 1 { blended } else { 0.0 };
                 ctx.flop(3);
             }
             if self.is_accumulator() {
-                let n = self.sec_alleles.len() as u8;
-                self.take_hits(tp, n, &vals, ctx);
+                let h = self.h;
+                self.take_hits(h, t as u32, sec_len as u8, &vals, ctx);
             } else {
                 ctx.send(
                     PORT_DOWN,
                     InterpMsg::HitVec {
-                        target: tp,
-                        n: self.sec_alleles.len() as u8,
+                        target: t as u32,
+                        n: sec_len as u8,
                         vals,
                     },
                 );
@@ -274,93 +358,100 @@ impl InterpVertex {
         }
     }
 
-    fn tally(&mut self, target: u32, allele1: bool, val: f32, ctx: &mut Ctx<InterpMsg>) {
+    /// Accumulate one sender's posterior lanes; once complete, finish anchor
+    /// dosages and launch the Tot wave.
+    fn take_posts(
+        &mut self,
+        src_h: u32,
+        allele1: bool,
+        base: usize,
+        vals: &[f32],
+        ctx: &mut Ctx<InterpMsg>,
+    ) {
         debug_assert!(self.is_accumulator());
-        let acc = match self.post.iter_mut().find(|p| p.target == target) {
-            Some(acc) => acc,
-            None => {
-                self.post.push_back(PostAcc {
-                    target,
-                    ..Default::default()
-                });
-                self.post.back_mut().unwrap()
+        let c = self.n_targets as usize;
+        self.post_allele1[src_h as usize] = allele1;
+        ctx.flop(2 * vals.len() as u64);
+        if self
+            .post_wave
+            .store(self.h_n as usize, c, src_h as usize, base, vals, "posterior")
+        {
+            let buf = self.post_wave.take();
+            let sums = reduce_hit_tot(&buf, self.h_n as usize, c, &self.post_allele1);
+            let mut tots = vec![0.0f32; c];
+            for (t, &(hit, tot)) in sums.iter().enumerate() {
+                self.anchor_dosage[t] = if tot > 0.0 { hit / tot } else { 0.0 };
+                ctx.flop(1);
+                tots[t] = tot;
             }
-        };
-        if allele1 {
-            acc.hit += val;
-        }
-        acc.tot += val;
-        acc.cnt += 1;
-        ctx.flop(2);
-        if acc.cnt == self.h_n {
-            let (hit, tot) = (acc.hit, acc.tot);
-            self.post.retain(|p| p.target != target);
-            self.anchor_dosage[target as usize] = if tot > 0.0 { hit / tot } else { 0.0 };
-            ctx.flop(1);
             if self.k > 0 {
-                ctx.send(PORT_TOT, InterpMsg::Tot { target, val: tot });
+                for_each_chunk(&tots, |base, n, vals| {
+                    ctx.send(PORT_TOT, InterpMsg::TotVec { base, n, vals });
+                });
             }
             if self.k + 1 < self.k_n {
-                self.pending_t.push_back((target, tot));
+                self.own_tot = tots;
+                self.own_tot_done = true;
                 self.try_finish_section(ctx);
             }
         }
     }
 
+    /// Store one (sender, target) hit vector into the canonical buffer.
     fn take_hits(
         &mut self,
+        src_h: u32,
         target: u32,
         n: u8,
         vals: &[f32; MAX_SECTION],
         ctx: &mut Ctx<InterpMsg>,
     ) {
         debug_assert!(self.is_accumulator());
-        assert_eq!(n as usize, self.sec_alleles.len(), "hit-vector length");
-        let acc = match self.hits.iter_mut().find(|a| a.target == target) {
-            Some(acc) => acc,
-            None => {
-                self.hits.push_back(HitAcc {
-                    target,
-                    vals: [0.0; MAX_SECTION],
-                    cnt: 0,
-                });
-                self.hits.back_mut().unwrap()
-            }
-        };
-        for i in 0..n as usize {
-            acc.vals[i] += vals[i];
-            ctx.flop(1);
+        let sec_len = self.sec_alleles.len();
+        assert_eq!(n as usize, sec_len, "hit-vector length");
+        let c = self.n_targets as usize;
+        assert!((target as usize) < c, "hit-vector target out of range");
+        ctx.flop(sec_len as u64);
+        if self.hit_wave.store(
+            self.h_n as usize,
+            c * sec_len,
+            src_h as usize,
+            target as usize * sec_len,
+            &vals[..sec_len],
+            "hit",
+        ) {
+            self.hits_complete = true;
+            self.try_finish_section(ctx);
         }
-        acc.cnt += 1;
-        self.try_finish_section(ctx);
     }
 
-    /// Finish intermediate-marker dosages once hit sums and both anchor
-    /// totals are available for the front target.
+    /// Finish intermediate-marker dosages once every hit vector and both
+    /// anchor-total waves are in — reduced in canonical sender order.
     fn try_finish_section(&mut self, ctx: &mut Ctx<InterpMsg>) {
-        loop {
-            let Some(hit) = self.hits.front() else { break };
-            if hit.cnt < self.h_n {
-                break;
-            }
-            let target = hit.target;
-            let Some(&(tt, t_own)) = self.pending_t.front() else { break };
-            let Some(&(ttr, t_right)) = self.pending_t_right.front() else {
-                break;
-            };
-            if tt != target || ttr != target {
-                break;
-            }
-            let vals = hit.vals;
-            self.hits.pop_front();
-            self.pending_t.pop_front();
-            self.pending_t_right.pop_front();
-            let sec_len = self.sec_alleles.len();
+        let sec_len = self.sec_alleles.len();
+        if self.sections_finished
+            || sec_len == 0
+            || !self.hits_complete
+            || !self.own_tot_done
+            || !self.right_tot_complete
+        {
+            return;
+        }
+        self.sections_finished = true;
+        let c = self.n_targets as usize;
+        let hits = self.hit_wave.take();
+        let right_tot = self.right_tot_wave.take();
+        let own_tot = std::mem::take(&mut self.own_tot);
+        for t in 0..c {
             for i in 0..sec_len {
-                let tot = t_own + self.sec_fracs[i] * (t_right - t_own);
+                let tot = own_tot[t] + self.sec_fracs[i] * (right_tot[t] - own_tot[t]);
                 ctx.flop(3);
-                self.section_dosage[target as usize * sec_len + i] =
-                    if tot > 0.0 { vals[i] / tot } else { 0.0 };
+                let mut sum = 0.0f32;
+                for hh in 0..self.h_n as usize {
+                    sum += hits[(hh * c + t) * sec_len + i];
+                }
+                self.section_dosage[t * sec_len + i] = if tot > 0.0 { sum / tot } else { 0.0 };
+                ctx.flop(1);
             }
         }
     }
@@ -373,73 +464,124 @@ impl Device for InterpVertex {
 
     fn recv(&mut self, msg: &InterpMsg, src: VertexId, ctx: &mut Ctx<InterpMsg>) {
         match *msg {
-            InterpMsg::Alpha { target, val } => {
-                assert_eq!(target, self.tgt_alpha, "α wave out of order");
-                let same = src % self.h_n == self.h;
-                let a_ij = if same { self.a_same } else { self.a_diff };
-                self.acc_alpha += a_ij * val;
-                self.cnt_alpha += 1;
-                ctx.flop(2);
-                if self.cnt_alpha == self.h_n {
-                    let alpha = self.acc_alpha * self.emission(target);
-                    ctx.flop(1);
-                    self.acc_alpha = 0.0;
-                    self.cnt_alpha = 0;
-                    self.tgt_alpha += 1;
-                    self.alpha_done(target, alpha, ctx);
-                }
+            InterpMsg::AlphaVec { base, n, ref vals } => {
+                self.take_alpha(base as usize, &vals[..n as usize], src, ctx)
             }
-            InterpMsg::Beta { target, val } => {
-                assert_eq!(target, self.tgt_beta, "β wave out of order");
-                let same = src % self.h_n == self.h;
-                let a_ij = if same {
-                    self.a_same_next
-                } else {
-                    self.a_diff_next
-                };
-                self.acc_beta += a_ij * val;
-                self.cnt_beta += 1;
-                ctx.flop(2);
-                if self.cnt_beta == self.h_n {
-                    let beta = self.acc_beta;
-                    self.acc_beta = 0.0;
-                    self.cnt_beta = 0;
-                    self.tgt_beta += 1;
-                    self.beta_done(target, beta, ctx);
-                }
+            InterpMsg::BetaVec { base, n, ref vals } => {
+                self.take_beta(base as usize, &vals[..n as usize], src, ctx)
             }
-            InterpMsg::Post {
-                target,
+            InterpMsg::PostVec {
+                base,
+                n,
                 allele1,
-                val,
-            } => self.tally(target, allele1, val, ctx),
-            InterpMsg::Section { target, val } => {
-                self.pending_right.push_back((target, val));
-                self.try_section(ctx);
+                ref vals,
+            } => {
+                let src_h = src % self.h_n;
+                self.take_posts(src_h, allele1, base as usize, &vals[..n as usize], ctx)
             }
-            InterpMsg::HitVec { target, n, vals } => self.take_hits(target, n, &vals, ctx),
-            InterpMsg::Tot { target, val } => {
-                self.pending_t_right.push_back((target, val));
-                self.try_finish_section(ctx);
+            InterpMsg::SectionVec { base, n, ref vals } => {
+                let c = self.n_targets as usize;
+                if self
+                    .right_p_wave
+                    .store(1, c, 0, base as usize, &vals[..n as usize], "Section")
+                {
+                    self.right_p_complete = true;
+                    self.try_section(ctx);
+                }
+            }
+            InterpMsg::HitVec { target, n, ref vals } => {
+                let src_h = src % self.h_n;
+                self.take_hits(src_h, target, n, vals, ctx)
+            }
+            InterpMsg::TotVec { base, n, ref vals } => {
+                let c = self.n_targets as usize;
+                if self
+                    .right_tot_wave
+                    .store(1, c, 0, base as usize, &vals[..n as usize], "Tot")
+                {
+                    self.right_tot_complete = true;
+                    self.try_finish_section(ctx);
+                }
             }
         }
     }
 
     fn step(&mut self, ctx: &mut Ctx<InterpMsg>) -> bool {
-        if self.k == 0 && self.injected < self.n_targets {
-            let target = self.injected;
-            self.injected += 1;
-            self.tgt_alpha = target + 1;
-            self.alpha_done(target, 1.0 / self.h_n as f32, ctx);
-            return true;
+        let c = self.n_targets as usize;
+        let mut injected = false;
+        if self.k == 0 && !self.injected_alpha {
+            self.injected_alpha = true;
+            self.finish_alpha(vec![1.0 / self.h_n as f32; c], ctx);
+            injected = true;
         }
-        if self.k == self.k_n - 1 && self.injected < self.n_targets {
-            let target = self.injected;
-            self.injected += 1;
-            self.tgt_beta = target + 1;
-            self.beta_done(target, 1.0, ctx);
-            return true;
+        if self.k == self.k_n - 1 && !self.injected_beta {
+            self.injected_beta = true;
+            self.finish_beta(vec![1.0; c], ctx);
+            injected = true;
         }
-        false
+        injected
+    }
+
+    fn lanes(msg: &InterpMsg) -> u32 {
+        msg.lanes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imputation::msg::LANES;
+    use crate::model::panel::TargetHaplotype;
+
+    fn mk(h: u32, k: u32, n_targets: u32) -> InterpVertex {
+        let targets: Vec<TargetHaplotype> = (0..n_targets)
+            .map(|_| TargetHaplotype::new(vec![1, -1, -1, -1, 0]))
+            .collect();
+        let obs = ObsMatrix::from_targets(&targets);
+        InterpVertex::new(
+            h,
+            k,
+            2,
+            2,
+            if k == 0 { 0 } else { 4 },
+            1,
+            if k == 0 { vec![1, 0, 1] } else { Vec::new() },
+            if k == 0 { vec![0.25, 0.5, 0.75] } else { Vec::new() },
+            0.1,
+            0.2,
+            1e-4,
+            n_targets,
+            obs,
+        )
+    }
+
+    #[test]
+    fn last_anchor_owns_no_section() {
+        assert_eq!(mk(0, 0, 1).sec_len(), 3);
+        assert_eq!(mk(0, 1, 1).sec_len(), 0);
+    }
+
+    #[test]
+    fn injection_sends_chunked_waves() {
+        let mut v = mk(0, 0, LANES as u32 + 3);
+        let mut ctx = Ctx::new(0, 0);
+        assert!(v.step(&mut ctx));
+        let sends = ctx.take_sends();
+        assert_eq!(sends.len(), 2, "LANES+3 α lanes chunk into two events");
+        assert!(matches!(sends[0], (PORT_FWD, InterpMsg::AlphaVec { base: 0, .. })));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate Section wave")]
+    fn detects_duplicate_section_waves() {
+        let mut v = mk(0, 0, 1);
+        let mut ctx = Ctx::new(0, 0);
+        let msg = InterpMsg::SectionVec {
+            base: 0,
+            n: 1,
+            vals: [0.5; LANES],
+        };
+        v.recv(&msg, 1, &mut ctx);
+        v.recv(&msg, 1, &mut ctx);
     }
 }

@@ -1,9 +1,10 @@
 //! The paper's contribution: event-driven genotype imputation (§5).
 //!
-//! * [`msg`] — 64-byte event payloads (α/β/posterior plus interpolation).
+//! * [`msg`] — 64-byte event payloads (α/β/posterior plus interpolation),
+//!   wave-batched: SoA slabs of up to [`msg::LANES`] targets per event.
 //! * [`obs`] — shared target-observation storage (board-DRAM model).
 //! * [`vertex`] / [`app`] — the raw model: one vertex per HMM state,
-//!   Algorithm 1 handlers, target-haplotype pipelining, soft-scheduling.
+//!   Algorithm 1 handlers, multi-target wave sweeps, soft-scheduling.
 //! * [`interp_vertex`] / [`interp_app`] — the linear-interpolation variant:
 //!   one vertex per state *section* (1 HMM state + N interpolation states).
 //! * [`analytic`] — closed-form step-time predictor, cross-validated against
@@ -21,5 +22,6 @@ pub mod interp_vertex;
 pub mod msg;
 pub mod obs;
 pub mod vertex;
+pub(crate) mod wave;
 
 pub use app::{EventRunResult, RawAppConfig, build_raw_graph};

@@ -1,48 +1,128 @@
-//! Event payloads for the imputation applications.
+//! Event payloads for the imputation applications — SoA wave batching.
 //!
-//! Every variant fits the 64-byte Tinsel event budget (asserted by the
-//! simulator at load time).  Events carry the target-haplotype index so the
-//! pipelined waves of different targets can be disentangled — and so the
-//! vertices can *assert* no cross-target contamination, the hazard the
-//! paper's synchronised stepping exists to prevent.
+//! Every variant fits the 64-byte Tinsel event budget: 8 bytes of routing
+//! metadata leave **56 bytes of payload** (asserted by the simulator at load
+//! time via [`crate::poets::event::assert_event_fits`]).
+//!
+//! # SoA message layout (the 56-byte budget, spent)
+//!
+//! Since PR 5 the event plane is *wave-batched*: one event carries the values
+//! of up to [`LANES`] in-flight targets as a structure-of-arrays slab —
+//! `base` names the first target, `n` the occupied lane count, and
+//! `vals[0..n]` the per-target payloads.  A wave wider than `LANES` targets
+//! is *chunked* into `ceil(width / LANES)` events per sender (see
+//! [`for_each_chunk`]); `n == 1` degenerates to the original one event per
+//! (vertex, target, wave) traffic, which is how the per-target plane is still
+//! expressible (batch width 1) and why batched runs are bit-identical to it.
+//!
+//! Budget arithmetic for `LANES = 8` (f32 lanes, 4-byte alignment, 1-byte
+//! discriminant packed with the small fields):
+//!
+//! * `AlphaVec`/`BetaVec`/`SectionVec`/`TotVec`: tag + n + base + 8×f32 ≈ 40 B
+//! * `PostVec`: tag + n + allele flag + base + 8×f32 ≈ 40 B
+//! * `HitVec`: tag + n + target + 12×f32 = 56 B — already full, so hit
+//!   vectors stay **per-target** (one event per target per section); only the
+//!   scalar α/β/posterior/section/total traffic batches across lanes.
+//!
+//! `LANES = 12` would need 60 B for the slab alone — 8 is the widest SoA slab
+//! the event budget admits.
+
+/// Lane width of one SoA event: how many targets' values a single α/β/
+/// posterior event carries.  Fixed by the 56-byte payload budget (see the
+/// module docs); wider waves are chunked by [`for_each_chunk`].
+pub const LANES: usize = 8;
 
 /// Maximum linear-interpolation section length (1 HMM state + 11 interp
 /// states) such that a per-section hit-vector still fits one event.
 pub const MAX_SECTION: usize = 12;
 
-/// Raw-model event (paper Algorithm 1: msgType ∈ {alpha, beta, posterior}).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum RawMsg {
-    /// Forward variable of the sending vertex (receiver applies `a_ij`).
-    Alpha { target: u32, val: f32 },
-    /// Backward variable of the sender, pre-multiplied by the sender's own
-    /// emission `b_j(O_{m+1})` (receiver applies `a_ij`).
-    Beta { target: u32, val: f32 },
-    /// Posterior probability of one state, labelled with its allele, unicast
-    /// down the column to the accumulating vertex.
-    Post { target: u32, allele1: bool, val: f32 },
+/// Chunk one wave's per-target slab into `LANES`-wide SoA pieces and hand
+/// each `(base, n, vals)` chunk to `emit` — the one place the event budget
+/// is enforced on the send path.
+pub fn for_each_chunk(vals: &[f32], mut emit: impl FnMut(u32, u8, [f32; LANES])) {
+    let mut base = 0usize;
+    while base < vals.len() {
+        let n = (vals.len() - base).min(LANES);
+        let mut slab = [0.0f32; LANES];
+        slab[..n].copy_from_slice(&vals[base..base + n]);
+        emit(base as u32, n as u8, slab);
+        base += n;
+    }
 }
 
-/// Linear-interpolation event (paper §5.3).
+/// Raw-model event (paper Algorithm 1: msgType ∈ {alpha, beta, posterior}),
+/// wave-batched: one event per sender per wave chunk instead of per target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RawMsg {
+    /// Forward variables of the sending vertex for targets `base..base+n`
+    /// (receiver applies `a_ij` lane-by-lane).
+    AlphaVec { base: u32, n: u8, vals: [f32; LANES] },
+    /// Backward variables of the sender, each pre-multiplied by the sender's
+    /// own emission `b_j(O_{m+1})` (receiver applies `a_ij`).
+    BetaVec { base: u32, n: u8, vals: [f32; LANES] },
+    /// Posterior probabilities of one state for `n` targets, labelled with
+    /// the sending state's allele, unicast down the column to the
+    /// accumulating vertex.
+    PostVec {
+        base: u32,
+        n: u8,
+        allele1: bool,
+        vals: [f32; LANES],
+    },
+}
+
+impl RawMsg {
+    /// Occupied lane count (targets serviced by this one event).
+    pub fn lanes(&self) -> u32 {
+        match *self {
+            RawMsg::AlphaVec { n, .. } | RawMsg::BetaVec { n, .. } | RawMsg::PostVec { n, .. } => {
+                n as u32
+            }
+        }
+    }
+}
+
+/// Linear-interpolation event (paper §5.3), wave-batched like [`RawMsg`];
+/// only the hit vector stays per-target (its 12-value slab already fills the
+/// event budget — see the module docs).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum InterpMsg {
     /// As in the raw model, but over the anchor (annotated-marker) grid.
-    Alpha { target: u32, val: f32 },
-    Beta { target: u32, val: f32 },
-    Post { target: u32, allele1: bool, val: f32 },
-    /// Anchor posterior of vertex (h, k), sent right→left so the section
-    /// owner (h, k-1) can interpolate its intermediate states.
-    Section { target: u32, val: f32 },
+    AlphaVec { base: u32, n: u8, vals: [f32; LANES] },
+    BetaVec { base: u32, n: u8, vals: [f32; LANES] },
+    PostVec {
+        base: u32,
+        n: u8,
+        allele1: bool,
+        vals: [f32; LANES],
+    },
+    /// Anchor posteriors of vertex (h, k) for `n` targets, sent right→left
+    /// so the section owner (h, k-1) can interpolate its intermediates.
+    SectionVec { base: u32, n: u8, vals: [f32; LANES] },
     /// Per-intermediate-marker allele-1 posterior contributions of one
-    /// haplotype's section, packed into a single event.
+    /// haplotype's section for ONE target, packed into a single event.
     HitVec {
         target: u32,
         n: u8,
         vals: [f32; MAX_SECTION],
     },
-    /// Column posterior total of anchor k, sent right→left between
-    /// accumulators so intermediate totals can be interpolated.
-    Tot { target: u32, val: f32 },
+    /// Column posterior totals of anchor k for `n` targets, sent right→left
+    /// between accumulators so intermediate totals can be interpolated.
+    TotVec { base: u32, n: u8, vals: [f32; LANES] },
+}
+
+impl InterpMsg {
+    /// Occupied lane count (targets serviced by this one event).
+    pub fn lanes(&self) -> u32 {
+        match *self {
+            InterpMsg::AlphaVec { n, .. }
+            | InterpMsg::BetaVec { n, .. }
+            | InterpMsg::PostVec { n, .. }
+            | InterpMsg::SectionVec { n, .. }
+            | InterpMsg::TotVec { n, .. } => n as u32,
+            InterpMsg::HitVec { .. } => 1,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -51,7 +131,11 @@ mod tests {
 
     #[test]
     fn raw_msg_fits_event_budget() {
-        assert!(std::mem::size_of::<RawMsg>() <= 56);
+        assert!(
+            std::mem::size_of::<RawMsg>() <= 56,
+            "RawMsg is {} bytes",
+            std::mem::size_of::<RawMsg>()
+        );
     }
 
     #[test]
@@ -61,5 +145,47 @@ mod tests {
             "InterpMsg is {} bytes",
             std::mem::size_of::<InterpMsg>()
         );
+    }
+
+    #[test]
+    fn chunking_covers_every_lane_once() {
+        let vals: Vec<f32> = (0..LANES + 3).map(|i| i as f32).collect();
+        let mut seen = Vec::new();
+        for_each_chunk(&vals, |base, n, slab| {
+            for i in 0..n as usize {
+                seen.push((base as usize + i, slab[i]));
+            }
+        });
+        assert_eq!(seen.len(), LANES + 3);
+        for (i, &(lane, v)) in seen.iter().enumerate() {
+            assert_eq!(lane, i);
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    #[test]
+    fn chunking_respects_the_lane_budget() {
+        let vals = vec![1.0f32; 3 * LANES + 1];
+        let mut chunks = Vec::new();
+        for_each_chunk(&vals, |base, n, _| chunks.push((base, n)));
+        assert_eq!(chunks.len(), 4);
+        assert!(chunks.iter().all(|&(_, n)| n as usize <= LANES));
+        assert_eq!(chunks.last().unwrap().1, 1);
+    }
+
+    #[test]
+    fn lane_counts_reported() {
+        let a = RawMsg::AlphaVec {
+            base: 0,
+            n: 5,
+            vals: [0.0; LANES],
+        };
+        assert_eq!(a.lanes(), 5);
+        let h = InterpMsg::HitVec {
+            target: 3,
+            n: 9,
+            vals: [0.0; MAX_SECTION],
+        };
+        assert_eq!(h.lanes(), 1, "hit vectors are per-target events");
     }
 }

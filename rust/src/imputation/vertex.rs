@@ -1,39 +1,54 @@
-//! The raw-model state vertex — paper Algorithm 1, one HMM state per vertex.
+//! The raw-model state vertex — paper Algorithm 1, one HMM state per vertex,
+//! wave-batched across targets (PR 5).
 //!
 //! Ports (fixed order, empty destination lists at the panel edges):
 //! * `PORT_FWD` (0) — multicast α to every vertex of the next column.
 //! * `PORT_BWD` (1) — multicast β·b to every vertex of the previous column.
-//! * `PORT_DOWN` (2) — unicast posterior to the column's accumulating vertex
+//! * `PORT_DOWN` (2) — unicast posteriors to the column's accumulating vertex
 //!   (the "final haplotype" vertex, h = H−1), which tallies allele-labelled
 //!   posterior mass and makes the major/minor call.
 //!
-//! Target-haplotype pipelining: column 0 / column M−1 vertices inject the
-//! next target's α/β at every global step (lines 26–28), so consecutive
-//! targets travel the panel one column apart.  Computed α values wait in a
-//! per-vertex ring until the matching β wave arrives (and vice versa); the
-//! rings are keyed by target index and every arrival asserts target ordering
-//! — the cross-contamination hazard the synchronised stepping prevents.
+//! # Wave batching
+//!
+//! All targets of one engine run form a single **lane group**: column 0
+//! injects every target's α (and column M−1 every β) in one wave, carried as
+//! SoA events of up to [`LANES`](super::msg::LANES) targets each (wider
+//! groups are chunked — see `imputation::msg`).  One `recv` handler services
+//! a whole chunk, so per-event overhead is amortised over the lane width:
+//! per-target event counts drop by ~the lane width relative to the
+//! per-target plane the paper describes (which is exactly lane width 1).
+//!
+//! # Canonical reduce ⇒ batch-width invariance
+//!
+//! Arrivals are buffered per **sender haplotype** (`WaveBuf`) and reduced
+//! in ascending sender order once the wave is complete.  The f32 sum order
+//! is therefore a property of the model, not of event timing: dosages are
+//! bit-identical for every batch width and every host thread count (enforced
+//! by `tests/parallel_equivalence.rs`), which is what lets the serve layer
+//! merge coalesced requests' targets into one wave and still answer each
+//! request exactly as a solo run would.
+//!
+//! Cost: a wave in flight holds O(H · width) f32 at the vertices it is
+//! currently crossing (`WaveBuf` allocates on first arrival and frees on
+//! completion — idle columns hold nothing).  On panels where even that
+//! bites, bound the width with `ImputeSession::batch` — numerics are width
+//! invariant, so splitting has no accuracy consequences.
 
-use std::collections::VecDeque;
+// Canonical-order reductions index several parallel slabs by lane/sender —
+// explicit index loops keep the summation order visibly fixed.
+#![allow(clippy::needless_range_loop)]
+
 use std::sync::Arc;
 
 use crate::graph::device::{Ctx, Device, PortId, VertexId};
 
-use super::msg::RawMsg;
+use super::msg::{RawMsg, for_each_chunk};
 use super::obs::ObsMatrix;
+use super::wave::{WaveBuf, reduce_hit_tot, reduce_same_diff};
 
 pub const PORT_FWD: PortId = 0;
 pub const PORT_BWD: PortId = 1;
 pub const PORT_DOWN: PortId = 2;
-
-/// Per-target posterior tally at an accumulating vertex.
-#[derive(Clone, Copy, Debug, Default)]
-struct PostAcc {
-    target: u32,
-    hit: f32,
-    tot: f32,
-    cnt: u32,
-}
 
 /// One HMM state (reference haplotype `h`, marker `m`).
 pub struct RawVertex {
@@ -55,21 +70,22 @@ pub struct RawVertex {
     n_targets: u32,
     obs: Arc<ObsMatrix>,
 
-    // Forward accumulation (Algorithm 1 lines 4–13).
-    acc_alpha: f32,
-    cnt_alpha: u32,
-    tgt_alpha: u32,
-    // Backward accumulation (lines 14–22).
-    acc_beta: f32,
-    cnt_beta: u32,
-    tgt_beta: u32,
+    // In-flight waves, keyed by sender haplotype (canonical reduce).
+    alpha_wave: WaveBuf,
+    beta_wave: WaveBuf,
+    // Completed α/β slabs awaiting their partner wave.
+    alpha: Vec<f32>,
+    alpha_done: bool,
+    beta: Vec<f32>,
+    beta_done: bool,
+    posterior_done: bool,
     // Injection bookkeeping (edge columns).
-    injected: u32,
-    // Computed values awaiting their partner, ordered by target.
-    pending_alpha: VecDeque<(u32, f32)>,
-    pending_beta: VecDeque<(u32, f32)>,
-    // Accumulator role (h == H−1 only).
-    post: VecDeque<PostAcc>,
+    injected_alpha: bool,
+    injected_beta: bool,
+    // Accumulator role (h == H−1 only): posterior contributions keyed by
+    // sender haplotype, plus each sender's allele label.
+    post_wave: WaveBuf,
+    post_allele1: Vec<bool>,
     /// Finished dosages (target-indexed), accumulator vertices only.
     pub dosage: Vec<f32>,
 }
@@ -89,6 +105,7 @@ impl RawVertex {
         obs: Arc<ObsMatrix>,
     ) -> RawVertex {
         let hn = h_n as f64;
+        let is_acc = h == h_n - 1;
         RawVertex {
             h,
             m,
@@ -102,17 +119,18 @@ impl RawVertex {
             err: err as f32,
             n_targets,
             obs,
-            acc_alpha: 0.0,
-            cnt_alpha: 0,
-            tgt_alpha: 0,
-            acc_beta: 0.0,
-            cnt_beta: 0,
-            tgt_beta: 0,
-            injected: 0,
-            pending_alpha: VecDeque::new(),
-            pending_beta: VecDeque::new(),
-            post: VecDeque::new(),
-            dosage: if h == h_n - 1 {
+            alpha_wave: WaveBuf::new(),
+            beta_wave: WaveBuf::new(),
+            alpha: Vec::new(),
+            alpha_done: false,
+            beta: Vec::new(),
+            beta_done: false,
+            posterior_done: false,
+            injected_alpha: false,
+            injected_beta: false,
+            post_wave: WaveBuf::new(),
+            post_allele1: if is_acc { vec![false; h_n as usize] } else { Vec::new() },
+            dosage: if is_acc {
                 vec![f32::NAN; n_targets as usize]
             } else {
                 Vec::new()
@@ -138,89 +156,128 @@ impl RawVertex {
         }
     }
 
-    /// α complete for `target` → forward it, then try to pair a posterior.
-    fn alpha_done(&mut self, target: u32, alpha: f32, ctx: &mut Ctx<RawMsg>) {
-        if self.m + 1 < self.m_n {
-            ctx.send(PORT_FWD, RawMsg::Alpha { target, val: alpha });
-        }
-        self.pending_alpha.push_back((target, alpha));
-        self.try_posterior(ctx);
-    }
-
-    /// β complete for `target` → forward β·b backward, then try to pair.
-    fn beta_done(&mut self, target: u32, beta: f32, ctx: &mut Ctx<RawMsg>) {
-        if self.m > 0 {
-            let folded = beta * self.emission(target);
-            ctx.flop(1);
-            ctx.send(PORT_BWD, RawMsg::Beta { target, val: folded });
-        }
-        self.pending_beta.push_back((target, beta));
-        self.try_posterior(ctx);
-    }
-
-    /// Pair matching (α, β) fronts → posterior → unicast / local tally
-    /// (Algorithm 1 lines 9–11 / 18–20).
-    fn try_posterior(&mut self, ctx: &mut Ctx<RawMsg>) {
-        while let (Some(&(ta, a)), Some(&(tb, b))) =
-            (self.pending_alpha.front(), self.pending_beta.front())
-        {
-            if ta != tb {
-                // Rings are target-ordered; the smaller one waits for its
-                // partner. (They can differ by many targets mid-panel.)
-                if ta < tb {
-                    debug_assert!(
-                        self.pending_beta.iter().all(|&(t, _)| t > ta),
-                        "cross-target contamination at v=({},{})",
-                        self.h,
-                        self.m
-                    );
-                }
-                break;
+    /// Store one α chunk; reduce and propagate once the wave is complete.
+    fn take_alpha(&mut self, base: usize, vals: &[f32], src: VertexId, ctx: &mut Ctx<RawMsg>) {
+        let c = self.n_targets as usize;
+        let src_h = (src % self.h_n) as usize;
+        if self.alpha_wave.store(self.h_n as usize, c, src_h, base, vals, "α") {
+            let buf = self.alpha_wave.take();
+            // Canonical reduce (wave::reduce_same_diff): Σ_h a_ij·α_h in
+            // ascending sender order, then the emission — identical
+            // arithmetic for every batch width.
+            let mut alpha =
+                reduce_same_diff(&buf, self.h_n as usize, c, self.h as usize, self.a_same, self.a_diff);
+            for (t, a) in alpha.iter_mut().enumerate() {
+                ctx.flop(2 * self.h_n as u64);
+                *a *= self.emission(t as u32);
+                ctx.flop(1);
             }
-            self.pending_alpha.pop_front();
-            self.pending_beta.pop_front();
-            let p = a * b;
+            self.finish_alpha(alpha, ctx);
+        }
+    }
+
+    /// Store one β chunk; reduce and propagate once the wave is complete.
+    fn take_beta(&mut self, base: usize, vals: &[f32], src: VertexId, ctx: &mut Ctx<RawMsg>) {
+        let c = self.n_targets as usize;
+        let src_h = (src % self.h_n) as usize;
+        if self.beta_wave.store(self.h_n as usize, c, src_h, base, vals, "β") {
+            let buf = self.beta_wave.take();
+            let beta = reduce_same_diff(
+                &buf,
+                self.h_n as usize,
+                c,
+                self.h as usize,
+                self.a_same_next,
+                self.a_diff_next,
+            );
+            ctx.flop(2 * self.h_n as u64 * c as u64);
+            self.finish_beta(beta, ctx);
+        }
+    }
+
+    /// α complete for the whole lane group → forward the wave, try to pair.
+    fn finish_alpha(&mut self, alpha: Vec<f32>, ctx: &mut Ctx<RawMsg>) {
+        if self.m + 1 < self.m_n {
+            for_each_chunk(&alpha, |base, n, vals| {
+                ctx.send(PORT_FWD, RawMsg::AlphaVec { base, n, vals });
+            });
+        }
+        self.alpha = alpha;
+        self.alpha_done = true;
+        self.try_posterior(ctx);
+    }
+
+    /// β complete → forward β·b backward (emission folded in), try to pair.
+    fn finish_beta(&mut self, beta: Vec<f32>, ctx: &mut Ctx<RawMsg>) {
+        if self.m > 0 {
+            let folded: Vec<f32> = beta
+                .iter()
+                .enumerate()
+                .map(|(t, &b)| {
+                    ctx.flop(1);
+                    b * self.emission(t as u32)
+                })
+                .collect();
+            for_each_chunk(&folded, |base, n, vals| {
+                ctx.send(PORT_BWD, RawMsg::BetaVec { base, n, vals });
+            });
+        }
+        self.beta = beta;
+        self.beta_done = true;
+        self.try_posterior(ctx);
+    }
+
+    /// Both waves in → posteriors for every lane → unicast / local tally
+    /// (Algorithm 1 lines 9–11 / 18–20, all targets at once).
+    fn try_posterior(&mut self, ctx: &mut Ctx<RawMsg>) {
+        if self.posterior_done || !self.alpha_done || !self.beta_done {
+            return;
+        }
+        self.posterior_done = true;
+        let c = self.n_targets as usize;
+        let mut post = vec![0.0f32; c];
+        for t in 0..c {
+            post[t] = self.alpha[t] * self.beta[t];
             ctx.flop(1);
-            if self.is_accumulator() {
-                self.tally(ta, self.allele == 1, p, ctx);
-            } else {
+        }
+        self.alpha = Vec::new();
+        self.beta = Vec::new();
+        let allele1 = self.allele == 1;
+        if self.is_accumulator() {
+            let h = self.h;
+            self.take_posts(h, allele1, 0, &post, ctx);
+        } else {
+            for_each_chunk(&post, |base, n, vals| {
                 ctx.send(
                     PORT_DOWN,
-                    RawMsg::Post {
-                        target: ta,
-                        allele1: self.allele == 1,
-                        val: p,
+                    RawMsg::PostVec {
+                        base,
+                        n,
+                        allele1,
+                        vals,
                     },
                 );
-            }
+            });
         }
     }
 
-    /// Accumulate one posterior contribution (line 23–25 + step-four call).
-    fn tally(&mut self, target: u32, allele1: bool, val: f32, ctx: &mut Ctx<RawMsg>) {
+    /// Accumulate one sender's posterior lanes (line 23–25); finish dosages
+    /// once every sender haplotype has contributed every lane.
+    fn take_posts(&mut self, src_h: u32, allele1: bool, base: usize, vals: &[f32], ctx: &mut Ctx<RawMsg>) {
         debug_assert!(self.is_accumulator());
-        let acc = match self.post.iter_mut().find(|p| p.target == target) {
-            Some(acc) => acc,
-            None => {
-                self.post.push_back(PostAcc {
-                    target,
-                    ..Default::default()
-                });
-                self.post.back_mut().unwrap()
+        let c = self.n_targets as usize;
+        self.post_allele1[src_h as usize] = allele1;
+        ctx.flop(2 * vals.len() as u64);
+        if self
+            .post_wave
+            .store(self.h_n as usize, c, src_h as usize, base, vals, "posterior")
+        {
+            let buf = self.post_wave.take();
+            let sums = reduce_hit_tot(&buf, self.h_n as usize, c, &self.post_allele1);
+            for (t, &(hit, tot)) in sums.iter().enumerate() {
+                self.dosage[t] = if tot > 0.0 { hit / tot } else { 0.0 };
+                ctx.flop(1);
             }
-        };
-        if allele1 {
-            acc.hit += val;
-        }
-        acc.tot += val;
-        acc.cnt += 1;
-        ctx.flop(2);
-        if acc.cnt == self.h_n {
-            let dosage = if acc.tot > 0.0 { acc.hit / acc.tot } else { 0.0 };
-            ctx.flop(1);
-            self.dosage[target as usize] = dosage;
-            let t = acc.target;
-            self.post.retain(|p| p.target != t);
         }
     }
 }
@@ -235,78 +292,53 @@ impl Device for RawVertex {
 
     fn recv(&mut self, msg: &RawMsg, src: VertexId, ctx: &mut Ctx<RawMsg>) {
         match *msg {
-            RawMsg::Alpha { target, val } => {
-                assert_eq!(
-                    target, self.tgt_alpha,
-                    "α wave out of order at ({}, {})",
-                    self.h, self.m
-                );
-                // a_ij depends on whether sender and receiver share a haplotype.
-                let same = src % self.h_n == self.h;
-                let a_ij = if same { self.a_same } else { self.a_diff };
-                self.acc_alpha += a_ij * val;
-                self.cnt_alpha += 1;
-                ctx.flop(2);
-                if self.cnt_alpha == self.h_n {
-                    let alpha = self.acc_alpha * self.emission(target);
-                    ctx.flop(1);
-                    self.acc_alpha = 0.0;
-                    self.cnt_alpha = 0;
-                    self.tgt_alpha += 1;
-                    self.alpha_done(target, alpha, ctx);
-                }
+            RawMsg::AlphaVec { base, n, ref vals } => {
+                self.take_alpha(base as usize, &vals[..n as usize], src, ctx)
             }
-            RawMsg::Beta { target, val } => {
-                assert_eq!(
-                    target, self.tgt_beta,
-                    "β wave out of order at ({}, {})",
-                    self.h, self.m
-                );
-                let same = src % self.h_n == self.h;
-                let a_ij = if same { self.a_same_next } else { self.a_diff_next };
-                self.acc_beta += a_ij * val;
-                self.cnt_beta += 1;
-                ctx.flop(2);
-                if self.cnt_beta == self.h_n {
-                    let beta = self.acc_beta;
-                    self.acc_beta = 0.0;
-                    self.cnt_beta = 0;
-                    self.tgt_beta += 1;
-                    self.beta_done(target, beta, ctx);
-                }
+            RawMsg::BetaVec { base, n, ref vals } => {
+                self.take_beta(base as usize, &vals[..n as usize], src, ctx)
             }
-            RawMsg::Post {
-                target,
+            RawMsg::PostVec {
+                base,
+                n,
                 allele1,
-                val,
-            } => self.tally(target, allele1, val, ctx),
+                ref vals,
+            } => {
+                let src_h = src % self.h_n;
+                self.take_posts(src_h, allele1, base as usize, &vals[..n as usize], ctx)
+            }
         }
     }
 
     fn step(&mut self, ctx: &mut Ctx<RawMsg>) -> bool {
-        // Algorithm 1 lines 26–28: inject the next target haplotype.
-        if self.m == 0 && self.injected < self.n_targets {
-            let target = self.injected;
-            self.injected += 1;
-            let alpha = 1.0 / self.h_n as f32;
-            self.tgt_alpha = target + 1; // α is known, never received
-            self.alpha_done(target, alpha, ctx);
-            return true;
+        // Algorithm 1 lines 26–28, wave-batched: the edge columns inject the
+        // whole lane group's α/β in one wave at the first step.
+        let c = self.n_targets as usize;
+        let mut injected = false;
+        if self.m == 0 && !self.injected_alpha {
+            self.injected_alpha = true;
+            // Uniform prior, no emission at the run's first marker (matches
+            // the per-target plane and the windowing docs in genomics).
+            self.finish_alpha(vec![1.0 / self.h_n as f32; c], ctx);
+            injected = true;
         }
-        if self.m == self.m_n - 1 && self.injected < self.n_targets {
-            let target = self.injected;
-            self.injected += 1;
-            self.tgt_beta = target + 1;
-            self.beta_done(target, 1.0, ctx);
-            return true;
+        if self.m == self.m_n - 1 && !self.injected_beta {
+            self.injected_beta = true;
+            self.finish_beta(vec![1.0; c], ctx);
+            injected = true;
         }
-        false
+        injected
+    }
+
+    fn lanes(msg: &RawMsg) -> u32 {
+        msg.lanes()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::imputation::msg::LANES;
     use crate::model::panel::TargetHaplotype;
 
     fn mk(h: u32, m: u32) -> RawVertex {
@@ -338,32 +370,69 @@ mod tests {
     }
 
     #[test]
-    fn step_injects_each_target_once() {
+    fn step_injects_the_lane_group_once() {
         let mut v = mk(0, 0); // column 0 vertex
         let mut ctx = Ctx::new(0, 0);
-        assert!(v.step(&mut ctx)); // injects target 0
+        assert!(v.step(&mut ctx)); // injects the whole (1-target) α wave
         let sends = ctx.take_sends();
         assert_eq!(sends.len(), 1);
         assert!(matches!(
             sends[0],
-            (PORT_FWD, RawMsg::Alpha { target: 0, .. })
+            (PORT_FWD, RawMsg::AlphaVec { base: 0, n: 1, .. })
         ));
-        assert!(!v.step(&mut ctx)); // only 1 target configured
+        assert!(!v.step(&mut ctx)); // the group is injected exactly once
         assert!(ctx.take_sends().is_empty());
     }
 
     #[test]
-    #[should_panic(expected = "out of order")]
-    fn detects_wave_disorder() {
+    fn wide_groups_are_chunked_to_the_event_budget() {
+        let targets: Vec<TargetHaplotype> =
+            (0..LANES + 3).map(|_| TargetHaplotype::new(vec![1, -1, 0])).collect();
+        let obs = ObsMatrix::from_targets(&targets);
+        let mut v = RawVertex::new(0, 0, 2, 3, 1, 0.1, 0.2, 1e-4, (LANES + 3) as u32, obs);
+        let mut ctx = Ctx::new(0, 0);
+        assert!(v.step(&mut ctx));
+        let sends = ctx.take_sends();
+        assert_eq!(sends.len(), 2, "LANES+3 lanes need two chunk events");
+        assert!(matches!(
+            sends[0],
+            (PORT_FWD, RawMsg::AlphaVec { base: 0, n, .. }) if n as usize == LANES
+        ));
+        assert!(matches!(
+            sends[1],
+            (PORT_FWD, RawMsg::AlphaVec { base, n, .. }) if base as usize == LANES && n == 3
+        ));
+    }
+
+    #[test]
+    #[should_panic(expected = "lane range")]
+    fn detects_out_of_range_lanes() {
         let mut v = mk(0, 1);
         let mut ctx = Ctx::new(0, 0);
         v.recv(
-            &RawMsg::Alpha {
-                target: 5,
-                val: 0.1,
+            &RawMsg::AlphaVec {
+                base: 5,
+                n: 1,
+                vals: [0.1; LANES],
             },
             0,
             &mut ctx,
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate α wave")]
+    fn detects_duplicate_waves() {
+        let mut v = mk(0, 1); // H=2: the wave completes after both senders
+        let mut ctx = Ctx::new(0, 0);
+        let msg = RawMsg::AlphaVec {
+            base: 0,
+            n: 1,
+            vals: [0.1; LANES],
+        };
+        v.recv(&msg, 0, &mut ctx); // sender h=0
+        v.recv(&msg, 1, &mut ctx); // sender h=1 → wave complete
+        drop(ctx.take_sends());
+        v.recv(&msg, 0, &mut ctx); // a second wave must trip the assert
     }
 }

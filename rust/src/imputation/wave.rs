@@ -1,0 +1,181 @@
+//! Arrival buffering for SoA waves — the one place chunk storage, lane
+//! counting, range/duplicate assertions and completion detection live.
+//!
+//! Both event planes buffer a wave's contributions keyed by sender row
+//! (haplotype) and reduce in canonical row order once complete (see
+//! `imputation::vertex` module docs for the bit-invariance argument).  The
+//! slab is allocated **lazily on the first arrival** and released by
+//! [`WaveBuf::take`], so only the vertices a wavefront is currently
+//! crossing hold O(rows × lanes) memory — idle columns hold none, which is
+//! what keeps whole-graph memory flat however wide the lane group is.
+
+/// One in-flight wave: a `rows × width` f32 slab filled by chunk arrivals.
+pub(crate) struct WaveBuf {
+    buf: Vec<f32>,
+    lanes: u64,
+    done: bool,
+}
+
+impl WaveBuf {
+    pub fn new() -> WaveBuf {
+        WaveBuf {
+            buf: Vec::new(),
+            lanes: 0,
+            done: false,
+        }
+    }
+
+    /// Store one chunk at `(row, base..base+vals.len())` of a
+    /// `rows × width` slab; returns `true` when every lane of every row has
+    /// arrived.  Panics on duplicate waves and out-of-range lanes — the
+    /// cross-wave contamination hazards the synchronised stepping prevents.
+    pub fn store(
+        &mut self,
+        rows: usize,
+        width: usize,
+        row: usize,
+        base: usize,
+        vals: &[f32],
+        what: &str,
+    ) -> bool {
+        assert!(!self.done, "duplicate {what} wave");
+        assert!(
+            !vals.is_empty() && base + vals.len() <= width,
+            "{what} lane range [{base}, {}) out of 0..{width}",
+            base + vals.len()
+        );
+        debug_assert!(row < rows);
+        if self.buf.is_empty() {
+            self.buf = vec![0.0; rows * width];
+        }
+        self.buf[row * width + base..row * width + base + vals.len()].copy_from_slice(vals);
+        self.lanes += vals.len() as u64;
+        let total = (rows * width) as u64;
+        // A wave that completed but has not been consumed yet must also
+        // reject arrivals — completion may lag `take` when the consumer
+        // waits on sibling waves (e.g. section totals).
+        assert!(self.lanes <= total, "duplicate {what} wave (lane overflow)");
+        self.lanes == total
+    }
+
+    /// Hand out the completed row-major slab and release the buffer.
+    pub fn take(&mut self) -> Vec<f32> {
+        self.done = true;
+        self.lanes = 0;
+        std::mem::take(&mut self.buf)
+    }
+}
+
+/// Canonical same/diff reduce of a completed `rows × width` slab:
+/// `out[lane] = Σ_row coeff(row) · slab[row][lane]` with the sum taken in
+/// ascending row order and `coeff(row) = same` for `own` else `diff` — the
+/// α/β transition fold shared by both event planes.  Keeping the loop here
+/// keeps the bit-invariance contract (sum order fixed by the model, not by
+/// event timing) in ONE place.
+pub(crate) fn reduce_same_diff(
+    buf: &[f32],
+    rows: usize,
+    width: usize,
+    own: usize,
+    same: f32,
+    diff: f32,
+) -> Vec<f32> {
+    debug_assert_eq!(buf.len(), rows * width);
+    let mut out = vec![0.0f32; width];
+    for (t, slot) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for r in 0..rows {
+            let coeff = if r == own { same } else { diff };
+            acc += coeff * buf[r * width + t];
+        }
+        *slot = acc;
+    }
+    out
+}
+
+/// Canonical posterior reduce: per lane, `(hit, tot)` sums over rows in
+/// ascending order, `hit` restricted to rows whose `allele1` flag is set —
+/// the accumulator tally shared by both event planes.
+pub(crate) fn reduce_hit_tot(
+    buf: &[f32],
+    rows: usize,
+    width: usize,
+    allele1: &[bool],
+) -> Vec<(f32, f32)> {
+    debug_assert_eq!(buf.len(), rows * width);
+    debug_assert_eq!(allele1.len(), rows);
+    let mut out = vec![(0.0f32, 0.0f32); width];
+    for (t, slot) in out.iter_mut().enumerate() {
+        let (mut hit, mut tot) = (0.0f32, 0.0f32);
+        for r in 0..rows {
+            let v = buf[r * width + t];
+            if allele1[r] {
+                hit += v;
+            }
+            tot += v;
+        }
+        *slot = (hit, tot);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lazy_allocation_and_completion() {
+        let mut w = WaveBuf::new();
+        assert!(!w.store(2, 3, 0, 0, &[1.0, 2.0, 3.0], "t"));
+        assert!(!w.store(2, 3, 1, 0, &[4.0, 5.0], "t"));
+        assert!(w.store(2, 3, 1, 2, &[6.0], "t"));
+        let slab = w.take();
+        assert_eq!(slab, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(w.done);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate t wave")]
+    fn rejects_post_completion_arrivals() {
+        let mut w = WaveBuf::new();
+        assert!(w.store(1, 1, 0, 0, &[1.0], "t"));
+        w.take();
+        w.store(1, 1, 0, 0, &[1.0], "t");
+    }
+
+    #[test]
+    #[should_panic(expected = "lane range")]
+    fn rejects_out_of_range_lanes() {
+        let mut w = WaveBuf::new();
+        w.store(1, 2, 0, 1, &[1.0, 2.0], "t");
+    }
+
+    #[test]
+    #[should_panic(expected = "lane overflow")]
+    fn rejects_arrivals_on_a_complete_untaken_wave() {
+        let mut w = WaveBuf::new();
+        assert!(w.store(1, 1, 0, 0, &[1.0], "t"));
+        w.store(1, 1, 0, 0, &[2.0], "t"); // complete but not taken yet
+    }
+
+    #[test]
+    fn no_memory_until_first_arrival() {
+        let w = WaveBuf::new();
+        assert_eq!(w.buf.capacity(), 0, "idle waves must hold no slab");
+    }
+
+    #[test]
+    fn same_diff_reduce_is_row_ordered() {
+        // 2 rows × 2 lanes; own row 1.
+        let buf = [1.0, 10.0, 100.0, 1000.0];
+        let out = reduce_same_diff(&buf, 2, 2, 1, 0.5, 0.25);
+        assert_eq!(out, vec![0.25 * 1.0 + 0.5 * 100.0, 0.25 * 10.0 + 0.5 * 1000.0]);
+    }
+
+    #[test]
+    fn hit_tot_reduce_respects_allele_flags() {
+        let buf = [1.0, 10.0, 100.0, 1000.0];
+        let out = reduce_hit_tot(&buf, 2, 2, &[true, false]);
+        assert_eq!(out, vec![(1.0, 101.0), (10.0, 1010.0)]);
+    }
+}

@@ -73,14 +73,16 @@
 //! * [`graph`] — a POLite-like application-graph framework with manual 2-D
 //!   and partitioner-based vertex→thread mapping (soft-scheduling).
 //! * [`imputation`] — the paper's contribution: Algorithm 1 as event-driven
-//!   vertices, target-haplotype pipelining, and linear-interpolation
+//!   vertices, wave-batched SoA multi-target deliveries (bit-identical to
+//!   the per-target plane at any batch width), and linear-interpolation
 //!   sections.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) used as the fast compute plane and as the
 //!   oracle.
 //! * [`serve`] — the multi-tenant service layer: panel registry, request
-//!   coalescing, admission control, worker pool, JSONL frontend and the
-//!   closed-loop load generator.
+//!   coalescing (event-plane groups merge member targets into one wave
+//!   sweep), deferred worker-pool target minting, admission control,
+//!   worker pool, JSONL frontend and the closed-loop load generator.
 //! * [`bench`] — harnesses that regenerate every figure in the paper's
 //!   evaluation (Fig 11, 12, 13 plus claim checks).
 //! * [`util`], [`cli`] — offline-friendly substrates (RNG, JSON, tables,

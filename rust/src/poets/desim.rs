@@ -38,11 +38,24 @@
 //!   read-only *arena*; queue entries are 32-byte POD records
 //!   ([`GroupArrival`]) carrying an arena index, so multicast never clones
 //!   a payload per destination group;
+//! * **lane groups**: a payload may be a multi-lane SoA slab servicing many
+//!   in-flight targets at once (the wave-batched imputation planes — see
+//!   `imputation::msg`).  The arena recognises this only through
+//!   [`Device::lanes`]: the per-tile queues still carry exactly one
+//!   `GroupArrival` per wave chunk per multicast group, one mailbox ingest
+//!   and one `recv` handler per destination copy, however many lanes the
+//!   payload carries — that amortisation is the point of batching, and the
+//!   simulator reports it as `SimMetrics::lanes_delivered` next to
+//!   `copies_delivered`;
 //! * the only cross-tile values are the quiesce time (a `max`-reduce,
 //!   exact over `u64`) and the halt vote (an `and`-reduce), so a run is
 //!   **bit-identical for every thread count** — `SimConfig::threads`
 //!   changes host wall-clock only, never dosages, `sim_cycles`, or event
-//!   counts (asserted by `tests/parallel_equivalence.rs`).
+//!   counts (asserted by `tests/parallel_equivalence.rs`).  The contract
+//!   extends to lane groups lane-by-lane: deliveries stay deterministically
+//!   ordered by `(t, seq)`, and the wave-batched vertices additionally
+//!   reduce their fan-in in canonical sender order, so their numerics are
+//!   invariant to batch width as well as to host thread count.
 //!
 //! Set [`SimConfig::threads`] to `Some(n)` to fan each superstep's
 //! deliver+step phases out over `n` OS threads (`None`/`Some(1)` = serial;
@@ -119,6 +132,7 @@ struct TileShard<D: Device> {
     voted_continue: bool,
     // Per-shard event counters, folded into `SimMetrics` at run end.
     copies_delivered: u64,
+    lanes_delivered: u64,
     recv_handlers: u64,
 }
 
@@ -182,6 +196,7 @@ impl<D: Device> TileShard<D> {
             self.recv_handlers += n as u64;
             latest = latest.max(ev.t);
             let msg = &env.arena[ev.msg_idx as usize];
+            self.lanes_delivered += n as u64 * D::lanes(msg) as u64;
             for (i, &d) in dests.iter().enumerate() {
                 let ready = first_ready + i as u64 * env.cost.mailbox_ingress;
                 let slot = env.slot_of[d as usize] as usize;
@@ -379,6 +394,7 @@ impl<D: Device> Simulator<D> {
                 latest: 0,
                 voted_continue: false,
                 copies_delivered: 0,
+                lanes_delivered: 0,
                 recv_handlers: 0,
             })
             .collect();
@@ -532,16 +548,19 @@ impl<D: Device> Simulator<D> {
         let mut max_core_busy = 0u64;
         let mut max_mailbox_busy = 0u64;
         let mut copies = 0u64;
+        let mut lanes = 0u64;
         let mut recvs = 0u64;
         for s in &self.shards {
             max_core_busy = max_core_busy.max(s.core_busy.iter().copied().max().unwrap_or(0));
             max_mailbox_busy = max_mailbox_busy.max(s.mailbox.busy_cycles());
             copies += s.copies_delivered;
+            lanes += s.lanes_delivered;
             recvs += s.recv_handlers;
         }
         self.metrics.max_core_busy = max_core_busy;
         self.metrics.max_mailbox_busy = max_mailbox_busy;
         self.metrics.copies_delivered = copies;
+        self.metrics.lanes_delivered = lanes;
         self.metrics.recv_handlers = recvs;
 
         self.restore_devices();
@@ -701,6 +720,8 @@ mod tests {
         assert_eq!(total, 24); // msgs 0..=23 delivered once each
         assert_eq!(sim.metrics.sends, 24);
         assert_eq!(sim.metrics.copies_delivered, 24);
+        // Scalar messages: one lane per copy (the Device::lanes default).
+        assert_eq!(sim.metrics.lanes_delivered, 24);
         assert!(sim.metrics.sim_cycles > 0);
     }
 

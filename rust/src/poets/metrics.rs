@@ -9,6 +9,11 @@ pub struct SimMetrics {
     pub sends: u64,
     /// Event copies delivered to destination vertices.
     pub copies_delivered: u64,
+    /// Per-target payload lanes delivered (`Σ copies × lanes-per-event`).
+    /// Equals `copies_delivered` for scalar messages; for SoA wave-batched
+    /// payloads the ratio `lanes_delivered / copies_delivered` is the mean
+    /// lane width — the per-message amortisation the batching buys.
+    pub lanes_delivered: u64,
     /// Handler invocations (recv only; init/step counted separately).
     pub recv_handlers: u64,
     pub step_handlers: u64,
@@ -73,6 +78,7 @@ impl SimMetrics {
     pub fn absorb(&mut self, other: &SimMetrics) {
         self.sends += other.sends;
         self.copies_delivered += other.copies_delivered;
+        self.lanes_delivered += other.lanes_delivered;
         self.recv_handlers += other.recv_handlers;
         self.step_handlers += other.step_handlers;
         self.inter_board_sends += other.inter_board_sends;
@@ -88,6 +94,7 @@ impl SimMetrics {
         let mut j = Json::obj();
         j.set("sends", self.sends)
             .set("copies_delivered", self.copies_delivered)
+            .set("lanes_delivered", self.lanes_delivered)
             .set("recv_handlers", self.recv_handlers)
             .set("step_handlers", self.step_handlers)
             .set("inter_board_sends", self.inter_board_sends)

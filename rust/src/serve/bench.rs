@@ -158,7 +158,7 @@ fn sweep_point(
                         service.submit_wait(ImputeRequest {
                             panel: panel_name.clone(),
                             engine,
-                            targets: targets.clone(),
+                            targets: targets.clone().into(),
                         })?;
                         lats.push(t0.elapsed().as_secs_f64());
                     }

@@ -24,12 +24,12 @@
 //! * `synth_targets` (int) + `target_seed` (int, default 0) — mint targets
 //!   server-side (testing/load-gen): from the panel's synthetic recipe when
 //!   it has one, otherwise Li & Stephens mosaics of the panel itself on a
-//!   1-in-10 annotation grid (so file-backed panels work too).  Caveat:
-//!   minting needs the panel, so `synth_targets` resolves it on the stream
-//!   reader thread — a slow file-backed load head-of-line blocks admission
-//!   of later lines (explicit `targets` requests resolve in the workers and
-//!   do not).  Prefer explicit targets for file-backed panels on shared
-//!   streams; moving minting into the workers is tracked in ROADMAP.
+//!   1-in-10 annotation grid (so file-backed panels work too).  Minting is
+//!   **deferred to the worker pool** (`RequestTargets::Mint`): the stream
+//!   reader never resolves the panel, so a slow file-backed load can't
+//!   head-of-line block admission of later lines; mint failures (bad spec,
+//!   over-cap count) come back as in-band `serve-error/v1` lines like any
+//!   other per-request failure.
 //! * `id` (int, default: 1-based line number) — echoed in the response.
 //!
 //! ## Response line
@@ -51,7 +51,7 @@ use crate::model::panel::TargetHaplotype;
 use crate::session::EngineSpec;
 use crate::util::json::Json;
 
-use super::queue::Ticket;
+use super::queue::{RequestTargets, Ticket};
 use super::{ImputeRequest, ServeReport, Service};
 
 /// What a stream session did (the CLI prints this to stderr at EOF).
@@ -87,7 +87,7 @@ pub fn serve_stream<R: BufRead, W: Write>(
         }
         line_no += 1;
         summary.requests += 1;
-        let slot = match parse_request(&line, line_no, service) {
+        let slot = match parse_request(&line, line_no) {
             Ok((id, req)) => loop {
                 match service.submit(req.clone()) {
                     Ok(ticket) => break Slot::InFlight(id, ticket),
@@ -190,12 +190,10 @@ const KNOWN_KEYS: [&str; 6] = [
 ];
 
 /// Parse one request line.  Errors carry the best-known request id so the
-/// error response still correlates with the input line.
-fn parse_request(
-    line: &str,
-    line_no: i64,
-    service: &Service,
-) -> Result<(i64, ImputeRequest), (i64, String)> {
+/// error response still correlates with the input line.  Parsing never
+/// touches the panel registry: `synth_targets` becomes a deferred
+/// [`RequestTargets::Mint`] executed in the worker pool.
+fn parse_request(line: &str, line_no: i64) -> Result<(i64, ImputeRequest), (i64, String)> {
     let j = Json::parse(line).map_err(|e| (line_no, format!("bad request JSON: {e}")))?;
     // Client ids are echoed verbatim (negative ids included), so they stay
     // i64 end to end instead of wrapping through a u64 cast.
@@ -232,7 +230,7 @@ fn parse_request(
                 "\"targets\" and \"synth_targets\" are mutually exclusive".into(),
             ));
         }
-        (Some(t), None) => parse_targets(t).map_err(fail)?,
+        (Some(t), None) => RequestTargets::Explicit(parse_targets(t).map_err(fail)?),
         (None, Some(n)) => {
             let count = n
                 .as_usize()
@@ -241,8 +239,7 @@ fn parse_request(
                 .get("target_seed")
                 .and_then(Json::as_i64)
                 .unwrap_or(0) as u64;
-            let panel = service.registry().resolve(&panel).map_err(fail)?;
-            panel.minted_targets(count, seed).map_err(fail)?
+            RequestTargets::Mint { count, seed }
         }
         (None, None) => {
             return Err(fail(

@@ -16,18 +16,21 @@
 //!   an `admission:` error instead of growing latency without bound.
 //! * The **coalescer** ([`CoalescePolicy`]) — concurrently submitted
 //!   requests for the same (panel, engine) pair merge into one engine batch
-//!   group, bounded by a target budget and an optional linger window.
-//!   Within a group the engine is built once and bound once (per request
-//!   instead when its `prepare` validates targets, as the interp plane's
-//!   grid check does); each member request is then executed as its own
-//!   [`TargetBatch`], preserving request
-//!   boundaries so every response is **bit-identical** to a standalone
-//!   [`ImputeSession`](crate::session::ImputeSession) run (the event plane's
-//!   f32 accumulation is sensitive to batch composition — see
-//!   `tests/engine_equivalence.rs` — so target-level merging across requests
-//!   is deliberately left to the panel-level wave-batching engine work that
-//!   `ROADMAP.md` tracks; it lands behind `EventEngine::run` and this seam
-//!   won't move).
+//!   group, bounded by a target budget and an optional linger window (the
+//!   budget charges each request's *declared* width — explicit target count
+//!   or deferred mint width — see [`RequestTargets`]).  Within a group the
+//!   engine is built once and bound once (per request instead when its
+//!   `prepare` validates targets, as the interp plane's grid check does).
+//!   On the **event plane**, a multi-request group merges every member's
+//!   targets into **one wave sweep** (`EventEngine::run` services the whole
+//!   batch as a single lane group) and scatters the dosage rows back per
+//!   request; because the wave-batched vertices reduce in canonical sender
+//!   order, per-target numerics are batch-width invariant and every
+//!   response stays **bit-identical** to a standalone
+//!   [`ImputeSession`](crate::session::ImputeSession) run
+//!   (`tests/serve_roundtrip.rs`).  The other planes keep executing each
+//!   member as its own [`TargetBatch`] — same bit-exactness argument,
+//!   amortising only engine construction/binding.
 //! * The **worker pool** — `ServeConfig::workers` OS threads (the same
 //!   std::thread fan-out style as the DES delivery engine), each owning one
 //!   [`Engine`] per (panel, engine-spec) pair it has served.  Engine panics
@@ -57,7 +60,7 @@
 //!     .submit(ImputeRequest {
 //!         panel: panel.name().to_string(),
 //!         engine: EngineSpec::Rank1,
-//!         targets,
+//!         targets: targets.into(),
 //!     })
 //!     .unwrap()
 //!     .wait()
@@ -73,7 +76,7 @@ pub mod queue;
 pub mod registry;
 pub mod report;
 
-pub use queue::{CoalescePolicy, ImputeRequest, ServiceStats, Ticket};
+pub use queue::{CoalescePolicy, ImputeRequest, RequestTargets, ServiceStats, Ticket};
 pub use registry::{PanelRegistry, RegisteredPanel};
 pub use report::ServeReport;
 
@@ -85,6 +88,7 @@ use std::time::Instant;
 
 use crate::graph::mapping::MappingStrategy;
 use crate::imputation::app::RawAppConfig;
+use crate::model::panel::TargetHaplotype;
 use crate::poets::topology::ClusterConfig;
 use crate::session::{Engine, EngineSpec, ImputeReport, TargetBatch, Workload, build_engine};
 
@@ -277,6 +281,8 @@ impl Service {
     pub fn submit(&self, req: ImputeRequest) -> Result<Ticket, String> {
         let mut st = self.shared.state.lock().expect(POISONED);
         if req.targets.is_empty() {
+            // Declared width: an empty explicit set and a zero-wide deferred
+            // mint are both rejected up front.
             st.stats.rejected += 1;
             return Err("admission: request has no targets".into());
         }
@@ -373,7 +379,7 @@ fn next_group(shared: &Shared) -> Option<Group> {
     };
     let panel_key = first.req.panel.clone();
     let spec = first.req.engine;
-    let mut total = first.req.targets.len();
+    let mut total = first.req.targets.declared_len();
     let mut members = vec![first];
     if !policy.is_off() {
         let deadline = Instant::now() + policy.max_linger;
@@ -405,11 +411,15 @@ fn next_group(shared: &Shared) -> Option<Group> {
     Some(Group { batch_id, members })
 }
 
-/// Execute one coalesced group: resolve the panel, bind the cached engine
-/// (once per group when `prepare` is target-independent, once per request
-/// when it validates targets), then serve each member request as its own
-/// [`TargetBatch`] — request boundaries preserved, see module docs.  Every
-/// engine failure, panics included, degrades to per-request errors.
+/// Execute one coalesced group: resolve the panel, materialise every
+/// member's targets (explicit sets are shape-checked; deferred mints run
+/// HERE, in the pool, never on the stream-reader thread), bind the cached
+/// engine (once per group when `prepare` is target-independent, once per
+/// request when it validates targets), then execute.  Multi-request groups
+/// on the event plane merge their targets into one wave sweep
+/// ([`run_merged_wave`]); everything else serves each member as its own
+/// [`TargetBatch`].  Every failure, panics included, degrades to
+/// per-request errors.
 fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: usize) {
     let Group { batch_id, members } = group;
     let started = Instant::now();
@@ -429,19 +439,29 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
         }
     };
 
-    // Per-request shape validation: a malformed request fails alone.
+    // Materialise targets per member: a malformed request (ragged targets,
+    // over-cap mint) fails alone, never its batch-mates.
     let n_mark = panel.panel().n_mark();
-    let (good, bad): (Vec<Pending>, Vec<Pending>) = members
-        .into_iter()
-        .partition(|p| p.req.targets.iter().all(|t| t.n_mark() == n_mark));
-    for p in bad {
-        finish(
-            shared,
-            p,
-            Err(format!(
-                "target/panel marker mismatch (panel {panel_name:?} has {n_mark} markers)"
-            )),
-        );
+    let mut good: Vec<(Pending, Vec<TargetHaplotype>)> = Vec::with_capacity(members.len());
+    for mut p in members {
+        let materialised = match std::mem::take(&mut p.req.targets) {
+            RequestTargets::Explicit(ts) => {
+                if ts.iter().all(|t| t.n_mark() == n_mark) {
+                    Ok(ts)
+                } else {
+                    Err(format!(
+                        "target/panel marker mismatch (panel {panel_name:?} has {n_mark} markers)"
+                    ))
+                }
+            }
+            RequestTargets::Mint { count, seed } => {
+                guard("mint", || panel.minted_targets(count, seed))
+            }
+        };
+        match materialised {
+            Ok(ts) => good.push((p, ts)),
+            Err(e) => finish(shared, p, Err(e)),
+        }
     }
     if good.is_empty() {
         return;
@@ -469,25 +489,41 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
         match group_bind {
             Err(e) => {
                 had_error = true;
-                for p in good {
+                for (p, _) in good {
                     finish(shared, p, Err(e.clone()));
                 }
             }
             Ok(()) => {
-                for p in good {
-                    let ctx = RequestCtx {
+                // Event-plane groups merge every member's targets into ONE
+                // wave sweep: batch-width-invariant numerics make the merged
+                // run bit-identical per target to each member's solo run.
+                if spec == EngineSpec::Event && width > 1 {
+                    had_error |= run_merged_wave(
+                        shared,
+                        engine.as_mut(),
+                        &panel,
+                        good,
                         batch_id,
                         width,
-                        queue_wait_seconds: started.duration_since(p.enqueued).as_secs_f64(),
+                        started,
                         worker,
-                    };
-                    let result = if per_request_prepare {
-                        prepare_and_serve(shared, engine.as_mut(), &panel, &p, &ctx)
-                    } else {
-                        serve_one(shared, engine.as_mut(), &panel, &p, &ctx)
-                    };
-                    had_error |= result.is_err();
-                    finish(shared, p, result);
+                    );
+                } else {
+                    for (p, targets) in good {
+                        let ctx = RequestCtx {
+                            batch_id,
+                            width,
+                            queue_wait_seconds: started.duration_since(p.enqueued).as_secs_f64(),
+                            worker,
+                        };
+                        let result = if per_request_prepare {
+                            prepare_and_serve(shared, engine.as_mut(), &panel, &p, &targets, &ctx)
+                        } else {
+                            serve_one(shared, engine.as_mut(), &panel, &p, &targets, &ctx)
+                        };
+                        had_error |= result.is_err();
+                        finish(shared, p, result);
+                    }
                 }
             }
         }
@@ -507,6 +543,81 @@ struct RequestCtx {
     worker: usize,
 }
 
+/// Run a multi-request event-plane group as ONE wave: concatenate every
+/// member's targets into a single [`TargetBatch`] (one lane-group sweep of
+/// the panel), then scatter the dosage rows back per request.  Returns
+/// whether anything failed.  The shared sweep's timings/metrics are
+/// reported on every member (one sweep served them all).
+#[allow(clippy::too_many_arguments)]
+fn run_merged_wave(
+    shared: &Shared,
+    engine: &mut dyn Engine,
+    panel: &RegisteredPanel,
+    good: Vec<(Pending, Vec<TargetHaplotype>)>,
+    batch_id: u64,
+    width: usize,
+    started: Instant,
+    worker: usize,
+) -> bool {
+    // Drain the owned target vectors into one wave — no cloning; only the
+    // per-member row counts are needed for the scatter.
+    let mut all: Vec<TargetHaplotype> = Vec::with_capacity(
+        good.iter().map(|(_, ts)| ts.len()).sum(),
+    );
+    let mut members: Vec<(Pending, usize)> = Vec::with_capacity(good.len());
+    for (p, ts) in good {
+        members.push((p, ts.len()));
+        all.extend(ts);
+    }
+    let total = all.len();
+    let t0 = Instant::now();
+    let out = guard("run", || engine.run(&TargetBatch::new(&all)));
+    let host_seconds = t0.elapsed().as_secs_f64();
+    let out = match out {
+        Ok(o) if o.dosages.len() == total => o,
+        Ok(o) => {
+            let e = format!(
+                "event engine returned {} dosage rows for a {total}-target merged wave",
+                o.dosages.len()
+            );
+            for (p, _) in members {
+                finish(shared, p, Err(e.clone()));
+            }
+            return true;
+        }
+        Err(e) => {
+            for (p, _) in members {
+                finish(shared, p, Err(e.clone()));
+            }
+            return true;
+        }
+    };
+    shared.state.lock().expect(POISONED).stats.merged_waves += 1;
+    let mut rows = out.dosages.into_iter();
+    for (p, n) in members {
+        let dosages: Vec<Vec<f32>> = rows.by_ref().take(n).collect();
+        let ctx = RequestCtx {
+            batch_id,
+            width,
+            queue_wait_seconds: started.duration_since(p.enqueued).as_secs_f64(),
+            worker,
+        };
+        let report = make_report(
+            shared,
+            panel,
+            &p,
+            &ctx,
+            n,
+            dosages,
+            out.sim_seconds,
+            out.metrics.clone(),
+            host_seconds,
+        );
+        finish(shared, p, Ok(report));
+    }
+    false
+}
+
 /// Prepare the engine on this request's own workload, then serve it — the
 /// path for engines whose `prepare` validates targets; identical to what a
 /// solo `ImputeSession` run does.
@@ -515,11 +626,12 @@ fn prepare_and_serve(
     engine: &mut dyn Engine,
     panel: &RegisteredPanel,
     p: &Pending,
+    targets: &[TargetHaplotype],
     ctx: &RequestCtx,
 ) -> Result<ServeReport, String> {
-    let wl = Workload::from_shared(panel.panel_arc(), p.req.targets.clone())?;
+    let wl = Workload::from_shared(panel.panel_arc(), targets.to_vec())?;
     guard("prepare", || engine.prepare(&wl))?;
-    serve_one(shared, engine, panel, p, ctx)
+    serve_one(shared, engine, panel, p, targets, ctx)
 }
 
 /// Run one member request as its own batch and assemble its report.
@@ -528,11 +640,12 @@ fn serve_one(
     engine: &mut dyn Engine,
     panel: &RegisteredPanel,
     p: &Pending,
+    targets: &[TargetHaplotype],
     ctx: &RequestCtx,
 ) -> Result<ServeReport, String> {
-    let n_targets = p.req.targets.len();
+    let n_targets = targets.len();
     let t0 = Instant::now();
-    let out = guard("run", || engine.run(&TargetBatch::new(&p.req.targets)))?;
+    let out = guard("run", || engine.run(&TargetBatch::new(targets)))?;
     let host_seconds = t0.elapsed().as_secs_f64();
     if out.dosages.len() != n_targets {
         return Err(format!(
@@ -542,7 +655,33 @@ fn serve_one(
             n_targets
         ));
     }
-    Ok(ServeReport {
+    Ok(make_report(
+        shared,
+        panel,
+        p,
+        ctx,
+        n_targets,
+        out.dosages,
+        out.sim_seconds,
+        out.metrics,
+        host_seconds,
+    ))
+}
+
+/// Assemble one request's `serve-report/v1` document.
+#[allow(clippy::too_many_arguments)]
+fn make_report(
+    shared: &Shared,
+    panel: &RegisteredPanel,
+    p: &Pending,
+    ctx: &RequestCtx,
+    n_targets: usize,
+    dosages: Vec<Vec<f32>>,
+    sim_seconds: Option<f64>,
+    metrics: Option<crate::poets::metrics::SimMetrics>,
+    host_seconds: f64,
+) -> ServeReport {
+    ServeReport {
         request_id: p.id,
         panel: panel.name().to_string(),
         batch_id: ctx.batch_id,
@@ -563,13 +702,13 @@ fn serve_one(
             states_per_thread: shared.cfg.app.states_per_thread,
             threads: shared.cfg.app.sim.threads.unwrap_or(1),
             mapping: shared.cfg.mapping,
-            dosages: out.dosages,
+            dosages,
             accuracy: None,
             host_seconds,
-            sim_seconds: out.sim_seconds,
-            metrics: out.metrics,
+            sim_seconds,
+            metrics,
         },
-    })
+    }
 }
 
 /// Answer a request and bump the counters.
@@ -619,7 +758,7 @@ mod tests {
         ImputeRequest {
             panel: PANEL.to_string(),
             engine,
-            targets: panel.synthetic_targets(n, seed).unwrap(),
+            targets: panel.synthetic_targets(n, seed).unwrap().into(),
         }
     }
 
@@ -648,11 +787,20 @@ mod tests {
             .submit(ImputeRequest {
                 panel: PANEL.into(),
                 engine: EngineSpec::Baseline,
-                targets: Vec::new(),
+                targets: RequestTargets::Explicit(Vec::new()),
             })
             .unwrap_err();
         assert!(err.starts_with("admission:"), "{err}");
-        assert_eq!(svc.shutdown().rejected, 1);
+        // A zero-wide deferred mint is equally empty at admission time.
+        let err = svc
+            .submit(ImputeRequest {
+                panel: PANEL.into(),
+                engine: EngineSpec::Baseline,
+                targets: RequestTargets::Mint { count: 0, seed: 1 },
+            })
+            .unwrap_err();
+        assert!(err.starts_with("admission:"), "{err}");
+        assert_eq!(svc.shutdown().rejected, 2);
     }
 
     #[test]
@@ -662,7 +810,7 @@ mod tests {
             .submit_wait(ImputeRequest {
                 panel: "nonexistent".into(),
                 engine: EngineSpec::Baseline,
-                targets: vec![crate::model::panel::TargetHaplotype::new(vec![-1, 0, 1])],
+                targets: vec![crate::model::panel::TargetHaplotype::new(vec![-1, 0, 1])].into(),
             })
             .unwrap_err();
         assert!(err.contains("unknown panel"), "{err}");
@@ -681,7 +829,7 @@ mod tests {
             .submit_wait(ImputeRequest {
                 panel: PANEL.into(),
                 engine: EngineSpec::Baseline,
-                targets: vec![crate::model::panel::TargetHaplotype::new(vec![-1; 7])],
+                targets: vec![crate::model::panel::TargetHaplotype::new(vec![-1; 7])].into(),
             })
             .unwrap_err();
         assert!(err.contains("marker mismatch"), "{err}");
@@ -798,7 +946,7 @@ mod tests {
             .submit_wait(ImputeRequest {
                 panel: big.into(),
                 engine: EngineSpec::Event,
-                targets: panel.synthetic_targets(1, 0).unwrap(),
+                targets: panel.synthetic_targets(1, 0).unwrap().into(),
             })
             .unwrap_err();
         assert!(err.contains("panicked"), "{err}");

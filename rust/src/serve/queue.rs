@@ -34,8 +34,54 @@ pub struct ImputeRequest {
     pub panel: String,
     /// Compute plane to run.
     pub engine: EngineSpec,
-    /// Target haplotypes to impute (`-1` = untyped marker).
-    pub targets: Vec<TargetHaplotype>,
+    /// Target haplotypes to impute — explicit observation vectors, or a
+    /// deferred server-side mint executed in the worker pool.
+    pub targets: RequestTargets,
+}
+
+/// A request's target payload.
+///
+/// `Mint` defers server-side target minting (`synth_targets` request lines)
+/// to the **worker pool**: the stream-reader thread no longer resolves the
+/// panel just to materialise targets, so a slow file-backed panel load can
+/// never head-of-line block admission of later request lines.  The declared
+/// `count` is what the coalescer's target budget accounts before the mint
+/// runs ([`RequestTargets::declared_len`]).
+#[derive(Clone, Debug)]
+pub enum RequestTargets {
+    /// Observation vectors supplied by the client (`-1` = untyped marker).
+    Explicit(Vec<TargetHaplotype>),
+    /// Mint `count` targets from the panel's recipe (or mosaic fallback) in
+    /// the worker, seeded by `seed` — see `RegisteredPanel::minted_targets`.
+    Mint { count: usize, seed: u64 },
+}
+
+impl RequestTargets {
+    /// Target count as declared at admission time: the explicit vector's
+    /// length, or the mint width.  This is what admission checks and what
+    /// the coalescer's `max_batch_targets` budget charges.
+    pub fn declared_len(&self) -> usize {
+        match self {
+            RequestTargets::Explicit(ts) => ts.len(),
+            RequestTargets::Mint { count, .. } => *count,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.declared_len() == 0
+    }
+}
+
+impl Default for RequestTargets {
+    fn default() -> Self {
+        RequestTargets::Explicit(Vec::new())
+    }
+}
+
+impl From<Vec<TargetHaplotype>> for RequestTargets {
+    fn from(targets: Vec<TargetHaplotype>) -> Self {
+        RequestTargets::Explicit(targets)
+    }
 }
 
 /// How the coalescer merges concurrent requests.
@@ -131,6 +177,9 @@ pub struct ServiceStats {
     pub batches: u64,
     /// Sum of batch widths (requests) over all batches.
     pub coalesced_requests: u64,
+    /// Multi-request groups on the event plane whose member targets were
+    /// merged into ONE wave sweep (responses scattered back per request).
+    pub merged_waves: u64,
 }
 
 impl ServiceStats {
@@ -171,10 +220,10 @@ impl QueueState {
             let p = &self.pending[i];
             let fits = p.req.panel == key.0
                 && p.req.engine == key.1
-                && total_targets + p.req.targets.len() <= max_batch_targets;
+                && total_targets + p.req.targets.declared_len() <= max_batch_targets;
             if fits {
                 let p = self.pending.remove(i).expect("index checked above");
-                total_targets += p.req.targets.len();
+                total_targets += p.req.targets.declared_len();
                 group.push(p);
             } else {
                 i += 1;
@@ -197,7 +246,21 @@ mod tests {
             req: ImputeRequest {
                 panel: panel.to_string(),
                 engine: spec,
-                targets: vec![TargetHaplotype::new(vec![-1, 0, 1]); n_targets],
+                targets: vec![TargetHaplotype::new(vec![-1, 0, 1]); n_targets].into(),
+            },
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn pending_mint(id: u64, panel: &str, spec: EngineSpec, count: usize) -> Pending {
+        let (tx, _rx) = mpsc::channel();
+        Pending {
+            id,
+            req: ImputeRequest {
+                panel: panel.to_string(),
+                engine: spec,
+                targets: RequestTargets::Mint { count, seed: 0 },
             },
             enqueued: Instant::now(),
             reply: tx,
@@ -239,6 +302,22 @@ mod tests {
         let total = st.drain_matching(("a", EngineSpec::Event), &mut group, 1, 1);
         assert_eq!(total, 1);
         assert!(group.is_empty(), "budget 1 means the head runs alone");
+    }
+
+    #[test]
+    fn drain_matching_charges_declared_mint_width() {
+        // A deferred mint counts its declared width against the budget even
+        // though no targets exist yet (they are minted in the worker pool).
+        let mut st = QueueState::default();
+        st.pending.push_back(pending_mint(1, "a", EngineSpec::Event, 3));
+        st.pending.push_back(pending_mint(2, "a", EngineSpec::Event, 3));
+        let mut group = Vec::new();
+        let total = st.drain_matching(("a", EngineSpec::Event), &mut group, 1, 4);
+        assert_eq!(total, 4, "only the first 3-wide mint fits a budget of 4");
+        assert_eq!(group.iter().map(|p| p.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(st.pending.len(), 1);
+        assert_eq!(RequestTargets::Mint { count: 3, seed: 0 }.declared_len(), 3);
+        assert!(RequestTargets::Mint { count: 0, seed: 9 }.is_empty());
     }
 
     #[test]

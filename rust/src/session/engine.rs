@@ -245,6 +245,15 @@ impl Engine for BaselineEngine {
 
 /// The event-driven raw plane: one vertex per HMM state on the simulated
 /// POETS cluster.
+///
+/// `run` consumes the whole [`TargetBatch`] as one **lane group**: every
+/// target in the batch travels the panel in a single SoA wave (chunked to
+/// the 56-byte event budget — see `imputation::msg`), so per-target event
+/// counts fall by ~the batch width relative to the paper's per-target
+/// pipeline.  Per-target numerics are batch-width invariant (canonical
+/// sender-order reduce in `imputation::vertex`), which is what lets the
+/// serve coalescer merge several requests' targets into one wave and still
+/// answer each request bit-identically to a solo run.
 pub struct EventEngine {
     cfg: RawAppConfig,
     mapping: MappingStrategy,

@@ -85,6 +85,14 @@ impl ImputeSession {
         self
     }
 
+    /// The currently selected compute plane (what [`ImputeSession::run`]
+    /// will execute) — lets orchestration layers like
+    /// `genomics::window::run_windowed` apply engine-specific validation
+    /// without running anything.
+    pub fn engine_spec(&self) -> EngineSpec {
+        self.spec
+    }
+
     /// Replace the whole engine configuration at once (cluster, params,
     /// soft-scheduling, cost model, sim switches).
     pub fn app_config(mut self, app: RawAppConfig) -> Self {
@@ -142,6 +150,12 @@ impl ImputeSession {
     }
 
     /// Targets per engine batch (default: all targets in one batch).
+    ///
+    /// On the event planes a batch is exactly one **lane group**: the whole
+    /// batch sweeps the panel as one SoA wave (`imputation::msg`), so this
+    /// knob sets the wave width.  Width 1 reproduces the per-target event
+    /// plane the paper describes; dosages are bit-identical for every width
+    /// (`tests/parallel_equivalence.rs`).
     ///
     /// A size larger than the target count clamps to it; `0` is rejected by
     /// [`ImputeSession::run`] as an error (not a panic — batch sizes often

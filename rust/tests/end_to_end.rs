@@ -44,13 +44,18 @@ fn gwas_upscale_end_to_end() {
         );
     }
 
-    // The paper's economics, end to end.
+    // The paper's economics, end to end.  Both planes wave-batch their
+    // targets now (and interp's hit vectors cannot lane-batch), so the
+    // per-event gap narrows vs the per-target design — but lane for lane
+    // the anchor grid's ~10x reduction is intact.
     let raw_m = raw.metrics.as_ref().unwrap();
     let itp_m = itp.metrics.as_ref().unwrap();
-    assert!(raw_m.sends > 5 * itp_m.sends);
+    assert!(raw_m.sends > 2 * itp_m.sends);
+    assert!(raw_m.lanes_delivered > 5 * itp_m.lanes_delivered);
     assert!(itp.sim_seconds.unwrap() < raw.sim_seconds.unwrap());
-    // Pipelined run completes in ~M + T + slack steps.
-    assert!(raw_m.steps <= (201 + 8 + 8) as u64);
+    // A single wave sweep completes in ~M + slack steps (the per-target
+    // pipeline needed ~M + T).
+    assert!(raw_m.steps <= (201 + 8) as u64);
 }
 
 #[test]

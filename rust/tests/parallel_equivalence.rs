@@ -4,7 +4,15 @@
 //! threads = 1, 2, 8 over three seeds and asserts bit-identical dosages plus
 //! identical event/step accounting (the superstep barrier makes the
 //! equivalence exact, not approximate — see `poets::desim` module docs).
+//!
+//! Since PR 5 the contract has a second axis: the wave-batched event plane
+//! must be bit-identical across **batch widths** too — width 1 is exactly
+//! the per-target plane the paper describes, so batched runs at any width
+//! and any host thread count must reproduce its dosages bit for bit (the
+//! canonical sender-order reduce in `imputation::vertex` makes the f32 sum
+//! order a property of the model, not of event timing).
 
+use poets_impute::imputation::msg::LANES;
 use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
 use poets_impute::workload::panelgen::PanelConfig;
 
@@ -97,6 +105,105 @@ fn step_timeline_is_fully_accounted() {
             "timeline gap at threads={threads}"
         );
     }
+}
+
+/// Dosage bits only — event accounting legitimately differs across widths
+/// (that's the point of batching), so cross-width comparisons use this.
+fn dosage_bits(report: &ImputeReport) -> Vec<Vec<u32>> {
+    report
+        .dosages
+        .iter()
+        .map(|row| row.iter().map(|d| d.to_bits()).collect())
+        .collect()
+}
+
+fn run_batched(
+    engine: EngineSpec,
+    workload: &Workload,
+    width: usize,
+    threads: usize,
+) -> ImputeReport {
+    ImputeSession::new(workload.clone())
+        .engine(engine)
+        .boards(2)
+        .states_per_thread(4)
+        .threads(threads)
+        .batch(width)
+        .run()
+        .expect("event planes are always available")
+}
+
+#[test]
+fn raw_wave_batching_is_width_and_thread_invariant() {
+    // Widths straddle the SoA chunk boundary: 1 (the per-target plane),
+    // LANES-1, LANES (one full chunk) and LANES+3 (two chunks per wave).
+    let wl = workload(17, 8, 24, LANES + 3, 0.2);
+    let per_target = run_batched(EngineSpec::Event, &wl, 1, 1);
+    let reference = dosage_bits(&per_target);
+    for &width in &[1usize, LANES - 1, LANES, LANES + 3] {
+        let base = run_batched(EngineSpec::Event, &wl, width, 1);
+        assert_eq!(
+            dosage_bits(&base),
+            reference,
+            "raw plane diverged from per-target events at width={width}"
+        );
+        for &threads in &[2usize, 4] {
+            let got = run_batched(EngineSpec::Event, &wl, width, threads);
+            assert_eq!(
+                fingerprint(&got),
+                fingerprint(&base),
+                "raw plane diverged at width={width} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn interp_wave_batching_is_width_and_thread_invariant() {
+    let wl = workload(19, 6, 41, LANES + 3, 0.1);
+    let per_target = run_batched(EngineSpec::Interp, &wl, 1, 1);
+    let reference = dosage_bits(&per_target);
+    for &width in &[1usize, LANES - 1, LANES, LANES + 3] {
+        let base = run_batched(EngineSpec::Interp, &wl, width, 1);
+        assert_eq!(
+            dosage_bits(&base),
+            reference,
+            "interp plane diverged from per-target events at width={width}"
+        );
+        for &threads in &[2usize, 4] {
+            let got = run_batched(EngineSpec::Interp, &wl, width, threads);
+            assert_eq!(
+                fingerprint(&got),
+                fingerprint(&base),
+                "interp plane diverged at width={width} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_waves_deliver_fewer_events_per_target() {
+    // The perf claim behind the wave: a full-lane batch services every
+    // target of a chunk with ONE event, so delivered events per target
+    // drop by ~LANES while delivered lanes stay exactly constant.
+    let wl = workload(23, 8, 24, LANES, 0.2);
+    let narrow = run_batched(EngineSpec::Event, &wl, 1, 1);
+    let wide = run_batched(EngineSpec::Event, &wl, LANES, 1);
+    let (nm, wm) = (
+        narrow.metrics.as_ref().unwrap(),
+        wide.metrics.as_ref().unwrap(),
+    );
+    assert_eq!(nm.lanes_delivered, wm.lanes_delivered, "same per-target work");
+    assert!(
+        wm.copies_delivered * 2 <= nm.copies_delivered,
+        "width {LANES} must at least halve delivered events: {} vs {}",
+        wm.copies_delivered,
+        nm.copies_delivered
+    );
+    assert_eq!(
+        nm.copies_delivered, nm.lanes_delivered,
+        "width 1 is the per-target plane: one lane per event"
+    );
 }
 
 #[test]

@@ -13,7 +13,7 @@ use std::thread;
 use std::time::Duration;
 
 use poets_impute::serve::{
-    CoalescePolicy, ImputeRequest, PanelRegistry, ServeConfig, Service,
+    CoalescePolicy, ImputeRequest, PanelRegistry, RequestTargets, ServeConfig, Service,
 };
 use poets_impute::session::{EngineSpec, ImputeSession, Workload};
 use poets_impute::util::json::Json;
@@ -61,7 +61,7 @@ fn concurrent_clients_match_direct_sessions_bit_exactly() {
                             service.submit_wait(ImputeRequest {
                                 panel: PANEL.into(),
                                 engine: spec,
-                                targets,
+                                targets: targets.into(),
                             })
                         })
                     })
@@ -137,7 +137,7 @@ fn coalesced_burst_actually_merges_and_still_matches() {
                 .submit(ImputeRequest {
                     panel: PANEL.into(),
                     engine: EngineSpec::Rank1,
-                    targets: panel.synthetic_targets(1, 500 + c).unwrap(),
+                    targets: panel.synthetic_targets(1, 500 + c).unwrap().into(),
                 })
                 .unwrap()
         })
@@ -165,6 +165,124 @@ fn coalesced_burst_actually_merges_and_still_matches() {
 }
 
 #[test]
+fn merged_event_waves_match_solo_sessions_bit_exactly() {
+    // The wave-batching payoff in serve: a coalesced event-plane group
+    // merges every member's targets into ONE lane-group sweep, and the
+    // scattered-back responses must still be bit-identical to solo
+    // ImputeSession runs (batch-width-invariant numerics).
+    let registry = Arc::new(PanelRegistry::new());
+    let panel = registry.resolve(PANEL).unwrap();
+    let cfg = ServeConfig::default()
+        .workers(1)
+        .boards(2)
+        .states_per_thread(8)
+        .coalesce(CoalescePolicy {
+            max_batch_targets: 64,
+            max_linger: Duration::from_millis(200),
+        });
+    let app = cfg.app.clone();
+    let mapping = cfg.mapping;
+    let service = Service::start(Arc::clone(&registry), cfg);
+
+    let tickets: Vec<_> = (0..4)
+        .map(|c| {
+            service
+                .submit(ImputeRequest {
+                    panel: PANEL.into(),
+                    engine: EngineSpec::Event,
+                    targets: panel.synthetic_targets(2, 900 + c).unwrap().into(),
+                })
+                .unwrap()
+        })
+        .collect();
+    let reports: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    let max_width = reports.iter().map(|r| r.coalesce_width).max().unwrap();
+    assert!(max_width >= 2, "burst should coalesce (got width {max_width})");
+
+    for (c, report) in reports.iter().enumerate() {
+        let direct = ImputeSession::new(
+            Workload::from_shared(
+                panel.panel_arc(),
+                panel.synthetic_targets(2, 900 + c as u64).unwrap(),
+            )
+            .unwrap(),
+        )
+        .engine(EngineSpec::Event)
+        .app_config(app.clone())
+        .mapping(mapping)
+        .run()
+        .unwrap();
+        assert_eq!(
+            report.dosages(),
+            &direct.dosages[..],
+            "merged wave changed client {c}'s dosages"
+        );
+        assert_eq!(report.report.n_targets, 2);
+    }
+    let stats = service.shutdown();
+    assert!(
+        stats.merged_waves >= 1,
+        "no group actually merged targets into a wave: {stats:?}"
+    );
+}
+
+#[test]
+fn deferred_mint_requests_match_explicit_targets() {
+    // synth_targets minting now runs in the worker pool; a deferred mint
+    // must produce exactly what minting client-side and sending explicit
+    // targets produces, and mint failures stay in-band per-request.
+    let registry = Arc::new(PanelRegistry::new());
+    let panel = registry.resolve(PANEL).unwrap();
+    let service = Service::start(
+        Arc::clone(&registry),
+        ServeConfig::default().workers(2).no_coalesce(),
+    );
+    let minted = service
+        .submit_wait(ImputeRequest {
+            panel: PANEL.into(),
+            engine: EngineSpec::Rank1,
+            targets: RequestTargets::Mint { count: 2, seed: 77 },
+        })
+        .unwrap();
+    let explicit = service
+        .submit_wait(ImputeRequest {
+            panel: PANEL.into(),
+            engine: EngineSpec::Rank1,
+            targets: panel.minted_targets(2, 77).unwrap().into(),
+        })
+        .unwrap();
+    assert_eq!(minted.dosages(), explicit.dosages());
+    assert_eq!(minted.report.n_targets, 2);
+
+    // An over-cap mint fails in the worker, in-band — not at admission,
+    // and never by killing the worker.
+    let err = service
+        .submit_wait(ImputeRequest {
+            panel: PANEL.into(),
+            engine: EngineSpec::Rank1,
+            targets: RequestTargets::Mint {
+                count: usize::MAX / 2,
+                seed: 0,
+            },
+        })
+        .unwrap_err();
+    assert!(err.contains("exceeds"), "{err}");
+    // A zero-wide mint is empty at admission time.
+    let err = service
+        .submit(ImputeRequest {
+            panel: PANEL.into(),
+            engine: EngineSpec::Rank1,
+            targets: RequestTargets::Mint { count: 0, seed: 0 },
+        })
+        .unwrap_err();
+    assert!(err.starts_with("admission:"), "{err}");
+    let stats = service.shutdown();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.rejected, 1);
+}
+
+#[test]
 fn file_backed_panel_failures_are_in_band_serve_errors() {
     // A request naming a missing or corrupt vcf:/packed: path must come
     // back as a serve-error/v1 line — the worker survives and the stream
@@ -188,8 +306,9 @@ fn file_backed_panel_failures_are_in_band_serve_errors() {
     std::fs::write(&corrupt, &bytes).unwrap();
     let corrupt_spec = format!("packed:{}", corrupt.display());
 
-    // Lines 1+2 fail in the worker (resolve), line 3 fails at parse time
-    // (synth_targets needs the panel), line 4 must still succeed.
+    // Lines 1-3 fail in the worker (resolve — line 3's deferred mint also
+    // resolves there now, never on the reader thread); line 4 must still
+    // succeed.
     let l1 = r#"{"id":1,"panel":"packed:/nonexistent/cohort.ppnl","engine":"baseline","targets":[[0,1,-1]]}"#;
     let l2 = format!(
         r#"{{"id":2,"panel":"{corrupt_spec}","engine":"baseline","targets":[[0,1,-1]]}}"#
