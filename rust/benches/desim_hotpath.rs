@@ -15,8 +15,18 @@
 //!   asserts that full-lane waves deliver **>= 2x fewer events per imputed
 //!   target** than the per-target plane (they deliver ~LANES x fewer).
 //!
+//! A third tracked gate (the lane-group pipelining PR): at T=64 targets on
+//! a 1000-marker panel, ONE 64-wide batch — eight lane groups pipelined one
+//! superstep apart through the same graph — must finish in **<= 0.5x the
+//! supersteps** of eight sequential `batch(LANES)` sweeps, with
+//! bit-identical dosages.  Both supersteps/target and events/target are
+//! recorded per row so the two cost axes (synchronisation and traffic) are
+//! tracked independently.
+//!
 //! `--smoke` runs a reduced sweep for CI (the JSON is uploaded as a
-//! workflow artifact per PR).
+//! workflow artifact per PR); the pipelining gate runs in both modes.
+//! The document is stamped with schema / git commit / run-config
+//! (`util::provenance`) so archived numbers stay attributable.
 
 use poets_impute::imputation::msg::LANES;
 use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
@@ -44,6 +54,7 @@ fn main() {
         "host time",
         "events",
         "events/target",
+        "steps/target",
         "host events/s",
         "targets/s",
         "speedup",
@@ -92,6 +103,7 @@ fn main() {
                     }
                     let events = metrics.copies_delivered;
                     let events_per_target = events as f64 / targets as f64;
+                    let steps_per_target = metrics.steps as f64 / targets as f64;
                     let eps = events as f64 / host;
                     match &reference {
                         None => reference = Some((out.dosages.clone(), events_per_target)),
@@ -121,6 +133,7 @@ fn main() {
                         fmt_secs(host),
                         fmt_count(events),
                         format!("{events_per_target:.1}"),
+                        format!("{steps_per_target:.1}"),
                         format!("{eps:.2e}"),
                         format!("{:.1}", targets as f64 / host),
                         format!("{:.2}x", serial_time / host),
@@ -137,6 +150,9 @@ fn main() {
                         .set("host_seconds", host)
                         .set("events", events)
                         .set("lanes", metrics.lanes_delivered)
+                        .set("steps", metrics.steps)
+                        .set("steps_per_target", steps_per_target)
+                        .set("max_groups_in_flight", metrics.max_groups_in_flight)
                         .set("events_per_target", events_per_target)
                         .set("events_per_s", eps)
                         .set("targets_per_s", targets as f64 / host)
@@ -150,7 +166,40 @@ fn main() {
 
     println!("## DES hot path (host-side throughput, thread x wave-width sweep)\n{}", t.render());
 
+    let gate = pipeline_gate();
+
+    let mut run_config = Json::obj();
+    run_config
+        .set("smoke", smoke)
+        .set("lanes", LANES)
+        .set(
+            "thread_sweep",
+            Json::Arr(thread_sweep.iter().map(|&n| Json::Int(n as i64)).collect()),
+        )
+        .set(
+            "width_sweep",
+            Json::Arr(width_sweep.iter().map(|&n| Json::Int(n as i64)).collect()),
+        )
+        .set(
+            "panels",
+            Json::Arr(
+                panels
+                    .iter()
+                    .map(|&(h, m, t)| {
+                        let mut p = Json::obj();
+                        p.set("n_hap", h).set("n_mark", m).set("targets", t);
+                        p
+                    })
+                    .collect(),
+            ),
+        );
+
     let mut report = Json::obj();
+    poets_impute::util::provenance::stamp(
+        &mut report,
+        "poets-impute/bench-desim/v1",
+        run_config,
+    );
     report
         .set("bench", "desim_hotpath")
         .set("smoke", smoke)
@@ -163,10 +212,73 @@ fn main() {
             "width_sweep",
             Json::Arr(width_sweep.iter().map(|&n| Json::Int(n as i64)).collect()),
         )
+        .set("pipeline_gate", gate)
         .set("rows", json_rows);
     let path = "BENCH_desim.json";
     match std::fs::write(path, report.pretty()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
+}
+
+/// The lane-group pipelining gate: T=64 targets on a 1000-marker panel,
+/// ONE 64-wide batch (eight lane groups staggered one superstep apart in
+/// the same graph) vs eight sequential `batch(LANES)` sweeps.  Asserts
+/// bit-identical dosages and a >= 2x superstep cut, and returns the JSON
+/// block archived under `"pipeline_gate"`.
+fn pipeline_gate() -> Json {
+    const T: usize = 64;
+    const M: usize = 1000;
+    let cfg = PanelConfig {
+        n_hap: 8,
+        n_mark: M,
+        annot_ratio: 0.1,
+        seed: 7,
+        ..PanelConfig::default()
+    };
+    let workload = Workload::synthetic(&cfg, T);
+    let run = |width: usize| -> ImputeReport {
+        ImputeSession::new(workload.clone())
+            .engine(EngineSpec::Event)
+            .boards(4)
+            .states_per_thread(4)
+            .batch(width)
+            .run()
+            .expect("event plane is always available")
+    };
+    let sequential = run(LANES); // 8 engine runs of one lane group each
+    let pipelined = run(T); // 1 engine run, 8 groups in flight
+    assert_eq!(
+        pipelined.dosages, sequential.dosages,
+        "pipelining changed dosages — determinism gate FAILED"
+    );
+    let (sm, pm) = (
+        sequential.metrics.as_ref().expect("metrics"),
+        pipelined.metrics.as_ref().expect("metrics"),
+    );
+    assert!(
+        pm.steps * 2 <= sm.steps,
+        "pipelined {} supersteps vs sequential {} — <= 0.5x gate FAILED",
+        pm.steps,
+        sm.steps
+    );
+    println!(
+        "## lane-group pipelining gate (T={T}, M={M}): {} supersteps pipelined \
+         ({} groups in flight) vs {} sequential — {:.2}x cut, dosages bit-identical",
+        pm.steps,
+        pm.max_groups_in_flight,
+        sm.steps,
+        sm.steps as f64 / pm.steps as f64
+    );
+    let mut gate = Json::obj();
+    gate.set("targets", T)
+        .set("n_mark", M)
+        .set("sequential_steps", sm.steps)
+        .set("pipelined_steps", pm.steps)
+        .set("sequential_steps_per_target", sm.steps as f64 / T as f64)
+        .set("pipelined_steps_per_target", pm.steps as f64 / T as f64)
+        .set("max_groups_in_flight", pm.max_groups_in_flight)
+        .set("max_busy_tiles", pm.max_busy_tiles)
+        .set("dosages_bit_identical", true);
+    gate
 }

@@ -6,6 +6,7 @@ use std::time::Duration;
 
 use crate::bench::{self, FigOpts, X86Cost};
 use crate::genomics::packed::PackedPanel;
+use crate::genomics::stream::run_streamed;
 use crate::genomics::window::{WindowPlan, run_windowed_threads};
 use crate::genomics::vcf::{self, VcfOptions};
 use crate::model::baseline::{Baseline, Method};
@@ -46,15 +47,27 @@ COMMANDS:
                windows are independent, stitch order is deterministic;
                multi-window interp plans are validated against the chip
                grid and misaligned geometry is a hard error)
+               --stream (chromosome-scale execution of a --window plan:
+               slice each window on a builder thread while the engine
+               drains its predecessor, rendezvous backpressure bounds
+               the working set to two windows / one live graph; dosages
+               stay bit-identical to the materialised windowed run and
+               the manifest gains a \"stream\" block with the measured
+               peak_resident_windows / windows_streamed)
                --engine baseline|rank1|event|interp|xla (EngineSpec;
                interp is the event-driven linear-interpolation plane —
                the old spelling event-interp still parses, with a
                deprecation note; the x86 interpolation pipeline remains
                the interp plane's oracle in validate)
                --boards B --spt N (soft-scheduling states/thread)
-               --batch B (targets per engine batch = the event plane's
-               wave width; default all at once.  Dosages are batch-width
-               invariant — width 1 reproduces per-target events)
+               --batch B (targets per engine batch; batches wider than
+               the 8-lane wave split into lane groups pipelined through
+               the SAME graph one superstep apart — default all at once.
+               Dosages are batch-width invariant — width 1 reproduces
+               per-target events.  sim_metrics reports the pipeline
+               occupancy: busy_tile_steps / max_busy_tiles (tiles
+               delivering events per superstep) and
+               max_groups_in_flight)
                --threads N (host workers for the DES deliver/step phases;
                results are thread-count invariant)
                [--json]  (emit the ImputeReport run manifest,
@@ -130,8 +143,13 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
     let window = args.get("window", 0usize)?;
     let overlap = args.get("overlap", 0usize)?;
     let window_threads = args.get("window-threads", 1usize)?;
+    let stream = args.has("stream");
     let as_json = args.has("json");
     args.reject_unknown()?;
+
+    if stream && window == 0 {
+        return Err("--stream needs a --window W plan to stream (W > 0)".into());
+    }
 
     let workload = if panel_spec.is_empty() {
         Workload::synthetic(&cfg, n_targets)
@@ -148,7 +166,6 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
 
     let configure = |mut session: ImputeSession| {
         session = session
-            .engine(engine)
             .boards(boards)
             .states_per_thread(spt)
             .threads(threads);
@@ -159,9 +176,13 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
     };
     let mut report = if window > 0 {
         let plan = WindowPlan::new(workload.panel().n_mark(), window, overlap)?;
-        run_windowed_threads(&workload, &plan, window_threads, configure)?
+        if stream {
+            run_streamed(&workload, &plan, engine, configure)?
+        } else {
+            run_windowed_threads(&workload, &plan, engine, window_threads, configure)?
+        }
     } else {
-        configure(ImputeSession::new(workload)).run()?
+        configure(ImputeSession::new(workload)).engine(engine).run()?
     };
     if !panel_spec.is_empty() {
         report.panel = Some(panel_spec);
@@ -684,6 +705,24 @@ mod tests {
             "--window-threads", "3",
         ]);
         assert_eq!(cmd_impute(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn impute_streams_a_window_plan() {
+        let args = argv(&[
+            "impute", "--hap", "8", "--mark", "40", "--annot-ratio", "0.25", "--targets",
+            "2", "--engine", "event", "--boards", "1", "--spt", "8", "--window", "26",
+            "--overlap", "19", "--stream", "--json",
+        ]);
+        assert_eq!(cmd_impute(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn impute_stream_requires_a_window_plan() {
+        let args = argv(&[
+            "impute", "--hap", "8", "--mark", "21", "--targets", "1", "--stream",
+        ]);
+        assert!(cmd_impute(&args).unwrap_err().contains("--window"));
     }
 
     #[test]

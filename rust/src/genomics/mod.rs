@@ -23,6 +23,12 @@
 //!   back together ([`window::run_windowed`]), resolving overlaps at the
 //!   window midpoint.  This is how a workload larger than one graph build
 //!   runs on the event planes.
+//! * [`stream`] — the streaming execution of a window plan
+//!   ([`stream::run_streamed`]): windows are sliced on a builder thread and
+//!   drained through the engine one at a time with rendezvous-channel
+//!   backpressure, so the peak working set is two windows (and one
+//!   application graph) regardless of chromosome length — bit-identical to
+//!   the materialised runner, `impute --stream` on the CLI.
 //!
 //! Wiring: [`crate::serve::PanelRegistry`] resolves `vcf:<path>` and
 //! `packed:<path>` specs alongside `synth:`, the CLI gains
@@ -30,9 +36,11 @@
 //! drives the windowed path end to end (see `tests/real_panel_e2e.rs`).
 
 pub mod packed;
+pub mod stream;
 pub mod vcf;
 pub mod window;
 
 pub use packed::PackedPanel;
+pub use stream::run_streamed;
 pub use vcf::{Site, VcfOptions, VcfPanel};
 pub use window::{MarkerWindow, WindowPlan, run_windowed, run_windowed_threads, stitch};

@@ -1,0 +1,185 @@
+//! Chromosome-scale streaming: drain a [`WindowPlan`] through the engine
+//! with a bounded working set.
+//!
+//! [`run_windowed_threads`](super::window::run_windowed_threads)
+//! materialises every window workload before stitching; fine for dozens of
+//! windows, but a chromosome-scale panel sliced into hundreds of windows
+//! would hold every slice (panel columns + target observations) in memory
+//! at once.  [`run_streamed`] replaces that with a two-stage pipeline:
+//!
+//! * a **builder thread** slices the next window's [`Workload`] (panel
+//!   column selection + target observation slicing — the expensive
+//!   allocation) while the engine drains its predecessor;
+//! * the **engine stage** receives slices over a rendezvous channel
+//!   (`sync_channel(0)`) and runs them in plan order.
+//!
+//! The rendezvous send is the backpressure: the builder cannot run ahead,
+//! so at most **two** window workloads are resident at any instant — the
+//! one in the engine and the one prefetched behind it — whatever the plan
+//! length, and only one application graph exists at a time.  The report's
+//! [`StreamTelemetry`](crate::session::StreamTelemetry) records the
+//! measured peak so callers (and the CI smoke test) can assert the bound
+//! instead of trusting it.
+//!
+//! Determinism: windows are received and run in plan order and the stitch +
+//! merge is the same code path as the windowed runner
+//! (`window::stitch_reports`), so a streamed run
+//! is **bit-identical** to `run_windowed_threads` at every host thread
+//! count — and to the unwindowed session on a single-window plan
+//! (asserted in `tests/parallel_equivalence.rs` / `real_panel_e2e.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::session::{EngineSpec, ImputeReport, ImputeSession, StreamTelemetry, Workload};
+
+use super::window::{WindowPlan, stitch_reports, validate_windowed};
+
+/// Stream a workload through `plan` window by window on `spec`: slice on a
+/// builder thread, impute on the caller's thread, stitch one report.
+///
+/// `configure` applies the per-window session knobs, exactly as in
+/// [`run_windowed_threads`](super::window::run_windowed_threads) (the
+/// engine selection is applied after it, so `spec` is authoritative); it is
+/// called from the consumer side only.  The merged report is bit-identical
+/// to the windowed runner's and additionally carries
+/// [`StreamTelemetry`](crate::session::StreamTelemetry) with the measured
+/// peak number of resident window workloads (≤ 2 by construction).
+pub fn run_streamed<F>(
+    full: &Workload,
+    plan: &WindowPlan,
+    spec: EngineSpec,
+    configure: F,
+) -> Result<ImputeReport, String>
+where
+    F: Fn(ImputeSession) -> ImputeSession + Sync,
+{
+    validate_windowed(full, plan, spec)?;
+
+    let n = plan.len();
+    let resident = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let reports = std::thread::scope(|sc| -> Result<Vec<ImputeReport>, String> {
+        // Rendezvous channel: the builder blocks in `send` until the engine
+        // stage takes the slice, so it prefetches exactly one window ahead.
+        let (tx, rx) = mpsc::sync_channel::<(usize, Workload)>(0);
+        let (residentr, peakr) = (&resident, &peak);
+        sc.spawn(move || {
+            for (i, win) in plan.windows().iter().enumerate() {
+                let sub = plan.slice_workload(full, win);
+                let now = residentr.fetch_add(1, Ordering::SeqCst) + 1;
+                peakr.fetch_max(now, Ordering::SeqCst);
+                if tx.send((i, sub)).is_err() {
+                    // The engine stage bailed on an error and dropped the
+                    // receiver — stop slicing.
+                    break;
+                }
+            }
+        });
+        let mut reports: Vec<ImputeReport> = Vec::with_capacity(n);
+        for (i, sub) in rx {
+            let win = &plan.windows()[i];
+            let report = configure(ImputeSession::new(sub))
+                .engine(spec)
+                .run()
+                .map_err(|e| format!("window {i} ([{}, {})): {e}", win.start, win.end))?;
+            resident.fetch_sub(1, Ordering::SeqCst);
+            reports.push(report);
+        }
+        Ok(reports)
+    })?;
+
+    let mut merged = stitch_reports(full, plan, reports)?;
+    merged.stream = Some(StreamTelemetry {
+        peak_resident_windows: peak.load(Ordering::SeqCst),
+        windows_streamed: n,
+    });
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genomics::window::{run_windowed, run_windowed_threads};
+    use crate::session::EngineSpec;
+    use crate::workload::panelgen::PanelConfig;
+
+    fn workload(n_mark: usize, n_targets: usize) -> Workload {
+        Workload::synthetic(
+            &PanelConfig {
+                n_hap: 8,
+                n_mark,
+                maf: 0.2,
+                annot_ratio: 0.25,
+                seed: 77,
+                ..PanelConfig::default()
+            },
+            n_targets,
+        )
+    }
+
+    #[test]
+    fn streamed_matches_windowed_bit_for_bit() {
+        let wl = workload(40, 2);
+        let plan = WindowPlan::new(40, 26, 19).unwrap();
+        let cfg = |s: ImputeSession| s.boards(1).states_per_thread(8);
+        let streamed = run_streamed(&wl, &plan, EngineSpec::Event, cfg).unwrap();
+        let windowed = run_windowed_threads(&wl, &plan, EngineSpec::Event, 2, cfg).unwrap();
+        assert_eq!(streamed.dosages, windowed.dosages, "streaming changed numerics");
+        assert_eq!(streamed.windows, windowed.windows);
+        let (sm, wm) = (
+            streamed.metrics.clone().unwrap(),
+            windowed.metrics.clone().unwrap(),
+        );
+        assert_eq!(sm.sends, wm.sends);
+        assert_eq!(sm.sim_cycles, wm.sim_cycles);
+        assert_eq!(sm.step_durations, wm.step_durations, "merge order must be plan order");
+        // The bounded-memory claim, measured not assumed.
+        let t = streamed.stream.expect("streamed runs carry telemetry");
+        assert_eq!(t.windows_streamed, plan.len());
+        assert!(
+            t.peak_resident_windows <= 2,
+            "peak resident windows {} exceeds the double-buffer bound",
+            t.peak_resident_windows
+        );
+        assert!(windowed.stream.is_none(), "materialised runs carry none");
+    }
+
+    #[test]
+    fn single_window_stream_matches_plain_session() {
+        let wl = workload(21, 2);
+        let plan = WindowPlan::new(21, 64, 4).unwrap();
+        let streamed = run_streamed(&wl, &plan, EngineSpec::Event, |s| {
+            s.boards(1).states_per_thread(8)
+        })
+        .unwrap();
+        let plain = ImputeSession::new(wl.clone())
+            .engine(EngineSpec::Event)
+            .boards(1)
+            .states_per_thread(8)
+            .run()
+            .unwrap();
+        assert_eq!(streamed.dosages, plain.dosages);
+        assert_eq!(streamed.stream.unwrap().peak_resident_windows, 1);
+    }
+
+    #[test]
+    fn streamed_validation_mirrors_windowed() {
+        let wl = workload(30, 1);
+        let bad_plan = WindowPlan::new(40, 20, 10).unwrap();
+        let streamed = run_streamed(&wl, &bad_plan, EngineSpec::Baseline, |s| s);
+        let windowed = run_windowed(&wl, &bad_plan, EngineSpec::Baseline, |s| s);
+        assert_eq!(streamed.unwrap_err(), windowed.unwrap_err());
+    }
+
+    #[test]
+    fn window_errors_stop_the_stream() {
+        // A per-window failure must surface as that window's error, not a
+        // hang (the builder thread unblocks when the receiver drops).
+        let wl = workload(40, 2);
+        let plan = WindowPlan::new(40, 10, 0).unwrap();
+        let err = run_streamed(&wl, &plan, EngineSpec::Event, |s| s.batch(0)).unwrap_err();
+        assert!(err.contains("window 0"), "{err}");
+        assert!(err.contains("batch size 0"), "{err}");
+    }
+}

@@ -273,32 +273,33 @@ pub fn stitch(plan: &WindowPlan, per_window: &[Vec<Vec<f32>>]) -> Result<Vec<Vec
     Ok(full)
 }
 
-/// Run a workload window-by-window and stitch one report (serial windows —
-/// [`run_windowed_threads`] with one thread).
+/// Run a workload window-by-window on `spec` and stitch one report (serial
+/// windows — [`run_windowed_threads`] with one thread).
 pub fn run_windowed<F>(
     full: &Workload,
     plan: &WindowPlan,
+    spec: EngineSpec,
     configure: F,
 ) -> Result<ImputeReport, String>
 where
     F: Fn(ImputeSession) -> ImputeSession + Sync,
 {
-    run_windowed_threads(full, plan, 1, configure)
+    run_windowed_threads(full, plan, spec, 1, configure)
 }
 
-/// Run a workload window-by-window, fanning the windows out over up to
-/// `window_threads` std threads, and stitch one report.
+/// Run a workload window-by-window on `spec`, fanning the windows out over
+/// up to `window_threads` std threads, and stitch one report.
 ///
-/// `configure` applies the engine selection and knobs to each per-window
-/// session (it receives a fresh `ImputeSession::new(window_workload)` and
-/// must return the configured builder) — the same closure shape the CLI
-/// builds from its flags.  The closure must be a **pure builder**: besides
-/// the per-window sessions it is invoked once more on a zero-target probe
-/// session (never run) to learn the engine spec for plan validation, and
-/// under `window_threads > 1` it is called from worker threads.  The
-/// merged report carries the stitched dosages,
-/// summed host/simulated timings, accumulated DES counters, accuracy
-/// re-scored against the full workload's truth, and `windows = plan.len()`.
+/// The engine plane is `spec` — it is threaded explicitly so engine-specific
+/// plan validation (the interp coverage check) happens before any window
+/// runs.  `configure` applies the remaining knobs to each per-window session
+/// (it receives a fresh `ImputeSession::new(window_workload)` and must
+/// return the configured builder; the engine selection is applied *after*
+/// it, so `spec` is authoritative) — the same closure shape the CLI builds
+/// from its flags.  Under `window_threads > 1` the closure is called from
+/// worker threads.  The merged report carries the stitched dosages, summed
+/// host/simulated timings, accumulated DES counters, accuracy re-scored
+/// against the full workload's truth, and `windows = plan.len()`.
 ///
 /// Windows are independent problems, so the fan-out changes wall-clock
 /// only: each window writes its own result slot and stitching/merging walks
@@ -307,40 +308,24 @@ where
 pub fn run_windowed_threads<F>(
     full: &Workload,
     plan: &WindowPlan,
+    spec: EngineSpec,
     window_threads: usize,
     configure: F,
 ) -> Result<ImputeReport, String>
 where
     F: Fn(ImputeSession) -> ImputeSession + Sync,
 {
-    if plan.n_mark() != full.panel().n_mark() {
-        return Err(format!(
-            "window plan covers {} markers, workload has {}",
-            plan.n_mark(),
-            full.panel().n_mark()
-        ));
-    }
-    if full.n_targets() == 0 {
-        return Err("workload has no targets".into());
-    }
     // Engine-specific plan validation: the interp plane's coverage caveat is
     // a hard error on multi-window plans (a single-window plan is exactly
-    // the unwindowed run, whose anchor-span behaviour is documented).  The
-    // probe session carries no targets — it exists only to read the spec the
-    // closure configures.
-    if plan.len() > 1 {
-        let probe = Workload::from_shared(full.panel_arc(), Vec::new())?;
-        if configure(ImputeSession::new(probe)).engine_spec() == EngineSpec::Interp {
-            let anchors = full.targets()[0].annotated();
-            plan.validate_interp_coverage(&anchors)?;
-        }
-    }
+    // the unwindowed run, whose anchor-span behaviour is documented).
+    validate_windowed(full, plan, spec)?;
 
     let n = plan.len();
     let threads = window_threads.max(1).min(n);
     let run_window = |i: usize| -> Result<ImputeReport, String> {
         let win = &plan.windows()[i];
         configure(ImputeSession::new(plan.slice_workload(full, win)))
+            .engine(spec)
             .run()
             .map_err(|e| format!("window {i} ([{}, {})): {e}", win.start, win.end))
     };
@@ -376,6 +361,42 @@ where
             reports.push(result?);
         }
     }
+    stitch_reports(full, plan, reports)
+}
+
+/// Validate a windowed run's inputs before any window executes — shared by
+/// [`run_windowed_threads`] and the streamed pipeline
+/// ([`crate::genomics::stream::run_streamed`]).
+pub(crate) fn validate_windowed(
+    full: &Workload,
+    plan: &WindowPlan,
+    spec: EngineSpec,
+) -> Result<(), String> {
+    if plan.n_mark() != full.panel().n_mark() {
+        return Err(format!(
+            "window plan covers {} markers, workload has {}",
+            plan.n_mark(),
+            full.panel().n_mark()
+        ));
+    }
+    if full.n_targets() == 0 {
+        return Err("workload has no targets".into());
+    }
+    if plan.len() > 1 && spec == EngineSpec::Interp {
+        let anchors = full.targets()[0].annotated();
+        plan.validate_interp_coverage(&anchors)?;
+    }
+    Ok(())
+}
+
+/// Stitch per-window reports (in plan order) into one merged report —
+/// shared by [`run_windowed_threads`] and the streamed pipeline, so a
+/// streamed run is bit-identical to a windowed one by construction.
+pub(crate) fn stitch_reports(
+    full: &Workload,
+    plan: &WindowPlan,
+    mut reports: Vec<ImputeReport>,
+) -> Result<ImputeReport, String> {
     // Drain the per-window dosages rather than cloning them: on the
     // chromosome-scale runs windowing exists for, the dosage matrices are
     // the dominant allocation.
@@ -551,8 +572,8 @@ mod tests {
     fn single_window_run_is_bit_identical_to_plain_session() {
         let wl = workload(21, 2);
         let p = plan(21, 64, 4);
-        let windowed = run_windowed(&wl, &p, |s| {
-            s.engine(EngineSpec::Event).boards(1).states_per_thread(8)
+        let windowed = run_windowed(&wl, &p, EngineSpec::Event, |s| {
+            s.boards(1).states_per_thread(8)
         })
         .unwrap();
         let plain = ImputeSession::new(wl.clone())
@@ -573,9 +594,9 @@ mod tests {
         // applies no emission at its first marker, so starting on an anchor
         // would discard that anchor's evidence.
         let p = plan(40, 26, 19);
-        let base = run_windowed(&wl, &p, |s| s.engine(EngineSpec::Baseline)).unwrap();
-        let event = run_windowed(&wl, &p, |s| {
-            s.engine(EngineSpec::Event).boards(1).states_per_thread(8)
+        let base = run_windowed(&wl, &p, EngineSpec::Baseline, |s| s).unwrap();
+        let event = run_windowed(&wl, &p, EngineSpec::Event, |s| {
+            s.boards(1).states_per_thread(8)
         })
         .unwrap();
         // Engine equivalence survives windowing (same tolerance as unwindowed).
@@ -600,9 +621,9 @@ mod tests {
     fn window_threads_do_not_change_the_stitched_report() {
         let wl = workload(40, 2);
         let p = plan(40, 26, 19);
-        let cfg = |s: ImputeSession| s.engine(EngineSpec::Event).boards(1).states_per_thread(8);
-        let serial = run_windowed(&wl, &p, cfg).unwrap();
-        let parallel = run_windowed_threads(&wl, &p, 3, cfg).unwrap();
+        let cfg = |s: ImputeSession| s.boards(1).states_per_thread(8);
+        let serial = run_windowed(&wl, &p, EngineSpec::Event, cfg).unwrap();
+        let parallel = run_windowed_threads(&wl, &p, EngineSpec::Event, 3, cfg).unwrap();
         assert_eq!(serial.dosages, parallel.dosages, "fan-out changed numerics");
         assert_eq!(serial.windows, parallel.windows);
         let (sm, pm) = (serial.metrics.unwrap(), parallel.metrics.unwrap());
@@ -610,7 +631,7 @@ mod tests {
         assert_eq!(sm.sim_cycles, pm.sim_cycles);
         assert_eq!(sm.step_durations, pm.step_durations, "merge order must be plan order");
         // Oversubscription clamps to the window count.
-        let many = run_windowed_threads(&wl, &p, 64, cfg).unwrap();
+        let many = run_windowed_threads(&wl, &p, EngineSpec::Event, 64, cfg).unwrap();
         assert_eq!(serial.dosages, many.dosages);
     }
 
@@ -621,14 +642,14 @@ mod tests {
         // first anchor (20) — previously silent partial coverage.
         let wl = workload_ratio(41, 1, 0.1);
         let bad = plan(41, 21, 3);
-        let err = run_windowed(&wl, &bad, |s| {
-            s.engine(EngineSpec::Interp).boards(1).states_per_thread(1)
+        let err = run_windowed(&wl, &bad, EngineSpec::Interp, |s| {
+            s.boards(1).states_per_thread(1)
         })
         .unwrap_err();
         assert!(err.contains("chip"), "unexpected message: {err}");
         // The event plane has no grid constraint: the same plan runs.
-        let ok = run_windowed(&wl, &bad, |s| {
-            s.engine(EngineSpec::Event).boards(1).states_per_thread(8)
+        let ok = run_windowed(&wl, &bad, EngineSpec::Event, |s| {
+            s.boards(1).states_per_thread(8)
         });
         assert!(ok.is_ok(), "{ok:?}");
     }
@@ -641,8 +662,8 @@ mod tests {
         let p = plan(41, 21, 1);
         let anchors = wl.targets()[0].annotated();
         p.validate_interp_coverage(&anchors).unwrap();
-        let report = run_windowed_threads(&wl, &p, 2, |s| {
-            s.engine(EngineSpec::Interp).boards(1).states_per_thread(1)
+        let report = run_windowed_threads(&wl, &p, EngineSpec::Interp, 2, |s| {
+            s.boards(1).states_per_thread(1)
         })
         .unwrap();
         assert_eq!(report.windows, Some(2));
@@ -682,9 +703,9 @@ mod tests {
     fn plan_mismatch_and_empty_workload_are_errors() {
         let wl = workload(30, 1);
         let p = plan(40, 20, 10);
-        assert!(run_windowed(&wl, &p, |s| s).is_err());
+        assert!(run_windowed(&wl, &p, EngineSpec::Baseline, |s| s).is_err());
         let empty = Workload::from_parts(wl.panel().clone(), Vec::new());
         let p30 = plan(30, 20, 10);
-        assert!(run_windowed(&empty, &p30, |s| s).is_err());
+        assert!(run_windowed(&empty, &p30, EngineSpec::Baseline, |s| s).is_err());
     }
 }

@@ -20,14 +20,21 @@
 //!   and total time = (pipeline fill + targets + drain) · step.  This is the
 //!   regime the calibration anchor (Fig 12, ≈270×) is stated in.
 //!
-//! * **`lane_width > 1` — the wave-batched plane (PR 5).**  The whole lane
-//!   group sweeps the panel as one wave of `ceil(width / LANES)`-chunk SoA
-//!   events, so only the wavefront columns are active per superstep: the
-//!   busiest core hosts one active column's vertices, each ingesting
-//!   `H · chunks` events and doing the whole lane group's FP work, on top of
-//!   the all-vertex step-handler floor; steps ≈ waves · (columns + slack).
-//!   Fewer, fatter events — the per-message overhead amortisation the DES
-//!   measures as `lanes_delivered / copies_delivered`.
+//! * **`lane_width > 1` — the wave-batched plane (PR 5), pipelined lane
+//!   groups (PR 6).**  A batch splits into `G = ceil(width / LANES)` lane
+//!   groups of one SoA chunk each, injected one superstep apart into the
+//!   same graph, so `G` wavefronts ride the column pipeline concurrently.
+//!   Per superstep an active column's vertices each ingest one group's
+//!   chunk (`fan_in` events of ≤ `LANES` lanes) and do that group's FP
+//!   work, on top of the all-vertex step-handler floor; the extra
+//!   wavefronts overlap in *space* (different columns, hence different
+//!   cores under the column-major mapping), not on the busiest core.
+//!   steps ≈ waves · ((G−1)·stagger + columns + slack) with the engine's
+//!   default stagger of 1 — the pipeline-fill term is additive, which is
+//!   exactly why a 64-wide batch takes ~`columns + 11` supersteps instead
+//!   of 8 sequential sweeps of `columns` each.  Fewer, fatter events —
+//!   the per-message overhead amortisation the DES measures as
+//!   `lanes_delivered / copies_delivered`.
 
 use crate::imputation::msg::LANES;
 use crate::poets::costmodel::CostModel;
@@ -117,10 +124,16 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
         let steps = columns + w.n_targets as u64 + columns;
         (steps, core_cycles, mailbox_cycles)
     } else {
-        // ----- wave-batched regime (PR 5) --------------------------------
+        // ----- wave-batched regime (PR 5), pipelined groups (PR 6) -------
         let lanes = w.lane_width.min(w.n_targets.max(1)) as u64;
-        let chunks = lanes.div_ceil(LANES as u64);
         let waves = (w.n_targets.max(1) as u64).div_ceil(lanes);
+        // A batch wider than one SoA chunk splits into G lane groups
+        // injected `stagger` supersteps apart; each wavefront column then
+        // carries ONE group's chunk per superstep (≤ LANES lanes), and the
+        // G concurrent wavefronts occupy G *different* columns.
+        let groups = lanes.div_ceil(LANES as u64);
+        let group_lanes = lanes.min(LANES as u64);
+        let stagger = 1u64; // the engine's RawAppConfig::default() stagger
         // Only the wavefront columns are active per superstep.  How many of
         // an active column's H vertices share one core / one tile under the
         // column-major manual mapping:
@@ -131,14 +144,14 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
             .max(1);
         let v_active_per_core = h.div_ceil(col_cores);
         let v_active_per_tile = h.div_ceil(col_tiles);
-        // Per active vertex per superstep: one direction's wave = H senders
-        // × chunks events; the whole lane group's FP work (reduce + emission
-        // + posterior ≈ lanes·(2H+2), plus the section blend on the interp
-        // plane); sends = own chunks (+ per-target hit vectors on interp).
-        let events_in = fan_in * chunks;
-        let flops = lanes * (2 * h + 2) + lanes * 3 * section;
-        let sends = sends_per_vertex.min(3) * chunks
-            + if section > 0 { lanes } else { 0 };
+        // Per active vertex per superstep: one group's wave = H senders ×
+        // one chunk event each; that group's FP work (reduce + emission +
+        // posterior ≈ group_lanes·(2H+2), plus the section blend on the
+        // interp plane); sends = own chunk (+ per-target hit vectors on
+        // interp).
+        let events_in = fan_in;
+        let flops = group_lanes * (2 * h + 2) + group_lanes * 3 * section;
+        let sends = sends_per_vertex.min(3) + if section > 0 { group_lanes } else { 0 };
         let core_active = v_active_per_core
             * (events_in * cost.handler(0) + flops * cost.flop + sends * cost.send_request);
         // Idle floor: every resident vertex's step handler runs each
@@ -146,8 +159,10 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
         let step_floor = v_per_core * cost.handler(0);
         let core_cycles = core_active + step_floor;
         let mailbox_cycles = v_active_per_tile * events_in * cost.mailbox_ingress;
-        // One wave sweeps in ~columns supersteps (+ pairing/drain slack).
-        let steps = waves * (columns + 4);
+        // One wave of G staggered groups sweeps in ~(G−1)·stagger + columns
+        // supersteps (+ pairing/drain slack): the pipeline fill is additive,
+        // not multiplicative.
+        let steps = waves * ((groups - 1) * stagger + columns + 4);
         (steps, core_cycles, mailbox_cycles)
     };
 
@@ -309,6 +324,45 @@ mod tests {
             batched.total_cycles,
             per_target.total_cycles
         );
+    }
+
+    #[test]
+    fn pipelined_groups_beat_sequential_waves_in_steps() {
+        // 64 targets on a 1000-column panel: one 64-wide batch is 8 lane
+        // groups pipelined one superstep apart through a single sweep
+        // (~columns + 11 steps), while batch(LANES) is 8 sequential sweeps
+        // of ~columns each.  The analytic step counts must reflect the
+        // ≥ 2x superstep cut the desim_hotpath smoke gate enforces on the
+        // DES at exactly this shape.
+        let cluster = crate::poets::topology::ClusterConfig::with_boards(1);
+        let cost = CostModel::default();
+        let shape = Workload {
+            n_hap: 8,
+            n_mark: 1000,
+            n_targets: 64,
+            states_per_thread: 8,
+            lane_width: 64,
+            kind: AppKind::Raw,
+        };
+        let pipelined = predict(&shape, &cluster, &cost);
+        let sequential = predict(
+            &Workload {
+                lane_width: LANES,
+                ..shape
+            },
+            &cluster,
+            &cost,
+        );
+        assert!(
+            pipelined.steps * 2 <= sequential.steps,
+            "pipelined {} steps vs sequential {}",
+            pipelined.steps,
+            sequential.steps
+        );
+        // Same per-superstep cost (one chunk per wavefront column either
+        // way), so the step cut carries straight through to total cycles.
+        assert_eq!(pipelined.step_cycles, sequential.step_cycles);
+        assert!(pipelined.total_cycles < sequential.total_cycles);
     }
 
     #[test]

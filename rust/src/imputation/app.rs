@@ -25,6 +25,14 @@ pub struct RawAppConfig {
     pub params: ModelParams,
     /// Soft-scheduling factor: panel states per hardware thread (Fig 12).
     pub states_per_thread: usize,
+    /// Supersteps between successive lane-group injections when a batch is
+    /// wider than [`LANES`](crate::imputation::msg::LANES): group *g*
+    /// enters the edge columns at superstep `g·stagger`.  The wavefront
+    /// advances one column per superstep, so the default of 1 packs groups
+    /// back to back without ever colliding; larger values spread them out
+    /// (0 degenerates to PR 5's single-superstep injection).  Numerics are
+    /// stagger-invariant — only superstep counts and simulated time change.
+    pub stagger: u64,
     pub cluster: ClusterConfig,
     pub cost: CostModel,
     pub sim: SimConfig,
@@ -35,6 +43,7 @@ impl Default for RawAppConfig {
         RawAppConfig {
             params: ModelParams::default(),
             states_per_thread: 1,
+            stagger: 1,
             cluster: ClusterConfig::poets_48(),
             cost: CostModel::default(),
             sim: SimConfig::default(),
@@ -62,12 +71,14 @@ pub struct EventRunResult {
     pub sim_seconds: f64,
 }
 
-/// Build the raw application graph (one vertex per panel state).
+/// Build the raw application graph (one vertex per panel state).  `cfg`
+/// supplies the model parameters and the lane-group injection stagger.
 pub fn build_raw_graph(
     panel: &ReferencePanel,
     targets: &[TargetHaplotype],
-    params: &ModelParams,
+    cfg: &RawAppConfig,
 ) -> Graph<RawVertex> {
+    let params = &cfg.params;
     let (h_n, m_n) = (panel.n_hap(), panel.n_mark());
     let obs = ObsMatrix::from_targets(targets);
     assert_eq!(obs.n_mark(), m_n, "targets/panel marker mismatch");
@@ -97,6 +108,7 @@ pub fn build_raw_graph(
                 tau_next,
                 params.err,
                 n_targets,
+                cfg.stagger,
                 Arc::clone(&obs),
             ));
         }
@@ -147,9 +159,11 @@ pub fn extract_results(
             row[m] = d;
         }
     }
+    let mut metrics = sim.metrics.clone();
+    metrics.max_groups_in_flight = super::wave::n_groups(n_targets) as u64;
     EventRunResult {
         dosages,
-        metrics: sim.metrics.clone(),
+        metrics,
         sim_seconds: sim.sim_seconds(),
     }
 }
@@ -213,7 +227,7 @@ mod tests {
     #[test]
     fn graph_shape() {
         let (panel, targets) = problem(1, 6, 10, 1);
-        let g = build_raw_graph(&panel, &targets, &ModelParams::default());
+        let g = build_raw_graph(&panel, &targets, &RawAppConfig::default());
         assert_eq!(g.n_vertices(), 60);
         // fwd H per vertex except last column; bwd except first; down except
         // accumulator row.
@@ -283,6 +297,47 @@ mod tests {
         // Every event carries all T lanes, so the delivered lane count is
         // the per-target plane's copy count exactly.
         assert_eq!(out.metrics.lanes_delivered, t * expected_copies);
+    }
+
+    #[test]
+    fn pipelined_groups_match_sequential_groups_and_cut_supersteps() {
+        // A batch of 2·LANES+1 targets pipelines as three staggered lane
+        // groups inside ONE engine run.  Dosages must be bit-identical to
+        // running the groups as sequential LANES-wide batches, in at most
+        // half the total supersteps (the groups overlap instead of queueing).
+        use crate::imputation::msg::LANES;
+        let t = 2 * LANES + 1;
+        let (panel, targets) = problem(8, 6, 30, t);
+        let wl = Workload::from_parts(panel, targets);
+        let run = |batch: usize| {
+            ImputeSession::new(wl.clone())
+                .engine(EngineSpec::Event)
+                .app_config(small_cfg())
+                .batch(batch)
+                .run()
+                .expect("event plane is always available")
+        };
+        let pipelined = run(t);
+        let sequential = run(LANES);
+        assert_eq!(
+            pipelined.dosages, sequential.dosages,
+            "pipelined groups must reproduce sequential-group dosages bit for bit"
+        );
+        let (pm, sm) = (
+            pipelined.metrics.as_ref().unwrap(),
+            sequential.metrics.as_ref().unwrap(),
+        );
+        assert_eq!(pm.max_groups_in_flight, 3);
+        assert_eq!(sm.max_groups_in_flight, 1);
+        // Same traffic, fewer barriers.
+        assert_eq!(pm.sends, sm.sends, "pipelining must not change event counts");
+        assert_eq!(pm.lanes_delivered, sm.lanes_delivered);
+        assert!(
+            2 * pm.steps <= sm.steps,
+            "pipelined {} supersteps vs sequential {}",
+            pm.steps,
+            sm.steps
+        );
     }
 
     #[test]

@@ -85,6 +85,7 @@ pub fn build_interp_graph(
                 tau_next,
                 cfg.params.err,
                 n_targets,
+                cfg.stagger,
                 Arc::clone(&obs),
             ));
         }
@@ -146,9 +147,11 @@ pub fn extract_interp_results(
             }
         }
     }
+    let mut metrics = sim.metrics.clone();
+    metrics.max_groups_in_flight = super::wave::n_groups(n_targets) as u64;
     EventRunResult {
         dosages,
-        metrics: sim.metrics.clone(),
+        metrics,
         sim_seconds: sim.sim_seconds(),
     }
 }
@@ -267,6 +270,29 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn interp_pipelined_groups_match_sequential_groups() {
+        use crate::imputation::msg::LANES;
+        let t = LANES + 3;
+        let (panel, targets) = problem(7, 6, 31, t);
+        let run = |batch: usize| {
+            ImputeSession::new(Workload::from_parts(panel.clone(), targets.clone()))
+                .engine(EngineSpec::Interp)
+                .app_config(cfg())
+                .batch(batch)
+                .run()
+                .expect("interp plane is always available")
+        };
+        let pipelined = run(t);
+        let sequential = run(LANES);
+        assert_eq!(
+            pipelined.dosages, sequential.dosages,
+            "pipelined lane groups changed interp numerics"
+        );
+        let pm = pipelined.metrics.expect("metrics");
+        assert_eq!(pm.max_groups_in_flight, 2);
     }
 
     #[test]

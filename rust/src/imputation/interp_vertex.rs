@@ -15,17 +15,23 @@
 //! * `PORT_TOT` (4) — accumulator-only: anchor-column posterior totals to the
 //!   left accumulator (interpolated totals normalise intermediate columns).
 //!
-//! # Wave batching
+//! # Wave batching + pipelined lane groups
 //!
-//! Like the raw plane, all targets of one run form a single lane group: the
-//! α/β/posterior/Section/Tot traffic carries [`LANES`](super::msg::LANES)-
-//! wide SoA slabs (one recv handler per wave chunk instead of per target),
-//! with arrivals buffered per sender haplotype (`WaveBuf`, allocated on
-//! first arrival, freed on completion) and reduced in canonical sender
-//! order — dosages are bit-identical for every batch width and host thread
-//! count.  The one exception is the **hit vector**: its 12-value section
-//! slab already fills the 56-byte event budget, so `HitVec` stays one event
-//! per (haplotype, target) and only its fan-in *sum* is canonicalised.
+//! Like the raw plane, the targets of one run are split into lane groups of
+//! at most [`LANES`](super::msg::LANES) targets, each injected at the edge
+//! anchors `stagger` supersteps after its predecessor: the
+//! α/β/posterior/Section/Tot traffic carries per-group SoA slabs addressed
+//! by global lane base (one recv handler per group chunk instead of per
+//! target), with arrivals buffered per (group, sender haplotype)
+//! (`GroupWaves` — allocated on first arrival, freed on completion) and
+//! each group reduced in canonical sender order — dosages are bit-identical
+//! for every batch width and host thread count.  Two accumulator-side
+//! reductions span all groups and simply complete when the last group's
+//! traffic lands: the **hit vector** (its 12-value section slab already
+//! fills the 56-byte event budget, so `HitVec` stays one event per
+//! (haplotype, target) with a canonicalised fan-in sum) and the section
+//! **total** blend that consumes it (its lane space is targets × section
+//! states, which does not tile into lane groups).
 //!
 //! Message economics (the paper's §6.3 argument, updated): a section of `L`
 //! states costs 2 multicast chunks + ≲3 unicast chunks per *wave* instead of
@@ -43,7 +49,10 @@ use crate::graph::device::{Ctx, Device, PortId, VertexId};
 
 use super::msg::{InterpMsg, MAX_SECTION, for_each_chunk};
 use super::obs::ObsMatrix;
-use super::wave::{WaveBuf, reduce_hit_tot, reduce_same_diff};
+use super::wave::{
+    GroupWaves, WaveBuf, group_start, group_width, inject_at, n_groups, reduce_hit_tot,
+    reduce_same_diff,
+};
 
 pub const PORT_FWD: PortId = 0;
 pub const PORT_BWD: PortId = 1;
@@ -71,39 +80,48 @@ pub struct InterpVertex {
     a_diff_next: f32,
     err: f32,
     n_targets: u32,
+    /// Supersteps between successive lane-group injections at the edges.
+    stagger: u64,
     obs: Arc<ObsMatrix>,
 
-    // α/β waves keyed by sender haplotype (canonical reduce — see
-    // super::vertex module docs; same invariance argument).
-    alpha_wave: WaveBuf,
-    beta_wave: WaveBuf,
-    alpha: Vec<f32>,
-    alpha_done: bool,
-    beta: Vec<f32>,
-    beta_done: bool,
-    posterior_done: bool,
-    injected_alpha: bool,
-    injected_beta: bool,
+    // α/β waves keyed by (lane group, sender haplotype) — canonical
+    // per-group reduce, see super::vertex module docs; same invariance
+    // argument.
+    alpha_wave: GroupWaves,
+    beta_wave: GroupWaves,
+    alpha: Vec<Vec<f32>>,
+    alpha_done: Vec<bool>,
+    beta: Vec<Vec<f32>>,
+    beta_done: Vec<bool>,
+    posterior_done: Vec<bool>,
+    // Injection bookkeeping (edge anchors): next group to inject.
+    injected_alpha: usize,
+    injected_beta: usize,
 
-    // Section interpolation (k+1 < k_n): own anchor posteriors await the
-    // right neighbour's Section wave.
-    own_p: Vec<f32>,
-    own_p_done: bool,
-    right_p_wave: WaveBuf,
-    right_p_complete: bool,
-    section_done: bool,
+    // Section interpolation (k+1 < k_n): per-group own anchor posteriors
+    // await the right neighbour's per-group Section wave.
+    own_p: Vec<Vec<f32>>,
+    own_p_done: Vec<bool>,
+    right_p_wave: GroupWaves,
+    right_p: Vec<Vec<f32>>,
+    right_p_complete: Vec<bool>,
+    section_done: Vec<bool>,
 
     // Accumulator (h == H−1) state:
-    post_wave: WaveBuf,
+    post_wave: GroupWaves,
     post_allele1: Vec<bool>,
     /// Hit contributions keyed by (sender haplotype, target × section):
-    /// a `[h_n × (n_targets · sec_len)]` canonical summation buffer.
+    /// a `[h_n × (n_targets · sec_len)]` canonical summation buffer
+    /// spanning all lane groups (section lanes don't tile into groups).
     hit_wave: WaveBuf,
     hits_complete: bool,
-    /// Own anchor totals T_k per target (kept until section dosages done).
+    /// Own anchor totals T_k per target, assembled group by group (kept
+    /// until section dosages done).
     own_tot: Vec<f32>,
+    own_tot_groups: usize,
     own_tot_done: bool,
-    /// Right accumulator's totals T_{k+1}.
+    /// Right accumulator's totals T_{k+1} — chunks arrive per group, the
+    /// wave completes when the last group's lanes land.
     right_tot_wave: WaveBuf,
     right_tot_complete: bool,
     sections_finished: bool,
@@ -128,6 +146,7 @@ impl InterpVertex {
         tau_next: f64,
         err: f64,
         n_targets: u32,
+        stagger: u64,
         obs: Arc<ObsMatrix>,
     ) -> InterpVertex {
         assert_eq!(sec_alleles.len(), sec_fracs.len());
@@ -140,6 +159,7 @@ impl InterpVertex {
         let is_acc = h == h_n - 1;
         let sec_len = sec_alleles.len();
         let c = n_targets as usize;
+        let n_g = n_groups(c);
         InterpVertex {
             h,
             k,
@@ -155,26 +175,29 @@ impl InterpVertex {
             a_diff_next: (tau_next / hn) as f32,
             err: err as f32,
             n_targets,
+            stagger,
             obs,
-            alpha_wave: WaveBuf::new(),
-            beta_wave: WaveBuf::new(),
-            alpha: Vec::new(),
-            alpha_done: false,
-            beta: Vec::new(),
-            beta_done: false,
-            posterior_done: false,
-            injected_alpha: false,
-            injected_beta: false,
-            own_p: Vec::new(),
-            own_p_done: false,
-            right_p_wave: WaveBuf::new(),
-            right_p_complete: false,
-            section_done: false,
-            post_wave: WaveBuf::new(),
+            alpha_wave: GroupWaves::new(),
+            beta_wave: GroupWaves::new(),
+            alpha: vec![Vec::new(); n_g],
+            alpha_done: vec![false; n_g],
+            beta: vec![Vec::new(); n_g],
+            beta_done: vec![false; n_g],
+            posterior_done: vec![false; n_g],
+            injected_alpha: 0,
+            injected_beta: 0,
+            own_p: vec![Vec::new(); n_g],
+            own_p_done: vec![false; n_g],
+            right_p_wave: GroupWaves::new(),
+            right_p: vec![Vec::new(); n_g],
+            right_p_complete: vec![false; n_g],
+            section_done: vec![false; n_g],
+            post_wave: GroupWaves::new(),
             post_allele1: if is_acc { vec![false; h_n as usize] } else { Vec::new() },
             hit_wave: WaveBuf::new(),
             hits_complete: false,
             own_tot: Vec::new(),
+            own_tot_groups: 0,
             own_tot_done: false,
             right_tot_wave: WaveBuf::new(),
             right_tot_complete: false,
@@ -212,93 +235,99 @@ impl InterpVertex {
     fn take_alpha(&mut self, base: usize, vals: &[f32], src: VertexId, ctx: &mut Ctx<InterpMsg>) {
         let c = self.n_targets as usize;
         let src_h = (src % self.h_n) as usize;
-        if self.alpha_wave.store(self.h_n as usize, c, src_h, base, vals, "α") {
-            let buf = self.alpha_wave.take();
+        if let Some(g) = self.alpha_wave.store(self.h_n as usize, c, src_h, base, vals, "α") {
+            let buf = self.alpha_wave.take(g);
+            let w = group_width(g, c);
             let mut alpha =
-                reduce_same_diff(&buf, self.h_n as usize, c, self.h as usize, self.a_same, self.a_diff);
+                reduce_same_diff(&buf, self.h_n as usize, w, self.h as usize, self.a_same, self.a_diff);
             for (t, a) in alpha.iter_mut().enumerate() {
                 ctx.flop(2 * self.h_n as u64);
-                *a *= self.emission(t as u32);
+                *a *= self.emission((group_start(g) + t) as u32);
                 ctx.flop(1);
             }
-            self.finish_alpha(alpha, ctx);
+            self.finish_alpha(g, alpha, ctx);
         }
     }
 
     fn take_beta(&mut self, base: usize, vals: &[f32], src: VertexId, ctx: &mut Ctx<InterpMsg>) {
         let c = self.n_targets as usize;
         let src_h = (src % self.h_n) as usize;
-        if self.beta_wave.store(self.h_n as usize, c, src_h, base, vals, "β") {
-            let buf = self.beta_wave.take();
+        if let Some(g) = self.beta_wave.store(self.h_n as usize, c, src_h, base, vals, "β") {
+            let buf = self.beta_wave.take(g);
+            let w = group_width(g, c);
             let beta = reduce_same_diff(
                 &buf,
                 self.h_n as usize,
-                c,
+                w,
                 self.h as usize,
                 self.a_same_next,
                 self.a_diff_next,
             );
-            ctx.flop(2 * self.h_n as u64 * c as u64);
-            self.finish_beta(beta, ctx);
+            ctx.flop(2 * self.h_n as u64 * w as u64);
+            self.finish_beta(g, beta, ctx);
         }
     }
 
-    fn finish_alpha(&mut self, alpha: Vec<f32>, ctx: &mut Ctx<InterpMsg>) {
+    fn finish_alpha(&mut self, g: usize, alpha: Vec<f32>, ctx: &mut Ctx<InterpMsg>) {
         if self.k + 1 < self.k_n {
+            let start = group_start(g) as u32;
             for_each_chunk(&alpha, |base, n, vals| {
-                ctx.send(PORT_FWD, InterpMsg::AlphaVec { base, n, vals });
+                ctx.send(PORT_FWD, InterpMsg::AlphaVec { base: base + start, n, vals });
             });
         }
-        self.alpha = alpha;
-        self.alpha_done = true;
-        self.try_posterior(ctx);
+        self.alpha[g] = alpha;
+        self.alpha_done[g] = true;
+        self.try_posterior(g, ctx);
     }
 
-    fn finish_beta(&mut self, beta: Vec<f32>, ctx: &mut Ctx<InterpMsg>) {
+    fn finish_beta(&mut self, g: usize, beta: Vec<f32>, ctx: &mut Ctx<InterpMsg>) {
         if self.k > 0 {
+            let start = group_start(g);
             let folded: Vec<f32> = beta
                 .iter()
                 .enumerate()
                 .map(|(t, &b)| {
                     ctx.flop(1);
-                    b * self.emission(t as u32)
+                    b * self.emission((start + t) as u32)
                 })
                 .collect();
             for_each_chunk(&folded, |base, n, vals| {
-                ctx.send(PORT_BWD, InterpMsg::BetaVec { base, n, vals });
+                ctx.send(PORT_BWD, InterpMsg::BetaVec { base: base + start as u32, n, vals });
             });
         }
-        self.beta = beta;
-        self.beta_done = true;
-        self.try_posterior(ctx);
+        self.beta[g] = beta;
+        self.beta_done[g] = true;
+        self.try_posterior(g, ctx);
     }
 
-    /// Both waves in → per-lane anchor posteriors → tally/unicast, Section
-    /// wave to the left neighbour, and the section blend when ready.
-    fn try_posterior(&mut self, ctx: &mut Ctx<InterpMsg>) {
-        if self.posterior_done || !self.alpha_done || !self.beta_done {
+    /// Both of group `g`'s waves in → per-lane anchor posteriors →
+    /// tally/unicast, Section wave to the left neighbour, and the section
+    /// blend when ready.
+    fn try_posterior(&mut self, g: usize, ctx: &mut Ctx<InterpMsg>) {
+        if self.posterior_done[g] || !self.alpha_done[g] || !self.beta_done[g] {
             return;
         }
-        self.posterior_done = true;
-        let c = self.n_targets as usize;
-        let mut post = vec![0.0f32; c];
-        for t in 0..c {
-            post[t] = self.alpha[t] * self.beta[t];
+        self.posterior_done[g] = true;
+        let w = group_width(g, self.n_targets as usize);
+        let start = group_start(g) as u32;
+        let mut post = vec![0.0f32; w];
+        for t in 0..w {
+            post[t] = self.alpha[g][t] * self.beta[g][t];
             ctx.flop(1);
         }
-        self.alpha = Vec::new();
-        self.beta = Vec::new();
+        self.alpha[g] = Vec::new();
+        self.beta[g] = Vec::new();
         if self.is_accumulator() {
             let h = self.h;
             let allele1 = self.allele == 1;
-            self.take_posts(h, allele1, 0, &post, ctx);
+            self.take_posts(h, allele1, start as usize, &post, ctx);
         } else {
             let allele1 = self.allele == 1;
             for_each_chunk(&post, |base, n, vals| {
                 ctx.send(
                     PORT_DOWN,
                     InterpMsg::PostVec {
-                        base,
+                        base: base + start,
                         n,
                         allele1,
                         vals,
@@ -310,31 +339,32 @@ impl InterpVertex {
             // Our anchor posteriors are the right endpoints of the left
             // neighbour's section.
             for_each_chunk(&post, |base, n, vals| {
-                ctx.send(PORT_SECTION, InterpMsg::SectionVec { base, n, vals });
+                ctx.send(PORT_SECTION, InterpMsg::SectionVec { base: base + start, n, vals });
             });
         }
         if self.k + 1 < self.k_n {
-            self.own_p = post;
-            self.own_p_done = true;
-            self.try_section(ctx);
+            self.own_p[g] = post;
+            self.own_p_done[g] = true;
+            self.try_section(g, ctx);
         }
     }
 
-    /// Blend own + right anchor posteriors over the section (Fig 10),
-    /// for every lane at once.
-    fn try_section(&mut self, ctx: &mut Ctx<InterpMsg>) {
-        if self.section_done || !self.own_p_done || !self.right_p_complete {
+    /// Blend own + right anchor posteriors over the section (Fig 10), for
+    /// every lane of group `g` at once.
+    fn try_section(&mut self, g: usize, ctx: &mut Ctx<InterpMsg>) {
+        if self.section_done[g] || !self.own_p_done[g] || !self.right_p_complete[g] {
             return;
         }
-        self.section_done = true;
-        let own_p = std::mem::take(&mut self.own_p);
-        let right_p = self.right_p_wave.take();
+        self.section_done[g] = true;
+        let own_p = std::mem::take(&mut self.own_p[g]);
+        let right_p = std::mem::take(&mut self.right_p[g]);
         if self.sec_alleles.is_empty() {
             return;
         }
-        let c = self.n_targets as usize;
+        let w = group_width(g, self.n_targets as usize);
+        let start = group_start(g);
         let sec_len = self.sec_alleles.len();
-        for t in 0..c {
+        for t in 0..w {
             let (p, pr) = (own_p[t], right_p[t]);
             let mut vals = [0.0f32; MAX_SECTION];
             for i in 0..sec_len {
@@ -342,14 +372,15 @@ impl InterpVertex {
                 vals[i] = if self.sec_alleles[i] == 1 { blended } else { 0.0 };
                 ctx.flop(3);
             }
+            let target = (start + t) as u32;
             if self.is_accumulator() {
                 let h = self.h;
-                self.take_hits(h, t as u32, sec_len as u8, &vals, ctx);
+                self.take_hits(h, target, sec_len as u8, &vals, ctx);
             } else {
                 ctx.send(
                     PORT_DOWN,
                     InterpMsg::HitVec {
-                        target: t as u32,
+                        target,
                         n: sec_len as u8,
                         vals,
                     },
@@ -358,8 +389,8 @@ impl InterpVertex {
         }
     }
 
-    /// Accumulate one sender's posterior lanes; once complete, finish anchor
-    /// dosages and launch the Tot wave.
+    /// Accumulate one sender's posterior lanes; once a group completes,
+    /// finish its anchor dosages and launch its Tot chunk.
     fn take_posts(
         &mut self,
         src_h: u32,
@@ -372,27 +403,35 @@ impl InterpVertex {
         let c = self.n_targets as usize;
         self.post_allele1[src_h as usize] = allele1;
         ctx.flop(2 * vals.len() as u64);
-        if self
+        if let Some(g) = self
             .post_wave
             .store(self.h_n as usize, c, src_h as usize, base, vals, "posterior")
         {
-            let buf = self.post_wave.take();
-            let sums = reduce_hit_tot(&buf, self.h_n as usize, c, &self.post_allele1);
-            let mut tots = vec![0.0f32; c];
+            let buf = self.post_wave.take(g);
+            let w = group_width(g, c);
+            let start = group_start(g);
+            let sums = reduce_hit_tot(&buf, self.h_n as usize, w, &self.post_allele1);
+            let mut tots = vec![0.0f32; w];
             for (t, &(hit, tot)) in sums.iter().enumerate() {
-                self.anchor_dosage[t] = if tot > 0.0 { hit / tot } else { 0.0 };
+                self.anchor_dosage[start + t] = if tot > 0.0 { hit / tot } else { 0.0 };
                 ctx.flop(1);
                 tots[t] = tot;
             }
             if self.k > 0 {
                 for_each_chunk(&tots, |base, n, vals| {
-                    ctx.send(PORT_TOT, InterpMsg::TotVec { base, n, vals });
+                    ctx.send(PORT_TOT, InterpMsg::TotVec { base: base + start as u32, n, vals });
                 });
             }
             if self.k + 1 < self.k_n {
-                self.own_tot = tots;
-                self.own_tot_done = true;
-                self.try_finish_section(ctx);
+                if self.own_tot.is_empty() {
+                    self.own_tot = vec![0.0; c];
+                }
+                self.own_tot[start..start + w].copy_from_slice(&tots);
+                self.own_tot_groups += 1;
+                if self.own_tot_groups == n_groups(c) {
+                    self.own_tot_done = true;
+                    self.try_finish_section(ctx);
+                }
             }
         }
     }
@@ -481,12 +520,13 @@ impl Device for InterpVertex {
             }
             InterpMsg::SectionVec { base, n, ref vals } => {
                 let c = self.n_targets as usize;
-                if self
+                if let Some(g) = self
                     .right_p_wave
                     .store(1, c, 0, base as usize, &vals[..n as usize], "Section")
                 {
-                    self.right_p_complete = true;
-                    self.try_section(ctx);
+                    self.right_p[g] = self.right_p_wave.take(g);
+                    self.right_p_complete[g] = true;
+                    self.try_section(g, ctx);
                 }
             }
             InterpMsg::HitVec { target, n, ref vals } => {
@@ -508,18 +548,31 @@ impl Device for InterpVertex {
 
     fn step(&mut self, ctx: &mut Ctx<InterpMsg>) -> bool {
         let c = self.n_targets as usize;
-        let mut injected = false;
-        if self.k == 0 && !self.injected_alpha {
-            self.injected_alpha = true;
-            self.finish_alpha(vec![1.0 / self.h_n as f32; c], ctx);
-            injected = true;
+        let n_g = n_groups(c);
+        let mut active = false;
+        if self.k == 0 {
+            while self.injected_alpha < n_g
+                && ctx.step >= inject_at(self.injected_alpha, self.stagger)
+            {
+                let g = self.injected_alpha;
+                self.injected_alpha += 1;
+                self.finish_alpha(g, vec![1.0 / self.h_n as f32; group_width(g, c)], ctx);
+                active = true;
+            }
+            active |= self.injected_alpha < n_g;
         }
-        if self.k == self.k_n - 1 && !self.injected_beta {
-            self.injected_beta = true;
-            self.finish_beta(vec![1.0; c], ctx);
-            injected = true;
+        if self.k == self.k_n - 1 {
+            while self.injected_beta < n_g
+                && ctx.step >= inject_at(self.injected_beta, self.stagger)
+            {
+                let g = self.injected_beta;
+                self.injected_beta += 1;
+                self.finish_beta(g, vec![1.0; group_width(g, c)], ctx);
+                active = true;
+            }
+            active |= self.injected_beta < n_g;
         }
-        injected
+        active
     }
 
     fn lanes(msg: &InterpMsg) -> u32 {
@@ -551,6 +604,7 @@ mod tests {
             0.2,
             1e-4,
             n_targets,
+            1,
             obs,
         )
     }
@@ -562,13 +616,23 @@ mod tests {
     }
 
     #[test]
-    fn injection_sends_chunked_waves() {
+    fn injection_staggers_one_group_per_superstep() {
         let mut v = mk(0, 0, LANES as u32 + 3);
         let mut ctx = Ctx::new(0, 0);
         assert!(v.step(&mut ctx));
         let sends = ctx.take_sends();
-        assert_eq!(sends.len(), 2, "LANES+3 α lanes chunk into two events");
-        assert!(matches!(sends[0], (PORT_FWD, InterpMsg::AlphaVec { base: 0, .. })));
+        assert_eq!(sends.len(), 1, "step 0 injects group 0 only");
+        assert!(matches!(sends[0], (PORT_FWD, InterpMsg::AlphaVec { base: 0, n, .. }) if n == LANES as u32));
+        let mut ctx = Ctx::new(0, 1);
+        assert!(v.step(&mut ctx));
+        let sends = ctx.take_sends();
+        assert_eq!(sends.len(), 1, "step 1 injects group 1");
+        assert!(
+            matches!(sends[0], (PORT_FWD, InterpMsg::AlphaVec { base, n, .. }) if base == LANES as u32 && n == 3)
+        );
+        let mut ctx = Ctx::new(0, 2);
+        assert!(!v.step(&mut ctx), "all groups injected — go quiescent");
+        assert!(ctx.take_sends().is_empty());
     }
 
     #[test]

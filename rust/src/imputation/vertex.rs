@@ -8,31 +8,37 @@
 //!   (the "final haplotype" vertex, h = H−1), which tallies allele-labelled
 //!   posterior mass and makes the major/minor call.
 //!
-//! # Wave batching
+//! # Wave batching + pipelined lane groups
 //!
-//! All targets of one engine run form a single **lane group**: column 0
-//! injects every target's α (and column M−1 every β) in one wave, carried as
-//! SoA events of up to [`LANES`](super::msg::LANES) targets each (wider
-//! groups are chunked — see `imputation::msg`).  One `recv` handler services
-//! a whole chunk, so per-event overhead is amortised over the lane width:
-//! per-target event counts drop by ~the lane width relative to the
-//! per-target plane the paper describes (which is exactly lane width 1).
+//! The targets of one engine run are split into contiguous **lane groups**
+//! of at most [`LANES`](super::msg::LANES) targets each (the SoA event
+//! budget — see `imputation::msg` and `imputation::wave`).  Column 0
+//! injects group *g*'s α (and column M−1 its β) as one chunk event at
+//! superstep `g·stagger`, so successive groups *pipeline* through the
+//! panel inside a single run: while group 0's wavefront crosses column
+//! *k*, group 1 is crossing column *k−stagger*, and so on.  One `recv`
+//! handler services a whole group chunk, so per-target event counts drop
+//! by ~the lane width relative to the per-target plane the paper describes
+//! (which is exactly lane width 1), and the staggered injections keep
+//! every column busy instead of idling between sequential group runs.
 //!
 //! # Canonical reduce ⇒ batch-width invariance
 //!
-//! Arrivals are buffered per **sender haplotype** (`WaveBuf`) and reduced
-//! in ascending sender order once the wave is complete.  The f32 sum order
-//! is therefore a property of the model, not of event timing: dosages are
-//! bit-identical for every batch width and every host thread count (enforced
-//! by `tests/parallel_equivalence.rs`), which is what lets the serve layer
-//! merge coalesced requests' targets into one wave and still answer each
-//! request exactly as a solo run would.
+//! Arrivals are buffered per **(lane group, sender haplotype)**
+//! (`GroupWaves`) and each group is reduced in ascending sender order once
+//! its slab completes.  The f32 sum order is therefore a property of the
+//! model, not of event timing or of which groups happen to be in flight:
+//! dosages are bit-identical for every batch width and every host thread
+//! count (enforced by `tests/parallel_equivalence.rs`), which is what lets
+//! the serve layer merge coalesced requests' targets into one wave and
+//! still answer each request exactly as a solo run would.
 //!
-//! Cost: a wave in flight holds O(H · width) f32 at the vertices it is
-//! currently crossing (`WaveBuf` allocates on first arrival and frees on
-//! completion — idle columns hold nothing).  On panels where even that
-//! bites, bound the width with `ImputeSession::batch` — numerics are width
-//! invariant, so splitting has no accuracy consequences.
+//! Cost: a group in flight holds O(H · group width) f32 at the vertices
+//! its wavefront is currently crossing (each group's `WaveBuf` allocates
+//! on first arrival and frees on completion — idle columns and drained
+//! groups hold nothing).  On panels where even that bites, bound the batch
+//! with `ImputeSession::batch` — numerics are width invariant, so
+//! splitting has no accuracy consequences.
 
 // Canonical-order reductions index several parallel slabs by lane/sender —
 // explicit index loops keep the summation order visibly fixed.
@@ -44,7 +50,9 @@ use crate::graph::device::{Ctx, Device, PortId, VertexId};
 
 use super::msg::{RawMsg, for_each_chunk};
 use super::obs::ObsMatrix;
-use super::wave::{WaveBuf, reduce_hit_tot, reduce_same_diff};
+use super::wave::{
+    GroupWaves, group_start, group_width, inject_at, n_groups, reduce_hit_tot, reduce_same_diff,
+};
 
 pub const PORT_FWD: PortId = 0;
 pub const PORT_BWD: PortId = 1;
@@ -68,23 +76,26 @@ pub struct RawVertex {
     a_diff_next: f32,
     err: f32,
     n_targets: u32,
+    /// Supersteps between successive lane-group injections at the edges.
+    stagger: u64,
     obs: Arc<ObsMatrix>,
 
-    // In-flight waves, keyed by sender haplotype (canonical reduce).
-    alpha_wave: WaveBuf,
-    beta_wave: WaveBuf,
-    // Completed α/β slabs awaiting their partner wave.
-    alpha: Vec<f32>,
-    alpha_done: bool,
-    beta: Vec<f32>,
-    beta_done: bool,
-    posterior_done: bool,
-    // Injection bookkeeping (edge columns).
-    injected_alpha: bool,
-    injected_beta: bool,
+    // In-flight waves, keyed by (lane group, sender haplotype).
+    alpha_wave: GroupWaves,
+    beta_wave: GroupWaves,
+    // Completed per-group α/β slabs awaiting their partner wave.
+    alpha: Vec<Vec<f32>>,
+    alpha_done: Vec<bool>,
+    beta: Vec<Vec<f32>>,
+    beta_done: Vec<bool>,
+    posterior_done: Vec<bool>,
+    // Injection bookkeeping (edge columns): next group to inject.
+    injected_alpha: usize,
+    injected_beta: usize,
     // Accumulator role (h == H−1 only): posterior contributions keyed by
-    // sender haplotype, plus each sender's allele label.
-    post_wave: WaveBuf,
+    // (group, sender haplotype), plus each sender's allele label (static
+    // per sender, shared across groups).
+    post_wave: GroupWaves,
     post_allele1: Vec<bool>,
     /// Finished dosages (target-indexed), accumulator vertices only.
     pub dosage: Vec<f32>,
@@ -102,10 +113,12 @@ impl RawVertex {
         tau_next: f64,
         err: f64,
         n_targets: u32,
+        stagger: u64,
         obs: Arc<ObsMatrix>,
     ) -> RawVertex {
         let hn = h_n as f64;
         let is_acc = h == h_n - 1;
+        let n_g = n_groups(n_targets as usize);
         RawVertex {
             h,
             m,
@@ -118,17 +131,18 @@ impl RawVertex {
             a_diff_next: (tau_next / hn) as f32,
             err: err as f32,
             n_targets,
+            stagger,
             obs,
-            alpha_wave: WaveBuf::new(),
-            beta_wave: WaveBuf::new(),
-            alpha: Vec::new(),
-            alpha_done: false,
-            beta: Vec::new(),
-            beta_done: false,
-            posterior_done: false,
-            injected_alpha: false,
-            injected_beta: false,
-            post_wave: WaveBuf::new(),
+            alpha_wave: GroupWaves::new(),
+            beta_wave: GroupWaves::new(),
+            alpha: vec![Vec::new(); n_g],
+            alpha_done: vec![false; n_g],
+            beta: vec![Vec::new(); n_g],
+            beta_done: vec![false; n_g],
+            posterior_done: vec![false; n_g],
+            injected_alpha: 0,
+            injected_beta: 0,
+            post_wave: GroupWaves::new(),
             post_allele1: if is_acc { vec![false; h_n as usize] } else { Vec::new() },
             dosage: if is_acc {
                 vec![f32::NAN; n_targets as usize]
@@ -156,102 +170,108 @@ impl RawVertex {
         }
     }
 
-    /// Store one α chunk; reduce and propagate once the wave is complete.
+    /// Store one α chunk; reduce and propagate once its group is complete.
     fn take_alpha(&mut self, base: usize, vals: &[f32], src: VertexId, ctx: &mut Ctx<RawMsg>) {
         let c = self.n_targets as usize;
         let src_h = (src % self.h_n) as usize;
-        if self.alpha_wave.store(self.h_n as usize, c, src_h, base, vals, "α") {
-            let buf = self.alpha_wave.take();
+        if let Some(g) = self.alpha_wave.store(self.h_n as usize, c, src_h, base, vals, "α") {
+            let buf = self.alpha_wave.take(g);
+            let w = group_width(g, c);
             // Canonical reduce (wave::reduce_same_diff): Σ_h a_ij·α_h in
             // ascending sender order, then the emission — identical
-            // arithmetic for every batch width.
+            // arithmetic for every batch width and group schedule.
             let mut alpha =
-                reduce_same_diff(&buf, self.h_n as usize, c, self.h as usize, self.a_same, self.a_diff);
+                reduce_same_diff(&buf, self.h_n as usize, w, self.h as usize, self.a_same, self.a_diff);
             for (t, a) in alpha.iter_mut().enumerate() {
                 ctx.flop(2 * self.h_n as u64);
-                *a *= self.emission(t as u32);
+                *a *= self.emission((group_start(g) + t) as u32);
                 ctx.flop(1);
             }
-            self.finish_alpha(alpha, ctx);
+            self.finish_alpha(g, alpha, ctx);
         }
     }
 
-    /// Store one β chunk; reduce and propagate once the wave is complete.
+    /// Store one β chunk; reduce and propagate once its group is complete.
     fn take_beta(&mut self, base: usize, vals: &[f32], src: VertexId, ctx: &mut Ctx<RawMsg>) {
         let c = self.n_targets as usize;
         let src_h = (src % self.h_n) as usize;
-        if self.beta_wave.store(self.h_n as usize, c, src_h, base, vals, "β") {
-            let buf = self.beta_wave.take();
+        if let Some(g) = self.beta_wave.store(self.h_n as usize, c, src_h, base, vals, "β") {
+            let buf = self.beta_wave.take(g);
+            let w = group_width(g, c);
             let beta = reduce_same_diff(
                 &buf,
                 self.h_n as usize,
-                c,
+                w,
                 self.h as usize,
                 self.a_same_next,
                 self.a_diff_next,
             );
-            ctx.flop(2 * self.h_n as u64 * c as u64);
-            self.finish_beta(beta, ctx);
+            ctx.flop(2 * self.h_n as u64 * w as u64);
+            self.finish_beta(g, beta, ctx);
         }
     }
 
-    /// α complete for the whole lane group → forward the wave, try to pair.
-    fn finish_alpha(&mut self, alpha: Vec<f32>, ctx: &mut Ctx<RawMsg>) {
+    /// Group `g`'s α complete → forward its chunk, try to pair.
+    fn finish_alpha(&mut self, g: usize, alpha: Vec<f32>, ctx: &mut Ctx<RawMsg>) {
         if self.m + 1 < self.m_n {
+            let start = group_start(g) as u32;
             for_each_chunk(&alpha, |base, n, vals| {
-                ctx.send(PORT_FWD, RawMsg::AlphaVec { base, n, vals });
+                ctx.send(PORT_FWD, RawMsg::AlphaVec { base: base + start, n, vals });
             });
         }
-        self.alpha = alpha;
-        self.alpha_done = true;
-        self.try_posterior(ctx);
+        self.alpha[g] = alpha;
+        self.alpha_done[g] = true;
+        self.try_posterior(g, ctx);
     }
 
-    /// β complete → forward β·b backward (emission folded in), try to pair.
-    fn finish_beta(&mut self, beta: Vec<f32>, ctx: &mut Ctx<RawMsg>) {
+    /// Group `g`'s β complete → forward β·b backward (emission folded in),
+    /// try to pair.
+    fn finish_beta(&mut self, g: usize, beta: Vec<f32>, ctx: &mut Ctx<RawMsg>) {
         if self.m > 0 {
+            let start = group_start(g);
             let folded: Vec<f32> = beta
                 .iter()
                 .enumerate()
                 .map(|(t, &b)| {
                     ctx.flop(1);
-                    b * self.emission(t as u32)
+                    b * self.emission((start + t) as u32)
                 })
                 .collect();
             for_each_chunk(&folded, |base, n, vals| {
-                ctx.send(PORT_BWD, RawMsg::BetaVec { base, n, vals });
+                ctx.send(PORT_BWD, RawMsg::BetaVec { base: base + start as u32, n, vals });
             });
         }
-        self.beta = beta;
-        self.beta_done = true;
-        self.try_posterior(ctx);
+        self.beta[g] = beta;
+        self.beta_done[g] = true;
+        self.try_posterior(g, ctx);
     }
 
-    /// Both waves in → posteriors for every lane → unicast / local tally
-    /// (Algorithm 1 lines 9–11 / 18–20, all targets at once).
-    fn try_posterior(&mut self, ctx: &mut Ctx<RawMsg>) {
-        if self.posterior_done || !self.alpha_done || !self.beta_done {
+    /// Both of group `g`'s waves in → posteriors for its lanes → unicast /
+    /// local tally (Algorithm 1 lines 9–11 / 18–20, the whole group at once).
+    fn try_posterior(&mut self, g: usize, ctx: &mut Ctx<RawMsg>) {
+        if self.posterior_done[g] || !self.alpha_done[g] || !self.beta_done[g] {
             return;
         }
-        self.posterior_done = true;
-        let c = self.n_targets as usize;
-        let mut post = vec![0.0f32; c];
-        for t in 0..c {
-            post[t] = self.alpha[t] * self.beta[t];
+        self.posterior_done[g] = true;
+        let w = group_width(g, self.n_targets as usize);
+        let mut post = vec![0.0f32; w];
+        for t in 0..w {
+            post[t] = self.alpha[g][t] * self.beta[g][t];
             ctx.flop(1);
         }
-        self.alpha = Vec::new();
-        self.beta = Vec::new();
+        self.alpha[g] = Vec::new();
+        self.beta[g] = Vec::new();
         let allele1 = self.allele == 1;
+        let start = group_start(g) as u32;
         if self.is_accumulator() {
             let h = self.h;
-            self.take_posts(h, allele1, 0, &post, ctx);
+            self.take_posts(h, allele1, start as usize, &post, ctx);
         } else {
             for_each_chunk(&post, |base, n, vals| {
                 ctx.send(
                     PORT_DOWN,
                     RawMsg::PostVec {
-                        base,
+                        base: base + start,
                         n,
                         allele1,
                         vals,
@@ -261,21 +281,24 @@ impl RawVertex {
         }
     }
 
-    /// Accumulate one sender's posterior lanes (line 23–25); finish dosages
-    /// once every sender haplotype has contributed every lane.
+    /// Accumulate one sender's posterior lanes (line 23–25); finish a
+    /// group's dosages once every sender haplotype has contributed every
+    /// lane of that group.
     fn take_posts(&mut self, src_h: u32, allele1: bool, base: usize, vals: &[f32], ctx: &mut Ctx<RawMsg>) {
         debug_assert!(self.is_accumulator());
         let c = self.n_targets as usize;
         self.post_allele1[src_h as usize] = allele1;
         ctx.flop(2 * vals.len() as u64);
-        if self
+        if let Some(g) = self
             .post_wave
             .store(self.h_n as usize, c, src_h as usize, base, vals, "posterior")
         {
-            let buf = self.post_wave.take();
-            let sums = reduce_hit_tot(&buf, self.h_n as usize, c, &self.post_allele1);
+            let buf = self.post_wave.take(g);
+            let w = group_width(g, c);
+            let sums = reduce_hit_tot(&buf, self.h_n as usize, w, &self.post_allele1);
+            let start = group_start(g);
             for (t, &(hit, tot)) in sums.iter().enumerate() {
-                self.dosage[t] = if tot > 0.0 { hit / tot } else { 0.0 };
+                self.dosage[start + t] = if tot > 0.0 { hit / tot } else { 0.0 };
                 ctx.flop(1);
             }
         }
@@ -311,23 +334,38 @@ impl Device for RawVertex {
     }
 
     fn step(&mut self, ctx: &mut Ctx<RawMsg>) -> bool {
-        // Algorithm 1 lines 26–28, wave-batched: the edge columns inject the
-        // whole lane group's α/β in one wave at the first step.
+        // Algorithm 1 lines 26–28, pipelined: edge columns inject lane
+        // group g's α/β wave once the superstep reaches g·stagger, so
+        // successive groups enter the panel while their predecessors are
+        // still sweeping it.  Vote to continue while groups remain
+        // uninjected — liveness must not depend on in-flight traffic.
         let c = self.n_targets as usize;
-        let mut injected = false;
-        if self.m == 0 && !self.injected_alpha {
-            self.injected_alpha = true;
-            // Uniform prior, no emission at the run's first marker (matches
-            // the per-target plane and the windowing docs in genomics).
-            self.finish_alpha(vec![1.0 / self.h_n as f32; c], ctx);
-            injected = true;
+        let n_g = n_groups(c);
+        let mut active = false;
+        if self.m == 0 {
+            while self.injected_alpha < n_g && ctx.step >= inject_at(self.injected_alpha, self.stagger)
+            {
+                let g = self.injected_alpha;
+                self.injected_alpha += 1;
+                // Uniform prior, no emission at the run's first marker
+                // (matches the per-target plane and the windowing docs in
+                // genomics).
+                self.finish_alpha(g, vec![1.0 / self.h_n as f32; group_width(g, c)], ctx);
+                active = true;
+            }
+            active |= self.injected_alpha < n_g;
         }
-        if self.m == self.m_n - 1 && !self.injected_beta {
-            self.injected_beta = true;
-            self.finish_beta(vec![1.0; c], ctx);
-            injected = true;
+        if self.m == self.m_n - 1 {
+            while self.injected_beta < n_g && ctx.step >= inject_at(self.injected_beta, self.stagger)
+            {
+                let g = self.injected_beta;
+                self.injected_beta += 1;
+                self.finish_beta(g, vec![1.0; group_width(g, c)], ctx);
+                active = true;
+            }
+            active |= self.injected_beta < n_g;
         }
-        injected
+        active
     }
 
     fn lanes(msg: &RawMsg) -> u32 {
@@ -343,7 +381,7 @@ mod tests {
 
     fn mk(h: u32, m: u32) -> RawVertex {
         let obs = ObsMatrix::from_targets(&[TargetHaplotype::new(vec![1, -1, 0])]);
-        RawVertex::new(h, m, 2, 3, 1, 0.1, 0.2, 1e-4, 1, obs)
+        RawVertex::new(h, m, 2, 3, 1, 0.1, 0.2, 1e-4, 1, 1, obs)
     }
 
     #[test]
@@ -385,23 +423,47 @@ mod tests {
     }
 
     #[test]
-    fn wide_groups_are_chunked_to_the_event_budget() {
+    fn wide_batches_pipeline_one_group_per_stagger() {
+        // LANES+3 targets -> two lane groups injected at supersteps 0 and
+        // stagger (= 1): one chunk event each, addressed by global base.
         let targets: Vec<TargetHaplotype> =
             (0..LANES + 3).map(|_| TargetHaplotype::new(vec![1, -1, 0])).collect();
         let obs = ObsMatrix::from_targets(&targets);
-        let mut v = RawVertex::new(0, 0, 2, 3, 1, 0.1, 0.2, 1e-4, (LANES + 3) as u32, obs);
+        let mut v = RawVertex::new(0, 0, 2, 3, 1, 0.1, 0.2, 1e-4, (LANES + 3) as u32, 1, obs);
         let mut ctx = Ctx::new(0, 0);
-        assert!(v.step(&mut ctx));
+        assert!(v.step(&mut ctx), "group 1 still pending -> keep running");
         let sends = ctx.take_sends();
-        assert_eq!(sends.len(), 2, "LANES+3 lanes need two chunk events");
+        assert_eq!(sends.len(), 1, "superstep 0 injects group 0 only");
         assert!(matches!(
             sends[0],
             (PORT_FWD, RawMsg::AlphaVec { base: 0, n, .. }) if n as usize == LANES
         ));
+        let mut ctx = Ctx::new(0, 1);
+        assert!(v.step(&mut ctx), "superstep 1 injects group 1");
+        let sends = ctx.take_sends();
+        assert_eq!(sends.len(), 1);
         assert!(matches!(
-            sends[1],
+            sends[0],
             (PORT_FWD, RawMsg::AlphaVec { base, n, .. }) if base as usize == LANES && n == 3
         ));
+        let mut ctx = Ctx::new(0, 2);
+        assert!(!v.step(&mut ctx), "every group injected exactly once");
+        assert!(ctx.take_sends().is_empty());
+    }
+
+    #[test]
+    fn stagger_zero_injects_every_group_at_once() {
+        // stagger = 0 degenerates to PR 5's single-superstep injection:
+        // both chunks leave at superstep 0.
+        let targets: Vec<TargetHaplotype> =
+            (0..LANES + 3).map(|_| TargetHaplotype::new(vec![1, -1, 0])).collect();
+        let obs = ObsMatrix::from_targets(&targets);
+        let mut v = RawVertex::new(0, 0, 2, 3, 1, 0.1, 0.2, 1e-4, (LANES + 3) as u32, 0, obs);
+        let mut ctx = Ctx::new(0, 0);
+        assert!(v.step(&mut ctx));
+        assert_eq!(ctx.take_sends().len(), 2);
+        assert!(!v.step(&mut ctx));
+        assert!(ctx.take_sends().is_empty());
     }
 
     #[test]

@@ -1,13 +1,60 @@
 //! Arrival buffering for SoA waves — the one place chunk storage, lane
 //! counting, range/duplicate assertions and completion detection live.
 //!
-//! Both event planes buffer a wave's contributions keyed by sender row
-//! (haplotype) and reduce in canonical row order once complete (see
-//! `imputation::vertex` module docs for the bit-invariance argument).  The
-//! slab is allocated **lazily on the first arrival** and released by
-//! [`WaveBuf::take`], so only the vertices a wavefront is currently
-//! crossing hold O(rows × lanes) memory — idle columns hold none, which is
-//! what keeps whole-graph memory flat however wide the lane group is.
+//! Both event planes buffer a wave's contributions keyed by **(lane group,
+//! sender row)** and reduce in canonical row order once a group completes
+//! (see `imputation::vertex` module docs for the bit-invariance argument).
+//! A batch wider than [`LANES`] is split into contiguous lane groups of at
+//! most `LANES` targets; group *g* covers the global lane range
+//! `[g·LANES, min((g+1)·LANES, n_targets))` and is injected at the edge
+//! columns `stagger` supersteps after group *g−1*, so several groups
+//! pipeline through one engine run with each column servicing at most one
+//! chunk per group per sweep — exactly the event/copy/lane counts of
+//! running the groups sequentially, at a fraction of the supersteps.
+//!
+//! Every chunk on the wire is addressed by its **global** lane base; the
+//! receiver derives `(group, local base)` via [`GroupWaves::store`], which
+//! keeps the per-group [`WaveBuf`] discipline of PR 5: each group's slab is
+//! allocated **lazily on the first arrival** and released by `take` when
+//! the group's reduce fires, so only the groups whose wavefront is
+//! currently crossing a vertex hold O(rows × group width) memory — idle
+//! columns (and drained groups) hold none, which is what keeps whole-graph
+//! memory flat however many groups are in flight.
+//!
+//! Because each group reduces independently over the same sender rows and
+//! the same coefficients as a sequential `batch = LANES` run of that group,
+//! the pipelined dosages are bit-identical to the sequential-groups result
+//! at every batch width and host thread count.
+//!
+//! [`LANES`]: super::msg::LANES
+
+use super::msg::LANES;
+
+/// Number of lane groups a batch of `n_targets` splits into.
+pub(crate) fn n_groups(n_targets: usize) -> usize {
+    n_targets.div_ceil(LANES)
+}
+
+/// First global lane of group `g`.
+pub(crate) fn group_start(g: usize) -> usize {
+    g * LANES
+}
+
+/// Lane count of group `g` within a batch of `n_targets` (the last group
+/// may be narrower than `LANES`).
+pub(crate) fn group_width(g: usize, n_targets: usize) -> usize {
+    n_targets.min(group_start(g) + LANES) - group_start(g)
+}
+
+/// Which group a global lane index belongs to.
+pub(crate) fn group_of(global_lane: usize) -> usize {
+    global_lane / LANES
+}
+
+/// Superstep at which group `g` is injected at the edge columns.
+pub(crate) fn inject_at(g: usize, stagger: u64) -> u64 {
+    g as u64 * stagger
+}
 
 /// One in-flight wave: a `rows × width` f32 slab filled by chunk arrivals.
 pub(crate) struct WaveBuf {
@@ -63,6 +110,61 @@ impl WaveBuf {
         self.done = true;
         self.lanes = 0;
         std::mem::take(&mut self.buf)
+    }
+}
+
+/// A family of in-flight waves keyed by lane group: one lazily-allocated
+/// [`WaveBuf`] per group, each `rows × group_width(g)`.  Chunks arrive
+/// addressed by their *global* lane base (senders offset
+/// `msg::for_each_chunk` bases by the group start); `store` routes each to
+/// its group slab and reports which group, if any, just completed.  The
+/// group vector itself is allocated on the first arrival, so idle vertices
+/// hold no per-group state at all.
+pub(crate) struct GroupWaves {
+    waves: Vec<WaveBuf>,
+}
+
+impl GroupWaves {
+    pub fn new() -> GroupWaves {
+        GroupWaves { waves: Vec::new() }
+    }
+
+    /// Store one chunk at `(row, global_base..global_base+vals.len())` of
+    /// the batch-wide lane space; returns `Some(group)` when that group's
+    /// slab completes.  Chunks never straddle a group boundary (each group
+    /// is at most one chunk wide), and the per-group [`WaveBuf`] keeps the
+    /// duplicate/range panics of the single-group plane.
+    pub fn store(
+        &mut self,
+        rows: usize,
+        n_targets: usize,
+        row: usize,
+        global_base: usize,
+        vals: &[f32],
+        what: &str,
+    ) -> Option<usize> {
+        let g = group_of(global_base);
+        assert!(
+            g < n_groups(n_targets),
+            "{what} lane range [{global_base}, {}) out of 0..{n_targets}",
+            global_base + vals.len()
+        );
+        if self.waves.is_empty() {
+            let n = n_groups(n_targets);
+            self.waves = (0..n).map(|_| WaveBuf::new()).collect();
+        }
+        let local = global_base - group_start(g);
+        let width = group_width(g, n_targets);
+        if self.waves[g].store(rows, width, row, local, vals, what) {
+            Some(g)
+        } else {
+            None
+        }
+    }
+
+    /// Hand out group `g`'s completed slab and release its buffer.
+    pub fn take(&mut self, g: usize) -> Vec<f32> {
+        self.waves[g].take()
     }
 }
 
@@ -177,5 +279,56 @@ mod tests {
         let buf = [1.0, 10.0, 100.0, 1000.0];
         let out = reduce_hit_tot(&buf, 2, 2, &[true, false]);
         assert_eq!(out, vec![(1.0, 101.0), (10.0, 1010.0)]);
+    }
+
+    #[test]
+    fn group_geometry_covers_the_batch_exactly() {
+        // LANES+3 targets -> two groups: [0, LANES) and [LANES, LANES+3).
+        let t = LANES + 3;
+        assert_eq!(n_groups(t), 2);
+        assert_eq!(group_width(0, t), LANES);
+        assert_eq!(group_width(1, t), 3);
+        assert_eq!(group_start(1), LANES);
+        assert_eq!(group_of(LANES - 1), 0);
+        assert_eq!(group_of(LANES), 1);
+        assert_eq!((0..n_groups(t)).map(|g| group_width(g, t)).sum::<usize>(), t);
+        // One full group stays a single-group batch.
+        assert_eq!(n_groups(LANES), 1);
+        assert_eq!(n_groups(1), 1);
+        // Staggered injection schedule.
+        assert_eq!(inject_at(0, 1), 0);
+        assert_eq!(inject_at(3, 2), 6);
+    }
+
+    #[test]
+    fn group_waves_complete_per_group_and_free_slabs() {
+        // 2 rows, LANES+2 targets: group 0 is LANES wide, group 1 is 2 wide.
+        let t = LANES + 2;
+        let mut gw = GroupWaves::new();
+        let full = vec![1.0f32; LANES];
+        // Group 1 can complete while group 0 has seen nothing.
+        assert_eq!(gw.store(2, t, 0, LANES, &[5.0, 6.0], "t"), None);
+        assert_eq!(gw.store(2, t, 1, LANES, &[7.0, 8.0], "t"), Some(1));
+        assert_eq!(gw.take(1), vec![5.0, 6.0, 7.0, 8.0]);
+        // Group 0 then fills independently.
+        assert_eq!(gw.store(2, t, 0, 0, &full, "t"), None);
+        assert_eq!(gw.store(2, t, 1, 0, &full, "t"), Some(0));
+        assert_eq!(gw.take(0).len(), 2 * LANES);
+    }
+
+    #[test]
+    #[should_panic(expected = "lane range")]
+    fn group_waves_reject_lanes_past_the_batch() {
+        let mut gw = GroupWaves::new();
+        gw.store(1, 1, 0, LANES + 1, &[1.0], "t");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate t wave")]
+    fn group_waves_keep_per_group_duplicate_detection() {
+        let mut gw = GroupWaves::new();
+        assert_eq!(gw.store(1, 1, 0, 0, &[1.0], "t"), Some(0));
+        gw.take(0);
+        gw.store(1, 1, 0, 0, &[2.0], "t");
     }
 }

@@ -47,6 +47,17 @@
 //!   payload carries — that amortisation is the point of batching, and the
 //!   simulator reports it as `SimMetrics::lanes_delivered` next to
 //!   `copies_delivered`;
+//! * **pipelined lane groups**: an application may keep several lane groups
+//!   in flight at once by injecting group *g* at superstep `g·stagger`
+//!   instead of waiting for group *g−1* to finish (the wave-batched
+//!   imputation planes do exactly this for batches wider than one group).
+//!   The simulator needs no new mechanism for it — each group's chunks are
+//!   ordinary arena payloads, and the per-group canonical reductions live in
+//!   the vertices — but it *observes* the resulting occupancy:
+//!   `SimMetrics::busy_tile_steps` integrates, per superstep, how many tiles
+//!   delivered at least one event, and `SimMetrics::max_busy_tiles` records
+//!   the peak, both counted in the deterministic serial shard reduce so they
+//!   are thread-count invariant like every other counter;
 //! * the only cross-tile values are the quiesce time (a `max`-reduce,
 //!   exact over `u64`) and the halt vote (an `and`-reduce), so a run is
 //!   **bit-identical for every thread count** — `SimConfig::threads`
@@ -130,6 +141,9 @@ struct TileShard<D: Device> {
     latest: u64,
     /// Whether any resident device voted to continue this superstep.
     voted_continue: bool,
+    /// Whether this tile delivered at least one event this superstep
+    /// (occupancy probe; read + reset in the serial shard reduce).
+    delivered: bool,
     // Per-shard event counters, folded into `SimMetrics` at run end.
     copies_delivered: u64,
     lanes_delivered: u64,
@@ -186,6 +200,7 @@ impl<D: Device> TileShard<D> {
     #[allow(clippy::needless_range_loop)] // index loop: `self` split-borrows
     fn deliver_phase(&mut self, step: u64, env: &Env<'_, D::Msg>) {
         self.queue.sort_unstable(); // ascending (t, seq)
+        self.delivered = !self.queue.is_empty();
         let mut latest = 0u64;
         for qi in 0..self.queue.len() {
             let ev = self.queue[qi];
@@ -393,6 +408,7 @@ impl<D: Device> Simulator<D> {
                 ctx: Ctx::new(0, 0),
                 latest: 0,
                 voted_continue: false,
+                delivered: false,
                 copies_delivered: 0,
                 lanes_delivered: 0,
                 recv_handlers: 0,
@@ -511,10 +527,15 @@ impl<D: Device> Simulator<D> {
             // Reduce shard outputs: halt votes and next superstep's sends
             // (deterministic tile order).
             let mut all_halt = true;
+            let mut busy_tiles = 0u64;
             for s in &mut self.shards {
                 all_halt &= !s.voted_continue;
+                busy_tiles += s.delivered as u64;
+                s.delivered = false;
                 self.pending.extend(s.out.drain(..));
             }
+            self.metrics.busy_tile_steps += busy_tiles;
+            self.metrics.max_busy_tiles = self.metrics.max_busy_tiles.max(busy_tiles);
             self.metrics.step_handlers += n_vertices;
             if record_steps {
                 self.metrics.step_durations.push(now - record_from);
@@ -723,6 +744,9 @@ mod tests {
         // Scalar messages: one lane per copy (the Device::lanes default).
         assert_eq!(sim.metrics.lanes_delivered, 24);
         assert!(sim.metrics.sim_cycles > 0);
+        // Occupancy probe: the token visits one tile per superstep.
+        assert!(sim.metrics.busy_tile_steps >= 24);
+        assert!(sim.metrics.max_busy_tiles >= 1);
     }
 
     #[test]
@@ -763,6 +787,11 @@ mod tests {
             serial.metrics.step_durations,
             parallel.metrics.step_durations
         );
+        assert_eq!(
+            serial.metrics.busy_tile_steps,
+            parallel.metrics.busy_tile_steps
+        );
+        assert_eq!(serial.metrics.max_busy_tiles, parallel.metrics.max_busy_tiles);
     }
 
     #[test]

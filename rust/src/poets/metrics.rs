@@ -29,6 +29,15 @@ pub struct SimMetrics {
     pub max_core_busy: u64,
     /// Busy cycles of the most-loaded mailbox.
     pub max_mailbox_busy: u64,
+    /// Σ over supersteps of tiles that delivered at least one event that
+    /// superstep — the graph-occupancy integral (`busy_tile_steps / steps`
+    /// is the mean number of busy tiles).
+    pub busy_tile_steps: u64,
+    /// Peak number of tiles delivering events in any single superstep.
+    pub max_busy_tiles: u64,
+    /// Peak number of pipelined lane groups in flight through one engine
+    /// run (1 when the batch fits a single group).
+    pub max_groups_in_flight: u64,
     /// Per-step durations in cycles (recorded when enabled).
     pub step_durations: Vec<u64>,
 }
@@ -87,6 +96,9 @@ impl SimMetrics {
         self.barrier_cycles += other.barrier_cycles;
         self.max_core_busy = self.max_core_busy.max(other.max_core_busy);
         self.max_mailbox_busy = self.max_mailbox_busy.max(other.max_mailbox_busy);
+        self.busy_tile_steps += other.busy_tile_steps;
+        self.max_busy_tiles = self.max_busy_tiles.max(other.max_busy_tiles);
+        self.max_groups_in_flight = self.max_groups_in_flight.max(other.max_groups_in_flight);
         self.step_durations.extend_from_slice(&other.step_durations);
     }
 
@@ -102,7 +114,10 @@ impl SimMetrics {
             .set("sim_cycles", self.sim_cycles)
             .set("barrier_cycles", self.barrier_cycles)
             .set("max_core_busy", self.max_core_busy)
-            .set("max_mailbox_busy", self.max_mailbox_busy);
+            .set("max_mailbox_busy", self.max_mailbox_busy)
+            .set("busy_tile_steps", self.busy_tile_steps)
+            .set("max_busy_tiles", self.max_busy_tiles)
+            .set("max_groups_in_flight", self.max_groups_in_flight);
         j
     }
 }
@@ -150,6 +165,9 @@ mod tests {
             sim_cycles: 100,
             steps: 2,
             max_core_busy: 40,
+            busy_tile_steps: 6,
+            max_busy_tiles: 4,
+            max_groups_in_flight: 1,
             step_durations: vec![60, 40],
             ..Default::default()
         };
@@ -158,6 +176,9 @@ mod tests {
             sim_cycles: 50,
             steps: 1,
             max_core_busy: 45,
+            busy_tile_steps: 3,
+            max_busy_tiles: 3,
+            max_groups_in_flight: 2,
             step_durations: vec![50],
             ..Default::default()
         };
@@ -166,6 +187,9 @@ mod tests {
         assert_eq!(a.sim_cycles, 150);
         assert_eq!(a.steps, 3);
         assert_eq!(a.max_core_busy, 45);
+        assert_eq!(a.busy_tile_steps, 9);
+        assert_eq!(a.max_busy_tiles, 4);
+        assert_eq!(a.max_groups_in_flight, 2);
         assert_eq!(a.step_durations, vec![60, 40, 50]);
         assert_eq!(a.total_step_cycles(), 150);
     }
@@ -174,9 +198,18 @@ mod tests {
     fn json_has_counters() {
         let m = SimMetrics {
             sends: 7,
+            busy_tile_steps: 11,
+            max_busy_tiles: 3,
+            max_groups_in_flight: 2,
             ..Default::default()
         };
         let j = m.to_json();
         assert_eq!(j.get("sends"), Some(&crate::util::json::Json::Int(7)));
+        assert_eq!(j.get("busy_tile_steps"), Some(&crate::util::json::Json::Int(11)));
+        assert_eq!(j.get("max_busy_tiles"), Some(&crate::util::json::Json::Int(3)));
+        assert_eq!(
+            j.get("max_groups_in_flight"),
+            Some(&crate::util::json::Json::Int(2))
+        );
     }
 }

@@ -206,9 +206,28 @@ fn to_json(opts: &BenchServeOpts, rows: &[BenchServeRow]) -> Json {
             .set("batches", r.batches);
         json_rows.push(j);
     }
+    let mut run_config = Json::obj();
+    run_config
+        .set("engine", opts.engine.name())
+        .set("panel", opts.panel.as_str())
+        .set(
+            "workers",
+            Json::Arr(opts.workers.iter().map(|&n| Json::Int(n as i64)).collect()),
+        )
+        .set(
+            "clients",
+            Json::Arr(opts.clients.iter().map(|&n| Json::Int(n as i64)).collect()),
+        )
+        .set("requests_per_client", opts.requests_per_client)
+        .set("targets_per_request", opts.targets_per_request)
+        .set("max_batch_targets", opts.coalesce.max_batch_targets)
+        .set("linger_ms", opts.coalesce.max_linger.as_millis() as u64);
+
     let mut j = Json::obj();
-    j.set("schema", "poets-impute/bench-serve/v1")
-        .set("bench", "serve")
+    // Provenance (schema / git_commit / run_config): a tracked artifact
+    // must name the commit and sweep shape that produced its numbers.
+    crate::util::provenance::stamp(&mut j, "poets-impute/bench-serve/v1", run_config);
+    j.set("bench", "serve")
         .set("engine", opts.engine.name())
         .set("panel", opts.panel.as_str())
         .set("requests_per_client", opts.requests_per_client)
@@ -241,6 +260,14 @@ mod tests {
             json.get("schema").unwrap().as_str(),
             Some("poets-impute/bench-serve/v1")
         );
+        // Provenance stamp: commit + reproducible sweep shape.
+        assert!(json.get("git_commit").unwrap().as_str().is_some());
+        let rc = json.get("run_config").unwrap();
+        assert_eq!(
+            rc.get("panel").unwrap().as_str(),
+            Some("synth:hap=8,mark=21,annot=0.2,seed=5")
+        );
+        assert_eq!(rc.get("requests_per_client").unwrap().as_i64(), Some(3));
         let rows = json.get("rows").unwrap().as_arr().unwrap();
         // workers × clients × {off, on}.
         assert_eq!(rows.len(), 8);

@@ -707,6 +707,7 @@ fn make_report(
             host_seconds,
             sim_seconds,
             metrics,
+            stream: None,
         },
     }
 }

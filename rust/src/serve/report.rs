@@ -116,6 +116,7 @@ mod tests {
                 host_seconds: 0.01,
                 sim_seconds: None,
                 metrics: None,
+                stream: None,
             },
         }
     }

@@ -246,14 +246,17 @@ impl Engine for BaselineEngine {
 /// The event-driven raw plane: one vertex per HMM state on the simulated
 /// POETS cluster.
 ///
-/// `run` consumes the whole [`TargetBatch`] as one **lane group**: every
-/// target in the batch travels the panel in a single SoA wave (chunked to
-/// the 56-byte event budget — see `imputation::msg`), so per-target event
-/// counts fall by ~the batch width relative to the paper's per-target
-/// pipeline.  Per-target numerics are batch-width invariant (canonical
-/// sender-order reduce in `imputation::vertex`), which is what lets the
-/// serve coalescer merge several requests' targets into one wave and still
-/// answer each request bit-identically to a solo run.
+/// `run` consumes the whole [`TargetBatch`] in one engine invocation: the
+/// batch is split into lane groups of at most `LANES` targets, each group
+/// travelling the panel as one SoA wave (chunked to the 56-byte event budget
+/// — see `imputation::msg`), with group *g* injected at the edge columns
+/// `g·stagger` supersteps after its predecessor so successive groups
+/// *pipeline* through the columns instead of running back-to-back engine
+/// invocations.  Per-target numerics are batch-width, group-schedule and
+/// thread-count invariant (canonical per-group sender-order reduce in
+/// `imputation::vertex`), which is what lets the serve coalescer merge
+/// several requests' targets into one batch and still answer each request
+/// bit-identically to a solo run.
 pub struct EventEngine {
     cfg: RawAppConfig,
     mapping: MappingStrategy,
@@ -285,7 +288,7 @@ impl Engine for EventEngine {
             return Err("event engine: empty target batch".into());
         }
         let panel = bound_panel(&self.panel, EngineSpec::Event)?;
-        let graph = build_raw_graph(panel, batch.targets(), &self.cfg.params);
+        let graph = build_raw_graph(panel, batch.targets(), &self.cfg);
         let mapping = self
             .mapping
             .build(&graph, self.cfg.states_per_thread, &self.cfg.cluster);

@@ -42,7 +42,7 @@ pub use engine::{
     BaselineEngine, Engine, EngineOutput, EngineSpec, EventEngine, InterpEngine, XlaEngine,
     build_engine,
 };
-pub use report::{ImputeReport, max_abs_dosage_diff};
+pub use report::{ImputeReport, StreamTelemetry, max_abs_dosage_diff};
 pub use workload::{TargetBatch, Workload};
 
 use crate::graph::mapping::MappingStrategy;
@@ -151,11 +151,13 @@ impl ImputeSession {
 
     /// Targets per engine batch (default: all targets in one batch).
     ///
-    /// On the event planes a batch is exactly one **lane group**: the whole
-    /// batch sweeps the panel as one SoA wave (`imputation::msg`), so this
-    /// knob sets the wave width.  Width 1 reproduces the per-target event
-    /// plane the paper describes; dosages are bit-identical for every width
-    /// (`tests/parallel_equivalence.rs`).
+    /// On the event planes a batch runs as one engine invocation: it is
+    /// split into **lane groups** of at most `LANES` targets, each sweeping
+    /// the panel as one SoA wave (`imputation::msg`), with successive groups
+    /// injected `stagger` supersteps apart so they *pipeline* through the
+    /// columns.  Width 1 reproduces the per-target event plane the paper
+    /// describes; dosages are bit-identical for every width and injection
+    /// schedule (`tests/parallel_equivalence.rs`).
     ///
     /// A size larger than the target count clamps to it; `0` is rejected by
     /// [`ImputeSession::run`] as an error (not a panic — batch sizes often
@@ -241,6 +243,7 @@ impl ImputeSession {
             host_seconds,
             sim_seconds,
             metrics,
+            stream: None,
         })
     }
 }

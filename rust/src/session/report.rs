@@ -19,6 +19,20 @@ use crate::workload::panelgen::PanelConfig;
 
 use super::engine::EngineSpec;
 
+/// Telemetry from a streamed windowed run
+/// ([`crate::genomics::stream::run_streamed`]): how bounded the pipeline's
+/// working set actually stayed.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamTelemetry {
+    /// Peak number of window workloads resident at once (sliced by the
+    /// builder thread but not yet drained through the engine).  The
+    /// rendezvous channel bounds this at 2 — the window in the engine plus
+    /// the one prefetched behind it — whatever the plan length.
+    pub peak_resident_windows: usize,
+    /// Total windows streamed (the plan length).
+    pub windows_streamed: usize,
+}
+
 /// Everything one session run produced.
 #[derive(Clone, Debug)]
 pub struct ImputeReport {
@@ -57,6 +71,10 @@ pub struct ImputeReport {
     pub sim_seconds: Option<f64>,
     /// DES counters accumulated over all batches (event planes only).
     pub metrics: Option<SimMetrics>,
+    /// Streaming telemetry, when the report came from a streamed windowed
+    /// run (absent: all windows were materialised up front or there was no
+    /// windowing at all).
+    pub stream: Option<StreamTelemetry>,
 }
 
 impl ImputeReport {
@@ -112,6 +130,13 @@ impl ImputeReport {
         }
         if let Some(m) = &self.metrics {
             j.set("sim_metrics", m.to_json());
+        }
+        if let Some(s) = &self.stream {
+            let mut stream = Json::obj();
+            stream
+                .set("peak_resident_windows", s.peak_resident_windows)
+                .set("windows_streamed", s.windows_streamed);
+            j.set("stream", stream);
         }
         j
     }
@@ -196,6 +221,7 @@ mod tests {
             host_seconds: 0.1,
             sim_seconds: Some(0.01),
             metrics: Some(SimMetrics::default()),
+            stream: None,
         }
     }
 
@@ -214,9 +240,23 @@ mod tests {
         let run = j.get("run").unwrap();
         assert_eq!(run.get("n_batches"), Some(&Json::Int(1)));
         assert_eq!(run.get("mapping"), Some(&Json::Str("manual-2d".into())));
-        // Optional source/windowing keys are absent unless set.
+        // Optional source/windowing/streaming keys are absent unless set.
         assert!(j.get("workload").unwrap().get("panel").is_none());
         assert!(run.get("windows").is_none());
+        assert!(j.get("stream").is_none());
+    }
+
+    #[test]
+    fn stream_telemetry_serialises_when_present() {
+        let mut r = report();
+        r.stream = Some(StreamTelemetry {
+            peak_resident_windows: 2,
+            windows_streamed: 7,
+        });
+        let j = r.to_json();
+        let s = j.get("stream").expect("stream block");
+        assert_eq!(s.get("peak_resident_windows"), Some(&Json::Int(2)));
+        assert_eq!(s.get("windows_streamed"), Some(&Json::Int(7)));
     }
 
     #[test]

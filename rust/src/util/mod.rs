@@ -7,6 +7,7 @@
 
 pub mod json;
 pub mod prop;
+pub mod provenance;
 pub mod rng;
 pub mod stats;
 pub mod table;

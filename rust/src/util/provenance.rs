@@ -1,0 +1,66 @@
+//! Bench-artifact provenance: stamp archived JSON documents with the code
+//! revision and run configuration that produced them.
+//!
+//! `BENCH_desim.json` and `BENCH_serve.json` are tracked across PRs (CI
+//! uploads them as workflow artifacts), so a number without its commit and
+//! sweep shape is unattributable the moment the next PR lands.  Every
+//! archived bench document therefore carries:
+//!
+//! * `"schema"` — the document's format name/version;
+//! * `"git_commit"` — `git rev-parse HEAD` of the producing tree
+//!   (`"unknown"` when git is unavailable, e.g. a source tarball);
+//! * `"run_config"` — the sweep parameters, so a regression can be
+//!   reproduced from the artifact alone.
+
+use crate::util::json::Json;
+
+/// The producing tree's commit hash, or `"unknown"` outside a git checkout.
+pub fn git_commit() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|out| out.status.success())
+        .and_then(|out| String::from_utf8(out.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Stamp `doc` with the standard provenance triple.
+pub fn stamp(doc: &mut Json, schema: &str, run_config: Json) {
+    doc.set("schema", schema)
+        .set("git_commit", git_commit())
+        .set("run_config", run_config);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn git_commit_is_a_hash_or_unknown() {
+        let c = git_commit();
+        assert!(
+            c == "unknown" || (c.len() == 40 && c.chars().all(|ch| ch.is_ascii_hexdigit())),
+            "unexpected commit string {c:?}"
+        );
+    }
+
+    #[test]
+    fn stamp_sets_the_provenance_triple() {
+        let mut doc = Json::obj();
+        let mut cfg = Json::obj();
+        cfg.set("targets", 64usize);
+        stamp(&mut doc, "poets-impute/bench-test/v1", cfg);
+        assert_eq!(
+            doc.get("schema").unwrap().as_str(),
+            Some("poets-impute/bench-test/v1")
+        );
+        assert!(doc.get("git_commit").unwrap().as_str().is_some());
+        assert_eq!(
+            doc.get("run_config").unwrap().get("targets").unwrap().as_i64(),
+            Some(64)
+        );
+    }
+}

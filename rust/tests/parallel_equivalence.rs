@@ -12,6 +12,8 @@
 //! canonical sender-order reduce in `imputation::vertex` makes the f32 sum
 //! order a property of the model, not of event timing).
 
+use poets_impute::genomics::stream::run_streamed;
+use poets_impute::genomics::window::{WindowPlan, run_windowed_threads};
 use poets_impute::imputation::msg::LANES;
 use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
 use poets_impute::workload::panelgen::PanelConfig;
@@ -204,6 +206,59 @@ fn batched_waves_deliver_fewer_events_per_target() {
         nm.copies_delivered, nm.lanes_delivered,
         "width 1 is the per-target plane: one lane per event"
     );
+}
+
+#[test]
+fn streamed_windows_are_width_and_thread_invariant() {
+    // Satellite: chromosome streaming keeps BOTH axes of the contract.
+    // For every host thread count and batch width the streamed run must be
+    // bit-identical to the materialised windowed runner — same dosage bits
+    // AND same event/step accounting per stitched report.
+    let wl = workload(31, 8, 40, LANES + 9, 0.25);
+    let plan = WindowPlan::new(40, 26, 19).unwrap();
+    assert!(plan.len() > 1, "need a multi-window plan");
+    for &threads in &[1usize, 2, 4] {
+        for &width in &[1usize, LANES - 1, LANES, LANES + 9] {
+            let cfg = move |s: ImputeSession| {
+                s.boards(2).states_per_thread(4).threads(threads).batch(width)
+            };
+            let streamed = run_streamed(&wl, &plan, EngineSpec::Event, cfg).unwrap();
+            let windowed =
+                run_windowed_threads(&wl, &plan, EngineSpec::Event, threads, cfg).unwrap();
+            assert_eq!(
+                fingerprint(&streamed),
+                fingerprint(&windowed),
+                "stream diverged at threads={threads} width={width}"
+            );
+            let t = streamed.stream.expect("streamed runs carry telemetry");
+            assert_eq!(t.windows_streamed, plan.len());
+            assert!(t.peak_resident_windows <= 2, "peak {}", t.peak_resident_windows);
+        }
+    }
+}
+
+#[test]
+fn single_window_stream_reproduces_the_unwindowed_session() {
+    // One window covering the whole axis: streaming must collapse to the
+    // plain session bit for bit (the stitch is the identity).
+    let wl = workload(37, 8, 24, LANES + 3, 0.25);
+    let plan = WindowPlan::new(24, 64, 0).unwrap();
+    assert_eq!(plan.len(), 1);
+    for &threads in &[1usize, 2, 4] {
+        let cfg =
+            move |s: ImputeSession| s.boards(2).states_per_thread(4).threads(threads);
+        let streamed = run_streamed(&wl, &plan, EngineSpec::Event, cfg).unwrap();
+        let plain = cfg(ImputeSession::new(wl.clone()))
+            .engine(EngineSpec::Event)
+            .run()
+            .unwrap();
+        assert_eq!(
+            dosage_bits(&streamed),
+            dosage_bits(&plain),
+            "single-window stream diverged at threads={threads}"
+        );
+        assert_eq!(streamed.stream.unwrap().peak_resident_windows, 1);
+    }
 }
 
 #[test]

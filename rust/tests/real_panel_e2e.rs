@@ -19,6 +19,7 @@
 use std::sync::Arc;
 
 use poets_impute::genomics::packed::PackedPanel;
+use poets_impute::genomics::stream::run_streamed;
 use poets_impute::genomics::vcf;
 use poets_impute::genomics::window::{WindowPlan, run_windowed};
 use poets_impute::serve::{PanelRegistry, RegisteredPanel};
@@ -39,13 +40,11 @@ fn fixture_workload(panel: &RegisteredPanel) -> Workload {
     Workload::from_shared_cases(panel.panel_arc(), cases).unwrap()
 }
 
-fn configure(
-    spec: EngineSpec,
-    threads: usize,
-) -> impl Fn(ImputeSession) -> ImputeSession {
-    move |s: ImputeSession| {
-        s.engine(spec).boards(1).states_per_thread(8).threads(threads)
-    }
+/// The per-window session knobs; the engine is passed to the runners
+/// explicitly (they apply it after this closure, so the spec is
+/// authoritative — see `genomics::window`).
+fn configure(threads: usize) -> impl Fn(ImputeSession) -> ImputeSession {
+    move |s: ImputeSession| s.boards(1).states_per_thread(8).threads(threads)
 }
 
 #[test]
@@ -112,14 +111,16 @@ fn windowed_real_dosages_match_across_engines_and_the_full_run() {
         vec![(0, 30), (10, 40)]
     );
 
-    let full_base = configure(EngineSpec::Baseline, 1)(ImputeSession::new(wl.clone()))
+    let full_base = configure(1)(ImputeSession::new(wl.clone()))
+        .engine(EngineSpec::Baseline)
         .run()
         .unwrap();
-    let full_event = configure(EngineSpec::Event, 1)(ImputeSession::new(wl.clone()))
+    let full_event = configure(1)(ImputeSession::new(wl.clone()))
+        .engine(EngineSpec::Event)
         .run()
         .unwrap();
-    let win_base = run_windowed(&wl, &plan, configure(EngineSpec::Baseline, 1)).unwrap();
-    let win_event = run_windowed(&wl, &plan, configure(EngineSpec::Event, 1)).unwrap();
+    let win_base = run_windowed(&wl, &plan, EngineSpec::Baseline, configure(1)).unwrap();
+    let win_event = run_windowed(&wl, &plan, EngineSpec::Event, configure(1)).unwrap();
 
     assert_eq!(win_base.dosages.len(), N_TARGETS);
     assert_eq!(win_base.dosages[0].len(), 40);
@@ -143,7 +144,7 @@ fn windowed_real_dosages_match_across_engines_and_the_full_run() {
 
     // The windowed event plane keeps the execution-semantics contract:
     // bit-identical results for any host thread count.
-    let win_event_mt = run_windowed(&wl, &plan, configure(EngineSpec::Event, 4)).unwrap();
+    let win_event_mt = run_windowed(&wl, &plan, EngineSpec::Event, configure(4)).unwrap();
     assert_eq!(
         win_event.dosages, win_event_mt.dosages,
         "host thread count changed windowed numerics"
@@ -163,8 +164,35 @@ fn single_window_plan_reproduces_the_unwindowed_run_bit_for_bit() {
     let plan = WindowPlan::new(40, 64, 0).unwrap();
     assert_eq!(plan.len(), 1);
     for spec in [EngineSpec::Baseline, EngineSpec::Event] {
-        let windowed = run_windowed(&wl, &plan, configure(spec, 1)).unwrap();
-        let plain = configure(spec, 1)(ImputeSession::new(wl.clone())).run().unwrap();
+        let windowed = run_windowed(&wl, &plan, spec, configure(1)).unwrap();
+        let plain = configure(1)(ImputeSession::new(wl.clone()))
+            .engine(spec)
+            .run()
+            .unwrap();
         assert_eq!(windowed.dosages, plain.dosages, "{spec:?}");
     }
+}
+
+#[test]
+fn streamed_real_panel_matches_the_materialised_windowed_run() {
+    // The chromosome-streaming path on the real fixture: same plan, same
+    // engine, builder-thread slicing + rendezvous backpressure — and the
+    // stitched report must still be bit-identical to the materialised
+    // windowed runner (they share the stitch/merge code path).
+    let (_registry, panel) = resolve_fixture();
+    let wl = fixture_workload(&panel);
+    let plan = WindowPlan::new(40, 30, 20).unwrap();
+    let streamed = run_streamed(&wl, &plan, EngineSpec::Event, configure(1)).unwrap();
+    let windowed = run_windowed(&wl, &plan, EngineSpec::Event, configure(1)).unwrap();
+    assert_eq!(
+        streamed.dosages, windowed.dosages,
+        "streaming changed real-panel numerics"
+    );
+    let telemetry = streamed.stream.expect("streamed runs carry telemetry");
+    assert_eq!(telemetry.windows_streamed, plan.len());
+    assert!(
+        telemetry.peak_resident_windows <= 2,
+        "double-buffer bound violated: {}",
+        telemetry.peak_resident_windows
+    );
 }
