@@ -50,11 +50,7 @@ fn main() {
                     .expect("synthetic panel has a recipe");
                 s.spawn(move || {
                     service
-                        .submit_wait(ImputeRequest {
-                            panel: PANEL.to_string(),
-                            engine: EngineSpec::Rank1,
-                            targets: targets.into(),
-                        })
+                        .submit_wait(ImputeRequest::new(PANEL, EngineSpec::Rank1, targets))
                         .expect("rank1 plane is always available")
                 })
             })

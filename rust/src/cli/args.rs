@@ -60,8 +60,17 @@ impl Args {
             .unwrap_or_else(|| default.to_string())
     }
 
-    /// Comma-separated list flag.
+    /// Comma-separated list flag (`usize` elements — the common case).
     pub fn get_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        self.get_list_t(name, default)
+    }
+
+    /// Comma-separated list flag with typed elements (e.g. `f64` offered
+    /// rates for `bench-serve --open-loop`).
+    pub fn get_list_t<T>(&self, name: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: std::str::FromStr + Clone,
+    {
         self.consumed.borrow_mut().push(name.to_string());
         match self.flags.get(name) {
             None => Ok(default.to_vec()),
@@ -128,6 +137,18 @@ mod tests {
     fn bad_value_is_error() {
         let a = Args::parse(&argv(&["x", "--n", "oops"])).unwrap();
         assert!(a.get("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn typed_lists_parse_floats() {
+        let a = Args::parse(&argv(&["x", "--offered", "25,100.5,400"])).unwrap();
+        assert_eq!(
+            a.get_list_t("offered", &[1.0f64]).unwrap(),
+            vec![25.0, 100.5, 400.0]
+        );
+        assert_eq!(a.get_list_t("missing", &[7.5f64]).unwrap(), vec![7.5]);
+        let bad = Args::parse(&argv(&["x", "--offered", "25,zap"])).unwrap();
+        assert!(bad.get_list_t("offered", &[1.0f64]).is_err());
     }
 
     #[test]

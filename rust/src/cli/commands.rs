@@ -5,6 +5,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::bench::{self, FigOpts, X86Cost};
+use crate::genomics::gmap::GeneticMap;
 use crate::genomics::packed::PackedPanel;
 use crate::genomics::stream::run_streamed;
 use crate::genomics::window::{WindowPlan, run_windowed_threads};
@@ -12,8 +13,8 @@ use crate::genomics::vcf::{self, VcfOptions};
 use crate::model::baseline::{Baseline, Method};
 use crate::model::interpolation::impute_interp;
 use crate::poets::topology::ClusterConfig;
-use crate::serve::bench::BenchServeOpts;
-use crate::serve::{CoalescePolicy, PanelRegistry, ServeConfig, Service, jsonl};
+use crate::serve::bench::{BenchServeOpts, OpenLoopOpts};
+use crate::serve::{CoalescePolicy, PanelRegistry, ServeConfig, ShardedService, jsonl, net};
 use crate::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
 use crate::util::table::{Table, fmt_count};
 use crate::workload::panelgen::PanelConfig;
@@ -77,29 +78,55 @@ COMMANDS:
                  VCF and write the bit-packed .ppnl panel (1 bit/allele,
                  checksummed; site metadata retained)
                  [--morgans-per-bp R]  physical->genetic rate (default 1e-8)
+                 [--genetic-map PATH]  replace the flat rate with a real
+                 genetic map (PLINK 'chr id cM bp' or HapMap 'bp rate cM'
+                 layout, auto-detected): genetic distances become the map's
+                 interpolated cM deltas, so hotspot structure survives into
+                 the Li & Stephens transitions
                panel info <spec|path>  shape, memory and site summary of
                  any panel spec (vcf:/packed:/synth:; bare .vcf and .ppnl
                  paths are recognised)
   validate     run ALL engines on one workload and report per-engine
                max |Δdosage| against each engine's oracle
                --hap N --mark N --targets N --seed S
-  serve        multi-tenant imputation service over stdin/stdout JSONL:
-               one JSON request per input line, one response per output
-               line, in request order (responses: serve-report/v1 on
-               success, serve-error/v1 in-band on failure).  Request:
+  serve        multi-tenant imputation service: one JSON request per input
+               line (stdin JSONL) or per length-framed TCP frame, one
+               response per request, in request order (responses:
+               serve-report/v1 on success, serve-error/v1 in-band on
+               failure — error prefixes admission:/quota:/deadline: are the
+               shed taxonomy).  Request:
                {\"id\":1, \"panel\":\"synth:hap=8,mark=21,annot=0.2,seed=7\",
                 \"engine\":\"event\", \"synth_targets\":2, \"target_seed\":9}
                (or \"targets\":[[-1,0,1,..],..] for explicit observations;
                \"panel\" also accepts vcf:<path> / packed:<path> — a
                missing or corrupt file fails that request in-band)
-               --workers N (pool threads, default 2)
+               optional request fields: \"tenant\":\"name\" (token-bucket
+               quota account), \"deadline_ms\":D (shed when the queue-age
+               estimate or true age busts the budget), \"window\":W
+               [\"overlap\":V] (stream per-window dosage rows as
+               serve-report-part/v1 frames, then a terminal manifest)
+               admin verbs: {\"stats\":true} -> serve-stats/v1 snapshot;
+               {\"shutdown\":true} -> ack, stop accepting, drain, exit
+               (closing stdin / the socket is the transport-level
+               equivalent)
+               --tcp ADDR (listen on ADDR, e.g. 127.0.0.1:7777 or :0 for
+               an ephemeral port — logged to stderr; frames are a
+               big-endian u32 length + the JSON document, byte-identical
+               to the stdin line)
+               --connect ADDR (client bridge: stdin lines -> frames,
+               frames -> stdout lines; pipes work against a --tcp server)
+               --shards N (panel-sharded worker pools: panel name hashes
+               to a shard with its own queue, workers and engine cache)
+               --quota-rate R --quota-burst B (per-tenant token buckets,
+               R tokens/s, burst B; omit --quota-rate for no quotas)
+               --workers N (pool threads per shard, default 2)
                --max-batch T (coalescer target budget; 1 = no coalescing.
                Coalesced event-plane groups merge member targets into ONE
                wave sweep — responses stay bit-identical to solo runs;
                synth_targets minting runs in the workers, so a slow
                file-backed panel never blocks the request stream)
                --linger-ms L (coalescer wait for batch-mates, default 2)
-               --queue-cap N (admission bound, default 1024)
+               --queue-cap N (admission bound per shard, default 1024)
                --boards B --spt N --threads N (engine knobs, as impute)
   bench-serve  closed-loop load generator: sweeps worker pool sizes x
                client counts x coalescing on/off and writes BENCH_serve.json
@@ -108,6 +135,14 @@ COMMANDS:
                --targets-per-request K --engine E
                --hap N --mark N --annot-ratio R --seed S
                --max-batch T --linger-ms L
+               --open-loop  Poisson open-loop mode instead: sweeps offered
+               load x shards x coalescing, writes BENCH_serve_load.json
+               (achieved req/s, sojourn p50/p99/p999, shed rate per point)
+               and cross-checks measured mean queue waits against the
+               M/M/c prediction in the uncongested regime (disagreement
+               fails the run)
+               --offered 25,100,400 (req/s) --shards 1,2 --workers N
+               --requests N (arrivals per point) --queue-cap N --seed S
   bench        regenerate a paper experiment:
                fig11|fig12|fig13|calibrate|sync-overhead
                [--boards 1,2,..] [--spt 1,2,..] [--full-targets N]
@@ -221,9 +256,22 @@ fn cmd_panel_ingest(args: &Args) -> Result<i32, String> {
         },
     };
     let rate = args.get("morgans-per-bp", 1e-8f64)?;
+    let map_path = args.get_str("genetic-map", "");
     args.reject_unknown()?;
 
     let parsed = vcf::load_with(&input, &VcfOptions { morgans_per_bp: rate })?;
+    // A real map supersedes the flat-rate distances the parser derived.
+    let parsed = if map_path.is_empty() {
+        parsed
+    } else {
+        let map = GeneticMap::load(&map_path)?;
+        let (lo, hi) = map.span();
+        println!(
+            "applied genetic map {map_path}: {} knots spanning {lo}..{hi} bp",
+            map.len()
+        );
+        map.apply(&parsed)
+    };
     let packed = PackedPanel::from_vcf(&parsed);
     packed.write(&output)?;
     let raw_bytes = parsed.panel.n_hap() * parsed.panel.n_mark();
@@ -406,34 +454,137 @@ fn coalesce_from_args(args: &Args, default_batch: usize) -> Result<CoalescePolic
 }
 
 pub fn cmd_serve(args: &Args) -> Result<i32, String> {
-    let cfg = ServeConfig::default()
+    let mut cfg = ServeConfig::default()
         .workers(args.get("workers", 2usize)?)
         .coalesce(coalesce_from_args(args, 16)?)
         .queue_capacity(args.get("queue-cap", 1024usize)?)
         .boards(args.get("boards", 2usize)?)
         .states_per_thread(args.get("spt", 8usize)?)
         .threads(args.get("threads", 1usize)?);
+    // A negative rate (the default) means "no quotas configured".
+    let quota_rate = args.get("quota-rate", -1.0f64)?;
+    let quota_burst = args.get("quota-burst", 8.0f64)?;
+    if quota_rate >= 0.0 {
+        cfg = cfg.tenant_quota(quota_rate, quota_burst);
+    }
+    let shards = args.get("shards", 1usize)?;
+    let tcp = args.get_str("tcp", "");
+    let connect = args.get_str("connect", "");
     args.reject_unknown()?;
 
-    let service = Service::start(Arc::new(PanelRegistry::new()), cfg);
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    let summary = jsonl::serve_stream(&service, stdin.lock(), stdout.lock())?;
-    let stats = service.shutdown();
-    eprintln!(
-        "serve: {} requests ({} ok, {} failed), {} batches, mean width {:.2}",
-        summary.requests,
-        summary.ok,
-        summary.failed,
-        stats.batches,
-        stats.mean_batch_width()
-    );
+    if !connect.is_empty() {
+        if !tcp.is_empty() {
+            return Err("serve: --tcp and --connect are mutually exclusive".into());
+        }
+        return serve_connect(&connect);
+    }
+
+    let service = ShardedService::start(Arc::new(PanelRegistry::new()), cfg, shards);
+    if tcp.is_empty() {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let summary = jsonl::serve_stream(&service, stdin.lock(), stdout.lock())?;
+        let stats = service.shutdown();
+        eprintln!(
+            "serve: {} requests ({} ok, {} failed); drained: {} completed, \
+             {} batches, mean width {:.2}",
+            summary.requests,
+            summary.ok,
+            summary.failed,
+            stats.completed,
+            stats.batches,
+            stats.mean_batch_width()
+        );
+    } else {
+        let listener = std::net::TcpListener::bind(&tcp)
+            .map_err(|e| format!("serve: cannot bind {tcp}: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("serve: local_addr: {e}"))?;
+        // Stderr, so scripts binding :0 can scrape the real port while
+        // stdout stays free for piped use.
+        eprintln!("serve: listening on {addr} ({shards} shard(s))");
+        let summary = net::serve_tcp(&service, listener)?;
+        let stats = service.shutdown();
+        eprintln!(
+            "serve: {} connections, {} requests ({} ok, {} failed); drained: \
+             {} accepted, {} completed, {} failed in service",
+            summary.connections,
+            summary.requests,
+            summary.ok,
+            summary.failed,
+            stats.accepted,
+            stats.completed,
+            stats.failed
+        );
+        // The drain guarantee: shutdown completes every admitted request.
+        if stats.accepted != stats.completed + stats.failed {
+            return Err(format!(
+                "serve: shutdown leaked tickets ({} accepted vs {} resolved)",
+                stats.accepted,
+                stats.completed + stats.failed
+            ));
+        }
+    }
     // Per-request failures are reported in-band on stdout; a clean stream
     // (read to EOF, every response written) exits 0.
     Ok(0)
 }
 
+/// `serve --connect ADDR`: bridge stdin/stdout JSONL onto the framed TCP
+/// transport, so shell pipelines can drive a remote server exactly like a
+/// local `serve` process.
+fn serve_connect(addr: &str) -> Result<i32, String> {
+    use std::io::{BufRead, BufReader, Write};
+    let conn = std::net::TcpStream::connect(addr)
+        .map_err(|e| format!("serve: cannot connect to {addr}: {e}"))?;
+    let _ = conn.set_nodelay(true);
+    let mut up = conn
+        .try_clone()
+        .map_err(|e| format!("serve: clone socket: {e}"))?;
+
+    // Uplink: stdin lines become frames; stdin EOF half-closes the socket
+    // (the server drains in-flight work and closes its side when done).
+    let uplink = std::thread::spawn(move || -> Result<(), String> {
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let line = line.map_err(|e| format!("serve: stdin: {e}"))?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            net::frame::write_frame(&mut up, line.as_bytes())
+                .map_err(|e| format!("serve: send: {e}"))?;
+        }
+        let _ = up.shutdown(std::net::Shutdown::Write);
+        Ok(())
+    });
+
+    // Downlink: frames become stdout lines until the server closes.
+    let mut reader = BufReader::new(conn);
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    loop {
+        match net::frame::read_frame(&mut reader) {
+            Ok(net::frame::ReadFrame::Frame(payload)) => {
+                let text = String::from_utf8(payload)
+                    .map_err(|_| "serve: server sent a non-UTF-8 frame".to_string())?;
+                writeln!(out, "{text}").map_err(|e| format!("serve: stdout: {e}"))?;
+                out.flush().map_err(|e| format!("serve: stdout: {e}"))?;
+            }
+            Ok(net::frame::ReadFrame::Eof) => break,
+            Err(e) => return Err(format!("serve: recv: {e}")),
+        }
+    }
+    uplink
+        .join()
+        .map_err(|_| "serve: uplink thread panicked".to_string())??;
+    Ok(0)
+}
+
 pub fn cmd_bench_serve(args: &Args) -> Result<i32, String> {
+    if args.has("open-loop") {
+        return cmd_bench_serve_open_loop(args);
+    }
     let defaults = BenchServeOpts::default();
     let panel = format!(
         "synth:hap={},mark={},annot={},seed={}",
@@ -460,6 +611,39 @@ pub fn cmd_bench_serve(args: &Args) -> Result<i32, String> {
         opts.panel
     );
     let path = "BENCH_serve.json";
+    std::fs::write(path, json.pretty()).map_err(|e| format!("could not write {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(0)
+}
+
+/// `bench-serve --open-loop`: Poisson open-loop load sweep with the M/M/c
+/// cross-check.  A failed cross-check (measured wait far from the queueing
+/// model in the uncongested regime) fails the run.
+fn cmd_bench_serve_open_loop(args: &Args) -> Result<i32, String> {
+    let defaults = OpenLoopOpts::default();
+    let opts = OpenLoopOpts {
+        offered_rps: args.get_list_t("offered", &defaults.offered_rps)?,
+        shards: args.get_list("shards", &defaults.shards)?,
+        workers: args.get("workers", defaults.workers)?,
+        requests: args.get("requests", defaults.requests)?,
+        targets_per_request: args.get("targets-per-request", defaults.targets_per_request)?,
+        engine: args.get_str("engine", defaults.engine.name()).parse()?,
+        panel_hap: args.get("hap", defaults.panel_hap)?,
+        panel_mark: args.get("mark", defaults.panel_mark)?,
+        panel_annot: args.get("annot-ratio", defaults.panel_annot)?,
+        coalesce: coalesce_from_args(args, defaults.coalesce.max_batch_targets)?,
+        queue_capacity: args.get("queue-cap", defaults.queue_capacity)?,
+        seed: args.get("seed", defaults.seed)?,
+    };
+    args.reject_unknown()?;
+
+    let (table, json) = crate::serve::bench::run_open_loop(&opts)?;
+    println!(
+        "## serve open-loop load sweep (engine {}, {} req/point)\n{table}",
+        opts.engine.name(),
+        opts.requests
+    );
+    let path = "BENCH_serve_load.json";
     std::fs::write(path, json.pretty()).map_err(|e| format!("could not write {path}: {e}"))?;
     println!("wrote {path}");
     Ok(0)
@@ -665,6 +849,62 @@ mod tests {
         ]);
         assert_eq!(cmd_impute(&args).unwrap(), 0);
         let _ = std::fs::remove_file(&out);
+    }
+
+    const MAP_FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/data/tiny.map");
+
+    #[test]
+    fn panel_ingest_applies_a_genetic_map() {
+        let out = std::env::temp_dir().join(format!(
+            "poets-cli-tiny-gmap-{}.ppnl",
+            std::process::id()
+        ));
+        let out = out.to_str().unwrap().to_string();
+        assert_eq!(
+            cmd_panel(&argv(&[
+                "panel",
+                "ingest",
+                FIXTURE,
+                out.as_str(),
+                "--genetic-map",
+                MAP_FIXTURE,
+            ]))
+            .unwrap(),
+            0
+        );
+        // The mapped panel stays fully usable downstream.
+        let spec = format!("packed:{out}");
+        assert_eq!(cmd_panel(&argv(&["panel", "info", spec.as_str()])).unwrap(), 0);
+        let args = argv(&[
+            "impute", "--panel", spec.as_str(), "--targets", "1", "--annot-ratio",
+            "0.25", "--engine", "baseline",
+        ]);
+        assert_eq!(cmd_impute(&args).unwrap(), 0);
+
+        // And it is genuinely different from the flat-rate ingest: the map's
+        // hotspot gaps carry ~1.5 cM where the flat conversion gives ~10 cM.
+        let flat = crate::genomics::vcf::load(FIXTURE).unwrap();
+        let mapped = crate::genomics::gmap::GeneticMap::load(MAP_FIXTURE)
+            .unwrap()
+            .apply(&flat);
+        let sum = |p: &crate::genomics::vcf::VcfPanel| -> f64 {
+            (0..p.panel.n_mark()).map(|m| p.panel.gen_dist(m)).sum()
+        };
+        assert!(sum(&mapped) < sum(&flat));
+        let _ = std::fs::remove_file(&out);
+
+        // A missing map file fails the ingest loudly.
+        assert!(
+            cmd_panel(&argv(&[
+                "panel",
+                "ingest",
+                FIXTURE,
+                "/tmp/never-written.ppnl",
+                "--genetic-map",
+                "/nonexistent.map",
+            ]))
+            .is_err()
+        );
     }
 
     #[test]

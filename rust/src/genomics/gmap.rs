@@ -1,0 +1,312 @@
+//! Genetic-map parsing and position→centimorgan interpolation.
+//!
+//! The VCF parser's flat 1 cM/Mb conversion ([`super::vcf::VcfOptions`]) is
+//! the field-standard fallback, but real recombination is wildly non-uniform
+//! — hotspots concentrate most crossover events into kilobase-scale
+//! intervals.  Since the Li & Stephens transition probabilities are driven
+//! by *genetic* distance, a genuine map materially changes imputation
+//! around hotspots.  `panel ingest --genetic-map PATH` replaces the flat
+//! conversion with this module's piecewise-linear interpolation.
+//!
+//! Two common published formats are auto-detected by column count
+//! (whitespace-separated; a single leading non-numeric header line is
+//! skipped, as are `#` comments):
+//!
+//! * **PLINK** (4 columns): `chrom  id  cM  bp` — the `.map`-style layout
+//!   used by PLINK and shapeit/beagle map distributions;
+//! * **HapMap** (3 columns): `bp  rate(cM/Mb)  cM` — the classic HapMap
+//!   `genetic_map_chr*.txt` layout (the rate column is ignored; the
+//!   cumulative map is what interpolation needs).
+//!
+//! Both reduce to knots `(bp, cumulative cM)`: strictly increasing
+//! positions, non-decreasing map values.  [`GeneticMap::cm_at`] linearly
+//! interpolates between knots and extrapolates beyond either end with the
+//! boundary segment's slope (a panel slightly wider than its map should
+//! degrade gracefully, not fail).
+
+use crate::model::panel::ReferencePanel;
+
+use super::vcf::VcfPanel;
+
+/// A cumulative genetic map: knots of (physical bp, cumulative cM).
+#[derive(Clone, Debug)]
+pub struct GeneticMap {
+    positions: Vec<u64>,
+    cm: Vec<f64>,
+}
+
+impl GeneticMap {
+    /// Read and parse a map file.
+    pub fn load(path: &str) -> Result<GeneticMap, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        GeneticMap::parse(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Parse map text (format auto-detected per the module doc).
+    pub fn parse(text: &str) -> Result<GeneticMap, String> {
+        let mut positions: Vec<u64> = Vec::new();
+        let mut cm: Vec<f64> = Vec::new();
+        let mut n_cols: Option<usize> = None;
+        let mut chrom: Option<String> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let fail = |msg: String| format!("line {line_no}: {msg}");
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            let (pos_str, cm_str, chr) = match fields.len() {
+                4 => (fields[3], fields[2], Some(fields[0])), // PLINK: chr id cM bp
+                3 => (fields[0], fields[2], None),            // HapMap: bp rate cM
+                n => {
+                    return Err(fail(format!(
+                        "expected 4 (PLINK: chr id cM bp) or 3 (HapMap: bp rate cM) \
+                         columns, found {n}"
+                    )));
+                }
+            };
+            if let Some(expected) = n_cols {
+                if fields.len() != expected {
+                    return Err(fail(format!(
+                        "column count changed from {expected} to {} mid-file",
+                        fields.len()
+                    )));
+                }
+            }
+            let parsed = pos_str
+                .parse::<u64>()
+                .ok()
+                .zip(cm_str.parse::<f64>().ok().filter(|v| v.is_finite()));
+            let Some((pos, map_cm)) = parsed else {
+                if positions.is_empty() && n_cols.is_none() {
+                    continue; // the one allowed header line
+                }
+                return Err(fail(format!(
+                    "cannot parse position {pos_str:?} / map {cm_str:?} as numbers"
+                )));
+            };
+            n_cols = Some(fields.len());
+            if let Some(c) = chr {
+                match &chrom {
+                    None => chrom = Some(c.to_string()),
+                    Some(first) if first != c => {
+                        return Err(fail(format!(
+                            "chromosome changes from {first:?} to {c:?} \
+                             (one chromosome per map; split multi-chromosome maps first)"
+                        )));
+                    }
+                    Some(_) => {}
+                }
+            }
+            if let Some(&prev) = positions.last() {
+                if pos <= prev {
+                    return Err(fail(format!(
+                        "position {pos} is not strictly greater than the previous knot's {prev}"
+                    )));
+                }
+            }
+            if let Some(&prev_cm) = cm.last() {
+                if map_cm < prev_cm {
+                    return Err(fail(format!(
+                        "map value {map_cm} cM decreases from the previous knot's {prev_cm} cM \
+                         (cumulative maps are non-decreasing)"
+                    )));
+                }
+            }
+            positions.push(pos);
+            cm.push(map_cm);
+        }
+        if positions.len() < 2 {
+            return Err(format!(
+                "need at least 2 map knots to interpolate, found {}",
+                positions.len()
+            ));
+        }
+        Ok(GeneticMap { positions, cm })
+    }
+
+    /// Number of knots.
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    /// The physical span covered by knots (interpolation range).
+    pub fn span(&self) -> (u64, u64) {
+        (self.positions[0], *self.positions.last().expect(">= 2 knots"))
+    }
+
+    /// Cumulative map value at a physical position: linear interpolation
+    /// between bracketing knots, boundary-slope extrapolation outside the
+    /// knot span.
+    pub fn cm_at(&self, pos: u64) -> f64 {
+        let n = self.positions.len();
+        let segment = |i: usize| {
+            // Slope of the segment ending at knot i (positions are strictly
+            // increasing, so the denominator is never zero).
+            (self.cm[i] - self.cm[i - 1])
+                / (self.positions[i] - self.positions[i - 1]) as f64
+        };
+        match self.positions.binary_search(&pos) {
+            Ok(i) => self.cm[i],
+            Err(0) => self.cm[0] - (self.positions[0] - pos) as f64 * segment(1),
+            Err(i) if i == n => {
+                self.cm[n - 1] + (pos - self.positions[n - 1]) as f64 * segment(n - 1)
+            }
+            Err(i) => self.cm[i - 1] + (pos - self.positions[i - 1]) as f64 * segment(i),
+        }
+    }
+
+    /// Rebuild a parsed panel's genetic distances from this map: marker
+    /// `m`'s distance becomes `(cm_at(pos[m]) − cm_at(pos[m−1])) / 100`
+    /// Morgans (clamped at 0 against float noise), replacing the flat-rate
+    /// distances the VCF parser derived.  Alleles and site metadata are
+    /// unchanged.
+    pub fn apply(&self, v: &VcfPanel) -> VcfPanel {
+        let (n_hap, n_mark) = (v.panel.n_hap(), v.panel.n_mark());
+        let mut alleles = Vec::with_capacity(n_hap * n_mark);
+        for h in 0..n_hap {
+            alleles.extend_from_slice(v.panel.haplotype(h));
+        }
+        let mut gen_dist = Vec::with_capacity(n_mark);
+        let mut prev_cm = 0.0;
+        for (m, site) in v.sites.iter().enumerate() {
+            let here = self.cm_at(site.pos);
+            gen_dist.push(if m == 0 {
+                0.0
+            } else {
+                ((here - prev_cm) / 100.0).max(0.0)
+            });
+            prev_cm = here;
+        }
+        VcfPanel {
+            panel: ReferencePanel::new(n_hap, n_mark, alleles, gen_dist),
+            sites: v.sites.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genomics::vcf;
+
+    const PLINK: &str = "\
+20 rs1 0.0 1000
+20 rs2 0.1 2000
+20 .   2.1 3000
+20 rs4 2.2 5000
+";
+
+    // The same knots in HapMap layout (rate column is ignored).
+    const HAPMAP: &str = "\
+position COMBINED_rate(cM/Mb) Genetic_Map(cM)
+1000 100.0 0.0
+2000 2000.0 0.1
+3000 0.05 2.1
+5000 0.0 2.2
+";
+
+    #[test]
+    fn plink_and_hapmap_layouts_parse_to_the_same_map() {
+        let a = GeneticMap::parse(PLINK).unwrap();
+        let b = GeneticMap::parse(HAPMAP).unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 4);
+        assert_eq!(a.span(), (1000, 5000));
+        for pos in [500, 1000, 1500, 2500, 3000, 4000, 5000, 6000] {
+            assert!(
+                (a.cm_at(pos) - b.cm_at(pos)).abs() < 1e-12,
+                "pos {pos}: {} vs {}",
+                a.cm_at(pos),
+                b.cm_at(pos)
+            );
+        }
+    }
+
+    #[test]
+    fn interpolation_is_piecewise_linear_with_boundary_extrapolation() {
+        let m = GeneticMap::parse(PLINK).unwrap();
+        // Exact knots.
+        assert_eq!(m.cm_at(1000), 0.0);
+        assert!((m.cm_at(3000) - 2.1).abs() < 1e-12);
+        // Midpoints: the 2000..3000 hotspot segment rises 2 cM over 1 kb.
+        assert!((m.cm_at(2500) - 1.1).abs() < 1e-12);
+        assert!((m.cm_at(4000) - 2.15).abs() < 1e-12);
+        // Extrapolation uses the boundary segment's slope: head slope is
+        // 0.1 cM / 1000 bp, tail slope 0.1 cM / 2000 bp.
+        assert!((m.cm_at(500) - -0.05).abs() < 1e-12);
+        assert!((m.cm_at(6000) - 2.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comments_blank_lines_and_one_header_are_tolerated() {
+        let text = format!("# generated\n\n{PLINK}");
+        assert_eq!(GeneticMap::parse(&text).unwrap().len(), 4);
+        // HapMap's classic header is not numeric and is skipped once.
+        assert_eq!(GeneticMap::parse(HAPMAP).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn malformed_maps_are_rejected_with_line_numbers() {
+        for (text, needle) in [
+            ("", "at least 2"),
+            ("20 rs1 0.0 1000\n", "at least 2"),
+            // Position must strictly increase.
+            ("20 a 0.0 1000\n20 b 0.1 1000\n", "strictly greater"),
+            ("20 a 0.0 2000\n20 b 0.1 1000\n", "strictly greater"),
+            // Cumulative map must not decrease.
+            ("20 a 0.5 1000\n20 b 0.1 2000\n", "decreases"),
+            // Wrong shape.
+            ("20 1000\n", "columns"),
+            ("20 a 0.0 1000\n20 b 0.1 2000 extra\n", "columns"),
+            ("1000 1.0 0.0\n20 b 0.1 2000\n", "column count changed"),
+            // Garbage after the first data row is an error, not a header.
+            ("20 a 0.0 1000\n20 b zap 2000\n", "cannot parse"),
+            // One chromosome per map.
+            ("20 a 0.0 1000\n21 b 0.1 2000\n", "chromosome changes"),
+            // Non-finite map values.
+            ("20 a 0.0 1000\n20 b inf 2000\n", "cannot parse"),
+        ] {
+            let e = GeneticMap::parse(text).expect_err(text);
+            assert!(e.contains(needle), "{text:?}: expected {needle:?} in {e}");
+        }
+    }
+
+    #[test]
+    fn apply_rebuilds_distances_and_keeps_alleles() {
+        let text = "\
+##fileformat=VCFv4.2
+#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tINFO\tFORMAT\ts1\ts2
+20\t1000\trs1\tA\tG\t.\tPASS\t.\tGT\t0|1\t0|0
+20\t2000\trs2\tC\tT\t.\tPASS\t.\tGT\t1|1\t0|1
+20\t2500\trs3\tG\tA\t.\tPASS\t.\tGT\t0|0\t1|0
+";
+        let flat = vcf::parse(text).unwrap();
+        let map = GeneticMap::parse(PLINK).unwrap();
+        let mapped = map.apply(&flat);
+
+        // Alleles and sites are untouched.
+        assert_eq!(mapped.panel.n_hap(), 4);
+        assert_eq!(mapped.panel.n_mark(), 3);
+        for h in 0..4 {
+            assert_eq!(mapped.panel.haplotype(h), flat.panel.haplotype(h));
+        }
+        assert_eq!(mapped.sites, flat.sites);
+
+        // Distances are the map's cM deltas in Morgans, not flat-rate bp.
+        assert_eq!(mapped.panel.gen_dist(0), 0.0);
+        assert!((mapped.panel.gen_dist(1) - 0.1 / 100.0).abs() < 1e-15);
+        // 2000..2500 crosses half the 2 cM hotspot segment.
+        assert!((mapped.panel.gen_dist(2) - 1.0 / 100.0).abs() < 1e-15);
+        // The flat parse, by contrast, made marker 1's gap twice marker 2's.
+        assert!(flat.panel.gen_dist(1) > flat.panel.gen_dist(2));
+        // The map inverts that: the hotspot dominates.
+        assert!(mapped.panel.gen_dist(2) > mapped.panel.gen_dist(1));
+    }
+}

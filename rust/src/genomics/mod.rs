@@ -11,6 +11,10 @@
 //!   per-site metadata ([`vcf::Site`]: CHROM/POS/ID and allele frequency),
 //!   with strict per-line error reporting — a malformed panel must fail
 //!   loudly at ingest, never silently skew dosages.
+//! * [`gmap`] — PLINK/HapMap genetic-map parsing with piecewise-linear
+//!   position→cM interpolation ([`gmap::GeneticMap`]).  `panel ingest
+//!   --genetic-map PATH` applies it at ingest, replacing the parser's flat
+//!   1 cM/Mb conversion with real hotspot structure.
 //! * [`packed`] — [`packed::PackedPanel`], the haplotype matrix at **1 bit
 //!   per allele** (8x smaller than the `Vec<u8>` working representation)
 //!   with a checksummed on-disk format (`.ppnl`) and a lossless
@@ -35,11 +39,13 @@
 //! `panel ingest`/`panel info`, and `impute --panel <spec> --window W`
 //! drives the windowed path end to end (see `tests/real_panel_e2e.rs`).
 
+pub mod gmap;
 pub mod packed;
 pub mod stream;
 pub mod vcf;
 pub mod window;
 
+pub use gmap::GeneticMap;
 pub use packed::PackedPanel;
 pub use stream::run_streamed;
 pub use vcf::{Site, VcfOptions, VcfPanel};

@@ -1,13 +1,28 @@
-//! `bench-serve` — a closed-loop load generator for the service.
+//! `bench-serve` — load generators for the service.
 //!
-//! Sweeps worker counts × client counts × coalescing on/off against one
-//! panel and engine.  Each simulated client is closed-loop (submit, block
-//! for the answer, repeat), the classic service-benchmark shape: offered
-//! load scales with client count and queueing shows up as latency rather
-//! than unbounded backlog.  Per config the sweep reports throughput
-//! (requests/s), latency percentiles (p50/p99) and the achieved mean
-//! coalesce width — the numbers archived in `BENCH_serve.json` that the
-//! panel-level wave-batching perf work must beat (see `ROADMAP.md`).
+//! Two modes:
+//!
+//! * **Closed-loop** ([`run`]): sweeps worker counts × client counts ×
+//!   coalescing on/off against one panel and engine.  Each simulated
+//!   client is closed-loop (submit, block for the answer, repeat), the
+//!   classic service-benchmark shape: offered load scales with client
+//!   count and queueing shows up as latency rather than unbounded backlog.
+//!   Per config the sweep reports throughput (requests/s), latency
+//!   percentiles (p50/p99) and the achieved mean coalesce width — the
+//!   numbers archived in `BENCH_serve.json` that the panel-level
+//!   wave-batching perf work must beat (see `ROADMAP.md`).
+//!
+//! * **Open-loop** ([`run_open_loop`], `bench-serve --open-loop`): a
+//!   Poisson arrival process at a fixed *offered* rate, swept over offered
+//!   load × shard count × coalescing — the shape that exposes shedding and
+//!   queueing growth, because arrivals do not slow down when the service
+//!   does.  Per point it reports achieved throughput, sojourn percentiles
+//!   (p50/p99/p999), shed rate, and — in the uncongested single-shard
+//!   regime — cross-checks the measured mean queue wait against the
+//!   [`super::mmc`] M/M/c prediction built from the measured service-time
+//!   mean.  Disagreement beyond the documented tolerance fails the run
+//!   (the bench is a gate, not just a report).  Archived as
+//!   `BENCH_serve_load.json`.
 
 use std::sync::Arc;
 use std::thread;
@@ -15,11 +30,13 @@ use std::time::{Duration, Instant};
 
 use crate::session::EngineSpec;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 use crate::util::table::{Table, fmt_secs};
+use crate::workload::panelgen::PanelConfig;
 
 use super::queue::CoalescePolicy;
-use super::{ImputeRequest, PanelRegistry, ServeConfig, Service};
+use super::{ImputeRequest, PanelRegistry, ServeConfig, Service, ShardedService, mmc};
 
 /// Sweep shape.  Defaults are sized to finish in seconds on a laptop while
 /// still showing the coalescing and pool-scaling effects.
@@ -155,11 +172,11 @@ fn sweep_point(
                     let mut lats = Vec::with_capacity(n);
                     for _ in 0..n {
                         let t0 = Instant::now();
-                        service.submit_wait(ImputeRequest {
-                            panel: panel_name.clone(),
+                        service.submit_wait(ImputeRequest::new(
+                            panel_name.clone(),
                             engine,
-                            targets: targets.clone().into(),
-                        })?;
+                            targets.clone(),
+                        ))?;
                         lats.push(t0.elapsed().as_secs_f64());
                     }
                     Ok(lats)
@@ -236,6 +253,334 @@ fn to_json(opts: &BenchServeOpts, rows: &[BenchServeRow]) -> Json {
     j
 }
 
+/// Open-loop sweep shape.  Panels are registered per shard-slot
+/// (`open-loop-<i>`) so multi-shard points actually spread traffic.
+#[derive(Clone, Debug)]
+pub struct OpenLoopOpts {
+    /// Offered arrival rates (requests/s), one sweep point per entry.
+    pub offered_rps: Vec<f64>,
+    /// Shard counts to sweep.
+    pub shards: Vec<usize>,
+    /// Workers per shard.
+    pub workers: usize,
+    /// Arrivals generated per sweep point.
+    pub requests: usize,
+    /// Targets per request.
+    pub targets_per_request: usize,
+    /// Compute plane under load.
+    pub engine: EngineSpec,
+    /// Synthetic panel shape (one panel per shard slot, seeds differ).
+    pub panel_hap: usize,
+    pub panel_mark: usize,
+    pub panel_annot: f64,
+    /// Coalescing policy for the "on" half of the sweep.
+    pub coalesce: CoalescePolicy,
+    /// Admission queue capacity per shard (the shed threshold).
+    pub queue_capacity: usize,
+    /// Poisson-schedule seed (deterministic arrival times per point).
+    pub seed: u64,
+}
+
+impl Default for OpenLoopOpts {
+    fn default() -> Self {
+        OpenLoopOpts {
+            offered_rps: vec![25.0, 100.0, 400.0],
+            shards: vec![1, 2],
+            workers: 2,
+            requests: 48,
+            targets_per_request: 1,
+            engine: EngineSpec::Rank1,
+            panel_hap: 16,
+            panel_mark: 101,
+            panel_annot: 0.1,
+            coalesce: CoalescePolicy {
+                max_batch_targets: 16,
+                max_linger: Duration::from_millis(1),
+            },
+            queue_capacity: 64,
+            seed: 2023,
+        }
+    }
+}
+
+/// One open-loop sweep point's measurements.
+#[derive(Clone, Debug)]
+pub struct OpenLoopRow {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub shards: usize,
+    pub workers: usize,
+    pub coalesce: bool,
+    pub accepted: usize,
+    pub shed: usize,
+    pub shed_rate: f64,
+    /// Sojourn (queue wait + service) percentiles, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub mean_wait_ms: f64,
+    pub mean_service_ms: f64,
+    /// M/M/c cross-check (single-shard, coalesce-off, uncongested points
+    /// only; `None` elsewhere).
+    pub utilisation: Option<f64>,
+    pub predicted_wait_ms: Option<f64>,
+    pub mmc_checked: bool,
+}
+
+/// Run the open-loop sweep.  Returns the rendered table and the
+/// `poets-impute/bench-serve-load/v1` JSON document (archived as
+/// `BENCH_serve_load.json`).  Fails if any uncongested single-shard point
+/// disagrees with the M/M/c prediction beyond [`mmc::REL_TOLERANCE`]× +
+/// [`mmc::ABS_TOLERANCE_SECONDS`].
+pub fn run_open_loop(opts: &OpenLoopOpts) -> Result<(String, Json), String> {
+    if opts.offered_rps.is_empty() || opts.shards.is_empty() {
+        return Err("bench-serve --open-loop: need at least one offered rate and shard count".into());
+    }
+    if opts.offered_rps.iter().any(|&r| !(r > 0.0) || !r.is_finite()) {
+        return Err("bench-serve --open-loop: offered rates must be finite and > 0".into());
+    }
+    if opts.requests == 0 || opts.targets_per_request == 0 || opts.workers == 0 {
+        return Err("bench-serve --open-loop: requests, targets and workers must be >= 1".into());
+    }
+
+    // One panel per shard slot so the largest shard sweep sees spread
+    // traffic; targets are pre-minted so arrival times measure the queue,
+    // not panel generation.
+    let registry = Arc::new(PanelRegistry::new());
+    let n_panels = opts.shards.iter().copied().max().unwrap_or(1).max(1);
+    let mut panels = Vec::with_capacity(n_panels);
+    for i in 0..n_panels {
+        let name = format!("open-loop-{i}");
+        let cfg = PanelConfig {
+            n_hap: opts.panel_hap,
+            n_mark: opts.panel_mark,
+            annot_ratio: opts.panel_annot,
+            seed: opts.seed.wrapping_mul(1000).wrapping_add(i as u64),
+            ..PanelConfig::default()
+        };
+        let panel = registry.register_synthetic(&name, &cfg);
+        let targets = panel.synthetic_targets(opts.targets_per_request, 0x10AD + i as u64)?;
+        panels.push((name, targets));
+    }
+
+    let mut table = Table::new(&[
+        "offered", "shards", "coalesce", "accepted", "shed", "req/s", "p50", "p99", "p999",
+        "wait", "mmc",
+    ]);
+    let mut rows = Vec::new();
+    let mut violations = Vec::new();
+    let mut point = 0u64;
+    for &offered in &opts.offered_rps {
+        for &shards in &opts.shards {
+            for coalesce in [false, true] {
+                point += 1;
+                let row = open_loop_point(
+                    &registry, opts, &panels, offered, shards, coalesce, point,
+                    &mut violations,
+                )?;
+                table.row(vec![
+                    format!("{:.0}/s", row.offered_rps),
+                    row.shards.to_string(),
+                    if row.coalesce { "on" } else { "off" }.into(),
+                    row.accepted.to_string(),
+                    format!("{} ({:.0}%)", row.shed, row.shed_rate * 100.0),
+                    format!("{:.1}", row.achieved_rps),
+                    format!("{:.2}ms", row.p50_ms),
+                    format!("{:.2}ms", row.p99_ms),
+                    format!("{:.2}ms", row.p999_ms),
+                    format!("{:.2}ms", row.mean_wait_ms),
+                    match (row.mmc_checked, row.predicted_wait_ms) {
+                        (true, Some(p)) => format!("{p:.2}ms ok"),
+                        (false, Some(p)) => format!("{p:.2}ms -"),
+                        _ => "-".into(),
+                    },
+                ]);
+                rows.push(row);
+            }
+        }
+    }
+    if !violations.is_empty() {
+        return Err(format!(
+            "bench-serve --open-loop: measured waits disagree with M/M/c beyond tolerance:\n{}",
+            violations.join("\n")
+        ));
+    }
+    Ok((table.render(), to_load_json(opts, &rows)))
+}
+
+/// One (offered, shards, coalesce) point: fresh sharded service, Poisson
+/// arrivals round-robined over the per-shard panels, all tickets drained.
+#[allow(clippy::too_many_arguments)]
+fn open_loop_point(
+    registry: &Arc<PanelRegistry>,
+    opts: &OpenLoopOpts,
+    panels: &[(String, Vec<crate::model::panel::TargetHaplotype>)],
+    offered: f64,
+    shards: usize,
+    coalesce: bool,
+    point: u64,
+    violations: &mut Vec<String>,
+) -> Result<OpenLoopRow, String> {
+    let policy = if coalesce {
+        opts.coalesce
+    } else {
+        CoalescePolicy::off()
+    };
+    let cfg = ServeConfig::default()
+        .workers(opts.workers)
+        .coalesce(policy)
+        .queue_capacity(opts.queue_capacity.max(1));
+    let service = ShardedService::start(Arc::clone(registry), cfg, shards);
+
+    // Poisson arrivals on an absolute schedule: sleep-until keeps the
+    // offered rate honest even when submits momentarily lag.
+    let mut rng = Rng::new(opts.seed ^ point.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let start = Instant::now();
+    let mut next = start;
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..opts.requests {
+        let dt = -(1.0 - rng.f64()).ln() / offered;
+        next += Duration::from_secs_f64(dt);
+        let now = Instant::now();
+        if next > now {
+            thread::sleep(next - now);
+        }
+        let (name, targets) = &panels[i % panels.len()];
+        match service.submit(ImputeRequest::new(
+            name.clone(),
+            opts.engine,
+            targets.clone(),
+        )) {
+            Ok(t) => tickets.push(t),
+            Err(_) => shed += 1, // open loop: arrivals never block
+        }
+    }
+    let submit_span = start.elapsed().as_secs_f64().max(1e-9);
+
+    let mut waits = Vec::with_capacity(tickets.len());
+    let mut services = Vec::with_capacity(tickets.len());
+    let mut sojourns = Vec::with_capacity(tickets.len());
+    for t in tickets {
+        let r = t.wait()?;
+        waits.push(r.queue_wait_seconds);
+        services.push(r.report.host_seconds);
+        sojourns.push(r.queue_wait_seconds + r.report.host_seconds);
+    }
+    service.shutdown();
+
+    let accepted = sojourns.len();
+    let mean = |v: &[f64]| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    let pct = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) * 1e3 };
+    let mean_wait = mean(&waits);
+    let mean_service = mean(&services);
+    let arrival_rate = accepted as f64 / submit_span;
+
+    // Cross-check against M/M/c only where the model is honest: one shard
+    // (one queue), no coalescing (service times are per-request), nothing
+    // shed (no truncation bias), enough samples, uncongested.
+    let mut utilisation = None;
+    let mut predicted_wait_ms = None;
+    let mut mmc_checked = false;
+    if shards == 1 && !coalesce && shed == 0 && accepted >= 20 {
+        if let Some(pred) = mmc::predict(opts.workers, arrival_rate, mean_service) {
+            utilisation = Some(pred.utilisation);
+            predicted_wait_ms = Some(pred.mean_wait_seconds * 1e3);
+            if pred.utilisation <= 0.7 {
+                mmc_checked = true;
+                if !mmc::within_tolerance(mean_wait, pred.mean_wait_seconds) {
+                    violations.push(format!(
+                        "offered {offered:.0}/s: measured mean wait {:.3} ms vs M/M/{} \
+                         prediction {:.3} ms (utilisation {:.2})",
+                        mean_wait * 1e3,
+                        opts.workers,
+                        pred.mean_wait_seconds * 1e3,
+                        pred.utilisation
+                    ));
+                }
+            }
+        }
+    }
+
+    Ok(OpenLoopRow {
+        offered_rps: offered,
+        achieved_rps: accepted as f64 / submit_span,
+        shards,
+        workers: opts.workers,
+        coalesce,
+        accepted,
+        shed,
+        shed_rate: shed as f64 / opts.requests.max(1) as f64,
+        p50_ms: pct(&sojourns, 50.0),
+        p99_ms: pct(&sojourns, 99.0),
+        p999_ms: pct(&sojourns, 99.9),
+        mean_wait_ms: mean_wait * 1e3,
+        mean_service_ms: mean_service * 1e3,
+        utilisation,
+        predicted_wait_ms,
+        mmc_checked,
+    })
+}
+
+fn to_load_json(opts: &OpenLoopOpts, rows: &[OpenLoopRow]) -> Json {
+    let opt_num = |v: Option<f64>| v.map_or(Json::Null, Json::Num);
+    let mut json_rows = Json::Arr(Vec::new());
+    for r in rows {
+        let mut j = Json::obj();
+        j.set("offered_rps", r.offered_rps)
+            .set("achieved_rps", r.achieved_rps)
+            .set("shards", r.shards)
+            .set("workers", r.workers)
+            .set("coalesce", r.coalesce)
+            .set("accepted", r.accepted)
+            .set("shed", r.shed)
+            .set("shed_rate", r.shed_rate)
+            .set("p50_ms", r.p50_ms)
+            .set("p99_ms", r.p99_ms)
+            .set("p999_ms", r.p999_ms)
+            .set("mean_wait_ms", r.mean_wait_ms)
+            .set("mean_service_ms", r.mean_service_ms)
+            .set("utilisation", opt_num(r.utilisation))
+            .set("predicted_wait_ms", opt_num(r.predicted_wait_ms))
+            .set("mmc_checked", r.mmc_checked);
+        json_rows.push(j);
+    }
+    let mut run_config = Json::obj();
+    run_config
+        .set("engine", opts.engine.name())
+        .set(
+            "offered_rps",
+            Json::Arr(opts.offered_rps.iter().map(|&r| Json::Num(r)).collect()),
+        )
+        .set(
+            "shards",
+            Json::Arr(opts.shards.iter().map(|&n| Json::Int(n as i64)).collect()),
+        )
+        .set("workers", opts.workers)
+        .set("requests", opts.requests)
+        .set("targets_per_request", opts.targets_per_request)
+        .set("panel_hap", opts.panel_hap)
+        .set("panel_mark", opts.panel_mark)
+        .set("panel_annot", opts.panel_annot)
+        .set("queue_capacity", opts.queue_capacity)
+        .set("max_batch_targets", opts.coalesce.max_batch_targets)
+        .set("linger_ms", opts.coalesce.max_linger.as_millis() as u64)
+        .set("seed", opts.seed);
+
+    let mut j = Json::obj();
+    crate::util::provenance::stamp(&mut j, "poets-impute/bench-serve-load/v1", run_config);
+    j.set("bench", "serve-open-loop")
+        .set("engine", opts.engine.name())
+        .set("rows", json_rows);
+    j
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,5 +642,70 @@ mod tests {
             ..BenchServeOpts::default()
         };
         assert!(run(&no_workers).is_err());
+    }
+
+    #[test]
+    fn open_loop_sweep_reports_per_point_and_passes_the_mmc_gate() {
+        let opts = OpenLoopOpts {
+            offered_rps: vec![200.0],
+            shards: vec![1, 2],
+            workers: 2,
+            requests: 24,
+            targets_per_request: 1,
+            panel_hap: 8,
+            panel_mark: 21,
+            panel_annot: 0.2,
+            seed: 7,
+            ..OpenLoopOpts::default()
+        };
+        // The gate is part of the contract: a mismatch is an Err, so a
+        // plain unwrap asserts measured-vs-M/M/c agreement.
+        let (text, json) = run_open_loop(&opts).unwrap();
+        assert!(text.contains("p999"));
+        assert_eq!(
+            json.get("schema").unwrap().as_str(),
+            Some("poets-impute/bench-serve-load/v1")
+        );
+        assert!(json.get("git_commit").unwrap().as_str().is_some());
+        let rc = json.get("run_config").unwrap();
+        assert_eq!(rc.get("workers").unwrap().as_i64(), Some(2));
+        assert_eq!(rc.get("offered_rps").unwrap().as_arr().unwrap().len(), 1);
+
+        let rows = json.get("rows").unwrap().as_arr().unwrap();
+        // offered × shards × {off, on}.
+        assert_eq!(rows.len(), 4);
+        for r in rows {
+            let accepted = r.get("accepted").unwrap().as_i64().unwrap();
+            let shed = r.get("shed").unwrap().as_i64().unwrap();
+            assert_eq!(accepted + shed, 24, "every arrival is accounted for");
+            assert!(r.get("p999_ms").unwrap().as_f64().unwrap()
+                >= r.get("p50_ms").unwrap().as_f64().unwrap());
+            assert!(r.get("shed_rate").unwrap().as_f64().unwrap() >= 0.0);
+            // Multi-shard and coalesced points never claim an M/M/c check.
+            let sharded = r.get("shards").unwrap().as_i64().unwrap() > 1;
+            let coalesced = r.get("coalesce").unwrap().as_bool().unwrap();
+            if sharded || coalesced {
+                assert_eq!(r.get("mmc_checked").unwrap().as_bool(), Some(false));
+            }
+        }
+    }
+
+    #[test]
+    fn open_loop_degenerate_opts_are_rejected() {
+        let no_rate = OpenLoopOpts {
+            offered_rps: Vec::new(),
+            ..OpenLoopOpts::default()
+        };
+        assert!(run_open_loop(&no_rate).is_err());
+        let zero_rate = OpenLoopOpts {
+            offered_rps: vec![0.0],
+            ..OpenLoopOpts::default()
+        };
+        assert!(run_open_loop(&zero_rate).is_err());
+        let no_workers = OpenLoopOpts {
+            workers: 0,
+            ..OpenLoopOpts::default()
+        };
+        assert!(run_open_loop(&no_workers).is_err());
     }
 }

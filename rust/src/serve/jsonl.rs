@@ -1,16 +1,18 @@
-//! Newline-delimited JSON frontend — `poets-impute serve`.
+//! JSONL protocol + the stdin/stdout frontend — `poets-impute serve`.
 //!
-//! One request per input line, one response per output line, responses in
-//! request order.  No sockets: the transport is stdin/stdout, which makes
-//! the service scriptable and CI-testable (`printf ... | poets-impute
-//! serve`) in the offline environment; a network listener is a transport
-//! wrapper away and deliberately out of scope here.
+//! One request per input line, one (or more, for streamed requests)
+//! response documents per request, responses in request order.  The exact
+//! same documents travel over TCP with a `u32` length prefix instead of a
+//! newline delimiter ([`super::net`]); both frontends share this module's
+//! parser and response builders, so a TCP response body is byte-identical
+//! to the stdin response line for the same request.
 //!
 //! ## Request line
 //!
 //! ```json
 //! {"id": 1, "panel": "synth:hap=8,mark=21,annot=0.2,seed=7",
-//!  "engine": "event", "synth_targets": 2, "target_seed": 9}
+//!  "engine": "event", "synth_targets": 2, "target_seed": 9,
+//!  "tenant": "acme", "deadline_ms": 250}
 //! ```
 //!
 //! * `panel` (string, required) — registry name: a registered panel, a
@@ -30,15 +32,40 @@
 //!   head-of-line block admission of later lines; mint failures (bad spec,
 //!   over-cap count) come back as in-band `serve-error/v1` lines like any
 //!   other per-request failure.
-//! * `id` (int, default: 1-based line number) — echoed in the response.
+//! * `tenant` (string, optional) — names the token bucket this request
+//!   spends from when the service runs with per-tenant quotas
+//!   ([`super::TenantQuota`]); an empty bucket sheds with a `quota:` error.
+//! * `deadline_ms` (int, optional) — latency budget; shed with a
+//!   `deadline:` error at admission when the queue-age estimate exceeds it,
+//!   or worker-side when the true age (queue wait + mint) overran.
+//! * `window` (int) + `overlap` (int, default 0) + `stream` (bool,
+//!   optional marker) — run windowed and **stream** each window's
+//!   core-span dosage rows as a `serve-report-part/v1` document the moment
+//!   it completes, followed by a terminal manifest (the full
+//!   `serve-report/v1` minus `dosages`, plus `"parts"`); see
+//!   [`super::report`] for both schemas.
+//! * `id` (int, default: 1-based line number) — echoed in every response
+//!   document for this request.
 //!
-//! ## Response line
+//! ## Admin verbs
+//!
+//! `{"stats": true}` answers with a `serve-stats/v1` snapshot (totals +
+//! per-shard queue depth/counters).  `{"shutdown": true}` acknowledges
+//! with a draining `serve-stats/v1`, stops reading further input, and
+//! drains everything already admitted — the graceful-shutdown path for
+//! both frontends (a supervisor closing stdin is the SIGTERM-equivalent
+//! for the pipe transport; std has no portable signal hook).
+//!
+//! ## Response documents
 //!
 //! On success, the `poets-impute/serve-report/v1` document (see
 //! [`super::report`]) plus `"id"` and `"ok": true`.  On failure,
 //! `{"schema": "poets-impute/serve-error/v1", "id": .., "ok": false,
 //! "error": ".."}` — a bad request fails in-band and the stream keeps
 //! serving; only transport errors (unreadable input, broken pipe) abort.
+//! The error string's prefix is the shed taxonomy: `admission:` (queue
+//! full / malformed), `quota:` (tenant bucket empty), `deadline:` (budget
+//! busted) — anything else is an execution failure.
 //!
 //! Responses are emitted in request order, but requests are submitted as
 //! they are read — the service coalesces and executes them concurrently,
@@ -51,8 +78,8 @@ use crate::model::panel::TargetHaplotype;
 use crate::session::EngineSpec;
 use crate::util::json::Json;
 
-use super::queue::{RequestTargets, Ticket};
-use super::{ImputeRequest, ServeReport, Service};
+use super::queue::{RequestTargets, ServePart, Ticket};
+use super::{ImputeRequest, ServeReport, ShardedService};
 
 /// What a stream session did (the CLI prints this to stderr at EOF).
 #[derive(Clone, Copy, Debug, Default)]
@@ -62,23 +89,37 @@ pub struct StreamSummary {
     pub failed: u64,
 }
 
-/// An in-order response slot: answered immediately (parse/admission error)
-/// or waiting on a service ticket.
+/// One parsed input line.
+pub(crate) enum Verb {
+    /// An imputation request to submit.
+    Impute(Box<ImputeRequest>),
+    /// `{"stats": true}` — answer with a `serve-stats/v1` snapshot.
+    Stats,
+    /// `{"shutdown": true}` — acknowledge, stop accepting, drain, exit.
+    Shutdown,
+}
+
+/// An in-order response slot: answered immediately (parse/admission error,
+/// admin verb) or waiting on a service ticket (streamed tickets track how
+/// many parts have been emitted so far).
 enum Slot {
     Ready(Json),
     InFlight(i64, Ticket),
+    Streaming(i64, Ticket, usize),
 }
 
-/// Drive the service from `input` to `output` until EOF.  Per-request
-/// failures are in-band error lines; only transport failures return `Err`.
+/// Drive the service from `input` to `output` until EOF or a `shutdown`
+/// verb.  Per-request failures are in-band error lines; only transport
+/// failures return `Err`.
 pub fn serve_stream<R: BufRead, W: Write>(
-    service: &Service,
+    service: &ShardedService,
     input: R,
     mut output: W,
 ) -> Result<StreamSummary, String> {
     let mut summary = StreamSummary::default();
     let mut slots: VecDeque<Slot> = VecDeque::new();
     let mut line_no = 0i64;
+    let mut draining = false;
 
     for line in input.lines() {
         let line = line.map_err(|e| format!("reading request stream: {e}"))?;
@@ -87,9 +128,10 @@ pub fn serve_stream<R: BufRead, W: Write>(
         }
         line_no += 1;
         summary.requests += 1;
-        let slot = match parse_request(&line, line_no) {
-            Ok((id, req)) => loop {
-                match service.submit(req.clone()) {
+        let slot = match parse_line(&line, line_no) {
+            Ok((id, Verb::Impute(req))) => loop {
+                match service.submit((*req).clone()) {
+                    Ok(ticket) if ticket.is_streaming() => break Slot::Streaming(id, ticket, 0),
                     Ok(ticket) => break Slot::InFlight(id, ticket),
                     // Backpressure, not failure: this reader is the only
                     // submitter of these slots, so when the queue is full we
@@ -97,64 +139,127 @@ pub fn serve_stream<R: BufRead, W: Write>(
                     // space) and resubmit, instead of failing requests a
                     // blocking pipe was happy to wait for.
                     Err(e) if e.starts_with("admission: queue full") && !slots.is_empty() => {
-                        if let Some(json) = pop_ready(&mut slots, &mut summary, true) {
-                            write_line(&mut output, &json)?;
+                        if let Some(lines) = pop_ready(&mut slots, &mut summary, true) {
+                            write_lines(&mut output, &lines)?;
                         }
                     }
-                    Err(e) => break Slot::Ready(error_response(id, &e, &mut summary)),
+                    Err(e) => {
+                        summary.failed += 1;
+                        break Slot::Ready(error_json(id, &e));
+                    }
                 }
             },
-            Err((id, e)) => Slot::Ready(error_response(id, &e, &mut summary)),
+            Ok((id, Verb::Stats)) => {
+                summary.ok += 1;
+                Slot::Ready(stats_json(id, service, false))
+            }
+            Ok((id, Verb::Shutdown)) => {
+                summary.ok += 1;
+                draining = true;
+                Slot::Ready(stats_json(id, service, true))
+            }
+            Err((id, e)) => {
+                summary.failed += 1;
+                Slot::Ready(error_json(id, &e))
+            }
         };
         slots.push_back(slot);
-        // Opportunistically flush responses that are already done, in
-        // order, so a long-lived pipe sees answers without waiting for EOF.
-        while let Some(json) = pop_ready(&mut slots, &mut summary, false) {
-            write_line(&mut output, &json)?;
+        // Opportunistically flush responses (and streamed parts) that are
+        // already done, in order, so a long-lived pipe sees answers without
+        // waiting for EOF.
+        while let Some(lines) = pop_ready(&mut slots, &mut summary, false) {
+            write_lines(&mut output, &lines)?;
+        }
+        if draining {
+            break;
         }
     }
-    // EOF: block for everything still in flight.
-    while let Some(json) = pop_ready(&mut slots, &mut summary, true) {
-        write_line(&mut output, &json)?;
+    // EOF (or shutdown verb): block for everything still in flight.
+    while let Some(lines) = pop_ready(&mut slots, &mut summary, true) {
+        write_lines(&mut output, &lines)?;
     }
     Ok(summary)
 }
 
-/// Pop the head slot if it has (or, when `block`, once it gets) an answer.
+/// Emit the head slot's newly-available response documents, popping the
+/// slot once its final document is out.  `None` means no progress is
+/// possible right now (head still in flight and `block` is false) or the
+/// queue is empty.  A streamed head may yield parts without being popped;
+/// the returned list is never empty.
 fn pop_ready(
     slots: &mut VecDeque<Slot>,
     summary: &mut StreamSummary,
     block: bool,
-) -> Option<Json> {
-    let ready = match slots.front() {
-        None => return None,
-        Some(Slot::Ready(_)) => true,
-        Some(Slot::InFlight(..)) => block,
-    };
-    if !ready {
-        // Head still in flight and we may not block: peek without consuming.
-        if let Some(Slot::InFlight(id, ticket)) = slots.front() {
-            let result = ticket.try_wait()?;
-            let json = result_response(*id, result, summary);
+) -> Option<Vec<Json>> {
+    match slots.front_mut()? {
+        Slot::Ready(_) => match slots.pop_front() {
+            Some(Slot::Ready(json)) => Some(vec![json]),
+            _ => unreachable!("peeked Ready"),
+        },
+        Slot::InFlight(id, ticket) => {
+            let result = if block {
+                let (id, ticket) = match slots.pop_front() {
+                    Some(Slot::InFlight(id, t)) => (id, t),
+                    _ => unreachable!("peeked InFlight"),
+                };
+                return Some(vec![result_json(id, ticket.wait(), summary)]);
+            } else {
+                ticket.try_wait()?
+            };
+            let id = *id;
             slots.pop_front();
-            return Some(json);
+            Some(vec![result_json(id, result, summary)])
         }
-        return None;
-    }
-    match slots.pop_front()? {
-        Slot::Ready(json) => Some(json),
-        Slot::InFlight(id, ticket) => Some(result_response(id, ticket.wait(), summary)),
+        Slot::Streaming(id, ticket, emitted) => {
+            let id = *id;
+            let mut lines = Vec::new();
+            if block {
+                let (ticket, mut emitted) = match slots.pop_front() {
+                    Some(Slot::Streaming(_, t, n)) => (t, n),
+                    _ => unreachable!("peeked Streaming"),
+                };
+                while let Some(part) = ticket.recv_part() {
+                    lines.push(part_json(id, &part));
+                    emitted += 1;
+                }
+                lines.push(stream_final_json(id, ticket.wait(), emitted, summary));
+                return Some(lines);
+            }
+            while let Some(part) = ticket.try_recv_part() {
+                lines.push(part_json(id, &part));
+                *emitted += 1;
+            }
+            if let Some(result) = ticket.try_wait() {
+                // The worker sends every part before replying, so once the
+                // reply is in, one more drain empties the part channel.
+                while let Some(part) = ticket.try_recv_part() {
+                    lines.push(part_json(id, &part));
+                    *emitted += 1;
+                }
+                let n = *emitted;
+                slots.pop_front();
+                lines.push(stream_final_json(id, result, n, summary));
+                Some(lines)
+            } else if lines.is_empty() {
+                None
+            } else {
+                Some(lines)
+            }
+        }
     }
 }
 
-fn write_line<W: Write>(output: &mut W, json: &Json) -> Result<(), String> {
-    writeln!(output, "{}", json.render()).map_err(|e| format!("writing response: {e}"))?;
+fn write_lines<W: Write>(output: &mut W, lines: &[Json]) -> Result<(), String> {
+    for json in lines {
+        writeln!(output, "{}", json.render()).map_err(|e| format!("writing response: {e}"))?;
+    }
     output
         .flush()
         .map_err(|e| format!("flushing response: {e}"))
 }
 
-fn result_response(
+/// Final document for a plain request: the full report or an error.
+pub(crate) fn result_json(
     id: i64,
     result: Result<ServeReport, String>,
     summary: &mut StreamSummary,
@@ -162,16 +267,46 @@ fn result_response(
     match result {
         Ok(report) => {
             summary.ok += 1;
-            let mut j = report.to_json();
-            j.set("id", id).set("ok", true);
-            j
+            report_json(id, &report)
         }
-        Err(e) => error_response(id, &e, summary),
+        Err(e) => {
+            summary.failed += 1;
+            error_json(id, &e)
+        }
     }
 }
 
-fn error_response(id: i64, error: &str, summary: &mut StreamSummary) -> Json {
-    summary.failed += 1;
+/// Final document for a streamed request: the terminal manifest (report
+/// minus dosages, plus the part count) or an error.
+pub(crate) fn stream_final_json(
+    id: i64,
+    result: Result<ServeReport, String>,
+    parts_emitted: usize,
+    summary: &mut StreamSummary,
+) -> Json {
+    match result {
+        Ok(report) => {
+            summary.ok += 1;
+            manifest_json(id, &report, parts_emitted)
+        }
+        Err(e) => {
+            summary.failed += 1;
+            error_json(id, &e)
+        }
+    }
+}
+
+/// `serve-report/v1` success document.
+pub(crate) fn report_json(id: i64, report: &ServeReport) -> Json {
+    let mut j = report.to_json();
+    j.set("id", id).set("ok", true);
+    j
+}
+
+/// `serve-error/v1` document.  The error prefix is the shed taxonomy
+/// (`admission:` / `quota:` / `deadline:`), anything else is an execution
+/// failure.
+pub(crate) fn error_json(id: i64, error: &str) -> Json {
     let mut j = Json::obj();
     j.set("schema", "poets-impute/serve-error/v1")
         .set("id", id)
@@ -180,36 +315,128 @@ fn error_response(id: i64, error: &str, summary: &mut StreamSummary) -> Json {
     j
 }
 
-const KNOWN_KEYS: [&str; 6] = [
+/// `serve-report-part/v1` document: one streamed window's core-span rows.
+pub(crate) fn part_json(id: i64, part: &ServePart) -> Json {
+    let mut dosages = Json::Arr(Vec::new());
+    for row in &part.rows {
+        dosages.push(Json::Arr(
+            row.iter().map(|&d| Json::Num(f64::from(d))).collect(),
+        ));
+    }
+    let mut j = Json::obj();
+    j.set("schema", "poets-impute/serve-report-part/v1")
+        .set("id", id)
+        .set("ok", true)
+        .set("request_id", part.request_id)
+        .set("window", part.window_index)
+        .set("n_windows", part.n_windows)
+        .set("core_start", part.core_start)
+        .set("core_end", part.core_end)
+        .set("dosages", dosages);
+    j
+}
+
+/// Terminal manifest for a streamed request: the `serve-report/v1`
+/// document minus its `dosages` matrix (already delivered as parts), plus
+/// `"parts"` (how many part documents preceded it) and `"streamed": true`.
+pub(crate) fn manifest_json(id: i64, report: &ServeReport, parts_emitted: usize) -> Json {
+    let mut j = report.to_json();
+    j.remove("dosages");
+    j.set("parts", parts_emitted)
+        .set("streamed", true)
+        .set("id", id)
+        .set("ok", true);
+    j
+}
+
+/// `serve-stats/v1` snapshot: aggregate totals plus per-shard queue depth
+/// and counters.  `draining` marks the shutdown acknowledgement.
+pub(crate) fn stats_json(id: i64, service: &ShardedService, draining: bool) -> Json {
+    let stats_obj = |s: &super::ServiceStats| {
+        let mut t = Json::obj();
+        t.set("accepted", s.accepted)
+            .set("rejected", s.rejected)
+            .set("completed", s.completed)
+            .set("failed", s.failed)
+            .set("batches", s.batches)
+            .set("coalesced_requests", s.coalesced_requests)
+            .set("merged_waves", s.merged_waves)
+            .set("shed_quota", s.shed_quota)
+            .set("shed_deadline", s.shed_deadline)
+            .set("mean_batch_width", s.mean_batch_width());
+        t
+    };
+    let totals = service.stats();
+    let mut per_shard = Json::Arr(Vec::new());
+    for snap in service.shard_snapshots() {
+        let mut s = stats_obj(&snap.stats);
+        s.set("shard", snap.shard)
+            .set("queue_depth", snap.queue_depth);
+        per_shard.push(s);
+    }
+    let mut j = Json::obj();
+    j.set("schema", "poets-impute/serve-stats/v1")
+        .set("id", id)
+        .set("ok", true)
+        .set("shards", service.n_shards())
+        .set("panels_cached", service.registry().len())
+        .set("totals", stats_obj(&totals))
+        .set("per_shard", per_shard);
+    if draining {
+        j.set("draining", true);
+    }
+    j
+}
+
+const KNOWN_KEYS: [&str; 13] = [
     "id",
     "panel",
     "engine",
     "targets",
     "synth_targets",
     "target_seed",
+    "tenant",
+    "deadline_ms",
+    "window",
+    "overlap",
+    "stream",
+    "stats",
+    "shutdown",
 ];
 
-/// Parse one request line.  Errors carry the best-known request id so the
-/// error response still correlates with the input line.  Parsing never
-/// touches the panel registry: `synth_targets` becomes a deferred
-/// [`RequestTargets::Mint`] executed in the worker pool.
-fn parse_request(line: &str, line_no: i64) -> Result<(i64, ImputeRequest), (i64, String)> {
+/// Parse one request line into a [`Verb`].  Errors carry the best-known
+/// request id so the error response still correlates with the input line.
+/// Parsing never touches the panel registry: `synth_targets` becomes a
+/// deferred [`RequestTargets::Mint`] executed in the worker pool.
+pub(crate) fn parse_line(line: &str, line_no: i64) -> Result<(i64, Verb), (i64, String)> {
     let j = Json::parse(line).map_err(|e| (line_no, format!("bad request JSON: {e}")))?;
     // Client ids are echoed verbatim (negative ids included), so they stay
     // i64 end to end instead of wrapping through a u64 cast.
     let id = j.get("id").and_then(Json::as_i64).unwrap_or(line_no);
     let fail = |e: String| (id, e);
 
-    if let Json::Obj(pairs) = &j {
-        for (key, _) in pairs {
-            if !KNOWN_KEYS.contains(&key.as_str()) {
-                return Err(fail(format!(
-                    "unknown request key {key:?} (expected one of {KNOWN_KEYS:?})"
-                )));
-            }
-        }
-    } else {
+    let Json::Obj(pairs) = &j else {
         return Err(fail("request line must be a JSON object".into()));
+    };
+    for (key, _) in pairs {
+        if !KNOWN_KEYS.contains(&key.as_str()) {
+            return Err(fail(format!(
+                "unknown request key {key:?} (expected one of {KNOWN_KEYS:?})"
+            )));
+        }
+    }
+
+    // Admin verbs: exclusive of everything but "id".
+    for (verb, variant) in [("stats", Verb::Stats), ("shutdown", Verb::Shutdown)] {
+        if let Some(v) = j.get(verb) {
+            if v.as_bool() != Some(true) {
+                return Err(fail(format!("\"{verb}\" must be true when present")));
+            }
+            if pairs.iter().any(|(k, _)| k != verb && k != "id") {
+                return Err(fail(format!("\"{verb}\" takes no other keys")));
+            }
+            return Ok((id, variant));
+        }
     }
 
     let panel = j
@@ -248,11 +475,48 @@ fn parse_request(line: &str, line_no: i64) -> Result<(i64, ImputeRequest), (i64,
         }
     };
 
-    Ok((id, ImputeRequest {
-        panel,
-        engine,
-        targets,
-    }))
+    let mut req = ImputeRequest::new(panel, engine, targets);
+    if let Some(t) = j.get("tenant") {
+        let tenant = t
+            .as_str()
+            .ok_or_else(|| fail("\"tenant\" must be a string".into()))?;
+        req = req.tenant(tenant);
+    }
+    if let Some(d) = j.get("deadline_ms") {
+        let ms = d
+            .as_i64()
+            .filter(|&ms| ms >= 0)
+            .ok_or_else(|| fail("\"deadline_ms\" must be a non-negative int".into()))?;
+        req = req.deadline_ms(ms as u64);
+    }
+    match (j.get("window"), j.get("overlap"), j.get("stream")) {
+        (None, None, None) => {}
+        (None, _, _) => {
+            return Err(fail(
+                "\"stream\"/\"overlap\" need a \"window\" length".into(),
+            ));
+        }
+        (Some(w), overlap, stream) => {
+            if let Some(s) = stream {
+                if s.as_bool() != Some(true) {
+                    return Err(fail("\"stream\" must be true when present".into()));
+                }
+            }
+            let window = w
+                .as_usize()
+                .filter(|&w| w >= 2)
+                .ok_or_else(|| fail("\"window\" must be an int >= 2".into()))?;
+            let overlap = match overlap {
+                None => 0,
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| fail("\"overlap\" must be a non-negative int".into()))?,
+            };
+            req = req.stream_windows(window, overlap);
+        }
+    }
+
+    Ok((id, Verb::Impute(Box::new(req))))
 }
 
 /// Observation vectors: arrays of `-1 | 0 | 1`, one per target.
@@ -286,8 +550,12 @@ mod tests {
 
     const PANEL: &str = "synth:hap=8,mark=21,annot=0.2,seed=7";
 
+    fn sharded(cfg: ServeConfig, shards: usize) -> ShardedService {
+        ShardedService::start(Arc::new(PanelRegistry::new()), cfg, shards)
+    }
+
     fn run(input: &str) -> (StreamSummary, Vec<Json>) {
-        let service = Service::start(Arc::new(PanelRegistry::new()), ServeConfig::default());
+        let service = sharded(ServeConfig::default(), 1);
         let mut out = Vec::new();
         let summary = serve_stream(&service, input.as_bytes(), &mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
@@ -377,10 +645,7 @@ mod tests {
         // Capacity 1, one worker, eight lines: the reader must throttle on
         // its own in-flight responses, so a blocking pipe never sees
         // spurious "queue full" failures.
-        let service = Service::start(
-            Arc::new(PanelRegistry::new()),
-            ServeConfig::default().workers(1).queue_capacity(1),
-        );
+        let service = sharded(ServeConfig::default().workers(1).queue_capacity(1), 1);
         let mut input = String::new();
         for i in 0..8 {
             input.push_str(&format!(
@@ -441,5 +706,170 @@ mod tests {
                 .unwrap()
                 .contains("-1|0|1")
         );
+    }
+
+    #[test]
+    fn stats_verb_reports_totals_and_per_shard_counters() {
+        let input = format!(
+            "{{\"id\":1,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1}}\n\
+             {{\"id\":2,\"stats\":true}}\n"
+        );
+        let service = sharded(ServeConfig::default(), 2);
+        let mut out = Vec::new();
+        let summary = serve_stream(&service, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(summary.requests, 2);
+        assert_eq!(summary.ok, 2);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        let stats = lines
+            .iter()
+            .find(|j| j.get("schema").unwrap().as_str() == Some("poets-impute/serve-stats/v1"))
+            .expect("stats response present");
+        assert_eq!(stats.get("id").unwrap().as_i64(), Some(2));
+        assert_eq!(stats.get("shards").unwrap().as_i64(), Some(2));
+        let totals = stats.get("totals").unwrap();
+        assert_eq!(totals.get("accepted").unwrap().as_i64(), Some(1));
+        assert_eq!(totals.get("shed_quota").unwrap().as_i64(), Some(0));
+        let per_shard = stats.get("per_shard").unwrap().as_arr().unwrap();
+        assert_eq!(per_shard.len(), 2);
+        for s in per_shard {
+            assert!(s.get("queue_depth").unwrap().as_i64().is_some());
+            assert!(s.get("merged_waves").unwrap().as_i64().is_some());
+        }
+        assert!(stats.get("draining").is_none());
+    }
+
+    #[test]
+    fn shutdown_verb_acknowledges_drains_and_stops_reading() {
+        // The line after "shutdown" must never be read: 2 requests total.
+        let input = format!(
+            "{{\"id\":1,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1}}\n\
+             {{\"id\":2,\"shutdown\":true}}\n\
+             {{\"id\":3,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1}}\n"
+        );
+        let service = sharded(ServeConfig::default(), 1);
+        let mut out = Vec::new();
+        let summary = serve_stream(&service, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(summary.requests, 2, "input after shutdown is not consumed");
+        assert_eq!(summary.ok, 2);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        // In-order: request 1's report, then the draining ack.
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0].get("schema").unwrap().as_str(),
+            Some("poets-impute/serve-report/v1")
+        );
+        assert_eq!(lines[1].get("draining").unwrap().as_bool(), Some(true));
+        // The already-admitted request completed (drained, not dropped).
+        let stats = service.shutdown();
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn streamed_request_emits_parts_then_manifest() {
+        let panel = "synth:hap=8,mark=41,annot=0.2,seed=23";
+        let input = format!(
+            "{{\"id\":5,\"panel\":\"{panel}\",\"engine\":\"rank1\",\"synth_targets\":2,\
+             \"window\":16,\"overlap\":4,\"stream\":true}}\n"
+        );
+        let (summary, lines) = run(&input);
+        assert_eq!(summary.ok, 1);
+        assert!(lines.len() >= 3, "expected >= 2 parts + manifest");
+        let (manifest, parts) = lines.split_last().unwrap();
+        let mut markers = 0usize;
+        for (i, p) in parts.iter().enumerate() {
+            assert_eq!(
+                p.get("schema").unwrap().as_str(),
+                Some("poets-impute/serve-report-part/v1")
+            );
+            assert_eq!(p.get("id").unwrap().as_i64(), Some(5));
+            assert_eq!(p.get("window").unwrap().as_usize(), Some(i));
+            let rows = p.get("dosages").unwrap().as_arr().unwrap();
+            assert_eq!(rows.len(), 2);
+            let width = rows[0].as_arr().unwrap().len();
+            assert_eq!(
+                p.get("core_end").unwrap().as_usize().unwrap()
+                    - p.get("core_start").unwrap().as_usize().unwrap(),
+                width
+            );
+            markers += width;
+        }
+        assert_eq!(markers, 41, "parts cover the whole marker axis");
+        assert_eq!(
+            manifest.get("schema").unwrap().as_str(),
+            Some("poets-impute/serve-report/v1")
+        );
+        assert!(manifest.get("dosages").is_none(), "manifest sheds the matrix");
+        assert_eq!(manifest.get("parts").unwrap().as_usize(), Some(parts.len()));
+        assert_eq!(manifest.get("streamed").unwrap().as_bool(), Some(true));
+        assert_eq!(manifest.get("id").unwrap().as_i64(), Some(5));
+    }
+
+    #[test]
+    fn tenant_and_deadline_fields_parse_and_shed_in_band() {
+        // Quota rate 0 / burst 1: the second "acme" line sheds with quota:.
+        let service = sharded(ServeConfig::default().workers(1).tenant_quota(0.0, 1.0), 1);
+        let input = format!(
+            "{{\"id\":1,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1,\
+             \"tenant\":\"acme\"}}\n\
+             {{\"id\":2,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1,\
+             \"tenant\":\"acme\"}}\n\
+             {{\"id\":3,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1,\
+             \"deadline_ms\":0}}\n"
+        );
+        let mut out = Vec::new();
+        let summary = serve_stream(&service, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(summary.requests, 3);
+        assert_eq!(summary.ok, 1);
+        assert_eq!(summary.failed, 2);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines[0].get("ok").unwrap().as_bool(), Some(true));
+        let quota_err = lines[1].get("error").unwrap().as_str().unwrap();
+        assert!(quota_err.starts_with("quota:"), "{quota_err}");
+        let deadline_err = lines[2].get("error").unwrap().as_str().unwrap();
+        assert!(deadline_err.starts_with("deadline:"), "{deadline_err}");
+        let stats = service.shutdown();
+        assert_eq!(stats.shed_quota, 1);
+        assert_eq!(stats.shed_deadline, 1);
+    }
+
+    #[test]
+    fn malformed_admin_and_stream_keys_error_in_band() {
+        let cases = [
+            (r#"{"stats":1}"#, "must be true"),
+            (r#"{"stats":true,"panel":"x"}"#, "no other keys"),
+            (r#"{"shutdown":false}"#, "must be true"),
+            (r#"{"panel":"x","synth_targets":1,"overlap":2}"#, "need a \"window\""),
+            (r#"{"panel":"x","synth_targets":1,"stream":true}"#, "need a \"window\""),
+            (r#"{"panel":"x","synth_targets":1,"window":1}"#, ">= 2"),
+            (r#"{"panel":"x","synth_targets":1,"deadline_ms":-4}"#, "non-negative"),
+            (r#"{"panel":"x","synth_targets":1,"tenant":7}"#, "string"),
+        ];
+        for (line, needle) in cases {
+            let (_, e) = parse_line(line, 1).expect_err(line);
+            assert!(e.contains(needle), "{line} -> {e}");
+        }
+        // Well-formed variants parse.
+        assert!(matches!(parse_line(r#"{"stats":true}"#, 1), Ok((1, Verb::Stats))));
+        assert!(matches!(
+            parse_line(r#"{"id":4,"shutdown":true}"#, 1),
+            Ok((4, Verb::Shutdown))
+        ));
+        let (_, verb) = parse_line(
+            r#"{"panel":"x","synth_targets":1,"window":8,"overlap":2,"tenant":"t","deadline_ms":50}"#,
+            1,
+        )
+        .unwrap();
+        match verb {
+            Verb::Impute(req) => {
+                assert_eq!(req.tenant.as_deref(), Some("t"));
+                assert_eq!(req.deadline_ms, Some(50));
+                let s = req.stream.unwrap();
+                assert_eq!((s.window, s.overlap), (8, 2));
+            }
+            _ => panic!("expected an impute request"),
+        }
     }
 }

@@ -1,0 +1,196 @@
+//! `serve::mmc` — M/M/c queueing predictions for the serve plane.
+//!
+//! The open-loop load bench (`bench-serve --open-loop`) measures queue
+//! waits under Poisson arrivals; this module predicts them from first
+//! principles so measured behaviour can be cross-checked against an
+//! analytic model — the serve-plane analogue of the Fig-12 hardware
+//! calibration.  A shard with `c` workers fed Poisson arrivals at rate λ
+//! with mean service time E[S] = 1/μ is modelled as M/M/c:
+//!
+//! * offered load (Erlang) `a = λ/μ`, utilisation `ρ = a/c`;
+//! * probability an arrival waits: the Erlang-C formula, computed via the
+//!   numerically-stable Erlang-B recurrence `B(0) = 1`,
+//!   `B(k) = a·B(k−1) / (k + a·B(k−1))`, then
+//!   `C = B(c) / (1 − ρ·(1 − B(c)))`;
+//! * mean queue wait `Wq = C / (c·μ − λ)`.
+//!
+//! The model's service times are exponential; the serve plane's are
+//! near-deterministic per (panel, engine), which makes M/M/c an *upper*
+//! bound tendency on waits (M/D/c waits are about half M/M/c at high ρ).
+//! The agreement gate ([`within_tolerance`]) is therefore deliberately
+//! loose — a factor of [`REL_TOLERANCE`] plus an absolute
+//! [`ABS_TOLERANCE_SECONDS`] floor for scheduler noise — and the bench
+//! only asserts it in the uncongested regime (ρ ≤ 0.7, no shedding),
+//! where both models agree that waits are small.
+
+/// Multiplicative slack for measured-vs-predicted agreement (either
+/// direction): service times are not exponential and the host scheduler is
+/// not a Poisson server.
+pub const REL_TOLERANCE: f64 = 3.0;
+
+/// Absolute slack (seconds) under which measured and predicted waits are
+/// always considered to agree — scheduler wakeup latency alone contributes
+/// milliseconds on a busy CI host.
+pub const ABS_TOLERANCE_SECONDS: f64 = 0.010;
+
+/// What M/M/c says about a shard at one operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct MmcPrediction {
+    /// Server utilisation ρ = λ/(c·μ).
+    pub utilisation: f64,
+    /// Erlang-C probability that an arrival has to queue.
+    pub p_wait: f64,
+    /// Mean queue wait Wq (seconds) — time from arrival to service start.
+    pub mean_wait_seconds: f64,
+}
+
+/// Erlang-B blocking probability via the standard recurrence (stable for
+/// any offered load `a >= 0`).
+pub fn erlang_b(servers: usize, a: f64) -> f64 {
+    let mut b = 1.0;
+    for k in 1..=servers {
+        b = a * b / (k as f64 + a * b);
+    }
+    b
+}
+
+/// Erlang-C waiting probability for `servers` servers at offered load `a`
+/// Erlangs.  Meaningful for ρ = a/servers < 1 (clamped to 1.0 at or past
+/// saturation: every arrival waits).
+pub fn erlang_c(servers: usize, a: f64) -> f64 {
+    let c = servers as f64;
+    if a <= 0.0 {
+        return 0.0;
+    }
+    let rho = a / c;
+    if rho >= 1.0 {
+        return 1.0;
+    }
+    let b = erlang_b(servers, a);
+    b / (1.0 - rho * (1.0 - b))
+}
+
+/// Predict the M/M/c operating point for `servers` workers at arrival rate
+/// `arrival_rate` (req/s) and mean service time `mean_service_seconds`.
+/// `None` when the inputs are degenerate or the queue is unstable (ρ ≥ 1 —
+/// waits diverge; the measured system sheds instead).
+pub fn predict(
+    servers: usize,
+    arrival_rate: f64,
+    mean_service_seconds: f64,
+) -> Option<MmcPrediction> {
+    if servers == 0
+        || !arrival_rate.is_finite()
+        || !mean_service_seconds.is_finite()
+        || arrival_rate <= 0.0
+        || mean_service_seconds <= 0.0
+    {
+        return None;
+    }
+    let c = servers as f64;
+    let a = arrival_rate * mean_service_seconds;
+    let rho = a / c;
+    if rho >= 1.0 {
+        return None;
+    }
+    let p_wait = erlang_c(servers, a);
+    let mu = 1.0 / mean_service_seconds;
+    let mean_wait_seconds = p_wait / (c * mu - arrival_rate);
+    Some(MmcPrediction {
+        utilisation: rho,
+        p_wait,
+        mean_wait_seconds,
+    })
+}
+
+/// The bench gate: do a measured and a predicted mean wait agree, given
+/// the documented slack?  Symmetric — each must be within
+/// [`REL_TOLERANCE`]× of the other plus the absolute floor.
+pub fn within_tolerance(measured_seconds: f64, predicted_seconds: f64) -> bool {
+    if !measured_seconds.is_finite() || !predicted_seconds.is_finite() {
+        return false;
+    }
+    let m = measured_seconds.max(0.0);
+    let p = predicted_seconds.max(0.0);
+    m <= REL_TOLERANCE * p + ABS_TOLERANCE_SECONDS
+        && p <= REL_TOLERANCE * m + ABS_TOLERANCE_SECONDS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_server_reduces_to_mm1_closed_forms() {
+        // M/M/1: p_wait = rho, Wq = rho / (mu - lambda).
+        for &(lambda, mu) in &[(0.5, 1.0), (2.0, 10.0), (7.0, 8.0)] {
+            let rho: f64 = lambda / mu;
+            let pred = predict(1, lambda, 1.0 / mu).unwrap();
+            assert!((pred.utilisation - rho).abs() < 1e-12);
+            assert!((pred.p_wait - rho).abs() < 1e-12, "Erlang C(1, a) must be rho");
+            let wq = rho / (mu - lambda);
+            assert!(
+                (pred.mean_wait_seconds - wq).abs() < 1e-12,
+                "Wq {} vs closed form {wq}",
+                pred.mean_wait_seconds
+            );
+        }
+    }
+
+    #[test]
+    fn erlang_b_and_c_known_values() {
+        // B(1, a) = a / (1 + a).
+        assert!((erlang_b(1, 0.5) - 1.0 / 3.0).abs() < 1e-12);
+        // B(2, 1) = (1/2) / (2 + 1/2)... via recurrence: b1 = 1/2,
+        // b2 = 1*b1 / (2 + 1*b1) = 0.5/2.5 = 0.2.
+        assert!((erlang_b(2, 1.0) - 0.2).abs() < 1e-12);
+        // C(2, 1): rho = 0.5 -> C = 0.2 / (1 - 0.5*0.8) = 1/3.
+        assert!((erlang_c(2, 1.0) - 1.0 / 3.0).abs() < 1e-12);
+        // No load, no waiting; saturation, everyone waits.
+        assert_eq!(erlang_c(4, 0.0), 0.0);
+        assert_eq!(erlang_c(2, 2.0), 1.0);
+        assert_eq!(erlang_c(2, 5.0), 1.0);
+    }
+
+    #[test]
+    fn more_servers_means_less_waiting_at_fixed_utilisation() {
+        // Classic pooling effect: at rho = 0.7, Wq shrinks as c grows.
+        let mean_service = 0.010;
+        let mut last = f64::MAX;
+        for c in [1usize, 2, 4, 8] {
+            let lambda = 0.7 * c as f64 / mean_service;
+            let pred = predict(c, lambda, mean_service).unwrap();
+            assert!((pred.utilisation - 0.7).abs() < 1e-12);
+            assert!(
+                pred.mean_wait_seconds < last,
+                "Wq must fall with pooling (c={c})"
+            );
+            last = pred.mean_wait_seconds;
+        }
+    }
+
+    #[test]
+    fn degenerate_and_unstable_inputs_yield_none() {
+        assert!(predict(0, 1.0, 0.1).is_none());
+        assert!(predict(2, 0.0, 0.1).is_none());
+        assert!(predict(2, 1.0, 0.0).is_none());
+        assert!(predict(2, f64::NAN, 0.1).is_none());
+        // rho >= 1: unstable.
+        assert!(predict(2, 200.0, 0.01).is_none());
+        assert!(predict(2, 201.0, 0.01).is_none());
+    }
+
+    #[test]
+    fn tolerance_gate_is_symmetric_with_absolute_floor() {
+        // Both tiny: always agree.
+        assert!(within_tolerance(0.0, 0.002));
+        assert!(within_tolerance(0.002, 0.0));
+        // Within 3x of each other: agree.
+        assert!(within_tolerance(0.030, 0.015));
+        assert!(within_tolerance(0.015, 0.030));
+        // Far apart beyond floor + factor: disagree, both directions.
+        assert!(!within_tolerance(0.500, 0.050));
+        assert!(!within_tolerance(0.050, 0.500));
+        assert!(!within_tolerance(f64::NAN, 0.1));
+    }
+}

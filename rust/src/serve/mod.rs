@@ -41,10 +41,23 @@
 //!   queue-wait / coalesce-width / batch-id fields and the dosages; see
 //!   [`report`]).
 //!
-//! Three frontends: this library API, `poets-impute serve` (newline-
-//! delimited JSON over stdin/stdout, [`jsonl`]), and the `bench-serve`
-//! closed-loop load generator ([`bench`]) that establishes the throughput
-//! baseline recorded in `BENCH_serve.json`.
+//! Admission is layered (see [`queue`]): a bounded queue (`admission:`
+//! errors), optional per-tenant token-bucket quotas ([`TenantQuota`],
+//! `quota:` errors) and deadline-aware shedding (`deadline_ms` requests are
+//! refused up front when the queue-age estimate from recent service times
+//! already busts the budget, and re-checked worker-side against the
+//! request's true age — queue wait *plus* deferred-mint time).  Requests
+//! may also opt into **windowed streaming** ([`StreamSpec`]): the worker
+//! runs the request window-by-window and pushes [`ServePart`] dosage chunks
+//! as each window's core span completes, with the final report still
+//! carrying the full stitched (bit-identical) dosage matrix.
+//!
+//! Frontends: this library API, `poets-impute serve` (newline-delimited
+//! JSON over stdin/stdout, [`jsonl`]; the same framing over TCP via
+//! [`net`]), the panel-sharded [`ShardedService`] ([`shard`]), and two load
+//! generators ([`bench`]): the closed-loop sweep behind `BENCH_serve.json`
+//! and the Poisson open-loop sweep behind `BENCH_serve_load.json`, cross-
+//! checked against the [`mmc`] M/M/c analytic model.
 //!
 //! ```
 //! use std::sync::Arc;
@@ -57,11 +70,7 @@
 //!
 //! let service = Service::start(Arc::clone(&registry), ServeConfig::default().workers(2));
 //! let report = service
-//!     .submit(ImputeRequest {
-//!         panel: panel.name().to_string(),
-//!         engine: EngineSpec::Rank1,
-//!         targets: targets.into(),
-//!     })
+//!     .submit(ImputeRequest::new(panel.name(), EngineSpec::Rank1, targets))
 //!     .unwrap()
 //!     .wait()
 //!     .unwrap();
@@ -72,13 +81,20 @@
 
 pub mod bench;
 pub mod jsonl;
+pub mod mmc;
+pub mod net;
 pub mod queue;
 pub mod registry;
 pub mod report;
+pub mod shard;
 
-pub use queue::{CoalescePolicy, ImputeRequest, RequestTargets, ServiceStats, Ticket};
+pub use queue::{
+    CoalescePolicy, ImputeRequest, RequestTargets, ServePart, ServiceStats, StreamSpec,
+    TenantQuota, Ticket,
+};
 pub use registry::{PanelRegistry, RegisteredPanel};
 pub use report::ServeReport;
+pub use shard::ShardedService;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -112,6 +128,9 @@ pub struct ServeConfig {
     pub app: RawAppConfig,
     /// Vertex→thread mapping strategy for the event planes.
     pub mapping: MappingStrategy,
+    /// Optional per-tenant token-bucket quota.  Applies to every request
+    /// naming a `tenant`; `None` disables quota shedding entirely.
+    pub quota: Option<TenantQuota>,
 }
 
 impl Default for ServeConfig {
@@ -120,6 +139,7 @@ impl Default for ServeConfig {
             workers: 2,
             coalesce: CoalescePolicy::default(),
             queue_capacity: 1024,
+            quota: None,
             app: RawAppConfig {
                 cluster: ClusterConfig::with_boards(2),
                 states_per_thread: 8,
@@ -148,6 +168,13 @@ impl ServeConfig {
 
     pub fn queue_capacity(mut self, n: usize) -> Self {
         self.queue_capacity = n.max(1);
+        self
+    }
+
+    /// Enable per-tenant token-bucket quotas: `rate_per_s` sustained
+    /// requests/s with a `burst`-token bucket per tenant name.
+    pub fn tenant_quota(mut self, rate_per_s: f64, burst: f64) -> Self {
+        self.quota = Some(TenantQuota::new(rate_per_s, burst));
         self
     }
 
@@ -276,8 +303,11 @@ impl Service {
         }
     }
 
-    /// Admit a request.  Fails fast (`admission: ...`) when the request is
-    /// empty, the queue is full, or the service is shutting down.
+    /// Admit a request.  Sheds fast with a typed error — `admission:` when
+    /// the request is empty, the queue is full or the service is shutting
+    /// down; `deadline:` when the queue-age estimate already exceeds the
+    /// request's `deadline_ms`; `quota:` when the tenant's token bucket is
+    /// empty — all before any engine work is spent.
     pub fn submit(&self, req: ImputeRequest) -> Result<Ticket, String> {
         let mut st = self.shared.state.lock().expect(POISONED);
         if req.targets.is_empty() {
@@ -298,20 +328,59 @@ impl Service {
                 self.shared.cfg.queue_capacity
             ));
         }
+        // Deadline first (it spends nothing), then quota (it spends a
+        // token): a doomed deadline never burns a tenant's budget.
+        if let Some(dl) = req.deadline_ms {
+            let est = st.estimated_wait_seconds(self.shared.cfg.workers);
+            if est * 1e3 > dl as f64 {
+                st.stats.rejected += 1;
+                st.stats.shed_deadline += 1;
+                return Err(format!(
+                    "deadline: estimated queue wait {:.1} ms exceeds the {dl} ms budget \
+                     ({} pending)",
+                    est * 1e3,
+                    st.pending.len()
+                ));
+            }
+        }
+        if let (Some(tenant), Some(quota)) =
+            (req.tenant.as_deref(), self.shared.cfg.quota.as_ref())
+        {
+            if !st.take_token(tenant, quota, Instant::now()) {
+                st.stats.rejected += 1;
+                st.stats.shed_quota += 1;
+                return Err(format!(
+                    "quota: tenant {tenant:?} is out of tokens \
+                     (rate {}/s, burst {})",
+                    quota.rate_per_s, quota.burst
+                ));
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         st.stats.accepted += 1;
         let (tx, rx) = mpsc::channel();
+        let (parts_tx, parts_rx) = if req.stream.is_some() {
+            let (ptx, prx) = mpsc::channel();
+            (Some(ptx), Some(prx))
+        } else {
+            (None, None)
+        };
         st.pending.push_back(Pending {
             id,
             req,
             enqueued: Instant::now(),
             reply: tx,
+            parts: parts_tx,
         });
         drop(st);
         // Wake every worker: idle ones race for the head, lingering ones
         // re-scan for batch-mates.
         self.shared.work.notify_all();
-        Ok(Ticket { id, rx })
+        Ok(Ticket {
+            id,
+            rx,
+            parts: parts_rx,
+        })
     }
 
     /// Submit and block for the result (the one-shot convenience path).
@@ -322,6 +391,16 @@ impl Service {
     /// Snapshot of the aggregate counters.
     pub fn stats(&self) -> ServiceStats {
         self.shared.state.lock().expect(POISONED).stats
+    }
+
+    /// Requests currently waiting for a worker (excludes in-flight work).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.state.lock().expect(POISONED).pending.len()
+    }
+
+    /// The configuration this service was started with.
+    pub fn config(&self) -> &ServeConfig {
+        &self.shared.cfg
     }
 
     /// The shared panel registry.
@@ -422,7 +501,6 @@ fn next_group(shared: &Shared) -> Option<Group> {
 /// per-request errors.
 fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: usize) {
     let Group { batch_id, members } = group;
-    let started = Instant::now();
     let panel_name = members[0].req.panel.clone();
     let spec = members[0].req.engine;
 
@@ -463,7 +541,48 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
             Err(e) => finish(shared, p, Err(e)),
         }
     }
+
+    // Execution starts NOW: everything since `enqueued` — queue wait AND the
+    // resolve/mint/validation work just done on this worker — is the
+    // request's true age.  That age is what `queue_wait_seconds` reports and
+    // what deadlines are re-checked against (a deferred mint's cost must be
+    // visible to both; admission could only estimate it).
+    let exec_start = Instant::now();
+    let mut runnable: Vec<(Pending, Vec<TargetHaplotype>)> = Vec::with_capacity(good.len());
+    for (p, ts) in good {
+        let age_ms = exec_start.duration_since(p.enqueued).as_secs_f64() * 1e3;
+        match p.req.deadline_ms {
+            Some(dl) if age_ms > dl as f64 => {
+                let e = format!(
+                    "deadline: request aged {age_ms:.1} ms (queue wait + mint) past its \
+                     {dl} ms budget before execution"
+                );
+                finish(shared, p, Err(e));
+            }
+            _ => runnable.push((p, ts)),
+        }
+    }
+    let good = runnable;
     if good.is_empty() {
+        return;
+    }
+
+    // Streamed requests never coalesce (see `QueueState::drain_matching`),
+    // so a stream spec on the head means a singleton group: run it window-
+    // by-window, emitting parts as cores complete.
+    if good.len() == 1 && good[0].0.req.stream.is_some() {
+        let (p, targets) = good.into_iter().next().expect("len checked above");
+        let ctx = RequestCtx {
+            batch_id,
+            width: 1,
+            queue_wait_seconds: exec_start.duration_since(p.enqueued).as_secs_f64(),
+            worker,
+        };
+        let result = run_streamed(shared, &panel, &p, targets, &ctx);
+        if let Ok(r) = &result {
+            note_service_time(shared, r.report.host_seconds, 1);
+        }
+        finish(shared, p, result);
         return;
     }
 
@@ -505,7 +624,7 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
                         good,
                         batch_id,
                         width,
-                        started,
+                        exec_start,
                         worker,
                     );
                 } else {
@@ -513,7 +632,9 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
                         let ctx = RequestCtx {
                             batch_id,
                             width,
-                            queue_wait_seconds: started.duration_since(p.enqueued).as_secs_f64(),
+                            queue_wait_seconds: exec_start
+                                .duration_since(p.enqueued)
+                                .as_secs_f64(),
                             worker,
                         };
                         let result = if per_request_prepare {
@@ -556,7 +677,7 @@ fn run_merged_wave(
     good: Vec<(Pending, Vec<TargetHaplotype>)>,
     batch_id: u64,
     width: usize,
-    started: Instant,
+    exec_start: Instant,
     worker: usize,
 ) -> bool {
     // Drain the owned target vectors into one wave — no cloning; only the
@@ -592,14 +713,18 @@ fn run_merged_wave(
             return true;
         }
     };
-    shared.state.lock().expect(POISONED).stats.merged_waves += 1;
+    {
+        let mut st = shared.state.lock().expect(POISONED);
+        st.stats.merged_waves += 1;
+        st.note_service_time(host_seconds / width.max(1) as f64);
+    }
     let mut rows = out.dosages.into_iter();
     for (p, n) in members {
         let dosages: Vec<Vec<f32>> = rows.by_ref().take(n).collect();
         let ctx = RequestCtx {
             batch_id,
             width,
-            queue_wait_seconds: started.duration_since(p.enqueued).as_secs_f64(),
+            queue_wait_seconds: exec_start.duration_since(p.enqueued).as_secs_f64(),
             worker,
         };
         let report = make_report(
@@ -647,6 +772,7 @@ fn serve_one(
     let t0 = Instant::now();
     let out = guard("run", || engine.run(&TargetBatch::new(targets)))?;
     let host_seconds = t0.elapsed().as_secs_f64();
+    note_service_time(shared, host_seconds, 1);
     if out.dosages.len() != n_targets {
         return Err(format!(
             "{} engine returned {} dosage rows for a {}-target request",
@@ -712,14 +838,97 @@ fn make_report(
     }
 }
 
+/// Run one streamed request window-by-window: validate the plan, run each
+/// window as its own [`ImputeSession`](crate::session::ImputeSession)
+/// (windowed workloads have differing marker spans, so the worker's
+/// whole-panel engine cache does not apply), push each window's core-span
+/// dosage rows through the request's [`ServePart`] channel as it completes,
+/// then stitch the full report exactly like `genomics::window::run_windowed`
+/// — the final report is bit-identical to the non-streamed run.
+fn run_streamed(
+    shared: &Shared,
+    panel: &RegisteredPanel,
+    p: &Pending,
+    targets: Vec<TargetHaplotype>,
+    ctx: &RequestCtx,
+) -> Result<ServeReport, String> {
+    let stream = p.req.stream.expect("caller checked stream.is_some()");
+    let spec = p.req.engine;
+    let full = Workload::from_shared(panel.panel_arc(), targets)?;
+    let plan = crate::genomics::window::WindowPlan::new(
+        panel.panel().n_mark(),
+        stream.window,
+        stream.overlap,
+    )?;
+    crate::genomics::window::validate_windowed(&full, &plan, spec)?;
+    let n_windows = plan.len();
+    let mut reports = Vec::with_capacity(n_windows);
+    for (i, win) in plan.windows().iter().enumerate() {
+        let wl = plan.slice_workload(&full, win);
+        let report = guard("run", || {
+            crate::session::ImputeSession::new(wl)
+                .engine(spec)
+                .app_config(shared.cfg.app.clone())
+                .mapping(shared.cfg.mapping)
+                .run()
+        })?;
+        if let Some(tx) = &p.parts {
+            let rows: Vec<Vec<f32>> = report
+                .dosages
+                .iter()
+                .map(|row| row[win.core_start - win.start..win.core_end - win.start].to_vec())
+                .collect();
+            // A client that stopped reading parts just misses them; the
+            // stitched final report still answers the ticket.
+            let _ = tx.send(ServePart {
+                request_id: p.id,
+                window_index: i,
+                n_windows,
+                core_start: win.core_start,
+                core_end: win.core_end,
+                rows,
+            });
+        }
+        reports.push(report);
+    }
+    let mut merged = crate::genomics::window::stitch_reports(&full, &plan, reports)?;
+    merged.panel = Some(panel.name().to_string());
+    merged.provenance = panel.recipe().copied();
+    Ok(ServeReport {
+        request_id: p.id,
+        panel: panel.name().to_string(),
+        batch_id: ctx.batch_id,
+        coalesce_width: ctx.width,
+        queue_wait_seconds: ctx.queue_wait_seconds,
+        worker: ctx.worker,
+        report: merged,
+    })
+}
+
+/// Feed one engine run's wall time back into the admission-side service-time
+/// EWMA (per request: the batch's host seconds split over its width).
+fn note_service_time(shared: &Shared, host_seconds: f64, width: usize) {
+    shared
+        .state
+        .lock()
+        .expect(POISONED)
+        .note_service_time(host_seconds / width.max(1) as f64);
+}
+
 /// Answer a request and bump the counters.
 fn finish(shared: &Shared, p: Pending, result: Result<ServeReport, String>) {
     {
         let mut st = shared.state.lock().expect(POISONED);
-        if result.is_ok() {
-            st.stats.completed += 1;
-        } else {
-            st.stats.failed += 1;
+        match &result {
+            Ok(_) => st.stats.completed += 1,
+            Err(e) => {
+                st.stats.failed += 1;
+                // Worker-side deadline expiry (queue + mint overran the
+                // budget) is a shed, not an engine failure.
+                if e.starts_with("deadline:") {
+                    st.stats.shed_deadline += 1;
+                }
+            }
         }
     }
     // A client that dropped its ticket just doesn't read the answer.
@@ -756,11 +965,7 @@ mod tests {
 
     fn request(service: &Service, engine: EngineSpec, n: usize, seed: u64) -> ImputeRequest {
         let panel = service.registry().resolve(PANEL).unwrap();
-        ImputeRequest {
-            panel: PANEL.to_string(),
-            engine,
-            targets: panel.synthetic_targets(n, seed).unwrap().into(),
-        }
+        ImputeRequest::new(PANEL, engine, panel.synthetic_targets(n, seed).unwrap())
     }
 
     #[test]
@@ -785,20 +990,20 @@ mod tests {
     fn empty_requests_are_rejected_at_admission() {
         let svc = service(ServeConfig::default());
         let err = svc
-            .submit(ImputeRequest {
-                panel: PANEL.into(),
-                engine: EngineSpec::Baseline,
-                targets: RequestTargets::Explicit(Vec::new()),
-            })
+            .submit(ImputeRequest::new(
+                PANEL,
+                EngineSpec::Baseline,
+                RequestTargets::Explicit(Vec::new()),
+            ))
             .unwrap_err();
         assert!(err.starts_with("admission:"), "{err}");
         // A zero-wide deferred mint is equally empty at admission time.
         let err = svc
-            .submit(ImputeRequest {
-                panel: PANEL.into(),
-                engine: EngineSpec::Baseline,
-                targets: RequestTargets::Mint { count: 0, seed: 1 },
-            })
+            .submit(ImputeRequest::new(
+                PANEL,
+                EngineSpec::Baseline,
+                RequestTargets::Mint { count: 0, seed: 1 },
+            ))
             .unwrap_err();
         assert!(err.starts_with("admission:"), "{err}");
         assert_eq!(svc.shutdown().rejected, 2);
@@ -808,11 +1013,11 @@ mod tests {
     fn unknown_panel_fails_the_request_not_the_worker() {
         let svc = service(ServeConfig::default().workers(1));
         let err = svc
-            .submit_wait(ImputeRequest {
-                panel: "nonexistent".into(),
-                engine: EngineSpec::Baseline,
-                targets: vec![crate::model::panel::TargetHaplotype::new(vec![-1, 0, 1])].into(),
-            })
+            .submit_wait(ImputeRequest::new(
+                "nonexistent",
+                EngineSpec::Baseline,
+                vec![crate::model::panel::TargetHaplotype::new(vec![-1, 0, 1])],
+            ))
             .unwrap_err();
         assert!(err.contains("unknown panel"), "{err}");
         // The worker survived: a valid follow-up request still works.
@@ -827,11 +1032,11 @@ mod tests {
     fn marker_mismatch_fails_individually() {
         let svc = service(ServeConfig::default().workers(1));
         let err = svc
-            .submit_wait(ImputeRequest {
-                panel: PANEL.into(),
-                engine: EngineSpec::Baseline,
-                targets: vec![crate::model::panel::TargetHaplotype::new(vec![-1; 7])].into(),
-            })
+            .submit_wait(ImputeRequest::new(
+                PANEL,
+                EngineSpec::Baseline,
+                vec![crate::model::panel::TargetHaplotype::new(vec![-1; 7])],
+            ))
             .unwrap_err();
         assert!(err.contains("marker mismatch"), "{err}");
         let stats = svc.shutdown();
@@ -944,15 +1149,197 @@ mod tests {
         let big = "synth:hap=64,mark=512,seed=3";
         let panel = svc.registry().resolve(big).unwrap();
         let err = svc
-            .submit_wait(ImputeRequest {
-                panel: big.into(),
-                engine: EngineSpec::Event,
-                targets: panel.synthetic_targets(1, 0).unwrap().into(),
-            })
+            .submit_wait(ImputeRequest::new(
+                big,
+                EngineSpec::Event,
+                panel.synthetic_targets(1, 0).unwrap(),
+            ))
             .unwrap_err();
         assert!(err.contains("panicked"), "{err}");
         let ok = svc.submit_wait(request(&svc, EngineSpec::Baseline, 1, 4));
         assert!(ok.is_ok(), "{ok:?}");
         svc.shutdown();
+    }
+
+    #[test]
+    fn tenant_quota_sheds_after_burst() {
+        // rate 0 / burst 1: exactly one admitted request per tenant, ever.
+        let svc = service(ServeConfig::default().workers(1).tenant_quota(0.0, 1.0));
+        svc.submit_wait(request(&svc, EngineSpec::Baseline, 1, 0).tenant("acme"))
+            .unwrap();
+        let err = svc
+            .submit(request(&svc, EngineSpec::Baseline, 1, 1).tenant("acme"))
+            .unwrap_err();
+        assert!(err.starts_with("quota:"), "{err}");
+        // A different tenant, and tenant-less requests, are unaffected.
+        svc.submit_wait(request(&svc, EngineSpec::Baseline, 1, 2).tenant("other"))
+            .unwrap();
+        svc.submit_wait(request(&svc, EngineSpec::Baseline, 1, 3))
+            .unwrap();
+        let stats = svc.shutdown();
+        assert_eq!(stats.shed_quota, 1);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.completed, 3);
+    }
+
+    #[test]
+    fn zero_deadline_expires_worker_side_and_counts_as_shed() {
+        // An idle queue gives a zero wait estimate, so admission lets a
+        // 0 ms deadline through — the worker's age re-check (which sees the
+        // real queue + mint time) must then expire it in-band.
+        let svc = service(ServeConfig::default().workers(1).no_coalesce());
+        let err = svc
+            .submit_wait(request(&svc, EngineSpec::Baseline, 1, 0).deadline_ms(0))
+            .unwrap_err();
+        assert!(err.starts_with("deadline:"), "{err}");
+        // The worker survived and serves the next request.
+        svc.submit_wait(request(&svc, EngineSpec::Baseline, 1, 1))
+            .unwrap();
+        let stats = svc.shutdown();
+        assert_eq!(stats.shed_deadline, 1);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn deadline_admission_sheds_on_backlog_estimate() {
+        // Prime the service-time EWMA with one heavy completed request,
+        // then stack a backlog behind a single worker: a 1 ms deadline on a
+        // deep queue must shed AT ADMISSION (rejected, not failed).
+        let heavy = "synth:hap=8,mark=20001,annot=0.1,seed=13";
+        let svc = service(ServeConfig::default().workers(1).no_coalesce());
+        let panel = svc.registry().resolve(heavy).unwrap();
+        let targets = panel.synthetic_targets(8, 1).unwrap();
+        svc.submit_wait(ImputeRequest::new(heavy, EngineSpec::Baseline, targets.clone()))
+            .unwrap();
+
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|_| {
+                svc.submit(ImputeRequest::new(
+                    heavy,
+                    EngineSpec::Baseline,
+                    targets.clone(),
+                ))
+                .unwrap()
+            })
+            .collect();
+        // With >= 3 pending and a multi-ms EWMA, the estimate dwarfs 1 ms.
+        let err = svc
+            .submit(
+                ImputeRequest::new(heavy, EngineSpec::Baseline, targets.clone()).deadline_ms(1),
+            )
+            .unwrap_err();
+        assert!(err.starts_with("deadline:"), "{err}");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.shed_deadline, 1);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.failed, 0, "admission sheds never reach a worker");
+    }
+
+    #[test]
+    fn minted_request_wait_charges_mint_time() {
+        // Satellite: worker-side mint time must be visible in
+        // `queue_wait_seconds`.  Same idle single-worker service, same
+        // panel; the minted twin's wait includes drawing 64×20001
+        // observations, the explicit twin's does not.  Min-of-3 filters
+        // scheduler noise.
+        let heavy = "synth:hap=8,mark=20001,annot=0.1,seed=17";
+        let svc = service(ServeConfig::default().workers(1).no_coalesce());
+        let panel = svc.registry().resolve(heavy).unwrap();
+        let explicit = panel.minted_targets(64, 5).unwrap();
+
+        let mut explicit_waits = Vec::new();
+        let mut minted_waits = Vec::new();
+        for trial in 0..3 {
+            let r = svc
+                .submit_wait(ImputeRequest::new(
+                    heavy,
+                    EngineSpec::Baseline,
+                    explicit.clone(),
+                ))
+                .unwrap();
+            explicit_waits.push(r.queue_wait_seconds);
+            let r = svc
+                .submit_wait(ImputeRequest::new(
+                    heavy,
+                    EngineSpec::Baseline,
+                    RequestTargets::Mint {
+                        count: 64,
+                        seed: trial,
+                    },
+                ))
+                .unwrap();
+            minted_waits.push(r.queue_wait_seconds);
+        }
+        let explicit_min = explicit_waits.iter().cloned().fold(f64::MAX, f64::min);
+        let minted_min = minted_waits.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            minted_min >= explicit_min,
+            "mint time must be charged to the request's wait \
+             (minted {minted_waits:?} vs explicit {explicit_waits:?})"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn streamed_request_emits_parts_and_matches_unstreamed() {
+        let panel_spec = "synth:hap=8,mark=41,annot=0.2,seed=19";
+        let svc = service(ServeConfig::default().workers(1));
+        let panel = svc.registry().resolve(panel_spec).unwrap();
+        let targets = panel.synthetic_targets(2, 3).unwrap();
+
+        let plain = svc
+            .submit_wait(ImputeRequest::new(
+                panel_spec,
+                EngineSpec::Rank1,
+                targets.clone(),
+            ))
+            .unwrap();
+
+        let ticket = svc
+            .submit(
+                ImputeRequest::new(panel_spec, EngineSpec::Rank1, targets)
+                    .stream_windows(16, 4),
+            )
+            .unwrap();
+        assert!(ticket.is_streaming());
+        let mut parts = Vec::new();
+        while let Some(part) = ticket.recv_part() {
+            parts.push(part);
+        }
+        let streamed = ticket.wait().unwrap();
+
+        // Parts partition the marker axis in order and match the final
+        // stitched dosage matrix slice-for-slice.
+        assert!(!parts.is_empty());
+        assert_eq!(parts[0].core_start, 0);
+        assert_eq!(parts.last().unwrap().core_end, 41);
+        let n_windows = parts[0].n_windows;
+        assert_eq!(parts.len(), n_windows);
+        for (i, part) in parts.iter().enumerate() {
+            assert_eq!(part.window_index, i);
+            assert_eq!(part.request_id, streamed.request_id);
+            if i > 0 {
+                assert_eq!(part.core_start, parts[i - 1].core_end);
+            }
+            assert_eq!(part.rows.len(), 2);
+            for (t, row) in part.rows.iter().enumerate() {
+                assert_eq!(
+                    row.as_slice(),
+                    &streamed.dosages()[t][part.core_start..part.core_end],
+                    "part {i} target {t} must match the stitched report"
+                );
+            }
+        }
+        assert_eq!(streamed.report.windows, Some(n_windows));
+        // Windowed-vs-whole numerics differ only by windowing, which the
+        // engine-equivalence suite bounds; here the shapes must agree.
+        assert_eq!(streamed.dosages().len(), plain.dosages().len());
+        assert_eq!(streamed.dosages()[0].len(), plain.dosages()[0].len());
+        let stats = svc.shutdown();
+        assert_eq!(stats.completed, 2);
     }
 }

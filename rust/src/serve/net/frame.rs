@@ -1,0 +1,177 @@
+//! Length-framed transport codec.
+//!
+//! One frame = a big-endian `u32` payload length followed by that many
+//! bytes of UTF-8 JSON — the same documents the stdin JSONL frontend
+//! exchanges one-per-line, minus the trailing newline (TCP is not
+//! line-oriented; the length prefix is the delimiter).  The codec is
+//! deliberately tiny and symmetric: clients and the server use the same
+//! two functions, and the CLI's `serve --connect` bridge is nothing but
+//! `read line → write_frame` / `read_frame → write line`.
+//!
+//! Malformed input never panics and never kills the listener; per
+//! connection it degrades to:
+//!
+//! * clean EOF on a frame boundary → [`ReadFrame::Eof`] (client done);
+//! * a length prefix above [`MAX_FRAME_LEN`] → [`FrameError::Oversize`]
+//!   (answered in-band with a `serve-error/v1`, then the connection is
+//!   closed — the declared length cannot be trusted as a skip distance);
+//! * EOF mid-prefix or mid-payload → [`FrameError::Truncated`] (dropped:
+//!   there is no response channel left worth writing to);
+//! * any transport error → [`FrameError::Io`].
+
+use std::io::{self, Read, Write};
+
+/// Hard cap on one frame's payload (64 MiB).  Large enough for a
+/// chromosome-scale dosage matrix, small enough that a hostile 4 GiB
+/// length prefix cannot make a connection thread allocate unboundedly.
+pub const MAX_FRAME_LEN: u32 = 64 << 20;
+
+/// One read attempt's outcome (success side).
+#[derive(Debug)]
+pub enum ReadFrame {
+    /// A complete frame's payload.
+    Frame(Vec<u8>),
+    /// The peer closed cleanly on a frame boundary.
+    Eof,
+}
+
+/// One read attempt's outcome (failure side).
+#[derive(Debug)]
+pub enum FrameError {
+    /// Declared length exceeds [`MAX_FRAME_LEN`].
+    Oversize(u32),
+    /// The stream ended inside a length prefix or payload.
+    Truncated,
+    /// Transport failure.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversize(n) => write!(
+                f,
+                "frame: declared length {n} exceeds the {MAX_FRAME_LEN}-byte cap"
+            ),
+            FrameError::Truncated => write!(f, "frame: stream ended mid-frame"),
+            FrameError::Io(e) => write!(f, "frame: {e}"),
+        }
+    }
+}
+
+/// Read one length-prefixed frame.  Distinguishes a clean close (EOF
+/// before any prefix byte) from a truncated one (EOF after).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadFrame, FrameError> {
+    let mut prefix = [0u8; 4];
+    let mut filled = 0;
+    while filled < prefix.len() {
+        match r.read(&mut prefix[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(ReadFrame::Eof)
+                } else {
+                    Err(FrameError::Truncated)
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let len = u32::from_be_bytes(prefix);
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::Oversize(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    match r.read_exact(&mut payload) {
+        Ok(()) => Ok(ReadFrame::Frame(payload)),
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => Err(FrameError::Truncated),
+        Err(e) => Err(FrameError::Io(e)),
+    }
+}
+
+/// Write one frame (prefix + payload).  The caller flushes (a writer
+/// draining a burst of parts batches its flushes).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME_LEN as usize);
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(payloads: &[&[u8]]) -> Vec<Vec<u8>> {
+        let mut buf = Vec::new();
+        for p in payloads {
+            write_frame(&mut buf, p).unwrap();
+        }
+        let mut r = Cursor::new(buf);
+        let mut out = Vec::new();
+        loop {
+            match read_frame(&mut r).unwrap() {
+                ReadFrame::Frame(p) => out.push(p),
+                ReadFrame::Eof => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn frames_roundtrip_in_order() {
+        let out = roundtrip(&[b"hello", b"", b"{\"id\":1}"]);
+        assert_eq!(out, vec![b"hello".to_vec(), Vec::new(), b"{\"id\":1}".to_vec()]);
+    }
+
+    #[test]
+    fn clean_eof_only_on_frame_boundary() {
+        let mut empty = Cursor::new(Vec::<u8>::new());
+        assert!(matches!(read_frame(&mut empty).unwrap(), ReadFrame::Eof));
+
+        // EOF inside the prefix.
+        let mut mid_prefix = Cursor::new(vec![0u8, 0]);
+        assert!(matches!(
+            read_frame(&mut mid_prefix).unwrap_err(),
+            FrameError::Truncated
+        ));
+
+        // EOF inside the payload.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut mid_payload = Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut mid_payload).unwrap_err(),
+            FrameError::Truncated
+        ));
+    }
+
+    #[test]
+    fn oversize_prefix_is_rejected_without_allocating() {
+        let mut buf = u32::MAX.to_be_bytes().to_vec();
+        buf.extend_from_slice(b"junk");
+        let mut r = Cursor::new(buf);
+        match read_frame(&mut r).unwrap_err() {
+            FrameError::Oversize(n) => assert_eq!(n, u32::MAX),
+            other => panic!("expected Oversize, got {other:?}"),
+        }
+        // Error text names the cap (it is sent in-band to the client).
+        let msg = FrameError::Oversize(u32::MAX).to_string();
+        assert!(msg.contains("exceeds"), "{msg}");
+    }
+
+    #[test]
+    fn junk_after_a_valid_frame_surfaces_as_truncation_not_panic() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"{\"ok\":true}").unwrap();
+        buf.extend_from_slice(&[0x00, 0x01]); // stray bytes, then EOF
+        let mut r = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r).unwrap(), ReadFrame::Frame(_)));
+        assert!(matches!(
+            read_frame(&mut r).unwrap_err(),
+            FrameError::Truncated
+        ));
+    }
+}

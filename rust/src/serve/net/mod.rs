@@ -1,0 +1,467 @@
+//! `serve::net` — the socketed serve plane.
+//!
+//! A TCP transport over the exact same protocol the stdin frontend speaks:
+//! each frame ([`frame`]) carries one JSON document — request in, response
+//! (or streamed `serve-report-part/v1` sequence) out — byte-identical to
+//! the corresponding stdin JSONL line minus the newline.  Parsing and
+//! response construction are shared with [`super::jsonl`], so the two
+//! frontends cannot drift.
+//!
+//! ## Concurrency model
+//!
+//! One accept loop (non-blocking, polling the shutdown flag), two threads
+//! per connection:
+//!
+//! * the **reader** decodes frames, parses verbs, submits to the
+//!   [`ShardedService`], and hands tickets to the writer over a *bounded*
+//!   channel ([`CONN_BACKLOG`] slots);
+//! * the **writer** resolves tickets in request order and writes response
+//!   frames (streamed parts as each window completes).
+//!
+//! The bounded channel is the per-connection backpressure: a client that
+//! stops reading stalls its own writer, fills its own channel, and blocks
+//! its own reader — it never blocks the accept loop or another
+//! connection.  A write timeout ([`WRITE_TIMEOUT`]) eventually reaps
+//! connections that are stalled *and* dead.
+//!
+//! One admission difference from the pipe frontend: stdin's single reader
+//! blocks on its own head-of-line response when the service queue fills
+//! (a pipe is happy to wait), but a TCP service has many competing
+//! submitters, so `admission: queue full` sheds in-band instead — the
+//! client sees a typed `serve-error/v1` and may retry.
+//!
+//! ## Degradation and shutdown
+//!
+//! Malformed input follows [`frame`]'s taxonomy: an oversize length prefix
+//! is answered in-band then the connection closes (the declared length
+//! cannot be trusted as a skip distance); a truncated or garbled stream
+//! drops that connection silently.  Neither ever panics or stalls the
+//! listener.
+//!
+//! A `{"shutdown": true}` verb from any connection (the SIGTERM-equivalent
+//! for the socket transport) is acknowledged with a draining
+//! `serve-stats/v1`, then: the accept loop stops, every open connection's
+//! read half is shut down (its reader sees EOF and drains in-flight
+//! tickets to its client), all handlers are joined, and [`serve_tcp`]
+//! returns.  The caller then drains the service itself
+//! ([`ShardedService::shutdown`]) — every admitted request completes.
+
+pub mod frame;
+
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::jsonl::{self, StreamSummary, Verb};
+use super::queue::Ticket;
+use super::ShardedService;
+
+use frame::{read_frame, FrameError, ReadFrame};
+
+/// Per-connection response backlog (tickets + ready documents) before the
+/// reader blocks — the slow-client backpressure bound.
+pub const CONN_BACKLOG: usize = 64;
+
+/// Give up writing to a client that has stalled this long; the connection
+/// is dropped (its admitted requests still complete server-side).
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// What a listener session did, summed over every connection.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TcpServeSummary {
+    pub connections: u64,
+    pub requests: u64,
+    pub ok: u64,
+    pub failed: u64,
+}
+
+/// One in-order response slot travelling reader → writer.
+enum ConnItem {
+    /// Already answered (parse/admission error, admin verb).
+    Ready(Json),
+    /// Waiting on the service.
+    InFlight(i64, Ticket),
+    /// Waiting on the service, emitting parts as windows complete.
+    Streaming(i64, Ticket),
+}
+
+/// Serve `listener` until a `shutdown` verb arrives on any connection.
+/// Per-request and per-connection failures are absorbed (in-band errors or
+/// connection drops); only listener-level failures return `Err`.  The
+/// caller still owns the service and is expected to drain it afterwards.
+pub fn serve_tcp(
+    service: &ShardedService,
+    listener: TcpListener,
+) -> Result<TcpServeSummary, String> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("listener: {e}"))?;
+    let shutdown = AtomicBool::new(false);
+    let conns: Mutex<Vec<TcpStream>> = Mutex::new(Vec::new());
+    let mut totals = TcpServeSummary::default();
+
+    thread::scope(|s| -> Result<(), String> {
+        let mut handles = Vec::new();
+        while !shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nodelay(true);
+                    // Keep a handle on the read half so graceful shutdown
+                    // can nudge a blocked reader to EOF.
+                    if let Ok(clone) = stream.try_clone() {
+                        conns.lock().unwrap().push(clone);
+                    }
+                    totals.connections += 1;
+                    let shutdown = &shutdown;
+                    handles.push(s.spawn(move || handle_conn(service, stream, shutdown)));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(format!("accept: {e}")),
+            }
+        }
+        // Drain: stop accepting (done), EOF every open reader, join.
+        for c in conns.lock().unwrap().iter() {
+            let _ = c.shutdown(Shutdown::Read);
+        }
+        for h in handles {
+            if let Ok(sm) = h.join() {
+                totals.requests += sm.requests;
+                totals.ok += sm.ok;
+                totals.failed += sm.failed;
+            }
+        }
+        Ok(())
+    })?;
+    Ok(totals)
+}
+
+/// One connection's reader: frames → verbs → tickets, in-order handoff to
+/// the writer thread.  Returns the connection's combined summary.
+fn handle_conn(service: &ShardedService, stream: TcpStream, shutdown: &AtomicBool) -> StreamSummary {
+    let Ok(write_half) = stream.try_clone() else {
+        return StreamSummary::default();
+    };
+    let _ = write_half.set_write_timeout(Some(WRITE_TIMEOUT));
+    let (tx, rx) = mpsc::sync_channel::<ConnItem>(CONN_BACKLOG);
+    let writer = thread::spawn(move || write_conn(write_half, rx));
+
+    let mut reader = BufReader::new(stream);
+    let mut requests = 0u64;
+    let mut line_no = 0i64;
+    loop {
+        match read_frame(&mut reader) {
+            Ok(ReadFrame::Eof) => break,
+            Ok(ReadFrame::Frame(bytes)) => {
+                line_no += 1;
+                requests += 1;
+                let item = match String::from_utf8(bytes) {
+                    Err(_) => {
+                        ConnItem::Ready(jsonl::error_json(line_no, "request frame is not UTF-8"))
+                    }
+                    Ok(text) => match jsonl::parse_line(&text, line_no) {
+                        Ok((id, Verb::Impute(req))) => match service.submit(*req) {
+                            Ok(t) if t.is_streaming() => ConnItem::Streaming(id, t),
+                            Ok(t) => ConnItem::InFlight(id, t),
+                            Err(e) => ConnItem::Ready(jsonl::error_json(id, &e)),
+                        },
+                        Ok((id, Verb::Stats)) => {
+                            ConnItem::Ready(jsonl::stats_json(id, service, false))
+                        }
+                        Ok((id, Verb::Shutdown)) => {
+                            shutdown.store(true, Ordering::SeqCst);
+                            let _ = tx.send(ConnItem::Ready(jsonl::stats_json(id, service, true)));
+                            break;
+                        }
+                        Err((id, e)) => ConnItem::Ready(jsonl::error_json(id, &e)),
+                    },
+                };
+                if tx.send(item).is_err() {
+                    break; // writer bailed (client gone)
+                }
+            }
+            Err(FrameError::Oversize(n)) => {
+                // Answer in-band, then close: the declared length cannot be
+                // trusted as a skip distance, so there is no resync point.
+                line_no += 1;
+                requests += 1;
+                let msg = FrameError::Oversize(n).to_string();
+                let _ = tx.send(ConnItem::Ready(jsonl::error_json(line_no, &msg)));
+                break;
+            }
+            Err(_) => break, // truncated / transport error: drop silently
+        }
+    }
+    drop(tx); // writer drains remaining items, then exits
+    let mut summary = writer.join().unwrap_or_default();
+    summary.requests += requests;
+    let _ = reader.get_ref().shutdown(Shutdown::Both);
+    summary
+}
+
+/// One connection's writer: resolve items in request order, frame out the
+/// responses.  On a write failure the client is gone — stop writing and
+/// let the reader's next handoff fail (admitted work still completes
+/// server-side).
+fn write_conn(stream: TcpStream, rx: mpsc::Receiver<ConnItem>) -> StreamSummary {
+    let mut w = BufWriter::new(stream);
+    let mut summary = StreamSummary::default();
+    for item in rx {
+        let wrote = match item {
+            ConnItem::Ready(json) => {
+                match json.get("ok").and_then(Json::as_bool) {
+                    Some(true) => summary.ok += 1,
+                    _ => summary.failed += 1,
+                }
+                emit(&mut w, &json)
+            }
+            ConnItem::InFlight(id, ticket) => {
+                let json = jsonl::result_json(id, ticket.wait(), &mut summary);
+                emit(&mut w, &json)
+            }
+            ConnItem::Streaming(id, ticket) => (|| {
+                let mut parts = 0usize;
+                while let Some(part) = ticket.recv_part() {
+                    emit(&mut w, &jsonl::part_json(id, &part))?;
+                    parts += 1;
+                }
+                let json = jsonl::stream_final_json(id, ticket.wait(), parts, &mut summary);
+                emit(&mut w, &json)
+            })(),
+        };
+        if wrote.is_err() {
+            break;
+        }
+    }
+    summary
+}
+
+/// Frame + flush one document (each streamed part flushes: the client
+/// should see windows as they complete, not at connection EOF).
+fn emit(w: &mut BufWriter<TcpStream>, json: &Json) -> io::Result<()> {
+    frame::write_frame(w, json.render().as_bytes())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{PanelRegistry, ServeConfig};
+    use std::net::SocketAddr;
+    use std::sync::Arc;
+
+    const PANEL: &str = "synth:hap=8,mark=21,annot=0.2,seed=7";
+
+    fn spawn_server(
+        cfg: ServeConfig,
+        shards: usize,
+    ) -> (
+        Arc<ShardedService>,
+        SocketAddr,
+        thread::JoinHandle<Result<TcpServeSummary, String>>,
+    ) {
+        let svc = Arc::new(ShardedService::start(
+            Arc::new(PanelRegistry::new()),
+            cfg,
+            shards,
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = Arc::clone(&svc);
+        let handle = thread::spawn(move || serve_tcp(&server, listener));
+        (svc, addr, handle)
+    }
+
+    /// Write each line as a frame, half-close, read every response frame.
+    fn send_lines(addr: SocketAddr, lines: &[String]) -> Vec<Json> {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        for l in lines {
+            frame::write_frame(&mut conn, l.as_bytes()).unwrap();
+        }
+        conn.shutdown(Shutdown::Write).unwrap();
+        read_all(conn)
+    }
+
+    fn read_all(conn: TcpStream) -> Vec<Json> {
+        let mut r = BufReader::new(conn);
+        let mut out = Vec::new();
+        loop {
+            match read_frame(&mut r) {
+                Ok(ReadFrame::Frame(p)) => {
+                    out.push(Json::parse(std::str::from_utf8(&p).unwrap()).unwrap())
+                }
+                Ok(ReadFrame::Eof) => return out,
+                Err(e) => panic!("client read: {e}"),
+            }
+        }
+    }
+
+    fn shut_down(
+        addr: SocketAddr,
+        handle: thread::JoinHandle<Result<TcpServeSummary, String>>,
+    ) -> TcpServeSummary {
+        let ack = send_lines(addr, &[r#"{"shutdown":true}"#.to_string()]);
+        assert_eq!(ack.len(), 1);
+        assert_eq!(ack[0].get("draining").unwrap().as_bool(), Some(true));
+        handle.join().unwrap().unwrap()
+    }
+
+    #[test]
+    fn tcp_roundtrip_serves_requests_in_order() {
+        let (svc, addr, handle) = spawn_server(ServeConfig::default(), 2);
+        let lines: Vec<String> = [("baseline", 1), ("rank1", 2), ("event", 3)]
+            .iter()
+            .map(|(eng, id)| {
+                format!(r#"{{"id":{id},"panel":"{PANEL}","engine":"{eng}","synth_targets":1}}"#)
+            })
+            .collect();
+        let out = send_lines(addr, &lines);
+        assert_eq!(out.len(), 3);
+        for (i, j) in out.iter().enumerate() {
+            assert_eq!(
+                j.get("schema").unwrap().as_str(),
+                Some("poets-impute/serve-report/v1")
+            );
+            assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+            assert_eq!(j.get("id").unwrap().as_i64(), Some(i as i64 + 1));
+        }
+        assert_eq!(out[0].get("engine").unwrap().as_str(), Some("baseline"));
+
+        // The stats verb works over TCP too.
+        let stats = send_lines(addr, &[r#"{"id":9,"stats":true}"#.to_string()]);
+        assert_eq!(
+            stats[0].get("schema").unwrap().as_str(),
+            Some("poets-impute/serve-stats/v1")
+        );
+        assert_eq!(
+            stats[0].get("totals").unwrap().get("completed").unwrap().as_i64(),
+            Some(3)
+        );
+
+        let summary = shut_down(addr, handle);
+        assert_eq!(summary.connections, 3);
+        assert_eq!(summary.ok, 5); // 3 reports + stats + shutdown ack
+        assert_eq!(summary.failed, 0);
+        let stats = Arc::try_unwrap(svc).ok().unwrap().shutdown();
+        assert_eq!(stats.completed, 3);
+    }
+
+    #[test]
+    fn malformed_frames_degrade_per_connection_not_per_listener() {
+        let (svc, addr, handle) = spawn_server(ServeConfig::default(), 1);
+
+        // Oversize length prefix: one in-band error frame, then close.
+        let mut conn = TcpStream::connect(addr).unwrap();
+        use std::io::Write as _;
+        conn.write_all(&u32::MAX.to_be_bytes()).unwrap();
+        let out = read_all(conn);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            out[0]
+                .get("error")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .contains("exceeds")
+        );
+
+        // Truncated frame: silent drop, no response.
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(&[0u8, 0]).unwrap();
+        conn.shutdown(Shutdown::Write).unwrap();
+        assert!(read_all(conn).is_empty());
+
+        // Junk after a valid frame: the valid request is answered, then the
+        // connection drops at the junk.
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let good = format!(r#"{{"id":4,"panel":"{PANEL}","engine":"rank1","synth_targets":1}}"#);
+        frame::write_frame(&mut conn, good.as_bytes()).unwrap();
+        conn.write_all(&[0x00, 0x01, 0x02]).unwrap();
+        conn.shutdown(Shutdown::Write).unwrap();
+        let out = read_all(conn);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(out[0].get("id").unwrap().as_i64(), Some(4));
+
+        // Not-UTF-8 and not-JSON payloads: in-band errors, stream continues.
+        let out = send_lines(addr, &["not json".to_string(), good.clone()]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(out[1].get("ok").unwrap().as_bool(), Some(true));
+
+        // The listener survived all of it.
+        let summary = shut_down(addr, handle);
+        assert_eq!(summary.connections, 5);
+        let stats = Arc::try_unwrap(svc).ok().unwrap().shutdown();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.failed, 0);
+    }
+
+    #[test]
+    fn streamed_request_arrives_as_parts_then_manifest() {
+        let (svc, addr, handle) = spawn_server(ServeConfig::default(), 1);
+        let panel = "synth:hap=8,mark=41,annot=0.2,seed=23";
+        let line = format!(
+            r#"{{"id":6,"panel":"{panel}","engine":"rank1","synth_targets":1,"window":16,"overlap":4}}"#
+        );
+        let out = send_lines(addr, &[line]);
+        assert!(out.len() >= 3, "parts + manifest, got {}", out.len());
+        let (manifest, parts) = out.split_last().unwrap();
+        let covered: usize = parts
+            .iter()
+            .map(|p| {
+                assert_eq!(
+                    p.get("schema").unwrap().as_str(),
+                    Some("poets-impute/serve-report-part/v1")
+                );
+                p.get("core_end").unwrap().as_usize().unwrap()
+                    - p.get("core_start").unwrap().as_usize().unwrap()
+            })
+            .sum();
+        assert_eq!(covered, 41);
+        assert_eq!(manifest.get("parts").unwrap().as_usize(), Some(parts.len()));
+        assert!(manifest.get("dosages").is_none());
+
+        let summary = shut_down(addr, handle);
+        assert_eq!(summary.ok, 2);
+        let stats = Arc::try_unwrap(svc).ok().unwrap().shutdown();
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn graceful_shutdown_drains_a_connection_that_stays_open() {
+        let (svc, addr, handle) = spawn_server(ServeConfig::default().workers(1), 1);
+
+        // Client A submits and reads its response but keeps the connection
+        // open (no half-close).
+        let mut a = TcpStream::connect(addr).unwrap();
+        let line = format!(r#"{{"id":1,"panel":"{PANEL}","engine":"rank1","synth_targets":1}}"#);
+        frame::write_frame(&mut a, line.as_bytes()).unwrap();
+        let mut a_reader = BufReader::new(a.try_clone().unwrap());
+        let first = match read_frame(&mut a_reader).unwrap() {
+            ReadFrame::Frame(p) => Json::parse(std::str::from_utf8(&p).unwrap()).unwrap(),
+            ReadFrame::Eof => panic!("expected a response before shutdown"),
+        };
+        assert_eq!(first.get("ok").unwrap().as_bool(), Some(true));
+
+        // Client B triggers shutdown; the listener must EOF client A's
+        // reader, drain, and exit — A sees a clean EOF, not a hang.
+        let summary = shut_down(addr, handle);
+        assert!(matches!(read_frame(&mut a_reader).unwrap(), ReadFrame::Eof));
+        assert_eq!(summary.connections, 2);
+        assert_eq!(summary.ok, 2);
+
+        // Every admitted request completed — nothing leaked.
+        let stats = Arc::try_unwrap(svc).ok().unwrap().shutdown();
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.failed, 0);
+    }
+}

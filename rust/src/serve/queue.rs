@@ -1,4 +1,4 @@
-//! Admission queue + request coalescer.
+//! Admission queue + request coalescer + admission-control state.
 //!
 //! A bounded FIFO of submitted requests guarded by one mutex/condvar pair.
 //! Workers pop *coalesced groups*: the head request plus every other pending
@@ -8,15 +8,27 @@
 //! even when the queue momentarily empties.  Coalescing is strictly
 //! work-conserving apart from that bounded linger: a group never waits once
 //! its target budget is met, and `max_batch_targets = 1` disables merging
-//! (and therefore lingering) entirely.
+//! (and therefore lingering) entirely.  Streamed requests
+//! ([`ImputeRequest::stream`]) are never coalesced — their windowed
+//! execution shape is per-request.
 //!
-//! Admission control is a hard cap on pending requests
-//! ([`CoalescePolicy`] is about *shape*; capacity lives on the service
-//! config): a full queue rejects at submit time with an `admission:` error
-//! rather than queueing unboundedly — under overload a service must shed
-//! load, not grow latency without bound.
+//! Admission control is layered, cheapest check first, and every shed is a
+//! typed in-band `serve-error/v1` string:
+//!
+//! * `admission:` — structural refusals: empty request, shutdown, or the
+//!   hard cap on pending requests (a full queue rejects at submit time
+//!   rather than queueing unboundedly — under overload a service must shed
+//!   load, not grow latency without bound).
+//! * `quota:` — per-tenant token buckets ([`TenantQuota`]): each request
+//!   naming a `tenant` takes one token; an empty bucket sheds before any
+//!   work is done.
+//! * `deadline:` — requests carrying `deadline_ms` are shed at admission
+//!   when the queue-age estimate (pending depth × recent mean service time
+//!   ÷ workers, an EWMA maintained by the workers) already exceeds the
+//!   deadline, and expired again worker-side after mint/queue time if the
+//!   true age overran while waiting.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -37,6 +49,65 @@ pub struct ImputeRequest {
     /// Target haplotypes to impute — explicit observation vectors, or a
     /// deferred server-side mint executed in the worker pool.
     pub targets: RequestTargets,
+    /// Optional tenant name for per-tenant token-bucket quotas.  Requests
+    /// without a tenant are never quota-shed.
+    pub tenant: Option<String>,
+    /// Optional latency budget in milliseconds.  Admission sheds with a
+    /// `deadline:` error when the queue-age estimate already exceeds it;
+    /// the worker re-checks the true age (queue wait + mint time) before
+    /// running the engine.
+    pub deadline_ms: Option<u64>,
+    /// Optional windowed streaming: run the request window-by-window and
+    /// emit dosage rows as each window's core span completes.  Streamed
+    /// requests never coalesce.
+    pub stream: Option<StreamSpec>,
+}
+
+impl ImputeRequest {
+    /// A plain request (no tenant, no deadline, no streaming) — the shape
+    /// every pre-quota caller used.
+    pub fn new(
+        panel: impl Into<String>,
+        engine: EngineSpec,
+        targets: impl Into<RequestTargets>,
+    ) -> ImputeRequest {
+        ImputeRequest {
+            panel: panel.into(),
+            engine,
+            targets: targets.into(),
+            tenant: None,
+            deadline_ms: None,
+            stream: None,
+        }
+    }
+
+    /// Attach a tenant name (subject to the service's [`TenantQuota`]).
+    pub fn tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// Attach a latency budget in milliseconds.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Request windowed streaming with the given window length / overlap.
+    pub fn stream_windows(mut self, window: usize, overlap: usize) -> Self {
+        self.stream = Some(StreamSpec { window, overlap });
+        self
+    }
+}
+
+/// Windowed-streaming shape for one request (see
+/// [`crate::genomics::window::WindowPlan`] for the chunking semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamSpec {
+    /// Markers per window (overlap included).
+    pub window: usize,
+    /// Markers shared between adjacent windows.
+    pub overlap: usize,
 }
 
 /// A request's target payload.
@@ -119,18 +190,69 @@ impl CoalescePolicy {
     }
 }
 
+/// Per-tenant token-bucket quota shared by every tenant name.
+///
+/// A bucket starts full at `burst` tokens, refills continuously at
+/// `rate_per_s`, and each admitted request spends one token.  `rate_per_s =
+/// 0` never refills — with `burst = 1` that admits exactly one request per
+/// tenant, the deterministic shape the quota tests and CI smoke rely on.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantQuota {
+    /// Tokens added per second (sustained request rate).
+    pub rate_per_s: f64,
+    /// Bucket capacity (burst allowance).
+    pub burst: f64,
+}
+
+impl TenantQuota {
+    pub fn new(rate_per_s: f64, burst: f64) -> TenantQuota {
+        TenantQuota { rate_per_s, burst }
+    }
+}
+
+/// One tenant's bucket level at its last refill instant.
+struct TokenBucket {
+    tokens: f64,
+    refilled: Instant,
+}
+
+/// One streamed window's worth of dosage rows (the window's *core* span —
+/// the slice of markers this window owns after overlap trimming).
+#[derive(Clone, Debug)]
+pub struct ServePart {
+    /// Service-assigned request id (matches the final report's
+    /// `serve.request_id`).
+    pub request_id: u64,
+    /// Zero-based window index in plan order.
+    pub window_index: usize,
+    /// Total windows the request will stream.
+    pub n_windows: usize,
+    /// First marker (inclusive) of this part's core span.
+    pub core_start: usize,
+    /// One past the last marker of this part's core span.
+    pub core_end: usize,
+    /// Per-target dosage rows covering `core_start..core_end`.
+    pub rows: Vec<Vec<f32>>,
+}
+
 /// A request admitted to the queue, waiting for a worker.
 pub(crate) struct Pending {
     pub id: u64,
     pub req: ImputeRequest,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<Result<ServeReport, String>>,
+    /// Present only for streamed requests: where the worker pushes
+    /// [`ServePart`]s as windows complete.  Dropped (with the `Pending`)
+    /// after the final reply, which is how the ticket side learns the part
+    /// stream ended.
+    pub parts: Option<mpsc::Sender<ServePart>>,
 }
 
 /// Handle returned by `Service::submit`: redeem it for the request's report.
 pub struct Ticket {
     pub(crate) id: u64,
     pub(crate) rx: mpsc::Receiver<Result<ServeReport, String>>,
+    pub(crate) parts: Option<mpsc::Receiver<ServePart>>,
 }
 
 impl Ticket {
@@ -140,7 +262,27 @@ impl Ticket {
         self.id
     }
 
-    /// Block until the request is served (or failed).
+    /// Whether this ticket streams [`ServePart`]s before its final report.
+    pub fn is_streaming(&self) -> bool {
+        self.parts.is_some()
+    }
+
+    /// Block for the next streamed part.  `None` when the part stream has
+    /// ended (the final report is ready or imminent) or the request does
+    /// not stream.
+    pub fn recv_part(&self) -> Option<ServePart> {
+        self.parts.as_ref().and_then(|rx| rx.recv().ok())
+    }
+
+    /// Non-blocking part poll: `None` when no part is ready right now.
+    pub fn try_recv_part(&self) -> Option<ServePart> {
+        self.parts.as_ref().and_then(|rx| rx.try_recv().ok())
+    }
+
+    /// Block until the request is served (or failed).  For streamed
+    /// requests the final report still carries the complete stitched dosage
+    /// matrix, so callers that ignore parts see exactly the non-streamed
+    /// result.
     pub fn wait(self) -> Result<ServeReport, String> {
         self.rx
             .recv()
@@ -167,7 +309,8 @@ impl Ticket {
 pub struct ServiceStats {
     /// Requests admitted to the queue.
     pub accepted: u64,
-    /// Requests refused at submit time (queue full / invalid / shutdown).
+    /// Requests refused at submit time (queue full / invalid / shutdown /
+    /// quota / deadline).
     pub rejected: u64,
     /// Requests answered successfully.
     pub completed: u64,
@@ -180,6 +323,13 @@ pub struct ServiceStats {
     /// Multi-request groups on the event plane whose member targets were
     /// merged into ONE wave sweep (responses scattered back per request).
     pub merged_waves: u64,
+    /// Requests shed with a `quota:` error (tenant bucket empty).  A subset
+    /// of `rejected`.
+    pub shed_quota: u64,
+    /// Requests shed with a `deadline:` error — at admission (subset of
+    /// `rejected`) or expired worker-side after queue + mint time (subset
+    /// of `failed`).
+    pub shed_deadline: u64,
 }
 
 impl ServiceStats {
@@ -191,7 +341,26 @@ impl ServiceStats {
             self.coalesced_requests as f64 / self.batches as f64
         }
     }
+
+    /// Element-wise sum — used to aggregate per-shard stats.
+    pub fn merge(&self, other: &ServiceStats) -> ServiceStats {
+        ServiceStats {
+            accepted: self.accepted + other.accepted,
+            rejected: self.rejected + other.rejected,
+            completed: self.completed + other.completed,
+            failed: self.failed + other.failed,
+            batches: self.batches + other.batches,
+            coalesced_requests: self.coalesced_requests + other.coalesced_requests,
+            merged_waves: self.merged_waves + other.merged_waves,
+            shed_quota: self.shed_quota + other.shed_quota,
+            shed_deadline: self.shed_deadline + other.shed_deadline,
+        }
+    }
 }
+
+/// EWMA smoothing factor for the per-request service-time estimate (higher
+/// = more reactive to the latest batch).
+const SERVICE_EWMA_ALPHA: f64 = 0.3;
 
 /// Mutex-guarded queue state shared by submitters and workers.
 #[derive(Default)]
@@ -200,11 +369,60 @@ pub(crate) struct QueueState {
     pub shutdown: bool,
     pub next_batch_id: u64,
     pub stats: ServiceStats,
+    /// Per-tenant token buckets (lazily created on first sighting).
+    buckets: HashMap<String, TokenBucket>,
+    /// EWMA of per-request engine service time (seconds), fed by workers.
+    /// Zero until the first completion — admission then has no basis for a
+    /// wait estimate and deadline sheds only on a non-empty queue.
+    pub ewma_service_seconds: f64,
 }
 
 impl QueueState {
+    /// Spend one token from `tenant`'s bucket under `quota`; `false` means
+    /// the bucket is empty and the request must be quota-shed.
+    pub fn take_token(&mut self, tenant: &str, quota: &TenantQuota, now: Instant) -> bool {
+        let bucket = self
+            .buckets
+            .entry(tenant.to_string())
+            .or_insert_with(|| TokenBucket {
+                tokens: quota.burst,
+                refilled: now,
+            });
+        let elapsed = now.duration_since(bucket.refilled).as_secs_f64();
+        bucket.tokens = (bucket.tokens + elapsed * quota.rate_per_s).min(quota.burst);
+        bucket.refilled = now;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fold one observed per-request service time into the EWMA.
+    pub fn note_service_time(&mut self, seconds: f64) {
+        if !seconds.is_finite() || seconds < 0.0 {
+            return;
+        }
+        if self.ewma_service_seconds == 0.0 {
+            self.ewma_service_seconds = seconds;
+        } else {
+            self.ewma_service_seconds = SERVICE_EWMA_ALPHA * seconds
+                + (1.0 - SERVICE_EWMA_ALPHA) * self.ewma_service_seconds;
+        }
+    }
+
+    /// Queue-age estimate for a request admitted *now*: pending depth ×
+    /// recent mean service time ÷ worker count.  Deliberately ignores
+    /// in-flight work (optimistic): deadline admission sheds only when even
+    /// the optimistic estimate busts the budget.
+    pub fn estimated_wait_seconds(&self, workers: usize) -> f64 {
+        self.pending.len() as f64 * self.ewma_service_seconds / workers.max(1) as f64
+    }
+
     /// Pull every queued request matching `key` into `group`, respecting the
-    /// remaining target budget.  Returns the updated total target count.
+    /// remaining target budget.  Streamed requests never merge.  Returns the
+    /// updated total target count.
     pub fn drain_matching(
         &mut self,
         key: (&str, EngineSpec),
@@ -220,6 +438,7 @@ impl QueueState {
             let p = &self.pending[i];
             let fits = p.req.panel == key.0
                 && p.req.engine == key.1
+                && p.req.stream.is_none()
                 && total_targets + p.req.targets.declared_len() <= max_batch_targets;
             if fits {
                 let p = self.pending.remove(i).expect("index checked above");
@@ -243,13 +462,14 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         Pending {
             id,
-            req: ImputeRequest {
-                panel: panel.to_string(),
-                engine: spec,
-                targets: vec![TargetHaplotype::new(vec![-1, 0, 1]); n_targets].into(),
-            },
+            req: ImputeRequest::new(
+                panel,
+                spec,
+                vec![TargetHaplotype::new(vec![-1, 0, 1]); n_targets],
+            ),
             enqueued: Instant::now(),
             reply: tx,
+            parts: None,
         }
     }
 
@@ -257,13 +477,10 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         Pending {
             id,
-            req: ImputeRequest {
-                panel: panel.to_string(),
-                engine: spec,
-                targets: RequestTargets::Mint { count, seed: 0 },
-            },
+            req: ImputeRequest::new(panel, spec, RequestTargets::Mint { count, seed: 0 }),
             enqueued: Instant::now(),
             reply: tx,
+            parts: None,
         }
     }
 
@@ -290,6 +507,20 @@ mod tests {
             st.pending.iter().map(|p| p.id).collect::<Vec<_>>(),
             vec![2, 3, 4]
         );
+    }
+
+    #[test]
+    fn streamed_requests_never_coalesce() {
+        let mut st = QueueState::default();
+        let mut p = pending(1, "a", EngineSpec::Event, 1);
+        p.req = p.req.stream_windows(8, 2);
+        st.pending.push_back(p);
+        st.pending.push_back(pending(2, "a", EngineSpec::Event, 1));
+        let mut group = Vec::new();
+        let total = st.drain_matching(("a", EngineSpec::Event), &mut group, 1, 16);
+        assert_eq!(total, 2, "only the plain request merges");
+        assert_eq!(group.iter().map(|p| p.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(st.pending.len(), 1, "streamed request stays queued");
     }
 
     #[test]
@@ -321,11 +552,64 @@ mod tests {
     }
 
     #[test]
-    fn stats_mean_width() {
+    fn stats_mean_width_and_merge() {
         let mut s = ServiceStats::default();
         assert_eq!(s.mean_batch_width(), 0.0);
         s.batches = 4;
         s.coalesced_requests = 10;
         assert!((s.mean_batch_width() - 2.5).abs() < 1e-12);
+        let t = ServiceStats {
+            accepted: 1,
+            shed_quota: 2,
+            shed_deadline: 3,
+            ..ServiceStats::default()
+        };
+        let merged = s.merge(&t);
+        assert_eq!(merged.batches, 4);
+        assert_eq!(merged.accepted, 1);
+        assert_eq!(merged.shed_quota, 2);
+        assert_eq!(merged.shed_deadline, 3);
+    }
+
+    #[test]
+    fn token_bucket_spends_burst_then_refills_at_rate() {
+        let mut st = QueueState::default();
+        let quota = TenantQuota::new(0.0, 2.0);
+        let t0 = Instant::now();
+        assert!(st.take_token("acme", &quota, t0));
+        assert!(st.take_token("acme", &quota, t0));
+        // Burst spent; rate 0 never refills.
+        assert!(!st.take_token("acme", &quota, t0));
+        assert!(!st.take_token("acme", &quota, t0 + Duration::from_secs(3600)));
+        // A different tenant has its own bucket.
+        assert!(st.take_token("other", &quota, t0));
+
+        // Positive rate refills over (simulated) time, capped at burst.
+        let quota = TenantQuota::new(1.0, 2.0);
+        assert!(st.take_token("slow", &quota, t0));
+        assert!(st.take_token("slow", &quota, t0));
+        assert!(!st.take_token("slow", &quota, t0));
+        assert!(st.take_token("slow", &quota, t0 + Duration::from_millis(1500)));
+        assert!(!st.take_token("slow", &quota, t0 + Duration::from_millis(1600)));
+    }
+
+    #[test]
+    fn wait_estimate_tracks_depth_and_ewma() {
+        let mut st = QueueState::default();
+        assert_eq!(st.estimated_wait_seconds(2), 0.0, "no history, no estimate");
+        st.note_service_time(0.010);
+        assert!((st.ewma_service_seconds - 0.010).abs() < 1e-12);
+        st.note_service_time(0.020);
+        // 0.3 * 0.020 + 0.7 * 0.010 = 0.013
+        assert!((st.ewma_service_seconds - 0.013).abs() < 1e-12);
+        st.note_service_time(f64::NAN);
+        st.note_service_time(-1.0);
+        assert!((st.ewma_service_seconds - 0.013).abs() < 1e-12, "garbage ignored");
+
+        st.pending.push_back(pending(1, "a", EngineSpec::Rank1, 1));
+        st.pending.push_back(pending(2, "a", EngineSpec::Rank1, 1));
+        let est = st.estimated_wait_seconds(2);
+        assert!((est - 2.0 * 0.013 / 2.0).abs() < 1e-12);
+        assert!(st.estimated_wait_seconds(1) > est);
     }
 }

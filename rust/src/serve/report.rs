@@ -28,6 +28,48 @@
 //! `packed:<path>` spec whose on-disk `.ppnl` layout is documented in
 //! [`crate::genomics::packed`], or a `vcf:<path>` spec parsed by
 //! [`crate::genomics::vcf`].
+//!
+//! ## The wire family
+//!
+//! The serve plane speaks the same JSON documents over two transports
+//! (identical bytes on both, asserted in `tests/serve_roundtrip.rs`):
+//!
+//! * **stdin JSONL** — one request per line in, one response document per
+//!   line out (`poets-impute serve`);
+//! * **framed TCP** — each document prefixed by a big-endian `u32` payload
+//!   length (`poets-impute serve --tcp ADDR`, cap 64 MiB per frame; see
+//!   [`crate::serve::net::frame`]).  `serve --connect ADDR` bridges a JSONL
+//!   pipe onto this transport.
+//!
+//! Besides `serve-report/v1`, three sibling schemas travel the same wire:
+//!
+//! * **`serve-error/v1`** — `{"id", "ok": false, "error"}`.  The `error`
+//!   string is prefixed by its shed class: `admission:` (queue full,
+//!   malformed request, unknown panel), `quota:` (per-tenant token bucket
+//!   empty — see `tenant` below), `deadline:` (predicted queue wait already
+//!   exceeds the request's `deadline_ms` budget).  `frame:` errors report a
+//!   malformed TCP frame before a request id exists.
+//! * **`serve-report-part/v1`** — one streamed window of a
+//!   `"window"`/`"stream"` request ([`crate::serve::ServePart`]):
+//!   `{"id", "schema", "part", "request_id", "window", "n_windows",
+//!   "core_start", "core_end", "dosages"}` where `dosages[target][marker]`
+//!   covers `core_start..core_end`.  Parts arrive in window order and are
+//!   followed by a terminal manifest — this document with `"streamed": true`,
+//!   `"parts"` (the part count) and **no** top-level `dosages` array.
+//! * **`serve-stats/v1`** — reply to the `{"stats": true}` admin verb:
+//!   `{"id", "ok": true, "schema", "shards", "panels_cached", "totals",
+//!   "per_shard"}`.  `totals` merges every shard's counters (`accepted`,
+//!   `rejected`, `completed`, `failed`, `batches`, `coalesced_requests`,
+//!   `merged_waves`, `shed_quota`, `shed_deadline`, `mean_batch_width`);
+//!   `per_shard` repeats them per shard plus `shard` and live `queue_depth`.
+//!   While a shutdown is draining the reply carries `"draining": true`.
+//!
+//! Request-side knobs that shape these responses: `tenant` (string) selects
+//! the token bucket that `quota:` sheds debit; `deadline_ms` (non-negative
+//! integer) arms the `deadline:` admission check; `window`/`overlap` +
+//! `"stream": true` switch the response from one document to the
+//! parts-then-manifest sequence above.  Full request grammar:
+//! [`crate::serve::jsonl`].
 
 use crate::session::ImputeReport;
 use crate::util::json::Json;

@@ -1,0 +1,185 @@
+//! `serve::shard` — panel-sharded worker pools.
+//!
+//! A [`ShardedService`] is N independent [`Service`]s sharing one
+//! [`PanelRegistry`]: each request hashes its panel name (FNV-1a, stable
+//! across runs and platforms) to pick a shard, so every panel's traffic
+//! lands on one shard's admission queue, worker pool and engine caches.
+//! Hot panels scale by adding shards without cold panels evicting their
+//! engines, and one panel's backlog (or quota/deadline shedding) never
+//! queues behind another shard's work.  `shards = 1` is exactly the
+//! single-`Service` behaviour, which is how the stdin frontend runs by
+//! default.
+//!
+//! Coalescing is unaffected: same-panel requests land on the same shard by
+//! construction, so the per-shard coalescer sees the same merge
+//! opportunities a single queue would.
+
+use std::sync::Arc;
+
+use super::queue::{ImputeRequest, ServiceStats, Ticket};
+use super::report::ServeReport;
+use super::{PanelRegistry, ServeConfig, Service};
+
+/// Stable FNV-1a (64-bit) over the panel name — the shard routing hash.
+/// `std::collections::hash_map::DefaultHasher` is documented as unstable
+/// across releases; routing must not silently change between builds.
+pub fn shard_of(panel: &str, shards: usize) -> usize {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for b in panel.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
+/// One shard's observable state (for the `stats` verb and the load bench).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardSnapshot {
+    /// Shard index (also the routing hash bucket).
+    pub shard: usize,
+    /// Requests waiting in this shard's queue right now.
+    pub queue_depth: usize,
+    /// This shard's counters.
+    pub stats: ServiceStats,
+}
+
+/// N panel-sharded [`Service`]s behind one submit surface.
+pub struct ShardedService {
+    shards: Vec<Service>,
+    registry: Arc<PanelRegistry>,
+}
+
+impl ShardedService {
+    /// Start `shards` services (each with `cfg`'s worker pool, queue and
+    /// quota settings) over one shared registry.
+    pub fn start(registry: Arc<PanelRegistry>, cfg: ServeConfig, shards: usize) -> ShardedService {
+        let n = shards.max(1);
+        let shards = (0..n)
+            .map(|_| Service::start(Arc::clone(&registry), cfg.clone()))
+            .collect();
+        ShardedService { shards, registry }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard that will serve `panel`.
+    pub fn shard_for(&self, panel: &str) -> &Service {
+        &self.shards[shard_of(panel, self.shards.len())]
+    }
+
+    /// Route a request to its panel's shard (admission semantics are the
+    /// shard's — see [`Service::submit`]).
+    pub fn submit(&self, req: ImputeRequest) -> Result<Ticket, String> {
+        self.shard_for(&req.panel).submit(req)
+    }
+
+    /// Submit and block for the result.
+    pub fn submit_wait(&self, req: ImputeRequest) -> Result<ServeReport, String> {
+        self.submit(req)?.wait()
+    }
+
+    /// The shared panel registry.
+    pub fn registry(&self) -> &Arc<PanelRegistry> {
+        &self.registry
+    }
+
+    /// The configuration shards were started with.
+    pub fn config(&self) -> &ServeConfig {
+        self.shards[0].config()
+    }
+
+    /// Aggregate counters over every shard.
+    pub fn stats(&self) -> ServiceStats {
+        self.shards
+            .iter()
+            .fold(ServiceStats::default(), |acc, s| acc.merge(&s.stats()))
+    }
+
+    /// Per-shard queue depth + counters, in shard order.
+    pub fn shard_snapshots(&self) -> Vec<ShardSnapshot> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ShardSnapshot {
+                shard: i,
+                queue_depth: s.queue_depth(),
+                stats: s.stats(),
+            })
+            .collect()
+    }
+
+    /// Stop admitting, drain every shard's admitted requests, join all
+    /// workers, and return the merged counters.
+    pub fn shutdown(self) -> ServiceStats {
+        self.shards
+            .into_iter()
+            .fold(ServiceStats::default(), |acc, s| acc.merge(&s.shutdown()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::EngineSpec;
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        // FNV-1a is a fixed function: these assignments must never change
+        // across builds (routing is part of the service's observable
+        // behaviour).
+        assert_eq!(shard_of("synth:hap=8,mark=21,annot=0.2,seed=11", 1), 0);
+        for shards in 1..=8 {
+            for name in ["a", "b", "panel-x", "synth:hap=8,mark=41,seed=1"] {
+                assert!(shard_of(name, shards) < shards);
+            }
+        }
+        // Same name, same shard; sanity that different names CAN differ.
+        assert_eq!(shard_of("abc", 4), shard_of("abc", 4));
+        let spread: std::collections::BTreeSet<usize> = (0..32)
+            .map(|i| shard_of(&format!("panel-{i}"), 4))
+            .collect();
+        assert!(spread.len() > 1, "32 names must not all hash to one of 4 shards");
+    }
+
+    #[test]
+    fn sharded_submit_routes_serves_and_aggregates() {
+        let registry = Arc::new(PanelRegistry::new());
+        let svc = ShardedService::start(registry, ServeConfig::default().workers(1), 3);
+        assert_eq!(svc.n_shards(), 3);
+
+        // Two panels, very likely on different shards — but the contract
+        // holds either way: every request completes and the aggregate
+        // counters see all of them.
+        let specs = [
+            "synth:hap=8,mark=21,annot=0.2,seed=1",
+            "synth:hap=8,mark=21,annot=0.2,seed=2",
+        ];
+        for spec in specs {
+            let panel = svc.registry().resolve(spec).unwrap();
+            let targets = panel.synthetic_targets(1, 7).unwrap();
+            let report = svc
+                .submit_wait(ImputeRequest::new(spec, EngineSpec::Rank1, targets))
+                .unwrap();
+            assert_eq!(report.panel, spec);
+        }
+
+        let snapshots = svc.shard_snapshots();
+        assert_eq!(snapshots.len(), 3);
+        // Routing determinism: each shard completed exactly the requests
+        // whose panel hashes to it.
+        let mut expected = [0u64; 3];
+        for spec in specs {
+            expected[shard_of(spec, 3)] += 1;
+        }
+        for (i, snap) in snapshots.iter().enumerate() {
+            assert_eq!(snap.stats.completed, expected[i], "shard {i}");
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.accepted, 2);
+    }
+}

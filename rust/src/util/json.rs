@@ -58,6 +58,30 @@ impl Json {
         }
     }
 
+    /// Mutable lookup on an object (`None` for non-objects/missing keys) —
+    /// lets callers rewrite nested fields in place, e.g. scrubbing volatile
+    /// timing fields before byte-comparing two rendered documents.
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Remove a key from an object, returning its value.  `None` when the
+    /// key is absent or `self` is not an object.  Used by the streamed
+    /// serve path to turn a full report into its terminal manifest (same
+    /// document minus the bulky `dosages` matrix).
+    pub fn remove(&mut self, key: &str) -> Option<Json> {
+        match self {
+            Json::Obj(pairs) => {
+                let idx = pairs.iter().position(|(k, _)| k == key)?;
+                Some(pairs.remove(idx).1)
+            }
+            _ => None,
+        }
+    }
+
     /// Parse a complete JSON document (strict: no trailing garbage; nesting
     /// capped so untrusted input cannot overflow the parser's stack).
     pub fn parse(text: &str) -> Result<Json, String> {
@@ -694,5 +718,24 @@ mod tests {
         assert_eq!(j.get("s").unwrap().as_f64(), None);
         assert_eq!(j.get("b").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("i").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn get_mut_and_remove_edit_objects_in_place() {
+        let mut j = Json::parse(r#"{"a": {"x": 1}, "b": [1, 2], "c": "keep"}"#).unwrap();
+        // Rewrite a nested field in place.
+        j.get_mut("a").unwrap().set("x", 9i64);
+        assert_eq!(j.get("a").unwrap().get("x").unwrap().as_i64(), Some(9));
+        assert!(j.get_mut("missing").is_none());
+        assert!(j.get_mut("b").unwrap().get_mut("x").is_none(), "arrays have no keys");
+
+        // Remove returns the evicted value and preserves the other keys'
+        // order (rendering stays byte-stable for the survivors).
+        let b = j.remove("b").unwrap();
+        assert_eq!(b, Json::parse("[1, 2]").unwrap());
+        assert!(j.remove("b").is_none());
+        assert_eq!(j.render(), r#"{"a":{"x":9},"c":"keep"}"#);
+        let mut arr = Json::parse("[1]").unwrap();
+        assert!(arr.remove("0").is_none(), "remove is object-only");
     }
 }

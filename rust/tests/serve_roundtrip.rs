@@ -5,7 +5,9 @@
 //! direct single-request `ImputeSession` run with the same engine
 //! configuration, for every `EngineSpec` (the XLA plane may be absent in
 //! offline builds — then both paths must agree it is unavailable), with
-//! coalescing both on and off.  Plus: the `bench-serve` CLI must emit a
+//! coalescing both on and off.  The framed TCP transport must return the
+//! same response bytes as the stdin JSONL frontend (volatile timing fields
+//! scrubbed) for every engine.  Plus: the `bench-serve` CLI must emit a
 //! `BENCH_serve.json` throughput baseline covering >= 2 worker-pool sizes.
 
 use std::sync::Arc;
@@ -58,11 +60,7 @@ fn concurrent_clients_match_direct_sessions_bit_exactly() {
                         let service = &service;
                         let targets = targets.clone();
                         s.spawn(move || {
-                            service.submit_wait(ImputeRequest {
-                                panel: PANEL.into(),
-                                engine: spec,
-                                targets: targets.into(),
-                            })
+                            service.submit_wait(ImputeRequest::new(PANEL, spec, targets))
                         })
                     })
                     .collect();
@@ -134,11 +132,11 @@ fn coalesced_burst_actually_merges_and_still_matches() {
     let tickets: Vec<_> = (0..4)
         .map(|c| {
             service
-                .submit(ImputeRequest {
-                    panel: PANEL.into(),
-                    engine: EngineSpec::Rank1,
-                    targets: panel.synthetic_targets(1, 500 + c).unwrap().into(),
-                })
+                .submit(ImputeRequest::new(
+                    PANEL,
+                    EngineSpec::Rank1,
+                    panel.synthetic_targets(1, 500 + c).unwrap(),
+                ))
                 .unwrap()
         })
         .collect();
@@ -187,11 +185,11 @@ fn merged_event_waves_match_solo_sessions_bit_exactly() {
     let tickets: Vec<_> = (0..4)
         .map(|c| {
             service
-                .submit(ImputeRequest {
-                    panel: PANEL.into(),
-                    engine: EngineSpec::Event,
-                    targets: panel.synthetic_targets(2, 900 + c).unwrap().into(),
-                })
+                .submit(ImputeRequest::new(
+                    PANEL,
+                    EngineSpec::Event,
+                    panel.synthetic_targets(2, 900 + c).unwrap(),
+                ))
                 .unwrap()
         })
         .collect();
@@ -238,18 +236,18 @@ fn deferred_mint_requests_match_explicit_targets() {
         ServeConfig::default().workers(2).no_coalesce(),
     );
     let minted = service
-        .submit_wait(ImputeRequest {
-            panel: PANEL.into(),
-            engine: EngineSpec::Rank1,
-            targets: RequestTargets::Mint { count: 2, seed: 77 },
-        })
+        .submit_wait(ImputeRequest::new(
+            PANEL,
+            EngineSpec::Rank1,
+            RequestTargets::Mint { count: 2, seed: 77 },
+        ))
         .unwrap();
     let explicit = service
-        .submit_wait(ImputeRequest {
-            panel: PANEL.into(),
-            engine: EngineSpec::Rank1,
-            targets: panel.minted_targets(2, 77).unwrap().into(),
-        })
+        .submit_wait(ImputeRequest::new(
+            PANEL,
+            EngineSpec::Rank1,
+            panel.minted_targets(2, 77).unwrap(),
+        ))
         .unwrap();
     assert_eq!(minted.dosages(), explicit.dosages());
     assert_eq!(minted.report.n_targets, 2);
@@ -257,23 +255,23 @@ fn deferred_mint_requests_match_explicit_targets() {
     // An over-cap mint fails in the worker, in-band — not at admission,
     // and never by killing the worker.
     let err = service
-        .submit_wait(ImputeRequest {
-            panel: PANEL.into(),
-            engine: EngineSpec::Rank1,
-            targets: RequestTargets::Mint {
+        .submit_wait(ImputeRequest::new(
+            PANEL,
+            EngineSpec::Rank1,
+            RequestTargets::Mint {
                 count: usize::MAX / 2,
                 seed: 0,
             },
-        })
+        ))
         .unwrap_err();
     assert!(err.contains("exceeds"), "{err}");
     // A zero-wide mint is empty at admission time.
     let err = service
-        .submit(ImputeRequest {
-            panel: PANEL.into(),
-            engine: EngineSpec::Rank1,
-            targets: RequestTargets::Mint { count: 0, seed: 0 },
-        })
+        .submit(ImputeRequest::new(
+            PANEL,
+            EngineSpec::Rank1,
+            RequestTargets::Mint { count: 0, seed: 0 },
+        ))
         .unwrap_err();
     assert!(err.starts_with("admission:"), "{err}");
     let stats = service.shutdown();
@@ -316,9 +314,10 @@ fn file_backed_panel_failures_are_in_band_serve_errors() {
     let l3 = r#"{"id":3,"panel":"vcf:/nonexistent/cohort.vcf","engine":"baseline","synth_targets":1}"#;
     let l4 = format!(r#"{{"id":4,"panel":"{PANEL}","engine":"rank1","synth_targets":1}}"#);
     let input = format!("{l1}\n{l2}\n{l3}\n{l4}\n");
-    let service = Service::start(
+    let service = poets_impute::serve::ShardedService::start(
         Arc::new(PanelRegistry::new()),
         ServeConfig::default().workers(2),
+        1,
     );
     let mut out = Vec::new();
     let summary = serve_stream(&service, input.as_bytes(), &mut out).unwrap();
@@ -351,6 +350,149 @@ fn file_backed_panel_failures_are_in_band_serve_errors() {
     }
     assert_eq!(lines[3].get("ok").unwrap().as_bool(), Some(true));
     assert_eq!(lines[3].get("id").unwrap().as_i64(), Some(4));
+}
+
+/// Drop the fields that legitimately differ between two service runs
+/// (wall-clock timings and worker/batch assignment); everything else must
+/// be byte-identical across transports.
+fn scrub_volatile(line: &str) -> String {
+    let mut j = Json::parse(line).expect("response line parses");
+    j.remove("timing");
+    if let Some(serve) = j.get_mut("serve") {
+        for key in ["request_id", "batch_id", "worker", "queue_wait_seconds"] {
+            serve.remove(key);
+        }
+    }
+    j.render()
+}
+
+#[test]
+fn tcp_responses_match_stdin_jsonl_and_solo_sessions_for_every_engine() {
+    // The wire contract: the framed TCP transport and the stdin JSONL
+    // frontend are the same protocol.  For one request per EngineSpec the
+    // response documents must be byte-identical after scrubbing volatile
+    // timing/assignment fields, and the dosages must equal a solo
+    // ImputeSession run exactly.
+    use std::io::Write as _;
+    use std::net::{Shutdown, TcpListener, TcpStream};
+
+    use poets_impute::serve::ShardedService;
+    use poets_impute::serve::net::{self, frame};
+
+    let lines: Vec<String> = EngineSpec::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            format!(
+                r#"{{"id":{},"panel":"{PANEL}","engine":"{}","synth_targets":2,"target_seed":{}}}"#,
+                i + 1,
+                spec.name(),
+                40 + i
+            )
+        })
+        .collect();
+
+    // Leg 1: stdin JSONL through a 2-shard service.
+    let stdin_svc = ShardedService::start(Arc::new(PanelRegistry::new()), serve_config(false), 2);
+    let input = lines.join("\n") + "\n";
+    let mut out = Vec::new();
+    poets_impute::serve::jsonl::serve_stream(&stdin_svc, input.as_bytes(), &mut out).unwrap();
+    stdin_svc.shutdown();
+    let stdin_lines: Vec<String> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(str::to_string)
+        .collect();
+    assert_eq!(stdin_lines.len(), lines.len());
+
+    // Leg 2: the same bytes framed over TCP.
+    let tcp_svc = Arc::new(ShardedService::start(
+        Arc::new(PanelRegistry::new()),
+        serve_config(false),
+        2,
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = {
+        let svc = Arc::clone(&tcp_svc);
+        thread::spawn(move || net::serve_tcp(&svc, listener).unwrap())
+    };
+    let mut conn = TcpStream::connect(addr).unwrap();
+    for line in &lines {
+        frame::write_frame(&mut conn, line.as_bytes()).unwrap();
+    }
+    conn.flush().unwrap();
+    conn.shutdown(Shutdown::Write).unwrap();
+    let mut reader = std::io::BufReader::new(conn);
+    let mut tcp_lines = Vec::new();
+    loop {
+        match frame::read_frame(&mut reader).unwrap() {
+            frame::ReadFrame::Frame(payload) => {
+                tcp_lines.push(String::from_utf8(payload).unwrap())
+            }
+            frame::ReadFrame::Eof => break,
+        }
+    }
+    // Stop the accept loop so the server thread can be joined.
+    let mut admin = TcpStream::connect(addr).unwrap();
+    frame::write_frame(&mut admin, br#"{"shutdown":true}"#).unwrap();
+    admin.flush().unwrap();
+    admin.shutdown(Shutdown::Write).unwrap();
+    let mut admin = std::io::BufReader::new(admin);
+    while !matches!(frame::read_frame(&mut admin).unwrap(), frame::ReadFrame::Eof) {}
+    server.join().unwrap();
+    Arc::try_unwrap(tcp_svc).ok().unwrap().shutdown();
+
+    assert_eq!(tcp_lines.len(), lines.len());
+    for (i, (s, t)) in stdin_lines.iter().zip(&tcp_lines).enumerate() {
+        assert_eq!(
+            scrub_volatile(s),
+            scrub_volatile(t),
+            "request {i}: TCP response diverges from the stdin JSONL response"
+        );
+    }
+
+    // Leg 3: solo ImputeSession runs with the same deferred-mint targets.
+    let cfg = serve_config(false);
+    let (app, mapping) = (cfg.app.clone(), cfg.mapping);
+    let registry = Arc::new(PanelRegistry::new());
+    let panel = registry.resolve(PANEL).unwrap();
+    for (i, spec) in EngineSpec::ALL.iter().enumerate() {
+        let j = Json::parse(&stdin_lines[i]).unwrap();
+        let direct = ImputeSession::new(
+            Workload::from_shared(
+                panel.panel_arc(),
+                panel.minted_targets(2, 40 + i as u64).unwrap(),
+            )
+            .unwrap(),
+        )
+        .engine(*spec)
+        .app_config(app.clone())
+        .mapping(mapping)
+        .run();
+        match direct {
+            Ok(direct) => {
+                assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{spec:?}");
+                let rows = j.get("dosages").unwrap().as_arr().unwrap();
+                assert_eq!(rows.len(), direct.dosages.len(), "{spec:?}");
+                for (t, row) in rows.iter().enumerate() {
+                    let served: Vec<f64> = row
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|v| v.as_f64().unwrap())
+                        .collect();
+                    let want: Vec<f64> =
+                        direct.dosages[t].iter().map(|&d| d as f64).collect();
+                    assert_eq!(served, want, "{spec:?} target {t}");
+                }
+            }
+            // Offline builds: the XLA plane errors identically everywhere.
+            Err(_) => {
+                assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "{spec:?}");
+            }
+        }
+    }
 }
 
 #[test]
