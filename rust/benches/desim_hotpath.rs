@@ -27,6 +27,12 @@
 //! workflow artifact per PR); the pipelining gate runs in both modes.
 //! The document is stamped with schema / git commit / run-config
 //! (`util::provenance`) so archived numbers stay attributable.
+//!
+//! `--trace` additionally runs ONE traced event-plane session after the
+//! sweeps and writes `BENCH_desim_trace.jsonl` (`poets-impute/trace/v1`,
+//! readable by `cli trace summarize|export`).  The benchmarked sweeps
+//! themselves always run with tracing off — the observability plane is
+//! opt-in per session, so the numbers above measure the untraced hot path.
 
 use poets_impute::imputation::msg::LANES;
 use poets_impute::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
@@ -37,6 +43,7 @@ use poets_impute::workload::panelgen::PanelConfig;
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let trace = std::env::args().any(|a| a == "--trace");
     let thread_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
     let width_sweep: [usize; 2] = [1, LANES];
     let panels: &[(usize, usize, usize)] = if smoke {
@@ -217,6 +224,54 @@ fn main() {
     let path = "BENCH_desim.json";
     match std::fs::write(path, report.pretty()) {
         Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if trace {
+        write_trace_sample();
+    }
+}
+
+/// `--trace`: one traced event-plane run written as `poets-impute/trace/v1`
+/// JSONL.  Kept separate from the sweeps so the benchmark numbers always
+/// measure the untraced hot path.
+fn write_trace_sample() {
+    use poets_impute::obs::TraceConfig;
+    const H: usize = 16;
+    const M: usize = 160;
+    const T: usize = 8;
+    let cfg = PanelConfig {
+        n_hap: H,
+        n_mark: M,
+        annot_ratio: 0.1,
+        seed: 7,
+        ..PanelConfig::default()
+    };
+    let report = ImputeSession::new(Workload::synthetic(&cfg, T))
+        .engine(EngineSpec::Event)
+        .boards(4)
+        .states_per_thread(4)
+        .batch(LANES)
+        .trace(TraceConfig::default())
+        .run()
+        .expect("event plane is always available");
+    let t = report
+        .trace
+        .as_ref()
+        .expect("a traced event-plane run records a trace");
+    let mut rc = Json::obj();
+    rc.set("bench", "desim_hotpath")
+        .set("n_hap", H)
+        .set("n_mark", M)
+        .set("targets", T)
+        .set("batch_width", LANES);
+    let path = "BENCH_desim_trace.jsonl";
+    match std::fs::write(path, t.to_jsonl(rc)) {
+        Ok(()) => println!(
+            "wrote {path} ({} superstep record(s), {} tiles)",
+            t.steps.len(),
+            t.n_tiles
+        ),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

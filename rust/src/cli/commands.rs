@@ -12,10 +12,12 @@ use crate::genomics::window::{WindowPlan, run_windowed_threads};
 use crate::genomics::vcf::{self, VcfOptions};
 use crate::model::baseline::{Baseline, Method};
 use crate::model::interpolation::impute_interp;
+use crate::obs::{TraceConfig, TraceFile};
 use crate::poets::topology::ClusterConfig;
 use crate::serve::bench::{BenchServeOpts, OpenLoopOpts};
 use crate::serve::{CoalescePolicy, PanelRegistry, ServeConfig, ShardedService, jsonl, net};
 use crate::session::{EngineSpec, ImputeReport, ImputeSession, Workload};
+use crate::util::json::Json;
 use crate::util::table::{Table, fmt_count};
 use crate::workload::panelgen::PanelConfig;
 
@@ -71,6 +73,17 @@ COMMANDS:
                max_groups_in_flight)
                --threads N (host workers for the DES deliver/step phases;
                results are thread-count invariant)
+               --trace PATH (observability: record the per-superstep,
+               per-tile DES trace and write it to PATH as
+               poets-impute/trace/v1 JSONL — provenance-stamped header
+               line, then one compact record per superstep.  The trace
+               is captured in the simulator's deterministic serial shard
+               reduce, so at a fixed --batch width it is bit-identical
+               for any --threads value; windowed/streamed plans absorb
+               per-window traces into one multi-segment file.  Only the
+               event plane records; other engines produce no trace and
+               a warning is printed.  A recorded trace also puts a
+               \"trace\" summary block in the manifest)
                [--json]  (emit the ImputeReport run manifest,
                schema poets-impute/impute-report/v1)
   panel        real-panel tooling (rust/src/genomics/):
@@ -89,6 +102,17 @@ COMMANDS:
   validate     run ALL engines on one workload and report per-engine
                max |Δdosage| against each engine's oracle
                --hap N --mark N --targets N --seed S
+  trace        observability tooling over poets-impute/trace/v1 files
+               (written by impute --trace PATH):
+               trace summarize <file>  per-tile utilisation table,
+                 queue-depth percentiles and a superstep activity
+                 histogram; malformed files fail with the offending
+                 line number
+               trace export <file> --chrome [--out PATH]  convert to
+                 Chrome trace_event JSON (loadable in Perfetto /
+                 chrome://tracing; segments laid end-to-end on one
+                 clock, one track per tile); prints to stdout unless
+                 --out is given
   serve        multi-tenant imputation service: one JSON request per input
                line (stdin JSONL) or per length-framed TCP frame, one
                response per request, in request order (responses:
@@ -104,7 +128,14 @@ COMMANDS:
                quota account), \"deadline_ms\":D (shed when the queue-age
                estimate or true age busts the budget), \"window\":W
                [\"overlap\":V] (stream per-window dosage rows as
-               serve-report-part/v1 frames, then a terminal manifest)
+               serve-report-part/v1 frames, then a terminal manifest),
+               \"spans\":true (observability: the response's serve
+               block gains a \"spans\" phase timeline — monotone µs
+               offsets admitted/dequeued/minted/prepared/run/responded
+               from the submit instant, plus coalesced_with and
+               merged_wave; {\"stats\":true} snapshots also carry
+               engine-cache hit/miss/eviction counters and log2-µs
+               queue-wait / service-time histograms per shard)
                admin verbs: {\"stats\":true} -> serve-stats/v1 snapshot;
                {\"shutdown\":true} -> ack, stop accepting, drain, exit
                (closing stdin / the socket is the transport-level
@@ -153,6 +184,16 @@ COMMANDS:
                [--states N]
   info         print cluster topology + artifact inventory
   help         this text
+
+OBSERVABILITY (all opt-in; disabled paths cost one branch on an Option):
+  DES traces   impute --trace PATH records per-superstep, per-tile DES
+               telemetry as poets-impute/trace/v1 JSONL; analyse with
+               'trace summarize' or 'trace export --chrome' (Perfetto).
+               Bit-identical across --threads at a fixed --batch width.
+  serve spans  request key \"spans\":true adds a phase timeline to that
+               response's serve block; {\"stats\":true} snapshots carry
+               engine-cache hit/miss/eviction counters and log2-us
+               queue-wait / service-time histograms per shard.
 ";
 
 fn panel_cfg(args: &Args) -> Result<PanelConfig, String> {
@@ -179,6 +220,7 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
     let overlap = args.get("overlap", 0usize)?;
     let window_threads = args.get("window-threads", 1usize)?;
     let stream = args.has("stream");
+    let trace_path = args.get_str("trace", "");
     let as_json = args.has("json");
     args.reject_unknown()?;
 
@@ -207,6 +249,9 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
         if batch > 0 {
             session = session.batch(batch);
         }
+        if !trace_path.is_empty() {
+            session = session.trace(TraceConfig::default());
+        }
         session
     };
     let mut report = if window > 0 {
@@ -221,6 +266,38 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
     };
     if !panel_spec.is_empty() {
         report.panel = Some(panel_spec);
+    }
+
+    if !trace_path.is_empty() {
+        match &report.trace {
+            Some(t) => {
+                // The trace header's run_config mirrors the manifest's run
+                // section, so a trace file is self-describing on its own.
+                let mut rc = Json::obj();
+                rc.set("engine", engine.name())
+                    .set("n_hap", report.n_hap)
+                    .set("n_mark", report.n_mark)
+                    .set("n_targets", report.n_targets)
+                    .set("boards", report.boards)
+                    .set("states_per_thread", report.states_per_thread)
+                    .set("threads", report.threads)
+                    .set("batch_size", report.batch_size);
+                std::fs::write(&trace_path, t.to_jsonl(rc))
+                    .map_err(|e| format!("could not write {trace_path}: {e}"))?;
+                eprintln!(
+                    "impute: wrote {trace_path} ({} segment(s), {} superstep record(s))",
+                    t.segments,
+                    t.steps.len()
+                );
+            }
+            // Not an error: the flag is honoured wherever a DES ran, and a
+            // host-plane run simply has no supersteps to record.
+            None => eprintln!(
+                "impute: --trace given but engine {} records no DES trace; \
+                 nothing written",
+                engine.name()
+            ),
+        }
     }
 
     if as_json {
@@ -441,6 +518,54 @@ pub fn cmd_validate(args: &Args) -> Result<i32, String> {
     println!("{}", t.render());
     println!("validate: {}", if all_ok { "OK" } else { "MISMATCH" });
     Ok(if all_ok { 0 } else { 1 })
+}
+
+/// `trace summarize <file>` / `trace export <file> --chrome [--out PATH]` —
+/// analysis front end for `poets-impute/trace/v1` JSONL files.
+pub fn cmd_trace(args: &Args) -> Result<i32, String> {
+    let sub = args.positional.get(1).map(String::as_str);
+    let path = args.positional.get(2).cloned();
+    match sub {
+        Some("summarize") => {
+            let path =
+                path.ok_or_else(|| format!("trace summarize needs a trace file\n{USAGE}"))?;
+            args.reject_unknown()?;
+            let file = load_trace(&path)?;
+            println!("{}", crate::obs::trace::summarize(&file).trim_end());
+            Ok(0)
+        }
+        Some("export") => {
+            let path = path.ok_or_else(|| format!("trace export needs a trace file\n{USAGE}"))?;
+            let chrome = args.has("chrome");
+            let out = args.get_str("out", "");
+            args.reject_unknown()?;
+            if !chrome {
+                return Err(
+                    "trace export: --chrome is the only export format (trace_event JSON)".into(),
+                );
+            }
+            let file = load_trace(&path)?;
+            let doc = crate::obs::chrome::to_chrome(&file).pretty();
+            if out.is_empty() {
+                println!("{doc}");
+            } else {
+                std::fs::write(&out, doc)
+                    .map_err(|e| format!("could not write {out}: {e}"))?;
+                println!("wrote {out}");
+            }
+            Ok(0)
+        }
+        other => Err(format!(
+            "trace needs a subcommand (summarize|export), got {other:?}\n{USAGE}"
+        )),
+    }
+}
+
+/// Read + parse a trace file; parse errors carry the offending line number.
+fn load_trace(path: &str) -> Result<TraceFile, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("trace: cannot read {path}: {e}"))?;
+    TraceFile::parse(&text).map_err(|e| format!("trace: {path}: {e}"))
 }
 
 /// The coalescing policy shared by `serve` and `bench-serve` flags.
@@ -917,6 +1042,92 @@ mod tests {
         assert!(
             cmd_panel(&argv(&["panel", "ingest", "/nonexistent.vcf", "/tmp/x.ppnl"])).is_err()
         );
+    }
+
+    #[test]
+    fn impute_trace_summarize_and_chrome_export_roundtrip() {
+        let pid = std::process::id();
+        let trace = std::env::temp_dir().join(format!("poets-cli-trace-{pid}.jsonl"));
+        let trace = trace.to_str().unwrap().to_string();
+        let args = argv(&[
+            "impute", "--hap", "8", "--mark", "21", "--annot-ratio", "0.2", "--targets",
+            "2", "--engine", "event", "--boards", "1", "--spt", "8", "--trace",
+            trace.as_str(),
+        ]);
+        assert_eq!(cmd_impute(&args).unwrap(), 0);
+        let text = std::fs::read_to_string(&trace).unwrap();
+        assert!(
+            text.contains("\"schema\":\"poets-impute/trace/v1\""),
+            "header carries the schema (compact render): {}",
+            text.lines().next().unwrap_or("")
+        );
+        assert_eq!(
+            cmd_trace(&argv(&["trace", "summarize", trace.as_str()])).unwrap(),
+            0
+        );
+        let out = std::env::temp_dir().join(format!("poets-cli-chrome-{pid}.json"));
+        let out = out.to_str().unwrap().to_string();
+        assert_eq!(
+            cmd_trace(&argv(&[
+                "trace", "export", trace.as_str(), "--chrome", "--out", out.as_str(),
+            ]))
+            .unwrap(),
+            0
+        );
+        let doc = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert!(
+            !doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+            "chrome export has events"
+        );
+        let _ = std::fs::remove_file(&trace);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn impute_trace_on_a_host_plane_warns_and_writes_nothing() {
+        let t = std::env::temp_dir().join(format!(
+            "poets-cli-notrace-{}.jsonl",
+            std::process::id()
+        ));
+        let t = t.to_str().unwrap().to_string();
+        let args = argv(&[
+            "impute", "--hap", "8", "--mark", "21", "--targets", "1", "--engine",
+            "baseline", "--trace", t.as_str(),
+        ]);
+        assert_eq!(cmd_impute(&args).unwrap(), 0);
+        assert!(
+            !std::path::Path::new(&t).exists(),
+            "host planes record no trace, so no file appears"
+        );
+    }
+
+    #[test]
+    fn trace_verb_rejects_bad_usage_and_malformed_files() {
+        assert!(cmd_trace(&argv(&["trace"])).is_err());
+        assert!(cmd_trace(&argv(&["trace", "frobnicate", "x"])).is_err());
+        assert!(cmd_trace(&argv(&["trace", "summarize"])).is_err());
+        assert!(cmd_trace(&argv(&["trace", "summarize", "/nonexistent.jsonl"])).is_err());
+        let bad = std::env::temp_dir().join(format!(
+            "poets-cli-badtrace-{}.jsonl",
+            std::process::id()
+        ));
+        let bad = bad.to_str().unwrap().to_string();
+        std::fs::write(
+            &bad,
+            "{\"kind\":\"header\",\"schema\":\"poets-impute/trace/v1\",\"n_tiles\":1,\
+             \"max_steps\":0,\"dropped_steps\":0,\"total_steps\":0,\"segments\":1,\
+             \"steps_recorded\":0}\nnot json\n",
+        )
+        .unwrap();
+        let err = cmd_trace(&argv(&["trace", "summarize", bad.as_str()])).unwrap_err();
+        assert!(err.contains("line 2"), "line-numbered rejection: {err}");
+        // export demands an explicit format even before reading the file.
+        assert!(
+            cmd_trace(&argv(&["trace", "export", bad.as_str()]))
+                .unwrap_err()
+                .contains("--chrome")
+        );
+        let _ = std::fs::remove_file(&bad);
     }
 
     #[test]

@@ -26,6 +26,7 @@ fn dispatch(argv: &[String]) -> Result<i32, String> {
         Some("impute") => commands::cmd_impute(&args),
         Some("panel") => commands::cmd_panel(&args),
         Some("validate") => commands::cmd_validate(&args),
+        Some("trace") => commands::cmd_trace(&args),
         Some("serve") => commands::cmd_serve(&args),
         Some("bench-serve") => commands::cmd_bench_serve(&args),
         Some("bench") => commands::cmd_bench(&args),

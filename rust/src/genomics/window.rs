@@ -412,7 +412,7 @@ pub(crate) fn stitch_reports(
         .map(|truth| accuracy::score_set(&dosages, truth, full.targets()));
 
     let mut merged = reports.remove(0);
-    for r in &reports {
+    for r in &mut reports {
         merged.host_seconds += r.host_seconds;
         merged.n_batches += r.n_batches;
         if let Some(s) = r.sim_seconds {
@@ -422,6 +422,15 @@ pub(crate) fn stitch_reports(
             match &mut merged.metrics {
                 None => merged.metrics = Some(m.clone()),
                 Some(acc) => acc.absorb(m),
+            }
+        }
+        // Traced runs: each window's trace becomes its own segment(s) in
+        // the merged trace, in plan order — `impute --trace` on a windowed
+        // run covers the whole chromosome.
+        if let Some(t) = r.trace.take() {
+            match &mut merged.trace {
+                None => merged.trace = Some(t),
+                Some(acc) => acc.absorb(t),
             }
         }
     }

@@ -11,6 +11,7 @@ use crate::graph::builder::{Graph, GraphBuilder};
 use crate::graph::device::VertexId;
 use crate::model::panel::{ReferencePanel, TargetHaplotype};
 use crate::model::params::ModelParams;
+use crate::obs::trace::RunTrace;
 use crate::poets::costmodel::CostModel;
 use crate::poets::desim::{SimConfig, Simulator};
 use crate::poets::metrics::SimMetrics;
@@ -69,6 +70,10 @@ pub struct EventRunResult {
     pub metrics: SimMetrics,
     /// Simulated POETS wall-clock seconds.
     pub sim_seconds: f64,
+    /// Per-superstep trace, present iff `SimConfig::trace` was set (the
+    /// engine pulls it off the simulator after the run — the extract
+    /// helpers themselves leave it `None`).
+    pub trace: Option<RunTrace>,
 }
 
 /// Build the raw application graph (one vertex per panel state).  `cfg`
@@ -165,6 +170,7 @@ pub fn extract_results(
         dosages,
         metrics,
         sim_seconds: sim.sim_seconds(),
+        trace: None,
     }
 }
 
@@ -194,6 +200,7 @@ mod tests {
             dosages: report.dosages,
             metrics: report.metrics.expect("event plane reports metrics"),
             sim_seconds: report.sim_seconds.expect("event plane reports simulated time"),
+            trace: None,
         }
     }
 

@@ -153,6 +153,7 @@ pub fn extract_interp_results(
         dosages,
         metrics,
         sim_seconds: sim.sim_seconds(),
+        trace: None,
     }
 }
 
@@ -185,6 +186,7 @@ mod tests {
             dosages: report.dosages,
             metrics: report.metrics.expect("event planes report metrics"),
             sim_seconds: report.sim_seconds.expect("event planes report simulated time"),
+            trace: None,
         }
     }
 

@@ -24,7 +24,13 @@
 //! Because each group reduces independently over the same sender rows and
 //! the same coefficients as a sequential `batch = LANES` run of that group,
 //! the pipelined dosages are bit-identical to the sequential-groups result
-//! at every batch width and host thread count.
+//! at every batch width and host thread count.  The same argument extends
+//! to the opt-in DES trace (`SimConfig::trace`): at a fixed wave width the
+//! per-superstep delivery schedule is a function of the graph and injection
+//! schedule alone, so the recorded trace is bit-identical across host
+//! thread counts (`tests/trace_determinism.rs`); different widths pipeline
+//! different lane groups and legitimately trace different schedules, while
+//! each width's trace stays deterministic run to run.
 //!
 //! [`LANES`]: super::msg::LANES
 

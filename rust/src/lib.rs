@@ -85,6 +85,9 @@
 //!   worker pool, JSONL frontend and the closed-loop load generator.
 //! * [`bench`] — harnesses that regenerate every figure in the paper's
 //!   evaluation (Fig 11, 12, 13 plus claim checks).
+//! * [`obs`] — opt-in observability: per-tile/per-superstep DES traces
+//!   (`poets-impute/trace/v1`, bit-identical across thread counts and wave
+//!   widths), serve request spans, and Chrome `trace_event` export.
 //! * [`util`], [`cli`] — offline-friendly substrates (RNG, JSON, tables,
 //!   property-testing, argument parsing) written against std only.
 
@@ -94,6 +97,7 @@ pub mod genomics;
 pub mod graph;
 pub mod imputation;
 pub mod model;
+pub mod obs;
 pub mod poets;
 pub mod runtime;
 pub mod serve;

@@ -1,0 +1,29 @@
+//! Opt-in observability plane: DES traces, serve request spans, exports.
+//!
+//! Everything in this module is **off by default** and costs one branch on
+//! an `Option` when disabled — no allocation, no atomics on the simulator
+//! hot path, so `desim_hotpath` numbers are unchanged with tracing off.
+//!
+//! Three pieces:
+//!
+//! * [`trace`] — per-superstep, per-tile DES telemetry captured inside
+//!   `poets::desim` (enabled via `SimConfig::trace`), merged in the
+//!   simulator's deterministic serial shard reduce so, at a fixed
+//!   wave/batch width, the emitted trace is bit-identical for any
+//!   `threads` value; serialised as `poets-impute/trace/v1` JSONL.
+//! * [`chrome`] — converts a parsed trace into Chrome `trace_event` JSON
+//!   (the object format), loadable in Perfetto or `chrome://tracing`.
+//! * [`span`] — the log-scale latency bucket layout shared by the serve
+//!   plane's per-request span timelines and the `serve-stats/v1`
+//!   histograms.
+//!
+//! The CLI front end is `cli trace summarize|export` (see `cli::commands`);
+//! traces are produced by `impute --trace PATH` and
+//! `cargo bench --bench desim_hotpath -- --trace`.
+
+pub mod chrome;
+pub mod span;
+pub mod trace;
+
+pub use span::{bucket_bounds, latency_bucket, LATENCY_BUCKETS};
+pub use trace::{RunTrace, StepRecord, TileSample, TraceConfig, TraceFile, NO_COL, TRACE_SCHEMA};

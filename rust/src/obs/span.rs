@@ -1,0 +1,64 @@
+//! Log-scale latency buckets shared by the serve plane's request-span
+//! histograms (`serve-stats/v1`) and the trace summariser.
+//!
+//! Buckets are powers of two: bucket `i` counts values in
+//! `[2^i, 2^(i+1))` (bucket 0 additionally holds 0), saturating at the
+//! last bucket. With microsecond inputs the layout spans 1 µs … ≥ 32.8 ms
+//! per bucket boundary up to the ≥ 32768 µs catch-all at index 15 — wide
+//! enough for queue waits and service times on this workload while keeping
+//! `ServiceStats` a flat `Copy` struct (fixed-size arrays, no allocation).
+
+/// Number of power-of-two buckets in every latency histogram.
+pub const LATENCY_BUCKETS: usize = 16;
+
+/// Generic log2 bucket index of `v`, saturating at
+/// [`LATENCY_BUCKETS`]` - 1`. `0` and `1` both land in bucket 0.
+pub fn log2_bucket(v: u64) -> usize {
+    if v <= 1 {
+        return 0;
+    }
+    let b = (63 - v.leading_zeros()) as usize;
+    b.min(LATENCY_BUCKETS - 1)
+}
+
+/// Bucket index of a latency in microseconds.
+pub fn latency_bucket(us: u64) -> usize {
+    log2_bucket(us)
+}
+
+/// Half-open `[lo, hi)` bounds of bucket `i` (the last bucket's upper
+/// bound is `u64::MAX`).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    assert!(i < LATENCY_BUCKETS, "bucket {i} out of range");
+    let lo = if i == 0 { 0 } else { 1u64 << i };
+    let hi = if i + 1 == LATENCY_BUCKETS { u64::MAX } else { 1u64 << (i + 1) };
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_partition_the_line() {
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1), 0);
+        assert_eq!(latency_bucket(2), 1);
+        assert_eq!(latency_bucket(3), 1);
+        assert_eq!(latency_bucket(4), 2);
+        assert_eq!(latency_bucket(u64::MAX), LATENCY_BUCKETS - 1);
+        for us in [0u64, 1, 2, 5, 100, 1 << 14, (1 << 15) - 1, 1 << 15, 1 << 40] {
+            let i = latency_bucket(us);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(us >= lo && us < hi || (i == LATENCY_BUCKETS - 1 && us >= lo),
+                "{us} not in [{lo}, {hi}) of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn bounds_are_contiguous() {
+        for i in 1..LATENCY_BUCKETS {
+            assert_eq!(bucket_bounds(i - 1).1, bucket_bounds(i).0);
+        }
+    }
+}

@@ -1,0 +1,600 @@
+//! DES trace capture and the `poets-impute/trace/v1` JSONL schema.
+//!
+//! A trace is a bounded ring of per-superstep records. Capture happens in
+//! `poets::desim`: each `TileShard` accumulates scratch counters during its
+//! (possibly parallel) deliver phase, and the simulator's deterministic
+//! serial shard reduce folds them into one [`StepRecord`] per superstep —
+//! shard order is tile order, so the record is bit-identical for any
+//! `SimConfig::threads` value.
+//!
+//! # `poets-impute/trace/v1` (JSONL)
+//!
+//! Line 1 is a provenance-stamped header object:
+//!
+//! ```json
+//! {"schema":"poets-impute/trace/v1","git_commit":"...","run_config":{...},
+//!  "kind":"header","n_tiles":64,"col_stride":8,"max_steps":4096,
+//!  "segments":1,"total_steps":123,"dropped_steps":0,"steps_recorded":123}
+//! ```
+//!
+//! Every following line is one superstep (`kind:"step"`), with per-tile
+//! samples packed as `[tile, queue_hw, copies, lanes, col_min, col_max]`
+//! arrays (only tiles that delivered at least one event appear):
+//!
+//! ```json
+//! {"kind":"step","segment":0,"step":7,"t0":700,"t1":800,"busy_tiles":2,
+//!  "copies":12,"lanes":96,"queue_hw":5,"col_min":3,"col_max":4,
+//!  "tiles":[[0,5,8,64,3,4],[9,2,4,32,3,3]]}
+//! ```
+//!
+//! Column spans use `null` for "unattributed" (the in-memory sentinel is
+//! [`NO_COL`]). The parser is strict: any malformed line fails the whole
+//! file with its line number — no silent skipping.
+
+use std::collections::VecDeque;
+
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::util::table::{fmt_count, Table};
+
+use super::span::log2_bucket;
+
+/// Schema tag on the header line of a trace JSONL file.
+pub const TRACE_SCHEMA: &str = "poets-impute/trace/v1";
+
+/// In-memory sentinel column meaning "no column attribution".
+pub const NO_COL: u32 = u32::MAX;
+
+/// Maximum rows printed in the per-tile utilisation table before the
+/// summary switches to an explicit "(+N more)" note.
+const SUMMARY_TILE_ROWS: usize = 32;
+
+/// What the simulator records when tracing is enabled
+/// (`SimConfig::trace = Some(TraceConfig { .. })`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Ring capacity: at most this many most-recent superstep records are
+    /// retained. Older records are dropped *and counted* — never silently
+    /// lost. `0` means unbounded.
+    pub max_steps: usize,
+    /// Vertex-id stride of one wavefront column: `vertex / col_stride` is
+    /// the column index. Engines fill this from the panel shape (both the
+    /// raw and interp planes lay vertices out column-major); `None`
+    /// disables column-span attribution.
+    pub col_stride: Option<u32>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { max_steps: 4096, col_stride: None }
+    }
+}
+
+/// One tile's delivery activity within one superstep. Only tiles that
+/// ingested at least one event are sampled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileSample {
+    pub tile: u32,
+    /// Queue-depth high-water: events pending at this tile when the
+    /// superstep's deliver phase began.
+    pub queue_hw: u32,
+    /// Message copies delivered at this tile this superstep.
+    pub copies: u64,
+    /// SoA wave lanes delivered (copies weighted by occupied lane count).
+    pub lanes: u64,
+    /// Wavefront column span touched ([`NO_COL`]/[`NO_COL`] when
+    /// unattributed, i.e. `TraceConfig::col_stride` was `None`).
+    pub col_min: u32,
+    pub col_max: u32,
+}
+
+/// One superstep's merged record. `tiles` is in ascending tile order
+/// (shard order == tile order in the serial reduce).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepRecord {
+    /// Engine-run index for multi-batch / multi-window sessions: 0 within
+    /// a single simulator run, bumped by [`RunTrace::absorb`].
+    pub segment: u32,
+    /// Superstep index within the segment.
+    pub step: u64,
+    /// Simulated-time span of this superstep, in cost-model cycles.
+    pub t_start: u64,
+    pub t_end: u64,
+    /// Number of tiles that delivered at least one event.
+    pub busy_tiles: u32,
+    pub copies: u64,
+    pub lanes: u64,
+    /// Maximum per-tile queue-depth high-water this superstep.
+    pub queue_hw: u32,
+    pub col_min: u32,
+    pub col_max: u32,
+    pub tiles: Vec<TileSample>,
+}
+
+/// A bounded, deterministic trace of one imputation run (possibly spanning
+/// several engine runs — batches, windows — as distinct segments).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunTrace {
+    pub n_tiles: u32,
+    pub col_stride: Option<u32>,
+    /// Ring bound carried from [`TraceConfig::max_steps`].
+    pub max_steps: usize,
+    /// Most-recent records, in (segment, step) order.
+    pub steps: VecDeque<StepRecord>,
+    /// Records evicted by the ring bound (oldest first).
+    pub dropped_steps: u64,
+    /// Supersteps observed: recorded + dropped.
+    pub total_steps: u64,
+    /// Engine runs folded into this trace.
+    pub segments: u32,
+}
+
+impl RunTrace {
+    pub fn new(cfg: TraceConfig, n_tiles: u32) -> RunTrace {
+        RunTrace {
+            n_tiles,
+            col_stride: cfg.col_stride,
+            max_steps: cfg.max_steps,
+            steps: VecDeque::new(),
+            dropped_steps: 0,
+            total_steps: 0,
+            segments: 1,
+        }
+    }
+
+    fn enforce_bound(&mut self) {
+        while self.max_steps > 0 && self.steps.len() > self.max_steps {
+            self.steps.pop_front();
+            self.dropped_steps += 1;
+        }
+    }
+
+    /// Record one superstep, evicting the oldest record past the bound.
+    pub fn push(&mut self, rec: StepRecord) {
+        self.total_steps += 1;
+        self.steps.push_back(rec);
+        self.enforce_bound();
+    }
+
+    /// Fold a later engine run into this trace as fresh segments (batch
+    /// loops and windowed/streamed runs produce one trace per engine run).
+    pub fn absorb(&mut self, mut other: RunTrace) {
+        let base = self.segments;
+        for rec in &mut other.steps {
+            rec.segment += base;
+        }
+        self.segments += other.segments;
+        self.total_steps += other.total_steps;
+        self.dropped_steps += other.dropped_steps;
+        self.n_tiles = self.n_tiles.max(other.n_tiles);
+        if self.col_stride.is_none() {
+            self.col_stride = other.col_stride;
+        }
+        for rec in other.steps {
+            self.steps.push_back(rec);
+            self.enforce_bound();
+        }
+    }
+
+    /// Render as `poets-impute/trace/v1` JSONL with a freshly
+    /// provenance-stamped header. One compact line per recorded superstep;
+    /// rendering is deterministic, so two bit-identical traces produce
+    /// byte-identical files (given the same `run_config`).
+    pub fn to_jsonl(&self, run_config: Json) -> String {
+        let mut header = Json::obj();
+        crate::util::provenance::stamp(&mut header, TRACE_SCHEMA, run_config);
+        header
+            .set("kind", "header")
+            .set("n_tiles", self.n_tiles)
+            .set("col_stride", self.col_stride.map_or(Json::Null, |s| Json::Int(i64::from(s))))
+            .set("max_steps", self.max_steps)
+            .set("segments", self.segments)
+            .set("total_steps", self.total_steps)
+            .set("dropped_steps", self.dropped_steps)
+            .set("steps_recorded", self.steps.len());
+        let mut out = header.render();
+        out.push('\n');
+        for rec in &self.steps {
+            out.push_str(&step_json(rec).render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn col_json(c: u32) -> Json {
+    if c == NO_COL {
+        Json::Null
+    } else {
+        Json::Int(i64::from(c))
+    }
+}
+
+fn step_json(rec: &StepRecord) -> Json {
+    let mut tiles = Json::Arr(Vec::new());
+    for t in &rec.tiles {
+        tiles.push(Json::Arr(vec![
+            Json::Int(i64::from(t.tile)),
+            Json::Int(i64::from(t.queue_hw)),
+            Json::from(t.copies),
+            Json::from(t.lanes),
+            col_json(t.col_min),
+            col_json(t.col_max),
+        ]));
+    }
+    let mut j = Json::obj();
+    j.set("kind", "step")
+        .set("segment", rec.segment as u64)
+        .set("step", rec.step)
+        .set("t0", rec.t_start)
+        .set("t1", rec.t_end)
+        .set("busy_tiles", rec.busy_tiles as u64)
+        .set("copies", rec.copies)
+        .set("lanes", rec.lanes)
+        .set("queue_hw", rec.queue_hw as u64)
+        .set("col_min", col_json(rec.col_min))
+        .set("col_max", col_json(rec.col_max))
+        .set("tiles", tiles);
+    j
+}
+
+/// A parsed trace file: the verbatim header object (provenance included)
+/// plus the reconstructed [`RunTrace`]. [`TraceFile::render`] re-emits the
+/// stored header, so `parse` → `render` round-trips byte-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceFile {
+    pub header: Json,
+    pub trace: RunTrace,
+}
+
+fn field_u64(j: &Json, key: &str, line: usize) -> Result<u64, String> {
+    match j.get(key).and_then(Json::as_i64) {
+        Some(v) if v >= 0 => Ok(v as u64),
+        _ => Err(format!("line {line}: missing or invalid \"{key}\"")),
+    }
+}
+
+fn field_col(j: &Json, key: &str, line: usize) -> Result<u32, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(NO_COL),
+        Some(v) => match v.as_i64() {
+            Some(c) if (0..i64::from(u32::MAX)).contains(&c) => Ok(c as u32),
+            _ => Err(format!("line {line}: invalid column \"{key}\"")),
+        },
+    }
+}
+
+fn arr_col(v: &Json, line: usize) -> Result<u32, String> {
+    match v {
+        Json::Null => Ok(NO_COL),
+        _ => match v.as_i64() {
+            Some(c) if (0..i64::from(u32::MAX)).contains(&c) => Ok(c as u32),
+            _ => Err(format!("line {line}: invalid tile column entry")),
+        },
+    }
+}
+
+fn parse_tile(v: &Json, line: usize) -> Result<TileSample, String> {
+    let Json::Arr(xs) = v else {
+        return Err(format!("line {line}: tile sample is not an array"));
+    };
+    if xs.len() != 6 {
+        return Err(format!("line {line}: tile sample has {} fields, want 6", xs.len()));
+    }
+    let int = |i: usize| -> Result<u64, String> {
+        match xs[i].as_i64() {
+            Some(v) if v >= 0 => Ok(v as u64),
+            _ => Err(format!("line {line}: invalid tile sample field {i}")),
+        }
+    };
+    Ok(TileSample {
+        tile: int(0)? as u32,
+        queue_hw: int(1)? as u32,
+        copies: int(2)?,
+        lanes: int(3)?,
+        col_min: arr_col(&xs[4], line)?,
+        col_max: arr_col(&xs[5], line)?,
+    })
+}
+
+fn parse_step(j: &Json, line: usize) -> Result<StepRecord, String> {
+    let tiles = match j.get("tiles") {
+        Some(Json::Arr(xs)) => {
+            xs.iter().map(|v| parse_tile(v, line)).collect::<Result<Vec<_>, _>>()?
+        }
+        _ => return Err(format!("line {line}: missing \"tiles\" array")),
+    };
+    Ok(StepRecord {
+        segment: field_u64(j, "segment", line)? as u32,
+        step: field_u64(j, "step", line)?,
+        t_start: field_u64(j, "t0", line)?,
+        t_end: field_u64(j, "t1", line)?,
+        busy_tiles: field_u64(j, "busy_tiles", line)? as u32,
+        copies: field_u64(j, "copies", line)?,
+        lanes: field_u64(j, "lanes", line)?,
+        queue_hw: field_u64(j, "queue_hw", line)? as u32,
+        col_min: field_col(j, "col_min", line)?,
+        col_max: field_col(j, "col_max", line)?,
+        tiles,
+    })
+}
+
+impl TraceFile {
+    /// Strict `poets-impute/trace/v1` parser. Any malformed line — bad
+    /// JSON, wrong schema, unknown `kind`, missing field, header/step
+    /// count mismatch — rejects the whole file with its line number.
+    pub fn parse(text: &str) -> Result<TraceFile, String> {
+        let mut header: Option<Json> = None;
+        let mut trace: Option<RunTrace> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let line = i + 1;
+            if raw.trim().is_empty() {
+                return Err(format!("line {line}: blank line in trace"));
+            }
+            let j = Json::parse(raw).map_err(|e| format!("line {line}: {e}"))?;
+            let kind = j
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("line {line}: missing \"kind\""))?
+                .to_string();
+            match kind.as_str() {
+                "header" => {
+                    if header.is_some() {
+                        return Err(format!("line {line}: duplicate header"));
+                    }
+                    let schema = j.get("schema").and_then(Json::as_str);
+                    if schema != Some(TRACE_SCHEMA) {
+                        return Err(format!(
+                            "line {line}: schema {:?} is not {TRACE_SCHEMA:?}",
+                            schema.unwrap_or("<missing>")
+                        ));
+                    }
+                    let col_stride = match j.get("col_stride") {
+                        None | Some(Json::Null) => None,
+                        Some(v) => match v.as_i64() {
+                            Some(s) if s > 0 => Some(s as u32),
+                            _ => return Err(format!("line {line}: invalid \"col_stride\"")),
+                        },
+                    };
+                    trace = Some(RunTrace {
+                        n_tiles: field_u64(&j, "n_tiles", line)? as u32,
+                        col_stride,
+                        max_steps: field_u64(&j, "max_steps", line)? as usize,
+                        steps: VecDeque::new(),
+                        dropped_steps: field_u64(&j, "dropped_steps", line)?,
+                        total_steps: field_u64(&j, "total_steps", line)?,
+                        segments: field_u64(&j, "segments", line)? as u32,
+                    });
+                    header = Some(j);
+                }
+                "step" => {
+                    let Some(t) = trace.as_mut() else {
+                        return Err(format!("line {line}: step record before header"));
+                    };
+                    t.steps.push_back(parse_step(&j, line)?);
+                }
+                other => return Err(format!("line {line}: unknown kind {other:?}")),
+            }
+        }
+        let header = header.ok_or_else(|| "trace file is empty".to_string())?;
+        let trace = trace.expect("trace present whenever header is");
+        let declared = header
+            .get("steps_recorded")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "line 1: missing \"steps_recorded\"".to_string())?;
+        if declared != trace.steps.len() {
+            return Err(format!(
+                "header declares {declared} step records, file has {}",
+                trace.steps.len()
+            ));
+        }
+        Ok(TraceFile { header, trace })
+    }
+
+    /// Re-emit the file: stored header verbatim, then one line per step.
+    pub fn render(&self) -> String {
+        let mut out = self.header.render();
+        out.push('\n');
+        for rec in &self.trace.steps {
+            out.push_str(&step_json(rec).render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Human-readable analysis of a parsed trace: per-tile utilisation,
+/// queue-depth percentiles, and the critical-path superstep histogram
+/// (per-superstep simulated duration on a log2 scale — the long buckets
+/// are the supersteps that set the makespan).
+pub fn summarize(file: &TraceFile) -> String {
+    let t = &file.trace;
+    let recorded = t.steps.len();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace: {} tiles, {} segment(s), {} superstep(s) observed ({} recorded, {} dropped by ring bound {})\n",
+        t.n_tiles, t.segments, t.total_steps, recorded, t.dropped_steps, t.max_steps
+    ));
+    if recorded == 0 {
+        out.push_str("no step records to analyse\n");
+        return out;
+    }
+
+    // Per-tile utilisation: a tile is "busy" in a superstep iff it appears
+    // in that step's samples.
+    let n = t.n_tiles as usize;
+    let mut busy = vec![0u64; n];
+    let mut copies = vec![0u64; n];
+    let mut lanes = vec![0u64; n];
+    let mut queue_hw = vec![0u32; n];
+    for rec in &t.steps {
+        for s in &rec.tiles {
+            let i = s.tile as usize;
+            if i < n {
+                busy[i] += 1;
+                copies[i] += s.copies;
+                lanes[i] += s.lanes;
+                queue_hw[i] = queue_hw[i].max(s.queue_hw);
+            }
+        }
+    }
+    let mut active: Vec<usize> = (0..n).filter(|&i| busy[i] > 0).collect();
+    active.sort_by(|&a, &b| (busy[b], copies[b]).cmp(&(busy[a], copies[a])).then(a.cmp(&b)));
+    let mut table = Table::new(&["tile", "busy steps", "util %", "copies", "lanes", "queue hw"]);
+    for &i in active.iter().take(SUMMARY_TILE_ROWS) {
+        table.row(vec![
+            i.to_string(),
+            fmt_count(busy[i]),
+            format!("{:.1}", 100.0 * busy[i] as f64 / recorded as f64),
+            fmt_count(copies[i]),
+            fmt_count(lanes[i]),
+            queue_hw[i].to_string(),
+        ]);
+    }
+    out.push_str(&table.render());
+    if active.len() > SUMMARY_TILE_ROWS {
+        out.push_str(&format!(
+            "(+{} more active tiles not shown; {} tiles never delivered)\n",
+            active.len() - SUMMARY_TILE_ROWS,
+            n - active.len()
+        ));
+    } else if active.len() < n {
+        out.push_str(&format!("({} tiles never delivered)\n", n - active.len()));
+    }
+
+    // Queue-depth percentiles over per-superstep high-water marks.
+    let depths: Vec<f64> = t.steps.iter().map(|r| f64::from(r.queue_hw)).collect();
+    out.push_str(&format!(
+        "queue depth high-water: p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}\n",
+        percentile(&depths, 50.0),
+        percentile(&depths, 90.0),
+        percentile(&depths, 99.0),
+        depths.iter().cloned().fold(0.0f64, f64::max),
+    ));
+
+    // Critical-path superstep histogram: log2 buckets of simulated cycles.
+    let mut hist = [0u64; super::span::LATENCY_BUCKETS];
+    for rec in &t.steps {
+        hist[log2_bucket(rec.t_end.saturating_sub(rec.t_start))] += 1;
+    }
+    let last = hist.iter().rposition(|&c| c > 0).unwrap_or(0);
+    out.push_str("superstep duration histogram (cycles, log2 buckets):\n");
+    for (i, &count) in hist.iter().enumerate().take(last + 1) {
+        let lo = if i == 0 { 0 } else { 1u64 << i };
+        out.push_str(&format!("  >= {:>8}: {}\n", lo, fmt_count(count)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> RunTrace {
+        let cfg = TraceConfig { max_steps: 8, col_stride: Some(4) };
+        let mut t = RunTrace::new(cfg, 3);
+        for step in 0..3u64 {
+            t.push(StepRecord {
+                segment: 0,
+                step,
+                t_start: step * 100,
+                t_end: (step + 1) * 100,
+                busy_tiles: 2,
+                copies: 10 + step,
+                lanes: 80 + step,
+                queue_hw: 4,
+                col_min: 1,
+                col_max: 2,
+                tiles: vec![
+                    TileSample { tile: 0, queue_hw: 4, copies: 6, lanes: 48, col_min: 1, col_max: 1 },
+                    TileSample { tile: 2, queue_hw: 3, copies: 4 + step, lanes: 32 + step, col_min: 2, col_max: 2 },
+                ],
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn ring_bound_drops_oldest_and_counts() {
+        let mut t = RunTrace::new(TraceConfig { max_steps: 2, col_stride: None }, 1);
+        for step in 0..5u64 {
+            t.push(StepRecord {
+                segment: 0,
+                step,
+                t_start: step,
+                t_end: step + 1,
+                busy_tiles: 0,
+                copies: 0,
+                lanes: 0,
+                queue_hw: 0,
+                col_min: NO_COL,
+                col_max: NO_COL,
+                tiles: Vec::new(),
+            });
+        }
+        assert_eq!(t.steps.len(), 2);
+        assert_eq!(t.dropped_steps, 3);
+        assert_eq!(t.total_steps, 5);
+        assert_eq!(t.steps[0].step, 3);
+    }
+
+    #[test]
+    fn absorb_renumbers_segments() {
+        let mut a = sample_trace();
+        let b = sample_trace();
+        a.absorb(b);
+        assert_eq!(a.segments, 2);
+        assert_eq!(a.total_steps, 6);
+        assert!(a.steps.iter().take(3).all(|r| r.segment == 0));
+        assert!(a.steps.iter().skip(3).all(|r| r.segment == 1));
+    }
+
+    #[test]
+    fn jsonl_round_trips_byte_identically() {
+        let t = sample_trace();
+        let mut rc = Json::obj();
+        rc.set("source", "unit-test");
+        let text = t.to_jsonl(rc);
+        let parsed = TraceFile::parse(&text).expect("parse");
+        assert_eq!(parsed.trace, t);
+        assert_eq!(parsed.render(), text, "parse -> render must round-trip");
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines_with_line_numbers() {
+        let t = sample_trace();
+        let text = t.to_jsonl(Json::obj());
+        let mut lines: Vec<&str> = text.lines().collect();
+
+        let err = TraceFile::parse("").unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+
+        let bad_json = text.replace("\"kind\":\"step\"", "\"kind\":");
+        let err = TraceFile::parse(&bad_json).unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
+
+        lines[1] = "{\"kind\":\"mystery\"}";
+        let err = TraceFile::parse(&lines.join("\n")).unwrap_err();
+        assert!(err.contains("line 2") && err.contains("mystery"), "{err}");
+
+        let truncated: String = text.lines().take(2).map(|l| format!("{l}\n")).collect();
+        let err = TraceFile::parse(&truncated).unwrap_err();
+        assert!(err.contains("declares"), "{err}");
+
+        let wrong_schema = text.replace(TRACE_SCHEMA, "poets-impute/trace/v0");
+        let err = TraceFile::parse(&wrong_schema).unwrap_err();
+        assert!(err.contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn summarize_reports_tiles_and_percentiles() {
+        let t = sample_trace();
+        let file = TraceFile::parse(&t.to_jsonl(Json::obj())).expect("parse");
+        let s = summarize(&file);
+        assert!(s.contains("3 tiles"), "{s}");
+        assert!(s.contains("queue depth high-water"), "{s}");
+        assert!(s.contains("superstep duration histogram"), "{s}");
+        // Tile 1 never delivers.
+        assert!(s.contains("1 tiles never delivered"), "{s}");
+    }
+}

@@ -58,6 +58,16 @@
 //!   delivered at least one event, and `SimMetrics::max_busy_tiles` records
 //!   the peak, both counted in the deterministic serial shard reduce so they
 //!   are thread-count invariant like every other counter;
+//! * **opt-in tracing** ([`SimConfig::trace`]): when enabled, each shard
+//!   additionally snapshots per-superstep delivery scratch — queue-depth
+//!   high-water, copies/lanes delivered, wavefront column span — with no
+//!   locks and no atomics; the scratch is folded into one
+//!   [`crate::obs::StepRecord`] per superstep inside the same deterministic
+//!   serial shard reduce, so the emitted trace — like every other counter —
+//!   is **bit-identical for every thread count and every wave/batch width**
+//!   (asserted by `tests/trace_determinism.rs`).  Disabled (the default),
+//!   the whole feature costs one branch on an `Option` per delivered event
+//!   batch: no allocation, no atomics on the hot path;
 //! * the only cross-tile values are the quiesce time (a `max`-reduce,
 //!   exact over `u64`) and the halt vote (an `and`-reduce), so a run is
 //!   **bit-identical for every thread count** — `SimConfig::threads`
@@ -80,6 +90,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::graph::builder::Graph;
 use crate::graph::device::{Ctx, Device, PortId, VertexId};
 use crate::graph::mapping::Mapping;
+use crate::obs::trace::{RunTrace, StepRecord, TileSample, TraceConfig, NO_COL};
 
 use super::costmodel::CostModel;
 use super::event::{GroupArrival, assert_event_fits};
@@ -101,6 +112,10 @@ pub struct SimConfig {
     /// runs serially; `Some(n)` fans the per-tile shards out over `n` OS
     /// threads.  Results are bit-identical for every value (see module docs).
     pub threads: Option<usize>,
+    /// Opt-in per-superstep, per-tile trace capture (see [`crate::obs`]).
+    /// `None` (the default) records nothing and costs one branch per event
+    /// batch; the captured trace is bit-identical for every `threads` value.
+    pub trace: Option<TraceConfig>,
 }
 
 impl Default for SimConfig {
@@ -109,6 +124,7 @@ impl Default for SimConfig {
             max_steps: 1_000_000,
             record_steps: true,
             threads: None,
+            trace: None,
         }
     }
 }
@@ -148,6 +164,15 @@ struct TileShard<D: Device> {
     copies_delivered: u64,
     lanes_delivered: u64,
     recv_handlers: u64,
+    // Per-superstep trace scratch, written only when tracing is enabled
+    // (`Env::trace`) and read in the serial shard reduce.  `t_copies` /
+    // `t_lanes` snapshot the cumulative counters at deliver start, so the
+    // superstep delta needs no extra adds in the delivery loop.
+    t_queue_hw: u32,
+    t_copies: u64,
+    t_lanes: u64,
+    t_col_min: u32,
+    t_col_max: u32,
 }
 
 /// Immutable per-superstep environment shared by every shard worker.
@@ -162,6 +187,9 @@ struct Env<'a, M> {
     local_core_of: &'a [u32],
     /// Simulated hardware threads (termination-wave cost input).
     n_sim_threads: usize,
+    /// `Some(col_stride)` when trace capture is on (`col_stride == 0`
+    /// disables wavefront column attribution); `None` = tracing off.
+    trace: Option<u32>,
 }
 
 impl<D: Device> TileShard<D> {
@@ -201,6 +229,13 @@ impl<D: Device> TileShard<D> {
     fn deliver_phase(&mut self, step: u64, env: &Env<'_, D::Msg>) {
         self.queue.sort_unstable(); // ascending (t, seq)
         self.delivered = !self.queue.is_empty();
+        if env.trace.is_some() {
+            self.t_queue_hw = self.queue.len() as u32;
+            self.t_copies = self.copies_delivered;
+            self.t_lanes = self.lanes_delivered;
+            self.t_col_min = NO_COL;
+            self.t_col_max = 0;
+        }
         let mut latest = 0u64;
         for qi in 0..self.queue.len() {
             let ev = self.queue[qi];
@@ -212,6 +247,17 @@ impl<D: Device> TileShard<D> {
             latest = latest.max(ev.t);
             let msg = &env.arena[ev.msg_idx as usize];
             self.lanes_delivered += n as u64 * D::lanes(msg) as u64;
+            // One branch per event batch when tracing is off; the column
+            // scan only runs when a stride was configured.
+            if let Some(stride) = env.trace {
+                if stride > 0 {
+                    for &d in dests {
+                        let c = d / stride;
+                        self.t_col_min = self.t_col_min.min(c);
+                        self.t_col_max = self.t_col_max.max(c);
+                    }
+                }
+            }
             for (i, &d) in dests.iter().enumerate() {
                 let ready = first_ready + i as u64 * env.cost.mailbox_ingress;
                 let slot = env.slot_of[d as usize] as usize;
@@ -364,6 +410,9 @@ pub struct Simulator<D: Device> {
     pending: Vec<SendReq<D::Msg>>,
     seq: u64,
     pub metrics: SimMetrics,
+    /// Bounded trace ring, present iff `cfg.trace` is set.  Filled in the
+    /// serial shard reduce; handed out via [`Simulator::take_trace`].
+    trace: Option<RunTrace>,
 }
 
 impl<D: Device> Simulator<D> {
@@ -412,6 +461,11 @@ impl<D: Device> Simulator<D> {
                 copies_delivered: 0,
                 lanes_delivered: 0,
                 recv_handlers: 0,
+                t_queue_hw: 0,
+                t_copies: 0,
+                t_lanes: 0,
+                t_col_min: NO_COL,
+                t_col_max: 0,
             })
             .collect();
         let mut slot_of = vec![0u32; n_v];
@@ -438,7 +492,13 @@ impl<D: Device> Simulator<D> {
             pending: Vec::new(),
             seq: 0,
             metrics: SimMetrics::default(),
+            trace: cfg.trace.map(|tc| RunTrace::new(tc, n_tiles as u32)),
         }
+    }
+
+    /// Take the captured trace (if tracing was enabled), leaving `None`.
+    pub fn take_trace(&mut self) -> Option<RunTrace> {
+        self.trace.take()
     }
 
     pub fn cluster(&self) -> &ClusterConfig {
@@ -460,6 +520,7 @@ impl<D: Device> Simulator<D> {
         let n_vertices = self.graph.n_vertices() as u64;
         let max_steps = self.cfg.max_steps;
         let record_steps = self.cfg.record_steps;
+        let trace_env = self.trace.as_ref().map(|t| t.col_stride.unwrap_or(0));
 
         // Partition the devices into their tile shards (vertex-id order is
         // slot order); restored to the graph before returning.
@@ -481,6 +542,7 @@ impl<D: Device> Simulator<D> {
                 slot_of: &self.slot_of,
                 local_core_of: &self.local_core_of,
                 n_sim_threads,
+                trace: trace_env,
             };
             run_init(&mut self.shards, host_threads, &env);
         }
@@ -517,12 +579,68 @@ impl<D: Device> Simulator<D> {
                     slot_of: &self.slot_of,
                     local_core_of: &self.local_core_of,
                     n_sim_threads,
+                    trace: trace_env,
                 };
                 run_superstep(&mut self.shards, host_threads, &env, step, step_start)
             };
             let decision = termination::detect(quiesce, n_sim_threads, true, 0, &self.cost);
             self.metrics.barrier_cycles += decision.step_at - quiesce;
             now = decision.step_at;
+
+            // Trace merge happens here, in the serial shard reduce, in tile
+            // order — the one place per-shard scratch is read — so the
+            // record is bit-identical for every `threads` value.
+            if let Some(trace) = self.trace.as_mut() {
+                let mut tiles: Vec<TileSample> = Vec::new();
+                let mut copies = 0u64;
+                let mut lanes = 0u64;
+                let mut queue_hw = 0u32;
+                let mut col_min = NO_COL;
+                let mut col_max = 0u32;
+                let mut busy = 0u32;
+                for (ti, s) in self.shards.iter().enumerate() {
+                    if !s.delivered {
+                        continue;
+                    }
+                    busy += 1;
+                    let t_copies = s.copies_delivered - s.t_copies;
+                    let t_lanes = s.lanes_delivered - s.t_lanes;
+                    copies += t_copies;
+                    lanes += t_lanes;
+                    queue_hw = queue_hw.max(s.t_queue_hw);
+                    let (cmin, cmax) = if s.t_col_min == NO_COL {
+                        (NO_COL, NO_COL)
+                    } else {
+                        col_min = col_min.min(s.t_col_min);
+                        col_max = col_max.max(s.t_col_max);
+                        (s.t_col_min, s.t_col_max)
+                    };
+                    tiles.push(TileSample {
+                        tile: ti as u32,
+                        queue_hw: s.t_queue_hw,
+                        copies: t_copies,
+                        lanes: t_lanes,
+                        col_min: cmin,
+                        col_max: cmax,
+                    });
+                }
+                if col_min == NO_COL {
+                    col_max = NO_COL;
+                }
+                trace.push(StepRecord {
+                    segment: 0,
+                    step,
+                    t_start: record_from,
+                    t_end: now,
+                    busy_tiles: busy,
+                    copies,
+                    lanes,
+                    queue_hw,
+                    col_min,
+                    col_max,
+                    tiles,
+                });
+            }
 
             // Reduce shard outputs: halt votes and next superstep's sends
             // (deterministic tile order).
@@ -795,6 +913,58 @@ mod tests {
     }
 
     #[test]
+    fn trace_capture_is_bit_identical_across_threads() {
+        let run = |threads: Option<usize>| {
+            let mut b = GraphBuilder::new();
+            for i in 0..12 {
+                b.add_vertex(Ring {
+                    hops_seen: 0,
+                    rounds: 17,
+                    is_seed: i == 0,
+                    pending_send: None,
+                });
+            }
+            for v in 0..12u32 {
+                b.add_port_to(v, vec![(v + 1) % 12]);
+            }
+            let cluster = ClusterConfig::tiny();
+            let mapping = Mapping::round_robin(12, &cluster);
+            let mut sim = Simulator::new(
+                b.build(),
+                mapping,
+                cluster,
+                CostModel::default(),
+                SimConfig {
+                    threads,
+                    trace: Some(TraceConfig { max_steps: 0, col_stride: Some(3) }),
+                    ..SimConfig::default()
+                },
+            );
+            sim.run();
+            (sim.take_trace().expect("tracing was enabled"), sim.metrics.steps)
+        };
+        let (serial, serial_steps) = run(None);
+        let (parallel, _) = run(Some(4));
+        assert_eq!(serial, parallel, "trace must be thread-count invariant");
+        assert_eq!(serial.total_steps, serial_steps);
+        assert_eq!(serial.total_steps, serial.steps.len() as u64, "unbounded ring drops nothing");
+        assert!(serial.steps.iter().any(|r| !r.tiles.is_empty()));
+        // Column attribution: vertex v maps to column v / 3.
+        let max_col = serial
+            .steps
+            .iter()
+            .filter(|r| r.col_max != NO_COL)
+            .map(|r| r.col_max)
+            .max()
+            .expect("some step has column attribution");
+        assert!(max_col <= 11 / 3);
+        // Tracing off: no trace is allocated at all.
+        let mut off = ring_sim_threads(4, 3, None);
+        off.run();
+        assert!(off.take_trace().is_none());
+    }
+
+    #[test]
     fn step_durations_sum_to_sim_cycles() {
         // Superstep 0 (init) and the trailing step-handler work are folded
         // into the recorded timeline.
@@ -943,6 +1113,7 @@ mod tests {
                 max_steps: 50,
                 record_steps: false,
                 threads: None,
+                trace: None,
             },
         );
         sim.run();

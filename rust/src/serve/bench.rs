@@ -17,7 +17,11 @@
 //!   load × shard count × coalescing — the shape that exposes shedding and
 //!   queueing growth, because arrivals do not slow down when the service
 //!   does.  Per point it reports achieved throughput, sojourn percentiles
-//!   (p50/p99/p999), shed rate, and — in the uncongested single-shard
+//!   (p50/p99/p999), shed/error counts (sheds never reached a worker;
+//!   errors failed in one — both are **excluded from the latency
+//!   percentiles**, which cover only the `latency_samples` successful
+//!   responses, and a per-request error never aborts the sweep), and — in
+//!   the uncongested single-shard
 //!   regime — cross-checks the measured mean queue wait against the
 //!   [`super::mmc`] M/M/c prediction built from the measured service-time
 //!   mean.  Disagreement beyond the documented tolerance fails the run
@@ -311,9 +315,18 @@ pub struct OpenLoopRow {
     pub shards: usize,
     pub workers: usize,
     pub coalesce: bool,
+    /// Arrivals admitted to a queue (tickets issued).
     pub accepted: usize,
+    /// Arrivals refused at submit time (queue full / quota / deadline).
     pub shed: usize,
     pub shed_rate: f64,
+    /// Admitted requests whose ticket came back with an error (worker-side
+    /// deadline expiry, engine failure).  Counted, never propagated — and
+    /// contributing NO latency sample.
+    pub errors: usize,
+    /// Successful responses backing the percentiles below: `accepted -
+    /// errors`.  Sheds and errors are excluded from every latency figure.
+    pub latency_samples: usize,
     /// Sojourn (queue wait + service) percentiles, milliseconds.
     pub p50_ms: f64,
     pub p99_ms: f64,
@@ -364,8 +377,8 @@ pub fn run_open_loop(opts: &OpenLoopOpts) -> Result<(String, Json), String> {
     }
 
     let mut table = Table::new(&[
-        "offered", "shards", "coalesce", "accepted", "shed", "req/s", "p50", "p99", "p999",
-        "wait", "mmc",
+        "offered", "shards", "coalesce", "accepted", "shed", "errors", "req/s", "p50", "p99",
+        "p999", "wait", "mmc",
     ]);
     let mut rows = Vec::new();
     let mut violations = Vec::new();
@@ -384,6 +397,7 @@ pub fn run_open_loop(opts: &OpenLoopOpts) -> Result<(String, Json), String> {
                     if row.coalesce { "on" } else { "off" }.into(),
                     row.accepted.to_string(),
                     format!("{} ({:.0}%)", row.shed, row.shed_rate * 100.0),
+                    row.errors.to_string(),
                     format!("{:.1}", row.achieved_rps),
                     format!("{:.2}ms", row.p50_ms),
                     format!("{:.2}ms", row.p99_ms),
@@ -458,18 +472,28 @@ fn open_loop_point(
     }
     let submit_span = start.elapsed().as_secs_f64().max(1e-9);
 
+    let accepted = tickets.len();
+    let mut errors = 0usize;
     let mut waits = Vec::with_capacity(tickets.len());
     let mut services = Vec::with_capacity(tickets.len());
     let mut sojourns = Vec::with_capacity(tickets.len());
     for t in tickets {
-        let r = t.wait()?;
-        waits.push(r.queue_wait_seconds);
-        services.push(r.report.host_seconds);
-        sojourns.push(r.queue_wait_seconds + r.report.host_seconds);
+        match t.wait() {
+            Ok(r) => {
+                waits.push(r.queue_wait_seconds);
+                services.push(r.report.host_seconds);
+                sojourns.push(r.queue_wait_seconds + r.report.host_seconds);
+            }
+            // A per-request failure (worker-side deadline expiry, engine
+            // error) is a data point, not a sweep abort — count it and move
+            // on.  Errored requests contribute no latency sample, so the
+            // percentiles below cover successful responses only.
+            Err(_) => errors += 1,
+        }
     }
     service.shutdown();
 
-    let accepted = sojourns.len();
+    let latency_samples = sojourns.len();
     let mean = |v: &[f64]| {
         if v.is_empty() {
             0.0
@@ -484,11 +508,12 @@ fn open_loop_point(
 
     // Cross-check against M/M/c only where the model is honest: one shard
     // (one queue), no coalescing (service times are per-request), nothing
-    // shed (no truncation bias), enough samples, uncongested.
+    // shed or errored (no truncation bias — an errored request has no
+    // service-time sample), enough samples, uncongested.
     let mut utilisation = None;
     let mut predicted_wait_ms = None;
     let mut mmc_checked = false;
-    if shards == 1 && !coalesce && shed == 0 && accepted >= 20 {
+    if shards == 1 && !coalesce && shed == 0 && errors == 0 && accepted >= 20 {
         if let Some(pred) = mmc::predict(opts.workers, arrival_rate, mean_service) {
             utilisation = Some(pred.utilisation);
             predicted_wait_ms = Some(pred.mean_wait_seconds * 1e3);
@@ -517,6 +542,8 @@ fn open_loop_point(
         accepted,
         shed,
         shed_rate: shed as f64 / opts.requests.max(1) as f64,
+        errors,
+        latency_samples,
         p50_ms: pct(&sojourns, 50.0),
         p99_ms: pct(&sojourns, 99.0),
         p999_ms: pct(&sojourns, 99.9),
@@ -541,6 +568,8 @@ fn to_load_json(opts: &OpenLoopOpts, rows: &[OpenLoopRow]) -> Json {
             .set("accepted", r.accepted)
             .set("shed", r.shed)
             .set("shed_rate", r.shed_rate)
+            .set("errors", r.errors)
+            .set("latency_samples", r.latency_samples)
             .set("p50_ms", r.p50_ms)
             .set("p99_ms", r.p99_ms)
             .set("p999_ms", r.p999_ms)
@@ -678,6 +707,12 @@ mod tests {
             let accepted = r.get("accepted").unwrap().as_i64().unwrap();
             let shed = r.get("shed").unwrap().as_i64().unwrap();
             assert_eq!(accepted + shed, 24, "every arrival is accounted for");
+            // Errors are recorded per point; the percentile basis is
+            // explicit: successes only.
+            let errors = r.get("errors").unwrap().as_i64().unwrap();
+            let samples = r.get("latency_samples").unwrap().as_i64().unwrap();
+            assert_eq!(samples, accepted - errors, "percentiles cover successes only");
+            assert_eq!(errors, 0, "healthy tiny sweep serves every admitted request");
             assert!(r.get("p999_ms").unwrap().as_f64().unwrap()
                 >= r.get("p50_ms").unwrap().as_f64().unwrap());
             assert!(r.get("shed_rate").unwrap().as_f64().unwrap() >= 0.0);

@@ -44,6 +44,11 @@
 //!   it completes, followed by a terminal manifest (the full
 //!   `serve-report/v1` minus `dosages`, plus `"parts"`); see
 //!   [`super::report`] for both schemas.
+//! * `spans` (bool, optional) — opt into the per-request phase timeline:
+//!   the response's `serve` section gains a `spans` object with monotone
+//!   microsecond offsets (admitted → dequeued → minted → prepared → run →
+//!   responded) plus `coalesced_with` / `merged_wave`; see
+//!   [`super::report`].
 //! * `id` (int, default: 1-based line number) — echoed in every response
 //!   document for this request.
 //!
@@ -352,6 +357,7 @@ pub(crate) fn manifest_json(id: i64, report: &ServeReport, parts_emitted: usize)
 /// `serve-stats/v1` snapshot: aggregate totals plus per-shard queue depth
 /// and counters.  `draining` marks the shutdown acknowledgement.
 pub(crate) fn stats_json(id: i64, service: &ShardedService, draining: bool) -> Json {
+    let hist = |h: &[u64]| Json::Arr(h.iter().map(|&c| Json::Int(c as i64)).collect());
     let stats_obj = |s: &super::ServiceStats| {
         let mut t = Json::obj();
         t.set("accepted", s.accepted)
@@ -363,7 +369,14 @@ pub(crate) fn stats_json(id: i64, service: &ShardedService, draining: bool) -> J
             .set("merged_waves", s.merged_waves)
             .set("shed_quota", s.shed_quota)
             .set("shed_deadline", s.shed_deadline)
-            .set("mean_batch_width", s.mean_batch_width());
+            .set("mean_batch_width", s.mean_batch_width())
+            .set("cache_hits", s.cache_hits)
+            .set("cache_misses", s.cache_misses)
+            .set("cache_evictions", s.cache_evictions)
+            // Log2-µs buckets: index i counts values in [2^i, 2^(i+1)) µs
+            // (see crate::obs::bucket_bounds), saturating at the last.
+            .set("queue_wait_hist", hist(&s.queue_wait_hist))
+            .set("service_hist", hist(&s.service_hist));
         t
     };
     let totals = service.stats();
@@ -388,7 +401,7 @@ pub(crate) fn stats_json(id: i64, service: &ShardedService, draining: bool) -> J
     j
 }
 
-const KNOWN_KEYS: [&str; 13] = [
+const KNOWN_KEYS: [&str; 14] = [
     "id",
     "panel",
     "engine",
@@ -400,6 +413,7 @@ const KNOWN_KEYS: [&str; 13] = [
     "window",
     "overlap",
     "stream",
+    "spans",
     "stats",
     "shutdown",
 ];
@@ -488,6 +502,12 @@ pub(crate) fn parse_line(line: &str, line_no: i64) -> Result<(i64, Verb), (i64, 
             .filter(|&ms| ms >= 0)
             .ok_or_else(|| fail("\"deadline_ms\" must be a non-negative int".into()))?;
         req = req.deadline_ms(ms as u64);
+    }
+    if let Some(s) = j.get("spans") {
+        if s.as_bool() != Some(true) {
+            return Err(fail("\"spans\" must be true when present".into()));
+        }
+        req = req.with_spans();
     }
     match (j.get("window"), j.get("overlap"), j.get("stream")) {
         (None, None, None) => {}
@@ -730,13 +750,71 @@ mod tests {
         let totals = stats.get("totals").unwrap();
         assert_eq!(totals.get("accepted").unwrap().as_i64(), Some(1));
         assert_eq!(totals.get("shed_quota").unwrap().as_i64(), Some(0));
+        // The served request built one engine: a cache miss, zero hits, and
+        // one sample in each latency histogram.
+        assert_eq!(totals.get("cache_misses").unwrap().as_i64(), Some(1));
+        assert_eq!(totals.get("cache_hits").unwrap().as_i64(), Some(0));
+        assert_eq!(totals.get("cache_evictions").unwrap().as_i64(), Some(0));
+        for key in ["queue_wait_hist", "service_hist"] {
+            let h = totals.get(key).unwrap().as_arr().unwrap();
+            assert_eq!(h.len(), crate::obs::LATENCY_BUCKETS, "{key} length");
+            let total: i64 = h.iter().map(|b| b.as_i64().unwrap()).sum();
+            assert_eq!(total, 1, "{key} counts the one served request");
+        }
         let per_shard = stats.get("per_shard").unwrap().as_arr().unwrap();
         assert_eq!(per_shard.len(), 2);
         for s in per_shard {
             assert!(s.get("queue_depth").unwrap().as_i64().is_some());
             assert!(s.get("merged_waves").unwrap().as_i64().is_some());
+            assert!(s.get("cache_hits").unwrap().as_i64().is_some());
         }
         assert!(stats.get("draining").is_none());
+    }
+
+    #[test]
+    fn spans_key_opts_into_the_timeline() {
+        let input = format!(
+            "{{\"id\":1,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1,\
+             \"spans\":true}}\n\
+             {{\"id\":2,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1}}\n\
+             {{\"id\":3,\"panel\":\"{PANEL}\",\"synth_targets\":1,\"spans\":false}}\n"
+        );
+        let (summary, lines) = run(&input);
+        assert_eq!(summary.ok, 2);
+        assert_eq!(summary.failed, 1, "\"spans\": false is rejected");
+        let spans = lines[0]
+            .get("serve")
+            .unwrap()
+            .get("spans")
+            .expect("opted-in response carries spans");
+        let order = [
+            "admitted_us",
+            "dequeued_us",
+            "minted_us",
+            "prepared_us",
+            "run_us",
+            "responded_us",
+        ];
+        let mut prev = -1i64;
+        for key in order {
+            let v = spans.get(key).unwrap().as_i64().unwrap();
+            assert!(v >= prev, "{key} must not regress (prev {prev}, got {v})");
+            prev = v;
+        }
+        assert!(spans.get("coalesced_with").unwrap().as_i64().unwrap() >= 1);
+        assert!(spans.get("merged_wave").unwrap().as_bool().is_some());
+        assert!(
+            lines[1].get("serve").unwrap().get("spans").is_none(),
+            "spans stay opt-in"
+        );
+        assert!(
+            lines[2]
+                .get("error")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .contains("spans"),
+        );
     }
 
     #[test]

@@ -40,6 +40,12 @@
 //!   `poets-impute/serve-report/v1` (the impute-report manifest plus
 //!   queue-wait / coalesce-width / batch-id fields and the dosages; see
 //!   [`report`]).
+//! * **Observability** — requests opting into `"spans": true` get a
+//!   [`RequestSpan`] phase timeline (admitted → dequeued → minted →
+//!   prepared → run → responded, µs offsets) in their response's
+//!   `serve.spans` object, and `serve-stats/v1` carries per-shard
+//!   engine-cache hit/miss/eviction counters plus log2-µs queue-wait /
+//!   service-time histograms (bucket layout: [`crate::obs`]).
 //!
 //! Admission is layered (see [`queue`]): a bounded queue (`admission:`
 //! errors), optional per-tenant token-bucket quotas ([`TenantQuota`],
@@ -89,8 +95,8 @@ pub mod report;
 pub mod shard;
 
 pub use queue::{
-    CoalescePolicy, ImputeRequest, RequestTargets, ServePart, ServiceStats, StreamSpec,
-    TenantQuota, Ticket,
+    CoalescePolicy, ImputeRequest, RequestSpan, RequestTargets, ServePart, ServiceStats,
+    StreamSpec, TenantQuota, Ticket,
 };
 pub use registry::{PanelRegistry, RegisteredPanel};
 pub use report::ServeReport;
@@ -225,6 +231,12 @@ const ENGINE_CACHE_CAP: usize = 8;
 struct EngineCache {
     entries: HashMap<(String, EngineSpec), (Box<dyn Engine>, u64)>,
     tick: u64,
+    /// Lookup counters since the last [`EngineCache::take_counters`] drain —
+    /// workers fold them into the shared [`ServiceStats`] after each group,
+    /// so `serve-stats/v1` shows live hit/miss/eviction rates per shard.
+    hits: u64,
+    misses: u64,
+    evictions: u64,
 }
 
 impl EngineCache {
@@ -232,6 +244,9 @@ impl EngineCache {
         EngineCache {
             entries: HashMap::new(),
             tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
         }
     }
 
@@ -244,7 +259,10 @@ impl EngineCache {
     ) -> &mut Box<dyn Engine> {
         self.tick += 1;
         let tick = self.tick;
-        if !self.entries.contains_key(key) {
+        if self.entries.contains_key(key) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
             while self.entries.len() >= ENGINE_CACHE_CAP {
                 let victim = self
                     .entries
@@ -253,6 +271,7 @@ impl EngineCache {
                     .map(|(k, _)| k.clone())
                     .expect("cache at capacity is nonempty");
                 self.entries.remove(&victim);
+                self.evictions += 1;
             }
             self.entries.insert(key.clone(), (build(), tick));
         }
@@ -263,6 +282,15 @@ impl EngineCache {
 
     fn remove(&mut self, key: &(String, EngineSpec)) {
         self.entries.remove(key);
+    }
+
+    /// Drain the counters accumulated since the last call.
+    fn take_counters(&mut self) -> (u64, u64, u64) {
+        let drained = (self.hits, self.misses, self.evictions);
+        self.hits = 0;
+        self.misses = 0;
+        self.evictions = 0;
+        drained
     }
 }
 
@@ -309,6 +337,9 @@ impl Service {
     /// request's `deadline_ms`; `quota:` when the tenant's token bucket is
     /// empty — all before any engine work is spent.
     pub fn submit(&self, req: ImputeRequest) -> Result<Ticket, String> {
+        // Span origin AND the request's age origin: everything from here on
+        // (admission checks included) counts against queue wait / deadlines.
+        let accepted = Instant::now();
         let mut st = self.shared.state.lock().expect(POISONED);
         if req.targets.is_empty() {
             // Declared width: an empty explicit set and a zero-wide deferred
@@ -365,12 +396,17 @@ impl Service {
         } else {
             (None, None)
         };
+        let span = req.spans.then(|| RequestSpan {
+            admitted_us: accepted.elapsed().as_micros() as u64,
+            ..RequestSpan::default()
+        });
         st.pending.push_back(Pending {
             id,
             req,
-            enqueued: Instant::now(),
+            enqueued: accepted,
             reply: tx,
             parts: parts_tx,
+            span,
         });
         drop(st);
         // Wake every worker: idle ones race for the head, lingering ones
@@ -433,11 +469,20 @@ impl Drop for Service {
     }
 }
 
-/// One pool worker: pop coalesced groups until shutdown drains the queue.
+/// One pool worker: pop coalesced groups until shutdown drains the queue,
+/// folding the worker-local engine-cache counters into the shared stats
+/// after each group so snapshots never lag by more than one batch.
 fn worker_loop(shared: &Shared, worker: usize) {
     let mut engines = EngineCache::new();
     while let Some(group) = next_group(shared) {
         run_group(shared, &mut engines, group, worker);
+        let (hits, misses, evictions) = engines.take_counters();
+        if hits | misses | evictions != 0 {
+            let mut st = shared.state.lock().expect(POISONED);
+            st.stats.cache_hits += hits;
+            st.stats.cache_misses += misses;
+            st.stats.cache_evictions += evictions;
+        }
     }
 }
 
@@ -500,9 +545,25 @@ fn next_group(shared: &Shared) -> Option<Group> {
 /// [`TargetBatch`].  Every failure, panics included, degrades to
 /// per-request errors.
 fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: usize) {
-    let Group { batch_id, members } = group;
+    let Group {
+        batch_id,
+        mut members,
+    } = group;
     let panel_name = members[0].req.panel.clone();
     let spec = members[0].req.engine;
+
+    // Queue wait ends here for every member: bucket it into the shared
+    // histogram (one lock per group) and stamp opted-in spans.
+    {
+        let mut st = shared.state.lock().expect(POISONED);
+        for p in &mut members {
+            let us = p.age_us();
+            st.stats.queue_wait_hist[crate::obs::latency_bucket(us)] += 1;
+            if let Some(s) = p.span.as_mut() {
+                s.mark_dequeued(us);
+            }
+        }
+    }
 
     // Guarded like the engine calls: a panicking resolve (or any future
     // pre-engine step) must degrade to per-request errors, never kill the
@@ -537,7 +598,13 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
             }
         };
         match materialised {
-            Ok(ts) => good.push((p, ts)),
+            Ok(ts) => {
+                let us = p.age_us();
+                if let Some(s) = p.span.as_mut() {
+                    s.mark_minted(us);
+                }
+                good.push((p, ts));
+            }
             Err(e) => finish(shared, p, Err(e)),
         }
     }
@@ -562,7 +629,7 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
             _ => runnable.push((p, ts)),
         }
     }
-    let good = runnable;
+    let mut good = runnable;
     if good.is_empty() {
         return;
     }
@@ -571,7 +638,7 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
     // so a stream spec on the head means a singleton group: run it window-
     // by-window, emitting parts as cores complete.
     if good.len() == 1 && good[0].0.req.stream.is_some() {
-        let (p, targets) = good.into_iter().next().expect("len checked above");
+        let (mut p, targets) = good.into_iter().next().expect("len checked above");
         let ctx = RequestCtx {
             batch_id,
             width: 1,
@@ -579,6 +646,12 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
             worker,
         };
         let result = run_streamed(shared, &panel, &p, targets, &ctx);
+        let us = p.age_us();
+        if let Some(s) = p.span.as_mut() {
+            // Window sessions build their own engines, so there is no
+            // distinct prepare stamp — it forward-fills at close-out.
+            s.mark_run(us);
+        }
         if let Ok(r) = &result {
             note_service_time(shared, r.report.host_seconds, 1);
         }
@@ -613,6 +686,16 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
                 }
             }
             Ok(()) => {
+                // The group-wide bind just completed (or was deferred to the
+                // per-request path, which re-stamps with its own prepare).
+                if !per_request_prepare {
+                    for (p, _) in good.iter_mut() {
+                        let us = p.age_us();
+                        if let Some(s) = p.span.as_mut() {
+                            s.mark_prepared(us);
+                        }
+                    }
+                }
                 // Event-plane groups merge every member's targets into ONE
                 // wave sweep: batch-width-invariant numerics make the merged
                 // run bit-identical per target to each member's solo run.
@@ -628,7 +711,7 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
                         worker,
                     );
                 } else {
-                    for (p, targets) in good {
+                    for (mut p, targets) in good {
                         let ctx = RequestCtx {
                             batch_id,
                             width,
@@ -638,9 +721,16 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
                             worker,
                         };
                         let result = if per_request_prepare {
-                            prepare_and_serve(shared, engine.as_mut(), &panel, &p, &targets, &ctx)
+                            prepare_and_serve(
+                                shared,
+                                engine.as_mut(),
+                                &panel,
+                                &mut p,
+                                &targets,
+                                &ctx,
+                            )
                         } else {
-                            serve_one(shared, engine.as_mut(), &panel, &p, &targets, &ctx)
+                            serve_one(shared, engine.as_mut(), &panel, &mut p, &targets, &ctx)
                         };
                         had_error |= result.is_err();
                         finish(shared, p, result);
@@ -719,7 +809,12 @@ fn run_merged_wave(
         st.note_service_time(host_seconds / width.max(1) as f64);
     }
     let mut rows = out.dosages.into_iter();
-    for (p, n) in members {
+    for (mut p, n) in members {
+        let us = p.age_us();
+        if let Some(s) = p.span.as_mut() {
+            s.mark_run(us);
+            s.merged_wave = true;
+        }
         let dosages: Vec<Vec<f32>> = rows.by_ref().take(n).collect();
         let ctx = RequestCtx {
             batch_id,
@@ -750,12 +845,16 @@ fn prepare_and_serve(
     shared: &Shared,
     engine: &mut dyn Engine,
     panel: &RegisteredPanel,
-    p: &Pending,
+    p: &mut Pending,
     targets: &[TargetHaplotype],
     ctx: &RequestCtx,
 ) -> Result<ServeReport, String> {
     let wl = Workload::from_shared(panel.panel_arc(), targets.to_vec())?;
     guard("prepare", || engine.prepare(&wl))?;
+    let us = p.age_us();
+    if let Some(s) = p.span.as_mut() {
+        s.mark_prepared(us);
+    }
     serve_one(shared, engine, panel, p, targets, ctx)
 }
 
@@ -764,7 +863,7 @@ fn serve_one(
     shared: &Shared,
     engine: &mut dyn Engine,
     panel: &RegisteredPanel,
-    p: &Pending,
+    p: &mut Pending,
     targets: &[TargetHaplotype],
     ctx: &RequestCtx,
 ) -> Result<ServeReport, String> {
@@ -772,6 +871,10 @@ fn serve_one(
     let t0 = Instant::now();
     let out = guard("run", || engine.run(&TargetBatch::new(targets)))?;
     let host_seconds = t0.elapsed().as_secs_f64();
+    let us = p.age_us();
+    if let Some(s) = p.span.as_mut() {
+        s.mark_run(us);
+    }
     note_service_time(shared, host_seconds, 1);
     if out.dosages.len() != n_targets {
         return Err(format!(
@@ -834,7 +937,9 @@ fn make_report(
             sim_seconds,
             metrics,
             stream: None,
+            trace: None,
         },
+        span: None,
     }
 }
 
@@ -902,6 +1007,7 @@ fn run_streamed(
         queue_wait_seconds: ctx.queue_wait_seconds,
         worker: ctx.worker,
         report: merged,
+        span: None,
     })
 }
 
@@ -915,8 +1021,15 @@ fn note_service_time(shared: &Shared, host_seconds: f64, width: usize) {
         .note_service_time(host_seconds / width.max(1) as f64);
 }
 
-/// Answer a request and bump the counters.
-fn finish(shared: &Shared, p: Pending, result: Result<ServeReport, String>) {
+/// Answer a request and bump the counters.  For span-opted requests the
+/// timeline is closed out here (the `responded` stamp is the instant the
+/// reply leaves for the ticket channel) and attached to successful replies.
+fn finish(shared: &Shared, mut p: Pending, mut result: Result<ServeReport, String>) {
+    if let (Some(span), Ok(r)) = (p.span.as_mut(), result.as_mut()) {
+        span.coalesced_with = r.coalesce_width as u32;
+        span.mark_responded(p.enqueued.elapsed().as_micros() as u64);
+        r.span = Some(*span);
+    }
     {
         let mut st = shared.state.lock().expect(POISONED);
         match &result {
@@ -1130,14 +1243,65 @@ mod tests {
         // The most recent key survives; the oldest was evicted.
         assert!(cache.entries.contains_key(&key(ENGINE_CACHE_CAP + 3)));
         assert!(!cache.entries.contains_key(&key(0)));
+        // Every insert missed; each past-capacity insert evicted one victim.
+        assert_eq!(
+            cache.take_counters(),
+            (0, ENGINE_CACHE_CAP as u64 + 4, 4),
+            "expected all-miss fills with 4 evictions"
+        );
         // Touching an entry refreshes it past newer insertions.
         cache.get_or_build(&key(5), || unreachable!("cached"));
         cache.get_or_build(&key(100), || {
             build_engine(EngineSpec::Baseline, &app, MappingStrategy::Manual2d)
         });
         assert!(cache.entries.contains_key(&key(5)), "freshly-used entry evicted");
+        assert_eq!(cache.take_counters(), (1, 1, 1), "hit + evicting miss");
+        assert_eq!(cache.take_counters(), (0, 0, 0), "drain resets");
         cache.remove(&key(5));
         assert!(!cache.entries.contains_key(&key(5)));
+    }
+
+    #[test]
+    fn cache_counters_reach_service_stats() {
+        // Two requests against the same (panel, engine) on one worker: the
+        // first misses (engine built), the second hits the worker cache.
+        let svc = service(ServeConfig::default().workers(1).no_coalesce());
+        svc.submit_wait(request(&svc, EngineSpec::Rank1, 1, 0)).unwrap();
+        svc.submit_wait(request(&svc, EngineSpec::Rank1, 1, 1)).unwrap();
+        let stats = svc.shutdown();
+        assert_eq!(stats.cache_misses, 1, "one engine build");
+        assert_eq!(stats.cache_hits, 1, "second request reuses it");
+        assert_eq!(stats.cache_evictions, 0);
+        // Both requests waited and ran, so both histograms saw them.
+        assert_eq!(stats.queue_wait_hist.iter().sum::<u64>(), 2);
+        assert_eq!(stats.service_hist.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn spans_are_opt_in_and_monotone() {
+        let svc = service(ServeConfig::default().workers(1));
+        let plain = svc
+            .submit_wait(request(&svc, EngineSpec::Rank1, 1, 0))
+            .unwrap();
+        assert!(plain.span.is_none(), "spans are opt-in");
+        let spanned = svc
+            .submit_wait(request(&svc, EngineSpec::Rank1, 1, 1).with_spans())
+            .unwrap();
+        let span = spanned.span.expect("requested span");
+        let stamps = [
+            span.admitted_us,
+            span.dequeued_us,
+            span.minted_us,
+            span.prepared_us,
+            span.run_us,
+            span.responded_us,
+        ];
+        assert!(
+            stamps.windows(2).all(|w| w[0] <= w[1]),
+            "span stamps must be monotone: {stamps:?}"
+        );
+        assert_eq!(span.coalesced_with as usize, spanned.coalesce_width);
+        svc.shutdown();
     }
 
     #[test]

@@ -27,12 +27,19 @@
 //!   ÷ workers, an EWMA maintained by the workers) already exceeds the
 //!   deadline, and expired again worker-side after mint/queue time if the
 //!   true age overran while waiting.
+//!
+//! Observability rides the same state: requests opting into `spans` carry a
+//! [`RequestSpan`] timeline stamped phase-by-phase as workers serve them,
+//! and [`ServiceStats`] aggregates engine-cache hit/miss/eviction counters
+//! plus log2-µs queue-wait / service-time histograms
+//! ([`crate::obs::latency_bucket`]) surfaced by `serve-stats/v1`.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::model::panel::TargetHaplotype;
+use crate::obs::{LATENCY_BUCKETS, latency_bucket};
 use crate::session::EngineSpec;
 
 use super::report::ServeReport;
@@ -61,6 +68,11 @@ pub struct ImputeRequest {
     /// emit dosage rows as each window's core span completes.  Streamed
     /// requests never coalesce.
     pub stream: Option<StreamSpec>,
+    /// Opt into a per-request span timeline ([`RequestSpan`]) in the
+    /// response's `serve.spans` object.  Off by default: span stamps cost a
+    /// handful of `Instant::now` reads per request, and responses stay
+    /// byte-stable for clients that never asked for timings.
+    pub spans: bool,
 }
 
 impl ImputeRequest {
@@ -78,6 +90,7 @@ impl ImputeRequest {
             tenant: None,
             deadline_ms: None,
             stream: None,
+            spans: false,
         }
     }
 
@@ -97,6 +110,71 @@ impl ImputeRequest {
     pub fn stream_windows(mut self, window: usize, overlap: usize) -> Self {
         self.stream = Some(StreamSpec { window, overlap });
         self
+    }
+
+    /// Opt into the per-request [`RequestSpan`] timeline in the response.
+    pub fn with_spans(mut self) -> Self {
+        self.spans = true;
+        self
+    }
+}
+
+/// One request's span timeline: microsecond offsets from the submit call's
+/// entry instant, one stamp per serve phase, surfaced in the response's
+/// `serve.spans` object when the request set `"spans": true`.
+///
+/// Stamps are monotone by construction — every `mark_*` clamps against the
+/// previous phase, and [`RequestSpan::mark_responded`] forward-fills any
+/// phase a path skipped (e.g. streamed requests have no group prepare) — so
+/// `admitted_us <= dequeued_us <= minted_us <= prepared_us <= run_us <=
+/// responded_us` always holds in the emitted document.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestSpan {
+    /// Admission checks passed; the request entered the queue.
+    pub admitted_us: u64,
+    /// A worker popped the request's coalesced group (queue wait ends).
+    pub dequeued_us: u64,
+    /// Targets materialised (deferred mints run here; explicit sets are
+    /// shape-checked — for those this stamp trails `dequeued_us` closely).
+    pub minted_us: u64,
+    /// Engine built/fetched from the worker cache and bound to the panel.
+    pub prepared_us: u64,
+    /// Engine run returned (dosages in hand).
+    pub run_us: u64,
+    /// Reply handed to the ticket channel.
+    pub responded_us: u64,
+    /// Requests sharing this request's coalesced batch (1 = ran alone).
+    pub coalesced_with: u32,
+    /// Whether an event-plane group merged this request's targets into one
+    /// shared wave sweep.
+    pub merged_wave: bool,
+}
+
+impl RequestSpan {
+    pub fn mark_dequeued(&mut self, us: u64) {
+        self.dequeued_us = us.max(self.admitted_us);
+    }
+
+    pub fn mark_minted(&mut self, us: u64) {
+        self.minted_us = us.max(self.dequeued_us);
+    }
+
+    pub fn mark_prepared(&mut self, us: u64) {
+        self.prepared_us = us.max(self.minted_us);
+    }
+
+    pub fn mark_run(&mut self, us: u64) {
+        self.run_us = us.max(self.prepared_us);
+    }
+
+    /// Final stamp: forward-fills any phase this request's path never
+    /// touched, then records the reply instant.
+    pub fn mark_responded(&mut self, us: u64) {
+        self.dequeued_us = self.dequeued_us.max(self.admitted_us);
+        self.minted_us = self.minted_us.max(self.dequeued_us);
+        self.prepared_us = self.prepared_us.max(self.minted_us);
+        self.run_us = self.run_us.max(self.prepared_us);
+        self.responded_us = us.max(self.run_us);
     }
 }
 
@@ -246,6 +324,18 @@ pub(crate) struct Pending {
     /// after the final reply, which is how the ticket side learns the part
     /// stream ended.
     pub parts: Option<mpsc::Sender<ServePart>>,
+    /// Span timeline under construction, present only when the request set
+    /// `spans` — workers stamp phases as they pass, `finish` attaches the
+    /// closed span to the response.
+    pub span: Option<RequestSpan>,
+}
+
+impl Pending {
+    /// Microseconds since this request entered `Service::submit` — the
+    /// origin every [`RequestSpan`] stamp is measured from.
+    pub fn age_us(&self) -> u64 {
+        self.enqueued.elapsed().as_micros() as u64
+    }
 }
 
 /// Handle returned by `Service::submit`: redeem it for the request's report.
@@ -330,6 +420,20 @@ pub struct ServiceStats {
     /// `rejected`) or expired worker-side after queue + mint time (subset
     /// of `failed`).
     pub shed_deadline: u64,
+    /// Worker engine-cache hits: a popped group found its (panel, engine)
+    /// pair already built on its worker.
+    pub cache_hits: u64,
+    /// Worker engine-cache misses (engine built from scratch).
+    pub cache_misses: u64,
+    /// Engines evicted from a worker cache at capacity (LRU victim).
+    pub cache_evictions: u64,
+    /// Queue-wait histogram: log2-µs buckets ([`latency_bucket`]) of
+    /// admission → group-pop wait, one count per dequeued request.
+    pub queue_wait_hist: [u64; LATENCY_BUCKETS],
+    /// Per-request engine service-time histogram, same buckets, fed by the
+    /// same observations as the admission EWMA (merged waves contribute
+    /// their per-request share).
+    pub service_hist: [u64; LATENCY_BUCKETS],
 }
 
 impl ServiceStats {
@@ -344,6 +448,14 @@ impl ServiceStats {
 
     /// Element-wise sum — used to aggregate per-shard stats.
     pub fn merge(&self, other: &ServiceStats) -> ServiceStats {
+        let mut queue_wait_hist = self.queue_wait_hist;
+        let mut service_hist = self.service_hist;
+        for (a, b) in queue_wait_hist.iter_mut().zip(other.queue_wait_hist.iter()) {
+            *a += *b;
+        }
+        for (a, b) in service_hist.iter_mut().zip(other.service_hist.iter()) {
+            *a += *b;
+        }
         ServiceStats {
             accepted: self.accepted + other.accepted,
             rejected: self.rejected + other.rejected,
@@ -354,6 +466,11 @@ impl ServiceStats {
             merged_waves: self.merged_waves + other.merged_waves,
             shed_quota: self.shed_quota + other.shed_quota,
             shed_deadline: self.shed_deadline + other.shed_deadline,
+            cache_hits: self.cache_hits + other.cache_hits,
+            cache_misses: self.cache_misses + other.cache_misses,
+            cache_evictions: self.cache_evictions + other.cache_evictions,
+            queue_wait_hist,
+            service_hist,
         }
     }
 }
@@ -399,11 +516,14 @@ impl QueueState {
         }
     }
 
-    /// Fold one observed per-request service time into the EWMA.
+    /// Fold one observed per-request service time into the EWMA (and the
+    /// `serve-stats/v1` service-time histogram — one edit point covers the
+    /// solo, coalesced and merged-wave paths alike).
     pub fn note_service_time(&mut self, seconds: f64) {
         if !seconds.is_finite() || seconds < 0.0 {
             return;
         }
+        self.stats.service_hist[latency_bucket((seconds * 1e6) as u64)] += 1;
         if self.ewma_service_seconds == 0.0 {
             self.ewma_service_seconds = seconds;
         } else {
@@ -470,6 +590,7 @@ mod tests {
             enqueued: Instant::now(),
             reply: tx,
             parts: None,
+            span: None,
         }
     }
 
@@ -481,6 +602,7 @@ mod tests {
             enqueued: Instant::now(),
             reply: tx,
             parts: None,
+            span: None,
         }
     }
 
@@ -558,10 +680,21 @@ mod tests {
         s.batches = 4;
         s.coalesced_requests = 10;
         assert!((s.mean_batch_width() - 2.5).abs() < 1e-12);
+        s.queue_wait_hist[3] = 5;
+        s.cache_hits = 7;
         let t = ServiceStats {
             accepted: 1,
             shed_quota: 2,
             shed_deadline: 3,
+            cache_hits: 1,
+            cache_misses: 4,
+            cache_evictions: 2,
+            queue_wait_hist: {
+                let mut h = [0u64; LATENCY_BUCKETS];
+                h[3] = 2;
+                h[9] = 1;
+                h
+            },
             ..ServiceStats::default()
         };
         let merged = s.merge(&t);
@@ -569,6 +702,46 @@ mod tests {
         assert_eq!(merged.accepted, 1);
         assert_eq!(merged.shed_quota, 2);
         assert_eq!(merged.shed_deadline, 3);
+        assert_eq!(merged.cache_hits, 8);
+        assert_eq!(merged.cache_misses, 4);
+        assert_eq!(merged.cache_evictions, 2);
+        assert_eq!(merged.queue_wait_hist[3], 7, "histograms sum element-wise");
+        assert_eq!(merged.queue_wait_hist[9], 1);
+    }
+
+    #[test]
+    fn span_stamps_are_monotone_and_forward_filled() {
+        let mut s = RequestSpan {
+            admitted_us: 10,
+            ..RequestSpan::default()
+        };
+        // An out-of-order stamp clamps up to the previous phase.
+        s.mark_dequeued(4);
+        assert_eq!(s.dequeued_us, 10);
+        s.mark_minted(25);
+        // The skipped prepare/run phases forward-fill at close-out.
+        s.mark_responded(40);
+        assert_eq!(s.prepared_us, 25);
+        assert_eq!(s.run_us, 25);
+        assert_eq!(s.responded_us, 40);
+        let stamps = [
+            s.admitted_us,
+            s.dequeued_us,
+            s.minted_us,
+            s.prepared_us,
+            s.run_us,
+            s.responded_us,
+        ];
+        assert!(stamps.windows(2).all(|w| w[0] <= w[1]), "{stamps:?}");
+    }
+
+    #[test]
+    fn service_time_feeds_the_histogram() {
+        let mut st = QueueState::default();
+        st.note_service_time(0.001); // 1000 µs -> bucket 9
+        st.note_service_time(f64::NAN); // ignored
+        assert_eq!(st.stats.service_hist[latency_bucket(1000)], 1);
+        assert_eq!(st.stats.service_hist.iter().sum::<u64>(), 1);
     }
 
     #[test]

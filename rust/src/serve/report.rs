@@ -15,7 +15,13 @@
 //!   - `coalesce_width` — how many requests shared that batch (1 = no
 //!     coalescing happened, whether disabled or just no concurrent traffic),
 //!   - `queue_wait_seconds` — admission → batch-start wait,
-//!   - `worker` — which pool worker ran the batch;
+//!   - `worker` — which pool worker ran the batch,
+//!   - `spans` — present only when the request set `"spans": true`: the
+//!     [`RequestSpan`] phase timeline as microsecond offsets from the
+//!     submit instant (`admitted_us <= dequeued_us <= minted_us <=
+//!     prepared_us <= run_us <= responded_us`, guaranteed monotone), plus
+//!     `coalesced_with` (batch width) and `merged_wave` (whether an
+//!     event-plane group ran this request inside one shared wave sweep);
 //! * a `"dosages"` array (`dosages[target][marker]`) — unlike the archived
 //!   bench manifest, a service response must carry the actual answer.
 //!
@@ -27,7 +33,10 @@
 //! registry spec the request resolved — for file-backed panels that is a
 //! `packed:<path>` spec whose on-disk `.ppnl` layout is documented in
 //! [`crate::genomics::packed`], or a `vcf:<path>` spec parsed by
-//! [`crate::genomics::vcf`].
+//! [`crate::genomics::vcf`].  The DES-side observability sibling — schema
+//! `poets-impute/trace/v1`, the per-superstep JSONL trace written by
+//! `impute --trace` and consumed by the `trace` CLI verb — is documented
+//! in [`crate::obs::trace`].
 //!
 //! ## The wire family
 //!
@@ -60,9 +69,14 @@
 //!   `{"id", "ok": true, "schema", "shards", "panels_cached", "totals",
 //!   "per_shard"}`.  `totals` merges every shard's counters (`accepted`,
 //!   `rejected`, `completed`, `failed`, `batches`, `coalesced_requests`,
-//!   `merged_waves`, `shed_quota`, `shed_deadline`, `mean_batch_width`);
-//!   `per_shard` repeats them per shard plus `shard` and live `queue_depth`.
-//!   While a shutdown is draining the reply carries `"draining": true`.
+//!   `merged_waves`, `shed_quota`, `shed_deadline`, `mean_batch_width`,
+//!   the worker engine-cache counters `cache_hits` / `cache_misses` /
+//!   `cache_evictions`, and two 16-element histograms `queue_wait_hist` /
+//!   `service_hist` — log2-µs buckets where index `i` counts values in
+//!   `[2^i, 2^(i+1))` µs, saturating at the last bucket; see
+//!   [`crate::obs::bucket_bounds`]); `per_shard` repeats them per shard
+//!   plus `shard` and live `queue_depth`.  While a shutdown is draining
+//!   the reply carries `"draining": true`.
 //!
 //! Request-side knobs that shape these responses: `tenant` (string) selects
 //! the token bucket that `quota:` sheds debit; `deadline_ms` (non-negative
@@ -73,6 +87,8 @@
 
 use crate::session::ImputeReport;
 use crate::util::json::Json;
+
+use super::queue::RequestSpan;
 
 /// Everything the service produced for one request.
 #[derive(Clone, Debug)]
@@ -91,6 +107,9 @@ pub struct ServeReport {
     pub worker: usize,
     /// The underlying per-request run manifest + dosages.
     pub report: ImputeReport,
+    /// Phase timeline, present only when the request opted in with
+    /// `"spans": true` — serialised as the `serve.spans` object.
+    pub span: Option<RequestSpan>,
 }
 
 impl ServeReport {
@@ -107,6 +126,19 @@ impl ServeReport {
             .set("coalesce_width", self.coalesce_width)
             .set("queue_wait_seconds", self.queue_wait_seconds)
             .set("worker", self.worker);
+        if let Some(sp) = &self.span {
+            let mut spans = Json::obj();
+            spans
+                .set("admitted_us", sp.admitted_us)
+                .set("dequeued_us", sp.dequeued_us)
+                .set("minted_us", sp.minted_us)
+                .set("prepared_us", sp.prepared_us)
+                .set("run_us", sp.run_us)
+                .set("responded_us", sp.responded_us)
+                .set("coalesced_with", sp.coalesced_with as u64)
+                .set("merged_wave", sp.merged_wave);
+            serve.set("spans", spans);
+        }
         j.set("serve", serve);
 
         let dosages: Vec<Json> = self
@@ -159,7 +191,9 @@ mod tests {
                 sim_seconds: None,
                 metrics: None,
                 stream: None,
+                trace: None,
             },
+            span: None,
         }
     }
 
@@ -174,6 +208,30 @@ mod tests {
         for key in ["engine", "workload", "run", "timing"] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
+    }
+
+    #[test]
+    fn spans_serialise_only_when_present() {
+        let j = report().to_json();
+        assert!(j.get("serve").unwrap().get("spans").is_none(), "opt-in");
+
+        let mut r = report();
+        r.span = Some(RequestSpan {
+            admitted_us: 1,
+            dequeued_us: 2,
+            minted_us: 3,
+            prepared_us: 4,
+            run_us: 5,
+            responded_us: 6,
+            coalesced_with: 3,
+            merged_wave: true,
+        });
+        let j = r.to_json();
+        let sp = j.get("serve").unwrap().get("spans").expect("spans block");
+        assert_eq!(sp.get("admitted_us"), Some(&Json::Int(1)));
+        assert_eq!(sp.get("responded_us"), Some(&Json::Int(6)));
+        assert_eq!(sp.get("coalesced_with"), Some(&Json::Int(3)));
+        assert_eq!(sp.get("merged_wave"), Some(&Json::Bool(true)));
     }
 
     #[test]

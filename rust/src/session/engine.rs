@@ -17,7 +17,8 @@ use crate::imputation::app::{EventRunResult, RawAppConfig, build_raw_graph, extr
 use crate::imputation::interp_app::{build_interp_graph, extract_interp_results};
 use crate::model::baseline::{Baseline, ImputeOut, Method};
 use crate::model::panel::ReferencePanel;
-use crate::poets::desim::Simulator;
+use crate::obs::trace::RunTrace;
+use crate::poets::desim::{SimConfig, Simulator};
 use crate::poets::metrics::SimMetrics;
 use crate::runtime::{Runtime, XlaImputer};
 
@@ -131,6 +132,8 @@ pub struct EngineOutput {
     pub sim_seconds: Option<f64>,
     /// DES counters (event planes only).
     pub metrics: Option<SimMetrics>,
+    /// Per-superstep trace (event planes with `SimConfig::trace` set only).
+    pub trace: Option<RunTrace>,
 }
 
 impl EngineOutput {
@@ -139,6 +142,7 @@ impl EngineOutput {
             dosages,
             sim_seconds: None,
             metrics: None,
+            trace: None,
         }
     }
 
@@ -147,8 +151,22 @@ impl EngineOutput {
             dosages: res.dosages,
             sim_seconds: Some(res.sim_seconds),
             metrics: Some(res.metrics),
+            trace: res.trace,
         }
     }
+}
+
+/// The event planes lay vertices out column-major (`v = col·H + h` for the
+/// raw plane, anchor-major with the same haplotype stride for the interp
+/// plane), so the wavefront column of a vertex is `v / n_hap`.  Fill that
+/// stride into an enabled trace config unless the caller already set one.
+fn trace_cfg_for_panel(mut sim: SimConfig, panel: &ReferencePanel) -> SimConfig {
+    if let Some(tc) = sim.trace.as_mut() {
+        if tc.col_stride.is_none() {
+            tc.col_stride = Some(panel.n_hap() as u32);
+        }
+    }
+    sim
 }
 
 /// A compute plane bound to (at most) one workload at a time.
@@ -292,13 +310,12 @@ impl Engine for EventEngine {
         let mapping = self
             .mapping
             .build(&graph, self.cfg.states_per_thread, &self.cfg.cluster);
-        let mut sim = Simulator::new(graph, mapping, self.cfg.cluster, self.cfg.cost, self.cfg.sim);
+        let sim_cfg = trace_cfg_for_panel(self.cfg.sim, panel);
+        let mut sim = Simulator::new(graph, mapping, self.cfg.cluster, self.cfg.cost, sim_cfg);
         sim.run();
-        Ok(EngineOutput::from_event(extract_results(
-            &sim,
-            panel,
-            batch.len(),
-        )))
+        let mut res = extract_results(&sim, panel, batch.len());
+        res.trace = sim.take_trace();
+        Ok(EngineOutput::from_event(res))
     }
 }
 
@@ -360,14 +377,12 @@ impl Engine for InterpEngine {
         let mapping =
             self.mapping
                 .build(&graph, self.cfg.states_per_thread.max(1), &self.cfg.cluster);
-        let mut sim = Simulator::new(graph, mapping, self.cfg.cluster, self.cfg.cost, self.cfg.sim);
+        let sim_cfg = trace_cfg_for_panel(self.cfg.sim, panel);
+        let mut sim = Simulator::new(graph, mapping, self.cfg.cluster, self.cfg.cost, sim_cfg);
         sim.run();
-        Ok(EngineOutput::from_event(extract_interp_results(
-            &sim,
-            panel,
-            &anchors,
-            batch.len(),
-        )))
+        let mut res = extract_interp_results(&sim, panel, &anchors, batch.len());
+        res.trace = sim.take_trace();
+        Ok(EngineOutput::from_event(res))
     }
 }
 

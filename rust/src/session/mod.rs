@@ -143,6 +143,16 @@ impl ImputeSession {
         self
     }
 
+    /// Opt-in per-superstep DES trace capture ([`crate::obs`]).  The event
+    /// planes fill the wavefront column stride from the panel shape; the
+    /// captured trace lands in [`ImputeReport::trace`] (batch and window
+    /// runs fold into one trace as successive segments).  Host planes
+    /// ignore it.
+    pub fn trace(mut self, trace: crate::obs::TraceConfig) -> Self {
+        self.app.sim.trace = Some(trace);
+        self
+    }
+
     /// Vertex→thread mapping strategy for the event planes.
     pub fn mapping(mut self, mapping: MappingStrategy) -> Self {
         self.mapping = mapping;
@@ -194,6 +204,7 @@ impl ImputeSession {
         let mut dosages: Vec<Vec<f32>> = Vec::with_capacity(n_targets);
         let mut sim_seconds: Option<f64> = None;
         let mut metrics: Option<SimMetrics> = None;
+        let mut trace: Option<crate::obs::RunTrace> = None;
         let mut n_batches = 0usize;
         for batch in self.workload.batches(batch_size) {
             let out = engine.run(&batch)?;
@@ -213,6 +224,12 @@ impl ImputeSession {
                 match &mut metrics {
                     None => metrics = Some(m),
                     Some(acc) => acc.absorb(&m),
+                }
+            }
+            if let Some(t) = out.trace {
+                match &mut trace {
+                    None => trace = Some(t),
+                    Some(acc) => acc.absorb(t),
                 }
             }
             n_batches += 1;
@@ -244,6 +261,7 @@ impl ImputeSession {
             sim_seconds,
             metrics,
             stream: None,
+            trace,
         })
     }
 }
@@ -309,6 +327,32 @@ mod tests {
         // Metrics accumulate across batches: 3 sequential runs' steps.
         let m = report.metrics.unwrap();
         assert_eq!(m.step_durations.len() as u64, m.steps);
+    }
+
+    #[test]
+    fn traced_event_session_folds_batches_into_segments() {
+        let report = ImputeSession::new(wl(4))
+            .engine(EngineSpec::Event)
+            .boards(1)
+            .states_per_thread(8)
+            .batch(2)
+            .trace(crate::obs::TraceConfig::default())
+            .run()
+            .unwrap();
+        let t = report.trace.as_ref().expect("trace was requested");
+        assert_eq!(t.segments, 2, "one segment per engine batch");
+        assert!(t.total_steps > 0);
+        // Engines fill the wavefront column stride from the panel shape.
+        assert_eq!(t.col_stride, Some(8));
+        assert!(report.to_json().get("trace").is_some(), "manifest summary block");
+        // Untraced runs carry (and pay) nothing.
+        let plain = ImputeSession::new(wl(1))
+            .engine(EngineSpec::Event)
+            .boards(1)
+            .states_per_thread(8)
+            .run()
+            .unwrap();
+        assert!(plain.trace.is_none());
     }
 
     #[test]

@@ -75,6 +75,11 @@ pub struct ImputeReport {
     /// run (absent: all windows were materialised up front or there was no
     /// windowing at all).
     pub stream: Option<StreamTelemetry>,
+    /// Per-superstep DES trace (event planes, opt-in via
+    /// `ImputeSession::trace` / `impute --trace`).  The manifest serialises
+    /// only a summary block; the full `poets-impute/trace/v1` JSONL is
+    /// written by the CLI's `--trace PATH`.
+    pub trace: Option<crate::obs::RunTrace>,
 }
 
 impl ImputeReport {
@@ -137,6 +142,16 @@ impl ImputeReport {
                 .set("peak_resident_windows", s.peak_resident_windows)
                 .set("windows_streamed", s.windows_streamed);
             j.set("stream", stream);
+        }
+        if let Some(t) = &self.trace {
+            let mut trace = Json::obj();
+            trace
+                .set("n_tiles", t.n_tiles as u64)
+                .set("segments", t.segments as u64)
+                .set("total_steps", t.total_steps)
+                .set("steps_recorded", t.steps.len())
+                .set("dropped_steps", t.dropped_steps);
+            j.set("trace", trace);
         }
         j
     }
@@ -222,6 +237,7 @@ mod tests {
             sim_seconds: Some(0.01),
             metrics: Some(SimMetrics::default()),
             stream: None,
+            trace: None,
         }
     }
 
@@ -244,6 +260,22 @@ mod tests {
         assert!(j.get("workload").unwrap().get("panel").is_none());
         assert!(run.get("windows").is_none());
         assert!(j.get("stream").is_none());
+        assert!(j.get("trace").is_none(), "trace block is opt-in");
+    }
+
+    #[test]
+    fn trace_summary_serialises_when_present() {
+        let mut r = report();
+        let mut t = crate::obs::RunTrace::new(crate::obs::TraceConfig::default(), 4);
+        t.total_steps = 9;
+        t.dropped_steps = 2;
+        r.trace = Some(t);
+        let j = r.to_json();
+        let block = j.get("trace").expect("trace block");
+        assert_eq!(block.get("n_tiles"), Some(&Json::Int(4)));
+        assert_eq!(block.get("total_steps"), Some(&Json::Int(9)));
+        assert_eq!(block.get("dropped_steps"), Some(&Json::Int(2)));
+        assert_eq!(block.get("steps_recorded"), Some(&Json::Int(0)));
     }
 
     #[test]

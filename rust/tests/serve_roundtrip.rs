@@ -496,6 +496,93 @@ fn tcp_responses_match_stdin_jsonl_and_solo_sessions_for_every_engine() {
 }
 
 #[test]
+fn request_spans_are_monotone_across_transports() {
+    // Observability satellite: a request opting in with "spans":true gets a
+    // monotone phase timeline on both the library and JSONL paths; requests
+    // that do not opt in carry no spans (so the transport byte-equality
+    // checks above are unaffected).
+    use poets_impute::serve::ShardedService;
+
+    // Library path: a coalesced event-plane burst with spans on.
+    let registry = Arc::new(PanelRegistry::new());
+    let panel = registry.resolve(PANEL).unwrap();
+    let service = Service::start(Arc::clone(&registry), serve_config(true));
+    let tickets: Vec<_> = (0..3)
+        .map(|c| {
+            service
+                .submit(
+                    ImputeRequest::new(
+                        PANEL,
+                        EngineSpec::Event,
+                        panel.synthetic_targets(1, 700 + c).unwrap(),
+                    )
+                    .with_spans(),
+                )
+                .unwrap()
+        })
+        .collect();
+    for (c, t) in tickets.into_iter().enumerate() {
+        let report = t.wait().unwrap();
+        let span = report.span.expect("spans were requested");
+        let stamps = [
+            span.admitted_us,
+            span.dequeued_us,
+            span.minted_us,
+            span.prepared_us,
+            span.run_us,
+            span.responded_us,
+        ];
+        assert!(
+            stamps.windows(2).all(|w| w[0] <= w[1]),
+            "client {c}: non-monotone span {stamps:?}"
+        );
+        assert_eq!(
+            span.coalesced_with as usize, report.coalesce_width,
+            "client {c}: span width disagrees with the report"
+        );
+    }
+    service.shutdown();
+
+    // JSONL path: spans surface as serve.spans only when requested.
+    let svc = ShardedService::start(Arc::new(PanelRegistry::new()), serve_config(false), 1);
+    let input = format!(
+        "{{\"id\":1,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1,\"spans\":true}}\n\
+         {{\"id\":2,\"panel\":\"{PANEL}\",\"engine\":\"rank1\",\"synth_targets\":1}}\n"
+    );
+    let mut out = Vec::new();
+    poets_impute::serve::jsonl::serve_stream(&svc, input.as_bytes(), &mut out).unwrap();
+    svc.shutdown();
+    let lines: Vec<Json> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    assert_eq!(lines.len(), 2);
+    let sp = lines[0]
+        .get("serve")
+        .unwrap()
+        .get("spans")
+        .expect("id 1 opted in");
+    let mut prev = 0i64;
+    for key in [
+        "admitted_us",
+        "dequeued_us",
+        "minted_us",
+        "prepared_us",
+        "run_us",
+        "responded_us",
+    ] {
+        let v = sp.get(key).unwrap().as_i64().unwrap();
+        assert!(v >= prev, "{key} regressed: {v} < {prev}");
+        prev = v;
+    }
+    assert!(
+        lines[1].get("serve").unwrap().get("spans").is_none(),
+        "spans are strictly opt-in"
+    );
+}
+
+#[test]
 fn bench_serve_cli_emits_throughput_baseline() {
     let argv: Vec<String> = [
         "bench-serve",

@@ -1,0 +1,122 @@
+//! Integration: the observability contract of the DES trace plane
+//! (schema `poets-impute/trace/v1`, see `obs::trace`).
+//!
+//! The load-bearing invariant: trace capture rides the simulator's
+//! deterministic serial shard reduce, so at a FIXED wave/batch width the
+//! serialised JSONL is **byte-identical for any host thread count** — the
+//! trace is an observation of the simulated schedule, not of host timing.
+//! Different widths pipeline different lane groups through the graph and
+//! legitimately record different schedules, so identity is asserted per
+//! width, never across widths (each width stays deterministic run to run).
+//!
+//! Also covered here: the parse → render identity of trace files, the
+//! line-numbered rejection of malformed input, and the structural validity
+//! of the Chrome `trace_event` export.
+
+use poets_impute::imputation::msg::LANES;
+use poets_impute::obs::{self, TRACE_SCHEMA, TraceConfig, TraceFile};
+use poets_impute::session::{EngineSpec, ImputeSession, Workload};
+use poets_impute::util::json::Json;
+use poets_impute::workload::panelgen::PanelConfig;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn workload(seed: u64, n_targets: usize) -> Workload {
+    let cfg = PanelConfig {
+        n_hap: 8,
+        n_mark: 24,
+        maf: 0.2,
+        annot_ratio: 0.2,
+        seed,
+        ..PanelConfig::default()
+    };
+    Workload::synthetic(&cfg, n_targets)
+}
+
+/// One traced event-plane run, serialised.  The run_config deliberately
+/// excludes the thread count, so byte equality across threads is meaningful.
+fn traced_jsonl(wl: &Workload, width: usize, threads: usize) -> String {
+    let report = ImputeSession::new(wl.clone())
+        .engine(EngineSpec::Event)
+        .boards(2)
+        .states_per_thread(4)
+        .threads(threads)
+        .batch(width)
+        .trace(TraceConfig::default())
+        .run()
+        .expect("event plane is always available");
+    let trace = report.trace.expect("a traced event run records a trace");
+    let mut rc = Json::obj();
+    rc.set("suite", "trace_determinism").set("batch_width", width);
+    trace.to_jsonl(rc)
+}
+
+#[test]
+fn trace_is_bit_identical_across_threads_at_every_width() {
+    let wl = workload(11, LANES + 3);
+    for &width in &[1usize, LANES - 1, LANES, LANES + 3] {
+        let reference = traced_jsonl(&wl, width, THREADS[0]);
+        assert!(
+            reference.contains(TRACE_SCHEMA),
+            "header names the schema: {}",
+            reference.lines().next().unwrap_or("")
+        );
+        for &threads in &THREADS[1..] {
+            let got = traced_jsonl(&wl, width, threads);
+            assert_eq!(
+                reference, got,
+                "trace diverged at width={width} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_round_trips_byte_identically() {
+    let wl = workload(29, 3);
+    let text = traced_jsonl(&wl, 1, 2);
+    let file = TraceFile::parse(&text).expect("self-produced traces parse");
+    assert_eq!(file.render(), text, "parse -> render must be the identity");
+    assert!(file.trace.total_steps > 0, "the run recorded supersteps");
+    // The analysis front end accepts any parsed trace.
+    let summary = obs::trace::summarize(&file);
+    assert!(summary.contains("tiles"), "{summary}");
+}
+
+#[test]
+fn malformed_lines_are_rejected_with_their_line_number() {
+    let wl = workload(31, 2);
+    let text = traced_jsonl(&wl, 1, 1);
+    let mut lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() > 1, "need at least one step record to corrupt");
+    let n = lines.len();
+    // An unknown record kind on the final line must name that line.
+    *lines.last_mut().unwrap() = "{\"kind\":\"wibble\"}";
+    let err = TraceFile::parse(&(lines.join("\n") + "\n")).unwrap_err();
+    assert!(err.contains(&format!("line {n}")), "{err}");
+}
+
+#[test]
+fn chrome_export_is_structurally_valid() {
+    let wl = workload(43, LANES);
+    let text = traced_jsonl(&wl, LANES, 2);
+    let file = TraceFile::parse(&text).expect("parse");
+    let doc = obs::chrome::to_chrome(&file);
+    assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let events = match doc.get("traceEvents") {
+        Some(Json::Arr(xs)) => xs,
+        other => panic!("traceEvents missing or not an array: {other:?}"),
+    };
+    assert!(!events.is_empty());
+    for e in events {
+        let ph = e.get("ph").and_then(Json::as_str).expect("every event has ph");
+        assert!(matches!(ph, "M" | "X" | "C"), "unexpected phase {ph:?}");
+        assert!(e.get("pid").and_then(Json::as_i64).is_some());
+        if ph == "X" {
+            assert!(e.get("ts").and_then(Json::as_i64).unwrap() >= 0);
+            assert!(e.get("dur").and_then(Json::as_i64).unwrap() >= 0);
+        }
+    }
+    // The export itself must be valid JSON end to end.
+    assert!(Json::parse(&doc.pretty()).is_ok());
+}
