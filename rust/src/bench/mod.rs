@@ -5,11 +5,15 @@
 //!   check, each printing the same series the paper plots.
 //! * [`calibrate`] — the frozen cost-model constants, the 270× anchor-point
 //!   comparison, and per-constant sensitivity.
+//! * [`topology`] — the scenario lab's workload × topology × fault-model
+//!   sweep (`bench topology`), hard-gated by the analytic cross-check.
 
 pub mod ablation;
 pub mod calibrate;
 pub mod figures;
+pub mod topology;
 pub mod x86;
 
 pub use figures::{FigOpts, FigReport, fig11, fig12, fig13, sync_overhead};
+pub use topology::{TopologyOpts, TopologyReport};
 pub use x86::X86Cost;

@@ -1,0 +1,324 @@
+//! `bench topology` — the scenario lab's workload × topology × fault-model
+//! sweep.
+//!
+//! Each sweep point runs one fixed imputation workload end-to-end on the DES
+//! under a [`ScenarioSpec`] (heterogeneous link speeds, degraded links,
+//! failed links with reroute), records the link-plane telemetry the NoC now
+//! exposes, and cross-checks the measured cycles against
+//! `imputation::analytic::predict_scenario`.  The cross-check is a **hard
+//! gate**: any point whose analytic/DES ratio leaves [`GATE_BAND`] fails the
+//! whole sweep (after the JSON artifact is written, so CI still archives the
+//! offending numbers).
+//!
+//! The scenarios deliberately use small boards (a few threads each) so a
+//! unit-scale panel spans several boards and actually exercises the link
+//! plane — on full 1024-thread boards this workload would never leave
+//! board 0.
+
+use crate::imputation::analytic::{predict_scenario, AppKind, Workload as AWorkload};
+use crate::poets::costmodel::CostModel;
+use crate::poets::scenario::ScenarioSpec;
+use crate::session::{EngineSpec, ImputeSession, Workload};
+use crate::util::json::Json;
+use crate::util::provenance;
+use crate::util::table::{fmt_count, Table};
+use crate::workload::panelgen::PanelConfig;
+
+/// Schema tag on `BENCH_topology.json`.
+pub const TOPOLOGY_SCHEMA: &str = "poets-impute/bench-topology/v1";
+
+/// Allowed analytic/DES cycle ratio at every sweep point.  Forgiving by
+/// design — the analytic model is a steady-state bottleneck bound, not a
+/// simulator — but a point outside this band means one of the two planes
+/// has stopped modelling the same machine.
+pub const GATE_BAND: (f64, f64) = (0.25, 4.0);
+
+/// Sweep configuration: one workload, many topologies.
+#[derive(Clone, Debug)]
+pub struct TopologyOpts {
+    pub n_hap: usize,
+    pub n_mark: usize,
+    pub n_targets: usize,
+    pub states_per_thread: usize,
+    pub seed: u64,
+    pub scenarios: Vec<ScenarioSpec>,
+}
+
+impl Default for TopologyOpts {
+    fn default() -> Self {
+        TopologyOpts {
+            n_hap: 8,
+            n_mark: 24,
+            n_targets: 12,
+            states_per_thread: 4,
+            seed: 2023,
+            scenarios: default_scenarios(),
+        }
+    }
+}
+
+impl TopologyOpts {
+    /// The CI smoke shape: the default workload over the default scenario
+    /// set (baseline + degraded + hotspot + failed link — all four DES runs
+    /// finish in well under a second).
+    pub fn smoke() -> TopologyOpts {
+        TopologyOpts::default()
+    }
+
+    /// The full sweep: the smoke set plus a wider cluster and a compound
+    /// degraded-and-failed scenario, at a heavier target count.
+    pub fn full() -> TopologyOpts {
+        let mut o = TopologyOpts { n_targets: 24, ..TopologyOpts::default() };
+        o.scenarios.push(scenario(
+            "wide16",
+            "boards=16,tiles=2,cores=1,threads=4",
+        ));
+        o.scenarios.push(scenario(
+            "degraded-and-failed",
+            "boards=8,tiles=2,cores=1,threads=4,bw=0.5,fail=0E",
+        ));
+        o
+    }
+}
+
+/// Small boards (8 threads each) so the unit-scale panel spans ~6 of the 8
+/// boards; see the module docs.
+const SHAPE: &str = "boards=8,tiles=2,cores=1,threads=4";
+
+fn scenario(name: &str, rest: &str) -> ScenarioSpec {
+    ScenarioSpec::parse(&format!("name={name},{rest}"))
+        .unwrap_or_else(|e| panic!("built-in scenario {name}: {e}"))
+}
+
+/// The default topology set: homogeneous baseline, globally slow
+/// inter-board links, one congested hotspot link, one failed link.
+pub fn default_scenarios() -> Vec<ScenarioSpec> {
+    vec![
+        scenario("baseline", SHAPE),
+        scenario("slow-links", &format!("{SHAPE},bw=0.25,lat=2")),
+        scenario("hotspot-1E", &format!("{SHAPE},link=1E:bw=0.25")),
+        scenario("failed-0E", &format!("{SHAPE},fail=0E")),
+    ]
+}
+
+/// One sweep point's measurements.
+#[derive(Clone, Debug)]
+pub struct TopologyRow {
+    pub scenario: ScenarioSpec,
+    pub des_cycles: u64,
+    pub des_steps: u64,
+    pub max_link_utilisation: f64,
+    pub link_events_total: u64,
+    pub inter_board_copies: u64,
+    pub rerouted_sends: u64,
+    pub analytic_cycles: u64,
+    /// analytic / DES.
+    pub ratio: f64,
+    pub gate_pass: bool,
+}
+
+/// A completed sweep.
+#[derive(Clone, Debug)]
+pub struct TopologyReport {
+    pub opts: TopologyOpts,
+    pub rows: Vec<TopologyRow>,
+}
+
+impl TopologyReport {
+    pub fn gate_passed(&self) -> bool {
+        self.rows.iter().all(|r| r.gate_pass)
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "scenario",
+            "boards",
+            "DES cycles",
+            "steps",
+            "max link util",
+            "link events",
+            "rerouted",
+            "analytic cycles",
+            "ratio",
+            "gate",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.scenario.name.clone(),
+                r.scenario.boards.to_string(),
+                fmt_count(r.des_cycles),
+                fmt_count(r.des_steps),
+                format!("{:.3}", r.max_link_utilisation),
+                fmt_count(r.link_events_total),
+                fmt_count(r.rerouted_sends),
+                fmt_count(r.analytic_cycles),
+                format!("{:.2}", r.ratio),
+                if r.gate_pass { "ok".into() } else { "FAIL".into() },
+            ]);
+        }
+        format!(
+            "## topology sweep ({}x{} panel, {} targets, {} states/thread)\n{}analytic-vs-DES gate band: {:.2}..{:.2} — {}\n",
+            self.opts.n_hap,
+            self.opts.n_mark,
+            self.opts.n_targets,
+            self.opts.states_per_thread,
+            t.render(),
+            GATE_BAND.0,
+            GATE_BAND.1,
+            if self.gate_passed() { "PASS" } else { "FAIL" },
+        )
+    }
+
+    /// The provenance-stamped `BENCH_topology.json` document.
+    pub fn to_json(&self) -> Json {
+        let mut run_config = Json::obj();
+        run_config
+            .set("n_hap", self.opts.n_hap)
+            .set("n_mark", self.opts.n_mark)
+            .set("n_targets", self.opts.n_targets)
+            .set("states_per_thread", self.opts.states_per_thread)
+            .set("seed", self.opts.seed)
+            .set("gate_band", Json::Arr(vec![Json::from(GATE_BAND.0), Json::from(GATE_BAND.1)]));
+        let mut doc = Json::obj();
+        provenance::stamp(&mut doc, TOPOLOGY_SCHEMA, run_config);
+        let mut rows = Json::Arr(Vec::new());
+        for r in &self.rows {
+            let mut o = Json::obj();
+            o.set("scenario", r.scenario.to_json())
+                .set("des_cycles", r.des_cycles)
+                .set("des_steps", r.des_steps)
+                .set("max_link_utilisation", r.max_link_utilisation)
+                .set("link_events_total", r.link_events_total)
+                .set("inter_board_copies", r.inter_board_copies)
+                .set("rerouted_sends", r.rerouted_sends)
+                .set("analytic_cycles", r.analytic_cycles)
+                .set("analytic_vs_des_ratio", r.ratio)
+                .set("gate_pass", r.gate_pass);
+            rows.push(o);
+        }
+        doc.set("rows", rows).set("gate_passed", self.gate_passed());
+        doc
+    }
+}
+
+/// Run the sweep: every scenario gets the same workload and seed, so rows
+/// differ only by topology.  Errors (an invalid spec, an engine failure)
+/// abort the sweep; a *gate* failure does not — it is recorded per row and
+/// surfaced by [`TopologyReport::gate_passed`], so the caller can archive
+/// the artifact before failing.
+pub fn run(opts: TopologyOpts) -> Result<TopologyReport, String> {
+    let pcfg = PanelConfig {
+        n_hap: opts.n_hap,
+        n_mark: opts.n_mark,
+        maf: 0.2,
+        annot_ratio: 0.2,
+        seed: opts.seed,
+        ..PanelConfig::default()
+    };
+    let cost = CostModel::default();
+    let mut rows = Vec::with_capacity(opts.scenarios.len());
+    for spec in &opts.scenarios {
+        spec.validate()?;
+        let wl = Workload::synthetic(&pcfg, opts.n_targets);
+        let report = ImputeSession::new(wl)
+            .engine(EngineSpec::Event)
+            .scenario(spec.clone())
+            .states_per_thread(opts.states_per_thread)
+            .run()
+            .map_err(|e| format!("scenario {}: {e}", spec.name))?;
+        let m = report
+            .metrics
+            .ok_or_else(|| format!("scenario {}: event plane returned no metrics", spec.name))?;
+        let pred = predict_scenario(
+            &AWorkload {
+                n_hap: opts.n_hap,
+                n_mark: opts.n_mark,
+                n_targets: opts.n_targets,
+                states_per_thread: opts.states_per_thread,
+                // The session runs all targets as one batch.
+                lane_width: opts.n_targets,
+                kind: AppKind::Raw,
+            },
+            spec,
+            &cost,
+        );
+        let ratio = if m.sim_cycles == 0 {
+            f64::INFINITY
+        } else {
+            pred.total_cycles as f64 / m.sim_cycles as f64
+        };
+        rows.push(TopologyRow {
+            scenario: spec.clone(),
+            des_cycles: m.sim_cycles,
+            des_steps: m.steps,
+            max_link_utilisation: m.max_link_utilisation(),
+            link_events_total: m.link_events_total,
+            inter_board_copies: m.inter_board_copies,
+            rerouted_sends: m.rerouted_sends,
+            analytic_cycles: pred.total_cycles,
+            ratio,
+            gate_pass: (GATE_BAND.0..=GATE_BAND.1).contains(&ratio),
+        });
+    }
+    Ok(TopologyReport { opts, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_sweep_passes_the_gate_and_exercises_links() {
+        let report = run(TopologyOpts::smoke()).expect("sweep runs");
+        assert!(report.rows.len() >= 3, "need >= 3 topologies");
+        assert!(
+            report.gate_passed(),
+            "analytic-vs-DES gate failed:\n{}",
+            report.render()
+        );
+        assert!(
+            report.rows.iter().any(|r| r.scenario.is_degraded()),
+            "sweep must include a degraded topology"
+        );
+        let failed = report
+            .rows
+            .iter()
+            .find(|r| !r.scenario.failed.is_empty())
+            .expect("sweep must include a failed-link topology");
+        assert!(failed.rerouted_sends > 0, "failed link must force reroutes");
+        for r in &report.rows {
+            assert!(r.link_events_total > 0, "{}: no link traffic", r.scenario.name);
+            assert!(r.inter_board_copies > 0);
+            assert!(
+                (0.0..=1.0).contains(&r.max_link_utilisation),
+                "{}: utilisation {} out of [0,1]",
+                r.scenario.name,
+                r.max_link_utilisation
+            );
+        }
+        // Globally degraded links must slow the DES relative to baseline.
+        let cycles = |name: &str| {
+            report.rows.iter().find(|r| r.scenario.name == name).unwrap().des_cycles
+        };
+        assert!(cycles("slow-links") > cycles("baseline"));
+    }
+
+    #[test]
+    fn artifact_is_provenance_stamped_and_self_describing() {
+        let report = run(TopologyOpts::smoke()).expect("sweep runs");
+        let j = report.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(TOPOLOGY_SCHEMA));
+        assert!(j.get("git_commit").is_some());
+        assert!(j.get("run_config").and_then(|c| c.get("n_targets")).is_some());
+        let rows = j.get("rows").and_then(Json::as_arr).expect("rows");
+        assert_eq!(rows.len(), report.rows.len());
+        for r in rows {
+            assert!(r.get("max_link_utilisation").and_then(Json::as_f64).is_some());
+            assert!(r.get("analytic_vs_des_ratio").and_then(Json::as_f64).is_some());
+            // The scenario echo must itself round-trip through the parser.
+            let echo = r.get("scenario").expect("scenario echo");
+            assert!(ScenarioSpec::from_json(echo).is_ok());
+        }
+        assert_eq!(j.get("gate_passed"), Some(&Json::Bool(true)));
+    }
+}

@@ -13,6 +13,7 @@ use crate::genomics::vcf::{self, VcfOptions};
 use crate::model::baseline::{Baseline, Method};
 use crate::model::interpolation::impute_interp;
 use crate::obs::{TraceConfig, TraceFile};
+use crate::poets::ScenarioSpec;
 use crate::poets::topology::ClusterConfig;
 use crate::serve::bench::{BenchServeOpts, OpenLoopOpts};
 use crate::serve::{CoalescePolicy, PanelRegistry, ServeConfig, ShardedService, jsonl, net};
@@ -63,6 +64,9 @@ COMMANDS:
                deprecation note; the x86 interpolation pipeline remains
                the interp plane's oracle in validate)
                --boards B --spt N (soft-scheduling states/thread)
+               --scenario SPEC (run on a heterogeneous scenario cluster —
+               shape + link-plane overlay, see SCENARIO LAB below; the
+               spec's shape replaces --boards)
                --batch B (targets per engine batch; batches wider than
                the 8-lane wave split into lane groups pipelined through
                the SAME graph one superstep apart — default all at once.
@@ -105,9 +109,13 @@ COMMANDS:
   trace        observability tooling over poets-impute/trace/v1 files
                (written by impute --trace PATH):
                trace summarize <file>  per-tile utilisation table,
-                 queue-depth percentiles and a superstep activity
-                 histogram; malformed files fail with the offending
-                 line number
+                 queue-depth percentiles, a superstep activity histogram
+                 and the per-link NoC table (events, busy cycles,
+                 utilisation, queue high-water, top congested links);
+                 truncated rings report steps_dropped explicitly;
+                 malformed files fail with the offending line number
+                 [--json]  machine-readable summary instead
+                 (schema poets-impute/trace-summary/v1)
                trace export <file> --chrome [--out PATH]  convert to
                  Chrome trace_event JSON (loadable in Perfetto /
                  chrome://tracing; segments laid end-to-end on one
@@ -175,9 +183,11 @@ COMMANDS:
                --offered 25,100,400 (req/s) --shards 1,2 --workers N
                --requests N (arrivals per point) --queue-cap N --seed S
   bench        regenerate a paper experiment:
-               fig11|fig12|fig13|calibrate|sync-overhead
+               fig11|fig12|fig13|calibrate|sync-overhead|topology
                [--boards 1,2,..] [--spt 1,2,..] [--full-targets N]
                [--des-targets N] [--des-states N] [--skip-des] [--json]
+               (bench topology is the scenario-lab sweep — flags under
+               SCENARIO LAB below)
   ablate       design-choice ablations (mapping locality, hardware multicast)
                [--hap N] [--mark N] [--targets N] [--boards B] [--spt N]
   project      capacity + next-gen (Stratix-10) cluster projection (paper §6.3)
@@ -194,6 +204,42 @@ OBSERVABILITY (all opt-in; disabled paths cost one branch on an Option):
                response's serve block; {\"stats\":true} snapshots carry
                engine-cache hit/miss/eviction counters and log2-us
                queue-wait / service-time histograms per shard.
+
+SCENARIO LAB (heterogeneous clusters + NoC link telemetry):
+  scenarios    a ScenarioSpec is a cluster shape plus a link-plane overlay:
+                 name=slow,boards=8,tiles=2,cores=1,threads=4,bw=0.25,
+                 lat=2,link=3E:bw=0.5:lat=1.5,fail=0E,reroute=90
+               bw is a bandwidth scale (0.25 => 4x the serialize cycles),
+               lat a latency multiplier; link=<board><dir>:... overrides
+               one link, composed on the globals; fail=<board><dir> fails
+               a link — traffic reroutes on the deterministic BFS shortest
+               surviving path and every rerouted crossing pays the reroute
+               penalty (default 180 cycles).  Specs starting '{' parse as
+               the equivalent JSON form.  impute --scenario SPEC runs one
+               scenario end-to-end.
+  telemetry    sim_metrics always carries the link plane, tracing on or
+               off: the per-board intra-tile/inter-tile/inter-board copy
+               split (board_traffic), link_events_total, link_busy_total,
+               max_link_utilisation and rerouted_sends.  With --trace,
+               each superstep record adds per-link samples
+               ([link, events, busy, queue_hw]) captured in the
+               deterministic serial reduce — still bit-identical across
+               --threads — and 'trace export --chrome' gains a noc
+               counter track.
+  bench topology  workload x topology x fault-model sweep: each point
+               runs the same workload on the DES under one scenario and
+               cross-checks measured cycles against the analytic
+               link-bound predictor.  The cross-check is a hard gate
+               (ratio must stay within 0.25..4.0 at every point); the
+               provenance-stamped BENCH_topology.json is written BEFORE
+               the gate verdict so CI archives failing sweeps too.
+               --smoke (the 4-scenario CI set: baseline, slow links,
+               hotspot link, failed link; without it the full set adds a
+               16-board cluster and a compound degraded+failed scenario)
+               --scenario 'SPEC;SPEC;...' (replace the built-in set;
+               ';'-separated because ',' belongs to the spec grammar)
+               [--hap N] [--mark N] [--targets N] [--spt N] [--seed S]
+               [--out PATH] [--json]
 ";
 
 fn panel_cfg(args: &Args) -> Result<PanelConfig, String> {
@@ -221,8 +267,15 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
     let window_threads = args.get("window-threads", 1usize)?;
     let stream = args.has("stream");
     let trace_path = args.get_str("trace", "");
+    let scenario_arg = args.get_str("scenario", "");
     let as_json = args.has("json");
     args.reject_unknown()?;
+
+    let scenario = if scenario_arg.is_empty() {
+        None
+    } else {
+        Some(ScenarioSpec::parse(&scenario_arg)?)
+    };
 
     if stream && window == 0 {
         return Err("--stream needs a --window W plan to stream (W > 0)".into());
@@ -246,6 +299,10 @@ pub fn cmd_impute(args: &Args) -> Result<i32, String> {
             .boards(boards)
             .states_per_thread(spt)
             .threads(threads);
+        // After .boards(): the scenario's cluster shape wins when given.
+        if let Some(spec) = &scenario {
+            session = session.scenario(spec.clone());
+        }
         if batch > 0 {
             session = session.batch(batch);
         }
@@ -529,9 +586,14 @@ pub fn cmd_trace(args: &Args) -> Result<i32, String> {
         Some("summarize") => {
             let path =
                 path.ok_or_else(|| format!("trace summarize needs a trace file\n{USAGE}"))?;
+            let as_json = args.has("json");
             args.reject_unknown()?;
             let file = load_trace(&path)?;
-            println!("{}", crate::obs::trace::summarize(&file).trim_end());
+            if as_json {
+                println!("{}", crate::obs::trace::summarize_json(&file).pretty());
+            } else {
+                println!("{}", crate::obs::trace::summarize(&file).trim_end());
+            }
             Ok(0)
         }
         Some("export") => {
@@ -780,6 +842,11 @@ pub fn cmd_bench(args: &Args) -> Result<i32, String> {
         .get(1)
         .cloned()
         .ok_or_else(|| format!("bench needs a figure name\n{USAGE}"))?;
+    if which == "topology" {
+        // The scenario lab takes none of the figure flags; branch before
+        // FigOpts parsing so its flag set stays self-contained.
+        return cmd_bench_topology(args);
+    }
     let opts = FigOpts {
         des_states_per_board: args.get("des-states", 128usize)?,
         des_targets: args.get("des-targets", 12usize)?,
@@ -829,6 +896,56 @@ pub fn cmd_bench(args: &Args) -> Result<i32, String> {
                 opts.full_targets
             );
         }
+    }
+    Ok(0)
+}
+
+/// `bench topology` — the scenario lab's workload × topology × fault-model
+/// sweep.  The JSON artifact is written BEFORE the gate verdict is enforced,
+/// so a failing sweep still archives the offending numbers for CI.
+fn cmd_bench_topology(args: &Args) -> Result<i32, String> {
+    let mut opts = if args.has("smoke") {
+        bench::TopologyOpts::smoke()
+    } else {
+        bench::TopologyOpts::full()
+    };
+    opts.n_hap = args.get("hap", opts.n_hap)?;
+    opts.n_mark = args.get("mark", opts.n_mark)?;
+    opts.n_targets = args.get("targets", opts.n_targets)?;
+    opts.states_per_thread = args.get("spt", opts.states_per_thread)?;
+    opts.seed = args.get("seed", opts.seed)?;
+    let scenario_arg = args.get_str("scenario", "");
+    if !scenario_arg.is_empty() {
+        // A user-supplied topology set replaces the built-ins.  ';'
+        // separates specs — ',' belongs to the scenario grammar itself.
+        opts.scenarios = scenario_arg
+            .split(';')
+            .filter(|s| !s.trim().is_empty())
+            .map(ScenarioSpec::parse)
+            .collect::<Result<Vec<_>, _>>()?;
+        if opts.scenarios.is_empty() {
+            return Err("bench topology: --scenario parsed to an empty set".into());
+        }
+    }
+    let out = args.get_str("out", "BENCH_topology.json");
+    let as_json = args.has("json");
+    args.reject_unknown()?;
+
+    let report = bench::topology::run(opts)?;
+    let doc = report.to_json().pretty();
+    std::fs::write(&out, &doc).map_err(|e| format!("could not write {out}: {e}"))?;
+    if as_json {
+        println!("{doc}");
+    } else {
+        println!("{}", report.render());
+        println!("wrote {out}");
+    }
+    if !report.gate_passed() {
+        return Err(format!(
+            "bench topology: analytic-vs-DES gate failed (band {:.2}..{:.2}); rows in {out}",
+            bench::topology::GATE_BAND.0,
+            bench::topology::GATE_BAND.1
+        ));
     }
     Ok(0)
 }
@@ -1065,6 +1182,10 @@ mod tests {
             cmd_trace(&argv(&["trace", "summarize", trace.as_str()])).unwrap(),
             0
         );
+        assert_eq!(
+            cmd_trace(&argv(&["trace", "summarize", trace.as_str(), "--json"])).unwrap(),
+            0
+        );
         let out = std::env::temp_dir().join(format!("poets-cli-chrome-{pid}.json"));
         let out = out.to_str().unwrap().to_string();
         assert_eq!(
@@ -1128,6 +1249,46 @@ mod tests {
                 .contains("--chrome")
         );
         let _ = std::fs::remove_file(&bad);
+    }
+
+    #[test]
+    fn impute_runs_a_heterogeneous_scenario() {
+        // 8x21 panel at spt=4 needs 42 threads; the scenario's boards hold
+        // 32 each, so the run spans both and exercises the link plane.
+        let args = argv(&[
+            "impute", "--hap", "8", "--mark", "21", "--annot-ratio", "0.2", "--targets",
+            "2", "--engine", "event", "--spt", "4", "--scenario",
+            "name=lab,boards=2,tiles=4,cores=2,threads=4,bw=0.5", "--json",
+        ]);
+        assert_eq!(cmd_impute(&args).unwrap(), 0);
+        // A malformed spec is rejected before any engine runs.
+        let args = argv(&[
+            "impute", "--hap", "8", "--mark", "21", "--targets", "1", "--scenario",
+            "boards=2,frobnicate=1",
+        ]);
+        assert!(cmd_impute(&args).unwrap_err().contains("frobnicate"));
+    }
+
+    #[test]
+    fn bench_topology_writes_gated_artifact() {
+        let out = std::env::temp_dir().join(format!(
+            "poets-cli-topology-{}.json",
+            std::process::id()
+        ));
+        let out = out.to_str().unwrap().to_string();
+        let args = argv(&["bench", "topology", "--smoke", "--out", out.as_str()]);
+        assert_eq!(cmd_bench(&args).unwrap(), 0, "smoke sweep passes the gate");
+        let doc = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some(crate::bench::topology::TOPOLOGY_SCHEMA)
+        );
+        assert_eq!(doc.get("gate_passed"), Some(&Json::Bool(true)));
+        assert!(doc.get("rows").and_then(Json::as_arr).unwrap().len() >= 3);
+        let _ = std::fs::remove_file(&out);
+        // Bad scenario lists fail fast, before any sweep runs.
+        let args = argv(&["bench", "topology", "--scenario", "boards=2,fail=0E"]);
+        assert!(cmd_bench(&args).is_err(), "disconnecting spec is rejected");
     }
 
     #[test]

@@ -38,6 +38,7 @@
 
 use crate::imputation::msg::LANES;
 use crate::poets::costmodel::CostModel;
+use crate::poets::scenario::ScenarioSpec;
 use crate::poets::topology::ClusterConfig;
 
 /// Which application variant to predict.
@@ -70,14 +71,45 @@ pub struct Prediction {
     pub steps: u64,
     pub core_cycles_per_step: u64,
     pub mailbox_cycles_per_step: u64,
+    /// Busiest inter-board link occupancy on a boundary-crossing superstep
+    /// (0 when the workload fits on one board).  In the per-target regime
+    /// every steady-state superstep crosses, so this joins the per-step
+    /// bottleneck max; in the wave regime crossings are sparse (twice per
+    /// board boundary per wave) and are charged as an additive total
+    /// instead.
+    pub link_cycles_per_step: u64,
     pub barrier_cycles: u64,
     pub step_cycles: u64,
     pub total_cycles: u64,
     pub seconds: f64,
 }
 
-/// Predict the simulated wall-clock of one event-driven run.
+/// Predict the simulated wall-clock of one event-driven run on a
+/// homogeneous cluster (every link at the cost model's base rate).
 pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Prediction {
+    predict_with_link(w, cluster, cost, (cost.board_link_serialize, cost.board_link_latency))
+}
+
+/// Predict on a heterogeneous what-if cluster ([`ScenarioSpec`]): the
+/// scenario's shape knobs set the cluster and the *worst surviving link*
+/// sets the link-bound term — a pessimistic bound that tracks the DES
+/// because dimension-ordered routing funnels boundary traffic through the
+/// slowest column cut.  The spec must be valid (specs built via
+/// `ScenarioSpec::parse` already are).
+pub fn predict_scenario(w: &Workload, spec: &ScenarioSpec, cost: &CostModel) -> Prediction {
+    let cluster = spec.cluster();
+    let link = spec.worst_link_cost(&cluster, cost);
+    predict_with_link(w, &cluster, cost, link)
+}
+
+/// Shared core: `link = (serialize, latency)` of the slowest link that
+/// cross-board traffic can be forced through.
+fn predict_with_link(
+    w: &Workload,
+    cluster: &ClusterConfig,
+    cost: &CostModel,
+    link: (u64, u64),
+) -> Prediction {
     let h = w.n_hap as u64;
     // Graph columns and per-vertex per-target traffic by app kind.
     let (columns, fan_in, sends_per_vertex, flops_per_msg, section) = match w.kind {
@@ -109,7 +141,21 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
     let v_per_tile = n_vertices.div_ceil(tiles_used);
     let barrier = cost.barrier(threads_used as usize);
 
-    let (steps, core_cycles, mailbox_cycles) = if w.lane_width <= 1 {
+    // Link-bound term: boards the mapping actually occupies, and how one
+    // wavefront column's traffic groups onto destination tiles (column-major
+    // mapping → a board boundary separates two adjacent columns, and the
+    // boundary link serialises h senders × col_tiles multicast groups).
+    let boards_used = threads_used
+        .div_ceil(cluster.threads_per_board() as u64)
+        .max(1);
+    let col_threads = h.div_ceil(w.states_per_thread as u64).max(1);
+    let col_tiles = col_threads
+        .div_ceil(cluster.threads_per_tile() as u64)
+        .max(1);
+    let (link_ser, link_lat) = link;
+    let link_cycles = if boards_used > 1 { h * col_tiles * link_ser } else { 0 };
+
+    let (steps, core_cycles, mailbox_cycles, link_step, link_extra) = if w.lane_width <= 1 {
         // ----- per-target pipelined regime (the paper's design) ----------
         // Steady state: every column is mid-wave, so each vertex handles one
         // full fan-in per superstep (×2 while α and β waves overlap — they
@@ -122,7 +168,10 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
         // Pipeline: fill takes `columns` steps, then ~1 target completes per
         // step, plus a drain tail of `columns`.
         let steps = columns + w.n_targets as u64 + columns;
-        (steps, core_cycles, mailbox_cycles)
+        // Steady state keeps every column (hence every board boundary)
+        // streaming, so the worst link competes with core and mailbox for
+        // the per-step bottleneck.
+        (steps, core_cycles, mailbox_cycles, link_cycles, 0)
     } else {
         // ----- wave-batched regime (PR 5), pipelined groups (PR 6) -------
         let lanes = w.lane_width.min(w.n_targets.max(1)) as u64;
@@ -136,12 +185,9 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
         let stagger = 1u64; // the engine's RawAppConfig::default() stagger
         // Only the wavefront columns are active per superstep.  How many of
         // an active column's H vertices share one core / one tile under the
-        // column-major manual mapping:
-        let col_threads = h.div_ceil(w.states_per_thread as u64).max(1);
+        // column-major manual mapping (`col_threads`/`col_tiles` hoisted
+        // above for the link term):
         let col_cores = col_threads.div_ceil(threads_per_core).max(1);
-        let col_tiles = col_threads
-            .div_ceil(cluster.threads_per_tile() as u64)
-            .max(1);
         let v_active_per_core = h.div_ceil(col_cores);
         let v_active_per_tile = h.div_ceil(col_tiles);
         // Per active vertex per superstep: one group's wave = H senders ×
@@ -163,15 +209,25 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
         // supersteps (+ pairing/drain slack): the pipeline fill is additive,
         // not multiplicative.
         let steps = waves * ((groups - 1) * stagger + columns + 4);
-        (steps, core_cycles, mailbox_cycles)
+        // A wavefront crosses each board boundary twice per sweep (α
+        // forward, β backward) and pays the boundary serialisation plus
+        // one link latency there — sparse events, so an additive total
+        // rather than a per-step bottleneck term.
+        let wave_link_total = if boards_used > 1 {
+            waves * 2 * (boards_used - 1) * (link_cycles + link_lat)
+        } else {
+            0
+        };
+        (steps, core_cycles, mailbox_cycles, 0, wave_link_total)
     };
 
-    let step = core_cycles.max(mailbox_cycles) + barrier;
-    let total = steps * step;
+    let step = core_cycles.max(mailbox_cycles).max(link_step) + barrier;
+    let total = steps * step + link_extra;
     Prediction {
         steps,
         core_cycles_per_step: core_cycles,
         mailbox_cycles_per_step: mailbox_cycles,
+        link_cycles_per_step: link_cycles,
         barrier_cycles: barrier,
         step_cycles: step,
         total_cycles: total,
@@ -363,6 +419,63 @@ mod tests {
         // way), so the step cut carries straight through to total cycles.
         assert_eq!(pipelined.step_cycles, sequential.step_cycles);
         assert!(pipelined.total_cycles < sequential.total_cycles);
+    }
+
+    #[test]
+    fn scenario_baseline_matches_homogeneous_predict() {
+        let spec = ScenarioSpec::parse("name=base,boards=4").expect("spec");
+        let w = Workload {
+            n_hap: 22,
+            n_mark: 2234,
+            n_targets: 100,
+            states_per_thread: 1,
+            lane_width: 1,
+            kind: AppKind::Raw,
+        };
+        let cost = CostModel::default();
+        let a = predict(&w, &spec.cluster(), &cost);
+        let b = predict_scenario(&w, &spec, &cost);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.link_cycles_per_step, b.link_cycles_per_step);
+    }
+
+    #[test]
+    fn degraded_links_push_the_predictor_link_bound() {
+        // Small boards force cross-board traffic; 500x-slower links must
+        // both dominate the per-step bottleneck and raise the total.
+        let base = ScenarioSpec::parse("name=base,boards=4,tiles=2,cores=1,threads=2")
+            .expect("spec");
+        let slow = ScenarioSpec::parse("name=slow,boards=4,tiles=2,cores=1,threads=2,bw=0.002")
+            .expect("spec");
+        let w = Workload {
+            n_hap: 8,
+            n_mark: 24,
+            n_targets: 60,
+            states_per_thread: 4,
+            lane_width: 1,
+            kind: AppKind::Raw,
+        };
+        let cost = CostModel::default();
+        let p_base = predict_scenario(&w, &base, &cost);
+        let p_slow = predict_scenario(&w, &slow, &cost);
+        assert!(p_base.link_cycles_per_step > 0, "multi-board run must cross links");
+        // serialize: round(11 / 0.002) = 5500 = 500 x the base 11.
+        assert_eq!(p_slow.link_cycles_per_step, p_base.link_cycles_per_step * 500);
+        assert!(p_slow.total_cycles > p_base.total_cycles);
+        assert!(
+            p_slow.link_cycles_per_step
+                > p_slow.core_cycles_per_step.max(p_slow.mailbox_cycles_per_step),
+            "500x degradation must be link-bound: link {} core {} mailbox {}",
+            p_slow.link_cycles_per_step,
+            p_slow.core_cycles_per_step,
+            p_slow.mailbox_cycles_per_step
+        );
+        // Wave regime: the link charge is additive, so degrading links
+        // still raises the total.
+        let wv = Workload { lane_width: 60, ..w };
+        let w_base = predict_scenario(&wv, &base, &cost);
+        let w_slow = predict_scenario(&wv, &slow, &cost);
+        assert!(w_slow.total_cycles > w_base.total_cycles);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::obs::trace::RunTrace;
 use crate::poets::costmodel::CostModel;
 use crate::poets::desim::{SimConfig, Simulator};
 use crate::poets::metrics::SimMetrics;
+use crate::poets::scenario::ScenarioSpec;
 use crate::poets::topology::ClusterConfig;
 
 use super::obs::ObsMatrix;
@@ -37,6 +38,11 @@ pub struct RawAppConfig {
     pub cluster: ClusterConfig,
     pub cost: CostModel,
     pub sim: SimConfig,
+    /// Heterogeneous what-if cluster model (degraded/failed links, shape
+    /// overrides).  `None` = the homogeneous cluster in `cluster`.  Setters
+    /// that take a scenario keep `cluster` consistent with it; the engines
+    /// pass the spec through to `Simulator::with_scenario`.
+    pub scenario: Option<ScenarioSpec>,
 }
 
 impl Default for RawAppConfig {
@@ -48,6 +54,7 @@ impl Default for RawAppConfig {
             cluster: ClusterConfig::poets_48(),
             cost: CostModel::default(),
             sim: SimConfig::default(),
+            scenario: None,
         }
     }
 }

@@ -8,7 +8,9 @@
 //!   `pid` = segment, `tid` = tile, `ts`/`dur` = the superstep's
 //!   simulated-cycle span (the viewer displays them as microseconds);
 //! * per-superstep `"C"` (counter) events for busy tiles, delivered
-//!   copies/lanes, and the queue-depth high-water;
+//!   copies/lanes, and the queue-depth high-water, plus a second `"noc"`
+//!   counter track with inter-board link crossings, link-busy cycles and
+//!   the worst per-link queue high-water;
 //! * `"M"` (metadata) events naming each segment's process row.
 //!
 //! Segments each start at simulated time 0, so successive segments are
@@ -81,6 +83,18 @@ pub fn to_chrome(file: &TraceFile) -> Json {
             .set("lanes", rec.lanes);
         c.set("args", args);
         events.push(c);
+
+        let mut noc = event("C", "noc", rec.segment, 0);
+        noc.set("ts", ts);
+        let mut args = Json::obj();
+        args.set("link_events", rec.link_events)
+            .set("link_busy", rec.link_busy)
+            .set(
+                "link_queue_hw",
+                rec.links.iter().map(|l| u64::from(l.queue_hw)).max().unwrap_or(0),
+            );
+        noc.set("args", args);
+        events.push(noc);
     }
 
     let mut doc = Json::obj();
@@ -91,7 +105,7 @@ pub fn to_chrome(file: &TraceFile) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::obs::trace::{RunTrace, StepRecord, TileSample, TraceConfig};
+    use crate::obs::trace::{LinkSample, RunTrace, StepRecord, TileSample, TraceConfig};
 
     fn two_segment_trace() -> TraceFile {
         let cfg = TraceConfig { max_steps: 16, col_stride: Some(4) };
@@ -108,6 +122,8 @@ mod tests {
                 queue_hw: 2,
                 col_min: 0,
                 col_max: 1,
+                link_events: 2,
+                link_busy: 22,
                 tiles: vec![TileSample {
                     tile: (step % 2) as u32,
                     queue_hw: 2,
@@ -116,6 +132,7 @@ mod tests {
                     col_min: 0,
                     col_max: 1,
                 }],
+                links: vec![LinkSample { link: 0, events: 2, busy: 22, queue_hw: 1 }],
             });
         }
         let b = a.clone();
@@ -154,7 +171,15 @@ mod tests {
             }
         }
         assert_eq!(complete, 4, "one X event per (step, tile) sample");
-        assert_eq!(counters, 4, "one C event per step");
+        assert_eq!(counters, 8, "occupancy + noc counter events per step");
+        let noc: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("noc"))
+            .collect();
+        assert_eq!(noc.len(), 4, "one noc counter track sample per step");
+        assert!(noc
+            .iter()
+            .all(|e| e.get("args").unwrap().get("link_events").and_then(Json::as_i64) == Some(2)));
         // Round-trip through the parser: the export itself must be valid JSON.
         assert!(Json::parse(&doc.render()).is_ok());
     }

@@ -26,4 +26,7 @@ pub mod span;
 pub mod trace;
 
 pub use span::{bucket_bounds, latency_bucket, LATENCY_BUCKETS};
-pub use trace::{RunTrace, StepRecord, TileSample, TraceConfig, TraceFile, NO_COL, TRACE_SCHEMA};
+pub use trace::{
+    LinkSample, RunTrace, StepRecord, TileSample, TraceConfig, TraceFile, NO_COL, TRACE_SCHEMA,
+    TRACE_SUMMARY_SCHEMA,
+};

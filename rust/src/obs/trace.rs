@@ -19,17 +19,23 @@
 //!
 //! Every following line is one superstep (`kind:"step"`), with per-tile
 //! samples packed as `[tile, queue_hw, copies, lanes, col_min, col_max]`
-//! arrays (only tiles that delivered at least one event appear):
+//! arrays (only tiles that delivered at least one event appear) and
+//! per-inter-board-link samples packed as `[link, events, busy, queue_hw]`
+//! arrays (only links that carried traffic appear; link id = board·4 + dir,
+//! dir E/W/N/S = 0..3):
 //!
 //! ```json
 //! {"kind":"step","segment":0,"step":7,"t0":700,"t1":800,"busy_tiles":2,
 //!  "copies":12,"lanes":96,"queue_hw":5,"col_min":3,"col_max":4,
-//!  "tiles":[[0,5,8,64,3,4],[9,2,4,32,3,3]]}
+//!  "link_events":3,"link_busy":33,
+//!  "tiles":[[0,5,8,64,3,4],[9,2,4,32,3,3]],"links":[[0,3,33,2]]}
 //! ```
 //!
 //! Column spans use `null` for "unattributed" (the in-memory sentinel is
 //! [`NO_COL`]). The parser is strict: any malformed line fails the whole
-//! file with its line number — no silent skipping.
+//! file with its line number — no silent skipping.  When the ring bound
+//! evicted records, the header says so explicitly (`dropped_steps` count
+//! plus a `truncated` flag) — the no-silent-caps rule.
 
 use std::collections::VecDeque;
 
@@ -48,6 +54,12 @@ pub const NO_COL: u32 = u32::MAX;
 /// Maximum rows printed in the per-tile utilisation table before the
 /// summary switches to an explicit "(+N more)" note.
 const SUMMARY_TILE_ROWS: usize = 32;
+
+/// Maximum rows in the per-link utilisation table (same honesty rule).
+const SUMMARY_LINK_ROWS: usize = 16;
+
+/// Links named in the "top congested links" line.
+const TOP_CONGESTED_LINKS: usize = 4;
 
 /// What the simulator records when tracing is enabled
 /// (`SimConfig::trace = Some(TraceConfig { .. })`).
@@ -88,8 +100,35 @@ pub struct TileSample {
     pub col_max: u32,
 }
 
+/// One inter-board link's activity within one superstep. Only links that
+/// carried at least one event crossing are sampled. Captured by the NoC
+/// during the *serial* dispatch phase, so the samples are thread-count
+/// deterministic by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkSample {
+    /// Link id: `board * 4 + dir` (dir E/W/N/S = 0..3).
+    pub link: u32,
+    /// Event crossings serialised onto this link this superstep.
+    pub events: u32,
+    /// Cycles this link spent busy serialising those crossings.
+    pub busy: u64,
+    /// Queue high-water: deepest backlog (in whole serialisation slots)
+    /// any crossing found queued ahead of it this superstep.
+    pub queue_hw: u32,
+}
+
+impl LinkSample {
+    /// Human name, e.g. link 13 → `"3N"` (board 3, north).
+    pub fn name(link: u32) -> String {
+        // Direction order matches `poets::noc::Dir`: E, W, N, S.
+        let dir = ['E', 'W', 'N', 'S'][(link % 4) as usize];
+        format!("{}{}", link / 4, dir)
+    }
+}
+
 /// One superstep's merged record. `tiles` is in ascending tile order
-/// (shard order == tile order in the serial reduce).
+/// (shard order == tile order in the serial reduce); `links` is in
+/// ascending link order.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct StepRecord {
     /// Engine-run index for multi-batch / multi-window sessions: 0 within
@@ -108,7 +147,12 @@ pub struct StepRecord {
     pub queue_hw: u32,
     pub col_min: u32,
     pub col_max: u32,
+    /// Inter-board event crossings this superstep (sum over `links`).
+    pub link_events: u64,
+    /// Link-busy cycles this superstep (sum over `links`).
+    pub link_busy: u64,
     pub tiles: Vec<TileSample>,
+    pub links: Vec<LinkSample>,
 }
 
 /// A bounded, deterministic trace of one imputation run (possibly spanning
@@ -185,12 +229,13 @@ impl RunTrace {
         crate::util::provenance::stamp(&mut header, TRACE_SCHEMA, run_config);
         header
             .set("kind", "header")
-            .set("n_tiles", self.n_tiles)
+            .set("n_tiles", u64::from(self.n_tiles))
             .set("col_stride", self.col_stride.map_or(Json::Null, |s| Json::Int(i64::from(s))))
             .set("max_steps", self.max_steps)
-            .set("segments", self.segments)
+            .set("segments", u64::from(self.segments))
             .set("total_steps", self.total_steps)
             .set("dropped_steps", self.dropped_steps)
+            .set("truncated", self.dropped_steps > 0)
             .set("steps_recorded", self.steps.len());
         let mut out = header.render();
         out.push('\n');
@@ -222,6 +267,15 @@ fn step_json(rec: &StepRecord) -> Json {
             col_json(t.col_max),
         ]));
     }
+    let mut links = Json::Arr(Vec::new());
+    for l in &rec.links {
+        links.push(Json::Arr(vec![
+            Json::Int(i64::from(l.link)),
+            Json::Int(i64::from(l.events)),
+            Json::from(l.busy),
+            Json::Int(i64::from(l.queue_hw)),
+        ]));
+    }
     let mut j = Json::obj();
     j.set("kind", "step")
         .set("segment", rec.segment as u64)
@@ -234,7 +288,10 @@ fn step_json(rec: &StepRecord) -> Json {
         .set("queue_hw", rec.queue_hw as u64)
         .set("col_min", col_json(rec.col_min))
         .set("col_max", col_json(rec.col_max))
-        .set("tiles", tiles);
+        .set("link_events", rec.link_events)
+        .set("link_busy", rec.link_busy)
+        .set("tiles", tiles)
+        .set("links", links);
     j
 }
 
@@ -297,12 +354,39 @@ fn parse_tile(v: &Json, line: usize) -> Result<TileSample, String> {
     })
 }
 
+fn parse_link(v: &Json, line: usize) -> Result<LinkSample, String> {
+    let Json::Arr(xs) = v else {
+        return Err(format!("line {line}: link sample is not an array"));
+    };
+    if xs.len() != 4 {
+        return Err(format!("line {line}: link sample has {} fields, want 4", xs.len()));
+    }
+    let int = |i: usize| -> Result<u64, String> {
+        match xs[i].as_i64() {
+            Some(v) if v >= 0 => Ok(v as u64),
+            _ => Err(format!("line {line}: invalid link sample field {i}")),
+        }
+    };
+    Ok(LinkSample {
+        link: int(0)? as u32,
+        events: int(1)? as u32,
+        busy: int(2)?,
+        queue_hw: int(3)? as u32,
+    })
+}
+
 fn parse_step(j: &Json, line: usize) -> Result<StepRecord, String> {
     let tiles = match j.get("tiles") {
         Some(Json::Arr(xs)) => {
             xs.iter().map(|v| parse_tile(v, line)).collect::<Result<Vec<_>, _>>()?
         }
         _ => return Err(format!("line {line}: missing \"tiles\" array")),
+    };
+    let links = match j.get("links") {
+        Some(Json::Arr(xs)) => {
+            xs.iter().map(|v| parse_link(v, line)).collect::<Result<Vec<_>, _>>()?
+        }
+        _ => return Err(format!("line {line}: missing \"links\" array")),
     };
     Ok(StepRecord {
         segment: field_u64(j, "segment", line)? as u32,
@@ -315,7 +399,10 @@ fn parse_step(j: &Json, line: usize) -> Result<StepRecord, String> {
         queue_hw: field_u64(j, "queue_hw", line)? as u32,
         col_min: field_col(j, "col_min", line)?,
         col_max: field_col(j, "col_max", line)?,
+        link_events: field_u64(j, "link_events", line)?,
+        link_busy: field_u64(j, "link_busy", line)?,
         tiles,
+        links,
     })
 }
 
@@ -403,10 +490,52 @@ impl TraceFile {
     }
 }
 
+/// Aggregated per-link activity over the recorded window of a trace.
+struct LinkAgg {
+    link: u32,
+    /// Supersteps in which this link carried at least one crossing.
+    busy_steps: u64,
+    events: u64,
+    busy: u64,
+    queue_hw: u32,
+}
+
+/// Fold every step's link samples into per-link totals, plus the recorded
+/// simulated span (sum of step durations) for utilisation denominators.
+/// Returns links in descending (busy, events) order.
+fn aggregate_links(t: &RunTrace) -> (Vec<LinkAgg>, u64) {
+    let mut by_link: Vec<LinkAgg> = Vec::new();
+    let mut span = 0u64;
+    for rec in &t.steps {
+        span += rec.t_end.saturating_sub(rec.t_start);
+        for s in &rec.links {
+            let agg = match by_link.iter_mut().find(|a| a.link == s.link) {
+                Some(a) => a,
+                None => {
+                    by_link.push(LinkAgg {
+                        link: s.link,
+                        busy_steps: 0,
+                        events: 0,
+                        busy: 0,
+                        queue_hw: 0,
+                    });
+                    by_link.last_mut().expect("just pushed")
+                }
+            };
+            agg.busy_steps += 1;
+            agg.events += u64::from(s.events);
+            agg.busy += s.busy;
+            agg.queue_hw = agg.queue_hw.max(s.queue_hw);
+        }
+    }
+    by_link.sort_by(|a, b| (b.busy, b.events).cmp(&(a.busy, a.events)).then(a.link.cmp(&b.link)));
+    (by_link, span)
+}
+
 /// Human-readable analysis of a parsed trace: per-tile utilisation,
-/// queue-depth percentiles, and the critical-path superstep histogram
-/// (per-superstep simulated duration on a log2 scale — the long buckets
-/// are the supersteps that set the makespan).
+/// per-link utilisation, queue-depth percentiles, and the critical-path
+/// superstep histogram (per-superstep simulated duration on a log2 scale —
+/// the long buckets are the supersteps that set the makespan).
 pub fn summarize(file: &TraceFile) -> String {
     let t = &file.trace;
     let recorded = t.steps.len();
@@ -415,6 +544,12 @@ pub fn summarize(file: &TraceFile) -> String {
         "trace: {} tiles, {} segment(s), {} superstep(s) observed ({} recorded, {} dropped by ring bound {})\n",
         t.n_tiles, t.segments, t.total_steps, recorded, t.dropped_steps, t.max_steps
     ));
+    if t.dropped_steps > 0 {
+        out.push_str(&format!(
+            "WARNING: steps_dropped = {} — the ring bound ({}) evicted the earliest supersteps; this analysis covers only the final {} recorded.\n",
+            t.dropped_steps, t.max_steps, recorded
+        ));
+    }
     if recorded == 0 {
         out.push_str("no step records to analyse\n");
         return out;
@@ -462,6 +597,42 @@ pub fn summarize(file: &TraceFile) -> String {
         out.push_str(&format!("({} tiles never delivered)\n", n - active.len()));
     }
 
+    // Per-link utilisation over the recorded window: busy cycles against
+    // the summed superstep durations.
+    let (links, span) = aggregate_links(t);
+    if links.is_empty() {
+        out.push_str("no inter-board link traffic recorded\n");
+    } else {
+        let util = |a: &LinkAgg| {
+            if span == 0 { 0.0 } else { 100.0 * a.busy as f64 / span as f64 }
+        };
+        let mut lt =
+            Table::new(&["link", "busy steps", "events", "busy cycles", "util %", "queue hw"]);
+        for a in links.iter().take(SUMMARY_LINK_ROWS) {
+            lt.row(vec![
+                LinkSample::name(a.link),
+                fmt_count(a.busy_steps),
+                fmt_count(a.events),
+                fmt_count(a.busy),
+                format!("{:.1}", util(a)),
+                a.queue_hw.to_string(),
+            ]);
+        }
+        out.push_str(&lt.render());
+        if links.len() > SUMMARY_LINK_ROWS {
+            out.push_str(&format!(
+                "(+{} more active links not shown)\n",
+                links.len() - SUMMARY_LINK_ROWS
+            ));
+        }
+        let top: Vec<String> = links
+            .iter()
+            .take(TOP_CONGESTED_LINKS)
+            .map(|a| format!("{} {:.1}%", LinkSample::name(a.link), util(a)))
+            .collect();
+        out.push_str(&format!("top congested links: {}\n", top.join("  ")));
+    }
+
     // Queue-depth percentiles over per-superstep high-water marks.
     let depths: Vec<f64> = t.steps.iter().map(|r| f64::from(r.queue_hw)).collect();
     out.push_str(&format!(
@@ -486,6 +657,81 @@ pub fn summarize(file: &TraceFile) -> String {
     out
 }
 
+/// Schema tag on the machine-readable summary (`trace summarize --json`).
+pub const TRACE_SUMMARY_SCHEMA: &str = "poets-impute/trace-summary/v1";
+
+/// Machine-readable counterpart of [`summarize`]: the same aggregates —
+/// truncation accounting, tile activity, per-link utilisation, queue
+/// percentiles — as a single JSON object for scripting and CI greps.
+pub fn summarize_json(file: &TraceFile) -> Json {
+    let t = &file.trace;
+    let recorded = t.steps.len();
+    let mut doc = Json::obj();
+    doc.set("schema", TRACE_SUMMARY_SCHEMA)
+        .set("n_tiles", t.n_tiles as u64)
+        .set("segments", t.segments as u64)
+        .set("total_steps", t.total_steps)
+        .set("steps_recorded", recorded)
+        .set("steps_dropped", t.dropped_steps)
+        .set("truncated", t.dropped_steps > 0)
+        .set("max_steps", t.max_steps);
+
+    let mut active_tiles = std::collections::BTreeSet::new();
+    let mut copies = 0u64;
+    let mut lanes = 0u64;
+    for rec in &t.steps {
+        copies += rec.copies;
+        lanes += rec.lanes;
+        for s in &rec.tiles {
+            active_tiles.insert(s.tile);
+        }
+    }
+    doc.set("active_tiles", active_tiles.len())
+        .set("copies", copies)
+        .set("lanes", lanes);
+
+    let depths: Vec<f64> = t.steps.iter().map(|r| f64::from(r.queue_hw)).collect();
+    let mut q = Json::obj();
+    q.set("p50", percentile(&depths, 50.0))
+        .set("p90", percentile(&depths, 90.0))
+        .set("p99", percentile(&depths, 99.0))
+        .set("max", depths.iter().cloned().fold(0.0f64, f64::max));
+    doc.set("queue_hw", q);
+
+    let (links, span) = aggregate_links(t);
+    let link_events: u64 = links.iter().map(|a| a.events).sum();
+    let link_busy: u64 = links.iter().map(|a| a.busy).sum();
+    let mut link_arr = Json::Arr(Vec::new());
+    for a in &links {
+        let mut l = Json::obj();
+        l.set("link", a.link as u64)
+            .set("name", LinkSample::name(a.link))
+            .set("busy_steps", a.busy_steps)
+            .set("events", a.events)
+            .set("busy_cycles", a.busy)
+            .set(
+                "utilisation",
+                if span == 0 { 0.0 } else { a.busy as f64 / span as f64 },
+            )
+            .set("queue_hw", a.queue_hw as u64);
+        link_arr.push(l);
+    }
+    doc.set("recorded_span_cycles", span)
+        .set("link_events", link_events)
+        .set("link_busy", link_busy)
+        .set("active_links", links.len())
+        .set(
+            "max_link_utilisation",
+            if span == 0 || links.is_empty() {
+                0.0
+            } else {
+                links.iter().map(|a| a.busy).max().unwrap_or(0) as f64 / span as f64
+            },
+        )
+        .set("links", link_arr);
+    doc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -505,9 +751,15 @@ mod tests {
                 queue_hw: 4,
                 col_min: 1,
                 col_max: 2,
+                link_events: 3,
+                link_busy: 33 + step,
                 tiles: vec![
                     TileSample { tile: 0, queue_hw: 4, copies: 6, lanes: 48, col_min: 1, col_max: 1 },
                     TileSample { tile: 2, queue_hw: 3, copies: 4 + step, lanes: 32 + step, col_min: 2, col_max: 2 },
+                ],
+                links: vec![
+                    LinkSample { link: 0, events: 2, busy: 22 + step, queue_hw: 1 },
+                    LinkSample { link: 5, events: 1, busy: 11, queue_hw: 0 },
                 ],
             });
         }
@@ -529,7 +781,10 @@ mod tests {
                 queue_hw: 0,
                 col_min: NO_COL,
                 col_max: NO_COL,
+                link_events: 0,
+                link_busy: 0,
                 tiles: Vec::new(),
+                links: Vec::new(),
             });
         }
         assert_eq!(t.steps.len(), 2);
@@ -596,5 +851,81 @@ mod tests {
         assert!(s.contains("superstep duration histogram"), "{s}");
         // Tile 1 never delivers.
         assert!(s.contains("1 tiles never delivered"), "{s}");
+        // Link 0E carries more busy cycles than 1W, so it leads the table
+        // and the congestion line.
+        assert!(s.contains("top congested links: 0E"), "{s}");
+        assert!(s.contains("1W"), "{s}");
+        // Nothing dropped → no truncation warning.
+        assert!(!s.contains("WARNING"), "{s}");
+    }
+
+    #[test]
+    fn link_names_follow_dir_order() {
+        assert_eq!(LinkSample::name(0), "0E");
+        assert_eq!(LinkSample::name(1), "0W");
+        assert_eq!(LinkSample::name(2), "0N");
+        assert_eq!(LinkSample::name(3), "0S");
+        assert_eq!(LinkSample::name(13), "3N");
+    }
+
+    #[test]
+    fn parser_requires_link_fields() {
+        let t = sample_trace();
+        let text = t.to_jsonl(Json::obj());
+
+        let no_links = text.replace(",\"links\":[[0,2,22,1],[5,1,11,0]]", "");
+        let err = TraceFile::parse(&no_links).unwrap_err();
+        assert!(err.contains("links"), "{err}");
+
+        let short_link = text.replace("[5,1,11,0]", "[5,1,11]");
+        let err = TraceFile::parse(&short_link).unwrap_err();
+        assert!(err.contains("4"), "{err}");
+
+        let no_events = text.replace("\"link_events\":3,", "");
+        let err = TraceFile::parse(&no_events).unwrap_err();
+        assert!(err.contains("link_events"), "{err}");
+    }
+
+    #[test]
+    fn truncated_trace_is_reported_honestly() {
+        let mut t = sample_trace();
+        t.max_steps = 2;
+        t.enforce_bound();
+        assert_eq!(t.dropped_steps, 1);
+        let text = t.to_jsonl(Json::obj());
+        let header = text.lines().next().expect("header");
+        assert!(header.contains("\"dropped_steps\":1"), "{header}");
+        assert!(header.contains("\"truncated\":true"), "{header}");
+        let file = TraceFile::parse(&text).expect("parse");
+        let s = summarize(&file);
+        assert!(s.contains("WARNING: steps_dropped = 1"), "{s}");
+        let j = summarize_json(&file);
+        assert_eq!(j.get("steps_dropped").and_then(Json::as_i64), Some(1));
+        assert_eq!(j.get("truncated"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn summarize_json_aggregates_links() {
+        let t = sample_trace();
+        let file = TraceFile::parse(&t.to_jsonl(Json::obj())).expect("parse");
+        let j = summarize_json(&file);
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some(TRACE_SUMMARY_SCHEMA)
+        );
+        assert_eq!(j.get("steps_recorded").and_then(Json::as_i64), Some(3));
+        assert_eq!(j.get("active_links").and_then(Json::as_i64), Some(2));
+        // 3 steps × (2 + 1) events per step.
+        assert_eq!(j.get("link_events").and_then(Json::as_i64), Some(9));
+        // Busy: (22+23+24) + 3×11 = 102; span = 3 × 100 cycles.
+        assert_eq!(j.get("link_busy").and_then(Json::as_i64), Some(102));
+        assert_eq!(j.get("recorded_span_cycles").and_then(Json::as_i64), Some(300));
+        let links = j.get("links").and_then(Json::as_arr).expect("links");
+        assert_eq!(links.len(), 2);
+        assert_eq!(links[0].get("name").and_then(Json::as_str), Some("0E"));
+        let util = j.get("max_link_utilisation").and_then(Json::as_f64).expect("util");
+        assert!((util - 69.0 / 300.0).abs() < 1e-9, "{util}");
+        // Document must be valid renderable JSON.
+        assert!(Json::parse(&j.pretty()).is_ok());
     }
 }

@@ -65,7 +65,11 @@
 //!   [`crate::obs::StepRecord`] per superstep inside the same deterministic
 //!   serial shard reduce, so the emitted trace — like every other counter —
 //!   is **bit-identical for every thread count and every wave/batch width**
-//!   (asserted by `tests/trace_determinism.rs`).  Disabled (the default),
+//!   (asserted by `tests/trace_determinism.rs`).  Tracing also samples the
+//!   inter-board link plane per superstep (events crossed, busy cycles,
+//!   queue high-water per link) — the NoC is mutated only by the *serial*
+//!   dispatch phase, so those samples are drained before the tile-parallel
+//!   phases and inherit determinism for free.  Disabled (the default),
 //!   the whole feature costs one branch on an `Option` per delivered event
 //!   batch: no allocation, no atomics on the hot path;
 //! * the only cross-tile values are the quiesce time (a `max`-reduce,
@@ -90,7 +94,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::graph::builder::Graph;
 use crate::graph::device::{Ctx, Device, PortId, VertexId};
 use crate::graph::mapping::Mapping;
-use crate::obs::trace::{RunTrace, StepRecord, TileSample, TraceConfig, NO_COL};
+use crate::obs::trace::{LinkSample, RunTrace, StepRecord, TileSample, TraceConfig, NO_COL};
 
 use super::costmodel::CostModel;
 use super::event::{GroupArrival, assert_event_fits};
@@ -98,6 +102,7 @@ use super::mailbox::Mailbox;
 use super::metrics::SimMetrics;
 use super::multicast::McastPlan;
 use super::noc::Noc;
+use super::scenario::ScenarioSpec;
 use super::termination;
 use super::topology::ClusterConfig;
 
@@ -423,6 +428,21 @@ impl<D: Device> Simulator<D> {
         cost: CostModel,
         cfg: SimConfig,
     ) -> Self {
+        Self::with_scenario(graph, mapping, cluster, cost, cfg, None)
+    }
+
+    /// Build a simulator whose NoC follows a heterogeneous [`ScenarioSpec`]
+    /// (per-link costs, failed-link reroutes).  `cluster` should be the
+    /// scenario's own cluster (`spec.cluster()`); panics on a spec that is
+    /// invalid for it — callers parse and validate specs up front.
+    pub fn with_scenario(
+        graph: Graph<D>,
+        mapping: Mapping,
+        cluster: ClusterConfig,
+        cost: CostModel,
+        cfg: SimConfig,
+        scenario: Option<&ScenarioSpec>,
+    ) -> Self {
         assert_event_fits::<D::Msg>(cost.event_bytes);
         assert_eq!(
             mapping.n_vertices(),
@@ -476,6 +496,19 @@ impl<D: Device> Simulator<D> {
             shard.core_vertex_count[local_core_of[v] as usize] += 1;
         }
 
+        let mut noc = match scenario {
+            Some(spec) => Noc::with_scenario(&cluster, &cost, spec)
+                .unwrap_or_else(|e| panic!("invalid scenario: {e}")),
+            None => Noc::new(&cluster),
+        };
+        if cfg.trace.is_some() {
+            noc.enable_step_tracking();
+        }
+        let metrics = SimMetrics {
+            board_traffic: vec![[0; 3]; cluster.n_boards],
+            ..SimMetrics::default()
+        };
+
         Simulator {
             graph,
             mapping,
@@ -483,7 +516,7 @@ impl<D: Device> Simulator<D> {
             cost,
             cfg,
             plan,
-            noc: Noc::new(&cluster),
+            noc,
             shards,
             board_of,
             tile_of,
@@ -491,7 +524,7 @@ impl<D: Device> Simulator<D> {
             slot_of,
             pending: Vec::new(),
             seq: 0,
-            metrics: SimMetrics::default(),
+            metrics,
             trace: cfg.trace.map(|tc| RunTrace::new(tc, n_tiles as u32)),
         }
     }
@@ -569,6 +602,15 @@ impl<D: Device> Simulator<D> {
             for (i, &(src, port)) in meta.iter().enumerate() {
                 self.dispatch(src, port, i as u32, step_start);
             }
+            // The NoC is mutated only by the serial dispatch above, so the
+            // per-superstep link samples are drained here — before the
+            // tile-parallel phases — and are thread-count invariant by
+            // construction.  Empty when tracing is off.
+            let link_samples = if self.trace.is_some() {
+                self.noc.take_step_samples()
+            } else {
+                Vec::new()
+            };
 
             // Phases 2+3: tile-parallel deliver, barrier, step handlers.
             let quiesce = {
@@ -627,6 +669,21 @@ impl<D: Device> Simulator<D> {
                 if col_min == NO_COL {
                     col_max = NO_COL;
                 }
+                let mut link_events = 0u64;
+                let mut link_busy = 0u64;
+                let links: Vec<LinkSample> = link_samples
+                    .iter()
+                    .map(|s| {
+                        link_events += s.events as u64;
+                        link_busy += s.busy;
+                        LinkSample {
+                            link: s.link,
+                            events: s.events,
+                            busy: s.busy,
+                            queue_hw: s.queue_hw,
+                        }
+                    })
+                    .collect();
                 trace.push(StepRecord {
                     segment: 0,
                     step,
@@ -638,7 +695,10 @@ impl<D: Device> Simulator<D> {
                     queue_hw,
                     col_min,
                     col_max,
+                    link_events,
+                    link_busy,
                     tiles,
+                    links,
                 });
             }
 
@@ -701,6 +761,13 @@ impl<D: Device> Simulator<D> {
         self.metrics.copies_delivered = copies;
         self.metrics.lanes_delivered = lanes;
         self.metrics.recv_handlers = recvs;
+        // Link-plane totals: surfaced in every manifest, tracing or not
+        // (these are cumulative NoC counters, free to read once per run).
+        self.metrics.n_links = self.noc.n_links() as u64;
+        self.metrics.link_events_total = self.noc.total_link_events();
+        self.metrics.link_busy_total = self.noc.total_link_busy();
+        self.metrics.max_link_busy = self.noc.max_link_busy();
+        self.metrics.rerouted_sends = self.noc.reroutes();
 
         self.restore_devices();
         &self.metrics
@@ -730,7 +797,15 @@ impl<D: Device> Simulator<D> {
         let mut crossed_board = false;
         for g in self.plan.group_range(list) {
             let (board, tile) = self.plan.group_loc(g);
+            let n_copies = self.plan.group_dests(g).len() as u64;
             let t_arr = if board == src_board {
+                if tile as usize == src_tile {
+                    self.metrics.intra_tile_copies += n_copies;
+                    self.metrics.board_traffic[src_board as usize][0] += n_copies;
+                } else {
+                    self.metrics.inter_tile_copies += n_copies;
+                    self.metrics.board_traffic[src_board as usize][1] += n_copies;
+                }
                 // Intra-board mesh: per-hop latency.
                 let hops = self.cluster.intra_board_hops(
                     src_tile_in_board,
@@ -739,10 +814,18 @@ impl<D: Device> Simulator<D> {
                 t_send + hops * self.cost.hop
             } else {
                 crossed_board = true;
-                // Inter-board: dimension-ordered over board links (serialised
-                // per event per link), then worst-case half-mesh to the tile.
-                let route = Noc::board_route(&self.cluster, src_board as usize, board as usize);
-                let t_board = self.noc.traverse(&route, t_send, &self.cost);
+                self.metrics.inter_board_copies += n_copies;
+                self.metrics.board_traffic[src_board as usize][2] += n_copies;
+                // Inter-board: failure-aware over board links (serialised per
+                // event per link; dimension-ordered unless a scenario failed
+                // links), then worst-case half-mesh to the tile.
+                let t_board = self.noc.traverse_between(
+                    &self.cluster,
+                    src_board as usize,
+                    board as usize,
+                    t_send,
+                    &self.cost,
+                );
                 let ingress_hops = (self.cluster.tile_mesh.0 + self.cluster.tile_mesh.1) as u64 / 2;
                 t_board + ingress_hops * self.cost.hop
             };
@@ -1067,6 +1150,112 @@ mod tests {
         sim.run();
         assert_eq!(sim.metrics.inter_board_sends, 1);
         assert_eq!(sim.graph.devices[1].n_recv, 1);
+    }
+
+    #[test]
+    fn traffic_split_conserves_copies() {
+        // Every delivered copy is classified exactly once, and the per-board
+        // split sums to the same totals — tracing off, so this also covers
+        // the "link totals surface without tracing" satellite.
+        let mut sim = ring_sim(12, 17);
+        sim.run();
+        let m = &sim.metrics;
+        assert_eq!(
+            m.intra_tile_copies + m.inter_tile_copies + m.inter_board_copies,
+            m.copies_delivered
+        );
+        let board_sum: u64 = m.board_traffic.iter().map(|t| t[0] + t[1] + t[2]).sum();
+        assert_eq!(board_sum, m.copies_delivered);
+        assert_eq!(m.board_traffic.len(), ClusterConfig::tiny().n_boards);
+        // Round-robin over a 2-board tiny cluster crosses the board link.
+        assert!(m.inter_board_copies > 0);
+        assert_eq!(m.n_links, (ClusterConfig::tiny().n_boards * 4) as u64);
+        assert!(m.link_events_total > 0);
+        assert!(m.max_link_busy > 0);
+        assert!(m.link_busy_total >= m.max_link_busy);
+        assert_eq!(m.rerouted_sends, 0);
+    }
+
+    #[test]
+    fn degraded_scenario_slows_the_run() {
+        let run = |scenario: Option<&ScenarioSpec>| {
+            let mut b = GraphBuilder::new();
+            for i in 0..12 {
+                b.add_vertex(Ring {
+                    hops_seen: 0,
+                    rounds: 17,
+                    is_seed: i == 0,
+                    pending_send: None,
+                });
+            }
+            for v in 0..12u32 {
+                b.add_port_to(v, vec![(v + 1) % 12]);
+            }
+            let cluster = scenario.map(|s| s.cluster()).unwrap_or_else(ClusterConfig::tiny);
+            let mapping = Mapping::round_robin(12, &cluster);
+            let mut sim = Simulator::with_scenario(
+                b.build(),
+                mapping,
+                cluster,
+                CostModel::default(),
+                SimConfig::default(),
+                scenario,
+            );
+            sim.run();
+            sim.metrics.clone()
+        };
+        // Same shape as tiny(): 2 boards, 4 tiles, 2 cores, 4 threads.
+        let spec = ScenarioSpec::parse("boards=2,tiles=4,cores=2,threads=4,bw=0.125,lat=4")
+            .expect("valid scenario");
+        let nominal = run(None);
+        let degraded = run(Some(&spec));
+        assert!(
+            degraded.sim_cycles > nominal.sim_cycles,
+            "eighth-bandwidth links must cost cycles: {} vs {}",
+            degraded.sim_cycles,
+            nominal.sim_cycles
+        );
+        assert_eq!(degraded.copies_delivered, nominal.copies_delivered);
+        assert!(degraded.max_link_busy > nominal.max_link_busy);
+    }
+
+    #[test]
+    fn failed_link_reroutes_traffic() {
+        // 8 small boards on a 4x2 grid; fail 0->1 East so that pair detours.
+        let spec = ScenarioSpec::parse("boards=8,tiles=2,cores=1,threads=2,fail=0E")
+            .expect("valid scenario");
+        let cluster = spec.cluster();
+        let tpb = cluster.threads_per_board() as u32;
+        let mut b = GraphBuilder::new();
+        let a = b.add_vertex(Fan {
+            n_recv: 0,
+            is_root: true,
+        });
+        let z = b.add_vertex(Fan {
+            n_recv: 0,
+            is_root: false,
+        });
+        b.add_port_to(a, vec![z]);
+        let mapping = Mapping::from_assignment(
+            vec![
+                crate::poets::topology::ThreadId(0),
+                crate::poets::topology::ThreadId(tpb), // first thread of board 1
+            ],
+            &cluster,
+        );
+        let mut sim = Simulator::with_scenario(
+            b.build(),
+            mapping,
+            cluster,
+            CostModel::default(),
+            SimConfig::default(),
+            Some(&spec),
+        );
+        sim.run();
+        assert_eq!(sim.graph.devices[1].n_recv, 1, "delivery survives the failure");
+        assert_eq!(sim.metrics.rerouted_sends, 1);
+        // The detour is 3 links instead of 1.
+        assert_eq!(sim.metrics.link_events_total, 3);
     }
 
     #[test]

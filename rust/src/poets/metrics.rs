@@ -38,6 +38,25 @@ pub struct SimMetrics {
     /// Peak number of pipelined lane groups in flight through one engine
     /// run (1 when the batch fits a single group).
     pub max_groups_in_flight: u64,
+    /// Copies delivered within the sender's own tile (mailbox-local).
+    pub intra_tile_copies: u64,
+    /// Copies delivered to another tile on the sender's board.
+    pub inter_tile_copies: u64,
+    /// Copies delivered across at least one inter-board link.
+    pub inter_board_copies: u64,
+    /// Directional inter-board links modelled (4 per board).
+    pub n_links: u64,
+    /// Total events that crossed any inter-board link (one per link hop).
+    pub link_events_total: u64,
+    /// Serialisation cycles summed over all links.
+    pub link_busy_total: u64,
+    /// Busy cycles of the most-loaded inter-board link.
+    pub max_link_busy: u64,
+    /// Crossings that diverted around a failed link (scenario runs).
+    pub rerouted_sends: u64,
+    /// Per-board copy-traffic split, indexed by *source* board:
+    /// `[intra_tile, inter_tile, inter_board]`.
+    pub board_traffic: Vec<[u64; 3]>,
     /// Per-step durations in cycles (recorded when enabled).
     pub step_durations: Vec<u64>,
 }
@@ -99,7 +118,31 @@ impl SimMetrics {
         self.busy_tile_steps += other.busy_tile_steps;
         self.max_busy_tiles = self.max_busy_tiles.max(other.max_busy_tiles);
         self.max_groups_in_flight = self.max_groups_in_flight.max(other.max_groups_in_flight);
+        self.intra_tile_copies += other.intra_tile_copies;
+        self.inter_tile_copies += other.inter_tile_copies;
+        self.inter_board_copies += other.inter_board_copies;
+        self.n_links = self.n_links.max(other.n_links);
+        self.link_events_total += other.link_events_total;
+        self.link_busy_total += other.link_busy_total;
+        self.max_link_busy = self.max_link_busy.max(other.max_link_busy);
+        self.rerouted_sends += other.rerouted_sends;
+        if self.board_traffic.len() < other.board_traffic.len() {
+            self.board_traffic.resize(other.board_traffic.len(), [0; 3]);
+        }
+        for (mine, theirs) in self.board_traffic.iter_mut().zip(&other.board_traffic) {
+            for k in 0..3 {
+                mine[k] += theirs[k];
+            }
+        }
         self.step_durations.extend_from_slice(&other.step_durations);
+    }
+
+    /// Peak link utilisation: busiest link's busy cycles over the run length.
+    pub fn max_link_utilisation(&self) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        self.max_link_busy as f64 / self.sim_cycles as f64
     }
 
     pub fn to_json(&self) -> Json {
@@ -117,7 +160,25 @@ impl SimMetrics {
             .set("max_mailbox_busy", self.max_mailbox_busy)
             .set("busy_tile_steps", self.busy_tile_steps)
             .set("max_busy_tiles", self.max_busy_tiles)
-            .set("max_groups_in_flight", self.max_groups_in_flight);
+            .set("max_groups_in_flight", self.max_groups_in_flight)
+            .set("intra_tile_copies", self.intra_tile_copies)
+            .set("inter_tile_copies", self.inter_tile_copies)
+            .set("inter_board_copies", self.inter_board_copies)
+            .set("n_links", self.n_links)
+            .set("link_events_total", self.link_events_total)
+            .set("link_busy_total", self.link_busy_total)
+            .set("max_link_busy", self.max_link_busy)
+            .set("max_link_utilisation", self.max_link_utilisation())
+            .set("rerouted_sends", self.rerouted_sends)
+            .set(
+                "board_traffic",
+                Json::Arr(
+                    self.board_traffic
+                        .iter()
+                        .map(|t| Json::from(t.to_vec()))
+                        .collect(),
+                ),
+            );
         j
     }
 }
@@ -192,6 +253,70 @@ mod tests {
         assert_eq!(a.max_groups_in_flight, 2);
         assert_eq!(a.step_durations, vec![60, 40, 50]);
         assert_eq!(a.total_step_cycles(), 150);
+    }
+
+    #[test]
+    fn absorb_link_and_traffic_fields() {
+        let mut a = SimMetrics {
+            intra_tile_copies: 10,
+            inter_tile_copies: 4,
+            inter_board_copies: 2,
+            n_links: 8,
+            link_events_total: 6,
+            link_busy_total: 66,
+            max_link_busy: 44,
+            rerouted_sends: 1,
+            board_traffic: vec![[10, 4, 2]],
+            ..Default::default()
+        };
+        let b = SimMetrics {
+            intra_tile_copies: 1,
+            inter_board_copies: 3,
+            n_links: 16,
+            link_events_total: 9,
+            link_busy_total: 99,
+            max_link_busy: 33,
+            rerouted_sends: 2,
+            board_traffic: vec![[1, 0, 3], [5, 5, 5]],
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.intra_tile_copies, 11);
+        assert_eq!(a.inter_tile_copies, 4);
+        assert_eq!(a.inter_board_copies, 5);
+        assert_eq!(a.n_links, 16, "link count is a gauge, not a counter");
+        assert_eq!(a.link_events_total, 15);
+        assert_eq!(a.link_busy_total, 165);
+        assert_eq!(a.max_link_busy, 44);
+        assert_eq!(a.rerouted_sends, 3);
+        assert_eq!(a.board_traffic, vec![[11, 4, 5], [5, 5, 5]]);
+    }
+
+    #[test]
+    fn link_utilisation_bounded() {
+        let m = SimMetrics {
+            sim_cycles: 1000,
+            max_link_busy: 250,
+            ..Default::default()
+        };
+        assert!((m.max_link_utilisation() - 0.25).abs() < 1e-12);
+        assert_eq!(SimMetrics::default().max_link_utilisation(), 0.0);
+    }
+
+    #[test]
+    fn json_has_link_telemetry() {
+        let m = SimMetrics {
+            n_links: 8,
+            link_events_total: 12,
+            max_link_busy: 99,
+            board_traffic: vec![[7, 2, 3]],
+            ..Default::default()
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("n_links"), Some(&Json::Int(8)));
+        assert_eq!(j.get("link_events_total"), Some(&Json::Int(12)));
+        assert_eq!(j.get("max_link_busy"), Some(&Json::Int(99)));
+        assert!(j.get("board_traffic").and_then(Json::as_arr).is_some());
     }
 
     #[test]

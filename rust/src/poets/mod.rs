@@ -4,8 +4,8 @@
 //! NoC cluster: topology ([`topology`]), calibrated cost model
 //! ([`costmodel`]), inter-board NoC ([`noc`]), tile mailboxes ([`mailbox`]),
 //! hardware multicast ([`multicast`]), termination detection
-//! ([`termination`]), the discrete-event core ([`desim`]) and run metrics
-//! ([`metrics`]).
+//! ([`termination`]), the discrete-event core ([`desim`]), run metrics
+//! ([`metrics`]) and heterogeneous what-if cluster models ([`scenario`]).
 //!
 //! DESIGN.md §1 records why simulation preserves the paper's relative claims:
 //! every figure compares POETS wall-clock against x86 wall-clock, and the
@@ -21,10 +21,12 @@ pub mod mailbox;
 pub mod metrics;
 pub mod multicast;
 pub mod noc;
+pub mod scenario;
 pub mod termination;
 pub mod topology;
 
 pub use costmodel::CostModel;
 pub use desim::{SimConfig, Simulator};
 pub use metrics::SimMetrics;
+pub use scenario::ScenarioSpec;
 pub use topology::{ClusterConfig, ThreadId};

@@ -8,8 +8,23 @@
 //! Routing is dimension-ordered (X then Y) over the global board grid.  Each
 //! link is a serial resource: events crossing it queue behind one another at
 //! 64 B / 10 Gbps — this is where large fan-outs that span boards back up.
+//!
+//! Heterogeneous clusters (the scenario lab, `poets::scenario`) overlay this
+//! model with per-link effective costs: a [`ScenarioSpec`] can slow or speed
+//! individual links (bandwidth/latency multipliers) and fail links entirely.
+//! With failed links, routes come from a precomputed deterministic BFS table
+//! (shortest surviving path, fixed E/W/N/S neighbour order); any pair whose
+//! shortest path is longer than its Manhattan distance is *rerouted* and
+//! pays the scenario's dimension-ordered reroute penalty on top of the
+//! per-link costs.
+//!
+//! The NoC is mutated only inside the simulator's **serial** dispatch phase,
+//! so the opt-in per-superstep link telemetry (events crossed, busy cycles,
+//! queue high-water) is deterministic for any host thread count by
+//! construction.
 
 use super::costmodel::CostModel;
+use super::scenario::ScenarioSpec;
 use super::topology::ClusterConfig;
 
 /// Link direction out of a board.
@@ -21,27 +36,138 @@ pub enum Dir {
     South = 3,
 }
 
+impl Dir {
+    pub const ALL: [Dir; 4] = [Dir::East, Dir::West, Dir::North, Dir::South];
+
+    /// One-letter name used by the scenario grammar (`3E` = board 3, East).
+    pub fn letter(self) -> char {
+        match self {
+            Dir::East => 'E',
+            Dir::West => 'W',
+            Dir::North => 'N',
+            Dir::South => 'S',
+        }
+    }
+
+    pub fn from_letter(c: char) -> Option<Dir> {
+        match c.to_ascii_uppercase() {
+            'E' => Some(Dir::East),
+            'W' => Some(Dir::West),
+            'N' => Some(Dir::North),
+            'S' => Some(Dir::South),
+            _ => None,
+        }
+    }
+}
+
 /// One directional inter-board link, identified by (board, direction).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LinkId(pub u32);
 
-/// The NoC state: busy-until time per inter-board link.
+impl LinkId {
+    #[inline]
+    pub fn of(board: usize, dir: Dir) -> LinkId {
+        LinkId((board * 4 + dir as usize) as u32)
+    }
+
+    #[inline]
+    pub fn board(self) -> usize {
+        self.0 as usize / 4
+    }
+
+    #[inline]
+    pub fn dir(self) -> Dir {
+        Dir::ALL[self.0 as usize % 4]
+    }
+
+    /// `"3E"`-style name (board, direction letter).
+    pub fn name(self) -> String {
+        format!("{}{}", self.board(), self.dir().letter())
+    }
+}
+
+/// Per-superstep sample for one link, drained by the simulator's serial
+/// trace merge (`Noc::take_step_samples`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkStepSample {
+    pub link: u32,
+    /// Events that crossed the link this superstep.
+    pub events: u32,
+    /// Serialisation cycles the link spent busy this superstep.
+    pub busy: u64,
+    /// Deepest backlog seen this superstep: events already queued on the
+    /// link at the moment a new event arrived.
+    pub queue_hw: u32,
+}
+
+/// The NoC state: busy-until time per inter-board link, plus (for
+/// heterogeneous scenarios) per-link effective costs and failure-aware
+/// routes.
 #[derive(Clone, Debug)]
 pub struct Noc {
     link_free: Vec<u64>,
     /// Cumulative busy cycles per link (utilisation metric).
     link_busy: Vec<u64>,
     link_events: Vec<u64>,
+    /// Per-link effective (serialize, latency) cycles from a scenario;
+    /// empty ⇒ homogeneous (the `CostModel` constants apply everywhere).
+    link_cost: Vec<(u64, u64)>,
+    /// BFS route table (`from * n_boards + to`), present only when the
+    /// scenario failed at least one link; empty ⇒ dimension-ordered X-then-Y.
+    routes: Vec<Vec<LinkId>>,
+    /// Per board pair: does the surviving route exceed Manhattan distance?
+    rerouted: Vec<bool>,
+    /// Extra cycles charged to every rerouted crossing (misroute detection
+    /// plus the turn the dimension-ordered router has to un-take).
+    reroute_penalty: u64,
+    /// Crossings that took a longer-than-Manhattan path.
+    reroutes: u64,
+    /// Opt-in per-superstep telemetry (tracing only: one branch when off).
+    track: bool,
+    step_events: Vec<u32>,
+    step_busy: Vec<u64>,
+    step_queue_hw: Vec<u32>,
 }
 
 impl Noc {
+    /// Homogeneous NoC: every link gets the `CostModel` constants.
     pub fn new(cluster: &ClusterConfig) -> Noc {
         let n = cluster.n_boards * 4;
         Noc {
             link_free: vec![0; n],
             link_busy: vec![0; n],
             link_events: vec![0; n],
+            link_cost: Vec::new(),
+            routes: Vec::new(),
+            rerouted: Vec::new(),
+            reroute_penalty: 0,
+            reroutes: 0,
+            track: false,
+            step_events: Vec::new(),
+            step_busy: Vec::new(),
+            step_queue_hw: Vec::new(),
         }
+    }
+
+    /// NoC with a scenario overlay: per-link effective costs and, when links
+    /// are failed, a BFS route table.  Errors if the scenario is invalid for
+    /// this cluster (bad indices, or failures that disconnect the grid).
+    pub fn with_scenario(
+        cluster: &ClusterConfig,
+        cost: &CostModel,
+        scenario: &ScenarioSpec,
+    ) -> Result<Noc, String> {
+        scenario.validate_for(cluster)?;
+        let mut noc = Noc::new(cluster);
+        noc.link_cost = scenario.link_costs(cluster, cost);
+        noc.reroute_penalty = scenario.reroute_penalty;
+        if !scenario.failed.is_empty() {
+            let failed = scenario.failed_flags(cluster);
+            let (routes, rerouted) = routes_avoiding(cluster, &failed)?;
+            noc.routes = routes;
+            noc.rerouted = rerouted;
+        }
+        Ok(noc)
     }
 
     /// Dimension-ordered route between two boards: the sequence of outbound
@@ -71,13 +197,54 @@ impl Noc {
         let mut now = t;
         for l in route {
             let idx = l.0 as usize;
+            let (ser, lat) = if self.link_cost.is_empty() {
+                (cost.board_link_serialize, cost.board_link_latency)
+            } else {
+                self.link_cost[idx]
+            };
             let start = now.max(self.link_free[idx]);
-            self.link_free[idx] = start + cost.board_link_serialize;
-            self.link_busy[idx] += cost.board_link_serialize;
+            if self.track {
+                let backlog = self.link_free[idx].saturating_sub(now) / ser.max(1);
+                self.step_queue_hw[idx] = self.step_queue_hw[idx].max(backlog as u32);
+                self.step_events[idx] += 1;
+                self.step_busy[idx] += ser;
+            }
+            self.link_free[idx] = start + ser;
+            self.link_busy[idx] += ser;
             self.link_events[idx] += 1;
-            now = start + cost.board_link_serialize + cost.board_link_latency;
+            now = start + ser + lat;
         }
         now
+    }
+
+    /// Route and traverse in one step: uses the failure-aware route table
+    /// when present (charging the reroute penalty on diverted paths), the
+    /// dimension-ordered route otherwise.
+    pub fn traverse_between(
+        &mut self,
+        cluster: &ClusterConfig,
+        from: usize,
+        to: usize,
+        t: u64,
+        cost: &CostModel,
+    ) -> u64 {
+        if self.routes.is_empty() {
+            let route = Self::board_route(cluster, from, to);
+            return self.traverse(&route, t, cost);
+        }
+        let i = from * cluster.n_boards + to;
+        let route = self.routes[i].clone();
+        let mut now = self.traverse(&route, t, cost);
+        if self.rerouted[i] {
+            self.reroutes += 1;
+            now += self.reroute_penalty;
+        }
+        now
+    }
+
+    /// Number of directional inter-board links modelled.
+    pub fn n_links(&self) -> usize {
+        self.link_free.len()
     }
 
     /// Peak cumulative busy cycles over all links.
@@ -85,10 +252,121 @@ impl Noc {
         self.link_busy.iter().copied().max().unwrap_or(0)
     }
 
+    /// Total busy cycles summed over all links.
+    pub fn total_link_busy(&self) -> u64 {
+        self.link_busy.iter().sum()
+    }
+
     /// Total events that crossed any board link.
     pub fn total_link_events(&self) -> u64 {
         self.link_events.iter().sum()
     }
+
+    /// Crossings that had to divert around a failed link.
+    pub fn reroutes(&self) -> u64 {
+        self.reroutes
+    }
+
+    /// Turn on per-superstep telemetry (the simulator calls this once when
+    /// tracing is enabled; off by default so the hot path keeps one branch).
+    pub fn enable_step_tracking(&mut self) {
+        self.track = true;
+        let n = self.link_free.len();
+        self.step_events = vec![0; n];
+        self.step_busy = vec![0; n];
+        self.step_queue_hw = vec![0; n];
+    }
+
+    /// Drain this superstep's per-link samples (links with traffic only,
+    /// ascending link id) and reset the scratch for the next superstep.
+    pub fn take_step_samples(&mut self) -> Vec<LinkStepSample> {
+        if !self.track {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for idx in 0..self.step_events.len() {
+            if self.step_events[idx] > 0 {
+                out.push(LinkStepSample {
+                    link: idx as u32,
+                    events: self.step_events[idx],
+                    busy: self.step_busy[idx],
+                    queue_hw: self.step_queue_hw[idx],
+                });
+                self.step_events[idx] = 0;
+                self.step_busy[idx] = 0;
+                self.step_queue_hw[idx] = 0;
+            }
+        }
+        out
+    }
+}
+
+/// Shortest routes over the board grid avoiding `failed` links, for every
+/// ordered board pair: deterministic BFS with fixed E/W/N/S neighbour order.
+/// Returns the route table plus a per-pair "longer than Manhattan" flag,
+/// or an error naming the first disconnected pair.
+pub fn routes_avoiding(
+    cluster: &ClusterConfig,
+    failed: &[bool],
+) -> Result<(Vec<Vec<LinkId>>, Vec<bool>), String> {
+    let n = cluster.n_boards;
+    let (cols, rows) = cluster.board_grid;
+    let mut routes = vec![Vec::new(); n * n];
+    let mut rerouted = vec![false; n * n];
+    for from in 0..n {
+        // BFS with parent links.
+        let mut prev: Vec<Option<(usize, LinkId)>> = vec![None; n];
+        let mut seen = vec![false; n];
+        seen[from] = true;
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(from);
+        while let Some(b) = queue.pop_front() {
+            let (x, y) = cluster.board_xy(b);
+            for dir in Dir::ALL {
+                let next = match dir {
+                    Dir::East if x + 1 < cols => b + 1,
+                    Dir::West if x > 0 => b - 1,
+                    Dir::North if y > 0 => b - cols,
+                    Dir::South if y + 1 < rows => b + cols,
+                    _ => continue,
+                };
+                if next >= n || seen[next] {
+                    continue;
+                }
+                let link = LinkId::of(b, dir);
+                if failed.get(link.0 as usize).copied().unwrap_or(false) {
+                    continue;
+                }
+                seen[next] = true;
+                prev[next] = Some((b, link));
+                queue.push_back(next);
+            }
+        }
+        for to in 0..n {
+            if to == from {
+                continue;
+            }
+            if !seen[to] {
+                return Err(format!(
+                    "failed links disconnect board {from} from board {to}"
+                ));
+            }
+            let mut path = Vec::new();
+            let mut at = to;
+            while at != from {
+                let (p, link) = prev[at].expect("BFS parent chain reaches the source");
+                path.push(link);
+                at = p;
+            }
+            path.reverse();
+            let (fx, fy) = cluster.board_xy(from);
+            let (tx, ty) = cluster.board_xy(to);
+            let manhattan = fx.abs_diff(tx) + fy.abs_diff(ty);
+            rerouted[from * n + to] = path.len() > manhattan;
+            routes[from * n + to] = path;
+        }
+    }
+    Ok((routes, rerouted))
 }
 
 #[cfg(test)]
@@ -146,5 +424,87 @@ mod tests {
         let c = ClusterConfig::with_boards(2);
         let mut noc = Noc::new(&c);
         assert_eq!(noc.traverse(&[], 123, &CostModel::default()), 123);
+    }
+
+    #[test]
+    fn link_id_name_roundtrip() {
+        let l = LinkId::of(3, Dir::East);
+        assert_eq!(l.board(), 3);
+        assert_eq!(l.dir(), Dir::East);
+        assert_eq!(l.name(), "3E");
+        assert_eq!(Dir::from_letter('s'), Some(Dir::South));
+        assert_eq!(Dir::from_letter('x'), None);
+    }
+
+    #[test]
+    fn step_tracking_drains_and_resets() {
+        let c = ClusterConfig::with_boards(2);
+        let cost = CostModel::default();
+        let mut noc = Noc::new(&c);
+        noc.enable_step_tracking();
+        let route = Noc::board_route(&c, 0, 1);
+        noc.traverse(&route, 0, &cost);
+        noc.traverse(&route, 0, &cost);
+        let samples = noc.take_step_samples();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].link, LinkId::of(0, Dir::East).0);
+        assert_eq!(samples[0].events, 2);
+        assert_eq!(samples[0].busy, 2 * cost.board_link_serialize);
+        assert_eq!(samples[0].queue_hw, 1, "second event saw one queued ahead");
+        // Drained: the next superstep starts clean.
+        assert!(noc.take_step_samples().is_empty());
+        // Cumulative totals keep accumulating regardless.
+        assert_eq!(noc.total_link_events(), 2);
+    }
+
+    #[test]
+    fn untracked_noc_returns_no_samples() {
+        let c = ClusterConfig::with_boards(2);
+        let mut noc = Noc::new(&c);
+        let route = Noc::board_route(&c, 0, 1);
+        noc.traverse(&route, 0, &CostModel::default());
+        assert!(noc.take_step_samples().is_empty());
+    }
+
+    #[test]
+    fn bfs_routes_match_manhattan_without_failures() {
+        let c = ClusterConfig::with_boards(8); // grid 4x2
+        let failed = vec![false; c.n_boards * 4];
+        let (routes, rerouted) = routes_avoiding(&c, &failed).unwrap();
+        for from in 0..c.n_boards {
+            for to in 0..c.n_boards {
+                let (fx, fy) = c.board_xy(from);
+                let (tx, ty) = c.board_xy(to);
+                assert_eq!(
+                    routes[from * c.n_boards + to].len(),
+                    fx.abs_diff(tx) + fy.abs_diff(ty)
+                );
+                assert!(!rerouted[from * c.n_boards + to]);
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_detours_around_failed_link() {
+        let c = ClusterConfig::with_boards(8); // grid 4x2: 0..3 top, 4..7 bottom
+        let mut failed = vec![false; c.n_boards * 4];
+        failed[LinkId::of(0, Dir::East).0 as usize] = true;
+        let (routes, rerouted) = routes_avoiding(&c, &failed).unwrap();
+        let r = &routes[1]; // 0 -> 1
+        assert_eq!(r.len(), 3, "detour via the second row: S, E, N");
+        assert!(rerouted[1]);
+        assert!(r.iter().all(|l| !failed[l.0 as usize]));
+        // Unaffected pairs keep Manhattan-length paths.
+        assert_eq!(routes[2 * c.n_boards + 3].len(), 1);
+        assert!(!rerouted[2 * c.n_boards + 3]);
+    }
+
+    #[test]
+    fn bfs_reports_disconnection() {
+        let c = ClusterConfig::with_boards(2); // grid 2x1: one row
+        let mut failed = vec![false; c.n_boards * 4];
+        failed[LinkId::of(0, Dir::East).0 as usize] = true;
+        let err = routes_avoiding(&c, &failed).unwrap_err();
+        assert!(err.contains("disconnect"), "{err}");
     }
 }

@@ -1,0 +1,475 @@
+//! Heterogeneous-cluster scenario models — the "what-if" layer over
+//! [`topology`](super::topology) and [`costmodel`](super::costmodel).
+//!
+//! A [`ScenarioSpec`] describes a cluster shape (board count, per-board
+//! tile/core/thread counts) plus a *link plane overlay*: global and per-link
+//! bandwidth/latency scaling, and failed links with dimension-ordered
+//! reroute penalties.  The DES consumes it via [`Noc::with_scenario`]
+//! (per-link effective cost tables + BFS reroutes), the analytic model via
+//! [`worst_link_cost`](ScenarioSpec::worst_link_cost), and `bench topology`
+//! sweeps a list of them.
+//!
+//! Board shape knobs are uniform across boards — the dense thread-numbering
+//! contract of [`ClusterConfig`] is load-bearing for the whole mapper and
+//! simulator — so *within* one cluster, heterogeneity is expressed on the
+//! link plane (where the paper's scaling story lives); *across* sweep
+//! points, every shape knob varies.
+//!
+//! Two input forms, one grammar per line of `bench topology --scenario`:
+//!
+//! * compact: `name=slow,boards=8,bw=0.25,lat=2,link=3E:bw=0.5,fail=0E`
+//! * JSON (detected by a leading `{`):
+//!   `{"name":"slow","boards":8,"bw_scale":0.25,"failed":["0E"]}`
+//!
+//! `bw` is a bandwidth *scale* (0.25 ⇒ quarter bandwidth ⇒ 4× the
+//! serialisation cycles); `lat` is a latency multiplier.  Links are named
+//! `<board><dir>` with dir ∈ E/W/N/S, e.g. `3E` = board 3's eastbound link.
+
+use crate::util::json::Json;
+
+use super::costmodel::CostModel;
+use super::noc::{routes_avoiding, Dir, LinkId};
+use super::topology::ClusterConfig;
+
+/// Cycles charged on top of per-link costs for every crossing that had to
+/// divert around a failed link (≈ two default link latencies: misroute
+/// detection plus the extra turn).
+pub const DEFAULT_REROUTE_PENALTY: u64 = 180;
+
+/// Per-link override, multiplied on top of the scenario's global scaling.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkMod {
+    pub board: usize,
+    pub dir: Dir,
+    /// Bandwidth scale (1.0 = nominal, 0.25 = quarter bandwidth).
+    pub bw_scale: f64,
+    /// Latency multiplier (1.0 = nominal).
+    pub lat_mult: f64,
+}
+
+/// A heterogeneous-cluster scenario: shape + link plane overlay.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub boards: usize,
+    /// Override `ClusterConfig::tiles_per_board` (mesh derived near-square).
+    pub tiles_per_board: Option<usize>,
+    pub cores_per_tile: Option<usize>,
+    pub threads_per_core: Option<usize>,
+    /// Global inter-board bandwidth scale (applies to every link).
+    pub bw_scale: f64,
+    /// Global inter-board latency multiplier.
+    pub lat_mult: f64,
+    /// Per-link overrides, composed onto the global scaling.
+    pub links: Vec<LinkMod>,
+    /// Failed links: traffic reroutes around them (BFS, deterministic).
+    pub failed: Vec<(usize, Dir)>,
+    /// Extra cycles per rerouted crossing.
+    pub reroute_penalty: u64,
+}
+
+impl ScenarioSpec {
+    /// Nominal homogeneous cluster of `boards` boards.
+    pub fn baseline(boards: usize) -> ScenarioSpec {
+        ScenarioSpec {
+            name: "baseline".into(),
+            boards,
+            tiles_per_board: None,
+            cores_per_tile: None,
+            threads_per_core: None,
+            bw_scale: 1.0,
+            lat_mult: 1.0,
+            links: Vec::new(),
+            failed: Vec::new(),
+            reroute_penalty: DEFAULT_REROUTE_PENALTY,
+        }
+    }
+
+    /// The `ClusterConfig` this scenario describes.
+    pub fn cluster(&self) -> ClusterConfig {
+        let mut c = ClusterConfig::with_boards(self.boards);
+        if let Some(t) = self.tiles_per_board {
+            c.tiles_per_board = t;
+            c.tile_mesh = ClusterConfig::mesh_for(t);
+        }
+        if let Some(n) = self.cores_per_tile {
+            c.cores_per_tile = n;
+        }
+        if let Some(n) = self.threads_per_core {
+            c.threads_per_core = n;
+        }
+        c
+    }
+
+    /// Validate against the cluster this spec itself describes.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1..=48).contains(&self.boards) {
+            return Err(format!(
+                "scenario {}: boards={} out of range 1..=48",
+                self.name, self.boards
+            ));
+        }
+        for (what, v) in [
+            ("tiles", self.tiles_per_board),
+            ("cores", self.cores_per_tile),
+            ("threads", self.threads_per_core),
+        ] {
+            if v == Some(0) {
+                return Err(format!("scenario {}: {what} must be >= 1", self.name));
+            }
+        }
+        self.validate_for(&self.cluster())
+    }
+
+    /// Validate link indices, multipliers and (with failures) connectivity.
+    pub fn validate_for(&self, cluster: &ClusterConfig) -> Result<(), String> {
+        for (what, v) in [("bw", self.bw_scale), ("lat", self.lat_mult)] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("scenario {}: {what} scale must be finite and > 0", self.name));
+            }
+        }
+        for l in &self.links {
+            if l.board >= cluster.n_boards {
+                return Err(format!(
+                    "scenario {}: link board {} out of range (boards={})",
+                    self.name, l.board, cluster.n_boards
+                ));
+            }
+            for (what, v) in [("bw", l.bw_scale), ("lat", l.lat_mult)] {
+                if !(v.is_finite() && v > 0.0) {
+                    return Err(format!(
+                        "scenario {}: link {} {what} scale must be finite and > 0",
+                        self.name,
+                        LinkId::of(l.board, l.dir).name()
+                    ));
+                }
+            }
+        }
+        for &(b, _) in &self.failed {
+            if b >= cluster.n_boards {
+                return Err(format!(
+                    "scenario {}: failed-link board {b} out of range (boards={})",
+                    self.name, cluster.n_boards
+                ));
+            }
+        }
+        if !self.failed.is_empty() {
+            // Connectivity: every board pair must keep a surviving route.
+            routes_avoiding(cluster, &self.failed_flags(cluster))?;
+        }
+        Ok(())
+    }
+
+    /// Per-link effective (serialize, latency) cycles for the DES.
+    pub fn link_costs(&self, cluster: &ClusterConfig, cost: &CostModel) -> Vec<(u64, u64)> {
+        let n = cluster.n_boards * 4;
+        let eff = |bw: f64, lat: f64| {
+            let ser = (cost.board_link_serialize as f64 / bw).round().max(1.0) as u64;
+            let lat = (cost.board_link_latency as f64 * lat).round().max(0.0) as u64;
+            (ser, lat)
+        };
+        let mut table = vec![eff(self.bw_scale, self.lat_mult); n];
+        for l in &self.links {
+            let idx = LinkId::of(l.board, l.dir).0 as usize;
+            if idx < n {
+                table[idx] = eff(self.bw_scale * l.bw_scale, self.lat_mult * l.lat_mult);
+            }
+        }
+        table
+    }
+
+    /// Failure flags indexed by link id.
+    pub fn failed_flags(&self, cluster: &ClusterConfig) -> Vec<bool> {
+        let mut flags = vec![false; cluster.n_boards * 4];
+        for &(b, d) in &self.failed {
+            let idx = LinkId::of(b, d).0 as usize;
+            if idx < flags.len() {
+                flags[idx] = true;
+            }
+        }
+        flags
+    }
+
+    /// Worst-case effective (serialize, latency) cycles over surviving links
+    /// — the analytic model's link-bound regime uses the slowest link.
+    pub fn worst_link_cost(&self, cluster: &ClusterConfig, cost: &CostModel) -> (u64, u64) {
+        let table = self.link_costs(cluster, cost);
+        let flags = self.failed_flags(cluster);
+        let mut worst = (0u64, 0u64);
+        for (idx, &(ser, lat)) in table.iter().enumerate() {
+            if flags[idx] {
+                continue;
+            }
+            worst.0 = worst.0.max(ser);
+            worst.1 = worst.1.max(lat);
+        }
+        worst
+    }
+
+    /// True when any link deviates from nominal (the analytic model and the
+    /// manifests only mention scenarios that actually change something).
+    pub fn is_degraded(&self) -> bool {
+        self.bw_scale != 1.0
+            || self.lat_mult != 1.0
+            || !self.links.is_empty()
+            || !self.failed.is_empty()
+    }
+
+    /// Parse either the compact grammar or (leading `{`) the JSON form.
+    pub fn parse(text: &str) -> Result<ScenarioSpec, String> {
+        let text = text.trim();
+        if text.is_empty() {
+            return Err("empty scenario spec".into());
+        }
+        if text.starts_with('{') {
+            return Self::from_json(&Json::parse(text).map_err(|e| format!("scenario JSON: {e}"))?);
+        }
+        let mut spec = ScenarioSpec::baseline(2);
+        spec.name = "custom".into();
+        for pair in text.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (key, val) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("scenario field {pair:?} is not key=value"))?;
+            match key.trim() {
+                "name" => spec.name = val.trim().to_string(),
+                "boards" => spec.boards = parse_num(val, "boards")?,
+                "tiles" => spec.tiles_per_board = Some(parse_num(val, "tiles")?),
+                "cores" => spec.cores_per_tile = Some(parse_num(val, "cores")?),
+                "threads" => spec.threads_per_core = Some(parse_num(val, "threads")?),
+                "bw" => spec.bw_scale = parse_f64(val, "bw")?,
+                "lat" => spec.lat_mult = parse_f64(val, "lat")?,
+                "reroute" => spec.reroute_penalty = parse_num(val, "reroute")?,
+                "fail" => spec.failed.push(parse_link_name(val)?),
+                "link" => spec.links.push(parse_link_mod(val)?),
+                other => return Err(format!("unknown scenario field {other:?}")),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse the JSON form (the grammar's keys, spelled out).
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec, String> {
+        let mut spec = ScenarioSpec::baseline(2);
+        spec.name = "custom".into();
+        if let Some(s) = j.get("name").and_then(Json::as_str) {
+            spec.name = s.to_string();
+        }
+        if let Some(n) = j.get("boards").and_then(Json::as_usize) {
+            spec.boards = n;
+        }
+        spec.tiles_per_board = j.get("tiles_per_board").and_then(Json::as_usize);
+        spec.cores_per_tile = j.get("cores_per_tile").and_then(Json::as_usize);
+        spec.threads_per_core = j.get("threads_per_core").and_then(Json::as_usize);
+        if let Some(x) = j.get("bw_scale").and_then(Json::as_f64) {
+            spec.bw_scale = x;
+        }
+        if let Some(x) = j.get("lat_mult").and_then(Json::as_f64) {
+            spec.lat_mult = x;
+        }
+        if let Some(n) = j.get("reroute_penalty").and_then(Json::as_i64) {
+            spec.reroute_penalty = n.max(0) as u64;
+        }
+        if let Some(xs) = j.get("failed").and_then(Json::as_arr) {
+            for x in xs {
+                let s = x
+                    .as_str()
+                    .ok_or_else(|| "scenario JSON: failed[] entries are link names".to_string())?;
+                spec.failed.push(parse_link_name(s)?);
+            }
+        }
+        if let Some(xs) = j.get("links").and_then(Json::as_arr) {
+            for x in xs {
+                let name = x
+                    .get("link")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "scenario JSON: links[] entries need a \"link\" name".to_string())?;
+                let (board, dir) = parse_link_name(name)?;
+                spec.links.push(LinkMod {
+                    board,
+                    dir,
+                    bw_scale: x.get("bw_scale").and_then(Json::as_f64).unwrap_or(1.0),
+                    lat_mult: x.get("lat_mult").and_then(Json::as_f64).unwrap_or(1.0),
+                });
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Echo into bench artifacts / manifests.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str()).set("boards", self.boards);
+        if let Some(t) = self.tiles_per_board {
+            j.set("tiles_per_board", t);
+        }
+        if let Some(c) = self.cores_per_tile {
+            j.set("cores_per_tile", c);
+        }
+        if let Some(t) = self.threads_per_core {
+            j.set("threads_per_core", t);
+        }
+        j.set("bw_scale", self.bw_scale).set("lat_mult", self.lat_mult);
+        let mut links = Json::Arr(vec![]);
+        for l in &self.links {
+            let mut lj = Json::obj();
+            lj.set("link", LinkId::of(l.board, l.dir).name())
+                .set("bw_scale", l.bw_scale)
+                .set("lat_mult", l.lat_mult);
+            links.push(lj);
+        }
+        j.set("links", links);
+        j.set(
+            "failed",
+            Json::Arr(
+                self.failed
+                    .iter()
+                    .map(|&(b, d)| Json::from(LinkId::of(b, d).name()))
+                    .collect(),
+            ),
+        );
+        j.set("reroute_penalty", self.reroute_penalty);
+        j
+    }
+}
+
+fn parse_num(val: &str, what: &str) -> Result<usize, String> {
+    val.trim()
+        .parse::<usize>()
+        .map_err(|_| format!("scenario {what}={val:?} is not a non-negative integer"))
+}
+
+fn parse_f64(val: &str, what: &str) -> Result<f64, String> {
+    val.trim()
+        .parse::<f64>()
+        .map_err(|_| format!("scenario {what}={val:?} is not a number"))
+}
+
+/// `"3E"` → (board 3, East).
+fn parse_link_name(s: &str) -> Result<(usize, Dir), String> {
+    let s = s.trim();
+    let (num, letter) = s.split_at(s.len().saturating_sub(1));
+    let dir = letter
+        .chars()
+        .next()
+        .and_then(Dir::from_letter)
+        .ok_or_else(|| format!("link {s:?}: direction must be one of E/W/N/S"))?;
+    let board = num
+        .parse::<usize>()
+        .map_err(|_| format!("link {s:?}: expected <board><dir>, e.g. 3E"))?;
+    Ok((board, dir))
+}
+
+/// `3E:bw=0.5:lat=2` → per-link override.
+fn parse_link_mod(s: &str) -> Result<LinkMod, String> {
+    let mut parts = s.split(':');
+    let (board, dir) = parse_link_name(parts.next().unwrap_or(""))?;
+    let mut m = LinkMod {
+        board,
+        dir,
+        bw_scale: 1.0,
+        lat_mult: 1.0,
+    };
+    for p in parts {
+        let (key, val) = p
+            .split_once('=')
+            .ok_or_else(|| format!("link field {p:?} is not key=value"))?;
+        match key.trim() {
+            "bw" => m.bw_scale = parse_f64(val, "link bw")?,
+            "lat" => m.lat_mult = parse_f64(val, "link lat")?,
+            other => return Err(format!("unknown link field {other:?}")),
+        }
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_roundtrip() {
+        let s = ScenarioSpec::parse(
+            "name=degraded,boards=8,tiles=8,bw=0.5,lat=2,link=3E:bw=0.5:lat=1.5,fail=0E,reroute=90",
+        )
+        .unwrap();
+        assert_eq!(s.name, "degraded");
+        assert_eq!(s.boards, 8);
+        assert_eq!(s.tiles_per_board, Some(8));
+        assert_eq!(s.bw_scale, 0.5);
+        assert_eq!(s.lat_mult, 2.0);
+        assert_eq!(s.links.len(), 1);
+        assert_eq!(s.links[0].board, 3);
+        assert_eq!(s.failed, vec![(0, Dir::East)]);
+        assert_eq!(s.reroute_penalty, 90);
+        // JSON echo parses back to the same spec.
+        let back = ScenarioSpec::parse(&s.to_json().render()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn json_form_parses() {
+        let s = ScenarioSpec::parse(
+            r#"{"name":"slow","boards":8,"bw_scale":0.25,"links":[{"link":"1W","lat_mult":3}],"failed":["2E"]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.name, "slow");
+        assert_eq!(s.bw_scale, 0.25);
+        assert_eq!(s.links[0].dir, Dir::West);
+        assert_eq!(s.failed, vec![(2, Dir::East)]);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "boards=8,bw=0",                // zero bandwidth
+            "boards=8,frobnicate=1",        // unknown key
+            "boards=8,fail=9E",             // board out of range
+            "boards=2,fail=0E",             // disconnects the 2x1 grid
+            "boards=8,link=0X:bw=2",        // bad direction
+            "boards",                       // not key=value
+        ] {
+            assert!(ScenarioSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn cluster_shape_overrides_apply() {
+        let s = ScenarioSpec::parse("boards=4,tiles=8,cores=2,threads=4").unwrap();
+        let c = s.cluster();
+        assert_eq!(c.n_boards, 4);
+        assert_eq!(c.tiles_per_board, 8);
+        assert_eq!(c.tile_mesh, (2, 4));
+        assert_eq!(c.threads_per_board(), 8 * 2 * 4);
+    }
+
+    #[test]
+    fn link_costs_scale_and_compose() {
+        let cost = CostModel::default();
+        let s = ScenarioSpec::parse("boards=2,bw=0.5,lat=2,link=0E:bw=0.5:lat=2").unwrap();
+        let c = s.cluster();
+        let table = s.link_costs(&c, &cost);
+        let nominal = (cost.board_link_serialize, cost.board_link_latency);
+        // Global scaling: half bandwidth = double serialize; double latency.
+        let east1 = table[LinkId::of(1, Dir::East).0 as usize];
+        assert_eq!(east1.0, nominal.0 * 2);
+        assert_eq!(east1.1, nominal.1 * 2);
+        // Per-link override composes on top of the global scaling.
+        let east0 = table[LinkId::of(0, Dir::East).0 as usize];
+        assert_eq!(east0.0, nominal.0 * 4);
+        assert_eq!(east0.1, nominal.1 * 4);
+        assert_eq!(s.worst_link_cost(&c, &cost), east0);
+    }
+
+    #[test]
+    fn baseline_is_not_degraded() {
+        assert!(!ScenarioSpec::baseline(8).is_degraded());
+        assert!(ScenarioSpec::parse("boards=8,bw=0.5").unwrap().is_degraded());
+        assert!(ScenarioSpec::parse("boards=8,fail=0E").unwrap().is_degraded());
+    }
+}

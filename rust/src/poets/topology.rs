@@ -67,6 +67,18 @@ impl ClusterConfig {
         }
     }
 
+    /// Near-square tile mesh (cols, rows) for `tiles` tiles, cols ≤ rows —
+    /// how the scenario lab derives a mesh for overridden tile counts.
+    pub fn mesh_for(tiles: usize) -> (usize, usize) {
+        assert!(tiles >= 1, "a board needs at least one tile");
+        let cols = (1..=tiles)
+            .take_while(|c| c * c <= tiles)
+            .filter(|c| tiles % c == 0)
+            .last()
+            .unwrap_or(1);
+        (cols, tiles / cols)
+    }
+
     /// A deliberately tiny cluster for unit tests.
     pub fn tiny() -> ClusterConfig {
         ClusterConfig {
@@ -248,6 +260,16 @@ mod tests {
                 assert!(x < gx && y < gy);
             }
         }
+    }
+
+    #[test]
+    fn mesh_for_is_near_square() {
+        assert_eq!(ClusterConfig::mesh_for(16), (4, 4));
+        assert_eq!(ClusterConfig::mesh_for(8), (2, 4));
+        assert_eq!(ClusterConfig::mesh_for(4), (2, 2));
+        assert_eq!(ClusterConfig::mesh_for(2), (1, 2));
+        assert_eq!(ClusterConfig::mesh_for(1), (1, 1));
+        assert_eq!(ClusterConfig::mesh_for(7), (1, 7));
     }
 
     #[test]

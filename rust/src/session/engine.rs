@@ -311,7 +311,14 @@ impl Engine for EventEngine {
             .mapping
             .build(&graph, self.cfg.states_per_thread, &self.cfg.cluster);
         let sim_cfg = trace_cfg_for_panel(self.cfg.sim, panel);
-        let mut sim = Simulator::new(graph, mapping, self.cfg.cluster, self.cfg.cost, sim_cfg);
+        let mut sim = Simulator::with_scenario(
+            graph,
+            mapping,
+            self.cfg.cluster,
+            self.cfg.cost,
+            sim_cfg,
+            self.cfg.scenario.as_ref(),
+        );
         sim.run();
         let mut res = extract_results(&sim, panel, batch.len());
         res.trace = sim.take_trace();
@@ -378,7 +385,14 @@ impl Engine for InterpEngine {
             self.mapping
                 .build(&graph, self.cfg.states_per_thread.max(1), &self.cfg.cluster);
         let sim_cfg = trace_cfg_for_panel(self.cfg.sim, panel);
-        let mut sim = Simulator::new(graph, mapping, self.cfg.cluster, self.cfg.cost, sim_cfg);
+        let mut sim = Simulator::with_scenario(
+            graph,
+            mapping,
+            self.cfg.cluster,
+            self.cfg.cost,
+            sim_cfg,
+            self.cfg.scenario.as_ref(),
+        );
         sim.run();
         let mut res = extract_interp_results(&sim, panel, &anchors, batch.len());
         res.trace = sim.take_trace();

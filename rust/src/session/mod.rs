@@ -118,6 +118,16 @@ impl ImputeSession {
         self
     }
 
+    /// Heterogeneous what-if cluster model for the event planes
+    /// ([`crate::poets::ScenarioSpec`]): shape overrides plus degraded /
+    /// failed inter-board links.  Sets the cluster shape from the spec, so
+    /// it composes like [`ImputeSession::cluster`] — last caller wins.
+    pub fn scenario(mut self, spec: crate::poets::ScenarioSpec) -> Self {
+        self.app.cluster = spec.cluster();
+        self.app.scenario = Some(spec);
+        self
+    }
+
     /// Soft-scheduling factor: panel states per hardware thread (Fig 12).
     pub fn states_per_thread(mut self, n: usize) -> Self {
         self.app.states_per_thread = n.max(1);
@@ -353,6 +363,35 @@ mod tests {
             .run()
             .unwrap();
         assert!(plain.trace.is_none());
+    }
+
+    #[test]
+    fn scenario_session_reports_link_telemetry_without_tracing() {
+        use crate::util::json::Json;
+        let spec = crate::poets::ScenarioSpec::parse(
+            "name=lab,boards=2,tiles=4,cores=2,threads=4,bw=0.5",
+        )
+        .expect("spec");
+        let report = ImputeSession::new(wl(2))
+            .engine(EngineSpec::Event)
+            .scenario(spec)
+            .states_per_thread(4)
+            .run()
+            .unwrap();
+        assert_eq!(report.boards, 2, "scenario sets the cluster shape");
+        let m = report.metrics.as_ref().expect("event plane reports metrics");
+        assert!(m.inter_board_copies > 0, "42 threads must span both boards");
+        assert!(m.link_events_total > 0);
+        assert_eq!(
+            m.intra_tile_copies + m.inter_tile_copies + m.inter_board_copies,
+            m.copies_delivered
+        );
+        // Link totals land in the manifest even with tracing off.
+        let j = report.to_json();
+        let sm = j.get("sim_metrics").expect("sim_metrics block");
+        assert!(sm.get("link_events_total").and_then(Json::as_i64).unwrap() > 0);
+        assert!(sm.get("max_link_utilisation").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(sm.get("board_traffic").and_then(Json::as_arr).is_some());
     }
 
     #[test]

@@ -150,7 +150,8 @@ impl ImputeReport {
                 .set("segments", t.segments as u64)
                 .set("total_steps", t.total_steps)
                 .set("steps_recorded", t.steps.len())
-                .set("dropped_steps", t.dropped_steps);
+                .set("dropped_steps", t.dropped_steps)
+                .set("truncated", t.dropped_steps > 0);
             j.set("trace", trace);
         }
         j

@@ -1,0 +1,135 @@
+//! Integration: the scenario lab's analytic-vs-DES contract.
+//!
+//! The analytic model ([`predict_scenario`]) and the DES must keep
+//! modelling the same machine across the heterogeneous-cluster design
+//! space: for randomized [`ScenarioSpec`]s — global and per-link bandwidth
+//! degradation, latency inflation, failed links with BFS reroute — the
+//! predicted/measured cycle ratio must stay inside the same band that
+//! `bench topology` hard-gates on.  A spec that drifts outside the band
+//! means one of the two planes stopped modelling the shared cost model.
+//!
+//! The random shapes keep every board small (4–16 threads) so the fixed
+//! 48-thread workload always spans several boards and genuinely exercises
+//! the link plane, while total_threads stays >= the mapper's needs.
+
+use poets_impute::bench::topology::GATE_BAND;
+use poets_impute::imputation::analytic::{AppKind, Workload as AWorkload, predict_scenario};
+use poets_impute::poets::ScenarioSpec;
+use poets_impute::poets::costmodel::CostModel;
+use poets_impute::poets::noc::Dir;
+use poets_impute::poets::scenario::LinkMod;
+use poets_impute::session::{EngineSpec, ImputeSession, Workload};
+use poets_impute::util::rng::Rng;
+use poets_impute::workload::panelgen::PanelConfig;
+
+const N_HAP: usize = 8;
+const N_MARK: usize = 24;
+const N_TARGETS: usize = 4;
+const SPT: usize = 4;
+
+/// Run the DES and the analytic predictor on one scenario; return
+/// (analytic cycles / DES cycles, inter-board copies observed).
+fn ratio_for(spec: &ScenarioSpec) -> (f64, u64) {
+    let cfg = PanelConfig {
+        n_hap: N_HAP,
+        n_mark: N_MARK,
+        maf: 0.2,
+        annot_ratio: 0.2,
+        seed: 97,
+        ..PanelConfig::default()
+    };
+    let wl = Workload::synthetic(&cfg, N_TARGETS);
+    let report = ImputeSession::new(wl)
+        .engine(EngineSpec::Event)
+        .scenario(spec.clone())
+        .states_per_thread(SPT)
+        .run()
+        .expect("the event plane runs every valid scenario");
+    let m = report.metrics.expect("event plane reports DES metrics");
+    assert!(m.sim_cycles > 0, "{}: empty run", spec.name);
+    let pred = predict_scenario(
+        &AWorkload {
+            n_hap: N_HAP,
+            n_mark: N_MARK,
+            n_targets: N_TARGETS,
+            states_per_thread: SPT,
+            // The session runs all targets as one batch.
+            lane_width: N_TARGETS,
+            kind: AppKind::Raw,
+        },
+        spec,
+        &CostModel::default(),
+    );
+    (
+        pred.total_cycles as f64 / m.sim_cycles as f64,
+        m.inter_board_copies,
+    )
+}
+
+/// Draw one random heterogeneous spec on the 8-board 4x2 grid.
+fn random_spec(rng: &mut Rng, i: usize) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::baseline(8);
+    spec.name = format!("prop-{i}");
+    // 8 or 16 threads per board: 64..128 total >= the 48 threads needed.
+    spec.tiles_per_board = Some(if rng.chance(0.5) { 2 } else { 4 });
+    spec.cores_per_tile = Some(1);
+    spec.threads_per_core = Some(4);
+    spec.bw_scale = rng.uniform(0.25, 1.0);
+    spec.lat_mult = rng.uniform(1.0, 4.0);
+    if rng.chance(0.6) {
+        spec.links.push(LinkMod {
+            board: rng.range(0, 8),
+            dir: Dir::ALL[rng.range(0, 4)],
+            bw_scale: rng.uniform(0.5, 1.0),
+            lat_mult: rng.uniform(1.0, 2.0),
+        });
+    }
+    if rng.chance(0.5) {
+        spec.failed.push((rng.range(0, 8), Dir::ALL[rng.range(0, 4)]));
+        if spec.validate().is_err() {
+            // That draw disconnected the grid; keep the rest of the spec.
+            spec.failed.clear();
+        }
+    }
+    spec.validate().expect("generated spec must be valid");
+    spec
+}
+
+fn assert_in_band(spec: &ScenarioSpec) {
+    let (ratio, inter_board) = ratio_for(spec);
+    assert!(
+        inter_board > 0,
+        "scenario {}: workload never left board 0 — the property is vacuous",
+        spec.name
+    );
+    assert!(
+        (GATE_BAND.0..=GATE_BAND.1).contains(&ratio),
+        "scenario {} left the gate band {:?}: ratio {ratio:.3}\nspec: {spec:?}",
+        spec.name,
+        GATE_BAND
+    );
+}
+
+#[test]
+fn analytic_tracks_des_across_random_scenarios() {
+    let mut rng = Rng::new(0x5eed_1ab);
+    for i in 0..6 {
+        assert_in_band(&random_spec(&mut rng, i));
+    }
+}
+
+#[test]
+fn analytic_tracks_des_at_the_design_space_corners() {
+    // Deterministic edge cases the random draw may miss: a failed link
+    // (reroute penalties on every diverted crossing) and a compound
+    // worst-case (slow everywhere + one extra-slow hotspot + high latency).
+    for spec in [
+        ScenarioSpec::parse("name=failed,boards=8,tiles=2,cores=1,threads=4,fail=0E").unwrap(),
+        ScenarioSpec::parse(
+            "name=worst,boards=8,tiles=2,cores=1,threads=4,bw=0.25,lat=4,link=1E:bw=0.5,fail=2N",
+        )
+        .unwrap(),
+    ] {
+        assert_in_band(&spec);
+    }
+}

@@ -71,6 +71,45 @@ fn trace_is_bit_identical_across_threads_at_every_width() {
     }
 }
 
+/// The same contract holds for the per-link NoC samples, on a scenario
+/// cluster whose boards are small enough that the panel spans both of them
+/// (plain `.boards(2)` keeps this workload on board 0, recording no link
+/// traffic).  Link samples are drained from the NoC in the simulator's
+/// serial dispatch, so they ride the same deterministic reduce: byte
+/// identity across host threads — and they must actually be present.
+#[test]
+fn link_samples_are_bit_identical_across_threads() {
+    use poets_impute::poets::ScenarioSpec;
+    let wl = workload(17, 3);
+    let spec = ScenarioSpec::parse("name=lab,boards=2,tiles=4,cores=2,threads=4,bw=0.5")
+        .expect("valid scenario spec");
+    let run = |threads: usize| {
+        let report = ImputeSession::new(wl.clone())
+            .engine(EngineSpec::Event)
+            .scenario(spec.clone())
+            .states_per_thread(4)
+            .threads(threads)
+            .trace(TraceConfig::default())
+            .run()
+            .expect("event plane is always available");
+        let mut rc = Json::obj();
+        rc.set("suite", "scenario_link_determinism");
+        report.trace.expect("traced run records a trace").to_jsonl(rc)
+    };
+    let reference = run(THREADS[0]);
+    assert!(
+        reference.contains("\"links\":[["),
+        "spanning two boards must record per-link samples"
+    );
+    for &threads in &THREADS[1..] {
+        assert_eq!(
+            reference,
+            run(threads),
+            "link samples diverged at threads={threads}"
+        );
+    }
+}
+
 #[test]
 fn trace_round_trips_byte_identically() {
     let wl = workload(29, 3);
