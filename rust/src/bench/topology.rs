@@ -59,8 +59,8 @@ impl Default for TopologyOpts {
 
 impl TopologyOpts {
     /// The CI smoke shape: the default workload over the default scenario
-    /// set (baseline + degraded + hotspot + failed link — all four DES runs
-    /// finish in well under a second).
+    /// set (baseline + degraded + hotspot + failed link + the two fault-
+    /// model cells — all six DES runs finish in well under a second).
     pub fn smoke() -> TopologyOpts {
         TopologyOpts::default()
     }
@@ -91,13 +91,20 @@ fn scenario(name: &str, rest: &str) -> ScenarioSpec {
 }
 
 /// The default topology set: homogeneous baseline, globally slow
-/// inter-board links, one congested hotspot link, one failed link.
+/// inter-board links, one congested hotspot link, one failed link, plus the
+/// fault-model cells (a mid-run tile death under checkpoint/replay, and a
+/// lossy pair of links exercising NACK/retransmit + duplicate suppression).
 pub fn default_scenarios() -> Vec<ScenarioSpec> {
     vec![
         scenario("baseline", SHAPE),
         scenario("slow-links", &format!("{SHAPE},bw=0.25,lat=2")),
         scenario("hotspot-1E", &format!("{SHAPE},link=1E:bw=0.25")),
         scenario("failed-0E", &format!("{SHAPE},fail=0E")),
+        scenario("failed-tile", &format!("{SHAPE},failtile=2.1@6,ckpt=4")),
+        scenario(
+            "lossy-links",
+            &format!("{SHAPE},drop=0E:0.4@13,drop=1E:0.4@19,dup=2E:0.4@17"),
+        ),
     ]
 }
 
@@ -111,6 +118,13 @@ pub struct TopologyRow {
     pub link_events_total: u64,
     pub inter_board_copies: u64,
     pub rerouted_sends: u64,
+    /// Fault-model telemetry (zero on fault-free cells).
+    pub failed_tiles: u64,
+    pub replayed_supersteps: u64,
+    pub recovery_cycles: u64,
+    pub dropped_events: u64,
+    pub retransmits: u64,
+    pub dup_events: u64,
     pub analytic_cycles: u64,
     /// analytic / DES.
     pub ratio: f64,
@@ -138,6 +152,8 @@ impl TopologyReport {
             "max link util",
             "link events",
             "rerouted",
+            "recovery",
+            "drops",
             "analytic cycles",
             "ratio",
             "gate",
@@ -151,6 +167,8 @@ impl TopologyReport {
                 format!("{:.3}", r.max_link_utilisation),
                 fmt_count(r.link_events_total),
                 fmt_count(r.rerouted_sends),
+                fmt_count(r.recovery_cycles),
+                fmt_count(r.dropped_events),
                 fmt_count(r.analytic_cycles),
                 format!("{:.2}", r.ratio),
                 if r.gate_pass { "ok".into() } else { "FAIL".into() },
@@ -191,6 +209,12 @@ impl TopologyReport {
                 .set("link_events_total", r.link_events_total)
                 .set("inter_board_copies", r.inter_board_copies)
                 .set("rerouted_sends", r.rerouted_sends)
+                .set("failed_tiles", r.failed_tiles)
+                .set("replayed_supersteps", r.replayed_supersteps)
+                .set("recovery_cycles", r.recovery_cycles)
+                .set("dropped_events", r.dropped_events)
+                .set("retransmits", r.retransmits)
+                .set("dup_events", r.dup_events)
                 .set("analytic_cycles", r.analytic_cycles)
                 .set("analytic_vs_des_ratio", r.ratio)
                 .set("gate_pass", r.gate_pass);
@@ -255,6 +279,12 @@ pub fn run(opts: TopologyOpts) -> Result<TopologyReport, String> {
             link_events_total: m.link_events_total,
             inter_board_copies: m.inter_board_copies,
             rerouted_sends: m.rerouted_sends,
+            failed_tiles: m.failed_tiles,
+            replayed_supersteps: m.replayed_supersteps,
+            recovery_cycles: m.recovery_cycles,
+            dropped_events: m.dropped_events,
+            retransmits: m.retransmits,
+            dup_events: m.dup_events,
             analytic_cycles: pred.total_cycles,
             ratio,
             gate_pass: (GATE_BAND.0..=GATE_BAND.1).contains(&ratio),
@@ -301,6 +331,28 @@ mod tests {
             report.rows.iter().find(|r| r.scenario.name == name).unwrap().des_cycles
         };
         assert!(cycles("slow-links") > cycles("baseline"));
+        // Fault-model cells: the tile death must actually fire, replay from
+        // the checkpoint, and charge recovery — inside the same gate band.
+        let ft = report
+            .rows
+            .iter()
+            .find(|r| r.scenario.name == "failed-tile")
+            .expect("sweep must include a failed-tile cell");
+        assert_eq!(ft.failed_tiles, 1);
+        assert!(ft.replayed_supersteps > 0, "death at step 6 with ckpt=4 replays");
+        assert!(ft.recovery_cycles > 0);
+        assert!(ft.gate_pass, "failed-tile cell left the gate band: {}", ft.ratio);
+        assert!(ft.des_cycles > cycles("baseline"), "recovery is not free");
+        // Lossy cell: drops are NACKed and retransmitted, dups suppressed.
+        let lossy = report
+            .rows
+            .iter()
+            .find(|r| r.scenario.name == "lossy-links")
+            .expect("sweep must include a lossy-links cell");
+        assert!(lossy.dropped_events > 0);
+        assert_eq!(lossy.retransmits, lossy.dropped_events, "every drop retransmits");
+        assert!(lossy.dup_events > 0);
+        assert!(lossy.gate_pass, "lossy cell left the gate band: {}", lossy.ratio);
     }
 
     #[test]

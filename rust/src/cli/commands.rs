@@ -153,7 +153,10 @@ COMMANDS:
                big-endian u32 length + the JSON document, byte-identical
                to the stdin line)
                --connect ADDR (client bridge: stdin lines -> frames,
-               frames -> stdout lines; pipes work against a --tcp server)
+               frames -> stdout lines; pipes work against a --tcp server.
+               A connection lost mid-stream is re-established under capped
+               exponential backoff and ONLY the unanswered requests are
+               resubmitted — answered ones never re-execute)
                --shards N (panel-sharded worker pools: panel name hashes
                to a shard with its own queue, workers and engine cache)
                --quota-rate R --quota-burst B (per-tenant token buckets,
@@ -233,13 +236,48 @@ SCENARIO LAB (heterogeneous clusters + NoC link telemetry):
                (ratio must stay within 0.25..4.0 at every point); the
                provenance-stamped BENCH_topology.json is written BEFORE
                the gate verdict so CI archives failing sweeps too.
-               --smoke (the 4-scenario CI set: baseline, slow links,
-               hotspot link, failed link; without it the full set adds a
-               16-board cluster and a compound degraded+failed scenario)
+               --smoke (the 6-scenario CI set: baseline, slow links,
+               hotspot link, failed link, failed tile, lossy links;
+               without it the full set adds a 16-board cluster and a
+               compound degraded+failed scenario)
                --scenario 'SPEC;SPEC;...' (replace the built-in set;
                ';'-separated because ',' belongs to the spec grammar)
                [--hap N] [--mark N] [--targets N] [--spt N] [--seed S]
                [--out PATH] [--json]
+
+FAULT TOLERANCE (deterministic fault schedules + recovery):
+  schedules    a ScenarioSpec may also carry a fault schedule:
+                 failtile=<board>.<tile>@<step>  kill that tile's compute
+                 at superstep <step> (its threads stop; its vertices are
+                 deterministically remapped onto the survivors and
+                 replayed from the last checkpoint).  A board whose tiles
+                 ALL die is powered off, switch included; schedules that
+                 would strand a surviving board are rejected up front.
+                 drop=<board><dir>:<p>@<seed>  each inter-board crossing
+                 on that link is lost with probability p (deterministic
+                 seeded draw); losses are detected at the superstep
+                 barrier and NACK/retransmitted, each retransmit paying a
+                 fixed penalty.
+                 dup=<board><dir>:<p>@<seed>  crossings are duplicated
+                 with probability p; mailbox sequence numbers suppress
+                 the copies.
+                 ckpt=K  barrier-aligned device checkpoints every K
+                 supersteps (default 16) bound replay after a tile death.
+               Dosages under ANY schedule are bit-identical to the
+               fault-free run at every --threads and --batch width —
+               recovery shows up only in simulated time and telemetry.
+  telemetry    sim_metrics grows failed_tiles, replayed_supersteps,
+               recovery_cycles, checkpoint_bytes, dropped_events,
+               retransmits and dup_events; bench topology carries two
+               fault-model cells (failed-tile, lossy-links) under the
+               same analytic gate.
+  serving      a worker whose run dies is retried ONCE on a fresh engine
+               (serve-stats/v1 counts 'retried'); event runs that
+               recovered from tile deaths mark the service 'degraded'
+               (recovered_runs / recovery_cycles in serve-stats/v1) and
+               admission stretches its queue-wait estimates 2x until a
+               clean run clears the flag.  serve --connect survives a
+               dropped server connection (see --connect above).
 ";
 
 fn panel_cfg(args: &Args) -> Result<PanelConfig, String> {
@@ -720,51 +758,20 @@ pub fn cmd_serve(args: &Args) -> Result<i32, String> {
 
 /// `serve --connect ADDR`: bridge stdin/stdout JSONL onto the framed TCP
 /// transport, so shell pipelines can drive a remote server exactly like a
-/// local `serve` process.
+/// local `serve` process.  The bridge ([`net::bridge_jsonl`]) survives a
+/// dropped server connection: it reconnects under capped exponential
+/// backoff and resubmits only the requests whose responses never arrived.
 fn serve_connect(addr: &str) -> Result<i32, String> {
-    use std::io::{BufRead, BufReader, Write};
-    let conn = std::net::TcpStream::connect(addr)
-        .map_err(|e| format!("serve: cannot connect to {addr}: {e}"))?;
-    let _ = conn.set_nodelay(true);
-    let mut up = conn
-        .try_clone()
-        .map_err(|e| format!("serve: clone socket: {e}"))?;
-
-    // Uplink: stdin lines become frames; stdin EOF half-closes the socket
-    // (the server drains in-flight work and closes its side when done).
-    let uplink = std::thread::spawn(move || -> Result<(), String> {
-        let stdin = std::io::stdin();
-        for line in stdin.lock().lines() {
-            let line = line.map_err(|e| format!("serve: stdin: {e}"))?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            net::frame::write_frame(&mut up, line.as_bytes())
-                .map_err(|e| format!("serve: send: {e}"))?;
-        }
-        let _ = up.shutdown(std::net::Shutdown::Write);
-        Ok(())
-    });
-
-    // Downlink: frames become stdout lines until the server closes.
-    let mut reader = BufReader::new(conn);
+    let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
-    loop {
-        match net::frame::read_frame(&mut reader) {
-            Ok(net::frame::ReadFrame::Frame(payload)) => {
-                let text = String::from_utf8(payload)
-                    .map_err(|_| "serve: server sent a non-UTF-8 frame".to_string())?;
-                writeln!(out, "{text}").map_err(|e| format!("serve: stdout: {e}"))?;
-                out.flush().map_err(|e| format!("serve: stdout: {e}"))?;
-            }
-            Ok(net::frame::ReadFrame::Eof) => break,
-            Err(e) => return Err(format!("serve: recv: {e}")),
-        }
+    let summary = net::bridge_jsonl(std::io::BufReader::new(stdin), &mut out, addr)?;
+    if summary.reconnects > 0 {
+        eprintln!(
+            "serve: bridged {} response(s) from {addr} across {} reconnect(s)",
+            summary.responses, summary.reconnects
+        );
     }
-    uplink
-        .join()
-        .map_err(|_| "serve: uplink thread panicked".to_string())??;
     Ok(0)
 }
 

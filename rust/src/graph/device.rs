@@ -108,6 +108,20 @@ pub trait Device: Send {
     fn lanes(_msg: &Self::Msg) -> u32 {
         1
     }
+
+    /// Serialise the device's mutable state into `out` for a barrier-aligned
+    /// checkpoint, returning `true` if the device supports it.  The default
+    /// (`false`, nothing written) opts the device out of the fault plane's
+    /// remap-and-replay: a scheduled tile failure on a graph of such devices
+    /// is a hard error at the first checkpoint (`poets::fault`).
+    fn snapshot(&self, _out: &mut Vec<u8>) -> bool {
+        false
+    }
+
+    /// Restore state previously written by [`Device::snapshot`].  Only called
+    /// with bytes this device type produced; panicking on malformed input is
+    /// acceptable (it indicates a checkpoint/restore version mismatch).
+    fn restore(&mut self, _bytes: &[u8]) {}
 }
 
 #[cfg(test)]

@@ -99,7 +99,47 @@ pub fn predict(w: &Workload, cluster: &ClusterConfig, cost: &CostModel) -> Predi
 pub fn predict_scenario(w: &Workload, spec: &ScenarioSpec, cost: &CostModel) -> Prediction {
     let cluster = spec.cluster();
     let link = spec.worst_link_cost(&cluster, cost);
-    predict_with_link(w, &cluster, cost, link)
+    let mut p = predict_with_link(w, &cluster, cost, link);
+    let recovery = fault_overhead(spec, p.steps, p.step_cycles);
+    if recovery > 0 {
+        p.total_cycles += recovery;
+        p.seconds = p.total_cycles as f64 / cluster.clock_hz;
+    }
+    p
+}
+
+/// First-order recovery-cost regime for deterministic fault schedules
+/// (PR 10): the additive cycles a fault plan charges on top of the
+/// fault-free run, mirroring the DES accounting in `poets::fault`.
+///
+/// * A tile failure at superstep `s` replays `s mod K` supersteps from the
+///   last barrier-aligned checkpoint (checkpoint capture is free — modelled
+///   as background DMA — so only the replay and the restore scatter cost
+///   cycles).  State bytes are workload-dependent; the constant restore
+///   base is the analytic stand-in, which keeps the model a lower bound and
+///   well inside the topology gate band.
+/// * A lossy link drops each crossing with probability `p`; every drop is
+///   retransmitted at the next barrier (NACK round trip) and stalls the
+///   waiting wave column for about one superstep.  Expected drops ≈
+///   `p × steps` — for the small `p` the scenario lab sweeps, a sub-percent
+///   stretch.  Duplicates are suppressed at the mailbox and only pay a
+///   second traversal, which is below this model's resolution.
+fn fault_overhead(spec: &ScenarioSpec, steps: u64, step_cycles: u64) -> u64 {
+    use crate::poets::fault::{DEFAULT_CKPT_INTERVAL, NACK_PENALTY_CYCLES, RESTORE_BASE_CYCLES};
+    if !spec.has_faults() {
+        return 0;
+    }
+    let k = spec.ckpt_interval.unwrap_or(DEFAULT_CKPT_INTERVAL).max(1);
+    let mut extra = 0u64;
+    for f in &spec.fail_tiles {
+        let replayed = (f.step % k).min(steps);
+        extra += replayed * step_cycles + RESTORE_BASE_CYCLES;
+    }
+    for l in &spec.drop_links {
+        let expected = (l.p * steps as f64).ceil() as u64;
+        extra += expected * (step_cycles + NACK_PENALTY_CYCLES);
+    }
+    extra
 }
 
 /// Shared core: `link = (serialize, latency)` of the slowest link that
@@ -476,6 +516,50 @@ mod tests {
         let w_base = predict_scenario(&wv, &base, &cost);
         let w_slow = predict_scenario(&wv, &slow, &cost);
         assert!(w_slow.total_cycles > w_base.total_cycles);
+    }
+
+    #[test]
+    fn fault_schedules_charge_recovery_on_top_of_the_clean_run() {
+        let w = Workload {
+            n_hap: 8,
+            n_mark: 24,
+            n_targets: 60,
+            states_per_thread: 4,
+            lane_width: 1,
+            kind: AppKind::Raw,
+        };
+        let cost = CostModel::default();
+        let shape = "boards=2,tiles=2,cores=1,threads=2";
+        let clean = ScenarioSpec::parse(&format!("name=clean,{shape}")).expect("spec");
+        let faulty = ScenarioSpec::parse(&format!(
+            "name=faulty,{shape},failtile=0.1@40,ckpt=16,drop=0E:0.01@7"
+        ))
+        .expect("spec");
+        let p_clean = predict_scenario(&w, &clean, &cost);
+        let p_fault = predict_scenario(&w, &faulty, &cost);
+        assert_eq!(
+            p_clean.step_cycles, p_fault.step_cycles,
+            "faults are additive — the steady-state step is unchanged"
+        );
+        assert!(p_fault.total_cycles > p_clean.total_cycles);
+        // Replay is bounded by the checkpoint interval (40 % 16 = 8
+        // supersteps + the restore base) and the drop stretch is ~p of the
+        // run — together well inside the topology gate band.
+        assert!(
+            p_fault.total_cycles < p_clean.total_cycles * 4,
+            "recovery {} vs clean {}",
+            p_fault.total_cycles,
+            p_clean.total_cycles
+        );
+        // A tighter checkpoint cadence bounds replay to zero supersteps:
+        // cheaper than ckpt=16 but still above fault-free (restore + drops).
+        let tight = ScenarioSpec::parse(&format!(
+            "name=tight,{shape},failtile=0.1@40,ckpt=1,drop=0E:0.01@7"
+        ))
+        .expect("spec");
+        let p_tight = predict_scenario(&w, &tight, &cost);
+        assert!(p_tight.total_cycles < p_fault.total_cycles);
+        assert!(p_tight.total_cycles > p_clean.total_cycles);
     }
 
     #[test]

@@ -46,6 +46,7 @@
 use std::sync::Arc;
 
 use crate::graph::device::{Ctx, Device, PortId, VertexId};
+use crate::poets::fault::{SnapReader, SnapWriter};
 
 use super::msg::{InterpMsg, MAX_SECTION, for_each_chunk};
 use super::obs::ObsMatrix;
@@ -578,6 +579,83 @@ impl Device for InterpVertex {
     fn lanes(msg: &InterpMsg) -> u32 {
         msg.lanes()
     }
+
+    // Checkpoint support (fault plane): every mutable field, in declaration
+    // order.  Constants (alleles, transition weights, obs) are rebuilt by the
+    // graph constructor and are not serialised.
+    fn snapshot(&self, out: &mut Vec<u8>) -> bool {
+        let mut w = SnapWriter::new(out);
+        self.alpha_wave.snapshot(&mut w);
+        self.beta_wave.snapshot(&mut w);
+        w.u32(self.alpha.len() as u32);
+        for a in &self.alpha {
+            w.f32s(a);
+        }
+        w.bools(&self.alpha_done);
+        for b in &self.beta {
+            w.f32s(b);
+        }
+        w.bools(&self.beta_done);
+        w.bools(&self.posterior_done);
+        w.u32(self.injected_alpha as u32);
+        w.u32(self.injected_beta as u32);
+        for p in &self.own_p {
+            w.f32s(p);
+        }
+        w.bools(&self.own_p_done);
+        self.right_p_wave.snapshot(&mut w);
+        for p in &self.right_p {
+            w.f32s(p);
+        }
+        w.bools(&self.right_p_complete);
+        w.bools(&self.section_done);
+        self.post_wave.snapshot(&mut w);
+        w.bools(&self.post_allele1);
+        self.hit_wave.snapshot(&mut w);
+        w.bool(self.hits_complete);
+        w.f32s(&self.own_tot);
+        w.u32(self.own_tot_groups as u32);
+        w.bool(self.own_tot_done);
+        self.right_tot_wave.snapshot(&mut w);
+        w.bool(self.right_tot_complete);
+        w.bool(self.sections_finished);
+        w.f32s(&self.anchor_dosage);
+        w.f32s(&self.section_dosage);
+        true
+    }
+
+    fn restore(&mut self, bytes: &[u8]) {
+        let mut r = SnapReader::new(bytes);
+        self.alpha_wave = GroupWaves::restore(&mut r);
+        self.beta_wave = GroupWaves::restore(&mut r);
+        let n_g = r.u32() as usize;
+        self.alpha = (0..n_g).map(|_| r.f32s()).collect();
+        self.alpha_done = r.bools();
+        self.beta = (0..n_g).map(|_| r.f32s()).collect();
+        self.beta_done = r.bools();
+        self.posterior_done = r.bools();
+        self.injected_alpha = r.u32() as usize;
+        self.injected_beta = r.u32() as usize;
+        self.own_p = (0..n_g).map(|_| r.f32s()).collect();
+        self.own_p_done = r.bools();
+        self.right_p_wave = GroupWaves::restore(&mut r);
+        self.right_p = (0..n_g).map(|_| r.f32s()).collect();
+        self.right_p_complete = r.bools();
+        self.section_done = r.bools();
+        self.post_wave = GroupWaves::restore(&mut r);
+        self.post_allele1 = r.bools();
+        self.hit_wave = WaveBuf::restore(&mut r);
+        self.hits_complete = r.bool();
+        self.own_tot = r.f32s();
+        self.own_tot_groups = r.u32() as usize;
+        self.own_tot_done = r.bool();
+        self.right_tot_wave = WaveBuf::restore(&mut r);
+        self.right_tot_complete = r.bool();
+        self.sections_finished = r.bool();
+        self.anchor_dosage = r.f32s();
+        self.section_dosage = r.f32s();
+        assert!(r.exhausted(), "interp-vertex snapshot not fully consumed");
+    }
 }
 
 #[cfg(test)]
@@ -633,6 +711,27 @@ mod tests {
         let mut ctx = Ctx::new(0, 2);
         assert!(!v.step(&mut ctx), "all groups injected — go quiescent");
         assert!(ctx.take_sends().is_empty());
+    }
+
+    #[test]
+    fn snapshot_roundtrips_injection_and_wave_state() {
+        // A left-edge section vertex that already injected its α wave must
+        // not inject again after checkpoint/restore, and its buffered
+        // mid-flight state survives the round trip byte-exactly.
+        let mut v = mk(0, 0, 1);
+        let mut ctx = Ctx::new(0, 0);
+        assert!(v.step(&mut ctx));
+        drop(ctx.take_sends());
+        let mut bytes = Vec::new();
+        assert!(Device::snapshot(&v, &mut bytes));
+        let mut fresh = mk(0, 0, 1);
+        fresh.restore(&bytes);
+        let mut ctx = Ctx::new(0, 1);
+        assert!(!fresh.step(&mut ctx), "restored vertex re-injects nothing");
+        assert!(ctx.take_sends().is_empty());
+        let mut again = Vec::new();
+        assert!(Device::snapshot(&fresh, &mut again));
+        assert_eq!(bytes, again, "snapshot → restore → snapshot is stable");
     }
 
     #[test]

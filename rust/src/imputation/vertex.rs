@@ -47,6 +47,7 @@
 use std::sync::Arc;
 
 use crate::graph::device::{Ctx, Device, PortId, VertexId};
+use crate::poets::fault::{SnapReader, SnapWriter};
 
 use super::msg::{RawMsg, for_each_chunk};
 use super::obs::ObsMatrix;
@@ -371,6 +372,49 @@ impl Device for RawVertex {
     fn lanes(msg: &RawMsg) -> u32 {
         msg.lanes()
     }
+
+    /// Serialise every mutable field (the model constants are rebuilt with
+    /// the graph) so the fault plane can checkpoint mid-sweep — partial
+    /// waves included.
+    fn snapshot(&self, out: &mut Vec<u8>) -> bool {
+        let mut w = SnapWriter::new(out);
+        self.alpha_wave.snapshot(&mut w);
+        self.beta_wave.snapshot(&mut w);
+        w.u32(self.alpha.len() as u32);
+        for a in &self.alpha {
+            w.f32s(a);
+        }
+        w.bools(&self.alpha_done);
+        for b in &self.beta {
+            w.f32s(b);
+        }
+        w.bools(&self.beta_done);
+        w.bools(&self.posterior_done);
+        w.u32(self.injected_alpha as u32);
+        w.u32(self.injected_beta as u32);
+        self.post_wave.snapshot(&mut w);
+        w.bools(&self.post_allele1);
+        w.f32s(&self.dosage);
+        true
+    }
+
+    fn restore(&mut self, bytes: &[u8]) {
+        let mut r = SnapReader::new(bytes);
+        self.alpha_wave = GroupWaves::restore(&mut r);
+        self.beta_wave = GroupWaves::restore(&mut r);
+        let n_g = r.u32() as usize;
+        self.alpha = (0..n_g).map(|_| r.f32s()).collect();
+        self.alpha_done = r.bools();
+        self.beta = (0..n_g).map(|_| r.f32s()).collect();
+        self.beta_done = r.bools();
+        self.posterior_done = r.bools();
+        self.injected_alpha = r.u32() as usize;
+        self.injected_beta = r.u32() as usize;
+        self.post_wave = GroupWaves::restore(&mut r);
+        self.post_allele1 = r.bools();
+        self.dosage = r.f32s();
+        assert!(r.exhausted(), "raw-vertex snapshot not fully consumed");
+    }
 }
 
 #[cfg(test)]
@@ -480,6 +524,23 @@ mod tests {
             0,
             &mut ctx,
         );
+    }
+
+    #[test]
+    fn snapshot_roundtrips_injection_state() {
+        // A column-0 vertex that already injected its wave must NOT inject
+        // again after checkpoint/restore — replay would double the wave.
+        let mut v = mk(0, 0);
+        let mut ctx = Ctx::new(0, 0);
+        assert!(v.step(&mut ctx));
+        drop(ctx.take_sends());
+        let mut bytes = Vec::new();
+        assert!(Device::snapshot(&v, &mut bytes));
+        let mut fresh = mk(0, 0);
+        fresh.restore(&bytes);
+        let mut ctx = Ctx::new(0, 1);
+        assert!(!fresh.step(&mut ctx), "restored vertex re-injects nothing");
+        assert!(ctx.take_sends().is_empty());
     }
 
     #[test]

@@ -34,6 +34,8 @@
 //!
 //! [`LANES`]: super::msg::LANES
 
+use crate::poets::fault::{SnapReader, SnapWriter};
+
 use super::msg::LANES;
 
 /// Number of lane groups a batch of `n_targets` splits into.
@@ -117,6 +119,22 @@ impl WaveBuf {
         self.lanes = 0;
         std::mem::take(&mut self.buf)
     }
+
+    /// Serialise the in-flight state for a fault-plane checkpoint
+    /// (`poets::fault`) — the partial slab round-trips exactly.
+    pub fn snapshot(&self, w: &mut SnapWriter<'_>) {
+        w.f32s(&self.buf);
+        w.u64(self.lanes);
+        w.bool(self.done);
+    }
+
+    pub fn restore(r: &mut SnapReader<'_>) -> WaveBuf {
+        WaveBuf {
+            buf: r.f32s(),
+            lanes: r.u64(),
+            done: r.bool(),
+        }
+    }
 }
 
 /// A family of in-flight waves keyed by lane group: one lazily-allocated
@@ -171,6 +189,21 @@ impl GroupWaves {
     /// Hand out group `g`'s completed slab and release its buffer.
     pub fn take(&mut self, g: usize) -> Vec<f32> {
         self.waves[g].take()
+    }
+
+    /// Serialise every group slab for a fault-plane checkpoint.
+    pub fn snapshot(&self, w: &mut SnapWriter<'_>) {
+        w.u32(self.waves.len() as u32);
+        for wave in &self.waves {
+            wave.snapshot(w);
+        }
+    }
+
+    pub fn restore(r: &mut SnapReader<'_>) -> GroupWaves {
+        let n = r.u32() as usize;
+        GroupWaves {
+            waves: (0..n).map(|_| WaveBuf::restore(r)).collect(),
+        }
     }
 }
 
@@ -336,5 +369,28 @@ mod tests {
         assert_eq!(gw.store(1, 1, 0, 0, &[1.0], "t"), Some(0));
         gw.take(0);
         gw.store(1, 1, 0, 0, &[2.0], "t");
+    }
+
+    #[test]
+    fn snapshots_roundtrip_partial_waves() {
+        // A half-filled group family survives checkpoint/restore exactly:
+        // the missing chunk still completes the restored copy.
+        let t = LANES + 2;
+        let mut gw = GroupWaves::new();
+        assert_eq!(gw.store(2, t, 0, LANES, &[5.0, 6.0], "t"), None);
+        let mut bytes = Vec::new();
+        gw.snapshot(&mut SnapWriter::new(&mut bytes));
+        let mut r = SnapReader::new(&bytes);
+        let mut back = GroupWaves::restore(&mut r);
+        assert!(r.exhausted());
+        assert_eq!(back.store(2, t, 1, LANES, &[7.0, 8.0], "t"), Some(1));
+        assert_eq!(back.take(1), vec![5.0, 6.0, 7.0, 8.0]);
+        // Untouched (lazily unallocated) families restore to nothing.
+        let mut bytes = Vec::new();
+        GroupWaves::new().snapshot(&mut SnapWriter::new(&mut bytes));
+        let mut r = SnapReader::new(&bytes);
+        let back = GroupWaves::restore(&mut r);
+        assert!(r.exhausted());
+        assert!(back.waves.is_empty());
     }
 }

@@ -87,6 +87,25 @@
 //! the same shard code runs either way).  Dispatch stays serial: it mutates
 //! the global NoC link clocks and assigns the deterministic arrival
 //! sequence numbers.
+//!
+//! # The contract under faults (checkpoint, remap, replay)
+//!
+//! A [`ScenarioSpec`] fault schedule (`failtile=`, `drop=`, `dup=` — see
+//! [`super::fault`]) extends the determinism contract rather than weakening
+//! it.  Every fault decision is made in the **serial** dispatch phase from
+//! seeded per-link streams, so which crossings drop or duplicate — and
+//! therefore the whole recovery timeline — is a pure function of the
+//! schedule, invariant to host thread count.  When a tile dies, its
+//! vertices are remapped onto the surviving tiles and execution rewinds to
+//! the last barrier-aligned checkpoint: the replayed supersteps run the
+//! same canonical reductions under the new placement, and because the
+//! functional results are placement-independent (waves reduce in sender
+//! order), dosages after remap-and-replay are **bit-identical to the
+//! fault-free run** at every thread count and wave width
+//! (`tests/scenario_lab.rs`).  Replay re-records per-step durations — the
+//! step timeline still sums to `sim_cycles` exactly, but
+//! `step_durations.len()` exceeds the logical `steps` count by the number
+//! of replayed supersteps, and each recovery opens a new trace segment.
 
 use std::sync::Barrier;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -97,14 +116,15 @@ use crate::graph::mapping::Mapping;
 use crate::obs::trace::{LinkSample, RunTrace, StepRecord, TileSample, TraceConfig, NO_COL};
 
 use super::costmodel::CostModel;
-use super::event::{GroupArrival, assert_event_fits};
+use super::event::{FLAG_DUP, FLAG_RETRANS, GroupArrival, assert_event_fits};
+use super::fault::{Checkpoint, CrossingFate, FaultPlan, NACK_PENALTY_CYCLES, Retransmit};
 use super::mailbox::Mailbox;
 use super::metrics::SimMetrics;
 use super::multicast::McastPlan;
 use super::noc::Noc;
 use super::scenario::ScenarioSpec;
 use super::termination;
-use super::topology::ClusterConfig;
+use super::topology::{ClusterConfig, ThreadId};
 
 /// Simulation limits / switches.
 #[derive(Clone, Copy, Debug)]
@@ -169,6 +189,8 @@ struct TileShard<D: Device> {
     copies_delivered: u64,
     lanes_delivered: u64,
     recv_handlers: u64,
+    /// Spurious duplicates the mailbox suppressed (fault schedules only).
+    dup_events: u64,
     // Per-superstep trace scratch, written only when tracing is enabled
     // (`Env::trace`) and read in the serial shard reduce.  `t_copies` /
     // `t_lanes` snapshot the cumulative counters at deliver start, so the
@@ -244,7 +266,24 @@ impl<D: Device> TileShard<D> {
         let mut latest = 0u64;
         for qi in 0..self.queue.len() {
             let ev = self.queue[qi];
-            let dests = env.plan.group_dests(ev.group as usize);
+            if ev.flags & FLAG_DUP != 0 {
+                // Spurious duplicate: the mailbox recognises the repeated
+                // (sender, superstep) sequence number and discards it after
+                // one ingress slot of detection work — no handler runs, so
+                // duplicates never touch the functional state.
+                self.mailbox.suppress_dup(ev.t, env.cost);
+                self.dup_events += 1;
+                latest = latest.max(ev.t);
+                continue;
+            }
+            // Retransmissions are unicast: `group` carries the destination
+            // vertex id, not a multicast-group index (see `poets::fault`).
+            let one: [VertexId; 1] = [ev.group];
+            let dests: &[VertexId] = if ev.flags & FLAG_RETRANS != 0 {
+                &one
+            } else {
+                env.plan.group_dests(ev.group as usize)
+            };
             let n = dests.len();
             let first_ready = self.mailbox.ingest(ev.t, n, env.cost);
             self.copies_delivered += n as u64;
@@ -418,6 +457,27 @@ pub struct Simulator<D: Device> {
     /// Bounded trace ring, present iff `cfg.trace` is set.  Filled in the
     /// serial shard reduce; handed out via [`Simulator::take_trace`].
     trace: Option<RunTrace>,
+    /// Compiled fault schedule (`None` for fault-free runs: the hot paths
+    /// pay one `Option` branch).
+    fault: Option<FaultPlan>,
+    /// Messages owed after dropped crossings, re-sent unicast at the next
+    /// superstep's dispatch.
+    retrans: Vec<Retransmit<D::Msg>>,
+    /// Shard counters folded out of the pre-remap shard set at each
+    /// recovery — the shards are rebuilt, but work already executed (and
+    /// re-executed during replay) stays accounted.
+    carry: Carry,
+}
+
+/// Counter carry-over across tile-failure remaps (see `Simulator::carry`).
+#[derive(Default)]
+struct Carry {
+    copies: u64,
+    lanes: u64,
+    recvs: u64,
+    dups: u64,
+    core_busy: u64,
+    mailbox_busy: u64,
 }
 
 impl<D: Device> Simulator<D> {
@@ -449,52 +509,10 @@ impl<D: Device> Simulator<D> {
             graph.n_vertices(),
             "mapping covers a different vertex count"
         );
-        let plan = McastPlan::build(&graph, &mapping, &cluster);
+        let (plan, board_of, tile_of, local_core_of, slot_of, shards) =
+            Self::layout(&graph, &mapping, &cluster);
         let n_tiles = cluster.total_tiles();
-        let cpt = cluster.cores_per_tile;
-        let n_v = graph.n_vertices();
-
-        let mut board_of = Vec::with_capacity(n_v);
-        let mut tile_of = Vec::with_capacity(n_v);
-        let mut local_core_of = Vec::with_capacity(n_v);
-        for v in 0..n_v {
-            let t = mapping.thread_of(v as VertexId);
-            board_of.push(cluster.board_of(t) as u32);
-            tile_of.push(cluster.tile_of(t) as u32);
-            local_core_of.push((cluster.core_of(t) % cpt) as u32);
-        }
-
-        let mut shards: Vec<TileShard<D>> = (0..n_tiles)
-            .map(|_| TileShard {
-                vertices: Vec::new(),
-                devices: Vec::new(),
-                core_free: vec![0; cpt],
-                core_busy: vec![0; cpt],
-                core_vertex_count: vec![0; cpt],
-                mailbox: Mailbox::new(),
-                queue: Vec::new(),
-                out: Vec::new(),
-                ctx: Ctx::new(0, 0),
-                latest: 0,
-                voted_continue: false,
-                delivered: false,
-                copies_delivered: 0,
-                lanes_delivered: 0,
-                recv_handlers: 0,
-                t_queue_hw: 0,
-                t_copies: 0,
-                t_lanes: 0,
-                t_col_min: NO_COL,
-                t_col_max: 0,
-            })
-            .collect();
-        let mut slot_of = vec![0u32; n_v];
-        for v in 0..n_v {
-            let shard = &mut shards[tile_of[v] as usize];
-            slot_of[v] = shard.vertices.len() as u32;
-            shard.vertices.push(v as VertexId);
-            shard.core_vertex_count[local_core_of[v] as usize] += 1;
-        }
+        let fault = scenario.and_then(|s| FaultPlan::build(s, &cluster));
 
         let mut noc = match scenario {
             Some(spec) => Noc::with_scenario(&cluster, &cost, spec)
@@ -526,7 +544,77 @@ impl<D: Device> Simulator<D> {
             seq: 0,
             metrics,
             trace: cfg.trace.map(|tc| RunTrace::new(tc, n_tiles as u32)),
+            fault,
+            retrans: Vec::new(),
+            carry: Carry::default(),
         }
+    }
+
+    /// Build the placement-derived state — multicast plan, per-vertex
+    /// location caches, empty tile shards — from a mapping.  Shared by
+    /// construction and by the fault plane's remap, which rebuilds all of
+    /// it under the post-failure mapping.
+    #[allow(clippy::type_complexity)]
+    fn layout(
+        graph: &Graph<D>,
+        mapping: &Mapping,
+        cluster: &ClusterConfig,
+    ) -> (
+        McastPlan,
+        Vec<u32>,
+        Vec<u32>,
+        Vec<u32>,
+        Vec<u32>,
+        Vec<TileShard<D>>,
+    ) {
+        let plan = McastPlan::build(graph, mapping, cluster);
+        let n_tiles = cluster.total_tiles();
+        let cpt = cluster.cores_per_tile;
+        let n_v = graph.n_vertices();
+
+        let mut board_of = Vec::with_capacity(n_v);
+        let mut tile_of = Vec::with_capacity(n_v);
+        let mut local_core_of = Vec::with_capacity(n_v);
+        for v in 0..n_v {
+            let t = mapping.thread_of(v as VertexId);
+            board_of.push(cluster.board_of(t) as u32);
+            tile_of.push(cluster.tile_of(t) as u32);
+            local_core_of.push((cluster.core_of(t) % cpt) as u32);
+        }
+
+        let mut shards: Vec<TileShard<D>> = (0..n_tiles)
+            .map(|_| TileShard {
+                vertices: Vec::new(),
+                devices: Vec::new(),
+                core_free: vec![0; cpt],
+                core_busy: vec![0; cpt],
+                core_vertex_count: vec![0; cpt],
+                mailbox: Mailbox::new(),
+                queue: Vec::new(),
+                out: Vec::new(),
+                ctx: Ctx::new(0, 0),
+                latest: 0,
+                voted_continue: false,
+                delivered: false,
+                copies_delivered: 0,
+                lanes_delivered: 0,
+                recv_handlers: 0,
+                dup_events: 0,
+                t_queue_hw: 0,
+                t_copies: 0,
+                t_lanes: 0,
+                t_col_min: NO_COL,
+                t_col_max: 0,
+            })
+            .collect();
+        let mut slot_of = vec![0u32; n_v];
+        for v in 0..n_v {
+            let shard = &mut shards[tile_of[v] as usize];
+            slot_of[v] = shard.vertices.len() as u32;
+            shard.vertices.push(v as VertexId);
+            shard.core_vertex_count[local_core_of[v] as usize] += 1;
+        }
+        (plan, board_of, tile_of, local_core_of, slot_of, shards)
     }
 
     /// Take the captured trace (if tracing was enabled), leaving `None`.
@@ -549,7 +637,7 @@ impl<D: Device> Simulator<D> {
     /// Run to halt (or `max_steps`). Returns the final metrics.
     pub fn run(&mut self) -> &SimMetrics {
         let host_threads = self.cfg.threads.unwrap_or(1).max(1);
-        let n_sim_threads = self.mapping.n_threads_used();
+        let mut n_sim_threads = self.mapping.n_threads_used();
         let n_vertices = self.graph.n_vertices() as u64;
         let max_steps = self.cfg.max_steps;
         let record_steps = self.cfg.record_steps;
@@ -589,7 +677,55 @@ impl<D: Device> Simulator<D> {
         // Superstep 0's handler time is folded into the first recorded step
         // so `step_durations.iter().sum() == sim_cycles` (see metrics).
         let mut record_from = 0u64;
+        // Fault-plane state: the last barrier-aligned checkpoint, the step
+        // horizon below which the loop is replaying destroyed work, and the
+        // recovery epoch (trace segment id).
+        let mut ckpt: Option<Checkpoint<D::Msg>> = None;
+        let mut replay_until = 0u64;
+        let mut epoch = 0u32;
         loop {
+            // Phase 0 (fault plane, serial): take a due barrier-aligned
+            // checkpoint, then fire any tile failures scheduled for this
+            // step — remap the dead tiles' vertices onto survivors, rewind
+            // to the checkpoint, replay.  Checkpoint-before-fail bounds
+            // replay at `fail_step % ckpt_interval` supersteps.
+            if self.fault.as_ref().is_some_and(|fp| fp.checkpoint_due(step)) {
+                let c = self.capture_checkpoint(step);
+                self.metrics.checkpoint_bytes =
+                    self.metrics.checkpoint_bytes.max(c.state_bytes());
+                ckpt = Some(c);
+            }
+            let dead = match self.fault.as_mut() {
+                Some(fp) => fp.fire_failures(step),
+                None => Vec::new(),
+            };
+            if !dead.is_empty() {
+                let c = ckpt.take().expect("a checkpoint precedes every tile failure");
+                let penalty = self.recover_from_failure(&dead, &c, step);
+                // Time never rolls back: survivors stall for the restore,
+                // then replay.  The stall is folded into the last recorded
+                // duration so the step timeline still sums to `sim_cycles`.
+                now += penalty;
+                if record_steps {
+                    if let Some(last) = self.metrics.step_durations.last_mut() {
+                        *last += penalty;
+                        record_from = now;
+                    }
+                    // else: failure at step 0 — nothing recorded yet (and
+                    // nothing to replay); the first step absorbs the stall.
+                } else {
+                    record_from = now;
+                }
+                replay_until = replay_until.max(step);
+                n_sim_threads = self.mapping.n_threads_used();
+                step = c.step;
+                epoch += 1;
+                if let Some(t) = self.trace.as_mut() {
+                    t.segments += 1;
+                }
+                ckpt = Some(c);
+            }
+
             // Phase 1: fill the arena from the buffered sends, dispatch
             // serially (NoC link clocks + arrival sequencing are global).
             let step_start = now;
@@ -599,8 +735,24 @@ impl<D: Device> Simulator<D> {
                 meta.push((src, port));
                 arena.push(msg);
             }
+            // Outstanding retransmissions ride the same arena after the
+            // ordinary sends; crossings dropped during this dispatch (of
+            // either kind) re-arm `self.retrans` for the next superstep.
+            let n_ordinary = meta.len();
+            let resend: Vec<(VertexId, Vec<VertexId>)> = self
+                .retrans
+                .drain(..)
+                .map(|r| {
+                    arena.push(r.msg);
+                    (r.src, r.dests)
+                })
+                .collect();
             for (i, &(src, port)) in meta.iter().enumerate() {
-                self.dispatch(src, port, i as u32, step_start);
+                self.dispatch(src, port, i as u32, step_start, &arena[i]);
+            }
+            for (j, (src, dests)) in resend.iter().enumerate() {
+                let idx = n_ordinary + j;
+                self.dispatch_retrans(*src, dests, idx as u32, step_start, &arena[idx]);
             }
             // The NoC is mutated only by the serial dispatch above, so the
             // per-superstep link samples are drained here — before the
@@ -685,7 +837,7 @@ impl<D: Device> Simulator<D> {
                     })
                     .collect();
                 trace.push(StepRecord {
-                    segment: 0,
+                    segment: epoch,
                     step,
                     t_start: record_from,
                     t_end: now,
@@ -718,11 +870,15 @@ impl<D: Device> Simulator<D> {
             if record_steps {
                 self.metrics.step_durations.push(now - record_from);
             }
+            if step < replay_until {
+                // This superstep re-executed work a tile failure destroyed.
+                self.metrics.recovery_cycles += now - record_from;
+            }
             record_from = now;
             step += 1;
             self.metrics.steps = step;
 
-            if all_halt && self.pending.is_empty() {
+            if all_halt && self.pending.is_empty() && self.retrans.is_empty() {
                 break;
             }
             assert!(
@@ -744,23 +900,28 @@ impl<D: Device> Simulator<D> {
             }
         }
         self.metrics.sim_cycles = end;
-        let mut max_core_busy = 0u64;
-        let mut max_mailbox_busy = 0u64;
-        let mut copies = 0u64;
-        let mut lanes = 0u64;
-        let mut recvs = 0u64;
+        // Carried counters cover shard sets torn down by tile-failure
+        // remaps; zero on fault-free runs.
+        let mut max_core_busy = self.carry.core_busy;
+        let mut max_mailbox_busy = self.carry.mailbox_busy;
+        let mut copies = self.carry.copies;
+        let mut lanes = self.carry.lanes;
+        let mut recvs = self.carry.recvs;
+        let mut dups = self.carry.dups;
         for s in &self.shards {
             max_core_busy = max_core_busy.max(s.core_busy.iter().copied().max().unwrap_or(0));
             max_mailbox_busy = max_mailbox_busy.max(s.mailbox.busy_cycles());
             copies += s.copies_delivered;
             lanes += s.lanes_delivered;
             recvs += s.recv_handlers;
+            dups += s.dup_events;
         }
         self.metrics.max_core_busy = max_core_busy;
         self.metrics.max_mailbox_busy = max_mailbox_busy;
         self.metrics.copies_delivered = copies;
         self.metrics.lanes_delivered = lanes;
         self.metrics.recv_handlers = recvs;
+        self.metrics.dup_events = dups;
         // Link-plane totals: surfaced in every manifest, tracing or not
         // (these are cumulative NoC counters, free to read once per run).
         self.metrics.n_links = self.noc.n_links() as u64;
@@ -782,7 +943,16 @@ impl<D: Device> Simulator<D> {
 
     /// Service one send request: charge the sending core, route over the
     /// NoC, and append one POD group arrival per destination tile queue.
-    fn dispatch(&mut self, src: VertexId, port: PortId, msg_idx: u32, step_start: u64) {
+    /// `msg` is the arena slot for `msg_idx` — cloned only if a crossing
+    /// drops and the payload must be owed to a retransmission.
+    fn dispatch(
+        &mut self,
+        src: VertexId,
+        port: PortId,
+        msg_idx: u32,
+        step_start: u64,
+        msg: &D::Msg,
+    ) {
         let src_tile = self.tile_of[src as usize] as usize;
         let lc = self.local_core_of[src as usize] as usize;
         let shard = &mut self.shards[src_tile];
@@ -798,6 +968,7 @@ impl<D: Device> Simulator<D> {
         for g in self.plan.group_range(list) {
             let (board, tile) = self.plan.group_loc(g);
             let n_copies = self.plan.group_dests(g).len() as u64;
+            let mut dup = false;
             let t_arr = if board == src_board {
                 if tile as usize == src_tile {
                     self.metrics.intra_tile_copies += n_copies;
@@ -813,6 +984,34 @@ impl<D: Device> Simulator<D> {
                 ) as u64;
                 t_send + hops * self.cost.hop
             } else {
+                // Loss models live on the inter-board links: decide this
+                // crossing's fate before any copy accounting so dropped
+                // copies never enter the delivered-copy conservation.
+                match self.crossing_fate_for(src_board as usize, board as usize) {
+                    Some(CrossingFate::Drop) => {
+                        // The bits were sent — the links serialise them —
+                        // but the crossing is lost; the barrier audit NACKs
+                        // it and the sender retransmits next superstep.
+                        self.noc.traverse_between(
+                            &self.cluster,
+                            src_board as usize,
+                            board as usize,
+                            t_send,
+                            &self.cost,
+                        );
+                        self.metrics.dropped_events += 1;
+                        let dests = self.plan.group_dests(g).to_vec();
+                        self.retrans.push(Retransmit {
+                            src,
+                            port,
+                            msg: msg.clone(),
+                            dests,
+                        });
+                        continue;
+                    }
+                    Some(CrossingFate::Dup) => dup = true,
+                    _ => {}
+                }
                 crossed_board = true;
                 self.metrics.inter_board_copies += n_copies;
                 self.metrics.board_traffic[src_board as usize][2] += n_copies;
@@ -836,11 +1035,263 @@ impl<D: Device> Simulator<D> {
                 src,
                 group: g as u32,
                 msg_idx,
+                flags: 0,
+            });
+            if dup {
+                // The spurious copy crossed the links too: charge a second
+                // traversal, flag the arrival for mailbox suppression.
+                let t_board = self.noc.traverse_between(
+                    &self.cluster,
+                    src_board as usize,
+                    board as usize,
+                    t_send,
+                    &self.cost,
+                );
+                let ingress_hops = (self.cluster.tile_mesh.0 + self.cluster.tile_mesh.1) as u64 / 2;
+                self.seq += 1;
+                self.shards[tile as usize].queue.push(GroupArrival {
+                    t: t_board + ingress_hops * self.cost.hop,
+                    seq: self.seq,
+                    src,
+                    group: g as u32,
+                    msg_idx,
+                    flags: FLAG_DUP,
+                });
+            }
+        }
+        if crossed_board {
+            self.metrics.inter_board_sends += 1;
+        }
+    }
+
+    /// Loss-model fate of one `from → to` board crossing; `None` on
+    /// lossless runs (one `Option` branch, no route materialised).
+    fn crossing_fate_for(&mut self, from: usize, to: usize) -> Option<CrossingFate> {
+        let fp = self.fault.as_mut()?;
+        if !fp.has_loss() {
+            return None;
+        }
+        let route = self.noc.route_between(&self.cluster, from, to);
+        Some(fp.crossing_fate(&route))
+    }
+
+    /// Re-send messages owed after dropped crossings: unicast, one
+    /// send-request charge and one crossing per missing destination (the
+    /// multicast amortisation is lost), plus the NACK round-trip latency.
+    /// A retransmission may itself be dropped and is then owed again.
+    fn dispatch_retrans(
+        &mut self,
+        src: VertexId,
+        dests: &[VertexId],
+        msg_idx: u32,
+        step_start: u64,
+        msg: &D::Msg,
+    ) {
+        let src_tile = self.tile_of[src as usize] as usize;
+        let lc = self.local_core_of[src as usize] as usize;
+        let src_board = self.board_of[src as usize];
+        let src_tile_in_board = src_tile % self.cluster.tiles_per_board;
+        let ingress_hops = (self.cluster.tile_mesh.0 + self.cluster.tile_mesh.1) as u64 / 2;
+        let mut crossed_board = false;
+        for &d in dests {
+            let shard = &mut self.shards[src_tile];
+            let t_send = step_start.max(shard.core_free[lc]) + self.cost.send_request;
+            shard.core_free[lc] = t_send;
+            shard.core_busy[lc] += self.cost.send_request;
+            self.metrics.sends += 1;
+
+            let board = self.board_of[d as usize];
+            let tile = self.tile_of[d as usize] as usize;
+            let t_arr = if board == src_board {
+                // A remap may have moved the destination next to the
+                // sender; the re-send then stays on the board mesh.
+                if tile == src_tile {
+                    self.metrics.intra_tile_copies += 1;
+                    self.metrics.board_traffic[src_board as usize][0] += 1;
+                } else {
+                    self.metrics.inter_tile_copies += 1;
+                    self.metrics.board_traffic[src_board as usize][1] += 1;
+                }
+                let hops = self
+                    .cluster
+                    .intra_board_hops(src_tile_in_board, tile % self.cluster.tiles_per_board)
+                    as u64;
+                t_send + hops * self.cost.hop
+            } else {
+                if let Some(CrossingFate::Drop) =
+                    self.crossing_fate_for(src_board as usize, board as usize)
+                {
+                    // Dropped again: still owed.  (A duplicated
+                    // retransmission is suppressed like any duplicate;
+                    // nothing observable beyond timing noise the first
+                    // transmission already models, so it is not re-rolled.)
+                    self.noc.traverse_between(
+                        &self.cluster,
+                        src_board as usize,
+                        board as usize,
+                        t_send,
+                        &self.cost,
+                    );
+                    self.metrics.dropped_events += 1;
+                    self.retrans.push(Retransmit {
+                        src,
+                        port: 0,
+                        msg: msg.clone(),
+                        dests: vec![d],
+                    });
+                    continue;
+                }
+                crossed_board = true;
+                self.metrics.inter_board_copies += 1;
+                self.metrics.board_traffic[src_board as usize][2] += 1;
+                let t_board = self.noc.traverse_between(
+                    &self.cluster,
+                    src_board as usize,
+                    board as usize,
+                    t_send,
+                    &self.cost,
+                );
+                t_board + ingress_hops * self.cost.hop
+            };
+            self.metrics.retransmits += 1;
+            self.seq += 1;
+            self.shards[tile].queue.push(GroupArrival {
+                t: t_arr + NACK_PENALTY_CYCLES,
+                seq: self.seq,
+                src,
+                group: d,
+                msg_idx,
+                flags: FLAG_RETRANS,
             });
         }
         if crossed_board {
             self.metrics.inter_board_sends += 1;
         }
+    }
+
+    /// Serialise a barrier-aligned recovery point: the superstep number,
+    /// the sends pending at this barrier, retransmissions still owed and
+    /// every device's snapshot (vertex order).  Hard error if any device
+    /// opted out of checkpointing — a scheduled tile failure cannot be
+    /// honoured without it.
+    fn capture_checkpoint(&self, step: u64) -> Checkpoint<D::Msg> {
+        let n = self.graph.n_vertices();
+        let mut bytes = Vec::new();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u32);
+        for v in 0..n {
+            let shard = &self.shards[self.tile_of[v] as usize];
+            let dev = &shard.devices[self.slot_of[v] as usize];
+            assert!(
+                dev.snapshot(&mut bytes),
+                "scenario schedules a tile failure but device type {} does not \
+                 implement Device::snapshot — checkpointing is impossible",
+                std::any::type_name::<D>()
+            );
+            offsets.push(bytes.len() as u32);
+        }
+        Checkpoint {
+            step,
+            pending: self.pending.clone(),
+            retrans: self.retrans.clone(),
+            bytes,
+            offsets,
+        }
+    }
+
+    /// Tile failure at the top of superstep `at_step`: fold the doomed
+    /// shard set's counters into the carries, rewind every device to the
+    /// checkpoint, remap the dead tiles' vertices round-robin onto the
+    /// surviving tiles, rebuild the placement-derived state and restore
+    /// the event plane.  Returns the restore stall in cycles.
+    fn recover_from_failure(
+        &mut self,
+        dead: &[usize],
+        ckpt: &Checkpoint<D::Msg>,
+        at_step: u64,
+    ) -> u64 {
+        // Work executed before the failure stays executed (and paid for):
+        // the shards are about to be rebuilt, so bank their counters.
+        for s in &self.shards {
+            self.carry.copies += s.copies_delivered;
+            self.carry.lanes += s.lanes_delivered;
+            self.carry.recvs += s.recv_handlers;
+            self.carry.dups += s.dup_events;
+            self.carry.core_busy = self
+                .carry
+                .core_busy
+                .max(s.core_busy.iter().copied().max().unwrap_or(0));
+            self.carry.mailbox_busy = self.carry.mailbox_busy.max(s.mailbox.busy_cycles());
+        }
+
+        // Pull every device out of its shard (vertex order) and rewind it.
+        let n = self.graph.n_vertices();
+        let mut slots: Vec<Option<D>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for s in &mut self.shards {
+            for (slot, dev) in s.devices.drain(..).enumerate() {
+                slots[s.vertices[slot] as usize] = Some(dev);
+            }
+        }
+        let mut devices: Vec<D> = slots
+            .into_iter()
+            .map(|d| d.expect("every device accounted for"))
+            .collect();
+        for (v, dev) in devices.iter_mut().enumerate() {
+            let (a, b) = (ckpt.offsets[v] as usize, ckpt.offsets[v + 1] as usize);
+            dev.restore(&ckpt.bytes[a..b]);
+        }
+
+        // Remap: every vertex on a dead tile moves to a surviving tile,
+        // round-robin over tiles then over threads within each tile —
+        // deterministic, placement changes dosages by nothing (canonical
+        // reductions) and timing only through the new contention pattern.
+        let all_dead = self
+            .fault
+            .as_ref()
+            .expect("recovery implies a fault plan")
+            .dead_tiles();
+        let survivors: Vec<usize> = (0..self.cluster.total_tiles())
+            .filter(|t| !all_dead.contains(t))
+            .collect();
+        assert!(!survivors.is_empty(), "tile failures killed every tile");
+        let tpt = self.cluster.threads_per_tile();
+        let mut cursor = 0usize;
+        let assignment: Vec<ThreadId> = (0..n)
+            .map(|v| {
+                let t = self.mapping.thread_of(v as VertexId);
+                if all_dead.contains(&self.cluster.tile_of(t)) {
+                    let target = survivors[cursor % survivors.len()];
+                    let lane = (cursor / survivors.len()) % tpt;
+                    cursor += 1;
+                    ThreadId((target * tpt + lane) as u32)
+                } else {
+                    t
+                }
+            })
+            .collect();
+        self.mapping = Mapping::from_assignment(assignment, &self.cluster);
+        let (plan, board_of, tile_of, local_core_of, slot_of, shards) =
+            Self::layout(&self.graph, &self.mapping, &self.cluster);
+        self.plan = plan;
+        self.board_of = board_of;
+        self.tile_of = tile_of;
+        self.local_core_of = local_core_of;
+        self.slot_of = slot_of;
+        self.shards = shards;
+        for (v, dev) in devices.into_iter().enumerate() {
+            self.shards[self.tile_of[v] as usize].devices.push(dev);
+        }
+
+        // Rewind the event plane to the checkpoint barrier.
+        self.pending = ckpt.pending.clone();
+        self.retrans = ckpt.retrans.clone();
+
+        self.metrics.failed_tiles += dead.len() as u64;
+        self.metrics.replayed_supersteps += at_step - ckpt.step;
+        let penalty = FaultPlan::restore_cycles(ckpt.state_bytes());
+        self.metrics.recovery_cycles += penalty;
+        penalty
     }
 
     /// Hand the devices back to the graph in vertex-id order.
@@ -865,6 +1316,7 @@ impl<D: Device> Simulator<D> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::fault::{SnapReader, SnapWriter};
     use crate::graph::builder::GraphBuilder;
     use crate::graph::mapping::Mapping;
 
@@ -899,6 +1351,21 @@ mod tests {
             } else {
                 false
             }
+        }
+        fn snapshot(&self, out: &mut Vec<u8>) -> bool {
+            let mut w = SnapWriter::new(out);
+            w.u32(self.hops_seen);
+            w.u32(self.pending_send.map_or(u32::MAX, |v| v));
+            true
+        }
+        fn restore(&mut self, bytes: &[u8]) {
+            let mut r = SnapReader::new(bytes);
+            self.hops_seen = r.u32();
+            self.pending_send = match r.u32() {
+                u32::MAX => None,
+                v => Some(v),
+            };
+            assert!(r.exhausted());
         }
     }
 
@@ -1304,6 +1771,147 @@ mod tests {
                 threads: None,
                 trace: None,
             },
+        );
+        sim.run();
+    }
+
+    /// Small shape where a 12-vertex round-robin ring definitely crosses
+    /// boards (4 threads per board): edge 3→4 rides link 0E, 7→8 rides 1W.
+    const FAULT_SHAPE: &str = "boards=2,tiles=2,cores=1,threads=2";
+
+    /// Run a ring under an optional scenario spec; returns per-device hop
+    /// counts (the functional result) and the metrics.
+    fn ring_run(
+        n: usize,
+        rounds: u32,
+        threads: Option<usize>,
+        spec: Option<&str>,
+    ) -> (Vec<u32>, SimMetrics) {
+        let mut b = GraphBuilder::new();
+        for i in 0..n {
+            b.add_vertex(Ring {
+                hops_seen: 0,
+                rounds,
+                is_seed: i == 0,
+                pending_send: None,
+            });
+        }
+        for v in 0..n as u32 {
+            b.add_port_to(v, vec![(v + 1) % n as u32]);
+        }
+        let parsed = spec.map(|s| ScenarioSpec::parse(s).expect("valid scenario"));
+        let cluster = parsed
+            .as_ref()
+            .map(|s| s.cluster())
+            .unwrap_or_else(ClusterConfig::tiny);
+        let mapping = Mapping::round_robin(n, &cluster);
+        let mut sim = Simulator::with_scenario(
+            b.build(),
+            mapping,
+            cluster,
+            CostModel::default(),
+            SimConfig {
+                threads,
+                ..SimConfig::default()
+            },
+            parsed.as_ref(),
+        );
+        sim.run();
+        let hops = sim.graph.devices.iter().map(|d| d.hops_seen).collect();
+        (hops, sim.metrics.clone())
+    }
+
+    #[test]
+    fn tile_failure_replays_to_identical_results() {
+        let (clean_hops, clean) = ring_run(12, 17, None, Some(FAULT_SHAPE));
+        // Board 1 tile 0 (vertices 4 and 5) dies at step 6; checkpoint
+        // cadence 4 bounds replay to supersteps 4 and 5.
+        let spec = format!("{FAULT_SHAPE},failtile=1.0@6,ckpt=4");
+        let (hops, m) = ring_run(12, 17, None, Some(&spec));
+        assert_eq!(hops, clean_hops, "remap-and-replay must not change results");
+        assert_eq!(m.failed_tiles, 1);
+        assert_eq!(m.replayed_supersteps, 2);
+        assert!(m.recovery_cycles > 0);
+        assert!(m.checkpoint_bytes > 0);
+        assert!(m.sim_cycles > clean.sim_cycles, "recovery must cost cycles");
+        // The step timeline stays exact: one recorded duration per executed
+        // superstep (logical + replayed), summing to sim_cycles.
+        assert_eq!(m.step_durations.len() as u64, m.steps + m.replayed_supersteps);
+        assert_eq!(m.step_durations.iter().sum::<u64>(), m.sim_cycles);
+        // The whole recovery timeline is thread-count invariant.
+        let (hops4, m4) = ring_run(12, 17, Some(4), Some(&spec));
+        assert_eq!(hops, hops4);
+        assert_eq!(m.sim_cycles, m4.sim_cycles);
+        assert_eq!(m.sends, m4.sends);
+        assert_eq!(m.recovery_cycles, m4.recovery_cycles);
+        assert_eq!(m.step_durations, m4.step_durations);
+    }
+
+    #[test]
+    fn dropped_crossings_are_retransmitted_exactly_once_each() {
+        let (clean_hops, clean) = ring_run(12, 59, None, Some(FAULT_SHAPE));
+        let spec = format!("{FAULT_SHAPE},drop=0E:0.7@5,drop=1W:0.7@11");
+        let (hops, m) = ring_run(12, 59, None, Some(&spec));
+        assert_eq!(hops, clean_hops, "drops must be invisible after retransmit");
+        assert!(m.dropped_events > 0, "schedule must actually drop");
+        assert!(m.retransmits > 0);
+        assert_eq!(m.dup_events, 0);
+        assert_eq!(
+            m.copies_delivered, clean.copies_delivered,
+            "every copy delivered exactly once"
+        );
+        assert_eq!(m.recv_handlers, clean.recv_handlers);
+        assert!(m.sim_cycles > clean.sim_cycles, "NACKs must cost cycles");
+        let (hops2, m2) = ring_run(12, 59, Some(2), Some(&spec));
+        assert_eq!(hops, hops2);
+        assert_eq!(m.sim_cycles, m2.sim_cycles);
+        assert_eq!(m.dropped_events, m2.dropped_events);
+        assert_eq!(m.retransmits, m2.retransmits);
+    }
+
+    #[test]
+    fn duplicated_crossings_are_suppressed() {
+        let (clean_hops, clean) = ring_run(12, 59, None, Some(FAULT_SHAPE));
+        let spec = format!("{FAULT_SHAPE},dup=0E:0.7@3,dup=1W:0.7@9");
+        let (hops, m) = ring_run(12, 59, None, Some(&spec));
+        assert_eq!(hops, clean_hops, "duplicates must never reach handlers");
+        assert!(m.dup_events > 0, "schedule must actually duplicate");
+        assert_eq!(m.dropped_events, 0);
+        assert_eq!(m.copies_delivered, clean.copies_delivered);
+        assert_eq!(m.recv_handlers, clean.recv_handlers);
+        assert_eq!(m.steps, clean.steps, "suppression is timing-only noise");
+        let (hops2, m2) = ring_run(12, 59, Some(4), Some(&spec));
+        assert_eq!(hops, hops2);
+        assert_eq!(m.dup_events, m2.dup_events);
+        assert_eq!(m.sim_cycles, m2.sim_cycles);
+    }
+
+    #[test]
+    #[should_panic(expected = "snapshot")]
+    fn tile_failure_requires_snapshot_support() {
+        // Fan keeps the Device::snapshot default (opted out), so a schedule
+        // with a tile failure must fail fast at the first checkpoint.
+        let spec = ScenarioSpec::parse("boards=2,tiles=2,cores=1,threads=2,failtile=0.0@2")
+            .expect("valid scenario");
+        let cluster = spec.cluster();
+        let mut b = GraphBuilder::new();
+        let a = b.add_vertex(Fan {
+            n_recv: 0,
+            is_root: true,
+        });
+        let z = b.add_vertex(Fan {
+            n_recv: 0,
+            is_root: false,
+        });
+        b.add_port_to(a, vec![z]);
+        let mapping = Mapping::round_robin(2, &cluster);
+        let mut sim = Simulator::with_scenario(
+            b.build(),
+            mapping,
+            cluster,
+            CostModel::default(),
+            SimConfig::default(),
+            Some(&spec),
         );
         sim.run();
     }

@@ -46,7 +46,23 @@ pub struct GroupArrival {
     pub group: u32,
     /// Index of the payload in the superstep message arena.
     pub msg_idx: u32,
+    /// Delivery-plane flags (see [`FLAG_DUP`]); 0 for ordinary arrivals.
+    pub flags: u32,
 }
+
+/// Marks an arrival injected by a fault schedule's `dup=` link model: a
+/// spurious second copy of an event the link already delivered.  The
+/// destination mailbox recognises the repeated (sender, superstep) sequence
+/// number and suppresses it — the copy is charged detection cost but no
+/// recv handler runs (see `poets::fault`).
+pub const FLAG_DUP: u32 = 1;
+
+/// Marks a unicast retransmission: a copy re-sent point-to-point after the
+/// barrier-time sequence-number audit NACKed a dropped crossing.  `group`
+/// holds the destination *vertex* id instead of a multicast-group index —
+/// vertex ids survive a tile-failure remap, group indices do not (see
+/// `poets::fault`).
+pub const FLAG_RETRANS: u32 = 2;
 
 impl PartialEq for GroupArrival {
     fn eq(&self, other: &Self) -> bool {
@@ -80,6 +96,7 @@ mod tests {
             src: 0,
             group: 0,
             msg_idx: 0,
+            flags: 0,
         }
     }
 

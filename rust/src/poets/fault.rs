@@ -1,0 +1,478 @@
+//! Fault plane: deterministic tile-failure remap-and-replay and
+//! loss-tolerant inter-board delivery.
+//!
+//! A [`ScenarioSpec`] fault schedule compiles into a [`FaultPlan`] the
+//! simulator consults from its **serial** phases only, so every fault
+//! decision — which superstep a tile dies at, which link crossing is
+//! dropped or duplicated — is a function of the schedule and the event
+//! stream alone, never of host thread count or wave width.
+//!
+//! ## Tile failure: checkpoint, remap, replay
+//!
+//! While un-fired tile failures remain, the simulator takes a
+//! barrier-aligned checkpoint every `ckpt` supersteps (default
+//! [`DEFAULT_CKPT_INTERVAL`]): the superstep number, the sends pending at
+//! the barrier, outstanding retransmissions, and every device's serialised
+//! state ([`crate::graph::device::Device::snapshot`]).  Checkpoint capture
+//! itself is charged nothing — the model assumes the fabric DMAs tile SRAM
+//! to board DRAM behind the barrier — but **recovery** is charged in full:
+//! when a tile dies, its resident vertices are remapped round-robin onto
+//! the surviving tiles, device state is reloaded from the last checkpoint
+//! ([`RESTORE_BASE_CYCLES`] plus [`RESTORE_CYCLES_PER_BYTE`] per snapshot
+//! byte), and every superstep between the checkpoint and the failure is
+//! re-executed on the remapped cluster.  Simulated time never rolls back;
+//! replayed supersteps and the restore penalty accumulate into
+//! `SimMetrics::{replayed_supersteps, recovery_cycles}`.
+//!
+//! Remap preserves results bit-exactly because the imputation planes
+//! reduce wave arrivals in canonical sender order (`imputation::wave`):
+//! dosages are a function of the graph, not of vertex placement.
+//!
+//! Tile death kills compute, not routing — a board with dead tiles still
+//! forwards NoC traffic through its switch.  The exception is a board whose
+//! tiles *all* die: it is assumed powered off for replacement, switch
+//! included, so schedules that would strand surviving boards behind it
+//! (possibly together with failed links) are rejected at validation time
+//! (`ScenarioSpec::validate_for`, error contains "disconnect").
+//!
+//! ## Loss-tolerant delivery: NACK/retransmit and duplicate suppression
+//!
+//! `drop=LINK:p@seed` / `dup=LINK:p@seed` attach an independent seeded
+//! Bernoulli stream to an inter-board link.  Every group crossing consults
+//! the streams of the links on its route (drop wins over duplicate):
+//!
+//! * **Dropped** crossings still occupy the links (the bits were sent) but
+//!   never reach the destination mailbox.  The barrier's sequence-number
+//!   audit detects the gap — every arrival carries a per-(sender,
+//!   superstep) sequence number — and NACKs the sender, which retransmits
+//!   at the next superstep's dispatch.  Retransmissions are **unicast**:
+//!   the NACK names the missing destinations, so the re-send goes
+//!   point-to-point and loses the multicast amortisation (and is charged
+//!   [`NACK_PENALTY_CYCLES`] of round-trip latency per copy).  Keying
+//!   retransmissions by destination *vertex* rather than multicast-group
+//!   index also keeps them valid across a tile-failure remap, which
+//!   rebuilds the group table.  A retransmission may itself be dropped;
+//!   it is retried until delivered (`p < 1` is enforced at validation).
+//! * **Duplicated** crossings deliver normally plus a spurious second copy
+//!   flagged [`crate::poets::event::FLAG_DUP`]; the destination mailbox
+//!   recognises the repeated sequence number and discards it after one
+//!   ingress slot of detection work ([`Mailbox::suppress_dup`]) — no
+//!   handler runs, so duplicates are timing-only noise.
+//!
+//! Because waves wait for *all* expected arrivals before reducing, a
+//! retransmission landing a superstep late is functionally invisible:
+//! dosages under any drop/dup schedule are bit-identical to the
+//! fault-free run (`tests/scenario_lab.rs` asserts this across thread
+//! counts and wave widths).
+//!
+//! [`Mailbox::suppress_dup`]: crate::poets::mailbox::Mailbox::suppress_dup
+
+use std::collections::HashSet;
+
+use crate::graph::device::{PortId, VertexId};
+use crate::util::rng::Rng;
+
+use super::noc::LinkId;
+use super::scenario::ScenarioSpec;
+use super::topology::ClusterConfig;
+
+/// Checkpoint cadence (supersteps) when the scenario does not set `ckpt=K`.
+pub const DEFAULT_CKPT_INTERVAL: u64 = 16;
+
+/// Fixed cycles to fault in a checkpoint and re-seat remapped threads
+/// (barrier extension while survivors re-synchronise).
+pub const RESTORE_BASE_CYCLES: u64 = 2_000;
+
+/// Cycles per snapshot byte reloaded from board DRAM at 210 MHz.
+pub const RESTORE_CYCLES_PER_BYTE: u64 = 1;
+
+/// Round-trip latency charged to each retransmitted copy: the barrier-time
+/// NACK travelling back to the sender plus protocol handling at both ends.
+pub const NACK_PENALTY_CYCLES: u64 = 360;
+
+/// Outcome of one inter-board group crossing under the loss models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrossingFate {
+    /// Delivered intact.
+    Deliver,
+    /// Lost in flight: the destination never sees it this superstep.
+    Drop,
+    /// Delivered, plus a spurious second copy the mailbox must suppress.
+    Dup,
+}
+
+/// One outstanding retransmission: `msg` still owed to `dests`, re-sent
+/// unicast by `src` at the next superstep's dispatch.  `port` records the
+/// original send's port for provenance — routing is per destination vertex.
+#[derive(Clone, Debug)]
+pub struct Retransmit<M> {
+    pub src: VertexId,
+    pub port: PortId,
+    pub msg: M,
+    pub dests: Vec<VertexId>,
+}
+
+/// A barrier-aligned recovery point: everything `Simulator::run` needs to
+/// re-enter the superstep loop at `step` — the sends pending at that
+/// barrier, retransmissions still owed, and each device's serialised state
+/// (`bytes[offsets[v]..offsets[v + 1]]` is vertex `v`'s snapshot).
+pub struct Checkpoint<M> {
+    pub step: u64,
+    pub pending: Vec<(VertexId, PortId, M)>,
+    pub retrans: Vec<Retransmit<M>>,
+    pub bytes: Vec<u8>,
+    pub offsets: Vec<u32>,
+}
+
+impl<M> Checkpoint<M> {
+    /// Device-state bytes captured (the `checkpoint_bytes` gauge).
+    pub fn state_bytes(&self) -> u64 {
+        self.bytes.len() as u64
+    }
+}
+
+/// Per-link Bernoulli loss streams (either side may be absent).
+#[derive(Clone, Debug)]
+struct LinkLoss {
+    drop: Option<(f64, Rng)>,
+    dup: Option<(f64, Rng)>,
+}
+
+/// The compiled fault schedule the simulator consults from serial code.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Checkpoint cadence in supersteps (≥ 1).
+    pub ckpt_interval: u64,
+    /// Tile failures as `(superstep, global tile index)`, ascending by
+    /// superstep; `next_failure` marks how many have already fired.
+    failures: Vec<(u64, usize)>,
+    next_failure: usize,
+    /// Per-link loss streams, indexed by `LinkId.0`; `None` ⇒ lossless.
+    loss: Vec<Option<LinkLoss>>,
+    any_loss: bool,
+    /// Tiles killed so far (global index) — excluded from remap targets.
+    dead: HashSet<usize>,
+}
+
+impl FaultPlan {
+    /// Compile `spec`'s fault schedule; `None` when it has no faults.
+    /// `spec` must already be validated for `cluster`.
+    pub fn build(spec: &ScenarioSpec, cluster: &ClusterConfig) -> Option<FaultPlan> {
+        if !spec.has_faults() {
+            return None;
+        }
+        let mut failures: Vec<(u64, usize)> = spec
+            .fail_tiles
+            .iter()
+            .map(|f| (f.step, f.board * cluster.tiles_per_board + f.tile))
+            .collect();
+        failures.sort_unstable();
+        let mut loss: Vec<Option<LinkLoss>> = vec![None; cluster.n_boards * 4];
+        let mut arm = |link: LinkId, p: f64, seed: u64, is_drop: bool| {
+            let slot = loss[link.0 as usize].get_or_insert(LinkLoss {
+                drop: None,
+                dup: None,
+            });
+            // Salt the stream with the link id so `drop=0E:p@7,drop=1E:p@7`
+            // draw independently even at equal seeds.
+            let rng = Rng::new(seed ^ (u64::from(link.0) << 32));
+            if is_drop {
+                slot.drop = Some((p, rng));
+            } else {
+                slot.dup = Some((p, rng));
+            }
+        };
+        for m in &spec.drop_links {
+            arm(LinkId::of(m.board, m.dir), m.p, m.seed, true);
+        }
+        for m in &spec.dup_links {
+            arm(LinkId::of(m.board, m.dir), m.p, m.seed, false);
+        }
+        let any_loss = loss.iter().any(|l| l.is_some());
+        Some(FaultPlan {
+            ckpt_interval: spec.ckpt_interval.unwrap_or(DEFAULT_CKPT_INTERVAL),
+            failures,
+            next_failure: 0,
+            loss,
+            any_loss,
+            dead: HashSet::new(),
+        })
+    }
+
+    /// Any drop/dup stream armed?  (Gates the per-crossing route lookup.)
+    pub fn has_loss(&self) -> bool {
+        self.any_loss
+    }
+
+    /// Un-fired tile failures remain ⇒ checkpoints are still worth taking.
+    pub fn failures_pending(&self) -> bool {
+        self.next_failure < self.failures.len()
+    }
+
+    /// Take a checkpoint at the top of `step`?  Barrier-aligned every
+    /// `ckpt_interval` supersteps while failures are still pending —
+    /// including the step a failure fires at, so replay distance is always
+    /// `fail_step % ckpt_interval` at most.
+    pub fn checkpoint_due(&self, step: u64) -> bool {
+        self.failures_pending() && step % self.ckpt_interval == 0
+    }
+
+    /// Global tile indices failing at `step` (marked fired).  Call after
+    /// [`FaultPlan::checkpoint_due`] is handled.
+    pub fn fire_failures(&mut self, step: u64) -> Vec<usize> {
+        let mut out = Vec::new();
+        while self.next_failure < self.failures.len() && self.failures[self.next_failure].0 == step
+        {
+            let tile = self.failures[self.next_failure].1;
+            self.next_failure += 1;
+            if self.dead.insert(tile) {
+                out.push(tile);
+            }
+        }
+        out
+    }
+
+    /// Tiles killed so far.
+    pub fn dead_tiles(&self) -> &HashSet<usize> {
+        &self.dead
+    }
+
+    /// Decide the fate of one crossing over `route`.  Consumes one draw
+    /// per armed stream per traversed link; a drop on any link loses the
+    /// whole crossing, otherwise a duplicate on any link forwards a
+    /// spurious copy the rest of the way.
+    pub fn crossing_fate(&mut self, route: &[LinkId]) -> CrossingFate {
+        let mut fate = CrossingFate::Deliver;
+        for l in route {
+            let Some(loss) = self.loss[l.0 as usize].as_mut() else {
+                continue;
+            };
+            if let Some((p, rng)) = loss.drop.as_mut() {
+                if rng.chance(*p) {
+                    return CrossingFate::Drop;
+                }
+            }
+            if fate == CrossingFate::Deliver {
+                if let Some((p, rng)) = loss.dup.as_mut() {
+                    if rng.chance(*p) {
+                        fate = CrossingFate::Dup;
+                    }
+                }
+            }
+        }
+        fate
+    }
+
+    /// Cycles charged to reload `bytes` of device state and re-seat the
+    /// remapped threads.
+    pub fn restore_cycles(bytes: u64) -> u64 {
+        RESTORE_BASE_CYCLES + bytes * RESTORE_CYCLES_PER_BYTE
+    }
+}
+
+/// Byte-oriented writer for [`crate::graph::device::Device::snapshot`]
+/// implementations: little-endian scalars, length-prefixed slices.
+pub struct SnapWriter<'a> {
+    out: &'a mut Vec<u8>,
+}
+
+impl<'a> SnapWriter<'a> {
+    pub fn new(out: &'a mut Vec<u8>) -> SnapWriter<'a> {
+        SnapWriter { out }
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.out.push(v as u8);
+    }
+
+    /// Length-prefixed f32 slice.
+    pub fn f32s(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+
+    /// Length-prefixed bool slice (one byte per flag).
+    pub fn bools(&mut self, vs: &[bool]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.bool(v);
+        }
+    }
+}
+
+/// Reader matching [`SnapWriter`]; panics on malformed input (checkpoint
+/// bytes are produced and consumed by the same device type in-process).
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(buf: &'a [u8]) -> SnapReader<'a> {
+        SnapReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        u32::from_le_bytes(self.take(4).try_into().unwrap())
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        u64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        f32::from_le_bytes(self.take(4).try_into().unwrap())
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.take(1)[0] != 0
+    }
+
+    pub fn f32s(&mut self) -> Vec<f32> {
+        let n = self.u32() as usize;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn bools(&mut self) -> Vec<bool> {
+        let n = self.u32() as usize;
+        (0..n).map(|_| self.bool()).collect()
+    }
+
+    /// Snapshot fully consumed?  Restore implementations assert this to
+    /// catch encode/decode drift.
+    pub fn exhausted(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poets::noc::Dir;
+
+    fn spec(s: &str) -> ScenarioSpec {
+        ScenarioSpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn faultless_spec_compiles_to_none() {
+        let s = spec("boards=2,tiles=4");
+        assert!(FaultPlan::build(&s, &s.cluster()).is_none());
+    }
+
+    #[test]
+    fn failures_fire_once_in_step_order() {
+        let s = spec("boards=2,tiles=4,failtile=1.2@40,failtile=0.1@8");
+        let c = s.cluster();
+        let mut fp = FaultPlan::build(&s, &c).unwrap();
+        assert!(fp.failures_pending());
+        assert!(fp.fire_failures(7).is_empty());
+        // Board 0 tile 1 = global tile 1.
+        assert_eq!(fp.fire_failures(8), vec![1]);
+        assert!(fp.fire_failures(8).is_empty(), "failures fire once");
+        assert!(fp.failures_pending());
+        // Board 1 tile 2 = global tile 4 + 2.
+        assert_eq!(fp.fire_failures(40), vec![c.tiles_per_board + 2]);
+        assert!(!fp.failures_pending());
+        assert_eq!(fp.dead_tiles().len(), 2);
+    }
+
+    #[test]
+    fn checkpoint_cadence_follows_pending_failures() {
+        let s = spec("boards=2,tiles=4,failtile=0.0@10,ckpt=4");
+        let mut fp = FaultPlan::build(&s, &s.cluster()).unwrap();
+        assert_eq!(fp.ckpt_interval, 4);
+        assert!(fp.checkpoint_due(0));
+        assert!(!fp.checkpoint_due(3));
+        assert!(fp.checkpoint_due(8));
+        fp.fire_failures(10);
+        assert!(!fp.checkpoint_due(12), "no checkpoints after the last failure fires");
+    }
+
+    #[test]
+    fn default_interval_applies_without_ckpt_key() {
+        let s = spec("boards=2,tiles=4,failtile=0.0@10");
+        let fp = FaultPlan::build(&s, &s.cluster()).unwrap();
+        assert_eq!(fp.ckpt_interval, DEFAULT_CKPT_INTERVAL);
+    }
+
+    #[test]
+    fn crossing_fates_are_deterministic_and_drop_wins() {
+        let s = spec("boards=2,tiles=4,drop=0E:0.5@7,dup=0E:0.5@7");
+        let c = s.cluster();
+        let route = [LinkId::of(0, Dir::East)];
+        let mut a = FaultPlan::build(&s, &c).unwrap();
+        let mut b = FaultPlan::build(&s, &c).unwrap();
+        assert!(a.has_loss());
+        let fates: Vec<CrossingFate> = (0..64).map(|_| a.crossing_fate(&route)).collect();
+        let again: Vec<CrossingFate> = (0..64).map(|_| b.crossing_fate(&route)).collect();
+        assert_eq!(fates, again, "fates are a pure function of the schedule");
+        assert!(fates.contains(&CrossingFate::Drop));
+        assert!(fates.contains(&CrossingFate::Deliver));
+        // A lossless route never consumes the streams.
+        let other = [LinkId::of(1, Dir::West)];
+        assert_eq!(a.crossing_fate(&other), CrossingFate::Deliver);
+    }
+
+    #[test]
+    fn equal_seeds_on_different_links_draw_independently() {
+        let s = spec("boards=4,tiles=4,drop=0E:0.5@7,drop=1E:0.5@7");
+        let mut fp = FaultPlan::build(&s, &s.cluster()).unwrap();
+        let a: Vec<CrossingFate> = (0..64)
+            .map(|_| fp.crossing_fate(&[LinkId::of(0, Dir::East)]))
+            .collect();
+        let b: Vec<CrossingFate> = (0..64)
+            .map(|_| fp.crossing_fate(&[LinkId::of(1, Dir::East)]))
+            .collect();
+        assert_ne!(a, b, "per-link streams must not be lockstep");
+    }
+
+    #[test]
+    fn snap_roundtrip() {
+        let mut bytes = Vec::new();
+        let mut w = SnapWriter::new(&mut bytes);
+        w.u32(7);
+        w.u64(1 << 40);
+        w.f32(2.5);
+        w.bool(true);
+        w.f32s(&[1.0, -2.0, 3.5]);
+        w.bools(&[true, false, true]);
+        let mut r = SnapReader::new(&bytes);
+        assert_eq!(r.u32(), 7);
+        assert_eq!(r.u64(), 1 << 40);
+        assert_eq!(r.f32(), 2.5);
+        assert!(r.bool());
+        assert_eq!(r.f32s(), vec![1.0, -2.0, 3.5]);
+        assert_eq!(r.bools(), vec![true, false, true]);
+        assert!(r.exhausted());
+    }
+
+    #[test]
+    fn restore_cost_scales_with_state() {
+        assert_eq!(FaultPlan::restore_cycles(0), RESTORE_BASE_CYCLES);
+        assert_eq!(
+            FaultPlan::restore_cycles(1024),
+            RESTORE_BASE_CYCLES + 1024 * RESTORE_CYCLES_PER_BYTE
+        );
+    }
+}

@@ -40,6 +40,16 @@ impl Mailbox {
         start + cost.mailbox_ingress
     }
 
+    /// Suppress a duplicate group arrival: the mailbox recognises the
+    /// repeated (sender, superstep) sequence number, serialises one
+    /// ingress-slot's worth of detection work for the whole group, and
+    /// discards it — no handler ready time, no copies accounted.
+    pub fn suppress_dup(&mut self, t: u64, cost: &CostModel) {
+        let start = t.max(self.free);
+        self.free = start + cost.mailbox_ingress;
+        self.busy += cost.mailbox_ingress;
+    }
+
     /// Queueing delay visible to an arrival at time `t`.
     pub fn backlog(&self, t: u64) -> u64 {
         self.free.saturating_sub(t)
@@ -155,6 +165,19 @@ mod tests {
         mb.advance_to(1000);
         let r = mb.ingest(0, 500, 1, &cost);
         assert_eq!(r, 1000 + cost.mailbox_ingress);
+    }
+
+    #[test]
+    fn dup_suppression_charges_detection_but_not_copies() {
+        let cost = CostModel::default();
+        let mut m = Mailbox::new();
+        m.suppress_dup(10, &cost);
+        assert_eq!(m.free_at(), 10 + cost.mailbox_ingress);
+        assert_eq!(m.busy_cycles(), cost.mailbox_ingress);
+        assert_eq!(m.copies(), 0, "suppressed duplicates must not count as ingested");
+        // A later real ingest queues behind the detection work.
+        let r = m.ingest(10, 1, &cost);
+        assert_eq!(r, 10 + 2 * cost.mailbox_ingress);
     }
 
     #[test]

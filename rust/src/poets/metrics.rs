@@ -54,6 +54,20 @@ pub struct SimMetrics {
     pub max_link_busy: u64,
     /// Crossings that diverted around a failed link (scenario runs).
     pub rerouted_sends: u64,
+    /// Tiles killed by a fault schedule and remapped onto survivors.
+    pub failed_tiles: u64,
+    /// Supersteps re-executed from the last checkpoint after tile deaths.
+    pub replayed_supersteps: u64,
+    /// Cycles charged to recovery: state restore plus the replayed steps.
+    pub recovery_cycles: u64,
+    /// Peak size of one barrier-aligned device-state checkpoint.
+    pub checkpoint_bytes: u64,
+    /// Event copies lost on lossy links (each is NACKed and retransmitted).
+    pub dropped_events: u64,
+    /// Barrier-time retransmissions of dropped events.
+    pub retransmits: u64,
+    /// Duplicate event copies suppressed at the destination mailbox.
+    pub dup_events: u64,
     /// Per-board copy-traffic split, indexed by *source* board:
     /// `[intra_tile, inter_tile, inter_board]`.
     pub board_traffic: Vec<[u64; 3]>,
@@ -126,6 +140,13 @@ impl SimMetrics {
         self.link_busy_total += other.link_busy_total;
         self.max_link_busy = self.max_link_busy.max(other.max_link_busy);
         self.rerouted_sends += other.rerouted_sends;
+        self.failed_tiles += other.failed_tiles;
+        self.replayed_supersteps += other.replayed_supersteps;
+        self.recovery_cycles += other.recovery_cycles;
+        self.checkpoint_bytes = self.checkpoint_bytes.max(other.checkpoint_bytes);
+        self.dropped_events += other.dropped_events;
+        self.retransmits += other.retransmits;
+        self.dup_events += other.dup_events;
         if self.board_traffic.len() < other.board_traffic.len() {
             self.board_traffic.resize(other.board_traffic.len(), [0; 3]);
         }
@@ -170,6 +191,13 @@ impl SimMetrics {
             .set("max_link_busy", self.max_link_busy)
             .set("max_link_utilisation", self.max_link_utilisation())
             .set("rerouted_sends", self.rerouted_sends)
+            .set("failed_tiles", self.failed_tiles)
+            .set("replayed_supersteps", self.replayed_supersteps)
+            .set("recovery_cycles", self.recovery_cycles)
+            .set("checkpoint_bytes", self.checkpoint_bytes)
+            .set("dropped_events", self.dropped_events)
+            .set("retransmits", self.retransmits)
+            .set("dup_events", self.dup_events)
             .set(
                 "board_traffic",
                 Json::Arr(
@@ -290,6 +318,60 @@ mod tests {
         assert_eq!(a.max_link_busy, 44);
         assert_eq!(a.rerouted_sends, 3);
         assert_eq!(a.board_traffic, vec![[11, 4, 5], [5, 5, 5]]);
+    }
+
+    #[test]
+    fn absorb_recovery_fields() {
+        let mut a = SimMetrics {
+            failed_tiles: 1,
+            replayed_supersteps: 4,
+            recovery_cycles: 900,
+            checkpoint_bytes: 2048,
+            dropped_events: 3,
+            retransmits: 3,
+            dup_events: 2,
+            ..Default::default()
+        };
+        let b = SimMetrics {
+            failed_tiles: 2,
+            replayed_supersteps: 6,
+            recovery_cycles: 100,
+            checkpoint_bytes: 1024,
+            dropped_events: 1,
+            retransmits: 1,
+            dup_events: 5,
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.failed_tiles, 3);
+        assert_eq!(a.replayed_supersteps, 10);
+        assert_eq!(a.recovery_cycles, 1000);
+        assert_eq!(a.checkpoint_bytes, 2048, "checkpoint size is a gauge");
+        assert_eq!(a.dropped_events, 4);
+        assert_eq!(a.retransmits, 4);
+        assert_eq!(a.dup_events, 7);
+    }
+
+    #[test]
+    fn json_has_recovery_telemetry() {
+        let m = SimMetrics {
+            failed_tiles: 1,
+            replayed_supersteps: 7,
+            recovery_cycles: 123,
+            checkpoint_bytes: 456,
+            dropped_events: 2,
+            retransmits: 2,
+            dup_events: 3,
+            ..Default::default()
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("failed_tiles"), Some(&Json::Int(1)));
+        assert_eq!(j.get("replayed_supersteps"), Some(&Json::Int(7)));
+        assert_eq!(j.get("recovery_cycles"), Some(&Json::Int(123)));
+        assert_eq!(j.get("checkpoint_bytes"), Some(&Json::Int(456)));
+        assert_eq!(j.get("dropped_events"), Some(&Json::Int(2)));
+        assert_eq!(j.get("retransmits"), Some(&Json::Int(2)));
+        assert_eq!(j.get("dup_events"), Some(&Json::Int(3)));
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! ([`costmodel`]), inter-board NoC ([`noc`]), tile mailboxes ([`mailbox`]),
 //! hardware multicast ([`multicast`]), termination detection
 //! ([`termination`]), the discrete-event core ([`desim`]), run metrics
-//! ([`metrics`]) and heterogeneous what-if cluster models ([`scenario`]).
+//! ([`metrics`]), heterogeneous what-if cluster models ([`scenario`]) and
+//! the fault-tolerance plane ([`fault`]: checkpoint/remap/replay plus
+//! loss-tolerant delivery).
 //!
 //! DESIGN.md §1 records why simulation preserves the paper's relative claims:
 //! every figure compares POETS wall-clock against x86 wall-clock, and the
@@ -17,6 +19,7 @@ pub mod capacity;
 pub mod costmodel;
 pub mod desim;
 pub mod event;
+pub mod fault;
 pub mod mailbox;
 pub mod metrics;
 pub mod multicast;

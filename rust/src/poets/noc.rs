@@ -242,6 +242,18 @@ impl Noc {
         now
     }
 
+    /// The route [`Noc::traverse_between`] would take (failure-aware when a
+    /// route table is present, dimension-ordered otherwise), without
+    /// charging anything.  The fault plane consults this to evaluate
+    /// per-link loss models before a crossing is committed.
+    pub fn route_between(&self, cluster: &ClusterConfig, from: usize, to: usize) -> Vec<LinkId> {
+        if self.routes.is_empty() {
+            Self::board_route(cluster, from, to)
+        } else {
+            self.routes[from * cluster.n_boards + to].clone()
+        }
+    }
+
     /// Number of directional inter-board links modelled.
     pub fn n_links(&self) -> usize {
         self.link_free.len()

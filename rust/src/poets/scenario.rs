@@ -24,6 +24,18 @@
 //! `bw` is a bandwidth *scale* (0.25 ⇒ quarter bandwidth ⇒ 4× the
 //! serialisation cycles); `lat` is a latency multiplier.  Links are named
 //! `<board><dir>` with dir ∈ E/W/N/S, e.g. `3E` = board 3's eastbound link.
+//!
+//! On top of the link plane, a spec can carry a *deterministic fault
+//! schedule* consumed by the recovery plane ([`super::fault`]):
+//!
+//! * `failtile=B.T@STEP` — tile T of board B dies at the start of superstep
+//!   STEP; its vertices are remapped onto surviving tiles and the run
+//!   replays from the last barrier-aligned checkpoint.
+//! * `drop=LINK:p@seed` / `dup=LINK:p@seed` — every crossing of the named
+//!   inter-board link is dropped (resp. duplicated) with probability `p`,
+//!   drawn from a deterministic per-link RNG stream seeded by `seed`.
+//! * `ckpt=K` — checkpoint device state every K supersteps (default
+//!   [`super::fault::DEFAULT_CKPT_INTERVAL`]).
 
 use crate::util::json::Json;
 
@@ -47,6 +59,42 @@ pub struct LinkMod {
     pub lat_mult: f64,
 }
 
+/// One scheduled tile death: `failtile=B.T@STEP`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileFailure {
+    pub board: usize,
+    /// Tile index within the board.
+    pub tile: usize,
+    /// Superstep at whose start the tile dies.
+    pub step: u64,
+}
+
+impl TileFailure {
+    /// The grammar spelling, `B.T@STEP`.
+    pub fn name(&self) -> String {
+        format!("{}.{}@{}", self.board, self.tile, self.step)
+    }
+}
+
+/// A lossy-link model: each crossing of the link is dropped or duplicated
+/// with probability `p`, decided by a deterministic RNG stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LossMod {
+    pub board: usize,
+    pub dir: Dir,
+    /// Per-crossing loss/duplication probability, in `[0, 1)`.
+    pub p: f64,
+    /// Seed of the per-link decision stream.
+    pub seed: u64,
+}
+
+impl LossMod {
+    /// The grammar spelling, `<link>:p@seed`.
+    pub fn name(&self) -> String {
+        format!("{}:{}@{}", LinkId::of(self.board, self.dir).name(), self.p, self.seed)
+    }
+}
+
 /// A heterogeneous-cluster scenario: shape + link plane overlay.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScenarioSpec {
@@ -66,6 +114,14 @@ pub struct ScenarioSpec {
     pub failed: Vec<(usize, Dir)>,
     /// Extra cycles per rerouted crossing.
     pub reroute_penalty: u64,
+    /// Scheduled tile deaths (remap-and-replay; see [`super::fault`]).
+    pub fail_tiles: Vec<TileFailure>,
+    /// Links that drop crossings with probability p.
+    pub drop_links: Vec<LossMod>,
+    /// Links that duplicate crossings with probability p.
+    pub dup_links: Vec<LossMod>,
+    /// Checkpoint interval in supersteps (`None` = the fault plane default).
+    pub ckpt_interval: Option<u64>,
 }
 
 impl ScenarioSpec {
@@ -82,7 +138,17 @@ impl ScenarioSpec {
             links: Vec::new(),
             failed: Vec::new(),
             reroute_penalty: DEFAULT_REROUTE_PENALTY,
+            fail_tiles: Vec::new(),
+            drop_links: Vec::new(),
+            dup_links: Vec::new(),
+            ckpt_interval: None,
         }
+    }
+
+    /// Whether this spec schedules any faults (tile deaths or lossy links)
+    /// that the recovery plane must handle.
+    pub fn has_faults(&self) -> bool {
+        !self.fail_tiles.is_empty() || !self.drop_links.is_empty() || !self.dup_links.is_empty()
     }
 
     /// The `ClusterConfig` this scenario describes.
@@ -157,6 +223,109 @@ impl ScenarioSpec {
             // Connectivity: every board pair must keep a surviving route.
             routes_avoiding(cluster, &self.failed_flags(cluster))?;
         }
+        let mut killed = std::collections::HashSet::new();
+        for f in &self.fail_tiles {
+            if f.board >= cluster.n_boards || f.tile >= cluster.tiles_per_board {
+                return Err(format!(
+                    "scenario {}: failtile {} out of range ({} boards x {} tiles)",
+                    self.name,
+                    f.name(),
+                    cluster.n_boards,
+                    cluster.tiles_per_board
+                ));
+            }
+            if !killed.insert((f.board, f.tile)) {
+                return Err(format!(
+                    "scenario {}: tile {}.{} scheduled to fail twice",
+                    self.name, f.board, f.tile
+                ));
+            }
+        }
+        if !self.fail_tiles.is_empty() && self.fail_tiles.len() >= cluster.total_tiles() {
+            return Err(format!(
+                "scenario {}: fault schedule kills every tile — nothing left to remap onto",
+                self.name
+            ));
+        }
+        // A board whose tiles are ALL scheduled to die is assumed powered
+        // off for replacement — its NoC switch goes with it.  Together with
+        // failed links that can strand surviving boards; reject such
+        // schedules up front (the simulator could never route the remapped
+        // vertices' traffic).
+        let mut killed_per_board = vec![0usize; cluster.n_boards];
+        for &(b, _) in killed.iter() {
+            killed_per_board[b] += 1;
+        }
+        let dead_board: Vec<bool> = killed_per_board
+            .iter()
+            .map(|&k| k >= cluster.tiles_per_board)
+            .collect();
+        if dead_board.iter().any(|&d| d) {
+            let failed = self.failed_flags(cluster);
+            let (cols, rows) = cluster.board_grid;
+            let n = cluster.n_boards;
+            let mut seen = vec![false; n];
+            if let Some(start) = (0..n).find(|&b| !dead_board[b]) {
+                let mut queue = std::collections::VecDeque::new();
+                seen[start] = true;
+                queue.push_back(start);
+                while let Some(b) = queue.pop_front() {
+                    let (x, y) = cluster.board_xy(b);
+                    for dir in Dir::ALL {
+                        let next = match dir {
+                            Dir::East if x + 1 < cols => b + 1,
+                            Dir::West if x > 0 => b - 1,
+                            Dir::North if y > 0 => b - cols,
+                            Dir::South if y + 1 < rows => b + cols,
+                            _ => continue,
+                        };
+                        if next >= n || seen[next] || dead_board[next] {
+                            continue;
+                        }
+                        if failed
+                            .get(LinkId::of(b, dir).0 as usize)
+                            .copied()
+                            .unwrap_or(false)
+                        {
+                            continue;
+                        }
+                        seen[next] = true;
+                        queue.push_back(next);
+                    }
+                }
+            }
+            for b in 0..n {
+                if !dead_board[b] && !seen[b] {
+                    return Err(format!(
+                        "scenario {}: tile failures power off boards that disconnect \
+                         surviving board {b} from the rest of the cluster",
+                        self.name
+                    ));
+                }
+            }
+        }
+        for (what, ls) in [("drop", &self.drop_links), ("dup", &self.dup_links)] {
+            for l in ls {
+                if l.board >= cluster.n_boards {
+                    return Err(format!(
+                        "scenario {}: {what} link board {} out of range (boards={})",
+                        self.name, l.board, cluster.n_boards
+                    ));
+                }
+                if !(l.p.is_finite() && (0.0..1.0).contains(&l.p)) {
+                    return Err(format!(
+                        "scenario {}: {what} probability {} must be in [0, 1)",
+                        self.name, l.p
+                    ));
+                }
+            }
+        }
+        if self.ckpt_interval == Some(0) {
+            return Err(format!(
+                "scenario {}: ckpt interval must be >= 1 superstep",
+                self.name
+            ));
+        }
         Ok(())
     }
 
@@ -213,6 +382,7 @@ impl ScenarioSpec {
             || self.lat_mult != 1.0
             || !self.links.is_empty()
             || !self.failed.is_empty()
+            || self.has_faults()
     }
 
     /// Parse either the compact grammar or (leading `{`) the JSON form.
@@ -245,6 +415,10 @@ impl ScenarioSpec {
                 "reroute" => spec.reroute_penalty = parse_num(val, "reroute")?,
                 "fail" => spec.failed.push(parse_link_name(val)?),
                 "link" => spec.links.push(parse_link_mod(val)?),
+                "failtile" => spec.fail_tiles.push(parse_tile_failure(val)?),
+                "drop" => spec.drop_links.push(parse_loss_mod(val, "drop")?),
+                "dup" => spec.dup_links.push(parse_loss_mod(val, "dup")?),
+                "ckpt" => spec.ckpt_interval = Some(parse_num(val, "ckpt")? as u64),
                 other => return Err(format!("unknown scenario field {other:?}")),
             }
         }
@@ -297,6 +471,34 @@ impl ScenarioSpec {
                 });
             }
         }
+        // Fault-schedule arrays carry compact-grammar strings, so the JSON
+        // echo round-trips through the same parsers.
+        if let Some(xs) = j.get("fail_tiles").and_then(Json::as_arr) {
+            for x in xs {
+                let s = x.as_str().ok_or_else(|| {
+                    "scenario JSON: fail_tiles[] entries are B.T@STEP strings".to_string()
+                })?;
+                spec.fail_tiles.push(parse_tile_failure(s)?);
+            }
+        }
+        for (key, what) in [("drop", "drop"), ("dup", "dup")] {
+            if let Some(xs) = j.get(key).and_then(Json::as_arr) {
+                for x in xs {
+                    let s = x.as_str().ok_or_else(|| {
+                        format!("scenario JSON: {key}[] entries are LINK:p@seed strings")
+                    })?;
+                    let m = parse_loss_mod(s, what)?;
+                    if key == "drop" {
+                        spec.drop_links.push(m);
+                    } else {
+                        spec.dup_links.push(m);
+                    }
+                }
+            }
+        }
+        if let Some(n) = j.get("ckpt_interval").and_then(Json::as_i64) {
+            spec.ckpt_interval = Some(n.max(0) as u64);
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -334,6 +536,27 @@ impl ScenarioSpec {
             ),
         );
         j.set("reroute_penalty", self.reroute_penalty);
+        if !self.fail_tiles.is_empty() {
+            j.set(
+                "fail_tiles",
+                Json::Arr(self.fail_tiles.iter().map(|f| Json::from(f.name())).collect()),
+            );
+        }
+        if !self.drop_links.is_empty() {
+            j.set(
+                "drop",
+                Json::Arr(self.drop_links.iter().map(|l| Json::from(l.name())).collect()),
+            );
+        }
+        if !self.dup_links.is_empty() {
+            j.set(
+                "dup",
+                Json::Arr(self.dup_links.iter().map(|l| Json::from(l.name())).collect()),
+            );
+        }
+        if let Some(k) = self.ckpt_interval {
+            j.set("ckpt_interval", k);
+        }
         j
     }
 }
@@ -363,6 +586,40 @@ fn parse_link_name(s: &str) -> Result<(usize, Dir), String> {
         .parse::<usize>()
         .map_err(|_| format!("link {s:?}: expected <board><dir>, e.g. 3E"))?;
     Ok((board, dir))
+}
+
+/// `0.1@40` → tile 1 of board 0 dies at superstep 40.
+fn parse_tile_failure(s: &str) -> Result<TileFailure, String> {
+    let s = s.trim();
+    let (tile_part, step_part) = s
+        .split_once('@')
+        .ok_or_else(|| format!("failtile {s:?}: expected B.T@STEP, e.g. 0.1@40"))?;
+    let (board, tile) = tile_part
+        .split_once('.')
+        .ok_or_else(|| format!("failtile {s:?}: tile must be B.T, e.g. 0.1"))?;
+    Ok(TileFailure {
+        board: parse_num(board, "failtile board")?,
+        tile: parse_num(tile, "failtile tile")?,
+        step: parse_num(step_part, "failtile step")? as u64,
+    })
+}
+
+/// `0E:0.01@7` → drop/dup 1 % of board 0's eastbound crossings, seed 7.
+fn parse_loss_mod(s: &str, what: &str) -> Result<LossMod, String> {
+    let s = s.trim();
+    let (link_part, rest) = s
+        .split_once(':')
+        .ok_or_else(|| format!("{what} {s:?}: expected LINK:p@seed, e.g. 0E:0.01@7"))?;
+    let (board, dir) = parse_link_name(link_part)?;
+    let (p_part, seed_part) = rest
+        .split_once('@')
+        .ok_or_else(|| format!("{what} {s:?}: expected p@seed after the link name"))?;
+    Ok(LossMod {
+        board,
+        dir,
+        p: parse_f64(p_part, &format!("{what} probability"))?,
+        seed: parse_num(seed_part, &format!("{what} seed"))? as u64,
+    })
 }
 
 /// `3E:bw=0.5:lat=2` → per-link override.
@@ -471,5 +728,61 @@ mod tests {
         assert!(!ScenarioSpec::baseline(8).is_degraded());
         assert!(ScenarioSpec::parse("boards=8,bw=0.5").unwrap().is_degraded());
         assert!(ScenarioSpec::parse("boards=8,fail=0E").unwrap().is_degraded());
+        assert!(ScenarioSpec::parse("boards=8,failtile=0.1@40").unwrap().is_degraded());
+    }
+
+    #[test]
+    fn fault_grammar_roundtrip() {
+        let s = ScenarioSpec::parse(
+            "name=faulty,boards=8,tiles=4,failtile=0.1@40,failtile=3.0@12,drop=0E:0.01@7,dup=1W:0.05@9,ckpt=8",
+        )
+        .unwrap();
+        assert_eq!(
+            s.fail_tiles,
+            vec![
+                TileFailure { board: 0, tile: 1, step: 40 },
+                TileFailure { board: 3, tile: 0, step: 12 },
+            ]
+        );
+        assert_eq!(s.drop_links.len(), 1);
+        assert_eq!((s.drop_links[0].board, s.drop_links[0].dir), (0, Dir::East));
+        assert_eq!(s.drop_links[0].p, 0.01);
+        assert_eq!(s.drop_links[0].seed, 7);
+        assert_eq!(s.dup_links.len(), 1);
+        assert_eq!(s.dup_links[0].seed, 9);
+        assert_eq!(s.ckpt_interval, Some(8));
+        assert!(s.has_faults());
+        // JSON echo parses back to the same spec.
+        let back = ScenarioSpec::parse(&s.to_json().render()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn rejects_bad_fault_schedules() {
+        for bad in [
+            "boards=8,failtile=9.0@5",        // board out of range
+            "boards=8,tiles=2,failtile=0.2@5", // tile out of range
+            "boards=8,failtile=0.1@5,failtile=0.1@9", // same tile twice
+            "boards=8,failtile=40",            // missing B.T
+            "boards=8,drop=0E:1.5@7",          // p >= 1
+            "boards=8,drop=0E:0.5",            // missing seed
+            "boards=8,dup=0X:0.5@7",           // bad direction
+            "boards=8,ckpt=0",                 // zero interval
+        ] {
+            assert!(ScenarioSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_schedules_that_strand_survivors() {
+        // 3 boards on a (3, 1) grid: powering off the middle board (both of
+        // its tiles die) disconnects board 0 from board 2.
+        let err = ScenarioSpec::parse("boards=3,tiles=2,failtile=1.0@5,failtile=1.1@5")
+            .expect_err("stranding schedule must be rejected");
+        assert!(err.contains("disconnect"), "unexpected error: {err}");
+        // Powering off an END board keeps the survivors connected.
+        assert!(ScenarioSpec::parse("boards=3,tiles=2,failtile=2.0@5,failtile=2.1@5").is_ok());
+        // A partially-dead middle board still routes.
+        assert!(ScenarioSpec::parse("boards=3,tiles=2,failtile=1.0@5").is_ok());
     }
 }

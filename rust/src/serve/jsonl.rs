@@ -373,6 +373,13 @@ pub(crate) fn stats_json(id: i64, service: &ShardedService, draining: bool) -> J
             .set("cache_hits", s.cache_hits)
             .set("cache_misses", s.cache_misses)
             .set("cache_evictions", s.cache_evictions)
+            // Fault plane: fresh-engine retries, runs that recovered from
+            // scheduled tile deaths, and whether the last event run on any
+            // shard was still recovering (admission stretches estimates).
+            .set("retried", s.retried)
+            .set("recovered_runs", s.recovered_runs)
+            .set("recovery_cycles", s.recovery_cycles)
+            .set("degraded", s.degraded)
             // Log2-µs buckets: index i counts values in [2^i, 2^(i+1)) µs
             // (see crate::obs::bucket_bounds), saturating at the last.
             .set("queue_wait_hist", hist(&s.queue_wait_hist))
@@ -761,12 +768,19 @@ mod tests {
             let total: i64 = h.iter().map(|b| b.as_i64().unwrap()).sum();
             assert_eq!(total, 1, "{key} counts the one served request");
         }
+        // A clean run never marks the service degraded, but the recovery
+        // keys are always present in the schema (both transports share this
+        // assembler).
+        assert_eq!(totals.get("retried").unwrap().as_i64(), Some(0));
+        assert_eq!(totals.get("recovered_runs").unwrap().as_i64(), Some(0));
+        assert_eq!(totals.get("degraded").unwrap().as_bool(), Some(false));
         let per_shard = stats.get("per_shard").unwrap().as_arr().unwrap();
         assert_eq!(per_shard.len(), 2);
         for s in per_shard {
             assert!(s.get("queue_depth").unwrap().as_i64().is_some());
             assert!(s.get("merged_waves").unwrap().as_i64().is_some());
             assert!(s.get("cache_hits").unwrap().as_i64().is_some());
+            assert!(s.get("degraded").unwrap().as_bool().is_some());
         }
         assert!(stats.get("draining").is_none());
     }

@@ -112,7 +112,9 @@ use crate::graph::mapping::MappingStrategy;
 use crate::imputation::app::RawAppConfig;
 use crate::model::panel::TargetHaplotype;
 use crate::poets::topology::ClusterConfig;
-use crate::session::{Engine, EngineSpec, ImputeReport, TargetBatch, Workload, build_engine};
+use crate::session::{
+    Engine, EngineOutput, EngineSpec, ImputeReport, TargetBatch, Workload, build_engine,
+};
 
 use queue::{Pending, QueueState};
 
@@ -200,6 +202,16 @@ impl ServeConfig {
     /// engine run (orthogonal to the service worker pool).
     pub fn threads(mut self, n: usize) -> Self {
         self.app.sim.threads = Some(n.max(1));
+        self
+    }
+
+    /// Serve against a full [`ScenarioSpec`](crate::poets::scenario): the
+    /// cluster shape comes from the spec, and its fault schedule (tile
+    /// failures, lossy links) rides along into every event-plane run.
+    /// Recovery telemetry feeds the degraded-service admission path.
+    pub fn scenario(mut self, spec: crate::poets::scenario::ScenarioSpec) -> Self {
+        self.app.cluster = spec.cluster();
+        self.app.scenario = Some(spec);
         self
     }
 }
@@ -728,9 +740,18 @@ fn run_group(shared: &Shared, engines: &mut EngineCache, group: Group, worker: u
                                 &mut p,
                                 &targets,
                                 &ctx,
+                                &mut had_error,
                             )
                         } else {
-                            serve_one(shared, engine.as_mut(), &panel, &mut p, &targets, &ctx)
+                            serve_one(
+                                shared,
+                                engine.as_mut(),
+                                &panel,
+                                &mut p,
+                                &targets,
+                                &ctx,
+                                &mut had_error,
+                            )
                         };
                         had_error |= result.is_err();
                         finish(shared, p, result);
@@ -757,8 +778,10 @@ struct RequestCtx {
 /// Run a multi-request event-plane group as ONE wave: concatenate every
 /// member's targets into a single [`TargetBatch`] (one lane-group sweep of
 /// the panel), then scatter the dosage rows back per request.  Returns
-/// whether anything failed.  The shared sweep's timings/metrics are
-/// reported on every member (one sweep served them all).
+/// whether the caller's cached engine must be evicted (it failed or was
+/// retried on a fresh engine and can no longer be trusted).  The shared
+/// sweep's timings/metrics are reported on every member (one sweep served
+/// them all).
 #[allow(clippy::too_many_arguments)]
 fn run_merged_wave(
     shared: &Shared,
@@ -782,9 +805,23 @@ fn run_merged_wave(
     }
     let total = all.len();
     let t0 = Instant::now();
-    let out = guard("run", || engine.run(&TargetBatch::new(&all)));
-    let host_seconds = t0.elapsed().as_secs_f64();
-    let out = match out {
+    let mut attempt = guard("run", || engine.run(&TargetBatch::new(&all)));
+    let mut host_seconds = t0.elapsed().as_secs_f64();
+    let mut retried = false;
+    if let Err(first) = &attempt {
+        // One retry on a freshly built engine (satellite of the fault plane):
+        // the cached engine may have been left mid-sweep by the panic, so the
+        // caller evicts it whether or not the retry lands.
+        let first = first.clone();
+        retried = true;
+        shared.state.lock().expect(POISONED).stats.retried += 1;
+        let spec = members[0].0.req.engine;
+        let t1 = Instant::now();
+        attempt = retry_on_fresh_engine(shared, panel, spec, &all)
+            .map_err(|e| format!("{first}; retry on a fresh engine failed: {e}"));
+        host_seconds = t1.elapsed().as_secs_f64();
+    }
+    let out = match attempt {
         Ok(o) if o.dosages.len() == total => o,
         Ok(o) => {
             let e = format!(
@@ -808,6 +845,7 @@ fn run_merged_wave(
         st.stats.merged_waves += 1;
         st.note_service_time(host_seconds / width.max(1) as f64);
     }
+    note_recovery(shared, out.metrics.as_ref());
     let mut rows = out.dosages.into_iter();
     for (mut p, n) in members {
         let us = p.age_us();
@@ -835,12 +873,13 @@ fn run_merged_wave(
         );
         finish(shared, p, Ok(report));
     }
-    false
+    retried
 }
 
 /// Prepare the engine on this request's own workload, then serve it — the
 /// path for engines whose `prepare` validates targets; identical to what a
 /// solo `ImputeSession` run does.
+#[allow(clippy::too_many_arguments)]
 fn prepare_and_serve(
     shared: &Shared,
     engine: &mut dyn Engine,
@@ -848,6 +887,7 @@ fn prepare_and_serve(
     p: &mut Pending,
     targets: &[TargetHaplotype],
     ctx: &RequestCtx,
+    evict: &mut bool,
 ) -> Result<ServeReport, String> {
     let wl = Workload::from_shared(panel.panel_arc(), targets.to_vec())?;
     guard("prepare", || engine.prepare(&wl))?;
@@ -855,10 +895,15 @@ fn prepare_and_serve(
     if let Some(s) = p.span.as_mut() {
         s.mark_prepared(us);
     }
-    serve_one(shared, engine, panel, p, targets, ctx)
+    serve_one(shared, engine, panel, p, targets, ctx, evict)
 }
 
-/// Run one member request as its own batch and assemble its report.
+/// Run one member request as its own batch and assemble its report.  A run
+/// that fails (panics included) is retried ONCE on a freshly built engine —
+/// transient faults (a poisoned cached engine, a recoverable simulator
+/// wobble) answer in-band instead of erroring; `evict` is raised either way
+/// so the suspect cached engine is rebuilt before its next group.
+#[allow(clippy::too_many_arguments)]
 fn serve_one(
     shared: &Shared,
     engine: &mut dyn Engine,
@@ -866,16 +911,28 @@ fn serve_one(
     p: &mut Pending,
     targets: &[TargetHaplotype],
     ctx: &RequestCtx,
+    evict: &mut bool,
 ) -> Result<ServeReport, String> {
     let n_targets = targets.len();
     let t0 = Instant::now();
-    let out = guard("run", || engine.run(&TargetBatch::new(targets)))?;
-    let host_seconds = t0.elapsed().as_secs_f64();
+    let mut attempt = guard("run", || engine.run(&TargetBatch::new(targets)));
+    let mut host_seconds = t0.elapsed().as_secs_f64();
+    if let Err(first) = &attempt {
+        let first = first.clone();
+        *evict = true;
+        shared.state.lock().expect(POISONED).stats.retried += 1;
+        let t1 = Instant::now();
+        attempt = retry_on_fresh_engine(shared, panel, p.req.engine, targets)
+            .map_err(|e| format!("{first}; retry on a fresh engine failed: {e}"));
+        host_seconds = t1.elapsed().as_secs_f64();
+    }
+    let out = attempt?;
     let us = p.age_us();
     if let Some(s) = p.span.as_mut() {
         s.mark_run(us);
     }
     note_service_time(shared, host_seconds, 1);
+    note_recovery(shared, out.metrics.as_ref());
     if out.dosages.len() != n_targets {
         return Err(format!(
             "{} engine returned {} dosage rows for a {}-target request",
@@ -997,6 +1054,7 @@ fn run_streamed(
         reports.push(report);
     }
     let mut merged = crate::genomics::window::stitch_reports(&full, &plan, reports)?;
+    note_recovery(shared, merged.metrics.as_ref());
     merged.panel = Some(panel.name().to_string());
     merged.provenance = panel.recipe().copied();
     Ok(ServeReport {
@@ -1009,6 +1067,38 @@ fn run_streamed(
         report: merged,
         span: None,
     })
+}
+
+/// Rebuild the engine from scratch and rerun the request — the single
+/// retry behind [`serve_one`]/[`run_merged_wave`].  The fresh engine is
+/// prepared on the request's own workload (correct for both target-
+/// independent and target-inspecting prepares) and dropped afterwards; the
+/// caller evicts the suspect cached engine separately.
+fn retry_on_fresh_engine(
+    shared: &Shared,
+    panel: &RegisteredPanel,
+    spec: EngineSpec,
+    targets: &[TargetHaplotype],
+) -> Result<EngineOutput, String> {
+    let mut fresh = build_engine(spec, &shared.cfg.app, shared.cfg.mapping);
+    let wl = Workload::from_shared(panel.panel_arc(), targets.to_vec())?;
+    guard("prepare", || fresh.prepare(&wl))?;
+    guard("run", || fresh.run(&TargetBatch::new(targets)))
+}
+
+/// Fold one successful run's recovery telemetry into the admission state:
+/// an event-plane run that failed tiles (or replayed supersteps) marks the
+/// service **degraded** — `estimated_wait_seconds` stretches by
+/// [`queue::DEGRADED_WAIT_FACTOR`] until a clean event run clears the flag.
+/// Engines without simulator metrics never touch the flag.
+fn note_recovery(shared: &Shared, metrics: Option<&crate::poets::metrics::SimMetrics>) {
+    if let Some(m) = metrics {
+        shared
+            .state
+            .lock()
+            .expect(POISONED)
+            .note_recovery(m.recovery_cycles, m.failed_tiles);
+    }
 }
 
 /// Feed one engine run's wall time back into the admission-side service-time
@@ -1323,6 +1413,64 @@ mod tests {
         let ok = svc.submit_wait(request(&svc, EngineSpec::Baseline, 1, 4));
         assert!(ok.is_ok(), "{ok:?}");
         svc.shutdown();
+    }
+
+    #[test]
+    fn failed_run_is_retried_once_before_failing_in_band() {
+        // A deterministically panicking request (mapping capacity assert)
+        // fails its first run AND its fresh-engine retry: the error must
+        // report both attempts, `retried` must count exactly one retry, and
+        // the worker must keep serving afterwards.
+        let svc = service(ServeConfig::default().workers(1).states_per_thread(1));
+        let big = "synth:hap=64,mark=512,seed=3";
+        let panel = svc.registry().resolve(big).unwrap();
+        let err = svc
+            .submit_wait(ImputeRequest::new(
+                big,
+                EngineSpec::Event,
+                panel.synthetic_targets(1, 0).unwrap(),
+            ))
+            .unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("retry on a fresh engine failed"), "{err}");
+        let ok = svc.submit_wait(request(&svc, EngineSpec::Baseline, 1, 4));
+        assert!(ok.is_ok(), "{ok:?}");
+        let stats = svc.shutdown();
+        assert_eq!(stats.retried, 1, "exactly one fresh-engine retry");
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn recovered_runs_mark_the_service_degraded() {
+        // Serve under a fault scenario that kills one tile mid-run: the
+        // request still answers (remap-and-replay inside the engine), its
+        // report carries the recovery telemetry, and the service marks
+        // itself degraded so admission stretches wait estimates.
+        let spec = crate::poets::scenario::ScenarioSpec::parse(
+            "name=faulty,boards=2,tiles=2,cores=1,threads=2,failtile=0.1@5,ckpt=2",
+        )
+        .unwrap();
+        let svc = service(
+            ServeConfig::default()
+                .workers(1)
+                .states_per_thread(32)
+                .scenario(spec),
+        );
+        let report = svc
+            .submit_wait(request(&svc, EngineSpec::Event, 2, 9))
+            .unwrap();
+        let m = report.report.metrics.as_ref().expect("event runs report metrics");
+        assert_eq!(m.failed_tiles, 1, "the scheduled tile death happened");
+        assert!(m.recovery_cycles > 0, "recovery was charged");
+        let stats = svc.stats();
+        assert!(stats.degraded, "recovering service must report degraded");
+        assert_eq!(stats.recovered_runs, 1);
+        assert!(stats.recovery_cycles > 0);
+        assert_eq!(stats.retried, 0, "in-engine recovery is not a serve retry");
+        let final_stats = svc.shutdown();
+        assert_eq!(final_stats.failed, 0, "faulted run still answered in-band");
+        assert_eq!(final_stats.completed, 1);
     }
 
     #[test]

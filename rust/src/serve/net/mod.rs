@@ -48,10 +48,11 @@
 
 pub mod frame;
 
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Duration;
 
@@ -247,6 +248,234 @@ fn write_conn(stream: TcpStream, rx: mpsc::Receiver<ConnItem>) -> StreamSummary 
 fn emit(w: &mut BufWriter<TcpStream>, json: &Json) -> io::Result<()> {
     frame::write_frame(w, json.render().as_bytes())?;
     w.flush()
+}
+
+/// Reconnect schedule for [`bridge_jsonl`]: up to [`RECONNECT_ATTEMPTS`]
+/// consecutive failed connects, sleeping `RECONNECT_BASE_MS << (attempt-1)`
+/// milliseconds between them, capped at [`RECONNECT_CAP_MS`].
+pub const RECONNECT_ATTEMPTS: u32 = 5;
+pub const RECONNECT_BASE_MS: u64 = 100;
+pub const RECONNECT_CAP_MS: u64 = 1_600;
+
+/// What one [`bridge_jsonl`] session did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BridgeSummary {
+    /// Response documents written to the output (streamed parts included).
+    pub responses: u64,
+    /// Connections re-established after the first one died.
+    pub reconnects: u64,
+}
+
+/// Book-keeping shared between the bridge's input pump and its per-
+/// connection uplink threads.
+#[derive(Default)]
+struct BridgeState {
+    /// Input lines not yet written to the live connection.
+    queue: VecDeque<(Option<i64>, String)>,
+    /// Sent requests still awaiting a *terminal* response, by id (streamed
+    /// parts don't settle a request; its manifest does).
+    unanswered: BTreeMap<i64, String>,
+    /// The input side reached EOF (no more lines will arrive).
+    input_eof: bool,
+    /// Bumped per (re)connection; a stale uplink sees the mismatch and exits.
+    generation: u64,
+    /// A failed input read, reported after the in-flight work drains.
+    pump_err: Option<String>,
+}
+
+/// The fault-tolerant `serve --connect` bridge: JSONL lines from `input`
+/// become request frames on a TCP connection to `addr`; response frames
+/// become output lines.  When the connection dies mid-stream the bridge
+/// reconnects under the capped exponential backoff above and resubmits
+/// **only the unanswered requests** (tracked by their `"id"`, in id order)
+/// — requests whose terminal response was already delivered are never
+/// re-executed.  Delivery is therefore at-least-once across outages: a
+/// request the server finished but whose response died on the wire runs
+/// again.  Lines without a parsable `"id"` cannot be matched to responses
+/// and are sent exactly once.  The initial connect still fails fast — the
+/// backoff only covers connections that were lost after being established.
+pub fn bridge_jsonl<R>(input: R, out: &mut dyn Write, addr: &str) -> Result<BridgeSummary, String>
+where
+    R: io::BufRead + Send + 'static,
+{
+    let shared = Arc::new((Mutex::new(BridgeState::default()), Condvar::new()));
+    let pump = {
+        let shared = Arc::clone(&shared);
+        thread::spawn(move || {
+            let (lock, cv) = &*shared;
+            for line in input.lines() {
+                match line {
+                    Ok(l) => {
+                        if l.trim().is_empty() {
+                            continue;
+                        }
+                        let id = Json::parse(&l)
+                            .ok()
+                            .and_then(|j| j.get("id").and_then(Json::as_i64));
+                        let mut st = lock.lock().unwrap();
+                        st.queue.push_back((id, l));
+                        cv.notify_all();
+                    }
+                    Err(e) => {
+                        lock.lock().unwrap().pump_err = Some(format!("bridge: input: {e}"));
+                        break;
+                    }
+                }
+            }
+            let mut st = lock.lock().unwrap();
+            st.input_eof = true;
+            cv.notify_all();
+        })
+    };
+
+    let (lock, cv) = &*shared;
+    let mut summary = BridgeSummary::default();
+    let mut attempt = 0u32;
+    let mut connected_before = false;
+    loop {
+        let conn = match TcpStream::connect(addr) {
+            Ok(c) => c,
+            Err(e) if !connected_before => {
+                return Err(format!("serve: cannot connect to {addr}: {e}"));
+            }
+            Err(e) => {
+                attempt += 1;
+                if attempt > RECONNECT_ATTEMPTS {
+                    return Err(format!(
+                        "serve: lost connection to {addr} and reconnects exhausted: {e}"
+                    ));
+                }
+                let delay = RECONNECT_BASE_MS
+                    .saturating_mul(1 << (attempt - 1))
+                    .min(RECONNECT_CAP_MS);
+                thread::sleep(Duration::from_millis(delay));
+                continue;
+            }
+        };
+        if connected_before {
+            summary.reconnects += 1;
+        }
+        connected_before = true;
+        attempt = 0;
+        let _ = conn.set_nodelay(true);
+        let Ok(mut up) = conn.try_clone() else {
+            return Err("serve: clone socket".into());
+        };
+
+        // Claim this connection's generation (waking, and thereby retiring,
+        // any uplink still parked on the previous one).
+        let my_gen = {
+            let mut st = lock.lock().unwrap();
+            st.generation += 1;
+            cv.notify_all();
+            st.generation
+        };
+
+        // Resubmit everything sent-but-unanswered on the previous
+        // connection, oldest id first, before any new traffic.
+        let resend: Vec<String> = lock.lock().unwrap().unanswered.values().cloned().collect();
+        let mut alive = true;
+        for line in &resend {
+            if frame::write_frame(&mut up, line.as_bytes()).is_err() {
+                alive = false;
+                break;
+            }
+        }
+        if !alive {
+            continue;
+        }
+
+        let uplink = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || {
+                let (lock, cv) = &*shared;
+                loop {
+                    let mut st = lock.lock().unwrap();
+                    while st.generation == my_gen && st.queue.is_empty() && !st.input_eof {
+                        st = cv.wait(st).unwrap();
+                    }
+                    if st.generation != my_gen {
+                        return;
+                    }
+                    match st.queue.pop_front() {
+                        Some((id, line)) => {
+                            // Tracked BEFORE the write: a send that fails (or
+                            // lands on a half-dead socket) is replayed from
+                            // `unanswered` after the reconnect.
+                            let tracked = id.is_some();
+                            if let Some(id) = id {
+                                st.unanswered.insert(id, line.clone());
+                            }
+                            drop(st);
+                            if frame::write_frame(&mut up, line.as_bytes()).is_err() {
+                                if !tracked {
+                                    lock.lock().unwrap().queue.push_front((None, line));
+                                }
+                                return;
+                            }
+                        }
+                        None => {
+                            // Input EOF with an empty queue: half-close so the
+                            // server drains in-flight answers, then closes.
+                            let _ = up.shutdown(Shutdown::Write);
+                            return;
+                        }
+                    }
+                }
+            })
+        };
+
+        let mut reader = BufReader::new(conn);
+        loop {
+            match read_frame(&mut reader) {
+                Ok(ReadFrame::Frame(payload)) => {
+                    let Ok(text) = String::from_utf8(payload) else {
+                        return Err("serve: server sent a non-UTF-8 frame".into());
+                    };
+                    writeln!(out, "{text}").map_err(|e| format!("serve: output: {e}"))?;
+                    out.flush().map_err(|e| format!("serve: output: {e}"))?;
+                    summary.responses += 1;
+                    if let Ok(j) = Json::parse(&text) {
+                        let part = j.get("schema").and_then(Json::as_str)
+                            == Some("poets-impute/serve-report-part/v1");
+                        if !part {
+                            if let Some(id) = j.get("id").and_then(Json::as_i64) {
+                                lock.lock().unwrap().unanswered.remove(&id);
+                            }
+                        }
+                    }
+                }
+                Ok(ReadFrame::Eof) => break,
+                Err(_) => break,
+            }
+        }
+
+        // Nudge an uplink blocked on the dead socket, retire it, and decide
+        // whether this close was the orderly end or an outage.
+        let _ = reader.get_ref().shutdown(Shutdown::Both);
+        {
+            let mut st = lock.lock().unwrap();
+            st.generation += 1;
+            cv.notify_all();
+        }
+        let _ = uplink.join();
+        let (done, pending) = {
+            let st = lock.lock().unwrap();
+            (
+                st.input_eof && st.queue.is_empty() && st.unanswered.is_empty(),
+                st.unanswered.len(),
+            )
+        };
+        if done {
+            break;
+        }
+        eprintln!("serve: connection to {addr} lost ({pending} unanswered); reconnecting");
+    }
+    let _ = pump.join();
+    if let Some(e) = lock.lock().unwrap().pump_err.take() {
+        return Err(e);
+    }
+    Ok(summary)
 }
 
 #[cfg(test)]

@@ -427,6 +427,19 @@ pub struct ServiceStats {
     pub cache_misses: u64,
     /// Engines evicted from a worker cache at capacity (LRU victim).
     pub cache_evictions: u64,
+    /// Requests whose engine run died (panic or error) and were retried
+    /// once on a freshly built engine before any in-band failure.
+    pub retried: u64,
+    /// Completed engine runs whose DES metrics reported fault recovery
+    /// (tile deaths remapped + replayed).
+    pub recovered_runs: u64,
+    /// Simulated recovery cycles summed over those runs.
+    pub recovery_cycles: u64,
+    /// Whether the service's most recent event-plane run went through fault
+    /// recovery — while set, admission stretches deadline estimates by
+    /// [`DEGRADED_WAIT_FACTOR`]; the next clean run clears it.  Sharded
+    /// aggregates OR this across shards.
+    pub degraded: bool,
     /// Queue-wait histogram: log2-µs buckets ([`latency_bucket`]) of
     /// admission → group-pop wait, one count per dequeued request.
     pub queue_wait_hist: [u64; LATENCY_BUCKETS],
@@ -469,6 +482,10 @@ impl ServiceStats {
             cache_hits: self.cache_hits + other.cache_hits,
             cache_misses: self.cache_misses + other.cache_misses,
             cache_evictions: self.cache_evictions + other.cache_evictions,
+            retried: self.retried + other.retried,
+            recovered_runs: self.recovered_runs + other.recovered_runs,
+            recovery_cycles: self.recovery_cycles + other.recovery_cycles,
+            degraded: self.degraded || other.degraded,
             queue_wait_hist,
             service_hist,
         }
@@ -478,6 +495,13 @@ impl ServiceStats {
 /// EWMA smoothing factor for the per-request service-time estimate (higher
 /// = more reactive to the latest batch).
 const SERVICE_EWMA_ALPHA: f64 = 0.3;
+
+/// Deadline-estimate stretch applied while the service is degraded (its
+/// last event-plane run went through tile-failure recovery): replayed
+/// supersteps and restores make near-term service times pessimistic, so
+/// admission sheds tight deadlines earlier instead of accepting requests it
+/// will expire worker-side.
+pub const DEGRADED_WAIT_FACTOR: f64 = 2.0;
 
 /// Mutex-guarded queue state shared by submitters and workers.
 #[derive(Default)]
@@ -535,9 +559,29 @@ impl QueueState {
     /// Queue-age estimate for a request admitted *now*: pending depth ×
     /// recent mean service time ÷ worker count.  Deliberately ignores
     /// in-flight work (optimistic): deadline admission sheds only when even
-    /// the optimistic estimate busts the budget.
+    /// the optimistic estimate busts the budget.  While the service is
+    /// degraded (active fault recovery on its last run) the estimate is
+    /// stretched by [`DEGRADED_WAIT_FACTOR`].
     pub fn estimated_wait_seconds(&self, workers: usize) -> f64 {
-        self.pending.len() as f64 * self.ewma_service_seconds / workers.max(1) as f64
+        let base = self.pending.len() as f64 * self.ewma_service_seconds / workers.max(1) as f64;
+        if self.stats.degraded {
+            base * DEGRADED_WAIT_FACTOR
+        } else {
+            base
+        }
+    }
+
+    /// Fold one completed engine run's fault-recovery telemetry into the
+    /// stats and the degraded flag: a run that recovered marks the service
+    /// degraded (stretching admission estimates), the next clean event-plane
+    /// run clears it.
+    pub fn note_recovery(&mut self, recovery_cycles: u64, failed_tiles: u64) {
+        let recovering = failed_tiles > 0 || recovery_cycles > 0;
+        if recovering {
+            self.stats.recovered_runs += 1;
+            self.stats.recovery_cycles += recovery_cycles;
+        }
+        self.stats.degraded = recovering;
     }
 
     /// Pull every queued request matching `key` into `group`, respecting the
@@ -707,6 +751,50 @@ mod tests {
         assert_eq!(merged.cache_evictions, 2);
         assert_eq!(merged.queue_wait_hist[3], 7, "histograms sum element-wise");
         assert_eq!(merged.queue_wait_hist[9], 1);
+    }
+
+    #[test]
+    fn merge_sums_recovery_counters_and_ors_degraded() {
+        let a = ServiceStats {
+            retried: 1,
+            recovered_runs: 2,
+            recovery_cycles: 100,
+            degraded: false,
+            ..ServiceStats::default()
+        };
+        let b = ServiceStats {
+            retried: 3,
+            recovered_runs: 1,
+            recovery_cycles: 50,
+            degraded: true,
+            ..ServiceStats::default()
+        };
+        let m = a.merge(&b);
+        assert_eq!(m.retried, 4);
+        assert_eq!(m.recovered_runs, 3);
+        assert_eq!(m.recovery_cycles, 150);
+        assert!(m.degraded, "one degraded shard degrades the aggregate");
+        assert!(!a.merge(&a).degraded);
+    }
+
+    #[test]
+    fn degraded_service_stretches_the_wait_estimate() {
+        let mut st = QueueState::default();
+        st.note_service_time(0.010);
+        st.pending.push_back(pending(1, "a", EngineSpec::Event, 1));
+        let clean = st.estimated_wait_seconds(1);
+        assert!(clean > 0.0);
+        st.note_recovery(777, 1);
+        assert!(st.stats.degraded);
+        assert_eq!(st.stats.recovered_runs, 1);
+        assert_eq!(st.stats.recovery_cycles, 777);
+        let stretched = st.estimated_wait_seconds(1);
+        assert!((stretched - clean * DEGRADED_WAIT_FACTOR).abs() < 1e-12);
+        // The next clean run clears the flag; counters persist.
+        st.note_recovery(0, 0);
+        assert!(!st.stats.degraded);
+        assert_eq!(st.stats.recovered_runs, 1);
+        assert!((st.estimated_wait_seconds(1) - clean).abs() < 1e-12);
     }
 
     #[test]

@@ -118,6 +118,132 @@ fn analytic_tracks_des_across_random_scenarios() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fault plane: recovery must be invisible in the numbers.
+//
+// For randomized fault schedules — tile kills (remap + replay from the last
+// barrier checkpoint), lossy links (drop = NACK/retransmit), duplicating
+// links (mailbox suppression) — the dosages must be BIT-identical to the
+// fault-free run at every host thread count and wave width.  Recovery may
+// only show up in simulated time and the recovery counters.
+// ---------------------------------------------------------------------------
+
+const FAULT_SHAPE: &str = "boards=8,tiles=2,cores=1,threads=4";
+const N_FAULT_TARGETS: usize = 11;
+
+/// Run the event plane under `schedule`; return the dosage bit patterns
+/// plus (failed_tiles, recovery_cycles) summed over the run's batches.
+fn fault_run(schedule: &str, threads: usize, width: usize) -> (Vec<Vec<u32>>, u64, u64) {
+    let cfg = PanelConfig {
+        n_hap: N_HAP,
+        n_mark: N_MARK,
+        maf: 0.2,
+        annot_ratio: 0.2,
+        seed: 97,
+        ..PanelConfig::default()
+    };
+    let wl = Workload::synthetic(&cfg, N_FAULT_TARGETS);
+    let spec = ScenarioSpec::parse(schedule).expect("fault schedule must parse");
+    let report = ImputeSession::new(wl)
+        .engine(EngineSpec::Event)
+        .scenario(spec)
+        .states_per_thread(SPT)
+        .threads(threads)
+        .batch(width)
+        .run()
+        .unwrap_or_else(|e| panic!("schedule {schedule:?} t={threads} w={width}: {e}"));
+    let bits: Vec<Vec<u32>> = report
+        .dosages
+        .iter()
+        .map(|row| row.iter().map(|d| d.to_bits()).collect())
+        .collect();
+    let m = report.metrics.expect("event plane reports DES metrics");
+    (bits, m.failed_tiles, m.recovery_cycles)
+}
+
+/// Draw one random fault schedule on the 8-board grid: 1–2 tile kills on
+/// distinct boards (a half-dead board stays powered), an optional lossy
+/// link, an optional duplicating link, and sometimes a non-default
+/// checkpoint cadence.
+fn random_fault_schedule(rng: &mut Rng, i: usize) -> String {
+    let mut parts = vec![format!("name=fault-{i},{FAULT_SHAPE}")];
+    let b1 = rng.range(0, 8);
+    parts.push(format!("failtile={b1}.{}@{}", rng.range(0, 2), 3 + rng.range(0, 10)));
+    if rng.chance(0.5) {
+        let b2 = (b1 + 1 + rng.range(0, 7)) % 8;
+        parts.push(format!("failtile={b2}.{}@{}", rng.range(0, 2), 3 + rng.range(0, 10)));
+    }
+    if rng.chance(0.7) {
+        parts.push(format!(
+            "drop={}E:{:.2}@{}",
+            rng.range(0, 3),
+            0.1 + 0.3 * rng.uniform(0.0, 1.0),
+            7 + i
+        ));
+    }
+    if rng.chance(0.5) {
+        parts.push(format!(
+            "dup={}E:{:.2}@{}",
+            rng.range(0, 3),
+            0.1 + 0.3 * rng.uniform(0.0, 1.0),
+            17 + i
+        ));
+    }
+    if rng.chance(0.5) {
+        parts.push(format!("ckpt={}", 2 + rng.range(0, 6)));
+    }
+    let schedule = parts.join(",");
+    ScenarioSpec::parse(&schedule).expect("generated schedule must be valid");
+    schedule
+}
+
+#[test]
+fn fault_schedules_preserve_bit_identical_dosages() {
+    let (oracle, clean_failed, _) = fault_run(&format!("name=clean,{FAULT_SHAPE}"), 2, 11);
+    assert_eq!(clean_failed, 0, "the oracle run must be fault-free");
+
+    let mut rng = Rng::new(0xfa_17ab);
+    let mut schedules: Vec<String> = (0..2).map(|i| random_fault_schedule(&mut rng, i)).collect();
+    // One deterministic compound corner: two kills + loss + duplication +
+    // tight checkpoints, so the full recovery machinery composes in one run.
+    schedules.push(format!(
+        "name=compound,{FAULT_SHAPE},failtile=2.1@6,failtile=5.0@11,\
+         drop=0E:0.3@7,dup=1E:0.25@9,ckpt=4"
+    ));
+    for schedule in &schedules {
+        for threads in [1usize, 2, 4] {
+            for width in [1usize, 8, 11] {
+                let (bits, failed, recovery) = fault_run(schedule, threads, width);
+                assert!(
+                    failed > 0,
+                    "{schedule}: scheduled tile kill never fired (t={threads} w={width})"
+                );
+                assert!(
+                    recovery > 0,
+                    "{schedule}: recovery was free (t={threads} w={width})"
+                );
+                assert_eq!(
+                    bits, oracle,
+                    "{schedule}: dosages diverged from the fault-free oracle \
+                     (t={threads} w={width})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn schedules_that_disconnect_surviving_boards_are_hard_errors() {
+    // Killing every tile of the middle board on a 1x3 grid powers it off,
+    // stranding board 2 from board 0 — a schedule the simulator could never
+    // honour, so it must be rejected up front, not degraded into.
+    let err = ScenarioSpec::parse(
+        "name=stranded,boards=3,tiles=2,cores=1,threads=4,failtile=1.0@5,failtile=1.1@5",
+    )
+    .unwrap_err();
+    assert!(err.contains("disconnect"), "{err}");
+}
+
 #[test]
 fn analytic_tracks_des_at_the_design_space_corners() {
     // Deterministic edge cases the random draw may miss: a failed link

@@ -634,3 +634,95 @@ fn bench_serve_cli_emits_throughput_baseline() {
         }
     }
 }
+
+#[test]
+fn connect_bridge_reconnects_and_resubmits_only_unanswered_requests() {
+    // Kill-and-reconnect for the `serve --connect` bridge: a scripted
+    // server answers the first request, then drops the connection with the
+    // second request still unanswered.  The bridge must reconnect (capped
+    // backoff) and resubmit ONLY the unanswered request — the answered one
+    // is never re-executed — then drain cleanly.
+    use std::io::BufReader;
+    use std::net::TcpListener;
+
+    use poets_impute::serve::net::{self, frame};
+
+    fn id_of(payload: &[u8]) -> i64 {
+        Json::parse(std::str::from_utf8(payload).unwrap())
+            .unwrap()
+            .get("id")
+            .unwrap()
+            .as_i64()
+            .unwrap()
+    }
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let server = thread::spawn(move || -> Vec<Vec<i64>> {
+        let mut seen = Vec::new();
+        // Connection 1: read BOTH requests (so the close below is an
+        // orderly FIN, not an RST that could destroy the buffered reply),
+        // answer only the first, then drop the socket — a simulated crash
+        // with request 2 in flight.
+        {
+            let (conn, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut w = conn;
+            let mut ids = Vec::new();
+            for _ in 0..2 {
+                match frame::read_frame(&mut reader).unwrap() {
+                    frame::ReadFrame::Frame(payload) => ids.push(id_of(&payload)),
+                    frame::ReadFrame::Eof => panic!("bridge half-closed early"),
+                }
+            }
+            let reply = format!("{{\"id\":{},\"ok\":true,\"leg\":1}}", ids[0]);
+            frame::write_frame(&mut w, reply.as_bytes()).unwrap();
+            seen.push(ids);
+        }
+        // Connection 2 (the reconnect): answer everything until EOF.
+        {
+            let (conn, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut w = conn;
+            let mut ids = Vec::new();
+            loop {
+                match frame::read_frame(&mut reader).unwrap() {
+                    frame::ReadFrame::Frame(payload) => {
+                        let id = id_of(&payload);
+                        ids.push(id);
+                        let reply = format!("{{\"id\":{id},\"ok\":true,\"leg\":2}}");
+                        frame::write_frame(&mut w, reply.as_bytes()).unwrap();
+                    }
+                    frame::ReadFrame::Eof => break,
+                }
+            }
+            seen.push(ids);
+        }
+        seen
+    });
+
+    let input: &[u8] = b"{\"id\":1,\"probe\":true}\n{\"id\":2,\"probe\":true}\n";
+    let mut out = Vec::new();
+    let summary = net::bridge_jsonl(BufReader::new(input), &mut out, &addr.to_string()).unwrap();
+    let seen = server.join().unwrap();
+
+    assert_eq!(summary.reconnects, 1, "exactly one reconnect");
+    assert_eq!(summary.responses, 2, "both requests answered");
+    assert_eq!(seen[0], vec![1, 2], "first connection saw both requests");
+    assert_eq!(
+        seen[1],
+        vec![2],
+        "reconnect must resubmit only the unanswered request"
+    );
+    let lines: Vec<Json> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    assert_eq!(lines.len(), 2);
+    assert_eq!(lines[0].get("id").unwrap().as_i64(), Some(1));
+    assert_eq!(lines[0].get("leg").unwrap().as_i64(), Some(1));
+    assert_eq!(lines[1].get("id").unwrap().as_i64(), Some(2));
+    assert_eq!(lines[1].get("leg").unwrap().as_i64(), Some(2));
+}
